@@ -1,0 +1,149 @@
+//! End-to-end driver (DESIGN.md E2E): the full system on a real small
+//! workload — the Phase-2 discrete-event distributed-database cluster
+//! (consistent-hash sharding, quorum writes, rolling restarts,
+//! bandwidth-limited rebalances) driven by the autoscaling coordinator
+//! through the paper's 50-step trace, with the decision path running
+//! through the AOT-compiled Pallas kernels on PJRT when artifacts are
+//! available.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example cluster_autoscale
+//! ```
+//!
+//! Reports per-phase measured latency/throughput, compares policies on
+//! *measured* (not analytical) metrics, and closes the loop with the
+//! paper's §VIII "empirical calibration": fitting the analytical
+//! surfaces back from cluster measurements.
+
+use diagonal_scale::calibrate::{Calibrator, Observation};
+use diagonal_scale::cluster::{ClusterParams, ClusterSim};
+use diagonal_scale::config::{ModelConfig, MoveFlags};
+use diagonal_scale::coordinator::{self, native_coordinator, Backend, Coordinator, TickReport};
+use diagonal_scale::policy::{DiagonalScale, StaticPolicy, Threshold};
+use diagonal_scale::runtime::{Engine, SurfaceEngine};
+use diagonal_scale::workload::{TraceBuilder, WorkloadPoint};
+
+fn phase_name(step: usize) -> &'static str {
+    match step {
+        0..=9 => "low-1",
+        10..=19 => "med-1",
+        20..=29 => "high",
+        30..=39 => "med-2",
+        _ => "low-2",
+    }
+}
+
+fn print_run(label: &str, reports: &[TickReport]) {
+    let s = coordinator::summarize(reports);
+    println!(
+        "{label:<22} violations={:<3} avg_lat={:.4}s p99={:.4}s completed={:>5.1}% moved_shards={:<4} reconfigs={}",
+        s.violations,
+        s.avg_latency,
+        s.avg_p99,
+        100.0 * s.completed_ratio,
+        s.total_moved_shards,
+        s.reconfigurations
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::default_paper();
+    let trace = TraceBuilder::paper(&cfg);
+    let params = ClusterParams::default();
+    let seed = 42;
+
+    println!("== Phase-2 DES cluster + DiagonalScale coordinator ==\n");
+    let mut coord = native_coordinator(
+        &cfg,
+        Box::new(DiagonalScale::diagonal()),
+        params,
+        seed,
+    );
+    let reports = coord.run_trace(&trace)?;
+
+    // per-phase report
+    println!(
+        "{:<7} {:>8} {:>12} {:>11} {:>10} {:>9} {:>6}",
+        "phase", "demand", "completed/s", "avg lat(s)", "p99(s)", "config", "viol"
+    );
+    for chunk in reports.chunks(10) {
+        let n = chunk.len() as f64;
+        let avg = |f: &dyn Fn(&TickReport) -> f64| chunk.iter().map(|r| f(r)).sum::<f64>() / n;
+        let last = chunk.last().unwrap();
+        println!(
+            "{:<7} {:>8.0} {:>12.0} {:>11.4} {:>10.4} {:>9} {:>6}",
+            phase_name(last.step),
+            avg(&|r| r.demand as f64),
+            avg(&|r| r.metrics.completed),
+            avg(&|r| r.metrics.avg_latency),
+            avg(&|r| r.metrics.p99_latency),
+            format!("({},{})", last.served_config.h_idx, last.served_config.v_idx),
+            chunk.iter().filter(|r| r.violation).count()
+        );
+    }
+
+    // policy comparison on measured metrics
+    println!("\n== policy comparison (measured on the DES cluster) ==\n");
+    print_run("DiagonalScale", &reports);
+    let mut hz = native_coordinator(&cfg, Box::new(DiagonalScale::horizontal_only()), params, seed);
+    print_run("Horizontal-only", &hz.run_trace(&trace)?);
+    let mut vt = native_coordinator(&cfg, Box::new(DiagonalScale::vertical_only()), params, seed);
+    print_run("Vertical-only", &vt.run_trace(&trace)?);
+    let mut th = native_coordinator(&cfg, Box::new(Threshold::default()), params, seed);
+    print_run("Threshold (HPA-like)", &th.run_trace(&trace)?);
+    let mut st = native_coordinator(&cfg, Box::new(StaticPolicy), params, seed);
+    print_run("Static (no scaling)", &st.run_trace(&trace)?);
+
+    // PJRT decision path: the same coordinator with neighbor scoring on
+    // the AOT-compiled Pallas kernel
+    let artifacts = Engine::default_dir();
+    if artifacts.join("manifest.json").exists() {
+        let engine = SurfaceEngine::new(Engine::load(&artifacts)?, &cfg)?;
+        let cluster = ClusterSim::new(&cfg, params, seed);
+        let mut hlo = Coordinator::new(
+            &cfg,
+            cluster,
+            Backend::Hlo { engine, moves: MoveFlags::DIAGONAL },
+        );
+        print_run("DiagonalScale (PJRT)", &hlo.run_trace(&trace)?);
+    }
+
+    // paper §VIII: empirical calibration — benchmark each plane point on
+    // the cluster and fit the surfaces from measurements
+    println!("\n== online calibration from cluster measurements (paper VIII) ==\n");
+    let plane = cfg.plane();
+    let mut cal = Calibrator::new(cfg.surfaces);
+    for c in plane.iter() {
+        let mut cluster = ClusterSim::new(&cfg, params, seed);
+        cluster.apply(c);
+        for _ in 0..3 {
+            cluster.step(WorkloadPoint::new(100.0, cfg.write_ratio()));
+        }
+        let probe = cluster.capacity() as f32 * 0.3;
+        let m = cluster.step(WorkloadPoint::new(probe, cfg.write_ratio()));
+        cal.observe(
+            &plane,
+            Observation { config: c, latency: m.avg_latency, throughput: cluster.capacity() },
+        );
+    }
+    if let Some(lat) = cal.fit_latency() {
+        println!(
+            "latency fit:     node_scale={:.4}  eta={:.5}  mu={:.5}  theta={:.2}  rmse={:.6}",
+            lat.node_scale, lat.eta, lat.mu, lat.theta, lat.rmse
+        );
+    }
+    if let Some(thr) = cal.fit_throughput() {
+        println!(
+            "throughput fit:  kappa={:.1} (prior {})  omega={:.4} (prior {})  rmse={:.6}",
+            thr.kappa, cfg.surfaces.kappa, thr.omega, cfg.surfaces.omega, thr.rmse
+        );
+        println!(
+            "\ninterpretation: the DES cluster's capacity is linear in H (no phi(H)\n\
+             penalty on raw capacity), so the fitted omega ~ 0 while kappa matches\n\
+             the configured {} — the calibration recovers the substrate's truth\n\
+             rather than the analytical prior, exactly what paper VIII wants.",
+            cfg.surfaces.kappa
+        );
+    }
+    Ok(())
+}

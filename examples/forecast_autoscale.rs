@@ -1,0 +1,72 @@
+//! Forecast-driven autoscaling: lookahead (paper §VIII) without an
+//! oracle future. The coordinator forecasts demand from its own
+//! observations (moving average / Holt / seasonal-naive) and expands
+//! the lookahead tree over the forecast.
+//!
+//! ```text
+//! cargo run --release --example forecast_autoscale
+//! ```
+
+use diagonal_scale::config::{ModelConfig, MoveFlags};
+use diagonal_scale::forecast::{mape_one_step, Holt, MovingAverage, SeasonalNaive};
+use diagonal_scale::policy::ForecastLookahead;
+use diagonal_scale::simulator::{PolicyKind, RunResult, Simulator};
+use diagonal_scale::workload::{Trace, TraceBuilder};
+
+fn row(label: &str, r: &RunResult) {
+    println!(
+        "  {:<30} violations={:<3} lat={:>6.2} cost={:>6.3} obj={:>8.2}",
+        label, r.summary.violations, r.summary.avg_latency, r.summary.avg_cost,
+        r.summary.avg_objective
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::default_paper();
+    let sim = Simulator::new(&cfg);
+    let b = TraceBuilder::from_config(&cfg);
+
+    // a repeating daily-like cycle: three repetitions of the paper trace
+    let one = TraceBuilder::paper(&cfg);
+    let mut points = one.points.clone();
+    points.extend(one.points.iter().copied());
+    points.extend(one.points.iter().copied());
+    let cycle = Trace { name: "paper-x3".into(), points };
+
+    println!("== forecast quality (one-step MAPE on the repeating trace) ==\n");
+    let series: Vec<f64> = cycle.points.iter().map(|p| p.lambda_req as f64).collect();
+    println!(
+        "  moving-average(8): {:.3}   holt(0.7,0.3): {:.3}   seasonal-naive(50): {:.3}\n",
+        mape_one_step(&mut MovingAverage::new(8), &series),
+        mape_one_step(&mut Holt::default_tuned(), &series),
+        mape_one_step(&mut SeasonalNaive::new(50), &series),
+    );
+
+    println!("== policies on the repeating trace (150 steps) ==\n");
+    row("reactive DiagonalScale", &sim.run(PolicyKind::Diagonal, &cycle));
+    row("oracle-future lookahead d=3", &sim.run(PolicyKind::Lookahead(3), &cycle));
+    let wr = cfg.write_ratio();
+    let mut ma = ForecastLookahead::new(MoveFlags::DIAGONAL, 3, MovingAverage::new(8), wr);
+    row("forecast lookahead (MA-8)", &sim.run_boxed(&mut ma, "fl-ma", &cycle));
+    let mut holt = ForecastLookahead::new(MoveFlags::DIAGONAL, 3, Holt::default_tuned(), wr);
+    row("forecast lookahead (Holt)", &sim.run_boxed(&mut holt, "fl-holt", &cycle));
+    let mut sn = ForecastLookahead::new(MoveFlags::DIAGONAL, 3, SeasonalNaive::new(50), wr);
+    row("forecast lookahead (seasonal)", &sim.run_boxed(&mut sn, "fl-sn", &cycle));
+
+    println!("\n== sudden spike (no seasonality to learn) ==\n");
+    let spike = b.spike(40.0, 160.0, 15, 10, 40);
+    row("reactive DiagonalScale", &sim.run(PolicyKind::Diagonal, &spike));
+    row("oracle-future lookahead d=3", &sim.run(PolicyKind::Lookahead(3), &spike));
+    let mut holt2 = ForecastLookahead::new(MoveFlags::DIAGONAL, 3, Holt::default_tuned(), wr);
+    row("forecast lookahead (Holt)", &sim.run_boxed(&mut holt2, "fl-holt", &spike));
+    println!(
+        "\nreading: with a true future, lookahead nearly eliminates the ramp\n\
+         transients (serve-then-move alignment: level-0 candidates are scored\n\
+         against the demand they will actually serve). A seasonal forecaster\n\
+         earns most of that benefit once it has seen one cycle; a lagging\n\
+         moving average is actively harmful; and an unforecastable spike is\n\
+         exactly the paper's §VII limitation — only oracle knowledge (or\n\
+         over-provisioning) removes those transients."
+    );
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Full paper reproduction: regenerates **Table I and every figure
+//! (1–8)** of "Diagonal Scaling" into `out/`, prints the measured
+//! Table I next to the paper's reported values, and cross-checks the
+//! whole simulation against the AOT-compiled `policy_trace` kernel on
+//! PJRT when artifacts are present.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example paper_repro
+//! ```
+//!
+//! The reproduction bar (DESIGN.md §4): orderings and rough factors
+//! must match — absolute synthetic units need not.
+
+use diagonal_scale::config::{ModelConfig, MoveFlags};
+use diagonal_scale::report;
+use diagonal_scale::runtime::{Engine, SurfaceEngine};
+use diagonal_scale::simulator::Simulator;
+use diagonal_scale::surfaces::SurfaceModel;
+use diagonal_scale::workload::TraceBuilder;
+
+/// Paper Table I values: (avg latency, avg thr, avg cost, total cost,
+/// avg objective, SLA violations).
+const PAPER: [(&str, f64, f64, f64, f64, f64, usize); 3] = [
+    ("DiagonalScale", 4.05, 13506.13, 1.624, 81.2, 65.53, 3),
+    ("Horizontal-only", 13.06, 10293.20, 1.560, 78.0, 180.94, 32),
+    ("Vertical-only", 4.89, 12068.66, 1.416, 70.8, 77.70, 21),
+];
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::default_paper();
+    let sim = Simulator::new(&cfg);
+    let trace = TraceBuilder::paper(&cfg);
+    let model = SurfaceModel::from_config(&cfg);
+
+    println!("== Phase-1 analytical simulation (50-step paper trace) ==\n");
+    let runs = sim.run_paper_set(&trace);
+
+    println!("{:<18} {:>22} {:>22} {:>22} {:>18}", "", "avg latency", "avg cost", "avg objective", "SLA violations");
+    println!("{:<18} {:>10} {:>11} {:>10} {:>11} {:>10} {:>11} {:>8} {:>9}",
+        "policy", "paper", "measured", "paper", "measured", "paper", "measured", "paper", "measured");
+    for (run, paper) in runs.iter().zip(&PAPER) {
+        let s = &run.summary;
+        println!(
+            "{:<18} {:>10.2} {:>11.2} {:>10.3} {:>11.3} {:>10.2} {:>11.2} {:>8} {:>9}",
+            run.policy, paper.1, s.avg_latency, paper.3, s.avg_cost, paper.5,
+            s.avg_objective, paper.6, s.violations
+        );
+    }
+
+    // the shape checks the test suite enforces, restated for the reader
+    let (ds, hz, vt) = (&runs[0].summary, &runs[1].summary, &runs[2].summary);
+    println!("\nshape checks (paper section VI):");
+    println!(
+        "  violations  DiagonalScale < Vertical-only < Horizontal-only : {} < {} < {}  [paper: 3 < 21 < 32]",
+        ds.violations, vt.violations, hz.violations
+    );
+    println!(
+        "  latency     DiagonalScale < Vertical-only < Horizontal-only : {:.2} < {:.2} < {:.2}  [paper: 4.05 < 4.89 < 13.06]",
+        ds.avg_latency, vt.avg_latency, hz.avg_latency
+    );
+    println!(
+        "  objective   DiagonalScale < Vertical-only < Horizontal-only : {:.2} < {:.2} < {:.2}  [paper: 65.53 < 77.70 < 180.94]",
+        ds.avg_objective, vt.avg_objective, hz.avg_objective
+    );
+    println!(
+        "  cost        DiagonalScale pays the premium                  : {:.3} >= max({:.3}, {:.3})  [paper: 1.624 highest]",
+        ds.avg_cost, vt.avg_cost, hz.avg_cost
+    );
+
+    // Table I + figures 1-8 to disk
+    let files = report::write_all_figures("out", &model, &runs, 10_000.0)?;
+    println!("\n== artifacts written ==");
+    for f in &files {
+        println!("  {f}");
+    }
+
+    // cross-check: the entire Algorithm-1 loop inside XLA
+    let artifacts = Engine::default_dir();
+    if artifacts.join("manifest.json").exists() {
+        println!("\n== PJRT cross-check (policy_trace artifact) ==");
+        let eng = SurfaceEngine::new(Engine::load(&artifacts)?, &cfg)?;
+        let start = (cfg.policy.start[0], cfg.policy.start[1]);
+        for (run, moves) in runs.iter().zip([
+            MoveFlags::DIAGONAL,
+            MoveFlags::HORIZONTAL_ONLY,
+            MoveFlags::VERTICAL_ONLY,
+        ]) {
+            let recs = eng.policy_trace(&trace, moves, start)?;
+            let diverge = run
+                .records
+                .iter()
+                .zip(&recs)
+                .filter(|(n, h)| (n.config.h_idx, n.config.v_idx) != (h.h_idx, h.v_idx))
+                .count();
+            let viol = recs
+                .iter()
+                .filter(|r| r.latency_violation || r.throughput_violation)
+                .count();
+            println!(
+                "  {:<18} trajectory divergence: {} / {} steps  violations: native {} vs HLO {}",
+                run.policy,
+                diverge,
+                recs.len(),
+                run.summary.violations,
+                viol
+            );
+        }
+    } else {
+        println!("\n(run `make artifacts` to enable the PJRT cross-check)");
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Quickstart: the Scaling Plane in five minutes.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. Load the paper's calibrated model configuration.
+//! 2. Print the latency/cost surfaces (figures 1–2) as ASCII heatmaps.
+//! 3. Ask DIAGONALSCALE for one decision.
+//! 4. Run the full Phase-1 simulation and print Table I.
+//! 5. If `make artifacts` has run, do the same decision through the
+//!    AOT-compiled Pallas kernel on PJRT and show they agree.
+
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::plane::Configuration;
+use diagonal_scale::policy::{DiagonalScale, Policy, PolicyContext};
+use diagonal_scale::report::{self, Surface};
+use diagonal_scale::runtime::{Engine, SurfaceEngine};
+use diagonal_scale::simulator::Simulator;
+use diagonal_scale::sla::SlaSpec;
+use diagonal_scale::surfaces::SurfaceModel;
+use diagonal_scale::workload::{TraceBuilder, WorkloadPoint};
+
+fn main() -> anyhow::Result<()> {
+    // 1. the model: 4 node counts x 4 vertical tiers = 16 configs
+    let cfg = ModelConfig::default_paper();
+    let model = SurfaceModel::from_config(&cfg);
+    let sla = SlaSpec::from_config(&cfg);
+    println!(
+        "Scaling Plane: H in {:?} x tiers {:?}  ({} configurations)\n",
+        cfg.plane.h_values,
+        cfg.plane.tiers.iter().map(|t| t.name.as_str()).collect::<Vec<_>>(),
+        model.plane().len()
+    );
+
+    // 2. the analytical surfaces (paper figures 1 and 2)
+    println!("{}", report::heatmap_ascii(&model, Surface::Cost, 10_000.0));
+    println!("{}", report::heatmap_ascii(&model, Surface::Latency, 10_000.0));
+
+    // 3. one SLA-aware decision (Algorithm 1)
+    let current = Configuration::new(1, 1); // (H=2, medium)
+    let demand = WorkloadPoint::new(10_000.0, cfg.write_ratio());
+    let ctx = PolicyContext {
+        model: &model,
+        sla: &sla,
+        reb_h: cfg.policy.reb_h,
+        reb_v: cfg.policy.reb_v,
+        plan_queue: false,
+        future: &[],
+    };
+    let d = DiagonalScale::diagonal().decide(current, demand, &ctx);
+    println!(
+        "decision at (H={}, {}) under lambda_req={}: move to (H={}, {})  score={:.2}  fallback={}\n",
+        model.plane().h_value(&current),
+        model.plane().tier(&current).name,
+        demand.lambda_req,
+        model.plane().h_value(&d.next),
+        model.plane().tier(&d.next).name,
+        d.score,
+        d.fallback
+    );
+
+    // 4. the paper's headline experiment (Table I)
+    let sim = Simulator::new(&cfg);
+    let trace = TraceBuilder::paper(&cfg);
+    let runs = sim.run_paper_set(&trace);
+    let rows: Vec<_> = runs.iter().map(|r| (r.policy.clone(), r.summary)).collect();
+    println!("{}", report::table1(&rows));
+
+    // 5. the same surfaces through the AOT Pallas kernel on PJRT
+    let artifacts = Engine::default_dir();
+    if artifacts.join("manifest.json").exists() {
+        let eng = SurfaceEngine::new(Engine::load(&artifacts)?, &cfg)?;
+        let grids = eng.surfaces(demand.lambda_req)?;
+        let native = model.evaluate(&d.next, demand.lambda_req);
+        let hlo = diagonal_scale::runtime::grid_at(&grids.latency, d.next.h_idx, d.next.v_idx);
+        println!(
+            "PJRT cross-check at the chosen config: native latency {:.4} vs HLO {:.4}  (platform: {})",
+            native.latency,
+            hlo,
+            eng.engine().platform_name()
+        );
+    } else {
+        println!("(run `make artifacts` to enable the PJRT cross-check)");
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Disaggregated / serverless Scaling Plane (paper §VIII, final
+//! extension): compute, memory, and storage scale independently —
+//! a 4-D plane `(H, C, M, S)` with 256 configurations instead of 16.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example serverless_plane
+//! ```
+//!
+//! Runs the paper's 50-step trace on both planes, shows the coupled
+//! ladder is a strict subspace (matched combos reproduce Table I
+//! exactly), quantifies the cost savings disaggregation buys, and
+//! cross-checks the 4-D surfaces against the `surfaces_wide` AOT
+//! Pallas kernel on PJRT.
+
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::disagg::{wide_grid_arrays, DisaggModel, WIDE};
+use diagonal_scale::runtime::{Engine, SurfaceEngine};
+use diagonal_scale::simulator::{PolicyKind, Simulator};
+use diagonal_scale::workload::TraceBuilder;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ModelConfig::default_paper();
+    let trace = TraceBuilder::paper(&cfg);
+
+    println!("== coupled 2-D plane (paper) vs disaggregated 4-D plane (paper VIII) ==\n");
+    let coupled = Simulator::new(&cfg).run(PolicyKind::Diagonal, &trace);
+
+    let model = DisaggModel::from_config(&cfg);
+    let start = model.plane().matched(cfg.policy.start[0], cfg.policy.start[1]);
+    let (records, summary, fallbacks) = model.simulate(&trace, start);
+
+    println!(
+        "{:<26} {:>6} {:>10} {:>9} {:>10} {:>10}",
+        "plane", "viol.", "avg lat", "avg cost", "total cost", "avg obj"
+    );
+    println!(
+        "{:<26} {:>6} {:>10.2} {:>9.3} {:>10.1} {:>10.2}",
+        "coupled (H, V) — 16 cfgs",
+        coupled.summary.violations,
+        coupled.summary.avg_latency,
+        coupled.summary.avg_cost,
+        coupled.summary.total_cost,
+        coupled.summary.avg_objective
+    );
+    println!(
+        "{:<26} {:>6} {:>10.2} {:>9.3} {:>10.1} {:>10.2}",
+        "disagg (H,C,M,S) — 256",
+        summary.violations,
+        summary.avg_latency,
+        summary.avg_cost,
+        summary.total_cost,
+        summary.avg_objective
+    );
+    let saving = 100.0 * (1.0 - summary.total_cost / coupled.summary.total_cost);
+    println!(
+        "\ncost saving from independent axes: {saving:.1}%  (fallbacks: {fallbacks})\n"
+    );
+
+    // where the savings come from: the final high-load configuration
+    let peak = &records[25];
+    println!(
+        "peak-phase example: disagg serves the high phase at cost {:.3}/step while\n\
+         the coupled plane pays {:.3}/step — the 4-D policy buys the bottleneck\n\
+         resource (compute for throughput) without the bundled memory/storage.\n",
+        peak.cost,
+        coupled.records[25].cost
+    );
+
+    // PJRT cross-check over all 256 configs through the wide kernel
+    let artifacts = Engine::default_dir();
+    if artifacts.join("manifest.json").exists() {
+        let eng = SurfaceEngine::new(Engine::load(&artifacts)?, &cfg)?;
+        let (hs, tiers, mask, combos) = wide_grid_arrays(model.plane());
+        let grids = eng.surfaces_wide(&hs, &tiers, &mask, 9600.0)?;
+        let mut max_rel = 0.0f32;
+        for h in 0..4 {
+            for (j, combo) in combos.iter().enumerate() {
+                let c = diagonal_scale::disagg::DisaggConfig::new(
+                    h, combo.c_idx, combo.m_idx, combo.s_idx,
+                );
+                let native = model.evaluate(&c, 9600.0).objective;
+                let hlo = grids[4][h * WIDE + j];
+                let rel = (native - hlo).abs() / native.abs().max(1.0);
+                max_rel = max_rel.max(rel);
+            }
+        }
+        println!(
+            "PJRT `surfaces_wide` cross-check over 256 configs: max relative error {max_rel:.2e}"
+        );
+    } else {
+        println!("(run `make artifacts` to enable the PJRT cross-check)");
+    }
+    Ok(())
+}

@@ -1,0 +1,117 @@
+"""AOT lowering: jax/Pallas entry points -> HLO *text* artifacts.
+
+Interchange format is HLO text, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The text parser
+reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/gen_hlo.py and /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one .hlo.txt per entry point plus a manifest describing argument
+shapes, output arity, and the packed-parameter layout version, which the
+rust runtime validates at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import defaults as D
+from . import model
+
+# Bump when the packed-parameter layout or record layout changes; the
+# rust runtime refuses to load artifacts with a different version.
+ABI_VERSION = 1
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def entry_points(trace_lens=(50, 200)):
+    """(name, fn, example_args) for every AOT artifact."""
+    g, p = D.GRID, D.PARAMS_LEN
+    n, c = D.NEIGHBOR_ROWS, D.NEIGHBOR_COLS
+    eps = [
+        ("surfaces", model.surface_grid,
+         (_spec(g), _spec(g, 5), _spec(p), _spec(g, g))),
+        # the disaggregated 4-D plane (paper VIII): H x (C,M,S) combos
+        # flattened into a wide tier table — same kernel, wider grid
+        ("surfaces_wide", model.surface_grid,
+         (_spec(g), _spec(D.WIDE, 5), _spec(p), _spec(g, D.WIDE))),
+        ("neighbor", model.neighbor_batch,
+         (_spec(n, c), _spec(p))),
+        ("queueing", model.queueing_grid,
+         (_spec(g), _spec(g, 5), _spec(p), _spec(g, g))),
+    ]
+    for t in trace_lens:
+        eps.append((f"policy_trace_{t}", model.policy_trace,
+                    (_spec(g), _spec(g, 5), _spec(p), _spec(g, g),
+                     _spec(t, 2), _spec(2))))
+    return eps
+
+
+def lower_all(out_dir: str, trace_lens=(50, 200)) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "abi_version": ABI_VERSION,
+        "grid": D.GRID,
+        "params_len": D.PARAMS_LEN,
+        "neighbor_rows": D.NEIGHBOR_ROWS,
+        "neighbor_cols": D.NEIGHBOR_COLS,
+        "rec_len": model.REC_LEN,
+        "entry_points": {},
+    }
+    for name, fn, args in entry_points(trace_lens):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        n_out = len(jax.tree_util.tree_leaves(lowered.out_info))
+        manifest["entry_points"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [list(a.shape) for a in args],
+            "num_outputs": n_out,
+        }
+        print(f"  {name}: {len(text)} chars, {n_out} outputs -> {path}")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  manifest -> {mpath}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="compat: also copy surfaces artifact to this path")
+    ap.add_argument("--trace-lens", type=int, nargs="*", default=[50, 200])
+    args = ap.parse_args()
+    lower_all(args.out_dir, tuple(args.trace_lens))
+    if args.out:
+        import shutil
+        shutil.copy(os.path.join(args.out_dir, "surfaces.hlo.txt"), args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Calibration tool: fit the synthetic constants to the paper's Table I.
+
+The paper gives the functional forms but not the constants.  This tool
+implements the simulation in plain numpy (mirroring model.policy_trace
+semantics exactly — it doubles as an independent oracle in pytest) and
+random-searches the constant space for a setting that reproduces the
+*shape* of Table I:
+
+    violations:  DiagonalScale < Vertical-only < Horizontal-only
+    latency:     DiagonalScale < Vertical-only < Horizontal-only
+    objective:   DiagonalScale < Vertical-only < Horizontal-only
+    cost:        DiagonalScale highest (spends where it matters)
+
+and minimizes relative distance to the paper's reported values
+(DS 4.05/13506/1.624/65.53/3, H 13.06/10293/1.560/180.94/32,
+ V 4.89/12069/1.416/77.70/21).
+
+Usage:  cd python && python -m compile.calibrate [--samples 20000]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from . import defaults as D
+
+PAPER = {  # policy -> (avg_lat, avg_thr, avg_cost, avg_obj, violations)
+    "diag": (4.05, 13506.13, 1.624, 65.53, 3),
+    "horiz": (13.06, 10293.20, 1.560, 180.94, 32),
+    "vert": (4.89, 12068.66, 1.416, 77.70, 21),
+}
+POLICY_MOVES = {"diag": (1.0, 1.0), "horiz": (1.0, 0.0), "vert": (0.0, 1.0)}
+
+
+def simulate(p, hs, tiers, mask, trace, start):
+    """Numpy mirror of model.policy_trace (same record layout)."""
+    g = len(hs)
+    h = hs[:, None]
+    cpu, ram, bw, iops_k, cost_node = (tiers[None, :, i] for i in range(5))
+    log_h = np.log(h)
+
+    l_node = (p[D.P_A] / cpu + p[D.P_B] / ram + p[D.P_C] / bw
+              + p[D.P_D] / iops_k)
+    l_coord = p[D.P_ETA] * log_h + p[D.P_MU] * np.exp(p[D.P_THETA] * log_h)
+    lat = l_node + l_coord
+    mins = np.minimum(np.minimum(cpu, ram), np.minimum(bw, iops_k))
+    thr = h * (p[D.P_KAPPA] * mins) / (1.0 + p[D.P_OMEGA] * log_h)
+    cost = h * cost_node
+
+    rows, cols = np.indices((g, g))
+    n_h, n_v = int(p[D.P_N_H]), int(p[D.P_N_V])
+    adh, adv = p[D.P_ALLOW_DH] > 0.5, p[D.P_ALLOW_DV] > 0.5
+
+    h_idx, v_idx = int(start[0]), int(start[1])
+    recs = np.zeros((len(trace), 8), dtype=np.float64)
+    for t, (lam_req, lam_w) in enumerate(trace):
+        coord = p[D.P_RHO] * l_coord * lam_w / thr
+        obj = (p[D.P_ALPHA] * lat + p[D.P_BETA] * cost
+               + p[D.P_GAMMA] * coord - p[D.P_DELTA] * thr)
+        u = np.minimum(lam_req / thr, p[D.P_U_MAX])
+        lat_eff = lat / (1.0 - u)
+        obj_eff = (p[D.P_ALPHA] * lat_eff + p[D.P_BETA] * cost
+                   + p[D.P_GAMMA] * coord - p[D.P_DELTA] * thr)
+
+        # serve + measure
+        recs[t] = (h_idx, v_idx, lat_eff[h_idx, v_idx], thr[h_idx, v_idx],
+                   cost[h_idx, v_idx], obj_eff[h_idx, v_idx],
+                   float(lat[h_idx, v_idx] > p[D.P_L_MAX]),
+                   float(thr[h_idx, v_idx] < lam_req))
+
+        # decide (Algorithm 1)
+        di = np.abs(rows - h_idx)
+        dj = np.abs(cols - v_idx)
+        allowed = (di <= 1) & (dj <= 1) & (mask > 0.5)
+        if not adh:
+            allowed &= di == 0
+        if not adv:
+            allowed &= dj == 0
+        plan_lat = lat_eff if p[D.P_PLAN_QUEUE] > 0.5 else lat
+        plan_obj = obj_eff if p[D.P_PLAN_QUEUE] > 0.5 else obj
+        feasible = (allowed & (plan_lat <= p[D.P_L_MAX])
+                    & (thr >= lam_req * p[D.P_B_SLA]))
+        score = np.where(feasible,
+                         plan_obj + p[D.P_REB_H] * di + p[D.P_REB_V] * dj,
+                         D.INFEASIBLE)
+        best = int(np.argmin(score))      # row-major first-min, as in jax
+        if score.flat[best] < D.INFEASIBLE * 0.5:
+            h_idx, v_idx = best // g, best % g
+        else:
+            h_idx = min(h_idx + int(adh), n_h - 1)
+            v_idx = min(v_idx + int(adv), n_v - 1)
+    return recs
+
+
+def summarize(recs):
+    viol = int(((recs[:, 6] + recs[:, 7]) > 0).sum())
+    return (recs[:, 2].mean(), recs[:, 3].mean(), recs[:, 4].mean(),
+            recs[:, 5].mean(), viol)
+
+
+def run_policies(overrides=None, start=(1, 1), tiers_table=None):
+    """Simulate the three paper policies; returns {name: summary}."""
+    hs, tiers, mask = D.grid_arrays(np.float64)
+    if tiers_table is not None:
+        tiers[: len(tiers_table)] = tiers_table
+    trace = D.paper_trace(np.float64)
+    out = {}
+    for name, (adh, adv) in POLICY_MOVES.items():
+        p = D.params_vec(allow_dh=adh, allow_dv=adv, dtype=np.float64,
+                         **(overrides or {}))
+        out[name] = summarize(simulate(p, hs, tiers, mask, trace,
+                                       np.array(start)))
+    return out
+
+
+def score_setting(res):
+    """Lower is better; +inf if a required ordering is broken."""
+    ds, hz, vt = res["diag"], res["horiz"], res["vert"]
+    orderings = [
+        ds[4] < vt[4] < hz[4],            # violations
+        ds[0] < vt[0] < hz[0],            # latency
+        ds[3] < vt[3] < hz[3],            # objective
+        ds[2] >= vt[2] and ds[2] >= hz[2],  # DS pays the premium
+        ds[1] > hz[1],                    # DS best throughput
+    ]
+    if not all(orderings):
+        return float("inf")
+    err = 0.0
+    for k in PAPER:
+        got, want = res[k], PAPER[k]
+        for i in range(5):
+            w = max(abs(want[i]), 1e-9)
+            err += abs(got[i] - want[i]) / w
+    return err
+
+
+def random_search(samples, seed=0):
+    rng = np.random.default_rng(seed)
+    best, best_err = None, float("inf")
+    for s in range(samples):
+        over = dict(
+            kappa=float(rng.uniform(350, 700)),
+            omega=float(rng.choice([0.10, 0.15, 0.20, 0.25])),
+            mu=float(rng.uniform(0.2, 0.6)),
+            theta=float(rng.uniform(1.05, 1.35)),
+            alpha=float(rng.choice([5.0, 8.0, 10.0, 15.0])),
+            beta=float(rng.choice([10.0, 20.0, 30.0, 40.0])),
+            gamma=float(rng.choice([1.0, 2.0, 5.0, 10.0])),
+            delta=float(rng.choice([0.0005, 0.001, 0.002, 0.003])),
+            b_sla=float(rng.choice([1.05, 1.1, 1.15, 1.2])),
+            l_max=float(rng.choice([5.0, 6.0, 6.5, 7.0, 8.0])),
+            u_max=float(rng.choice([0.80, 0.85, 0.90, 0.95])),
+        )
+        start = (1, 1) if rng.random() < 0.5 else (2, 1)
+        try:
+            res = run_policies(over, start=start)
+        except FloatingPointError:
+            continue
+        err = score_setting(res)
+        if err < best_err:
+            best_err, best = err, (over, start, res)
+            print(f"[{s}] err={err:.3f} start={start} {json.dumps(over)}")
+            for k, v in res.items():
+                print(f"    {k:6s} lat={v[0]:7.2f} thr={v[1]:9.1f} "
+                      f"cost={v[2]:6.3f} obj={v[3]:8.2f} viol={v[4]}")
+    return best, best_err
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--samples", type=int, default=20000)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    np.seterr(all="ignore")
+    print("current defaults:")
+    res = run_policies()
+    for k, v in res.items():
+        print(f"    {k:6s} lat={v[0]:7.2f} thr={v[1]:9.1f} "
+              f"cost={v[2]:6.3f} obj={v[3]:8.2f} viol={v[4]}")
+    print(f"    err={score_setting(res):.3f}")
+    best, err = random_search(args.samples, args.seed)
+    if best:
+        over, start, res = best
+        print(f"\nBEST err={err:.3f} start={start}\n{json.dumps(over, indent=2)}")
+
+
+if __name__ == "__main__":
+    main()

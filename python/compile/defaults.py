@@ -1,0 +1,167 @@
+"""Default model constants for the Diagonal Scaling surfaces.
+
+Single source of truth on the python side, mirroring
+``config/default.toml`` (the rust side's source of truth).  The kernels
+never bake these in — every entry point takes the tier table and the
+packed parameter vector as *runtime arguments* so the rust coordinator
+can drive both the native and the HLO path from the same TOML file.
+
+Packed parameter vector layout (f32[PARAMS_LEN], padded with zeros):
+
+    idx  name        meaning
+    ---  ----        -------
+      0  a           L_node cpu coefficient
+      1  b           L_node ram coefficient
+      2  c           L_node bandwidth coefficient
+      3  d           L_node iops coefficient
+      4  eta         L_coord log coefficient
+      5  mu          L_coord power coefficient
+      6  theta       L_coord power exponent
+      7  kappa       T_node scale
+      8  omega       horizontal efficiency decay
+      9  rho         coordination-cost scale
+     10  alpha       objective latency weight
+     11  beta        objective cost weight
+     12  gamma       objective coordination weight
+     13  delta       objective throughput reward
+     14  lambda_w    write arrival rate        (workload, per step)
+     15  lambda_req  required throughput       (workload, per step)
+     16  b_sla       throughput SLA buffer
+     17  l_max       latency SLA bound
+     18  reb_h       rebalance penalty per |dH index|
+     19  reb_v       rebalance penalty per |dV index|
+     20  n_h         number of real H values in the (padded) grid
+     21  n_v         number of real V tiers in the (padded) grid
+     22  allow_dh    policy may change H (1.0) or not (0.0)
+     23  allow_dv    policy may change V (1.0) or not (0.0)
+     24  u_max       utilization clamp for the queueing extension
+     25  write_ratio workload write fraction (informational)
+     26  plan_queue  planner also uses queueing latency (1.0) or the
+                     paper's raw Phase-1 surfaces (0.0, default)
+
+Simulation semantics (shared by model.policy_trace, the numpy
+calibrator, and the rust simulator — they must agree bit-for-bit in
+structure):
+
+  * serve-then-move: the config carried into step t serves workload t;
+    per-step metrics are measured at that config; the Algorithm-1
+    decision made with workload t takes effect at step t+1.
+  * planner feasibility uses the paper's raw analytical surfaces
+    (L <= l_max, T >= lambda_req * b_sla) unless plan_queue is set.
+  * *measured* latency is utilization-corrected (paper §VIII):
+    u = lambda_req / T clamped to u_max; L_eff = L / (1 - u).  The
+    reported objective uses L_eff; violation accounting uses raw L for
+    the latency SLA (planner-consistent) and raw lambda_req for the
+    throughput SLA (the b_sla buffer is planning headroom only).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Padded grid edge: the real plane is 4x4 (H in {1,2,4,8} x 4 tiers) but
+# the kernels operate on an 8x8 f32 grid so one surface tile is a single
+# VMEM-resident block on TPU.  Padding cells are masked out.
+GRID = 8
+# Wide grid for the disaggregated 4-D plane (paper VIII): 4x4x4 = 64
+# (compute, memory, storage) combos as columns, H as rows.
+WIDE = 64
+PARAMS_LEN = 32
+NEIGHBOR_ROWS = 16  # candidate rows, padded (real neighborhood is <= 9)
+NEIGHBOR_COLS = 16  # candidate feature columns, padded (9 used)
+
+# -- parameter indices -------------------------------------------------
+P_A, P_B, P_C, P_D = 0, 1, 2, 3
+P_ETA, P_MU, P_THETA = 4, 5, 6
+P_KAPPA, P_OMEGA, P_RHO = 7, 8, 9
+P_ALPHA, P_BETA, P_GAMMA, P_DELTA = 10, 11, 12, 13
+P_LAMBDA_W, P_LAMBDA_REQ = 14, 15
+P_B_SLA, P_L_MAX = 16, 17
+P_REB_H, P_REB_V = 18, 19
+P_N_H, P_N_V = 20, 21
+P_ALLOW_DH, P_ALLOW_DV = 22, 23
+P_U_MAX, P_WRITE_RATIO = 24, 25
+P_PLAN_QUEUE = 26  # planner feasibility/objective use queueing latency
+
+# -- candidate row feature columns (neighbor kernel) -------------------
+C_H, C_CPU, C_RAM, C_BW, C_IOPS_K, C_COST, C_ADH, C_ADV, C_VALID = range(9)
+
+# Sentinel score for infeasible / invalid candidates.
+INFEASIBLE = 1.0e30
+
+# -- default plane ------------------------------------------------------
+H_VALUES = [1.0, 2.0, 4.0, 8.0]
+
+# tier -> (cpu, ram, bandwidth, iops/1000, cost_node)
+TIERS = {
+    "small": (2.0, 4.0, 2.5, 3.0, 0.08),
+    "medium": (4.0, 8.0, 5.0, 6.0, 0.20),
+    "large": (8.0, 16.0, 10.0, 12.0, 0.45),
+    "xlarge": (16.0, 32.0, 20.0, 24.0, 1.00),
+}
+TIER_NAMES = list(TIERS)
+
+# -- default constants (calibrated; see EXPERIMENTS.md) -----------------
+DEFAULTS = dict(
+    a=4.0, b=4.0, c=2.0, d=3.0,
+    eta=1.0, mu=0.24, theta=1.125,
+    kappa=585.0, omega=0.25, rho=1.0,
+    alpha=5.0, beta=30.0, gamma=1.0, delta=0.0005,
+    b_sla=1.15, l_max=5.0,
+    reb_h=2.0, reb_v=1.0,
+    u_max=0.75,
+)
+
+# Paper simulation start config: (H=2, medium) as grid indices.
+START = (1, 1)
+
+TRACE_LEN = 50  # the paper's 50-step dynamic workload timeline
+THR_FACTOR = 100.0  # required throughput = intensity * factor
+WRITE_RATIO = 0.3
+
+
+def grid_arrays(dtype=np.float32):
+    """Padded (hs[GRID], tiers[GRID,5], mask[GRID,GRID]) arrays."""
+    hs = np.zeros(GRID, dtype=dtype)
+    hs[: len(H_VALUES)] = H_VALUES
+    hs[len(H_VALUES):] = 1.0  # benign padding (log/pow stay finite)
+    tiers = np.ones((GRID, 5), dtype=dtype)  # benign padding (no div-by-0)
+    for j, name in enumerate(TIER_NAMES):
+        tiers[j] = TIERS[name]
+    mask = np.zeros((GRID, GRID), dtype=dtype)
+    mask[: len(H_VALUES), : len(TIER_NAMES)] = 1.0
+    return hs, tiers, mask
+
+
+def params_vec(lambda_req=10000.0, write_ratio=WRITE_RATIO,
+               allow_dh=1.0, allow_dv=1.0, plan_queue=0.0,
+               dtype=np.float32, **over):
+    """Packed parameter vector with defaults, overridable per test."""
+    d = dict(DEFAULTS)
+    d.update(over)
+    p = np.zeros(PARAMS_LEN, dtype=dtype)
+    p[P_A], p[P_B], p[P_C], p[P_D] = d["a"], d["b"], d["c"], d["d"]
+    p[P_ETA], p[P_MU], p[P_THETA] = d["eta"], d["mu"], d["theta"]
+    p[P_KAPPA], p[P_OMEGA], p[P_RHO] = d["kappa"], d["omega"], d["rho"]
+    p[P_ALPHA], p[P_BETA] = d["alpha"], d["beta"]
+    p[P_GAMMA], p[P_DELTA] = d["gamma"], d["delta"]
+    p[P_LAMBDA_W] = lambda_req * write_ratio
+    p[P_LAMBDA_REQ] = lambda_req
+    p[P_B_SLA], p[P_L_MAX] = d["b_sla"], d["l_max"]
+    p[P_REB_H], p[P_REB_V] = d["reb_h"], d["reb_v"]
+    p[P_N_H], p[P_N_V] = float(len(H_VALUES)), float(len(TIER_NAMES))
+    p[P_ALLOW_DH], p[P_ALLOW_DV] = allow_dh, allow_dv
+    p[P_U_MAX], p[P_WRITE_RATIO] = d["u_max"], write_ratio
+    p[P_PLAN_QUEUE] = plan_queue
+    return p
+
+
+def paper_trace(dtype=np.float32):
+    """The paper's 50-step workload timeline as (lambda_req, lambda_w)."""
+    intensity = np.array(
+        [60.0] * 10 + [100.0] * 10 + [160.0] * 10 + [100.0] * 10 + [60.0] * 10,
+        dtype=dtype,
+    )
+    lam_req = intensity * THR_FACTOR
+    lam_w = lam_req * WRITE_RATIO
+    return np.stack([lam_req, lam_w], axis=1)

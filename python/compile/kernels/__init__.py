@@ -1,0 +1,1 @@
+# L1 Pallas kernels: surfaces, neighbor scoring, queueing latency.

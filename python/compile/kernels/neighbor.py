@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: SLA-filtered neighbor scoring (Algorithm 1 core).
+
+Scores a padded batch of candidate configurations: computes the four
+surfaces per row, applies the SLA feasibility filter (paper IV.C), adds
+the rebalance penalty R = reb_h*|dH| + reb_v*|dV| (paper IV.D), and
+emits ``INFEASIBLE`` for filtered rows.  The argmin stays on the caller's
+side (rust / L2) so tie-breaking order is explicit and shared.
+
+The candidate matrix is padded to 16x16 f32 (9 real columns, <=9 real
+rows) so the whole batch is one VMEM block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import defaults as D
+
+
+def _neighbor_kernel(cand_ref, params_ref, score_ref, feas_ref):
+    p = params_ref[...]
+    cand = cand_ref[...]                  # [N, >=9]
+    h = cand[:, D.C_H]
+    cpu, ram = cand[:, D.C_CPU], cand[:, D.C_RAM]
+    bw, iops_k = cand[:, D.C_BW], cand[:, D.C_IOPS_K]
+    cost_node = cand[:, D.C_COST]
+    adh, adv = cand[:, D.C_ADH], cand[:, D.C_ADV]
+    valid = cand[:, D.C_VALID]
+
+    log_h = jnp.log(h)
+    l_coord = p[D.P_ETA] * log_h + p[D.P_MU] * jnp.exp(p[D.P_THETA] * log_h)
+    lat = (p[D.P_A] / cpu + p[D.P_B] / ram + p[D.P_C] / bw
+           + p[D.P_D] / iops_k) + l_coord
+    mins = jnp.minimum(jnp.minimum(cpu, ram), jnp.minimum(bw, iops_k))
+    thr = h * (p[D.P_KAPPA] * mins) / (1.0 + p[D.P_OMEGA] * log_h)
+    cost = h * cost_node
+    coord = p[D.P_RHO] * l_coord * p[D.P_LAMBDA_W] / thr
+    obj = (p[D.P_ALPHA] * lat + p[D.P_BETA] * cost
+           + p[D.P_GAMMA] * coord - p[D.P_DELTA] * thr)
+
+    t_min = p[D.P_LAMBDA_REQ] * p[D.P_B_SLA]
+    ok = ((valid > 0.5) & (lat <= p[D.P_L_MAX]) & (thr >= t_min))
+    penalty = p[D.P_REB_H] * adh + p[D.P_REB_V] * adv
+    score_ref[...] = jnp.where(ok, obj + penalty,
+                               jnp.full_like(obj, D.INFEASIBLE))
+    feas_ref[...] = ok.astype(jnp.float32)
+
+
+def neighbor_scores(cand, params):
+    """Score a candidate batch; returns (scores f32[N], feasible f32[N])."""
+    n = cand.shape[0]
+    return pl.pallas_call(
+        _neighbor_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=True,
+    )(cand, params)

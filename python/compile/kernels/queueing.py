@@ -1,0 +1,43 @@
+"""L1 Pallas kernel: utilization-sensitive queueing latency (paper VIII).
+
+Implements the paper's future-work extension: u = T_req / T(H,V),
+L_final = L / (1 - u), with u clamped at u_max so latency spikes (but
+stays finite) as utilization approaches capacity.  ``saturated`` marks
+cells whose raw utilization reached/exceeded the clamp.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import defaults as D
+
+
+def _queueing_kernel(lat_ref, thr_ref, mask_ref, params_ref,
+                     lf_ref, sat_ref):
+    p = params_ref[...]
+    lat = lat_ref[...]
+    thr = thr_ref[...]
+    mask = mask_ref[...]
+
+    safe_thr = jnp.where(thr > 0.0, thr, jnp.ones_like(thr))
+    u_raw = p[D.P_LAMBDA_REQ] / safe_thr
+    sat = (u_raw >= p[D.P_U_MAX]) & (mask > 0.5)
+    u = jnp.minimum(u_raw, p[D.P_U_MAX])
+    l_final = lat / (1.0 - u)
+
+    zero = jnp.zeros_like(lat)
+    lf_ref[...] = jnp.where(mask > 0.5, l_final, zero)
+    sat_ref[...] = sat.astype(jnp.float32)
+
+
+def queueing_latency(lat, thr, mask, params):
+    """Apply the 1/(1-u) correction; returns (L_final, saturated)."""
+    out = jax.ShapeDtypeStruct(lat.shape, jnp.float32)
+    return pl.pallas_call(
+        _queueing_kernel,
+        out_shape=(out, out),
+        interpret=True,
+    )(lat, thr, mask, params)

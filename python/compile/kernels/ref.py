@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal: pytest asserts each Pallas kernel
+(interpret=True) matches these reference functions with ``assert_allclose``
+over hypothesis-generated workloads and parameter vectors.
+
+All functions take the same padded arrays the kernels take; see
+``defaults.py`` for the packed-parameter layout.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import defaults as D
+
+
+def node_latency(cpu, ram, bw, iops_k, p):
+    """L_node(V) = a/cpu + b/ram + c/bw + d/(iops/1000)   (paper III.C)."""
+    return (p[D.P_A] / cpu + p[D.P_B] / ram + p[D.P_C] / bw
+            + p[D.P_D] / iops_k)
+
+
+def coord_latency(h, p):
+    """L_coord(H) = eta * ln H + mu * H^theta   (paper III.C)."""
+    return p[D.P_ETA] * jnp.log(h) + p[D.P_MU] * h ** p[D.P_THETA]
+
+
+def node_throughput(cpu, ram, bw, iops_k, p):
+    """T_node(V) = kappa * min(cpu, ram, bw, iops/1000)   (paper III.D)."""
+    m = jnp.minimum(jnp.minimum(cpu, ram), jnp.minimum(bw, iops_k))
+    return p[D.P_KAPPA] * m
+
+
+def horiz_efficiency(h, p):
+    """phi(H) = 1 / (1 + omega * ln H)   (paper III.D)."""
+    return 1.0 / (1.0 + p[D.P_OMEGA] * jnp.log(h))
+
+
+def surfaces_ref(hs, tiers, params, mask):
+    """All five analytical surfaces over the padded (H, V) grid.
+
+    hs:     f32[G]      node count for grid row i
+    tiers:  f32[G, 5]   (cpu, ram, bw, iops_k, cost_node) for grid col j
+    params: f32[P]      packed constants + workload
+    mask:   f32[G, G]   1.0 on real cells, 0.0 on padding
+
+    Returns (L, T, C, K, F), each f32[G, G], zeroed on padding cells.
+    """
+    p = params
+    h = hs[:, None]                       # [G, 1]
+    cpu = tiers[None, :, 0]               # [1, G]
+    ram = tiers[None, :, 1]
+    bw = tiers[None, :, 2]
+    iops_k = tiers[None, :, 3]
+    cost_node = tiers[None, :, 4]
+
+    l_node = node_latency(cpu, ram, bw, iops_k, p)
+    l_coord = coord_latency(h, p)
+    lat = l_node + l_coord                            # L(H,V)
+    thr = h * node_throughput(cpu, ram, bw, iops_k, p) * horiz_efficiency(h, p)
+    cost = h * cost_node                              # C(H,V)
+    coord = p[D.P_RHO] * l_coord * p[D.P_LAMBDA_W] / thr   # K(H,V)
+    obj = (p[D.P_ALPHA] * lat + p[D.P_BETA] * cost
+           + p[D.P_GAMMA] * coord - p[D.P_DELTA] * thr)    # F(H,V)
+
+    z = jnp.zeros_like(lat)
+    return tuple(jnp.where(mask > 0.5, s, z)
+                 for s in (lat, thr, cost, coord, obj))
+
+
+def neighbor_scores_ref(cand, params):
+    """SLA-filtered, rebalance-penalized scores for a candidate batch.
+
+    cand:   f32[N, >=9] rows (h, cpu, ram, bw, iops_k, cost_node,
+            |dH idx|, |dV idx|, valid) — see defaults.C_*.
+    params: f32[P]
+
+    Returns (scores f32[N], feasible f32[N]).  Invalid or infeasible rows
+    score ``defaults.INFEASIBLE``; feasible is 1.0 only for valid rows
+    that satisfy both SLA conditions (paper IV.C).
+    """
+    p = params
+    h = cand[:, D.C_H]
+    cpu, ram = cand[:, D.C_CPU], cand[:, D.C_RAM]
+    bw, iops_k = cand[:, D.C_BW], cand[:, D.C_IOPS_K]
+    cost_node = cand[:, D.C_COST]
+    adh, adv = cand[:, D.C_ADH], cand[:, D.C_ADV]
+    valid = cand[:, D.C_VALID]
+
+    l_coord = coord_latency(h, p)
+    lat = node_latency(cpu, ram, bw, iops_k, p) + l_coord
+    thr = h * node_throughput(cpu, ram, bw, iops_k, p) * horiz_efficiency(h, p)
+    cost = h * cost_node
+    coord = p[D.P_RHO] * l_coord * p[D.P_LAMBDA_W] / thr
+    obj = (p[D.P_ALPHA] * lat + p[D.P_BETA] * cost
+           + p[D.P_GAMMA] * coord - p[D.P_DELTA] * thr)
+
+    t_min = p[D.P_LAMBDA_REQ] * p[D.P_B_SLA]
+    ok = ((valid > 0.5)
+          & (lat <= p[D.P_L_MAX])
+          & (thr >= t_min))
+    penalty = p[D.P_REB_H] * adh + p[D.P_REB_V] * adv   # R (paper IV.D)
+    score = jnp.where(ok, obj + penalty, D.INFEASIBLE)
+    return score, ok.astype(cand.dtype)
+
+
+def queueing_ref(lat, thr, mask, params):
+    """Utilization-sensitive latency (paper VIII, future-work model).
+
+    u = lambda_req / T, clamped to u_max;  L_final = L / (1 - u).
+
+    Returns (L_final f32[G,G], saturated f32[G,G]) where ``saturated`` is
+    1.0 on cells whose raw utilization reached/exceeded u_max.
+    """
+    p = params
+    safe_thr = jnp.where(thr > 0.0, thr, 1.0)
+    u_raw = p[D.P_LAMBDA_REQ] / safe_thr
+    sat = (u_raw >= p[D.P_U_MAX]) & (mask > 0.5)
+    u = jnp.minimum(u_raw, p[D.P_U_MAX])
+    l_final = lat / (1.0 - u)
+    z = jnp.zeros_like(lat)
+    return (jnp.where(mask > 0.5, l_final, z), sat.astype(lat.dtype))

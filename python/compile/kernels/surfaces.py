@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: all five analytical surfaces over the Scaling Plane.
+
+One fused kernel evaluates L (latency), T (throughput), C (cluster cost),
+K (coordination cost) and F (objective) over the padded (H, V) grid in a
+single pass — one HBM->VMEM round trip per decision instead of five
+elementwise launches.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the real plane is 4x4;
+the grid is padded to 8x8 f32 so each surface tile is one VMEM-resident
+block. BlockSpec covers the whole (tiny) arrays; total VMEM footprint is
+~8 KiB. interpret=True is mandatory for CPU-PJRT execution — real-TPU
+lowering emits Mosaic custom-calls the CPU plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import defaults as D
+
+
+def _surfaces_kernel(hs_ref, tiers_ref, params_ref, mask_ref,
+                     l_ref, t_ref, c_ref, k_ref, f_ref):
+    p = params_ref[...]                   # [P] in VMEM (tiny)
+    h = hs_ref[...][:, None]              # [G, 1]
+    tiers = tiers_ref[...]                # [G, 5]
+    cpu = tiers[:, 0][None, :]            # [1, G] broadcast over rows
+    ram = tiers[:, 1][None, :]
+    bw = tiers[:, 2][None, :]
+    iops_k = tiers[:, 3][None, :]
+    cost_node = tiers[:, 4][None, :]
+    mask = mask_ref[...]
+
+    # L_node(V) + L_coord(H)  — computed once, reused by K and F.
+    l_node = (p[D.P_A] / cpu + p[D.P_B] / ram + p[D.P_C] / bw
+              + p[D.P_D] / iops_k)
+    log_h = jnp.log(h)
+    l_coord = p[D.P_ETA] * log_h + p[D.P_MU] * jnp.exp(p[D.P_THETA] * log_h)
+    lat = l_node + l_coord
+
+    # T(H,V) = H * kappa * min(resources) * phi(H)
+    mins = jnp.minimum(jnp.minimum(cpu, ram), jnp.minimum(bw, iops_k))
+    phi = 1.0 / (1.0 + p[D.P_OMEGA] * log_h)
+    thr = h * (p[D.P_KAPPA] * mins) * phi
+
+    cost = h * cost_node
+    coord = p[D.P_RHO] * l_coord * p[D.P_LAMBDA_W] / thr
+    obj = (p[D.P_ALPHA] * lat + p[D.P_BETA] * cost
+           + p[D.P_GAMMA] * coord - p[D.P_DELTA] * thr)
+
+    zero = jnp.zeros_like(lat)
+    keep = mask > 0.5
+    l_ref[...] = jnp.where(keep, lat, zero)
+    t_ref[...] = jnp.where(keep, thr, zero)
+    c_ref[...] = jnp.where(keep, cost, zero)
+    k_ref[...] = jnp.where(keep, coord, zero)
+    f_ref[...] = jnp.where(keep, obj, zero)
+
+
+def surfaces(hs, tiers, params, mask):
+    """Evaluate (L, T, C, K, F) over the padded grid.
+
+    Shapes: hs f32[G], tiers f32[W,5], params f32[P], mask f32[G,W].
+    Returns a 5-tuple of f32[G,W].  W == G for the paper's square plane;
+    W == 64 for the disaggregated wide plane (paper VIII).
+    """
+    g = hs.shape[0]
+    w = tiers.shape[0]
+    out = jax.ShapeDtypeStruct((g, w), jnp.float32)
+    return pl.pallas_call(
+        _surfaces_kernel,
+        out_shape=(out,) * 5,
+        interpret=True,
+    )(hs, tiers, params, mask)

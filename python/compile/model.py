@@ -1,0 +1,152 @@
+"""L2: the Diagonal Scaling compute graph, composed from the L1 kernels.
+
+Entry points (each AOT-lowered to HLO text by ``aot.py``):
+
+  surface_grid     — (L, T, C, K, F) over the padded Scaling Plane
+  neighbor_batch   — SLA-filtered scores for a candidate batch
+  queueing_grid    — surfaces + the 1/(1-u) queueing correction (VIII)
+  policy_trace     — the ENTIRE Phase-1 policy simulation (Algorithm 1
+                     over a workload trace) as a single lax.scan: at each
+                     step, evaluate the surface grid with the Pallas
+                     kernel, mask the local neighborhood, SLA-filter,
+                     add the rebalance penalty, argmin, and move.
+
+Everything here runs ONCE at build time; the rust coordinator executes
+the lowered HLO via PJRT on the decision path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import defaults as D
+from .kernels.neighbor import neighbor_scores
+from .kernels.queueing import queueing_latency
+from .kernels.surfaces import surfaces
+
+# Per-step record layout emitted by policy_trace (f32[T, REC_LEN]).
+REC_H_IDX, REC_V_IDX, REC_LAT, REC_THR = 0, 1, 2, 3
+REC_COST, REC_OBJ, REC_LAT_VIOL, REC_THR_VIOL = 4, 5, 6, 7
+REC_LEN = 8
+
+
+def surface_grid(hs, tiers, params, mask):
+    """All five surfaces over the padded plane (tuple of f32[G,G])."""
+    return surfaces(hs, tiers, params, mask)
+
+
+def neighbor_batch(cand, params):
+    """(scores, feasible) for a padded candidate batch."""
+    return neighbor_scores(cand, params)
+
+
+def queueing_grid(hs, tiers, params, mask):
+    """Surfaces with the utilization-corrected latency (paper VIII).
+
+    Returns (L_final, saturated, L, T, C, K, F).
+    """
+    lat, thr, cost, coord, obj = surfaces(hs, tiers, params, mask)
+    l_final, sat = queueing_latency(lat, thr, mask, params)
+    return l_final, sat, lat, thr, cost, coord, obj
+
+
+def _step(hs, tiers, params, mask, carry, lam):
+    """One simulation step: serve, measure, then decide (Algorithm 1).
+
+    The config carried into the step serves the step's workload; the
+    decision made here takes effect at the next step (reconfiguration is
+    not instantaneous).  See defaults.py for the full semantics note.
+    """
+    h_idx, v_idx = carry
+    lam_req, lam_w = lam[0], lam[1]
+    p = params.at[D.P_LAMBDA_W].set(lam_w).at[D.P_LAMBDA_REQ].set(lam_req)
+
+    lat, thr, cost, coord, obj = surfaces(hs, tiers, p, mask)
+
+    # Measured latency is utilization-corrected (paper VIII): the planner
+    # may model latency analytically, but the served latency spikes as
+    # utilization approaches capacity.
+    safe_thr = jnp.where(thr > 0.0, thr, jnp.ones_like(thr))
+    u = jnp.minimum(lam_req / safe_thr, p[D.P_U_MAX])
+    lat_eff = lat / (1.0 - u)
+    obj_eff = (p[D.P_ALPHA] * lat_eff + p[D.P_BETA] * cost
+               + p[D.P_GAMMA] * coord - p[D.P_DELTA] * thr)
+
+    # ---- measurement at the serving configuration --------------------
+    srv_lat_raw = lat[h_idx, v_idx]
+    srv_thr = thr[h_idx, v_idx]
+    rec = jnp.stack([
+        h_idx.astype(jnp.float32),
+        v_idx.astype(jnp.float32),
+        lat_eff[h_idx, v_idx],
+        srv_thr,
+        cost[h_idx, v_idx],
+        obj_eff[h_idx, v_idx],
+        (srv_lat_raw > p[D.P_L_MAX]).astype(jnp.float32),
+        (srv_thr < lam_req).astype(jnp.float32),
+    ])
+
+    # ---- Algorithm 1 decision -----------------------------------------
+    g = hs.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (g, g), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (g, g), 1)
+    di = jnp.abs(rows - h_idx)
+    dj = jnp.abs(cols - v_idx)
+
+    # Neighborhood: previous/next valid index on each axis (paper IV.B),
+    # restricted to the moves the policy is allowed to make.
+    allowed = (di <= 1) & (dj <= 1) & (mask > 0.5)
+    allowed &= jnp.where(p[D.P_ALLOW_DH] > 0.5, True, di == 0)
+    allowed &= jnp.where(p[D.P_ALLOW_DV] > 0.5, True, dj == 0)
+
+    # SLA feasibility (paper IV.C) — raw Phase-1 surfaces unless the
+    # queueing-aware-planner extension is enabled.
+    plan_lat = jnp.where(p[D.P_PLAN_QUEUE] > 0.5, lat_eff, lat)
+    plan_obj = jnp.where(p[D.P_PLAN_QUEUE] > 0.5, obj_eff, obj)
+    t_min = lam_req * p[D.P_B_SLA]
+    feasible = allowed & (plan_lat <= p[D.P_L_MAX]) & (thr >= t_min)
+
+    penalty = (p[D.P_REB_H] * di.astype(jnp.float32)
+               + p[D.P_REB_V] * dj.astype(jnp.float32))
+    score = jnp.where(feasible, plan_obj + penalty,
+                      jnp.full_like(obj, D.INFEASIBLE))
+
+    flat = score.reshape(-1)
+    best = jnp.argmin(flat)               # first minimum — row-major order
+    any_feasible = flat[best] < D.INFEASIBLE * 0.5
+    best_h = (best // g).astype(jnp.int32)
+    best_v = (best % g).astype(jnp.int32)
+
+    # Fallback (Algorithm 1 line 18): one-step scale-up along the axes the
+    # policy may move on — diagonal for DiagonalScale, axis for baselines.
+    n_h = p[D.P_N_H].astype(jnp.int32)
+    n_v = p[D.P_N_V].astype(jnp.int32)
+    step_h = (p[D.P_ALLOW_DH] > 0.5).astype(jnp.int32)
+    step_v = (p[D.P_ALLOW_DV] > 0.5).astype(jnp.int32)
+    fb_h = jnp.minimum(h_idx + step_h, n_h - 1)
+    fb_v = jnp.minimum(v_idx + step_v, n_v - 1)
+
+    new_h = jnp.where(any_feasible, best_h, fb_h).astype(jnp.int32)
+    new_v = jnp.where(any_feasible, best_v, fb_v).astype(jnp.int32)
+    return (new_h, new_v), rec
+
+
+def policy_trace(hs, tiers, params, mask, trace, start):
+    """Run Algorithm 1 over a whole workload trace in one XLA program.
+
+    hs f32[G], tiers f32[G,5], params f32[P], mask f32[G,G],
+    trace f32[T,2] rows (lambda_req, lambda_w), start f32[2] (h_idx, v_idx).
+
+    Returns f32[T, REC_LEN]; see the REC_* constants.
+    """
+    params = jnp.asarray(params)
+    start = jnp.asarray(start)
+    h0 = start[0].astype(jnp.int32)
+    v0 = start[1].astype(jnp.int32)
+
+    def body(carry, lam):
+        return _step(hs, tiers, params, mask, carry, lam)
+
+    _, recs = jax.lax.scan(body, (h0, v0), trace)
+    return recs

@@ -1,0 +1,76 @@
+"""AOT lowering: every entry point lowers to parseable HLO text and the
+manifest describes it accurately."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, defaults as D, model
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.lower_all(str(out), trace_lens=(50,))
+    return str(out), manifest
+
+
+class TestLowering:
+    def test_all_entry_points_emitted(self, artifacts):
+        out, manifest = artifacts
+        names = set(manifest["entry_points"])
+        assert {"surfaces", "surfaces_wide", "neighbor", "queueing",
+                "policy_trace_50"} == names
+        for info in manifest["entry_points"].values():
+            assert os.path.exists(os.path.join(out, info["file"]))
+
+    def test_hlo_is_text_not_proto(self, artifacts):
+        out, manifest = artifacts
+        for info in manifest["entry_points"].values():
+            with open(os.path.join(out, info["file"])) as f:
+                head = f.read(200)
+            assert "HloModule" in head  # textual HLO, parseable by xla 0.1.6
+
+    def test_no_unrunnable_custom_calls(self, artifacts):
+        """interpret=True Pallas must lower to plain HLO ops: a Mosaic
+        custom-call would be unloadable on the CPU PJRT plugin."""
+        out, manifest = artifacts
+        for info in manifest["entry_points"].values():
+            with open(os.path.join(out, info["file"])) as f:
+                text = f.read()
+            assert "mosaic" not in text.lower()
+            assert "tpu_custom_call" not in text.lower()
+
+    def test_manifest_arg_shapes(self, artifacts):
+        _, manifest = artifacts
+        g, p = D.GRID, D.PARAMS_LEN
+        eps = manifest["entry_points"]
+        assert eps["surfaces"]["args"] == [[g], [g, 5], [p], [g, g]]
+        assert eps["surfaces"]["num_outputs"] == 5
+        assert eps["surfaces_wide"]["args"] == [
+            [g], [D.WIDE, 5], [p], [g, D.WIDE]]
+        assert eps["surfaces_wide"]["num_outputs"] == 5
+        assert eps["neighbor"]["args"] == [
+            [D.NEIGHBOR_ROWS, D.NEIGHBOR_COLS], [p]]
+        assert eps["neighbor"]["num_outputs"] == 2
+        assert eps["queueing"]["num_outputs"] == 7
+        assert eps["policy_trace_50"]["args"][-2] == [50, 2]
+        assert eps["policy_trace_50"]["num_outputs"] == 1
+
+    def test_manifest_abi(self, artifacts):
+        out, manifest = artifacts
+        assert manifest["abi_version"] == aot.ABI_VERSION
+        assert manifest["rec_len"] == model.REC_LEN
+        with open(os.path.join(out, "manifest.json")) as f:
+            on_disk = json.load(f)
+        assert on_disk == manifest
+
+    def test_entry_points_parameterized_not_baked(self, artifacts):
+        """Constants must arrive as runtime parameters: the HLO for the
+        surfaces entry point takes 4 parameters."""
+        out, manifest = artifacts
+        with open(os.path.join(out, "surfaces.hlo.txt")) as f:
+            text = f.read()
+        main = text[text.index("ENTRY"):]
+        assert main.count("parameter(") == 4

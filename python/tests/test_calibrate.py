@@ -1,0 +1,87 @@
+"""The calibration tool itself: the numpy simulator is the independent
+oracle for policy_trace, and the Table-I scoring must reward exactly the
+paper's shape."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import calibrate as C, defaults as D
+
+np.seterr(all="ignore")
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+class TestDefaultCalibration:
+    @pytest.fixture(scope="class")
+    def result(self):
+        return C.run_policies()
+
+    def test_all_orderings_hold(self, result):
+        assert np.isfinite(C.score_setting(result))
+
+    def test_diagonal_best_on_violations(self, result):
+        assert result["diag"][4] < result["vert"][4] < result["horiz"][4]
+
+    def test_paper_magnitudes(self, result):
+        ds = result["diag"]
+        assert ds[4] <= 5                      # paper: 3
+        assert 3.0 <= ds[0] <= 7.0             # paper: 4.05
+        assert (25 <= result["horiz"][4] <= 40)  # paper: 32
+
+    def test_score_is_sum_of_relative_errors(self, result):
+        err = C.score_setting(result)
+        assert 0.0 < err < 15.0
+
+
+class TestScoreSetting:
+    def test_broken_ordering_scores_infinite(self):
+        good = C.run_policies()
+        bad = dict(good)
+        # swap diag and horiz: every ordering breaks
+        bad["diag"], bad["horiz"] = good["horiz"], good["diag"]
+        assert C.score_setting(bad) == float("inf")
+
+    def test_perfect_match_scores_zero(self):
+        exact = {k: v for k, v in C.PAPER.items()}
+        assert C.score_setting(exact) < 1e-9
+
+
+class TestSimulateProperties:
+    def _sim(self, adh, adv, trace, start=(1, 1), **over):
+        hs, tiers, mask = D.grid_arrays(np.float64)
+        p = D.params_vec(allow_dh=adh, allow_dv=adv, dtype=np.float64, **over)
+        return C.simulate(p, hs, tiers, mask, trace, np.array(start))
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    def test_random_trace_stays_in_bounds(self, seed):
+        rng = np.random.default_rng(seed)
+        lam = rng.uniform(100.0, 40_000.0, size=(30,))
+        trace = np.stack([lam, 0.3 * lam], axis=1)
+        rec = self._sim(1.0, 1.0, trace)
+        assert rec[:, 0].min() >= 0 and rec[:, 0].max() <= 3
+        assert rec[:, 1].min() >= 0 and rec[:, 1].max() <= 3
+        # local search: one index step per axis per timestep
+        assert np.abs(np.diff(rec[:, 0])).max() <= 1
+        assert np.abs(np.diff(rec[:, 1])).max() <= 1
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(min_value=0, max_value=10_000))
+    def test_axis_restrictions_respected(self, seed):
+        rng = np.random.default_rng(seed)
+        lam = rng.uniform(100.0, 40_000.0, size=(20,))
+        trace = np.stack([lam, 0.3 * lam], axis=1)
+        horiz = self._sim(1.0, 0.0, trace)
+        assert (horiz[:, 1] == 1).all()
+        vert = self._sim(0.0, 1.0, trace)
+        assert (vert[:, 0] == 1).all()
+
+    def test_impossible_demand_all_violations(self):
+        trace = np.full((10, 2), 1e9)
+        trace[:, 1] *= 0.3
+        rec = self._sim(1.0, 1.0, trace)
+        assert rec[:, 7].sum() == 10  # throughput violation every step
+        # fallback climbs to the top corner
+        assert rec[-1, 0] == 3 and rec[-1, 1] == 3

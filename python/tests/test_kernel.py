@@ -1,0 +1,130 @@
+"""Pallas surfaces kernel vs the pure-jnp oracle — the CORE correctness
+signal for L1.  Hypothesis sweeps tier tables, workloads, and constants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import defaults as D
+from compile.kernels import ref
+from compile.kernels.surfaces import surfaces
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+pos = st.floats(min_value=0.5, max_value=64.0, allow_nan=False)
+cost_s = st.floats(min_value=0.01, max_value=10.0, allow_nan=False)
+
+
+def tiers_strategy():
+    row = st.tuples(pos, pos, pos, pos, cost_s).map(list)
+    return st.lists(row, min_size=D.GRID, max_size=D.GRID).map(
+        lambda r: np.array(r, np.float32))
+
+
+def run_both(hs, tiers, params, mask):
+    got = surfaces(hs, tiers, params, mask)
+    want = ref.surfaces_ref(hs, tiers, params, mask)
+    return got, want
+
+
+class TestSurfacesDefaults:
+    def setup_method(self):
+        self.hs, self.tiers, self.mask = D.grid_arrays()
+        self.params = D.params_vec()
+
+    def test_matches_ref(self):
+        got, want = run_both(self.hs, self.tiers, self.params, self.mask)
+        for g, w in zip(got, want):
+            assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5)
+
+    def test_output_arity_and_shape(self):
+        got, _ = run_both(self.hs, self.tiers, self.params, self.mask)
+        assert len(got) == 5
+        for g in got:
+            assert g.shape == (D.GRID, D.GRID)
+            assert g.dtype == np.float32
+
+    def test_padding_cells_zeroed(self):
+        got, _ = run_both(self.hs, self.tiers, self.params, self.mask)
+        inv = self.mask < 0.5
+        for g in got:
+            assert np.all(np.asarray(g)[inv] == 0.0)
+
+    def test_cost_surface_monotone_fig1(self):
+        """Fig 1: cost increases in both dimensions."""
+        _, _, cost, _, _ = run_both(self.hs, self.tiers, self.params,
+                                    self.mask)[0]
+        c = np.asarray(cost)[:4, :4]
+        assert np.all(np.diff(c, axis=0) > 0)
+        assert np.all(np.diff(c, axis=1) > 0)
+
+    def test_latency_surface_shape_fig2(self):
+        """Fig 2: latency falls with tier, rises with node count."""
+        lat = np.asarray(run_both(self.hs, self.tiers, self.params,
+                                  self.mask)[0][0])[:4, :4]
+        assert np.all(np.diff(lat, axis=1) < 0)   # better tier -> lower
+        assert np.all(np.diff(lat, axis=0) > 0)   # more nodes -> higher
+
+    def test_throughput_diminishing_returns(self):
+        """phi(H) < 1 for H > 1: doubling nodes less than doubles T."""
+        thr = np.asarray(run_both(self.hs, self.tiers, self.params,
+                                  self.mask)[0][1])[:4, :4]
+        for j in range(4):
+            ratios = thr[1:, j] / thr[:-1, j]
+            assert np.all(ratios < 2.0)
+            assert np.all(ratios > 1.0)
+
+    def test_coordination_grows_with_h(self):
+        coord = np.asarray(run_both(self.hs, self.tiers, self.params,
+                                    self.mask)[0][3])[:4, :4]
+        assert np.all(np.diff(coord, axis=0) > 0)
+
+    def test_single_node_no_coordination_latency_log_term(self):
+        """H=1: ln(1)=0, so L = L_node + mu."""
+        lat = np.asarray(run_both(self.hs, self.tiers, self.params,
+                                  self.mask)[0][0])
+        p = self.params
+        l_node = (p[D.P_A] / self.tiers[:, 0] + p[D.P_B] / self.tiers[:, 1]
+                  + p[D.P_C] / self.tiers[:, 2] + p[D.P_D] / self.tiers[:, 3])
+        expect = l_node[:4] + p[D.P_MU]
+        assert_allclose(lat[0, :4], expect, rtol=1e-5)
+
+
+class TestSurfacesProperty:
+    @settings(**SETTINGS)
+    @given(tiers=tiers_strategy(),
+           lam=st.floats(min_value=1.0, max_value=1e6),
+           wr=st.floats(min_value=0.0, max_value=1.0))
+    def test_kernel_matches_ref_random_tiers(self, tiers, lam, wr):
+        hs, _, mask = D.grid_arrays()
+        params = D.params_vec(lambda_req=lam, write_ratio=wr)
+        got = surfaces(hs, tiers, params, mask)
+        want = ref.surfaces_ref(hs, tiers, params, mask)
+        for g, w in zip(got, want):
+            assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-4,
+                            atol=1e-6)
+
+    @settings(**SETTINGS)
+    @given(kappa=st.floats(min_value=1.0, max_value=5000.0),
+           omega=st.floats(min_value=0.01, max_value=2.0),
+           mu=st.floats(min_value=0.0, max_value=2.0),
+           theta=st.floats(min_value=0.5, max_value=2.0))
+    def test_kernel_matches_ref_random_constants(self, kappa, omega, mu,
+                                                 theta):
+        hs, tiers, mask = D.grid_arrays()
+        params = D.params_vec(kappa=kappa, omega=omega, mu=mu, theta=theta)
+        got = surfaces(hs, tiers, params, mask)
+        want = ref.surfaces_ref(hs, tiers, params, mask)
+        for g, w in zip(got, want):
+            assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-4,
+                            atol=1e-6)
+
+    @settings(**SETTINGS)
+    @given(lam=st.floats(min_value=0.0, max_value=1e7))
+    def test_all_finite_on_valid_cells(self, lam):
+        hs, tiers, mask = D.grid_arrays()
+        params = D.params_vec(lambda_req=lam)
+        got = surfaces(hs, tiers, params, mask)
+        for g in got:
+            assert np.all(np.isfinite(np.asarray(g)))

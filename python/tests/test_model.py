@@ -1,0 +1,142 @@
+"""policy_trace (the in-XLA Algorithm-1 simulation) vs the independent
+numpy simulator, plus the paper's headline Table-I assertions."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import calibrate as C, defaults as D, model
+
+np.seterr(all="ignore")
+
+
+def run_jax(adh, adv, trace=None, start=None, **over):
+    hs, tiers, mask = D.grid_arrays()
+    params = D.params_vec(allow_dh=adh, allow_dv=adv, **over)
+    trace = D.paper_trace() if trace is None else trace.astype(np.float32)
+    start = np.array(D.START if start is None else start, np.float32)
+    return np.asarray(
+        model.policy_trace(hs, tiers, params, mask, trace, start),
+        np.float64)
+
+
+def run_numpy(adh, adv, trace=None, start=None, **over):
+    hs, tiers, mask = D.grid_arrays(np.float64)
+    params = D.params_vec(allow_dh=adh, allow_dv=adv, dtype=np.float64,
+                          **over)
+    trace = D.paper_trace(np.float64) if trace is None else trace
+    start = np.array(D.START if start is None else start)
+    return C.simulate(params, hs, tiers, mask, trace, start)
+
+
+POLICIES = {"diag": (1, 1), "horiz": (1, 0), "vert": (0, 1)}
+
+
+class TestTraceVsNumpyOracle:
+    @pytest.mark.parametrize("name", list(POLICIES))
+    def test_trajectory_identical(self, name):
+        adh, adv = POLICIES[name]
+        jrec, nrec = run_jax(adh, adv), run_numpy(adh, adv)
+        assert np.array_equal(jrec[:, :2], nrec[:, :2])
+        assert np.array_equal(jrec[:, 6:8], nrec[:, 6:8])
+
+    @pytest.mark.parametrize("name", list(POLICIES))
+    def test_metrics_allclose(self, name):
+        adh, adv = POLICIES[name]
+        jrec, nrec = run_jax(adh, adv), run_numpy(adh, adv)
+        assert_allclose(jrec[:, 2:6], nrec[:, 2:6], rtol=1e-3)
+
+    @pytest.mark.parametrize("start", [(0, 0), (3, 3), (2, 0), (0, 3)])
+    def test_trajectory_identical_other_starts(self, start):
+        jrec = run_jax(1, 1, start=start)
+        nrec = run_numpy(1, 1, start=start)
+        assert np.array_equal(jrec[:, :2], nrec[:, :2])
+
+    def test_queueing_planner_extension_matches(self):
+        jrec = run_jax(1, 1, plan_queue=1.0)
+        nrec = run_numpy(1, 1, plan_queue=1.0)
+        assert np.array_equal(jrec[:, :2], nrec[:, :2])
+
+
+class TestPolicyInvariants:
+    def test_horizontal_only_never_changes_tier(self):
+        rec = run_jax(1, 0)
+        assert np.all(rec[:, model.REC_V_IDX] == D.START[1])
+
+    def test_vertical_only_never_changes_nodes(self):
+        rec = run_jax(0, 1)
+        assert np.all(rec[:, model.REC_H_IDX] == D.START[0])
+
+    def test_configs_stay_in_bounds(self):
+        for adh, adv in POLICIES.values():
+            rec = run_jax(adh, adv)
+            assert np.all(rec[:, 0] >= 0) and np.all(rec[:, 0] <= 3)
+            assert np.all(rec[:, 1] >= 0) and np.all(rec[:, 1] <= 3)
+
+    def test_moves_are_single_step(self):
+        """Local search: at most one index step per axis per timestep."""
+        for adh, adv in POLICIES.values():
+            rec = run_jax(adh, adv)
+            assert np.all(np.abs(np.diff(rec[:, 0])) <= 1)
+            assert np.all(np.abs(np.diff(rec[:, 1])) <= 1)
+
+    def test_diagonal_uses_both_axes(self):
+        """Fig 5: DiagonalScale actually moves in both dimensions."""
+        rec = run_jax(1, 1)
+        assert len(np.unique(rec[:, 0])) > 1
+        assert len(np.unique(rec[:, 1])) > 1
+
+    def test_fallback_scales_up_when_nothing_feasible(self):
+        """Impossible demand: diagonal fallback climbs to the top corner."""
+        trace = np.full((10, 2), 1e9, np.float32)
+        trace[:, 1] *= 0.3
+        rec = run_jax(1, 1, trace=trace, start=(0, 0))
+        assert rec[-1, model.REC_H_IDX] == 3
+        assert rec[-1, model.REC_V_IDX] == 3
+        # every step violates the throughput SLA
+        assert np.all(rec[:, model.REC_THR_VIOL] == 1.0)
+
+    def test_steady_low_load_scales_down(self):
+        """From the top corner under tiny load, the policy walks down."""
+        trace = np.full((12, 2), 100.0, np.float32)
+        trace[:, 1] = 30.0
+        rec = run_jax(1, 1, trace=trace, start=(3, 3))
+        assert rec[-1, model.REC_H_IDX] < 3
+        assert rec[-1, model.REC_V_IDX] < 3
+        assert rec[-1, model.REC_COST] < rec[0, model.REC_COST]
+
+
+class TestTableOne:
+    """The paper's headline result (Table I), shape-level assertions."""
+
+    @pytest.fixture(scope="class")
+    def summaries(self):
+        out = {}
+        for name, (adh, adv) in POLICIES.items():
+            out[name] = C.summarize(run_jax(adh, adv))
+        return out
+
+    def test_violation_ordering(self, summaries):
+        assert (summaries["diag"][4] < summaries["vert"][4]
+                < summaries["horiz"][4])
+
+    def test_diagonal_few_violations(self, summaries):
+        assert summaries["diag"][4] <= 5          # paper: 3 / 50
+
+    def test_horizontal_many_violations(self, summaries):
+        assert summaries["horiz"][4] >= 25        # paper: 32 / 50
+
+    def test_latency_ordering(self, summaries):
+        assert (summaries["diag"][0] < summaries["vert"][0]
+                < summaries["horiz"][0])
+
+    def test_objective_ordering(self, summaries):
+        assert (summaries["diag"][3] < summaries["vert"][3]
+                < summaries["horiz"][3])
+
+    def test_diagonal_pays_cost_premium(self, summaries):
+        assert summaries["diag"][2] >= summaries["vert"][2]
+        assert summaries["diag"][2] >= summaries["horiz"][2]
+
+    def test_diagonal_best_throughput(self, summaries):
+        assert summaries["diag"][1] > summaries["horiz"][1]

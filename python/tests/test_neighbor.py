@@ -1,0 +1,119 @@
+"""Neighbor-scoring Pallas kernel vs its oracle + Algorithm-1 invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import defaults as D
+from compile.kernels import ref
+from compile.kernels.neighbor import neighbor_scores
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def make_cand(rows):
+    """Pad a list of 9-feature rows to the kernel's padded batch shape."""
+    cand = np.zeros((D.NEIGHBOR_ROWS, D.NEIGHBOR_COLS), np.float32)
+    for i, r in enumerate(rows):
+        cand[i, : len(r)] = r
+    return cand
+
+
+def default_rows():
+    """The full 9-candidate neighborhood of (H=2, medium)."""
+    hs = D.H_VALUES
+    tiers = [D.TIERS[n] for n in D.TIER_NAMES]
+    rows = []
+    for dh in (-1, 0, 1):
+        for dv in (-1, 0, 1):
+            hi, vi = 1 + dh, 1 + dv
+            rows.append([hs[hi], *tiers[vi], abs(dh), abs(dv), 1.0])
+    return rows
+
+
+class TestNeighborKernel:
+    def test_matches_ref(self):
+        cand = make_cand(default_rows())
+        params = D.params_vec()
+        s_got, f_got = neighbor_scores(cand, params)
+        s_want, f_want = ref.neighbor_scores_ref(cand, params)
+        assert_allclose(np.asarray(s_got), np.asarray(s_want), rtol=1e-5)
+        assert_allclose(np.asarray(f_got), np.asarray(f_want))
+
+    def test_invalid_rows_are_infeasible(self):
+        cand = make_cand(default_rows())
+        params = D.params_vec()
+        _, feas = neighbor_scores(cand, params)
+        assert np.all(np.asarray(feas)[9:] == 0.0)
+        scores, _ = neighbor_scores(cand, params)
+        assert np.all(np.asarray(scores)[9:] >= D.INFEASIBLE * 0.5)
+
+    def test_latency_sla_filters(self):
+        """With l_max below every candidate latency, nothing is feasible."""
+        cand = make_cand(default_rows())
+        params = D.params_vec(l_max=0.0)
+        scores, feas = neighbor_scores(cand, params)
+        assert np.all(np.asarray(feas) == 0.0)
+        assert np.all(np.asarray(scores) >= D.INFEASIBLE * 0.5)
+
+    def test_throughput_sla_filters(self):
+        """With an absurd required throughput, nothing is feasible."""
+        cand = make_cand(default_rows())
+        params = D.params_vec(lambda_req=1e9)
+        _, feas = neighbor_scores(cand, params)
+        assert np.all(np.asarray(feas) == 0.0)
+
+    def test_rebalance_penalty_applied(self):
+        """Identical configs at different index distances differ by R."""
+        tier = D.TIERS["xlarge"]
+        rows = [
+            [4.0, *tier, 0.0, 0.0, 1.0],
+            [4.0, *tier, 1.0, 0.0, 1.0],
+            [4.0, *tier, 0.0, 1.0, 1.0],
+            [4.0, *tier, 1.0, 1.0, 1.0],
+        ]
+        params = D.params_vec(lambda_req=100.0)
+        scores = np.asarray(neighbor_scores(make_cand(rows), params)[0])
+        reb_h, reb_v = params[D.P_REB_H], params[D.P_REB_V]
+        assert_allclose(scores[1] - scores[0], reb_h, rtol=1e-4)
+        assert_allclose(scores[2] - scores[0], reb_v, rtol=1e-4)
+        assert_allclose(scores[3] - scores[0], reb_h + reb_v, rtol=1e-4)
+
+    def test_h_change_penalized_more_than_v(self):
+        """Paper IV.D: changing H costs more than changing V."""
+        params = D.params_vec()
+        assert params[D.P_REB_H] > params[D.P_REB_V]
+
+
+class TestNeighborProperty:
+    @settings(**SETTINGS)
+    @given(data=st.data())
+    def test_matches_ref_random(self, data):
+        n = D.NEIGHBOR_ROWS
+        pos = st.floats(min_value=0.5, max_value=64.0)
+        cand = np.zeros((n, D.NEIGHBOR_COLS), np.float32)
+        for i in range(n):
+            cand[i, D.C_H] = data.draw(st.sampled_from([1.0, 2.0, 4.0, 8.0]))
+            for j in (D.C_CPU, D.C_RAM, D.C_BW, D.C_IOPS_K):
+                cand[i, j] = data.draw(pos)
+            cand[i, D.C_COST] = data.draw(
+                st.floats(min_value=0.01, max_value=10.0))
+            cand[i, D.C_ADH] = data.draw(st.sampled_from([0.0, 1.0]))
+            cand[i, D.C_ADV] = data.draw(st.sampled_from([0.0, 1.0]))
+            cand[i, D.C_VALID] = data.draw(st.sampled_from([0.0, 1.0]))
+        lam = data.draw(st.floats(min_value=1.0, max_value=1e6))
+        params = D.params_vec(lambda_req=lam)
+        s_got, f_got = neighbor_scores(cand, params)
+        s_want, f_want = ref.neighbor_scores_ref(cand, params)
+        assert_allclose(np.asarray(s_got), np.asarray(s_want), rtol=2e-4,
+                        atol=1e-5)
+        assert_allclose(np.asarray(f_got), np.asarray(f_want))
+
+    @settings(**SETTINGS)
+    @given(lam=st.floats(min_value=1.0, max_value=1e6))
+    def test_feasible_iff_score_finite(self, lam):
+        cand = make_cand(default_rows())
+        params = D.params_vec(lambda_req=lam)
+        scores, feas = neighbor_scores(cand, params)
+        scores, feas = np.asarray(scores), np.asarray(feas)
+        assert np.all((feas > 0.5) == (scores < D.INFEASIBLE * 0.5))

@@ -1,0 +1,95 @@
+"""Queueing-latency Pallas kernel (paper VIII extension) vs its oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import defaults as D, model
+from compile.kernels import ref
+from compile.kernels.queueing import queueing_latency
+from compile.kernels.surfaces import surfaces
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def grids(lambda_req=10000.0, **over):
+    hs, tiers, mask = D.grid_arrays()
+    params = D.params_vec(lambda_req=lambda_req, **over)
+    lat, thr, *_ = surfaces(hs, tiers, params, mask)
+    return np.asarray(lat), np.asarray(thr), mask, params
+
+
+class TestQueueingKernel:
+    def test_matches_ref(self):
+        lat, thr, mask, params = grids()
+        got = queueing_latency(lat, thr, mask, params)
+        want = ref.queueing_ref(lat, thr, mask, params)
+        for g, w in zip(got, want):
+            assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5)
+
+    def test_low_utilization_barely_inflates(self):
+        lat, thr, mask, params = grids(lambda_req=1.0)
+        lf, sat = queueing_latency(lat, thr, mask, params)
+        lf = np.asarray(lf)[:4, :4]
+        raw = lat[:4, :4]
+        assert np.all(lf >= raw)
+        assert_allclose(lf, raw, rtol=1e-2)
+        assert np.all(np.asarray(sat) == 0.0)
+
+    def test_saturation_clamped_and_flagged(self):
+        """Demand far above capacity: clamp at u_max, flag saturated."""
+        lat, thr, mask, params = grids(lambda_req=1e9)
+        lf, sat = queueing_latency(lat, thr, mask, params)
+        lf, sat = np.asarray(lf), np.asarray(sat)
+        u_max = params[D.P_U_MAX]
+        assert np.all(sat[:4, :4] == 1.0)
+        assert_allclose(lf[:4, :4], lat[:4, :4] / (1.0 - u_max), rtol=1e-5)
+        assert np.all(np.isfinite(lf))
+
+    def test_padding_cells_zeroed(self):
+        lat, thr, mask, params = grids()
+        lf, sat = queueing_latency(lat, thr, mask, params)
+        inv = mask < 0.5
+        assert np.all(np.asarray(lf)[inv] == 0.0)
+        assert np.all(np.asarray(sat)[inv] == 0.0)
+
+    def test_monotone_in_demand(self):
+        lat, thr, mask, params_lo = grids(lambda_req=2000.0)
+        _, _, _, params_hi = grids(lambda_req=8000.0)
+        lo = np.asarray(queueing_latency(lat, thr, mask, params_lo)[0])
+        hi = np.asarray(queueing_latency(lat, thr, mask, params_hi)[0])
+        valid = mask > 0.5
+        assert np.all(hi[valid] >= lo[valid])
+
+
+class TestQueueingProperty:
+    @settings(**SETTINGS)
+    @given(lam=st.floats(min_value=0.0, max_value=1e8),
+           u_max=st.floats(min_value=0.1, max_value=0.99))
+    def test_matches_ref_random(self, lam, u_max):
+        lat, thr, mask, params = grids(lambda_req=lam, u_max=u_max)
+        got = queueing_latency(lat, thr, mask, params)
+        want = ref.queueing_ref(lat, thr, mask, params)
+        for g, w in zip(got, want):
+            assert_allclose(np.asarray(g), np.asarray(w), rtol=2e-4,
+                            atol=1e-6)
+
+    @settings(**SETTINGS)
+    @given(lam=st.floats(min_value=0.0, max_value=1e8))
+    def test_never_divides_to_inf(self, lam):
+        lat, thr, mask, params = grids(lambda_req=lam)
+        lf, _ = queueing_latency(lat, thr, mask, params)
+        assert np.all(np.isfinite(np.asarray(lf)))
+
+
+class TestQueueingGridModel:
+    def test_queueing_grid_composition(self):
+        """L2 queueing_grid = surfaces + correction, consistently."""
+        hs, tiers, mask = D.grid_arrays()
+        params = D.params_vec()
+        lf, sat, lat, thr, cost, coord, obj = model.queueing_grid(
+            hs, tiers, params, mask)
+        want_lf, want_sat = ref.queueing_ref(
+            np.asarray(lat), np.asarray(thr), mask, params)
+        assert_allclose(np.asarray(lf), np.asarray(want_lf), rtol=1e-5)
+        assert_allclose(np.asarray(sat), np.asarray(want_sat))

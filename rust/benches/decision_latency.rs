@@ -1,0 +1,68 @@
+//! Bench A6 — the paper's §IV.F complexity claim: the decision loop
+//! evaluates at most nine closed-form candidates, O(1) per step, and is
+//! "suitable for a real-time control loop".
+//!
+//! ```text
+//! cargo bench --bench decision_latency
+//! ```
+
+use diagonal_scale::benchkit::{group, Bench};
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::plane::Configuration;
+use diagonal_scale::policy::{DiagonalScale, Lookahead, Oracle, Policy, PolicyContext};
+use diagonal_scale::simulator::{PolicyKind, Simulator};
+use diagonal_scale::sla::SlaSpec;
+use diagonal_scale::surfaces::SurfaceModel;
+use diagonal_scale::workload::{TraceBuilder, WorkloadPoint};
+
+fn main() {
+    let cfg = ModelConfig::default_paper();
+    let model = SurfaceModel::from_config(&cfg);
+    let sla = SlaSpec::from_config(&cfg);
+    let ctx = PolicyContext {
+        model: &model,
+        sla: &sla,
+        reb_h: cfg.policy.reb_h,
+        reb_v: cfg.policy.reb_v,
+        plan_queue: false,
+        future: &[],
+    };
+    let b = Bench::default();
+    let w = WorkloadPoint::new(10_000.0, cfg.write_ratio());
+
+    group("A6 — single-decision latency (paper IV.F: O(|N|) = O(1))");
+    // interior (9 candidates) vs corner (4 candidates): both must be
+    // sub-microsecond and within a small constant factor
+    let interior = b.run("decide/interior_9_candidates", || {
+        DiagonalScale::diagonal().decide(Configuration::new(1, 1), w, &ctx)
+    });
+    let corner = b.run("decide/corner_4_candidates", || {
+        DiagonalScale::diagonal().decide(Configuration::new(0, 0), w, &ctx)
+    });
+    let ratio = interior.mean.as_secs_f64() / corner.mean.as_secs_f64().max(1e-12);
+    b.report_metric("interior/corner time ratio (O(1) check)", ratio, "x");
+
+    b.run("decide/oracle_full_plane_16", || {
+        Oracle.decide(Configuration::new(1, 1), w, &ctx)
+    });
+    let future = [w; 3];
+    let ctx_f = PolicyContext { future: &future, ..ctx };
+    for depth in [2usize, 3] {
+        b.run(&format!("decide/lookahead_depth_{depth}"), || {
+            Lookahead::new(diagonal_scale::config::MoveFlags::DIAGONAL, depth)
+                .decide(Configuration::new(1, 1), w, &ctx_f)
+        });
+    }
+
+    group("A6 — full control-loop step (simulate + decide)");
+    let sim = Simulator::new(&cfg);
+    let trace = TraceBuilder::paper(&cfg);
+    let stats = b.run("phase1_sim/50_steps_diagonal", || {
+        sim.run(PolicyKind::Diagonal, &trace).summary.violations
+    });
+    b.report_metric(
+        "per-step cost within the full loop",
+        stats.mean.as_secs_f64() * 1e9 / 50.0,
+        "ns/step",
+    );
+}

@@ -1,0 +1,59 @@
+//! Benches F1–F4 — regenerate the static surface figures:
+//!   fig 1  cost heatmap          fig 2  latency heatmap
+//!   fig 3  3-D latency surface   fig 4  objective heatmap
+//! and time their generation (native vs PJRT-executed kernel when
+//! artifacts exist).
+//!
+//! ```text
+//! cargo bench --bench figures
+//! ```
+
+use diagonal_scale::benchkit::{group, Bench};
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::report::{self, Surface};
+use diagonal_scale::runtime::{Engine, SurfaceEngine};
+use diagonal_scale::surfaces::SurfaceModel;
+
+fn main() {
+    let cfg = ModelConfig::default_paper();
+    let model = SurfaceModel::from_config(&cfg);
+    let b = Bench::default();
+    let lambda = 10_000.0;
+
+    std::fs::create_dir_all("out").ok();
+    for (fig, surface, file) in [
+        ("fig1", Surface::Cost, "out/fig1_cost_heatmap.csv"),
+        ("fig2", Surface::Latency, "out/fig2_latency_heatmap.csv"),
+        ("fig4", Surface::Objective, "out/fig4_objective_heatmap.csv"),
+    ] {
+        group(&format!("{fig} — {} heatmap over the Scaling Plane", surface.name()));
+        let csv = report::heatmap_csv(&model, surface, lambda);
+        std::fs::write(file, &csv).unwrap();
+        println!("{csv}");
+        b.run(&format!("{fig}_heatmap_generation"), || {
+            report::heatmap_csv(&model, surface, lambda).len()
+        });
+    }
+
+    group("fig3 — 3-D latency surface (long form)");
+    let csv = report::surface_csv(&model, Surface::Latency, lambda);
+    std::fs::write("out/fig3_latency_surface.csv", &csv).unwrap();
+    println!("{csv}");
+    b.run("fig3_surface_generation", || {
+        report::surface_csv(&model, Surface::Latency, lambda).len()
+    });
+
+    group("surface evaluation — native vs AOT Pallas kernel on PJRT");
+    b.run("native_grid_evaluation_16_configs", || {
+        model.evaluate_grid(lambda).len()
+    });
+    let artifacts = Engine::default_dir();
+    if artifacts.join("manifest.json").exists() {
+        let eng = SurfaceEngine::new(Engine::load(&artifacts).unwrap(), &cfg).unwrap();
+        b.run("pjrt_grid_evaluation_16_configs", || {
+            eng.surfaces(lambda).unwrap().latency[0]
+        });
+    } else {
+        println!("(run `make artifacts` for the PJRT comparison)");
+    }
+}

@@ -1,0 +1,42 @@
+//! Bench T1 — regenerates **Table I** (paper §VI.A) and times the
+//! end-to-end Phase-1 simulation per policy.
+//!
+//! ```text
+//! cargo bench --bench table1
+//! ```
+
+use diagonal_scale::benchkit::{group, Bench};
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::report;
+use diagonal_scale::simulator::{PolicyKind, Simulator};
+use diagonal_scale::workload::TraceBuilder;
+
+fn main() {
+    let cfg = ModelConfig::default_paper();
+    let sim = Simulator::new(&cfg);
+    let trace = TraceBuilder::paper(&cfg);
+    let b = Bench::default();
+
+    group("Table I — policy summary over the 50-step paper trace");
+    let runs = sim.run_paper_set(&trace);
+    let rows: Vec<_> = runs.iter().map(|r| (r.policy.clone(), r.summary)).collect();
+    println!("{}", report::table1(&rows));
+
+    group("Table I — end-to-end simulation wall time per policy");
+    for kind in [
+        PolicyKind::Diagonal,
+        PolicyKind::HorizontalOnly,
+        PolicyKind::VerticalOnly,
+        PolicyKind::Threshold,
+        PolicyKind::Oracle,
+        PolicyKind::Lookahead(3),
+    ] {
+        let label = format!("phase1_sim_50_steps/{}", kind.label());
+        let stats = b.run(&label, || sim.run(kind, &trace).summary.violations);
+        b.report_metric(
+            &format!("{label} (steps/s)"),
+            50.0 * stats.per_sec(),
+            "steps/s",
+        );
+    }
+}

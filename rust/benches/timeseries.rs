@@ -1,0 +1,88 @@
+//! Benches F5–F8 — regenerate the dynamic-experiment figures:
+//!   fig 5  policy trajectories in the plane
+//!   fig 6  latency over time    fig 7  cost over time
+//!   fig 8  objective over time
+//! and time the per-figure pipeline (simulate 3 policies + serialize).
+//!
+//! ```text
+//! cargo bench --bench timeseries
+//! ```
+
+use diagonal_scale::benchkit::{group, Bench};
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::report::{self, Metric};
+use diagonal_scale::simulator::Simulator;
+use diagonal_scale::surfaces::SurfaceModel;
+use diagonal_scale::workload::TraceBuilder;
+
+fn main() {
+    let cfg = ModelConfig::default_paper();
+    let sim = Simulator::new(&cfg);
+    let trace = TraceBuilder::paper(&cfg);
+    let model = SurfaceModel::from_config(&cfg);
+    let b = Bench::default();
+
+    let runs = sim.run_paper_set(&trace);
+    std::fs::create_dir_all("out").ok();
+
+    group("fig5 — policy trajectories in the Scaling Plane");
+    let csv = report::trajectories_csv(&runs, &model);
+    std::fs::write("out/fig5_trajectories.csv", &csv).unwrap();
+    // terminal summary: distinct configs visited per policy
+    for r in &runs {
+        let mut seen: Vec<_> = r.records.iter().map(|x| x.config).collect();
+        seen.dedup();
+        let path: Vec<String> = seen
+            .iter()
+            .map(|c| format!("({},{})", model.plane().h_value(c), model.plane().tier(c).name))
+            .collect();
+        println!("  {:<18} {}", r.policy, path.join(" -> "));
+    }
+    b.run("fig5_trajectories_pipeline", || {
+        let runs = sim.run_paper_set(&trace);
+        report::trajectories_csv(&runs, &model).len()
+    });
+
+    for (fig, metric, file) in [
+        ("fig6", Metric::Latency, "out/fig6_latency_over_time.csv"),
+        ("fig7", Metric::Cost, "out/fig7_cost_over_time.csv"),
+        ("fig8", Metric::Objective, "out/fig8_objective_over_time.csv"),
+    ] {
+        group(&format!("{fig} — {} over time by policy", metric.name()));
+        let csv = report::timeseries_csv(&runs, metric);
+        std::fs::write(file, &csv).unwrap();
+        // phase means per policy, the figure's visual story
+        println!(
+            "  {:<18} {:>8} {:>8} {:>8} {:>8} {:>8}",
+            "policy", "low-1", "med-1", "high", "med-2", "low-2"
+        );
+        for r in &runs {
+            let phase = |range: std::ops::Range<usize>| {
+                let n = range.len() as f64;
+                r.records[range]
+                    .iter()
+                    .map(|x| match metric {
+                        Metric::Latency => x.latency as f64,
+                        Metric::Cost => x.cost as f64,
+                        Metric::Objective => x.objective as f64,
+                        Metric::Throughput => x.throughput as f64,
+                    })
+                    .sum::<f64>()
+                    / n
+            };
+            println!(
+                "  {:<18} {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+                r.policy,
+                phase(0..10),
+                phase(10..20),
+                phase(20..30),
+                phase(30..40),
+                phase(40..50)
+            );
+        }
+        b.run(&format!("{fig}_timeseries_pipeline"), || {
+            let runs = sim.run_paper_set(&trace);
+            report::timeseries_csv(&runs, metric).len()
+        });
+    }
+}

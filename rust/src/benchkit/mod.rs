@@ -1,0 +1,129 @@
+//! Micro-benchmark harness (offline substitute for `criterion`): warms
+//! up, auto-calibrates the batch size to a target sample duration,
+//! collects wall-clock samples, and prints mean / median / p95 with
+//! throughput. Used by every `rust/benches/*.rs` target
+//! (`harness = false`).
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Collected statistics for one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u64,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() > 0.0 {
+            1.0 / self.mean.as_secs_f64()
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Benchmark runner with criterion-ish defaults.
+pub struct Bench {
+    samples: usize,
+    target_sample: Duration,
+    warmup: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            samples: 30,
+            target_sample: Duration::from_millis(20),
+            warmup: Duration::from_millis(200),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            samples: 10,
+            target_sample: Duration::from_millis(5),
+            warmup: Duration::from_millis(50),
+        }
+    }
+
+    pub fn with_samples(mut self, samples: usize) -> Self {
+        self.samples = samples.max(3);
+        self
+    }
+
+    /// Run one benchmark; `f` should return a value, which is
+    /// black-boxed to keep the optimizer honest.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Stats {
+        // Warmup + calibration: how many iterations fill target_sample?
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters.max(1) as f64;
+        let batch = ((self.target_sample.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            samples.push(t0.elapsed() / batch as u32);
+        }
+        samples.sort();
+        let stats = Stats {
+            iters: batch * self.samples as u64,
+            mean: samples.iter().sum::<Duration>() / self.samples as u32,
+            median: samples[self.samples / 2],
+            p95: samples[(self.samples * 95 / 100).min(self.samples - 1)],
+            min: samples[0],
+        };
+        println!(
+            "bench {name:<42} mean {:>12?}  median {:>12?}  p95 {:>12?}  min {:>12?}  ({} iters)",
+            stats.mean, stats.median, stats.p95, stats.min, stats.iters
+        );
+        stats
+    }
+
+    /// Print a named derived metric next to a benchmark (e.g. rows/s).
+    pub fn report_metric(&self, name: &str, value: f64, unit: &str) {
+        println!("bench {name:<42} {value:>14.2} {unit}");
+    }
+}
+
+/// Section header for grouped bench output (one group per paper table
+/// or figure).
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering_holds() {
+        let b = Bench::quick();
+        let s = b.run("noop", || 1 + 1);
+        assert!(s.min <= s.median);
+        assert!(s.median <= s.p95);
+        assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn measures_real_work() {
+        let b = Bench::quick();
+        let fast = b.run("fast", || (0..10u64).sum::<u64>());
+        let slow = b.run("slow", || (0..100_000u64).map(black_box).sum::<u64>());
+        assert!(slow.mean > fast.mean);
+    }
+}

@@ -1,0 +1,133 @@
+//! Minimal ordinary-least-squares solver: form the normal equations
+//! `(XᵀX) β = Xᵀy` and solve by Gaussian elimination with partial
+//! pivoting. N is tiny here (≤ 6), so numerics are unproblematic.
+
+/// Solve `min ||X β - y||²`. Returns `None` when the normal matrix is
+/// singular (under-determined system).
+pub fn solve_normal_equations<const N: usize>(
+    rows: &[[f64; N]],
+    ys: &[f64],
+) -> Option<[f64; N]> {
+    assert_eq!(rows.len(), ys.len());
+    if rows.len() < N {
+        return None;
+    }
+    // Normal matrix and RHS.
+    let mut ata = [[0.0f64; N]; N];
+    let mut aty = [0.0f64; N];
+    for (r, &y) in rows.iter().zip(ys) {
+        for i in 0..N {
+            aty[i] += r[i] * y;
+            for j in 0..N {
+                ata[i][j] += r[i] * r[j];
+            }
+        }
+    }
+    gauss_solve(&mut ata, &mut aty)
+}
+
+/// In-place Gaussian elimination with partial pivoting.
+fn gauss_solve<const N: usize>(a: &mut [[f64; N]; N], b: &mut [f64; N]) -> Option<[f64; N]> {
+    for col in 0..N {
+        // pivot
+        let pivot = (col..N).max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))?;
+        if a[pivot][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        // eliminate
+        for row in col + 1..N {
+            let f = a[row][col] / a[col][col];
+            for k in col..N {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // back substitution
+    let mut x = [0.0f64; N];
+    for col in (0..N).rev() {
+        let mut s = b[col];
+        for k in col + 1..N {
+            s -= a[col][k] * x[k];
+        }
+        x[col] = s / a[col][col];
+    }
+    Some(x)
+}
+
+/// Root-mean-square residual of a fit.
+pub fn rmse<const N: usize>(rows: &[[f64; N]], ys: &[f64], x: &[f64; N]) -> f64 {
+    if ys.is_empty() {
+        return 0.0;
+    }
+    let mut s = 0.0;
+    for (r, &y) in rows.iter().zip(ys) {
+        let pred: f64 = r.iter().zip(x).map(|(a, b)| a * b).sum();
+        s += (pred - y) * (pred - y);
+    }
+    (s / ys.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_line_fit() {
+        // y = 3 + 2x
+        let rows: Vec<[f64; 2]> = (0..10).map(|i| [1.0, i as f64]).collect();
+        let ys: Vec<f64> = (0..10).map(|i| 3.0 + 2.0 * i as f64).collect();
+        let x = solve_normal_equations(&rows, &ys).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-9);
+        assert!((x[1] - 2.0).abs() < 1e-9);
+        assert!(rmse(&rows, &ys, &x) < 1e-9);
+    }
+
+    #[test]
+    fn overdetermined_noisy_fit() {
+        let rows: Vec<[f64; 2]> = (0..100).map(|i| [1.0, i as f64]).collect();
+        let ys: Vec<f64> = (0..100)
+            .map(|i| 1.0 + 0.5 * i as f64 + if i % 2 == 0 { 0.1 } else { -0.1 })
+            .collect();
+        let x = solve_normal_equations(&rows, &ys).unwrap();
+        assert!((x[0] - 1.0).abs() < 0.1);
+        assert!((x[1] - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn singular_matrix_is_none() {
+        // duplicate column -> singular
+        let rows: Vec<[f64; 2]> = (0..10).map(|i| [i as f64, i as f64]).collect();
+        let ys: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        assert!(solve_normal_equations(&rows, &ys).is_none());
+    }
+
+    #[test]
+    fn underdetermined_is_none() {
+        let rows: Vec<[f64; 3]> = vec![[1.0, 2.0, 3.0]];
+        let ys = vec![1.0];
+        assert!(solve_normal_equations(&rows, &ys).is_none());
+    }
+
+    #[test]
+    fn three_variable_exact() {
+        // y = 1*x0 - 2*x1 + 0.5*x2 over a non-degenerate design
+        let rows: Vec<[f64; 3]> = (0..20)
+            .map(|i| {
+                let t = i as f64;
+                [1.0, t, t * t]
+            })
+            .collect();
+        let truth = [1.0, -2.0, 0.5];
+        let ys: Vec<f64> = rows
+            .iter()
+            .map(|r| r.iter().zip(&truth).map(|(a, b)| a * b).sum())
+            .collect();
+        let x = solve_normal_equations(&rows, &ys).unwrap();
+        for (got, want) in x.iter().zip(&truth) {
+            assert!((got - want).abs() < 1e-6);
+        }
+    }
+}

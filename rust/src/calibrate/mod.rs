@@ -1,0 +1,279 @@
+//! Online surface calibration (paper §VIII, fourth extension): fit the
+//! analytical surface constants from observations of a *real* system —
+//! here, the Phase-2 cluster substrate — "while retaining the
+//! interpretability of the Scaling Plane model".
+//!
+//! Identifiability note: cloud tier ladders are near-proportional
+//! (doubling cpu doubles ram/bw/iops), which makes the four per-resource
+//! coefficients of `L_node = a/cpu + b/ram + c/bw + d/iops_k` mutually
+//! collinear — they cannot be separated from observations of such a
+//! ladder. The latency fit therefore estimates a single *node scale*
+//! `s` against the prior shape (`a..d` all scale by `s`), plus the
+//! coordination terms:
+//!
+//! `L = s * L_node_prior(V) + eta * ln H + mu * H^theta`
+//!
+//! is linear in `(s, eta, mu)` once `theta` is fixed, so we grid-search
+//! `theta` and solve ordinary least squares at each step. Throughput:
+//! `T = H kappa m / (1 + omega ln H)` rearranges to
+//! `H m / T = 1/kappa + (omega/kappa) ln H` — linear in `ln H`.
+
+mod lstsq;
+
+pub use lstsq::{rmse, solve_normal_equations};
+
+use crate::config::SurfaceConfig;
+use crate::plane::{Configuration, ScalingPlane};
+
+/// One observation from a running system.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    pub config: Configuration,
+    /// Measured mean latency.
+    pub latency: f64,
+    /// Measured saturation throughput (ops per unit time).
+    pub throughput: f64,
+}
+
+/// Calibrated latency constants plus fit quality.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyFit {
+    /// Multiplier on the prior node-latency coefficients (a..d).
+    pub node_scale: f64,
+    pub eta: f64,
+    pub mu: f64,
+    pub theta: f64,
+    /// Root-mean-square residual of the fit.
+    pub rmse: f64,
+}
+
+/// Calibrated throughput constants plus fit quality.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThroughputFit {
+    pub kappa: f64,
+    pub omega: f64,
+    pub rmse: f64,
+}
+
+/// Accumulates observations and produces fits against a prior model.
+#[derive(Debug, Clone)]
+pub struct Calibrator {
+    prior: SurfaceConfig,
+    /// (l_node_prior, h, hm) per observation.
+    features: Vec<(f64, f64, f64)>,
+    raw: Vec<Observation>,
+}
+
+impl Calibrator {
+    pub fn new(prior: SurfaceConfig) -> Self {
+        Self { prior, features: Vec::new(), raw: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.raw.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.raw.is_empty()
+    }
+
+    pub fn observe(&mut self, plane: &ScalingPlane, obs: Observation) {
+        let t = plane.tier(&obs.config);
+        let h = plane.h_value(&obs.config) as f64;
+        let p = &self.prior;
+        let l_node_prior = p.a as f64 / t.cpu as f64
+            + p.b as f64 / t.ram as f64
+            + p.c as f64 / t.bandwidth as f64
+            + p.d as f64 / t.iops_k() as f64;
+        self.features
+            .push((l_node_prior, h, h * t.min_resource() as f64));
+        self.raw.push(obs);
+    }
+
+    /// Fit the latency surface; requires at least 3 observations.
+    pub fn fit_latency(&self) -> Option<LatencyFit> {
+        if self.raw.len() < 3 {
+            return None;
+        }
+        let ys: Vec<f64> = self.raw.iter().map(|o| o.latency).collect();
+        let mut best: Option<LatencyFit> = None;
+        // theta grid: the paper's power exponent is near 1.
+        for ti in 0..41 {
+            let theta = 0.8 + 0.02 * ti as f64;
+            let rows: Vec<[f64; 3]> = self
+                .features
+                .iter()
+                .map(|&(ln, h, _)| [ln, h.ln(), (theta * h.ln()).exp()])
+                .collect();
+            let Some(x) = solve_normal_equations(&rows, &ys) else {
+                continue;
+            };
+            let fit = LatencyFit {
+                node_scale: x[0],
+                eta: x[1],
+                mu: x[2],
+                theta,
+                rmse: rmse(&rows, &ys, &x),
+            };
+            if best.as_ref().map_or(true, |b| fit.rmse < b.rmse) {
+                best = Some(fit);
+            }
+        }
+        best
+    }
+
+    /// Fit the throughput surface; requires at least 2 observations.
+    pub fn fit_throughput(&self) -> Option<ThroughputFit> {
+        if self.raw.len() < 2 {
+            return None;
+        }
+        // y = Hm/T = 1/kappa + (omega/kappa) ln H
+        let rows: Vec<[f64; 2]> = self
+            .features
+            .iter()
+            .map(|&(_, h, _)| [1.0, h.ln()])
+            .collect();
+        let ys: Vec<f64> = self
+            .features
+            .iter()
+            .zip(&self.raw)
+            .map(|(&(_, _, hm), o)| hm / o.throughput.max(1e-12))
+            .collect();
+        let x = solve_normal_equations(&rows, &ys)?;
+        if x[0].abs() < 1e-12 {
+            return None;
+        }
+        let kappa = 1.0 / x[0];
+        let omega = x[1] * kappa;
+        Some(ThroughputFit { kappa, omega, rmse: rmse(&rows, &ys, &x) })
+    }
+
+    /// Produce a [`SurfaceConfig`] with fitted values replacing the
+    /// analytical priors (unfitted fields keep the prior).
+    pub fn calibrated_config(&self) -> SurfaceConfig {
+        let mut out = self.prior;
+        if let Some(l) = self.fit_latency() {
+            out.a = (self.prior.a as f64 * l.node_scale) as f32;
+            out.b = (self.prior.b as f64 * l.node_scale) as f32;
+            out.c = (self.prior.c as f64 * l.node_scale) as f32;
+            out.d = (self.prior.d as f64 * l.node_scale) as f32;
+            out.eta = l.eta as f32;
+            out.mu = l.mu as f32;
+            out.theta = l.theta as f32;
+        }
+        if let Some(t) = self.fit_throughput() {
+            out.kappa = t.kappa as f32;
+            out.omega = t.omega as f32;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::surfaces::SurfaceModel;
+
+    /// Feed the calibrator samples from the *analytical* model and check
+    /// it recovers the constants (self-consistency).
+    #[test]
+    fn recovers_analytical_constants() {
+        let cfg = ModelConfig::default_paper();
+        let model = SurfaceModel::from_config(&cfg);
+        let plane = cfg.plane();
+        let mut cal = Calibrator::new(cfg.surfaces);
+        for c in plane.iter() {
+            cal.observe(
+                &plane,
+                Observation {
+                    config: c,
+                    latency: model.latency(&c) as f64,
+                    throughput: model.throughput(&c) as f64,
+                },
+            );
+        }
+        let lat = cal.fit_latency().unwrap();
+        // f32 model evaluation + theta grid resolution bound the fit
+        assert!(lat.rmse < 0.01, "rmse={}", lat.rmse);
+        assert!((lat.node_scale - 1.0).abs() < 0.02, "scale={}", lat.node_scale);
+        assert!((lat.eta - 1.0).abs() < 0.1, "eta={}", lat.eta);
+        let thr = cal.fit_throughput().unwrap();
+        assert!((thr.kappa - 585.0).abs() / 585.0 < 0.02, "kappa={}", thr.kappa);
+        assert!((thr.omega - 0.25).abs() < 0.02, "omega={}", thr.omega);
+    }
+
+    #[test]
+    fn too_few_observations_returns_none() {
+        let cfg = ModelConfig::default_paper();
+        let plane = cfg.plane();
+        let mut cal = Calibrator::new(cfg.surfaces);
+        assert!(cal.fit_latency().is_none());
+        assert!(cal.fit_throughput().is_none());
+        cal.observe(
+            &plane,
+            Observation { config: Configuration::new(0, 0), latency: 1.0, throughput: 100.0 },
+        );
+        assert!(cal.fit_latency().is_none());
+    }
+
+    #[test]
+    fn calibrated_config_replaces_fitted_fields() {
+        let cfg = ModelConfig::default_paper();
+        let model = SurfaceModel::from_config(&cfg);
+        let plane = cfg.plane();
+        let mut cal = Calibrator::new(cfg.surfaces);
+        for c in plane.iter() {
+            cal.observe(
+                &plane,
+                Observation {
+                    config: c,
+                    // a system whose node-local path is 2x slower than
+                    // the prior believes, same coordination behaviour
+                    latency: (2.0 * model.node_latency(plane.tier(&c))
+                        + model.coord_latency(plane.h_value(&c)))
+                        as f64,
+                    throughput: model.throughput(&c) as f64,
+                },
+            );
+        }
+        let out = cal.calibrated_config();
+        assert!(
+            (out.a - 2.0 * cfg.surfaces.a).abs() / cfg.surfaces.a < 0.1,
+            "a={} prior={}",
+            out.a,
+            cfg.surfaces.a
+        );
+        assert!((out.d - 2.0 * cfg.surfaces.d).abs() / cfg.surfaces.d < 0.1);
+        // untouched fields keep priors
+        assert_eq!(out.alpha, cfg.surfaces.alpha);
+        assert_eq!(out.u_max, cfg.surfaces.u_max);
+    }
+
+    #[test]
+    fn noisy_observations_still_fit_reasonably() {
+        let cfg = ModelConfig::default_paper();
+        let model = SurfaceModel::from_config(&cfg);
+        let plane = cfg.plane();
+        let mut cal = Calibrator::new(cfg.surfaces);
+        let mut rng = crate::workload::XorShift64::new(5);
+        for _ in 0..4 {
+            for c in plane.iter() {
+                let noise = 1.0 + 0.05 * (rng.next_f64() - 0.5);
+                cal.observe(
+                    &plane,
+                    Observation {
+                        config: c,
+                        latency: model.latency(&c) as f64 * noise,
+                        throughput: model.throughput(&c) as f64 * noise,
+                    },
+                );
+            }
+        }
+        let lat = cal.fit_latency().unwrap();
+        assert!(lat.rmse < 0.2, "rmse={}", lat.rmse);
+        assert!((lat.node_scale - 1.0).abs() < 0.2);
+        let thr = cal.fit_throughput().unwrap();
+        assert!((thr.kappa - 585.0).abs() / 585.0 < 0.1);
+    }
+}

@@ -1,0 +1,623 @@
+//! Phase-2 substrate: a discrete-event simulated distributed database.
+//!
+//! The paper's evaluation is purely analytical (§V.A) and defers real
+//! deployments (CockroachDB / Cassandra / YugabyteDB under YCSB) to
+//! future work (§VIII). Per the substitution rule in DESIGN.md, this
+//! module implements that missing substrate: a cluster of c-server
+//! queueing nodes behind a consistent-hash ring with replicated,
+//! quorum-acknowledged writes, rolling restarts for vertical resizes,
+//! and bandwidth-limited shard movement for horizontal resizes. The
+//! coordinator drives it with the *same* policy code path the
+//! analytical simulator uses — observe, score neighbors, actuate.
+
+pub mod node;
+pub mod rebalance;
+pub mod ring;
+
+pub use node::Node;
+pub use rebalance::RebalancePlan;
+pub use ring::HashRing;
+
+
+use crate::config::ModelConfig;
+use crate::plane::{Configuration, ScalingPlane};
+use crate::workload::{WorkloadPoint, XorShift64};
+
+/// Tunables of the cluster substrate.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterParams {
+    /// Number of data shards on the ring.
+    pub shards: usize,
+    /// Replication factor (capped by cluster size).
+    pub replication: usize,
+    /// Write quorum = majority of the effective replica set.
+    /// Data per shard (GB), for rebalance duration.
+    pub shard_gb: f64,
+    /// Fraction of aggregate bandwidth available to shard movement.
+    pub move_bandwidth_frac: f64,
+    /// Node capacity multiplier while a rebalance is in flight.
+    pub rebalance_degradation: f64,
+    /// Rolling-restart time per node on a vertical resize.
+    pub restart_time: f64,
+    /// Capacity multiplier during the restart window.
+    pub restart_degradation: f64,
+    /// One-way network hop latency (synthetic seconds).
+    pub net_latency: f64,
+    /// Extra commit overhead per write, scaled by ln(H)+1.
+    pub write_coord_overhead: f64,
+    /// Ops sampled per step at most (arrivals above this are scaled).
+    pub max_ops_per_step: usize,
+    /// Duration of one workload step (synthetic seconds).
+    pub interval: f64,
+    /// Measured-latency SLA bound for violation accounting.
+    pub sla_latency: f64,
+    /// Zipf exponent for key/shard popularity (0.0 = uniform access;
+    /// ~0.99 = YCSB-default skew). Hot shards concentrate load on their
+    /// replica sets, so skew raises tail latency at equal utilization.
+    pub zipf_s: f64,
+    /// Background compaction: every `compaction_period` seconds each
+    /// node spends `compaction_duration` at `compaction_degradation`
+    /// capacity (LSM-style maintenance; staggered across nodes).
+    pub compaction_period: f64,
+    pub compaction_duration: f64,
+    pub compaction_degradation: f64,
+}
+
+impl Default for ClusterParams {
+    fn default() -> Self {
+        Self {
+            shards: 128,
+            replication: 3,
+            // small-corpus default: ~6 GB total data, so a horizontal
+            // rebalance degrades the cluster for a fraction of a step
+            // rather than whole phases (raise for heavier datasets)
+            shard_gb: 0.05,
+            move_bandwidth_frac: 0.2,
+            rebalance_degradation: 0.7,
+            restart_time: 0.02,
+            restart_degradation: 0.8,
+            net_latency: 0.0004,
+            write_coord_overhead: 0.0006,
+            // high enough that the paper-scale traces (peak 16k ops per
+            // interval) run unthinned: thinning preserves utilization
+            // but inflates per-op service time in measured latency
+            max_ops_per_step: 20_000,
+            interval: 1.0,
+            sla_latency: 0.02,
+            zipf_s: 0.0,
+            compaction_period: 0.0, // disabled by default
+            compaction_duration: 0.5,
+            compaction_degradation: 0.85,
+        }
+    }
+}
+
+impl ClusterParams {
+    /// YCSB-flavored preset: zipfian access + periodic compaction.
+    pub fn ycsb_like() -> Self {
+        Self {
+            zipf_s: 0.99,
+            compaction_period: 10.0,
+            ..Self::default()
+        }
+    }
+}
+
+/// Measured metrics for one simulated step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterStepMetrics {
+    /// Offered load (ops) this interval.
+    pub offered: f64,
+    /// Ops completed within the interval budget.
+    pub completed: f64,
+    /// Ops that blew the latency timeout (shed / failed).
+    pub dropped: f64,
+    /// Mean end-to-end latency of completed ops.
+    pub avg_latency: f64,
+    /// 99th-percentile latency.
+    pub p99_latency: f64,
+    /// 99.9th-percentile latency.
+    pub p999_latency: f64,
+    /// Offered load / aggregate capacity.
+    pub utilization: f64,
+    /// Whether a rebalance/restart window overlapped this step.
+    pub degraded: bool,
+}
+
+/// The discrete-event cluster.
+pub struct ClusterSim {
+    plane: ScalingPlane,
+    kappa: f32,
+    write_ratio: f64,
+    params: ClusterParams,
+    current: Configuration,
+    nodes: Vec<Node>,
+    ring: HashRing,
+    time: f64,
+    degraded_until: f64,
+    degradation: f64,
+    rng: XorShift64,
+    rr: usize,
+    /// Cumulative zipf CDF over shards (empty when access is uniform).
+    zipf_cdf: Vec<f64>,
+    /// Conservation counters (offered = completed + dropped).
+    pub total_offered: f64,
+    pub total_completed: f64,
+    pub total_dropped: f64,
+}
+
+impl ClusterSim {
+    pub fn new(cfg: &ModelConfig, params: ClusterParams, seed: u64) -> Self {
+        let plane = cfg.plane();
+        let start = Configuration::new(cfg.policy.start[0], cfg.policy.start[1]);
+        let mut sim = Self {
+            kappa: cfg.surfaces.kappa,
+            write_ratio: cfg.write_ratio() as f64,
+            params,
+            current: start,
+            nodes: Vec::new(),
+            ring: HashRing::new(1),
+            time: 0.0,
+            degraded_until: 0.0,
+            degradation: 1.0,
+            rng: XorShift64::new(seed),
+            rr: 0,
+            zipf_cdf: Vec::new(),
+            total_offered: 0.0,
+            total_completed: 0.0,
+            total_dropped: 0.0,
+            plane,
+        };
+        if sim.params.zipf_s > 0.0 {
+            let mut acc = 0.0;
+            sim.zipf_cdf = (0..sim.params.shards)
+                .map(|j| {
+                    acc += 1.0 / ((j + 1) as f64).powf(sim.params.zipf_s);
+                    acc
+                })
+                .collect();
+            let total = *sim.zipf_cdf.last().unwrap();
+            for v in &mut sim.zipf_cdf {
+                *v /= total;
+            }
+        }
+        sim.rebuild();
+        sim
+    }
+
+    fn rebuild(&mut self) {
+        let h = self.plane.h_value(&self.current) as usize;
+        let tier = self.plane.tier(&self.current).clone();
+        self.nodes = (0..h).map(|_| Node::new(&tier, self.kappa)).collect();
+        self.ring = HashRing::new(h);
+    }
+
+    /// Sample a shard id: uniform, or zipfian when `zipf_s > 0`.
+    fn sample_shard(&mut self) -> u64 {
+        if self.zipf_cdf.is_empty() {
+            self.rng.below(self.params.shards as u64)
+        } else {
+            let u = self.rng.next_f64();
+            self.zipf_cdf.partition_point(|&c| c < u) as u64
+        }
+    }
+
+    /// Extra degradation on `node` at time `t` from staggered background
+    /// compaction (1.0 = none).
+    fn compaction_factor(&self, node: usize, t: f64) -> f64 {
+        if self.params.compaction_period <= 0.0 {
+            return 1.0;
+        }
+        // stagger nodes across the period
+        let phase = (t + node as f64 * self.params.compaction_period
+            / self.nodes.len().max(1) as f64)
+            % self.params.compaction_period;
+        if phase < self.params.compaction_duration {
+            self.params.compaction_degradation
+        } else {
+            1.0
+        }
+    }
+
+    pub fn current(&self) -> Configuration {
+        self.current
+    }
+
+    pub fn params(&self) -> &ClusterParams {
+        &self.params
+    }
+
+    pub fn time(&self) -> f64 {
+        self.time
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Aggregate healthy capacity (ops per unit time).
+    pub fn capacity(&self) -> f64 {
+        let deg = if self.time < self.degraded_until { self.degradation } else { 1.0 };
+        self.nodes.iter().map(|n| n.capacity()).sum::<f64>() * deg
+    }
+
+    /// Reconfigure the cluster. Horizontal changes trigger shard
+    /// movement; vertical changes trigger a rolling restart. Returns
+    /// the rebalance plan that was scheduled.
+    pub fn apply(&mut self, next: Configuration) -> RebalancePlan {
+        assert!(self.plane.contains(&next), "config out of plane");
+        if next == self.current {
+            return RebalancePlan::none();
+        }
+        let old_h = self.plane.h_value(&self.current) as usize;
+        let new_h = self.plane.h_value(&next) as usize;
+        let new_tier = self.plane.tier(&next);
+
+        let mut plan = if old_h != new_h {
+            let agg_bw = new_h as f64
+                * new_tier.bandwidth as f64
+                * self.params.move_bandwidth_frac;
+            rebalance::plan_h_change(
+                old_h,
+                new_h,
+                self.params.shards,
+                self.params.shard_gb,
+                agg_bw,
+                self.params.rebalance_degradation,
+            )
+        } else {
+            RebalancePlan::none()
+        };
+        if self.plane.tier(&self.current).name != new_tier.name {
+            let restart = rebalance::plan_v_change(
+                new_h,
+                self.params.restart_time,
+                self.params.restart_degradation,
+            );
+            plan.duration += restart.duration;
+            plan.degradation = plan.degradation.min(restart.degradation);
+            if plan.total_shards == 0 {
+                plan.total_shards = restart.total_shards;
+            }
+        }
+
+        self.current = next;
+        self.rebuild();
+        if plan.duration > 0.0 {
+            self.degraded_until = self.time + plan.duration;
+            self.degradation = plan.degradation;
+        }
+        plan
+    }
+
+    /// Inject a node failure: node `idx` serves nothing until the next
+    /// reconfiguration (failure-injection tests).
+    pub fn fail_node(&mut self, idx: usize) {
+        if let Some(n) = self.nodes.get_mut(idx) {
+            n.up = false;
+        }
+    }
+
+    /// Simulate one workload interval.
+    pub fn step(&mut self, w: WorkloadPoint) -> ClusterStepMetrics {
+        let interval = self.params.interval;
+        let t0 = self.time;
+        let offered = w.lambda_req as f64 * interval;
+        let degraded = t0 < self.degraded_until;
+        let deg = if degraded { self.degradation } else { 1.0 };
+        for n in &mut self.nodes {
+            n.set_degradation(deg);
+            n.decay_to(t0);
+        }
+
+        // Sample arrivals (cap for speed; results scaled back). To keep
+        // the queueing physics intact under thinning, each sampled op
+        // stands for `scale` real ops: service times are stretched by
+        // `scale` so utilization (arrival rate x service time / servers)
+        // is preserved exactly.
+        let n_samples = (offered.round() as usize).min(self.params.max_ops_per_step).max(1);
+        let scale = offered / n_samples as f64;
+        // staggered background compaction (per-node extra degradation)
+        let compaction: Vec<f64> = (0..self.nodes.len())
+            .map(|i| self.compaction_factor(i, t0))
+            .collect();
+        let thin = if scale > 1.0 { scale } else { 1.0 };
+        for (i, n) in self.nodes.iter_mut().enumerate() {
+            n.set_degradation(deg * compaction[i] / thin);
+        }
+        let mut hist = crate::metrics::LatencyHistogram::new(1e-5);
+        let mut dropped = 0usize;
+        let timeout = self.params.sla_latency * 10.0;
+        let repl = self.params.replication.min(self.nodes.len());
+        let quorum = repl / 2 + 1;
+        let h = self.nodes.len();
+        let write_net = self.params.net_latency
+            + self.params.write_coord_overhead * ((h as f64).ln() + 1.0);
+
+        for i in 0..n_samples {
+            let t = t0 + interval * (i as f64 + self.rng.next_f64()) / n_samples as f64;
+            let shard = self.sample_shard();
+            let replicas = self.ring.replicas(shard, repl);
+            let is_write = self.rng.next_f64() < self.write_ratio;
+            let lat = if is_write {
+                // quorum write: wait for the majority of replica acks
+                let live: Vec<usize> = replicas
+                    .iter()
+                    .copied()
+                    .filter(|&r| self.nodes[r].up)
+                    .collect();
+                let mut finishes: Vec<f64> = live
+                    .into_iter()
+                    .map(|r| self.nodes[r].serve(t, &mut self.rng) - t)
+                    .collect();
+                if finishes.is_empty() {
+                    dropped += 1;
+                    continue;
+                }
+                finishes.sort_by(f64::total_cmp);
+                let q = quorum.min(finishes.len());
+                write_net + finishes[q - 1]
+            } else {
+                // read: round-robin over live replicas
+                let live: Vec<usize> = replicas
+                    .iter()
+                    .copied()
+                    .filter(|&r| self.nodes[r].up)
+                    .collect();
+                if live.is_empty() {
+                    dropped += 1;
+                    continue;
+                }
+                self.rr = self.rr.wrapping_add(1);
+                let node = live[self.rr % live.len()];
+                self.params.net_latency + (self.nodes[node].serve(t, &mut self.rng) - t)
+            };
+            if lat > timeout {
+                dropped += 1;
+            } else {
+                hist.record(lat);
+            }
+        }
+
+        self.time = t0 + interval;
+        let completed = hist.len() as f64 * scale;
+        let dropped_scaled = dropped as f64 * scale;
+        self.total_offered += offered;
+        self.total_completed += completed;
+        self.total_dropped += dropped_scaled;
+
+        let cap = self.capacity();
+        ClusterStepMetrics {
+            offered,
+            completed,
+            dropped: dropped_scaled,
+            avg_latency: hist.mean(),
+            p99_latency: hist.p99(),
+            p999_latency: hist.p999(),
+            utilization: if cap > 0.0 { offered / (cap * interval) } else { f64::INFINITY },
+            degraded,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(seed: u64) -> ClusterSim {
+        let cfg = ModelConfig::default_paper();
+        ClusterSim::new(&cfg, ClusterParams::default(), seed)
+    }
+
+    fn point(lam: f32) -> WorkloadPoint {
+        WorkloadPoint::new(lam, 0.3)
+    }
+
+    #[test]
+    fn starts_at_config_with_right_node_count() {
+        let s = sim(1);
+        assert_eq!(s.current(), Configuration::new(1, 1)); // (H=2, medium)
+        assert_eq!(s.n_nodes(), 2);
+    }
+
+    #[test]
+    fn conservation_offered_equals_completed_plus_dropped() {
+        let mut s = sim(2);
+        for _ in 0..10 {
+            s.step(point(3000.0));
+        }
+        let total = s.total_completed + s.total_dropped;
+        assert!(
+            (s.total_offered - total).abs() < 1e-6 * s.total_offered.max(1.0),
+            "offered={} completed+dropped={}",
+            s.total_offered,
+            total
+        );
+    }
+
+    #[test]
+    fn light_load_completes_everything_quickly() {
+        let mut s = sim(3);
+        let m = s.step(point(500.0));
+        assert!(m.dropped == 0.0, "dropped={}", m.dropped);
+        assert!(m.avg_latency < ClusterParams::default().sla_latency);
+        assert!(m.utilization < 0.3);
+    }
+
+    #[test]
+    fn overload_drops_or_slows() {
+        let mut s = sim(4);
+        // 2 medium nodes: capacity ~ 2*4*585 = 4680 ops/s; offer 4x
+        let mut metrics = Vec::new();
+        for _ in 0..5 {
+            metrics.push(s.step(point(20_000.0)));
+        }
+        let last = metrics.last().unwrap();
+        assert!(last.utilization > 1.0);
+        assert!(
+            last.dropped > 0.0 || last.avg_latency > ClusterParams::default().sla_latency,
+            "overload must surface as drops or latency"
+        );
+    }
+
+    #[test]
+    fn vertical_scale_raises_capacity_without_moving_shards() {
+        let mut s = sim(5);
+        let before = s.capacity();
+        let plan = s.apply(Configuration::new(1, 3)); // medium -> xlarge
+        assert_eq!(plan.moved_shards, 0);
+        assert!(plan.duration > 0.0); // rolling restart
+        // after the degradation window, capacity is 4x (16 vs 4 cpus)
+        for _ in 0..3 {
+            s.step(point(100.0));
+        }
+        assert!(s.capacity() > 3.0 * before);
+    }
+
+    #[test]
+    fn horizontal_scale_moves_shards_and_degrades() {
+        let mut s = sim(6);
+        let plan = s.apply(Configuration::new(3, 1)); // H=2 -> H=8
+        assert!(plan.moved_shards > 0);
+        assert!(plan.duration > 0.0);
+        let m = s.step(point(1000.0));
+        assert!(m.degraded);
+    }
+
+    #[test]
+    fn bigger_cluster_absorbs_more() {
+        let mut small = sim(7);
+        let mut big = sim(7);
+        big.apply(Configuration::new(3, 3));
+        // burn through the rebalance window
+        for _ in 0..30 {
+            big.step(point(100.0));
+            small.step(point(100.0));
+        }
+        let lam = 30_000.0;
+        let ms = small.step(point(lam));
+        let mb = big.step(point(lam));
+        assert!(mb.completed > ms.completed);
+        assert!(mb.utilization < ms.utilization);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = sim(9);
+        let mut b = sim(9);
+        for _ in 0..5 {
+            let ma = a.step(point(4000.0));
+            let mb = b.step(point(4000.0));
+            assert_eq!(ma, mb);
+        }
+    }
+
+    #[test]
+    fn zipf_skew_raises_tail_latency() {
+        // skew concentrates load on the hot shards' replica sets: with
+        // 8 nodes, per-node served-op imbalance must clearly exceed the
+        // uniform case (the tail-latency effect follows from queueing).
+        let cfg = ModelConfig::default_paper();
+        let mut uniform = ClusterSim::new(&cfg, ClusterParams::default(), 20);
+        let mut skewed = ClusterSim::new(
+            &cfg,
+            ClusterParams { zipf_s: 1.2, ..ClusterParams::default() },
+            20,
+        );
+        let imbalance = |s: &mut ClusterSim| {
+            s.apply(Configuration::new(3, 1)); // H=8, medium
+            for _ in 0..20 {
+                s.step(point(12_000.0));
+            }
+            let served: Vec<u64> = s.nodes.iter().map(|n| n.served).collect();
+            let max = *served.iter().max().unwrap() as f64;
+            let min = *served.iter().min().unwrap() as f64;
+            max / min.max(1.0)
+        };
+        let iu = imbalance(&mut uniform);
+        let is = imbalance(&mut skewed);
+        assert!(
+            is > 1.3 * iu,
+            "zipf must imbalance node load: skewed {is:.2} vs uniform {iu:.2}"
+        );
+    }
+
+    #[test]
+    fn zipf_sampler_is_skewed_and_in_range() {
+        let cfg = ModelConfig::default_paper();
+        let mut s = ClusterSim::new(
+            &cfg,
+            ClusterParams { zipf_s: 0.99, ..ClusterParams::default() },
+            21,
+        );
+        let mut counts = vec![0usize; s.params.shards];
+        for _ in 0..20_000 {
+            counts[s.sample_shard() as usize] += 1;
+        }
+        // shard 0 is the hottest; the bottom half is cold
+        assert!(counts[0] > counts[s.params.shards / 2] * 5);
+        assert!(counts.iter().sum::<usize>() == 20_000);
+    }
+
+    #[test]
+    fn compaction_windows_degrade_capacity_periodically() {
+        let cfg = ModelConfig::default_paper();
+        let mut s = ClusterSim::new(
+            &cfg,
+            ClusterParams {
+                compaction_period: 4.0,
+                compaction_duration: 2.0,
+                compaction_degradation: 0.3,
+                ..ClusterParams::default()
+            },
+            22,
+        );
+        // near-capacity load: compaction windows must show up as higher
+        // latency in some steps than others
+        let lat: Vec<f64> = (0..12).map(|_| s.step(point(3800.0)).avg_latency).collect();
+        let hi = lat.iter().cloned().fold(0.0, f64::max);
+        let lo = lat.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(hi > 2.0 * lo, "compaction cycles visible: {lat:?}");
+    }
+
+    #[test]
+    fn ycsb_preset_is_still_controllable() {
+        let cfg = ModelConfig::default_paper();
+        let mut c = crate::coordinator::native_coordinator(
+            &cfg,
+            Box::new(crate::policy::DiagonalScale::diagonal()),
+            ClusterParams::ycsb_like(),
+            23,
+        );
+        let trace = crate::workload::TraceBuilder::paper(&cfg);
+        let reports = c.run_trace(&trace).unwrap();
+        let s = crate::coordinator::summarize(&reports);
+        assert!(s.completed_ratio > 0.85, "completed={}", s.completed_ratio);
+    }
+
+    #[test]
+    fn p999_at_least_p99() {
+        let mut s = sim(24);
+        let m = s.step(point(4000.0));
+        assert!(m.p999_latency >= m.p99_latency);
+    }
+
+    #[test]
+    fn node_failure_sheds_load() {
+        let mut s = sim(10);
+        s.fail_node(0);
+        let m = s.step(point(3000.0));
+        // some reads/writes still succeed on the surviving replicas
+        assert!(m.completed > 0.0);
+    }
+
+    #[test]
+    fn failing_all_nodes_drops_everything() {
+        let mut s = sim(11);
+        s.fail_node(0);
+        s.fail_node(1);
+        let m = s.step(point(1000.0));
+        assert_eq!(m.completed, 0.0);
+        assert!(m.dropped > 0.0);
+    }
+}

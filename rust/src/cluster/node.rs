@@ -1,0 +1,177 @@
+//! A simulated database node: a c-server FIFO queue (M/G/c-style) whose
+//! service rate derives from its vertical tier. Vertical scaling raises
+//! per-node capacity; queueing delay emerges naturally as utilization
+//! approaches it — the behaviour the paper's §VIII queueing extension
+//! models analytically.
+
+use crate::plane::Tier;
+use crate::workload::XorShift64;
+
+/// Simulated node state.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Parallel servers (one per CPU core).
+    servers: Vec<f64>,
+    /// Mean service time per op at this tier.
+    mean_service: f64,
+    /// Capacity multiplier (< 1.0 while rebalancing or restarting).
+    degradation: f64,
+    /// Ops served (for conservation checks).
+    pub served: u64,
+    /// Node is up.
+    pub up: bool,
+}
+
+impl Node {
+    /// `kappa` is the tier->throughput scale from the surface model: a
+    /// node serves `kappa * min_resource` ops per unit time across
+    /// `cpu` parallel servers.
+    pub fn new(tier: &Tier, kappa: f32) -> Self {
+        let total_rate = (kappa * tier.min_resource()) as f64;
+        let servers = (tier.cpu.round().max(1.0)) as usize;
+        Self {
+            servers: vec![0.0; servers],
+            mean_service: servers as f64 / total_rate,
+            degradation: 1.0,
+            served: 0,
+            up: true,
+        }
+    }
+
+    /// Total service rate (ops per unit time) at full health.
+    pub fn capacity(&self) -> f64 {
+        self.servers.len() as f64 / self.mean_service
+    }
+
+    pub fn set_degradation(&mut self, factor: f64) {
+        // lower bound only guards against division by zero: arrival
+        // thinning can push the effective factor far below 1 (see
+        // ClusterSim::step)
+        self.degradation = factor.clamp(1e-9, 1.0);
+    }
+
+    pub fn degradation(&self) -> f64 {
+        self.degradation
+    }
+
+    /// Serve an op arriving at time `t`; returns its completion time.
+    /// FIFO to the earliest-free server; service time is exponential
+    /// around the (possibly degraded) mean.
+    pub fn serve(&mut self, t: f64, rng: &mut XorShift64) -> f64 {
+        debug_assert!(self.up, "serve() on a down node");
+        let (idx, free_at) = self
+            .servers
+            .iter()
+            .enumerate()
+            .map(|(i, &f)| (i, f))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .expect("node has at least one server");
+        let start = t.max(free_at);
+        let service = rng.exp(self.mean_service / self.degradation);
+        let done = start + service;
+        self.servers[idx] = done;
+        self.served += 1;
+        done
+    }
+
+    /// Earliest time any server frees up (backpressure signal).
+    pub fn earliest_free(&self) -> f64 {
+        self.servers.iter().copied().fold(f64::MAX, f64::min)
+    }
+
+    /// Queue depth proxy: servers busy past time `t`.
+    pub fn busy_servers(&self, t: f64) -> usize {
+        self.servers.iter().filter(|&&f| f > t).count()
+    }
+
+    /// Reset queue state for a new interval (service continuity kept).
+    pub fn decay_to(&mut self, t: f64) {
+        for f in &mut self.servers {
+            *f = f.max(t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tier() -> Tier {
+        Tier {
+            name: "medium".into(),
+            cpu: 4.0,
+            ram: 8.0,
+            bandwidth: 5.0,
+            iops: 6000.0,
+            cost: 0.2,
+        }
+    }
+
+    #[test]
+    fn capacity_scales_with_tier() {
+        let small = Tier { cpu: 2.0, ram: 4.0, bandwidth: 2.5, iops: 3000.0, ..tier() };
+        let n_small = Node::new(&small, 585.0);
+        let n_med = Node::new(&tier(), 585.0);
+        assert!((n_small.capacity() - 2.0 * 585.0).abs() < 1e-6);
+        assert!((n_med.capacity() - 4.0 * 585.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn light_load_latency_is_service_time() {
+        let mut n = Node::new(&tier(), 585.0);
+        let mut rng = XorShift64::new(1);
+        // widely spaced arrivals: no queueing
+        let mut total = 0.0;
+        let k = 2000;
+        for i in 0..k {
+            let t = i as f64 * 10.0;
+            total += n.serve(t, &mut rng) - t;
+        }
+        let mean = total / k as f64;
+        let expect = 4.0 / (4.0 * 585.0); // cpu / total_rate
+        assert!((mean - expect).abs() / expect < 0.1, "mean={mean} expect={expect}");
+    }
+
+    #[test]
+    fn overload_builds_queue() {
+        let mut n = Node::new(&tier(), 585.0);
+        let mut rng = XorShift64::new(2);
+        // arrival rate 2x capacity: completion times run away
+        let cap = n.capacity();
+        let dt = 1.0 / (2.0 * cap);
+        let mut last_latency = 0.0;
+        for i in 0..5000 {
+            let t = i as f64 * dt;
+            last_latency = n.serve(t, &mut rng) - t;
+        }
+        // queue of ~2500 ops at rate `cap`
+        assert!(last_latency > 1000.0 * dt);
+    }
+
+    #[test]
+    fn degradation_slows_service() {
+        let mut healthy = Node::new(&tier(), 585.0);
+        let mut degraded = Node::new(&tier(), 585.0);
+        degraded.set_degradation(0.5);
+        let mut r1 = XorShift64::new(3);
+        let mut r2 = XorShift64::new(3);
+        let mut h = 0.0;
+        let mut d = 0.0;
+        for i in 0..2000 {
+            let t = i as f64 * 10.0;
+            h += healthy.serve(t, &mut r1) - t;
+            d += degraded.serve(t, &mut r2) - t;
+        }
+        assert!(d > 1.8 * h, "degraded mean {d} vs healthy {h}");
+    }
+
+    #[test]
+    fn served_counter_increments() {
+        let mut n = Node::new(&tier(), 585.0);
+        let mut rng = XorShift64::new(4);
+        for i in 0..10 {
+            n.serve(i as f64, &mut rng);
+        }
+        assert_eq!(n.served, 10);
+    }
+}

@@ -1,0 +1,122 @@
+//! Rebalance planning: when the coordinator changes the node count, the
+//! consistent-hash ring changes and shards must move. Data movement
+//! takes time proportional to moved bytes over aggregate bandwidth and
+//! degrades donor/recipient nodes while in flight — the physical cost
+//! behind the paper's rebalance penalty `R` (§IV.D) and the reason H
+//! moves are penalized twice as much as V moves.
+
+use super::ring::HashRing;
+
+/// A planned rebalance operation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RebalancePlan {
+    /// Shards whose primary changed (must move data).
+    pub moved_shards: usize,
+    /// Total shards.
+    pub total_shards: usize,
+    /// Wall-clock duration of the movement (synthetic time units).
+    pub duration: f64,
+    /// Capacity multiplier applied to every node while moving.
+    pub degradation: f64,
+}
+
+impl RebalancePlan {
+    pub fn none() -> Self {
+        Self { moved_shards: 0, total_shards: 0, duration: 0.0, degradation: 1.0 }
+    }
+
+    pub fn is_noop(&self) -> bool {
+        self.moved_shards == 0
+    }
+}
+
+/// Plan the movement implied by changing the ring from `old_nodes` to
+/// `new_nodes` physical nodes.
+///
+/// * `shard_gb` — data per shard;
+/// * `agg_bandwidth_gbps` — cluster aggregate network bandwidth available
+///   for movement (a fraction of the new tier's bandwidth);
+/// * `degradation` — service-capacity multiplier while moving.
+pub fn plan_h_change(
+    old_nodes: usize,
+    new_nodes: usize,
+    total_shards: usize,
+    shard_gb: f64,
+    agg_bandwidth_gbps: f64,
+    degradation: f64,
+) -> RebalancePlan {
+    if old_nodes == new_nodes {
+        return RebalancePlan::none();
+    }
+    let old = HashRing::new(old_nodes);
+    let new = HashRing::new(new_nodes);
+    let moved = (0..total_shards as u64)
+        .filter(|&s| old.primary(s) != new.primary(s))
+        .count();
+    let bytes = moved as f64 * shard_gb;
+    let duration = if agg_bandwidth_gbps > 0.0 { bytes / agg_bandwidth_gbps } else { 0.0 };
+    RebalancePlan { moved_shards: moved, total_shards, duration, degradation }
+}
+
+/// Plan a vertical resize: no shard movement (same ring), but nodes
+/// restart in a rolling fashion — a short uniform degradation window.
+pub fn plan_v_change(n_nodes: usize, restart_time: f64, degradation: f64) -> RebalancePlan {
+    RebalancePlan {
+        moved_shards: 0,
+        total_shards: 0,
+        duration: restart_time * n_nodes as f64,
+        degradation,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_size_is_noop() {
+        let p = plan_h_change(4, 4, 64, 1.0, 10.0, 0.7);
+        assert!(p.is_noop());
+        assert_eq!(p.duration, 0.0);
+    }
+
+    #[test]
+    fn growth_moves_minority_of_shards() {
+        let p = plan_h_change(4, 8, 256, 1.0, 10.0, 0.7);
+        assert!(p.moved_shards > 0);
+        assert!(
+            p.moved_shards < 256 * 3 / 4,
+            "consistent hashing should move a minority: {}",
+            p.moved_shards
+        );
+        assert!(p.duration > 0.0);
+    }
+
+    #[test]
+    fn duration_scales_with_shard_size() {
+        let small = plan_h_change(2, 4, 64, 1.0, 10.0, 0.7);
+        let big = plan_h_change(2, 4, 64, 4.0, 10.0, 0.7);
+        assert!((big.duration - 4.0 * small.duration).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duration_inverse_in_bandwidth() {
+        let slow = plan_h_change(2, 4, 64, 1.0, 5.0, 0.7);
+        let fast = plan_h_change(2, 4, 64, 1.0, 20.0, 0.7);
+        assert!(slow.duration > fast.duration);
+    }
+
+    #[test]
+    fn vertical_resize_moves_nothing() {
+        let p = plan_v_change(4, 0.05, 0.8);
+        assert_eq!(p.moved_shards, 0);
+        assert!((p.duration - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bigger_h_jump_moves_more() {
+        let one = plan_h_change(4, 8, 512, 1.0, 10.0, 0.7);
+        let two = plan_h_change(1, 8, 512, 1.0, 10.0, 0.7);
+        assert!(two.moved_shards > one.moved_shards);
+    }
+}

@@ -1,0 +1,126 @@
+//! Consistent-hash ring: maps shards to replica sets of nodes, Dynamo
+//! style (paper §II.A), with virtual nodes for balance. Used by the
+//! Phase-2 cluster substrate to decide shard placement and by the
+//! rebalancer to compute data movement between configurations.
+
+/// Virtual nodes per physical node (balance vs ring size).
+const VNODES: usize = 64;
+
+/// 64-bit mix hash (splitmix64 finalizer) — deterministic placement.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+/// A consistent-hash ring over `n_nodes` physical nodes.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// (position, node) sorted by position.
+    points: Vec<(u64, usize)>,
+    n_nodes: usize,
+}
+
+impl HashRing {
+    pub fn new(n_nodes: usize) -> Self {
+        assert!(n_nodes > 0);
+        let mut points = Vec::with_capacity(n_nodes * VNODES);
+        for node in 0..n_nodes {
+            for v in 0..VNODES {
+                points.push((mix((node as u64) << 32 | v as u64), node));
+            }
+        }
+        points.sort_unstable();
+        Self { points, n_nodes }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// First `replicas` *distinct* nodes clockwise from the shard's hash
+    /// — the shard's replica set (primary first).
+    pub fn replicas(&self, shard: u64, replicas: usize) -> Vec<usize> {
+        let replicas = replicas.min(self.n_nodes);
+        let h = mix(shard.wrapping_mul(0x9E3779B97F4A7C15));
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        let mut out = Vec::with_capacity(replicas);
+        let mut i = start;
+        while out.len() < replicas {
+            let (_, node) = self.points[i % self.points.len()];
+            if !out.contains(&node) {
+                out.push(node);
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Primary node for a shard.
+    pub fn primary(&self, shard: u64) -> usize {
+        self.replicas(shard, 1)[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_placement() {
+        let a = HashRing::new(4);
+        let b = HashRing::new(4);
+        for s in 0..100 {
+            assert_eq!(a.replicas(s, 3), b.replicas(s, 3));
+        }
+    }
+
+    #[test]
+    fn replicas_distinct_and_bounded() {
+        let ring = HashRing::new(4);
+        for s in 0..200 {
+            let r = ring.replicas(s, 3);
+            assert_eq!(r.len(), 3);
+            let mut sorted = r.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3, "replicas must be distinct");
+            assert!(r.iter().all(|&n| n < 4));
+        }
+    }
+
+    #[test]
+    fn replication_capped_by_cluster_size() {
+        let ring = HashRing::new(2);
+        assert_eq!(ring.replicas(7, 3).len(), 2);
+        let ring = HashRing::new(1);
+        assert_eq!(ring.replicas(7, 3), vec![0]);
+    }
+
+    #[test]
+    fn roughly_balanced() {
+        let ring = HashRing::new(4);
+        let mut counts = [0usize; 4];
+        for s in 0..4096 {
+            counts[ring.primary(s)] += 1;
+        }
+        for &c in &counts {
+            // each node should own 25% +- 12% of primaries
+            assert!(c > 4096 / 4 - 500 && c < 4096 / 4 + 500, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn minimal_movement_on_growth() {
+        // consistent hashing: growing 4 -> 5 nodes should move far fewer
+        // than half of the primaries.
+        let a = HashRing::new(4);
+        let b = HashRing::new(5);
+        let moved = (0..4096)
+            .filter(|&s| a.primary(s) != b.primary(s))
+            .count();
+        assert!(moved < 4096 / 2, "moved={moved}");
+        assert!(moved > 0);
+    }
+}

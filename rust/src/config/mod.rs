@@ -1,0 +1,373 @@
+//! Configuration system: every constant of the analytical model, the
+//! plane geometry, the SLA, the policy weights, and the workload shape
+//! live in a TOML file (`config/default.toml`).
+//!
+//! The same struct packs itself into the flat f32 parameter vector the
+//! AOT-compiled kernels take at runtime (`pack_params`), so the native
+//! rust surfaces and the HLO surfaces are always driven by identical
+//! constants — a property the integration tests assert.
+
+mod params;
+
+pub use params::*;
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+use crate::plane::{ScalingPlane, Tier};
+use crate::util::toml;
+
+/// Vertical-tier entry as it appears in TOML.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierConfig {
+    pub name: String,
+    pub cpu: f32,
+    pub ram: f32,
+    pub bandwidth: f32,
+    pub iops: f32,
+    pub cost: f32,
+}
+
+/// `[plane]` section: the discrete configuration space (paper III.A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlaneConfig {
+    pub h_values: Vec<u32>,
+    pub grid: usize,
+    pub tiers: Vec<TierConfig>,
+}
+
+/// `[surfaces]` section: analytical-surface constants (paper III.B–F).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SurfaceConfig {
+    pub a: f32,
+    pub b: f32,
+    pub c: f32,
+    pub d: f32,
+    pub eta: f32,
+    pub mu: f32,
+    pub theta: f32,
+    pub kappa: f32,
+    pub omega: f32,
+    pub rho: f32,
+    pub alpha: f32,
+    pub beta: f32,
+    pub gamma: f32,
+    pub delta: f32,
+    pub u_max: f32,
+}
+
+fn default_u_max() -> f32 {
+    0.75
+}
+
+/// `[sla]` section: feasibility bounds (paper IV.C).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlaConfig {
+    pub l_max: f32,
+    pub b_sla: f32,
+}
+
+/// `[policy]` section: rebalance weights and start config (paper IV.D).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyConfig {
+    pub reb_h: f32,
+    pub reb_v: f32,
+    pub start: [usize; 2],
+    pub plan_queue: bool,
+}
+
+/// `[workload]` section: the paper's phased trace (paper V.C).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    pub phases: Vec<f32>,
+    pub steps_per_phase: usize,
+    pub thr_factor: f32,
+    pub read_ratio: f32,
+}
+
+/// The full model configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub plane: PlaneConfig,
+    pub surfaces: SurfaceConfig,
+    pub sla: SlaConfig,
+    pub policy: PolicyConfig,
+    pub workload: WorkloadConfig,
+}
+
+impl ModelConfig {
+    /// Load from a TOML file.
+    pub fn from_path(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).with_context(
+            || format!("reading config {}", path.as_ref().display()),
+        )?;
+        Self::from_toml(&text)
+    }
+
+    /// Parse from TOML text (via the in-tree parser) and validate.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let v = toml::parse(text).context("parsing config TOML")?;
+        let f32_at = |path: &str| -> Result<f32> {
+            v.get(path)
+                .and_then(toml::Value::as_f32)
+                .ok_or_else(|| anyhow!("config missing numeric `{path}`"))
+        };
+        let usize_at = |path: &str| -> Result<usize> {
+            v.get(path)
+                .and_then(toml::Value::as_usize)
+                .ok_or_else(|| anyhow!("config missing integer `{path}`"))
+        };
+
+        let h_values = v
+            .get("plane.h_values")
+            .and_then(toml::Value::as_array)
+            .ok_or_else(|| anyhow!("config missing `plane.h_values`"))?
+            .iter()
+            .map(|x| {
+                x.as_i64()
+                    .and_then(|i| u32::try_from(i).ok())
+                    .ok_or_else(|| anyhow!("plane.h_values must be positive integers"))
+            })
+            .collect::<Result<Vec<u32>>>()?;
+        let grid = v
+            .get("plane.grid")
+            .and_then(toml::Value::as_usize)
+            .unwrap_or(crate::GRID);
+        let tiers = v
+            .get("plane.tiers")
+            .and_then(toml::Value::as_table_array)
+            .ok_or_else(|| anyhow!("config missing `[[plane.tiers]]`"))?
+            .iter()
+            .map(|t| {
+                let s = |k: &str| {
+                    t.get(k)
+                        .and_then(toml::Value::as_f32)
+                        .ok_or_else(|| anyhow!("tier missing numeric `{k}`"))
+                };
+                Ok(TierConfig {
+                    name: t
+                        .get("name")
+                        .and_then(toml::Value::as_str)
+                        .ok_or_else(|| anyhow!("tier missing `name`"))?
+                        .to_string(),
+                    cpu: s("cpu")?,
+                    ram: s("ram")?,
+                    bandwidth: s("bandwidth")?,
+                    iops: s("iops")?,
+                    cost: s("cost")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let start_arr = v
+            .get("policy.start")
+            .and_then(toml::Value::as_array)
+            .ok_or_else(|| anyhow!("config missing `policy.start`"))?;
+        if start_arr.len() != 2 {
+            return Err(anyhow!("policy.start must be [h_idx, v_idx]"));
+        }
+        let start = [
+            start_arr[0]
+                .as_usize()
+                .ok_or_else(|| anyhow!("policy.start[0] must be an index"))?,
+            start_arr[1]
+                .as_usize()
+                .ok_or_else(|| anyhow!("policy.start[1] must be an index"))?,
+        ];
+
+        let phases = v
+            .get("workload.phases")
+            .and_then(toml::Value::as_array)
+            .ok_or_else(|| anyhow!("config missing `workload.phases`"))?
+            .iter()
+            .map(|x| {
+                x.as_f32()
+                    .ok_or_else(|| anyhow!("workload.phases must be numeric"))
+            })
+            .collect::<Result<Vec<f32>>>()?;
+
+        let cfg = ModelConfig {
+            plane: PlaneConfig { h_values, grid, tiers },
+            surfaces: SurfaceConfig {
+                a: f32_at("surfaces.a")?,
+                b: f32_at("surfaces.b")?,
+                c: f32_at("surfaces.c")?,
+                d: f32_at("surfaces.d")?,
+                eta: f32_at("surfaces.eta")?,
+                mu: f32_at("surfaces.mu")?,
+                theta: f32_at("surfaces.theta")?,
+                kappa: f32_at("surfaces.kappa")?,
+                omega: f32_at("surfaces.omega")?,
+                rho: f32_at("surfaces.rho")?,
+                alpha: f32_at("surfaces.alpha")?,
+                beta: f32_at("surfaces.beta")?,
+                gamma: f32_at("surfaces.gamma")?,
+                delta: f32_at("surfaces.delta")?,
+                u_max: v
+                    .get("surfaces.u_max")
+                    .and_then(toml::Value::as_f32)
+                    .unwrap_or_else(default_u_max),
+            },
+            sla: SlaConfig { l_max: f32_at("sla.l_max")?, b_sla: f32_at("sla.b_sla")? },
+            policy: PolicyConfig {
+                reb_h: f32_at("policy.reb_h")?,
+                reb_v: f32_at("policy.reb_v")?,
+                start,
+                plan_queue: v
+                    .get("policy.plan_queue")
+                    .and_then(toml::Value::as_bool)
+                    .unwrap_or(false),
+            },
+            workload: WorkloadConfig {
+                phases,
+                steps_per_phase: usize_at("workload.steps_per_phase")?,
+                thr_factor: f32_at("workload.thr_factor")?,
+                read_ratio: f32_at("workload.read_ratio")?,
+            },
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The built-in default configuration (compiled-in copy of
+    /// `config/default.toml`; calibrated against the paper's Table I).
+    pub fn default_paper() -> Self {
+        Self::from_toml(include_str!("../../../config/default.toml"))
+            .expect("bundled default.toml must parse")
+    }
+
+    /// Sanity-check invariants the rest of the crate relies on.
+    pub fn validate(&self) -> Result<()> {
+        if self.plane.h_values.is_empty() {
+            return Err(anyhow!("plane.h_values must be non-empty"));
+        }
+        if self.plane.tiers.is_empty() {
+            return Err(anyhow!("plane.tiers must be non-empty"));
+        }
+        if self.plane.h_values.len() > self.plane.grid
+            || self.plane.tiers.len() > self.plane.grid
+        {
+            return Err(anyhow!(
+                "plane exceeds padded grid ({}x{})",
+                self.plane.grid,
+                self.plane.grid
+            ));
+        }
+        if self.plane.h_values.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(anyhow!("plane.h_values must be strictly increasing"));
+        }
+        for t in &self.plane.tiers {
+            if t.cpu <= 0.0 || t.ram <= 0.0 || t.bandwidth <= 0.0 || t.iops <= 0.0 {
+                return Err(anyhow!("tier {} has non-positive resources", t.name));
+            }
+            if t.cost < 0.0 {
+                return Err(anyhow!("tier {} has negative cost", t.name));
+            }
+        }
+        if !(0.0..1.0).contains(&self.surfaces.u_max) {
+            return Err(anyhow!("surfaces.u_max must be in [0, 1)"));
+        }
+        if self.sla.b_sla <= 0.0 {
+            return Err(anyhow!("sla.b_sla must be positive"));
+        }
+        let [h0, v0] = self.policy.start;
+        if h0 >= self.plane.h_values.len() || v0 >= self.plane.tiers.len() {
+            return Err(anyhow!("policy.start out of plane bounds"));
+        }
+        if self.workload.phases.is_empty() || self.workload.steps_per_phase == 0 {
+            return Err(anyhow!("workload must have at least one phase step"));
+        }
+        if !(0.0..=1.0).contains(&self.workload.read_ratio) {
+            return Err(anyhow!("workload.read_ratio must be in [0, 1]"));
+        }
+        Ok(())
+    }
+
+    /// Build the [`ScalingPlane`] described by `[plane]`.
+    pub fn plane(&self) -> ScalingPlane {
+        ScalingPlane::new(
+            self.plane.h_values.clone(),
+            self.plane
+                .tiers
+                .iter()
+                .map(|t| Tier {
+                    name: t.name.clone(),
+                    cpu: t.cpu,
+                    ram: t.ram,
+                    bandwidth: t.bandwidth,
+                    iops: t.iops,
+                    cost: t.cost,
+                })
+                .collect(),
+        )
+    }
+
+    /// Workload write fraction (`1 - read_ratio`).
+    pub fn write_ratio(&self) -> f32 {
+        1.0 - self.workload.read_ratio
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_parses_and_validates() {
+        let cfg = ModelConfig::default_paper();
+        assert_eq!(cfg.plane.h_values, vec![1, 2, 4, 8]);
+        assert_eq!(cfg.plane.tiers.len(), 4);
+        assert_eq!(cfg.plane.tiers[3].name, "xlarge");
+        assert_eq!(cfg.policy.start, [1, 1]);
+    }
+
+    #[test]
+    fn write_ratio_complements_read_ratio() {
+        let cfg = ModelConfig::default_paper();
+        assert!((cfg.write_ratio() - 0.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_decreasing_h_values() {
+        let mut cfg = ModelConfig::default_paper();
+        cfg.plane.h_values = vec![4, 2];
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_zero_resources() {
+        let mut cfg = ModelConfig::default_paper();
+        cfg.plane.tiers[0].cpu = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_start() {
+        let mut cfg = ModelConfig::default_paper();
+        cfg.policy.start = [9, 0];
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_u_max() {
+        let mut cfg = ModelConfig::default_paper();
+        cfg.surfaces.u_max = 1.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn missing_field_is_a_clear_error() {
+        let err = ModelConfig::from_toml("[plane]\nh_values = [1, 2]\n").unwrap_err();
+        assert!(format!("{err:#}").contains("plane.tiers"));
+    }
+
+    #[test]
+    fn file_on_disk_matches_bundled_default() {
+        // the compiled-in copy and config/default.toml must not drift
+        let disk = ModelConfig::from_path(
+            concat!(env!("CARGO_MANIFEST_DIR"), "/config/default.toml"),
+        )
+        .unwrap();
+        assert_eq!(disk, ModelConfig::default_paper());
+    }
+}

@@ -1,0 +1,163 @@
+//! Packed parameter vector: the ABI between the rust coordinator and the
+//! AOT-compiled kernels.
+//!
+//! Index layout MUST mirror `python/compile/defaults.py` (the python side
+//! documents the authoritative table; `aot.py` stamps an `abi_version`
+//! into the artifact manifest and [`crate::runtime`] refuses mismatches).
+
+use crate::config::ModelConfig;
+use crate::PARAMS_LEN;
+
+pub const P_A: usize = 0;
+pub const P_B: usize = 1;
+pub const P_C: usize = 2;
+pub const P_D: usize = 3;
+pub const P_ETA: usize = 4;
+pub const P_MU: usize = 5;
+pub const P_THETA: usize = 6;
+pub const P_KAPPA: usize = 7;
+pub const P_OMEGA: usize = 8;
+pub const P_RHO: usize = 9;
+pub const P_ALPHA: usize = 10;
+pub const P_BETA: usize = 11;
+pub const P_GAMMA: usize = 12;
+pub const P_DELTA: usize = 13;
+pub const P_LAMBDA_W: usize = 14;
+pub const P_LAMBDA_REQ: usize = 15;
+pub const P_B_SLA: usize = 16;
+pub const P_L_MAX: usize = 17;
+pub const P_REB_H: usize = 18;
+pub const P_REB_V: usize = 19;
+pub const P_N_H: usize = 20;
+pub const P_N_V: usize = 21;
+pub const P_ALLOW_DH: usize = 22;
+pub const P_ALLOW_DV: usize = 23;
+pub const P_U_MAX: usize = 24;
+pub const P_WRITE_RATIO: usize = 25;
+pub const P_PLAN_QUEUE: usize = 26;
+
+/// ABI version expected in `artifacts/manifest.json` (bumped together
+/// with `python/compile/aot.py::ABI_VERSION`).
+pub const ABI_VERSION: u64 = 1;
+
+/// Movement freedom of a policy in the plane (which axes it may change).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MoveFlags {
+    pub allow_dh: bool,
+    pub allow_dv: bool,
+}
+
+impl MoveFlags {
+    pub const DIAGONAL: Self = Self { allow_dh: true, allow_dv: true };
+    pub const HORIZONTAL_ONLY: Self = Self { allow_dh: true, allow_dv: false };
+    pub const VERTICAL_ONLY: Self = Self { allow_dh: false, allow_dv: true };
+}
+
+/// Pack the full parameter vector for a given workload point.
+///
+/// `lambda_req` is the workload-derived required throughput; the write
+/// arrival rate is `lambda_req * write_ratio` (paper III.E / V.C).
+pub fn pack_params(
+    cfg: &ModelConfig,
+    lambda_req: f32,
+    moves: MoveFlags,
+) -> [f32; PARAMS_LEN] {
+    let s = &cfg.surfaces;
+    let mut p = [0.0f32; PARAMS_LEN];
+    p[P_A] = s.a;
+    p[P_B] = s.b;
+    p[P_C] = s.c;
+    p[P_D] = s.d;
+    p[P_ETA] = s.eta;
+    p[P_MU] = s.mu;
+    p[P_THETA] = s.theta;
+    p[P_KAPPA] = s.kappa;
+    p[P_OMEGA] = s.omega;
+    p[P_RHO] = s.rho;
+    p[P_ALPHA] = s.alpha;
+    p[P_BETA] = s.beta;
+    p[P_GAMMA] = s.gamma;
+    p[P_DELTA] = s.delta;
+    p[P_LAMBDA_W] = lambda_req * cfg.write_ratio();
+    p[P_LAMBDA_REQ] = lambda_req;
+    p[P_B_SLA] = cfg.sla.b_sla;
+    p[P_L_MAX] = cfg.sla.l_max;
+    p[P_REB_H] = cfg.policy.reb_h;
+    p[P_REB_V] = cfg.policy.reb_v;
+    p[P_N_H] = cfg.plane.h_values.len() as f32;
+    p[P_N_V] = cfg.plane.tiers.len() as f32;
+    p[P_ALLOW_DH] = if moves.allow_dh { 1.0 } else { 0.0 };
+    p[P_ALLOW_DV] = if moves.allow_dv { 1.0 } else { 0.0 };
+    p[P_U_MAX] = s.u_max;
+    p[P_WRITE_RATIO] = cfg.write_ratio();
+    p[P_PLAN_QUEUE] = if cfg.policy.plan_queue { 1.0 } else { 0.0 };
+    p
+}
+
+/// Padded grid arrays for the kernel ABI: `(hs[G], tiers[G*5], mask[G*G])`
+/// — row-major, mirroring `defaults.grid_arrays()`.
+pub fn grid_arrays(cfg: &ModelConfig) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let g = cfg.plane.grid;
+    let mut hs = vec![1.0f32; g]; // benign padding: log/pow stay finite
+    for (i, h) in cfg.plane.h_values.iter().enumerate() {
+        hs[i] = *h as f32;
+    }
+    let mut tiers = vec![1.0f32; g * 5]; // benign padding: no div-by-zero
+    for (j, t) in cfg.plane.tiers.iter().enumerate() {
+        tiers[j * 5] = t.cpu;
+        tiers[j * 5 + 1] = t.ram;
+        tiers[j * 5 + 2] = t.bandwidth;
+        tiers[j * 5 + 3] = t.iops / 1000.0;
+        tiers[j * 5 + 4] = t.cost;
+    }
+    let mut mask = vec![0.0f32; g * g];
+    for i in 0..cfg.plane.h_values.len() {
+        for j in 0..cfg.plane.tiers.len() {
+            mask[i * g + j] = 1.0;
+        }
+    }
+    (hs, tiers, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_params_defaults() {
+        let cfg = ModelConfig::default_paper();
+        let p = pack_params(&cfg, 10_000.0, MoveFlags::DIAGONAL);
+        assert_eq!(p[P_KAPPA], 585.0);
+        assert_eq!(p[P_LAMBDA_REQ], 10_000.0);
+        assert!((p[P_LAMBDA_W] - 3_000.0).abs() < 0.5);
+        assert_eq!(p[P_N_H], 4.0);
+        assert_eq!(p[P_ALLOW_DH], 1.0);
+        assert_eq!(p[P_ALLOW_DV], 1.0);
+        assert_eq!(p[P_PLAN_QUEUE], 0.0);
+    }
+
+    #[test]
+    fn move_flags_restrict_axes() {
+        let cfg = ModelConfig::default_paper();
+        let p = pack_params(&cfg, 1.0, MoveFlags::HORIZONTAL_ONLY);
+        assert_eq!((p[P_ALLOW_DH], p[P_ALLOW_DV]), (1.0, 0.0));
+        let p = pack_params(&cfg, 1.0, MoveFlags::VERTICAL_ONLY);
+        assert_eq!((p[P_ALLOW_DH], p[P_ALLOW_DV]), (0.0, 1.0));
+    }
+
+    #[test]
+    fn grid_arrays_padded_and_masked() {
+        let cfg = ModelConfig::default_paper();
+        let (hs, tiers, mask) = grid_arrays(&cfg);
+        assert_eq!(hs.len(), 8);
+        assert_eq!(&hs[..4], &[1.0, 2.0, 4.0, 8.0]);
+        assert_eq!(&hs[4..], &[1.0; 4]);
+        assert_eq!(tiers.len(), 40);
+        assert_eq!(tiers[5 * 3 + 3], 24.0); // xlarge iops/1000
+        assert_eq!(mask.iter().filter(|&&m| m == 1.0).count(), 16);
+        assert_eq!(mask[0 * 8 + 0], 1.0);
+        assert_eq!(mask[3 * 8 + 3], 1.0);
+        assert_eq!(mask[4 * 8 + 0], 0.0);
+        assert_eq!(mask[0 * 8 + 4], 0.0);
+    }
+}

@@ -1,0 +1,345 @@
+//! The autoscaler control loop — the deployable form of the paper's
+//! contribution. Each tick it: (1) serves the interval's demand on the
+//! Phase-2 cluster substrate, (2) estimates demand (EWMA over observed
+//! offered load), (3) runs the planning policy against the analytical
+//! surfaces — natively or through the AOT-compiled PJRT kernels —
+//! and (4) actuates the chosen configuration, paying the physical
+//! rebalance cost.
+//!
+//! [`Coordinator::run_trace`] is the synchronous driver used by the
+//! examples and benches; [`Coordinator::run_daemon`] wraps the same
+//! tick in a channel-fed loop suitable for running on its own thread
+//! (`std::sync::mpsc` — the offline build has no async runtime).
+
+use std::sync::mpsc;
+
+use anyhow::Result;
+
+use crate::cluster::{ClusterParams, ClusterSim, ClusterStepMetrics};
+use crate::config::{MoveFlags, ModelConfig};
+use crate::plane::Configuration;
+use crate::policy::{Policy, PolicyContext};
+use crate::runtime::SurfaceEngine;
+use crate::sla::SlaSpec;
+use crate::surfaces::SurfaceModel;
+use crate::workload::{Trace, WorkloadPoint};
+use crate::INFEASIBLE;
+
+/// Where neighbor scoring happens.
+pub enum Backend {
+    /// Native rust surfaces.
+    Native(Box<dyn Policy + Send>),
+    /// AOT-compiled Pallas kernels through PJRT (the `neighbor`
+    /// artifact); Algorithm-1 argmin stays in rust.
+    Hlo { engine: SurfaceEngine, moves: MoveFlags },
+}
+
+/// One coordinator tick's record.
+#[derive(Debug, Clone)]
+pub struct TickReport {
+    pub step: usize,
+    pub served_config: Configuration,
+    pub next_config: Configuration,
+    pub demand: f32,
+    pub demand_estimate: f32,
+    pub metrics: ClusterStepMetrics,
+    pub rebalanced: bool,
+    pub moved_shards: usize,
+    /// Measured SLA violation: p99 over the bound, or throughput short.
+    pub violation: bool,
+}
+
+/// Aggregate over a coordinator run.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorSummary {
+    pub steps: usize,
+    pub violations: usize,
+    pub avg_latency: f64,
+    pub avg_p99: f64,
+    pub completed_ratio: f64,
+    pub total_moved_shards: usize,
+    pub reconfigurations: usize,
+}
+
+/// The control loop.
+pub struct Coordinator {
+    model: SurfaceModel,
+    sla: SlaSpec,
+    cluster: ClusterSim,
+    backend: Backend,
+    reb_h: f32,
+    reb_v: f32,
+    plan_queue: bool,
+    current: Configuration,
+    ewma: f32,
+    /// EWMA smoothing for the demand estimate.
+    pub ewma_alpha: f32,
+}
+
+impl Coordinator {
+    pub fn new(cfg: &ModelConfig, cluster: ClusterSim, backend: Backend) -> Self {
+        let current = cluster.current();
+        Self {
+            model: SurfaceModel::from_config(cfg),
+            sla: SlaSpec::from_config(cfg),
+            cluster,
+            backend,
+            reb_h: cfg.policy.reb_h,
+            reb_v: cfg.policy.reb_v,
+            plan_queue: cfg.policy.plan_queue,
+            current,
+            ewma: 0.0,
+            ewma_alpha: 0.6,
+        }
+    }
+
+    pub fn current(&self) -> Configuration {
+        self.current
+    }
+
+    pub fn cluster(&self) -> &ClusterSim {
+        &self.cluster
+    }
+
+    /// Mutable access for failure injection and test orchestration.
+    pub fn cluster_mut(&mut self) -> &mut ClusterSim {
+        &mut self.cluster
+    }
+
+    /// Plan the next configuration for an estimated demand.
+    fn plan(&mut self, est: WorkloadPoint) -> Result<Configuration> {
+        match &mut self.backend {
+            Backend::Native(policy) => {
+                let ctx = PolicyContext {
+                    model: &self.model,
+                    sla: &self.sla,
+                    reb_h: self.reb_h,
+                    reb_v: self.reb_v,
+                    plan_queue: self.plan_queue,
+                    future: &[],
+                };
+                Ok(policy.decide(self.current, est, &ctx).next)
+            }
+            Backend::Hlo { engine, moves } => {
+                // Build the padded candidate batch for the `neighbor`
+                // kernel, score on PJRT, argmin in rust (row-major order,
+                // strict <, matching the native policy exactly).
+                let m = engine.engine().manifest();
+                let (rows, cols) = (m.neighbor_rows, m.neighbor_cols);
+                let plane = self.model.plane();
+                let cands = plane.neighbors(&self.current, moves.allow_dh, moves.allow_dv);
+                let mut batch = vec![0.0f32; rows * cols];
+                for (i, c) in cands.iter().enumerate() {
+                    let t = plane.tier(c);
+                    let (dh, dv) = self.current.index_distance(c);
+                    let row = &mut batch[i * cols..i * cols + 9];
+                    row.copy_from_slice(&[
+                        plane.h_value(c) as f32,
+                        t.cpu,
+                        t.ram,
+                        t.bandwidth,
+                        t.iops_k(),
+                        t.cost,
+                        dh as f32,
+                        dv as f32,
+                        1.0,
+                    ]);
+                }
+                let (scores, _) =
+                    engine.neighbor_scores(&batch, est.lambda_req, *moves)?;
+                let mut best: Option<(usize, f32)> = None;
+                for (i, &s) in scores.iter().take(cands.len()).enumerate() {
+                    if s < INFEASIBLE * 0.5 && best.map_or(true, |(_, b)| s < b) {
+                        best = Some((i, s));
+                    }
+                }
+                Ok(match best {
+                    Some((i, _)) => cands[i],
+                    None => plane.fallback_up(&self.current, moves.allow_dh, moves.allow_dv),
+                })
+            }
+        }
+    }
+
+    /// One control tick: serve, observe, plan, actuate.
+    pub fn tick(&mut self, step: usize, demand: WorkloadPoint) -> Result<TickReport> {
+        let served_config = self.current;
+        let metrics = self.cluster.step(demand);
+
+        // Demand estimate from the observed offered load.
+        let observed = metrics.offered as f32;
+        self.ewma = if step == 0 {
+            observed
+        } else {
+            self.ewma_alpha * observed + (1.0 - self.ewma_alpha) * self.ewma
+        };
+        let est = WorkloadPoint::new(self.ewma, demand.lambda_w / demand.lambda_req.max(1e-9));
+
+        let next = self.plan(est)?;
+        let plan = self.cluster.apply(next);
+        self.current = next;
+
+        let violation = metrics.p99_latency > self.cluster.params().sla_latency
+            || metrics.completed < demand.lambda_req as f64 * 0.999;
+        Ok(TickReport {
+            step,
+            served_config,
+            next_config: next,
+            demand: demand.lambda_req,
+            demand_estimate: self.ewma,
+            metrics,
+            rebalanced: !plan.is_noop() || plan.duration > 0.0,
+            moved_shards: plan.moved_shards,
+            violation,
+        })
+    }
+
+    /// Drive a whole demand trace synchronously.
+    pub fn run_trace(&mut self, trace: &Trace) -> Result<Vec<TickReport>> {
+        trace
+            .points
+            .iter()
+            .enumerate()
+            .map(|(i, w)| self.tick(i, *w))
+            .collect()
+    }
+
+    /// Daemon loop: consume demand observations from a channel until it
+    /// closes; emit a report per tick on the report channel. Run it on
+    /// its own thread with `std::thread::spawn(move || coord.run_daemon(..))`.
+    pub fn run_daemon(
+        mut self,
+        demand_rx: mpsc::Receiver<WorkloadPoint>,
+        report_tx: mpsc::Sender<TickReport>,
+    ) -> Result<CoordinatorSummary> {
+        let mut reports = Vec::new();
+        let mut step = 0usize;
+        while let Ok(w) = demand_rx.recv() {
+            let r = self.tick(step, w)?;
+            step += 1;
+            // a closed report channel is not an error — keep controlling
+            let _ = report_tx.send(r.clone());
+            reports.push(r);
+        }
+        Ok(summarize(&reports))
+    }
+}
+
+/// Aggregate tick reports.
+pub fn summarize(reports: &[TickReport]) -> CoordinatorSummary {
+    let n = reports.len();
+    let nf = n.max(1) as f64;
+    let offered: f64 = reports.iter().map(|r| r.metrics.offered).sum();
+    let completed: f64 = reports.iter().map(|r| r.metrics.completed).sum();
+    CoordinatorSummary {
+        steps: n,
+        violations: reports.iter().filter(|r| r.violation).count(),
+        avg_latency: reports.iter().map(|r| r.metrics.avg_latency).sum::<f64>() / nf,
+        avg_p99: reports.iter().map(|r| r.metrics.p99_latency).sum::<f64>() / nf,
+        completed_ratio: if offered > 0.0 { completed / offered } else { 1.0 },
+        total_moved_shards: reports.iter().map(|r| r.moved_shards).sum(),
+        reconfigurations: reports
+            .windows(2)
+            .filter(|w| w[1].served_config != w[0].served_config)
+            .count(),
+    }
+}
+
+/// Convenience: coordinator with a native policy on a fresh cluster.
+pub fn native_coordinator(
+    cfg: &ModelConfig,
+    policy: Box<dyn Policy + Send>,
+    params: ClusterParams,
+    seed: u64,
+) -> Coordinator {
+    let cluster = ClusterSim::new(cfg, params, seed);
+    Coordinator::new(cfg, cluster, Backend::Native(policy))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::DiagonalScale;
+    use crate::workload::TraceBuilder;
+
+    fn coordinator(seed: u64) -> Coordinator {
+        let cfg = ModelConfig::default_paper();
+        native_coordinator(
+            &cfg,
+            Box::new(DiagonalScale::diagonal()),
+            ClusterParams::default(),
+            seed,
+        )
+    }
+
+    #[test]
+    fn scales_up_through_the_paper_trace() {
+        let cfg = ModelConfig::default_paper();
+        let mut c = coordinator(1);
+        let trace = TraceBuilder::paper(&cfg);
+        let reports = c.run_trace(&trace).unwrap();
+        assert_eq!(reports.len(), 50);
+        let s = summarize(&reports);
+        // the controller must reconfigure at least around phase changes
+        assert!(s.reconfigurations >= 2);
+        // and keep the vast majority of steps healthy
+        assert!(s.violations < 15, "violations={}", s.violations);
+        assert!(s.completed_ratio > 0.9);
+    }
+
+    #[test]
+    fn peak_config_stronger_than_idle_config() {
+        let cfg = ModelConfig::default_paper();
+        let mut c = coordinator(2);
+        let trace = TraceBuilder::paper(&cfg);
+        let reports = c.run_trace(&trace).unwrap();
+        let model = SurfaceModel::from_config(&cfg);
+        let peak = &reports[28]; // late high phase
+        let tail = &reports[49]; // late low phase
+        assert!(
+            model.throughput(&peak.served_config) > model.throughput(&tail.served_config),
+            "peak {:?} vs tail {:?}",
+            peak.served_config,
+            tail.served_config
+        );
+    }
+
+    #[test]
+    fn ewma_tracks_demand() {
+        let mut c = coordinator(3);
+        for i in 0..5 {
+            c.tick(i, WorkloadPoint::new(4000.0, 0.3)).unwrap();
+        }
+        assert!((c.ewma - 4000.0).abs() < 400.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = ModelConfig::default_paper();
+        let trace = TraceBuilder::paper(&cfg);
+        let a = coordinator(7).run_trace(&trace).unwrap();
+        let b = coordinator(7).run_trace(&trace).unwrap();
+        let sa: Vec<_> = a.iter().map(|r| r.served_config).collect();
+        let sb: Vec<_> = b.iter().map(|r| r.served_config).collect();
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn daemon_processes_channel() {
+        let (dtx, drx) = mpsc::channel();
+        let (rtx, rrx) = mpsc::channel();
+        // built inside the thread: Backend can hold !Send PJRT handles
+        let handle = std::thread::spawn(move || coordinator(4).run_daemon(drx, rtx));
+        for _ in 0..6 {
+            dtx.send(WorkloadPoint::new(3000.0, 0.3)).unwrap();
+        }
+        drop(dtx);
+        let mut got = 0;
+        while rrx.recv().is_ok() {
+            got += 1;
+        }
+        let summary = handle.join().unwrap().unwrap();
+        assert_eq!(got, 6);
+        assert_eq!(summary.steps, 6);
+    }
+}

@@ -1,0 +1,482 @@
+//! Disaggregated Scaling Plane (paper §VIII, final extension):
+//! "serverless and disaggregated architectures, where compute, memory,
+//! storage, and network resources may be scaled independently. Such
+//! systems may require a higher-dimensional extension of the Scaling
+//! Plane."
+//!
+//! This module is that extension: a four-dimensional configuration
+//! space `(H, C, M, S)` — node count × compute tier × memory tier ×
+//! storage tier. Every combination synthesizes a virtual [`Tier`]
+//! (cpu+bandwidth from C, ram from M, iops from S, cost additive), so
+//! the paper's §III surfaces apply unchanged. DIAGONALSCALE generalizes
+//! to the 3^4-candidate hyper-local neighborhood.
+//!
+//! Because the coupled 2-D ladder is a *subspace* of this plane (the
+//! "matched" combos), the disaggregated optimum can only be equal or
+//! better — the `ablations` bench quantifies the cost savings.
+
+use crate::config::{ModelConfig, SurfaceConfig};
+use crate::metrics::{Recorder, StepRecord, Summary};
+use crate::plane::Tier;
+use crate::sla::SlaSpec;
+use crate::surfaces::queueing;
+use crate::workload::Trace;
+
+/// One independently scalable axis: named steps with a value and cost.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Axis {
+    pub name: &'static str,
+    /// (value, cost) per step, ascending.
+    pub steps: Vec<(f32, f32)>,
+}
+
+impl Axis {
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+}
+
+/// A point in the 4-D plane, as indices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DisaggConfig {
+    pub h_idx: usize,
+    pub c_idx: usize,
+    pub m_idx: usize,
+    pub s_idx: usize,
+}
+
+impl DisaggConfig {
+    pub fn new(h_idx: usize, c_idx: usize, m_idx: usize, s_idx: usize) -> Self {
+        Self { h_idx, c_idx, m_idx, s_idx }
+    }
+
+    /// Index distance per axis `(dH, dC, dM, dS)`.
+    pub fn distance(&self, o: &DisaggConfig) -> (usize, usize, usize, usize) {
+        (
+            self.h_idx.abs_diff(o.h_idx),
+            self.c_idx.abs_diff(o.c_idx),
+            self.m_idx.abs_diff(o.m_idx),
+            self.s_idx.abs_diff(o.s_idx),
+        )
+    }
+}
+
+/// The 4-D plane: H values plus three resource axes.
+#[derive(Debug, Clone)]
+pub struct DisaggPlane {
+    h_values: Vec<u32>,
+    /// compute: value = cpu cores; bandwidth rides along at
+    /// `bw_per_cpu` Gbps per core (NICs scale with instance compute).
+    compute: Axis,
+    memory: Axis,
+    storage: Axis,
+    bw_per_cpu: f32,
+}
+
+impl DisaggPlane {
+    pub fn new(h_values: Vec<u32>, compute: Axis, memory: Axis, storage: Axis, bw_per_cpu: f32) -> Self {
+        assert!(!h_values.is_empty());
+        assert!(!compute.is_empty() && !memory.is_empty() && !storage.is_empty());
+        Self { h_values, compute, memory, storage, bw_per_cpu }
+    }
+
+    /// Derive the disaggregated plane from the paper's coupled tiers:
+    /// each axis gets the tier ladder's values, with the bundle price
+    /// split 50% compute / 30% memory / 20% storage.
+    pub fn from_config(cfg: &ModelConfig) -> Self {
+        let tiers = &cfg.plane.tiers;
+        let compute = Axis {
+            name: "compute",
+            steps: tiers.iter().map(|t| (t.cpu, 0.5 * t.cost)).collect(),
+        };
+        let memory = Axis {
+            name: "memory",
+            steps: tiers.iter().map(|t| (t.ram, 0.3 * t.cost)).collect(),
+        };
+        let storage = Axis {
+            name: "storage",
+            steps: tiers.iter().map(|t| (t.iops, 0.2 * t.cost)).collect(),
+        };
+        let bw_per_cpu = tiers[0].bandwidth / tiers[0].cpu;
+        Self::new(cfg.plane.h_values.clone(), compute, memory, storage, bw_per_cpu)
+    }
+
+    pub fn n_h(&self) -> usize {
+        self.h_values.len()
+    }
+
+    pub fn axes(&self) -> (&Axis, &Axis, &Axis) {
+        (&self.compute, &self.memory, &self.storage)
+    }
+
+    /// Total number of configurations.
+    pub fn len(&self) -> usize {
+        self.n_h() * self.compute.len() * self.memory.len() * self.storage.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    pub fn contains(&self, c: &DisaggConfig) -> bool {
+        c.h_idx < self.n_h()
+            && c.c_idx < self.compute.len()
+            && c.m_idx < self.memory.len()
+            && c.s_idx < self.storage.len()
+    }
+
+    pub fn h_value(&self, c: &DisaggConfig) -> u32 {
+        self.h_values[c.h_idx]
+    }
+
+    /// Synthesize the virtual tier for a combo.
+    pub fn tier_for(&self, c: &DisaggConfig) -> Tier {
+        let (cpu, c_cost) = self.compute.steps[c.c_idx];
+        let (ram, m_cost) = self.memory.steps[c.m_idx];
+        let (iops, s_cost) = self.storage.steps[c.s_idx];
+        Tier {
+            name: format!("c{}m{}s{}", c.c_idx, c.m_idx, c.s_idx),
+            cpu,
+            ram,
+            bandwidth: cpu * self.bw_per_cpu,
+            iops,
+            cost: c_cost + m_cost + s_cost,
+        }
+    }
+
+    /// The "matched" combo corresponding to coupled tier index `v`.
+    pub fn matched(&self, h_idx: usize, v_idx: usize) -> DisaggConfig {
+        DisaggConfig::new(h_idx, v_idx, v_idx, v_idx)
+    }
+
+    /// Iterate all configurations in (H, C, M, S)-major order.
+    pub fn iter(&self) -> impl Iterator<Item = DisaggConfig> + '_ {
+        let (nc, nm, ns) = (self.compute.len(), self.memory.len(), self.storage.len());
+        (0..self.n_h()).flat_map(move |h| {
+            (0..nc).flat_map(move |c| {
+                (0..nm).flat_map(move |m| (0..ns).map(move |s| DisaggConfig::new(h, c, m, s)))
+            })
+        })
+    }
+
+    /// Hyper-local neighborhood: every in-bounds ±1 combination on the
+    /// four axes (<= 81 candidates, self included), in iteration order.
+    pub fn neighbors(&self, cur: &DisaggConfig) -> Vec<DisaggConfig> {
+        let mut out = Vec::with_capacity(81);
+        for dh in -1i32..=1 {
+            let h = cur.h_idx as i32 + dh;
+            if h < 0 || h >= self.n_h() as i32 {
+                continue;
+            }
+            for dc in -1i32..=1 {
+                let c = cur.c_idx as i32 + dc;
+                if c < 0 || c >= self.compute.len() as i32 {
+                    continue;
+                }
+                for dm in -1i32..=1 {
+                    let m = cur.m_idx as i32 + dm;
+                    if m < 0 || m >= self.memory.len() as i32 {
+                        continue;
+                    }
+                    for ds in -1i32..=1 {
+                        let s = cur.s_idx as i32 + ds;
+                        if s < 0 || s >= self.storage.len() as i32 {
+                            continue;
+                        }
+                        out.push(DisaggConfig::new(
+                            h as usize, c as usize, m as usize, s as usize,
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// One-step scale-up on every axis (fallback).
+    pub fn fallback_up(&self, cur: &DisaggConfig) -> DisaggConfig {
+        DisaggConfig::new(
+            (cur.h_idx + 1).min(self.n_h() - 1),
+            (cur.c_idx + 1).min(self.compute.len() - 1),
+            (cur.m_idx + 1).min(self.memory.len() - 1),
+            (cur.s_idx + 1).min(self.storage.len() - 1),
+        )
+    }
+}
+
+/// Surfaces + Algorithm 1 over the 4-D plane.
+pub struct DisaggModel {
+    plane: DisaggPlane,
+    consts: SurfaceConfig,
+    write_ratio: f32,
+    sla: SlaSpec,
+    /// Rebalance penalty weights: H heaviest (data movement), then the
+    /// resource axes (rolling restarts).
+    pub reb: [f32; 4],
+}
+
+impl DisaggModel {
+    pub fn from_config(cfg: &ModelConfig) -> Self {
+        Self {
+            plane: DisaggPlane::from_config(cfg),
+            consts: cfg.surfaces,
+            write_ratio: cfg.write_ratio(),
+            sla: SlaSpec::from_config(cfg),
+            reb: [cfg.policy.reb_h, cfg.policy.reb_v, cfg.policy.reb_v, cfg.policy.reb_v],
+        }
+    }
+
+    pub fn plane(&self) -> &DisaggPlane {
+        &self.plane
+    }
+
+    fn coord_latency(&self, h: u32) -> f32 {
+        let s = &self.consts;
+        let log_h = (h as f32).ln();
+        s.eta * log_h + s.mu * (s.theta * log_h).exp()
+    }
+
+    /// All five §III surfaces at a 4-D configuration.
+    pub fn evaluate(&self, c: &DisaggConfig, lambda_req: f32) -> crate::surfaces::SurfacePoint {
+        let t = self.plane.tier_for(c);
+        let h = self.plane.h_value(c);
+        let s = &self.consts;
+        let l_node = s.a / t.cpu + s.b / t.ram + s.c / t.bandwidth + s.d / t.iops_k();
+        let l_coord = self.coord_latency(h);
+        let latency = l_node + l_coord;
+        let phi = 1.0 / (1.0 + s.omega * (h as f32).ln());
+        let throughput = h as f32 * s.kappa * t.min_resource() * phi;
+        let cost = h as f32 * t.cost;
+        let lambda_w = lambda_req * self.write_ratio;
+        let coordination = s.rho * l_coord * lambda_w / throughput;
+        let objective =
+            s.alpha * latency + s.beta * cost + s.gamma * coordination - s.delta * throughput;
+        crate::surfaces::SurfacePoint { latency, throughput, cost, coordination, objective }
+    }
+
+    pub fn feasible(&self, c: &DisaggConfig, lambda_req: f32) -> bool {
+        let p = self.evaluate(c, lambda_req);
+        self.sla.feasible(p.latency, p.throughput, lambda_req)
+    }
+
+    fn penalty(&self, from: &DisaggConfig, to: &DisaggConfig) -> f32 {
+        let (dh, dc, dm, ds) = from.distance(to);
+        self.reb[0] * dh as f32
+            + self.reb[1] * dc as f32
+            + self.reb[2] * dm as f32
+            + self.reb[3] * ds as f32
+    }
+
+    /// Algorithm 1 generalized to the 4-D neighborhood.
+    pub fn decide(&self, cur: &DisaggConfig, lambda_req: f32) -> (DisaggConfig, bool) {
+        let mut best: Option<(DisaggConfig, f32)> = None;
+        for cand in self.plane.neighbors(cur) {
+            if !self.feasible(&cand, lambda_req) {
+                continue;
+            }
+            let score = self.evaluate(&cand, lambda_req).objective + self.penalty(cur, &cand);
+            if best.map_or(true, |(_, b)| score < b) {
+                best = Some((cand, score));
+            }
+        }
+        match best {
+            Some((c, _)) => (c, false),
+            None => (self.plane.fallback_up(cur), true),
+        }
+    }
+
+    /// Serve-then-move simulation over a trace (the 4-D twin of
+    /// [`crate::simulator::Simulator`]); returns `(records, summary,
+    /// fallbacks)` with the 2-D record type (config projected to
+    /// `(h_idx, c_idx)` for trajectory plots).
+    pub fn simulate(&self, trace: &Trace, start: DisaggConfig) -> (Vec<StepRecord>, Summary, usize) {
+        assert!(self.plane.contains(&start));
+        let mut recorder = Recorder::with_capacity(trace.len());
+        let mut fallbacks = 0usize;
+        let mut cur = start;
+        for (t, w) in trace.points.iter().enumerate() {
+            let p = self.evaluate(&cur, w.lambda_req);
+            let l_eff =
+                queueing::effective_latency(p.latency, p.throughput, w.lambda_req, self.consts.u_max);
+            let s = &self.consts;
+            let obj_eff =
+                s.alpha * l_eff + s.beta * p.cost + s.gamma * p.coordination - s.delta * p.throughput;
+            recorder.push(StepRecord {
+                step: t,
+                config: crate::plane::Configuration::new(cur.h_idx, cur.c_idx),
+                lambda_req: w.lambda_req,
+                latency: l_eff,
+                latency_raw: p.latency,
+                throughput: p.throughput,
+                cost: p.cost,
+                objective: obj_eff,
+                violation: self.sla.audit(p.latency, p.throughput, w.lambda_req),
+            });
+            let (next, fb) = self.decide(&cur, w.lambda_req);
+            if fb {
+                fallbacks += 1;
+            }
+            cur = next;
+        }
+        let summary = recorder.summary();
+        (recorder.records().to_vec(), summary, fallbacks)
+    }
+}
+
+/// Wide grid width shared with the `surfaces_wide` artifact
+/// (`python/compile/defaults.py::WIDE`): 4x4x4 (C, M, S) combos.
+pub const WIDE: usize = 64;
+
+/// Flatten the 4-D plane into the wide-kernel ABI:
+/// `(hs[GRID], tiers[WIDE*5], mask[GRID*WIDE], combos[WIDE])` where
+/// column `j` holds combo `(c, m, s) = (j/16, (j/4)%4, j%4)`.
+pub fn wide_grid_arrays(plane: &DisaggPlane) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<DisaggConfig>) {
+    let g = crate::GRID;
+    let (nc, nm, ns) = {
+        let (c, m, s) = plane.axes();
+        (c.len(), m.len(), s.len())
+    };
+    assert_eq!(nc * nm * ns, WIDE, "wide ABI expects a 4x4x4 combo space");
+    let mut hs = vec![1.0f32; g];
+    for (i, h) in (0..plane.n_h()).map(|i| (i, plane.h_values[i])) {
+        hs[i] = h as f32;
+    }
+    let mut tiers = vec![1.0f32; WIDE * 5];
+    let mut combos = Vec::with_capacity(WIDE);
+    for j in 0..WIDE {
+        let cfg = DisaggConfig::new(0, j / (nm * ns), (j / ns) % nm, j % ns);
+        let t = plane.tier_for(&cfg);
+        tiers[j * 5] = t.cpu;
+        tiers[j * 5 + 1] = t.ram;
+        tiers[j * 5 + 2] = t.bandwidth;
+        tiers[j * 5 + 3] = t.iops_k();
+        tiers[j * 5 + 4] = t.cost;
+        combos.push(cfg);
+    }
+    let mut mask = vec![0.0f32; g * WIDE];
+    for i in 0..plane.n_h() {
+        for j in 0..WIDE {
+            mask[i * WIDE + j] = 1.0;
+        }
+    }
+    (hs, tiers, mask, combos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simulator::{PolicyKind, Simulator};
+    use crate::workload::TraceBuilder;
+
+    fn model() -> DisaggModel {
+        DisaggModel::from_config(&ModelConfig::default_paper())
+    }
+
+    #[test]
+    fn plane_has_256_configs() {
+        let m = model();
+        assert_eq!(m.plane().len(), 4 * 4 * 4 * 4);
+        assert_eq!(m.plane().iter().count(), 256);
+    }
+
+    #[test]
+    fn matched_combo_equals_coupled_tier() {
+        // the matched combo reproduces the coupled tier's resources and
+        // total cost exactly (cost split sums back to the bundle price)
+        let cfg = ModelConfig::default_paper();
+        let m = model();
+        for v in 0..4 {
+            let t2 = &cfg.plane.tiers[v];
+            let t4 = m.plane().tier_for(&m.plane().matched(0, v));
+            assert_eq!(t4.cpu, t2.cpu);
+            assert_eq!(t4.ram, t2.ram);
+            assert_eq!(t4.iops, t2.iops);
+            assert!((t4.bandwidth - t2.bandwidth).abs() < 1e-5);
+            assert!((t4.cost - t2.cost).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matched_surfaces_equal_coupled_surfaces() {
+        let cfg = ModelConfig::default_paper();
+        let coupled = crate::surfaces::SurfaceModel::from_config(&cfg);
+        let m = model();
+        for h in 0..4 {
+            for v in 0..4 {
+                let p2 = coupled.evaluate(&crate::plane::Configuration::new(h, v), 9000.0);
+                let p4 = m.evaluate(&m.plane().matched(h, v), 9000.0);
+                assert!((p2.latency - p4.latency).abs() < 1e-4);
+                assert!((p2.throughput - p4.throughput).abs() < 0.5);
+                assert!((p2.cost - p4.cost).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn interior_neighborhood_is_81() {
+        let m = model();
+        let n = m.plane().neighbors(&DisaggConfig::new(1, 1, 1, 1));
+        assert_eq!(n.len(), 81);
+        let corner = m.plane().neighbors(&DisaggConfig::new(0, 0, 0, 0));
+        assert_eq!(corner.len(), 16); // 2^4
+    }
+
+    #[test]
+    fn decisions_feasible_or_fallback() {
+        let m = model();
+        for lam in [1000.0, 6000.0, 16000.0, 1e9] {
+            let (next, fb) = m.decide(&DisaggConfig::new(1, 1, 1, 1), lam);
+            assert!(m.plane().contains(&next));
+            if !fb {
+                assert!(m.feasible(&next, lam), "lam={lam}");
+            }
+        }
+    }
+
+    #[test]
+    fn disaggregation_never_costs_more_than_coupled() {
+        // the coupled ladder is a subspace: per-step chosen cost under
+        // the same trace must satisfy sum(disagg) <= sum(coupled) + eps
+        let cfg = ModelConfig::default_paper();
+        let trace = TraceBuilder::paper(&cfg);
+        let coupled = Simulator::new(&cfg).run(PolicyKind::Diagonal, &trace);
+        let m = model();
+        let start = m.plane().matched(cfg.policy.start[0], cfg.policy.start[1]);
+        let (_, summary, _) = m.simulate(&trace, start);
+        assert!(
+            summary.avg_cost <= coupled.summary.avg_cost + 1e-3,
+            "disagg {} vs coupled {}",
+            summary.avg_cost,
+            coupled.summary.avg_cost
+        );
+        // and it must not pay for that with SLA violations
+        assert!(summary.violations <= coupled.summary.violations + 1);
+    }
+
+    #[test]
+    fn disagg_exploits_the_bottleneck_structure() {
+        // under throughput pressure only the min-resource matters; the
+        // 4-D policy should avoid maxing non-bottleneck axes
+        let m = model();
+        let (_, summary, _) = m.simulate(
+            &TraceBuilder::paper(&ModelConfig::default_paper()),
+            m.plane().matched(1, 1),
+        );
+        assert!(summary.steps == 50);
+        assert!(summary.violations <= 5);
+    }
+
+    #[test]
+    fn simulate_is_deterministic() {
+        let cfg = ModelConfig::default_paper();
+        let trace = TraceBuilder::paper(&cfg);
+        let m = model();
+        let a = m.simulate(&trace, m.plane().matched(1, 1));
+        let b = m.simulate(&trace, m.plane().matched(1, 1));
+        assert_eq!(a.0, b.0);
+    }
+}

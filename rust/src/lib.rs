@@ -1,0 +1,73 @@
+//! # diagonal-scale
+//!
+//! A production-shaped reproduction of *"Diagonal Scaling: A
+//! Multi-Dimensional Resource Model and Optimization Framework for
+//! Distributed Databases"* (CS.DC 2025).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * [`plane`] — the Scaling Plane: configurations `(H, V)` over node
+//!   counts and vertical resource tiers (paper §III.A).
+//! * [`surfaces`] — the five analytical surfaces (latency, throughput,
+//!   cost, coordination cost, objective) in native rust (paper §III.B–F),
+//!   plus the §VIII utilization-sensitive queueing extension.
+//! * [`sla`] — SLA feasibility and violation accounting (paper §IV.C).
+//! * [`policy`] — [`policy::DiagonalScale`] (Algorithm 1) and the
+//!   horizontal-only / vertical-only / threshold / oracle / lookahead
+//!   baselines and extensions.
+//! * [`workload`] — the paper's 50-step trace plus synthetic families.
+//! * [`simulator`] — the Phase-1 analytical simulator (paper §V).
+//! * [`cluster`] — a discrete-event distributed-database substrate
+//!   (sharding, replication, rebalance, queueing) standing in for the
+//!   real deployments the paper defers to future work (§VII).
+//! * [`coordinator`] — the autoscaler control loop that drives the
+//!   cluster substrate with any policy.
+//! * [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py` and executes the
+//!   Pallas-backed surface kernels on the decision path.
+//! * [`calibrate`] — online surface calibration from observations
+//!   (paper §VIII).
+//! * [`metrics`] / [`report`] — time-series recording and the Table I /
+//!   Figure 1–8 emitters.
+//!
+//! Python never runs at request time: `make artifacts` lowers the
+//! JAX/Pallas model once, and this crate is self-contained afterwards.
+
+pub mod benchkit;
+pub mod calibrate;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod disagg;
+pub mod forecast;
+pub mod metrics;
+pub mod plane;
+pub mod policy;
+pub mod report;
+pub mod runtime;
+pub mod simulator;
+pub mod sla;
+pub mod surfaces;
+pub mod testkit;
+pub mod util;
+pub mod workload;
+
+pub use config::ModelConfig;
+pub use plane::{Configuration, ScalingPlane, Tier};
+pub use policy::{Decision, Policy};
+pub use simulator::{PolicyKind, Simulator};
+pub use surfaces::SurfaceModel;
+
+/// Score assigned to SLA-infeasible candidates (shared with the python
+/// kernels; see `python/compile/defaults.py::INFEASIBLE`).
+pub const INFEASIBLE: f32 = 1.0e30;
+
+/// Padded grid edge shared with the kernels (`defaults.GRID`).
+pub const GRID: usize = 8;
+
+/// Packed parameter-vector length shared with the kernels.
+pub const PARAMS_LEN: usize = 32;
+
+/// Per-step record length emitted by the `policy_trace` artifacts.
+pub const REC_LEN: usize = 8;

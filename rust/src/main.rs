@@ -1,0 +1,276 @@
+//! `diagonal-scale` — the leader binary: CLI over the Phase-1 analytical
+//! simulator, the Phase-2 cluster coordinator, the surface/heatmap
+//! reports, and the PJRT runtime.
+//!
+//! ```text
+//! diagonal-scale simulate [--extra P]...   # Table I over the paper trace
+//! diagonal-scale surfaces [--lambda N]     # ASCII heatmaps (figs 1/2/4)
+//! diagonal-scale figures [--out DIR]       # all paper figure CSVs
+//! diagonal-scale cluster [--policy P] [--seed N]   # Phase-2 DES run
+//! diagonal-scale trace-hlo [--artifacts DIR]       # Table I via PJRT
+//! diagonal-scale daemon [--steps N] [--seed N]     # threaded autoscaler
+//! ```
+//!
+//! Global flag: `--config <path.toml>` (defaults to the bundled paper
+//! config). The CLI is hand-rolled: the offline vendor set has no clap.
+
+use std::sync::mpsc;
+
+use anyhow::{anyhow, bail, Result};
+
+use diagonal_scale::cluster::{ClusterParams, ClusterSim};
+use diagonal_scale::config::{ModelConfig, MoveFlags};
+use diagonal_scale::coordinator::{self, Backend, Coordinator};
+use diagonal_scale::policy::{DiagonalScale, Lookahead, Oracle, Policy, StaticPolicy, Threshold};
+use diagonal_scale::report::{self, Surface};
+use diagonal_scale::runtime::{Engine, SurfaceEngine};
+use diagonal_scale::simulator::{PolicyKind, Simulator};
+use diagonal_scale::surfaces::SurfaceModel;
+use diagonal_scale::workload::TraceBuilder;
+
+const USAGE: &str = "\
+diagonal-scale — Diagonal Scaling reproduction (paper CS.DC 2025)
+
+USAGE: diagonal-scale [--config <file.toml>] <COMMAND> [flags]
+
+COMMANDS:
+  simulate    Phase-1 analytical simulation: Table I over the paper trace
+                [--extra <policy>]... add threshold|oracle|lookahead|static
+  surfaces    ASCII heatmaps of the analytical surfaces (figures 1/2/4)
+                [--lambda <f32>] demand level (default 10000)
+  figures     Emit Table I + every figure CSV
+                [--out <dir>] output directory (default out/)
+  cluster     Drive the Phase-2 DES cluster with the coordinator
+                [--policy <p>] diagonal|horizontal|vertical|threshold|
+                               oracle|lookahead|static (default diagonal)
+                [--seed <u64>] (default 42)
+  trace-hlo   Run Table I through the AOT-compiled PJRT policy_trace
+                [--artifacts <dir>] (default artifacts/)
+  daemon      Threaded autoscaler daemon on a synthetic demand feed
+                [--steps <n>] (default 100)  [--seed <u64>] (default 42)
+";
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got `{}`", argv[i]))?;
+            let v = argv
+                .get(i + 1)
+                .ok_or_else(|| anyhow!("flag --{k} needs a value"))?;
+            flags.push((k.to_string(), v.clone()));
+            i += 2;
+        }
+        Ok(Self { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("invalid value for --{key}: `{v}`")),
+        }
+    }
+}
+
+fn policy_kind(name: &str) -> Result<PolicyKind> {
+    Ok(match name {
+        "diagonal" => PolicyKind::Diagonal,
+        "horizontal" => PolicyKind::HorizontalOnly,
+        "vertical" => PolicyKind::VerticalOnly,
+        "threshold" => PolicyKind::Threshold,
+        "oracle" => PolicyKind::Oracle,
+        "lookahead" => PolicyKind::Lookahead(3),
+        "static" => PolicyKind::Static,
+        other => bail!("unknown policy `{other}`"),
+    })
+}
+
+fn policy_send(name: &str) -> Result<Box<dyn Policy + Send>> {
+    Ok(match name {
+        "diagonal" => Box::new(DiagonalScale::diagonal()),
+        "horizontal" => Box::new(DiagonalScale::horizontal_only()),
+        "vertical" => Box::new(DiagonalScale::vertical_only()),
+        "threshold" => Box::new(Threshold::default()),
+        "oracle" => Box::new(Oracle),
+        "lookahead" => Box::new(Lookahead::new(MoveFlags::DIAGONAL, 3)),
+        "static" => Box::new(StaticPolicy),
+        other => bail!("unknown policy `{other}`"),
+    })
+}
+
+fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+
+    // global --config may appear before the subcommand
+    let mut config_path: Option<String> = None;
+    if argv.first().map(String::as_str) == Some("--config") {
+        if argv.len() < 2 {
+            bail!("--config needs a value");
+        }
+        config_path = Some(argv[1].clone());
+        argv.drain(..2);
+    }
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    if let Some(c) = args.get("config") {
+        config_path = Some(c.to_string());
+    }
+    let cfg = match &config_path {
+        Some(p) => ModelConfig::from_path(p)?,
+        None => ModelConfig::default_paper(),
+    };
+
+    match cmd.as_str() {
+        "simulate" => {
+            let sim = Simulator::new(&cfg);
+            let trace = TraceBuilder::paper(&cfg);
+            let mut runs = sim.run_paper_set(&trace);
+            for extra in args.get_all("extra") {
+                runs.push(sim.run(policy_kind(extra)?, &trace));
+            }
+            let rows: Vec<_> = runs.iter().map(|r| (r.policy.clone(), r.summary)).collect();
+            println!("{}", report::table1(&rows));
+        }
+        "surfaces" => {
+            let lambda: f32 = args.parse_num("lambda", 10000.0)?;
+            let model = SurfaceModel::from_config(&cfg);
+            for s in [Surface::Cost, Surface::Latency, Surface::Throughput, Surface::Objective] {
+                println!("{}", report::heatmap_ascii(&model, s, lambda));
+            }
+        }
+        "figures" => {
+            let out = args.get("out").unwrap_or("out");
+            let sim = Simulator::new(&cfg);
+            let trace = TraceBuilder::paper(&cfg);
+            let runs = sim.run_paper_set(&trace);
+            let model = SurfaceModel::from_config(&cfg);
+            for f in report::write_all_figures(out, &model, &runs, 10000.0)? {
+                println!("wrote {f}");
+            }
+        }
+        "cluster" => {
+            let seed: u64 = args.parse_num("seed", 42)?;
+            let policy = policy_send(args.get("policy").unwrap_or("diagonal"))?;
+            let cluster = ClusterSim::new(&cfg, ClusterParams::default(), seed);
+            let mut coord = Coordinator::new(&cfg, cluster, Backend::Native(policy));
+            let trace = TraceBuilder::paper(&cfg);
+            let reports = coord.run_trace(&trace)?;
+            let s = coordinator::summarize(&reports);
+            println!(
+                "cluster run: steps={} violations={} avg_lat={:.4}s p99={:.4}s completed={:.1}% moved_shards={} reconfigs={}",
+                s.steps,
+                s.violations,
+                s.avg_latency,
+                s.avg_p99,
+                100.0 * s.completed_ratio,
+                s.total_moved_shards,
+                s.reconfigurations
+            );
+        }
+        "trace-hlo" => {
+            let artifacts = args.get("artifacts").unwrap_or("artifacts");
+            let engine = SurfaceEngine::new(Engine::load(artifacts)?, &cfg)?;
+            engine.check_abi()?;
+            let trace = TraceBuilder::paper(&cfg);
+            let start = (cfg.policy.start[0], cfg.policy.start[1]);
+            println!(
+                "platform: {}  artifacts: {artifacts}",
+                engine.engine().platform_name()
+            );
+            for (name, moves) in [
+                ("DiagonalScale", MoveFlags::DIAGONAL),
+                ("Horizontal-only", MoveFlags::HORIZONTAL_ONLY),
+                ("Vertical-only", MoveFlags::VERTICAL_ONLY),
+            ] {
+                let recs = engine.policy_trace(&trace, moves, start)?;
+                let n = recs.len() as f64;
+                let avg_lat: f64 = recs.iter().map(|r| r.latency as f64).sum::<f64>() / n;
+                let avg_cost: f64 = recs.iter().map(|r| r.cost as f64).sum::<f64>() / n;
+                let avg_obj: f64 = recs.iter().map(|r| r.objective as f64).sum::<f64>() / n;
+                let viol = recs
+                    .iter()
+                    .filter(|r| r.latency_violation || r.throughput_violation)
+                    .count();
+                println!(
+                    "{name:<18} lat={avg_lat:7.2} cost={avg_cost:6.3} obj={avg_obj:8.2} viol={viol}"
+                );
+            }
+        }
+        "daemon" => {
+            let steps: usize = args.parse_num("steps", 100)?;
+            let seed: u64 = args.parse_num("seed", 42)?;
+            let (dtx, drx) = mpsc::channel();
+            let (rtx, rrx) = mpsc::channel();
+            // Construct the coordinator inside the thread: the Backend
+            // enum can hold PJRT handles, which are not Send.
+            let cfg_daemon = cfg.clone();
+            let handle = std::thread::spawn(move || {
+                let cluster = ClusterSim::new(&cfg_daemon, ClusterParams::default(), seed);
+                let coord = Coordinator::new(
+                    &cfg_daemon,
+                    cluster,
+                    Backend::Native(Box::new(DiagonalScale::diagonal())),
+                );
+                coord.run_daemon(drx, rtx)
+            });
+            let builder = TraceBuilder::from_config(&cfg);
+            let trace = builder.sine(60.0, 160.0, 20, steps);
+            let feeder = std::thread::spawn(move || {
+                for p in trace.points {
+                    if dtx.send(p).is_err() {
+                        break;
+                    }
+                }
+            });
+            while let Ok(r) = rrx.recv() {
+                println!(
+                    "step {:>3}  demand {:>8.0}  cfg ({},{})  p99 {:.4}s  viol={}",
+                    r.step,
+                    r.demand,
+                    r.served_config.h_idx,
+                    r.served_config.v_idx,
+                    r.metrics.p99_latency,
+                    r.violation
+                );
+            }
+            feeder.join().expect("feeder thread");
+            let summary = handle.join().expect("daemon thread")?;
+            println!("daemon summary: {summary:?}");
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprint!("{USAGE}");
+            bail!("unknown command `{other}`");
+        }
+    }
+    Ok(())
+}

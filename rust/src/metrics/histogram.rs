@@ -1,0 +1,230 @@
+//! Log-bucketed latency histogram (HdrHistogram-style, fixed memory):
+//! the cluster substrate records every sampled op's latency here, so
+//! percentile queries (p50/p99/p999) are O(buckets) with bounded
+//! relative error instead of requiring a sort of all samples.
+
+/// Buckets spaced at `2^(k/SUBDIV)` between `min_value` and
+/// `min_value * 2^(BUCKETS/SUBDIV)` — ≈ 9% relative resolution.
+const SUBDIV: usize = 8;
+const BUCKETS: usize = 256;
+
+/// Fixed-size log histogram over positive values.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    min_value: f64,
+    counts: [u64; BUCKETS],
+    underflow: u64,
+    overflow: u64,
+    total: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl LatencyHistogram {
+    /// `min_value` is the resolution floor (values below land in the
+    /// underflow bucket and report as `min_value`).
+    pub fn new(min_value: f64) -> Self {
+        assert!(min_value > 0.0);
+        Self {
+            min_value,
+            counts: [0; BUCKETS],
+            underflow: 0,
+            overflow: 0,
+            total: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    fn bucket_of(&self, v: f64) -> Option<usize> {
+        if v < self.min_value {
+            return None;
+        }
+        let k = ((v / self.min_value).log2() * SUBDIV as f64).floor();
+        if k < 0.0 {
+            None
+        } else {
+            Some(k as usize)
+        }
+    }
+
+    /// Lower edge of bucket `k`.
+    fn bucket_value(&self, k: usize) -> f64 {
+        self.min_value * 2f64.powf(k as f64 / SUBDIV as f64)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.total += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+        match self.bucket_of(v) {
+            None => self.underflow += 1,
+            Some(k) if k < BUCKETS => self.counts[k] += 1,
+            Some(_) => self.overflow += 1,
+        }
+    }
+
+    pub fn len(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Value at quantile `q` in [0, 1] (bucket lower edge — within one
+    /// bucket width, ≈ 9%, of the true value).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = self.underflow;
+        if seen >= target {
+            return self.min_value;
+        }
+        for (k, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.bucket_value(k);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> f64 {
+        self.quantile(0.999)
+    }
+
+    /// Merge another histogram (same `min_value`) into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        assert_eq!(self.min_value, other.min_value, "incompatible histograms");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.overflow += other.overflow;
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::new(self.min_value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::XorShift64;
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new(1e-4);
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn single_value_quantiles() {
+        let mut h = LatencyHistogram::new(1e-4);
+        h.record(0.01);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!((v - 0.01).abs() / 0.01 < 0.1, "q={q} v={v}");
+        }
+    }
+
+    #[test]
+    fn quantiles_within_bucket_resolution() {
+        let mut h = LatencyHistogram::new(1e-5);
+        let mut rng = XorShift64::new(7);
+        let mut values: Vec<f64> = (0..20_000).map(|_| rng.exp(0.002)).collect();
+        for &v in &values {
+            h.record(v);
+        }
+        values.sort_by(f64::total_cmp);
+        for q in [0.5, 0.9, 0.99] {
+            let exact = values[((q * values.len() as f64) as usize).min(values.len() - 1)];
+            let approx = h.quantile(q);
+            assert!(
+                (approx - exact).abs() / exact < 0.15,
+                "q={q}: approx {approx} vs exact {exact}"
+            );
+        }
+        assert!((h.mean() - 0.002).abs() < 0.0002);
+    }
+
+    #[test]
+    fn monotone_quantiles() {
+        let mut h = LatencyHistogram::new(1e-4);
+        let mut rng = XorShift64::new(3);
+        for _ in 0..5000 {
+            h.record(rng.exp(0.01));
+        }
+        assert!(h.p50() <= h.p99());
+        assert!(h.p99() <= h.p999());
+        assert!(h.p999() <= h.max());
+    }
+
+    #[test]
+    fn underflow_and_overflow_counted() {
+        let mut h = LatencyHistogram::new(1.0);
+        h.record(1e-9); // underflow
+        h.record(1e12); // overflow
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.quantile(0.25), 1.0); // underflow reports the floor
+        assert!(h.quantile(1.0) >= 1e12 * 0.9);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = LatencyHistogram::new(1e-4);
+        let mut b = LatencyHistogram::new(1e-4);
+        let mut both = LatencyHistogram::new(1e-4);
+        let mut rng = XorShift64::new(5);
+        for i in 0..2000 {
+            let v = rng.exp(0.005);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), both.len());
+        assert_eq!(a.p99(), both.p99());
+        assert!((a.mean() - both.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn merge_rejects_incompatible() {
+        let mut a = LatencyHistogram::new(1e-4);
+        let b = LatencyHistogram::new(1e-3);
+        a.merge(&b);
+    }
+}

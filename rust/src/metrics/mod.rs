@@ -1,0 +1,157 @@
+//! Time-series recording and summary statistics (paper §V.E: average
+//! latency, max latency, average/total cost, average objective, SLA
+//! violations decomposed into latency and throughput violations), plus
+//! a log-bucketed percentile histogram for the cluster substrate.
+
+mod histogram;
+
+pub use histogram::LatencyHistogram;
+
+use crate::plane::Configuration;
+use crate::sla::{Violation, ViolationCounter};
+
+/// Everything measured for one served simulation step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepRecord {
+    pub step: usize,
+    pub config: Configuration,
+    /// Node count and tier index are implied by `config`; the demand:
+    pub lambda_req: f32,
+    /// Measured (utilization-corrected) latency (paper VIII model).
+    pub latency: f32,
+    /// Raw analytical latency (what the planner/SLA bound sees).
+    pub latency_raw: f32,
+    pub throughput: f32,
+    pub cost: f32,
+    /// Reported objective (uses measured latency).
+    pub objective: f32,
+    pub violation: Violation,
+}
+
+/// Aggregate over a whole run — one Table I row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub steps: usize,
+    pub avg_latency: f64,
+    pub max_latency: f64,
+    pub avg_throughput: f64,
+    pub avg_required: f64,
+    pub avg_cost: f64,
+    pub total_cost: f64,
+    pub avg_objective: f64,
+    pub violations: usize,
+    pub latency_violations: usize,
+    pub throughput_violations: usize,
+}
+
+/// Accumulates [`StepRecord`]s and produces a [`Summary`].
+#[derive(Debug, Clone, Default)]
+pub struct Recorder {
+    records: Vec<StepRecord>,
+    counter: ViolationCounter,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self { records: Vec::with_capacity(n), counter: ViolationCounter::default() }
+    }
+
+    pub fn push(&mut self, rec: StepRecord) {
+        self.counter.record(rec.violation);
+        self.records.push(rec);
+    }
+
+    pub fn records(&self) -> &[StepRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn summary(&self) -> Summary {
+        let n = self.records.len();
+        let nf = n.max(1) as f64;
+        let sum = |f: fn(&StepRecord) -> f64| -> f64 {
+            self.records.iter().map(f).sum::<f64>()
+        };
+        Summary {
+            steps: n,
+            avg_latency: sum(|r| r.latency as f64) / nf,
+            max_latency: self
+                .records
+                .iter()
+                .map(|r| r.latency as f64)
+                .fold(0.0, f64::max),
+            avg_throughput: sum(|r| r.throughput as f64) / nf,
+            avg_required: sum(|r| r.lambda_req as f64) / nf,
+            avg_cost: sum(|r| r.cost as f64) / nf,
+            total_cost: sum(|r| r.cost as f64),
+            avg_objective: sum(|r| r.objective as f64) / nf,
+            violations: self.counter.violated_steps,
+            latency_violations: self.counter.latency_violations,
+            throughput_violations: self.counter.throughput_violations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(step: usize, lat: f32, cost: f32, viol: bool) -> StepRecord {
+        StepRecord {
+            step,
+            config: Configuration::new(1, 1),
+            lambda_req: 1000.0,
+            latency: lat,
+            latency_raw: lat,
+            throughput: 2000.0,
+            cost,
+            objective: 10.0 * lat,
+            violation: Violation { latency: false, throughput: viol },
+        }
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = Recorder::new().summary();
+        assert_eq!(s.steps, 0);
+        assert_eq!(s.avg_latency, 0.0);
+        assert_eq!(s.violations, 0);
+    }
+
+    #[test]
+    fn averages_and_totals() {
+        let mut r = Recorder::new();
+        r.push(rec(0, 2.0, 1.0, false));
+        r.push(rec(1, 4.0, 3.0, true));
+        let s = r.summary();
+        assert_eq!(s.steps, 2);
+        assert!((s.avg_latency - 3.0).abs() < 1e-9);
+        assert!((s.max_latency - 4.0).abs() < 1e-9);
+        assert!((s.avg_cost - 2.0).abs() < 1e-9);
+        assert!((s.total_cost - 4.0).abs() < 1e-9);
+        assert_eq!(s.violations, 1);
+        assert_eq!(s.throughput_violations, 1);
+        assert_eq!(s.latency_violations, 0);
+    }
+
+    #[test]
+    fn total_cost_is_avg_times_steps() {
+        let mut r = Recorder::new();
+        for i in 0..50 {
+            r.push(rec(i, 1.0, 1.6, false));
+        }
+        let s = r.summary();
+        assert!((s.total_cost - s.avg_cost * 50.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,277 @@
+//! The Scaling Plane (paper §III.A): the two-dimensional discrete
+//! configuration space `(H, V)` of node counts × vertical resource
+//! tiers, and the local neighborhood used by Algorithm 1 (§IV.B).
+
+
+/// A vertical resource tier: per-node CPU, RAM, network bandwidth,
+/// storage IOPS, and hourly cost (paper §III.A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tier {
+    pub name: String,
+    pub cpu: f32,
+    pub ram: f32,
+    pub bandwidth: f32,
+    pub iops: f32,
+    pub cost: f32,
+}
+
+impl Tier {
+    /// IOPS in thousands, the unit the latency/throughput surfaces use.
+    pub fn iops_k(&self) -> f32 {
+        self.iops / 1000.0
+    }
+
+    /// The binding resource: `min(cpu, ram, bandwidth, iops/1000)`
+    /// (paper §III.D, the T_node bottleneck).
+    pub fn min_resource(&self) -> f32 {
+        self.cpu
+            .min(self.ram)
+            .min(self.bandwidth)
+            .min(self.iops_k())
+    }
+}
+
+/// A point in the Scaling Plane, stored as *indices* into the discrete
+/// H and V lists (the paper's "previous/next valid value" neighborhood
+/// is index-adjacency).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Configuration {
+    pub h_idx: usize,
+    pub v_idx: usize,
+}
+
+impl Configuration {
+    pub fn new(h_idx: usize, v_idx: usize) -> Self {
+        Self { h_idx, v_idx }
+    }
+
+    /// Index-space distance components `(|dH|, |dV|)` to another config
+    /// — the inputs to the rebalance penalty (paper §IV.D).
+    pub fn index_distance(&self, other: &Configuration) -> (usize, usize) {
+        (
+            self.h_idx.abs_diff(other.h_idx),
+            self.v_idx.abs_diff(other.v_idx),
+        )
+    }
+}
+
+/// The full discrete plane: H values, tiers, and neighbor generation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingPlane {
+    h_values: Vec<u32>,
+    tiers: Vec<Tier>,
+}
+
+impl ScalingPlane {
+    pub fn new(h_values: Vec<u32>, tiers: Vec<Tier>) -> Self {
+        assert!(!h_values.is_empty() && !tiers.is_empty());
+        Self { h_values, tiers }
+    }
+
+    pub fn n_h(&self) -> usize {
+        self.h_values.len()
+    }
+
+    pub fn n_v(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Total number of deployable configurations (paper: 4 × 4 = 16).
+    pub fn len(&self) -> usize {
+        self.n_h() * self.n_v()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // both axes are non-empty by construction
+    }
+
+    pub fn h_value(&self, cfg: &Configuration) -> u32 {
+        self.h_values[cfg.h_idx]
+    }
+
+    pub fn tier(&self, cfg: &Configuration) -> &Tier {
+        &self.tiers[cfg.v_idx]
+    }
+
+    pub fn h_values(&self) -> &[u32] {
+        &self.h_values
+    }
+
+    pub fn tiers(&self) -> &[Tier] {
+        &self.tiers
+    }
+
+    pub fn contains(&self, cfg: &Configuration) -> bool {
+        cfg.h_idx < self.n_h() && cfg.v_idx < self.n_v()
+    }
+
+    /// Iterate every configuration in row-major (H-major) order — the
+    /// shared tie-breaking order of the whole stack.
+    pub fn iter(&self) -> impl Iterator<Item = Configuration> + '_ {
+        (0..self.n_h()).flat_map(move |h| {
+            (0..self.n_v()).map(move |v| Configuration::new(h, v))
+        })
+    }
+
+    /// The Algorithm-1 neighborhood of `cfg` (paper §IV.B): the current
+    /// configuration plus every in-bounds combination of
+    /// previous/next H and previous/next V, optionally restricted to
+    /// one axis. Emitted in row-major order, self included; at most 9.
+    pub fn neighbors(
+        &self,
+        cfg: &Configuration,
+        allow_dh: bool,
+        allow_dv: bool,
+    ) -> Vec<Configuration> {
+        let mut out = Vec::with_capacity(9);
+        for dh in -1i32..=1 {
+            if dh != 0 && !allow_dh {
+                continue;
+            }
+            let h = cfg.h_idx as i32 + dh;
+            if h < 0 || h >= self.n_h() as i32 {
+                continue;
+            }
+            for dv in -1i32..=1 {
+                if dv != 0 && !allow_dv {
+                    continue;
+                }
+                let v = cfg.v_idx as i32 + dv;
+                if v < 0 || v >= self.n_v() as i32 {
+                    continue;
+                }
+                out.push(Configuration::new(h as usize, v as usize));
+            }
+        }
+        out
+    }
+
+    /// Allocation-free neighborhood visit in row-major order — the
+    /// simulator's hot loop (same candidate set as [`Self::neighbors`]).
+    #[inline]
+    pub fn for_each_neighbor(
+        &self,
+        cfg: &Configuration,
+        allow_dh: bool,
+        allow_dv: bool,
+        mut f: impl FnMut(Configuration),
+    ) {
+        let h_lo = if allow_dh { cfg.h_idx.saturating_sub(1) } else { cfg.h_idx };
+        let h_hi = if allow_dh { (cfg.h_idx + 1).min(self.n_h() - 1) } else { cfg.h_idx };
+        let v_lo = if allow_dv { cfg.v_idx.saturating_sub(1) } else { cfg.v_idx };
+        let v_hi = if allow_dv { (cfg.v_idx + 1).min(self.n_v() - 1) } else { cfg.v_idx };
+        for h in h_lo..=h_hi {
+            for v in v_lo..=v_hi {
+                f(Configuration::new(h, v));
+            }
+        }
+    }
+
+    /// One-step scale-up fallback (Algorithm 1 line 18): move +1 on each
+    /// axis the policy may change, clamped to the plane boundary.
+    pub fn fallback_up(
+        &self,
+        cfg: &Configuration,
+        allow_dh: bool,
+        allow_dv: bool,
+    ) -> Configuration {
+        Configuration::new(
+            if allow_dh {
+                (cfg.h_idx + 1).min(self.n_h() - 1)
+            } else {
+                cfg.h_idx
+            },
+            if allow_dv {
+                (cfg.v_idx + 1).min(self.n_v() - 1)
+            } else {
+                cfg.v_idx
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn plane() -> ScalingPlane {
+        ModelConfig::default_paper().plane()
+    }
+
+    #[test]
+    fn sixteen_configurations() {
+        let p = plane();
+        assert_eq!(p.len(), 16);
+        assert_eq!(p.iter().count(), 16);
+    }
+
+    #[test]
+    fn interior_neighborhood_is_nine() {
+        let p = plane();
+        let n = p.neighbors(&Configuration::new(1, 1), true, true);
+        assert_eq!(n.len(), 9);
+        assert!(n.contains(&Configuration::new(1, 1))); // self included
+        assert!(n.contains(&Configuration::new(0, 0)));
+        assert!(n.contains(&Configuration::new(2, 2)));
+    }
+
+    #[test]
+    fn corner_neighborhood_is_four() {
+        let p = plane();
+        let n = p.neighbors(&Configuration::new(0, 0), true, true);
+        assert_eq!(n.len(), 4);
+        let n = p.neighbors(&Configuration::new(3, 3), true, true);
+        assert_eq!(n.len(), 4);
+    }
+
+    #[test]
+    fn axis_restricted_neighborhoods() {
+        let p = plane();
+        let n = p.neighbors(&Configuration::new(1, 1), true, false);
+        assert_eq!(n.len(), 3);
+        assert!(n.iter().all(|c| c.v_idx == 1));
+        let n = p.neighbors(&Configuration::new(1, 1), false, true);
+        assert_eq!(n.len(), 3);
+        assert!(n.iter().all(|c| c.h_idx == 1));
+    }
+
+    #[test]
+    fn neighbors_in_row_major_order() {
+        let p = plane();
+        let n = p.neighbors(&Configuration::new(2, 2), true, true);
+        let flat: Vec<usize> = n.iter().map(|c| c.h_idx * 8 + c.v_idx).collect();
+        let mut sorted = flat.clone();
+        sorted.sort_unstable();
+        assert_eq!(flat, sorted);
+    }
+
+    #[test]
+    fn fallback_clamps_at_boundary() {
+        let p = plane();
+        let top = Configuration::new(3, 3);
+        assert_eq!(p.fallback_up(&top, true, true), top);
+        let mid = Configuration::new(1, 2);
+        assert_eq!(p.fallback_up(&mid, true, true), Configuration::new(2, 3));
+        assert_eq!(p.fallback_up(&mid, true, false), Configuration::new(2, 2));
+        assert_eq!(p.fallback_up(&mid, false, true), Configuration::new(1, 3));
+    }
+
+    #[test]
+    fn min_resource_is_bottleneck() {
+        let p = plane();
+        // every default tier is cpu-bound (cpu == min)
+        for t in p.tiers() {
+            assert_eq!(t.min_resource(), t.cpu);
+        }
+    }
+
+    #[test]
+    fn index_distance() {
+        let a = Configuration::new(0, 3);
+        let b = Configuration::new(2, 1);
+        assert_eq!(a.index_distance(&b), (2, 2));
+        assert_eq!(b.index_distance(&a), (2, 2));
+        assert_eq!(a.index_distance(&a), (0, 0));
+    }
+}

@@ -1,0 +1,253 @@
+//! DIAGONALSCALE (paper Algorithm 1): SLA-aware local search over the
+//! horizontal, vertical, and diagonal neighbors of the current
+//! configuration.
+//!
+//! The same implementation restricted by [`MoveFlags`] yields the
+//! horizontal-only and vertical-only baselines, which (per §V.D) use the
+//! identical scoring and feasibility machinery but may only move on one
+//! axis.
+//!
+//! Candidate iteration is row-major with strict `<` improvement — the
+//! exact tie-breaking order of the AOT-compiled `policy_trace` kernel,
+//! so native and HLO trajectories are identical.
+
+use crate::config::MoveFlags;
+use crate::plane::Configuration;
+use crate::workload::WorkloadPoint;
+use crate::INFEASIBLE;
+
+use super::{rebalance_penalty, Decision, Policy, PolicyContext};
+
+/// The paper's local-search autoscaler.
+#[derive(Debug, Clone, Copy)]
+pub struct DiagonalScale {
+    moves: MoveFlags,
+}
+
+impl DiagonalScale {
+    pub fn new(moves: MoveFlags) -> Self {
+        Self { moves }
+    }
+
+    /// The full diagonal policy.
+    pub fn diagonal() -> Self {
+        Self::new(MoveFlags::DIAGONAL)
+    }
+
+    /// Horizontal-only baseline (changes only H).
+    pub fn horizontal_only() -> Self {
+        Self::new(MoveFlags::HORIZONTAL_ONLY)
+    }
+
+    /// Vertical-only baseline (changes only V).
+    pub fn vertical_only() -> Self {
+        Self::new(MoveFlags::VERTICAL_ONLY)
+    }
+
+    pub fn moves(&self) -> MoveFlags {
+        self.moves
+    }
+
+    /// Score one candidate: SLA filter (IV.C) then objective plus the
+    /// rebalance penalty (IV.D). Infeasible candidates score
+    /// [`INFEASIBLE`].
+    pub fn score_candidate(
+        current: &Configuration,
+        cand: &Configuration,
+        workload: WorkloadPoint,
+        ctx: &PolicyContext<'_>,
+    ) -> f32 {
+        if !ctx
+            .model
+            .feasible(cand, workload.lambda_req, ctx.sla, ctx.plan_queue)
+        {
+            return INFEASIBLE;
+        }
+        let obj = if ctx.plan_queue {
+            ctx.model.effective_objective(cand, workload.lambda_req)
+        } else {
+            ctx.model.evaluate(cand, workload.lambda_req).objective
+        };
+        obj + rebalance_penalty(current, cand, ctx.reb_h, ctx.reb_v)
+    }
+}
+
+impl Policy for DiagonalScale {
+    fn name(&self) -> &'static str {
+        match (self.moves.allow_dh, self.moves.allow_dv) {
+            (true, true) => "diagonal-scale",
+            (true, false) => "horizontal-only",
+            (false, true) => "vertical-only",
+            (false, false) => "frozen",
+        }
+    }
+
+    fn decide(
+        &mut self,
+        current: Configuration,
+        workload: WorkloadPoint,
+        ctx: &PolicyContext<'_>,
+    ) -> Decision {
+        let plane = ctx.model.plane();
+        let mut best: Option<(Configuration, f32)> = None;
+        // Row-major order + strict improvement == the kernel's argmin.
+        // (allocation-free visit: this is the control loop's hot path)
+        plane.for_each_neighbor(&current, self.moves.allow_dh, self.moves.allow_dv, |cand| {
+            let score = Self::score_candidate(&current, &cand, workload, ctx);
+            if score >= INFEASIBLE * 0.5 {
+                return; // Algorithm 1 line 6: SLA-infeasible
+            }
+            if best.map_or(true, |(_, b)| score < b) {
+                best = Some((cand, score));
+            }
+        });
+        match best {
+            Some((next, score)) => Decision { next, score, fallback: false },
+            None => Decision {
+                // Algorithm 1 line 18: one-step scale-up fallback along
+                // the axes this policy may move.
+                next: plane.fallback_up(&current, self.moves.allow_dh, self.moves.allow_dv),
+                score: INFEASIBLE,
+                fallback: true,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::sla::SlaSpec;
+    use crate::surfaces::SurfaceModel;
+
+    struct Fixture {
+        model: SurfaceModel,
+        sla: SlaSpec,
+    }
+
+    impl Fixture {
+        fn new() -> Self {
+            let cfg = ModelConfig::default_paper();
+            Self {
+                model: SurfaceModel::from_config(&cfg),
+                sla: SlaSpec::from_config(&cfg),
+            }
+        }
+
+        fn ctx(&self) -> PolicyContext<'_> {
+            PolicyContext {
+                model: &self.model,
+                sla: &self.sla,
+                reb_h: 2.0,
+                reb_v: 1.0,
+                plan_queue: false,
+                future: &[],
+            }
+        }
+    }
+
+    #[test]
+    fn chooses_feasible_neighbor_under_load() {
+        let f = Fixture::new();
+        let mut p = DiagonalScale::diagonal();
+        let d = p.decide(
+            Configuration::new(1, 1),
+            WorkloadPoint::new(6000.0, 0.3),
+            &f.ctx(),
+        );
+        assert!(!d.fallback);
+        assert!(f
+            .model
+            .feasible(&d.next, 6000.0, &f.sla, false));
+    }
+
+    #[test]
+    fn fallback_when_nothing_feasible() {
+        let f = Fixture::new();
+        let mut p = DiagonalScale::diagonal();
+        let cur = Configuration::new(0, 0);
+        let d = p.decide(cur, WorkloadPoint::new(1e9, 0.3), &f.ctx());
+        assert!(d.fallback);
+        assert_eq!(d.next, Configuration::new(1, 1)); // diagonal step up
+    }
+
+    #[test]
+    fn fallback_respects_axis_restriction() {
+        let f = Fixture::new();
+        let cur = Configuration::new(0, 0);
+        let w = WorkloadPoint::new(1e9, 0.3);
+        let d = DiagonalScale::horizontal_only().decide(cur, w, &f.ctx());
+        assert_eq!(d.next, Configuration::new(1, 0));
+        let d = DiagonalScale::vertical_only().decide(cur, w, &f.ctx());
+        assert_eq!(d.next, Configuration::new(0, 1));
+    }
+
+    #[test]
+    fn horizontal_only_never_changes_tier() {
+        let f = Fixture::new();
+        let mut p = DiagonalScale::horizontal_only();
+        for lam in [100.0, 6000.0, 16000.0, 1e8] {
+            let d = p.decide(Configuration::new(1, 2), WorkloadPoint::new(lam, 0.3), &f.ctx());
+            assert_eq!(d.next.v_idx, 2, "lam={lam}");
+        }
+    }
+
+    #[test]
+    fn vertical_only_never_changes_nodes() {
+        let f = Fixture::new();
+        let mut p = DiagonalScale::vertical_only();
+        for lam in [100.0, 6000.0, 16000.0, 1e8] {
+            let d = p.decide(Configuration::new(2, 1), WorkloadPoint::new(lam, 0.3), &f.ctx());
+            assert_eq!(d.next.h_idx, 2, "lam={lam}");
+        }
+    }
+
+    #[test]
+    fn scales_down_when_load_drops() {
+        let f = Fixture::new();
+        let mut p = DiagonalScale::diagonal();
+        // trivial load from the top corner: cheaper neighbor must win
+        let d = p.decide(Configuration::new(3, 3), WorkloadPoint::new(100.0, 0.3), &f.ctx());
+        let cur_cost = f.model.cost(&Configuration::new(3, 3));
+        assert!(f.model.cost(&d.next) < cur_cost);
+    }
+
+    #[test]
+    fn stays_put_when_current_is_best() {
+        // At the optimum for its demand the penalty makes self win.
+        let f = Fixture::new();
+        let mut p = DiagonalScale::diagonal();
+        let first = p.decide(Configuration::new(1, 1), WorkloadPoint::new(6000.0, 0.3), &f.ctx());
+        let second = p.decide(first.next, WorkloadPoint::new(6000.0, 0.3), &f.ctx());
+        let third = p.decide(second.next, WorkloadPoint::new(6000.0, 0.3), &f.ctx());
+        assert_eq!(second.next, third.next, "policy should converge");
+    }
+
+    #[test]
+    fn decision_is_always_a_neighbor() {
+        let f = Fixture::new();
+        let mut p = DiagonalScale::diagonal();
+        for h in 0..4 {
+            for v in 0..4 {
+                let cur = Configuration::new(h, v);
+                let d = p.decide(cur, WorkloadPoint::new(9000.0, 0.3), &f.ctx());
+                let (dh, dv) = cur.index_distance(&d.next);
+                assert!(dh <= 1 && dv <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_score_is_sentinel() {
+        let f = Fixture::new();
+        let ctx = f.ctx();
+        let s = DiagonalScale::score_candidate(
+            &Configuration::new(0, 0),
+            &Configuration::new(0, 0),
+            WorkloadPoint::new(1e9, 0.3),
+            &ctx,
+        );
+        assert_eq!(s, INFEASIBLE);
+    }
+}

@@ -1,0 +1,126 @@
+//! Forecast-driven lookahead: the deployable form of the §VIII
+//! multi-step extension. [`Lookahead`] needs the future; production
+//! controllers don't get one, so this policy maintains its own demand
+//! predictor ([`crate::forecast`]) and expands the lookahead tree over
+//! *forecasted* workloads.
+
+use crate::config::MoveFlags;
+use crate::forecast::Forecaster;
+use crate::plane::Configuration;
+use crate::workload::WorkloadPoint;
+
+use super::{Decision, Lookahead, Policy, PolicyContext};
+
+/// Lookahead over a self-maintained forecast.
+pub struct ForecastLookahead<F: Forecaster> {
+    inner: Lookahead,
+    forecaster: F,
+    write_ratio: f32,
+}
+
+impl<F: Forecaster> ForecastLookahead<F> {
+    pub fn new(moves: MoveFlags, depth: usize, forecaster: F, write_ratio: f32) -> Self {
+        Self { inner: Lookahead::new(moves, depth), forecaster, write_ratio }
+    }
+
+    pub fn forecaster(&self) -> &F {
+        &self.forecaster
+    }
+}
+
+impl<F: Forecaster> Policy for ForecastLookahead<F> {
+    fn name(&self) -> &'static str {
+        "forecast-lookahead"
+    }
+
+    fn decide(
+        &mut self,
+        current: Configuration,
+        workload: WorkloadPoint,
+        ctx: &PolicyContext<'_>,
+    ) -> Decision {
+        self.forecaster.observe(workload.lambda_req as f64);
+        let horizon = self.inner.depth().saturating_sub(1);
+        let future: Vec<WorkloadPoint> = self
+            .forecaster
+            .forecast_n(horizon)
+            .into_iter()
+            .map(|lam| WorkloadPoint::new(lam as f32, self.write_ratio))
+            .collect();
+        let fctx = PolicyContext {
+            model: ctx.model,
+            sla: ctx.sla,
+            reb_h: ctx.reb_h,
+            reb_v: ctx.reb_v,
+            plan_queue: ctx.plan_queue,
+            future: &future,
+        };
+        self.inner.decide(current, workload, &fctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::forecast::{Holt, SeasonalNaive};
+    use crate::simulator::{PolicyKind, Simulator};
+    use crate::workload::TraceBuilder;
+
+    fn run_forecast_policy<F: Forecaster>(
+        f: F,
+        trace: &crate::workload::Trace,
+    ) -> crate::simulator::RunResult {
+        let cfg = ModelConfig::default_paper();
+        let sim = Simulator::new(&cfg);
+        let mut p = ForecastLookahead::new(MoveFlags::DIAGONAL, 3, f, cfg.write_ratio());
+        sim.run_boxed(&mut p, "forecast-lookahead", trace)
+    }
+
+    #[test]
+    fn holds_its_own_on_the_paper_trace() {
+        let cfg = ModelConfig::default_paper();
+        let trace = TraceBuilder::paper(&cfg);
+        let sim = Simulator::new(&cfg);
+        let greedy = sim.run(PolicyKind::Diagonal, &trace);
+        let fl = run_forecast_policy(Holt::default_tuned(), &trace);
+        // forecasting must not be catastrophically worse than reactive
+        assert!(fl.summary.violations <= greedy.summary.violations + 3);
+    }
+
+    #[test]
+    fn seasonal_forecast_anticipates_a_repeating_cycle() {
+        let cfg = ModelConfig::default_paper();
+        let sim = Simulator::new(&cfg);
+        let b = TraceBuilder::from_config(&cfg);
+        // three repetitions of a short spike cycle; the seasonal
+        // forecaster learns the period after one cycle
+        let one = b.spike(60.0, 160.0, 10, 5, 20);
+        let mut points = one.points.clone();
+        points.extend(one.points.iter().copied());
+        points.extend(one.points.iter().copied());
+        let trace = crate::workload::Trace { name: "cycle".into(), points };
+
+        let greedy = sim.run(PolicyKind::Diagonal, &trace);
+        let fl = run_forecast_policy(SeasonalNaive::new(20), &trace);
+        // after the first cycle, seasonal lookahead pre-scales for the
+        // spikes the greedy policy keeps tripping over
+        assert!(
+            fl.summary.violations <= greedy.summary.violations,
+            "forecast {} vs greedy {}",
+            fl.summary.violations,
+            greedy.summary.violations
+        );
+    }
+
+    #[test]
+    fn decisions_stay_local() {
+        let cfg = ModelConfig::default_paper();
+        let trace = TraceBuilder::paper(&cfg);
+        let run = run_forecast_policy(Holt::default_tuned(), &trace);
+        for w in run.records.windows(2) {
+            let (dh, dv) = w[0].config.index_distance(&w[1].config);
+            assert!(dh <= 1 && dv <= 1);
+        }
+    }
+}

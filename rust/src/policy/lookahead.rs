@@ -1,0 +1,213 @@
+//! Multi-step lookahead (paper §VIII, third extension): instead of
+//! scoring only immediate neighbors, expand the neighbor tree `depth`
+//! steps into a demand forecast and pick the first move of the best
+//! path. Reduces transient SLA violations during sudden spikes at the
+//! cost of exponentially more candidate evaluations (9^depth worst
+//! case, still trivially cheap on a 4x4 plane).
+
+use crate::config::MoveFlags;
+use crate::plane::Configuration;
+use crate::workload::WorkloadPoint;
+use crate::INFEASIBLE;
+
+use super::{rebalance_penalty, Decision, DiagonalScale, Policy, PolicyContext};
+
+/// Per-level penalty charged to paths that pass through an infeasible
+/// configuration — large enough to dominate any objective difference,
+/// small enough that *fewer* infeasible levels always wins.
+const INFEASIBLE_LEVEL_PENALTY: f32 = 1.0e12;
+
+/// Lookahead controller over a demand forecast.
+#[derive(Debug, Clone, Copy)]
+pub struct Lookahead {
+    moves: MoveFlags,
+    depth: usize,
+}
+
+impl Lookahead {
+    /// `depth = 1` is exactly DIAGONALSCALE (with path-penalty scoring);
+    /// the paper suggests 2–3.
+    pub fn new(moves: MoveFlags, depth: usize) -> Self {
+        assert!(depth >= 1, "lookahead depth must be >= 1");
+        Self { moves, depth }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Best achievable path score starting by moving from `current` at
+    /// forecast level `level` (demand `w`), with `remaining` further
+    /// levels below.
+    fn path_score(
+        &self,
+        current: Configuration,
+        w: WorkloadPoint,
+        future: &[WorkloadPoint],
+        remaining: usize,
+        ctx: &PolicyContext<'_>,
+    ) -> (Configuration, f32) {
+        let plane = ctx.model.plane();
+        let mut best: Option<(Configuration, f32)> = None;
+        for cand in plane.neighbors(&current, self.moves.allow_dh, self.moves.allow_dv) {
+            let here = DiagonalScale::score_candidate(&current, &cand, w, ctx);
+            let mut score = if here >= INFEASIBLE * 0.5 {
+                // keep expanding through infeasible states but charge them
+                INFEASIBLE_LEVEL_PENALTY
+                    + ctx.model.evaluate(&cand, w.lambda_req).objective
+                    + rebalance_penalty(&current, &cand, ctx.reb_h, ctx.reb_v)
+            } else {
+                here
+            };
+            if remaining > 0 {
+                if let Some((&next_w, rest)) = future.split_first() {
+                    let (_, tail) = self.path_score(cand, next_w, rest, remaining - 1, ctx);
+                    score += tail;
+                }
+            }
+            if best.map_or(true, |(_, b)| score < b) {
+                best = Some((cand, score));
+            }
+        }
+        // neighbors() always includes `current` itself, so best is Some.
+        best.expect("neighborhood is never empty")
+    }
+}
+
+impl Policy for Lookahead {
+    fn name(&self) -> &'static str {
+        "lookahead"
+    }
+
+    fn decide(
+        &mut self,
+        current: Configuration,
+        workload: WorkloadPoint,
+        ctx: &PolicyContext<'_>,
+    ) -> Decision {
+        // Serve-then-move alignment: under the simulator's semantics the
+        // configuration chosen NOW serves the NEXT step's demand, so when
+        // a forecast exists, level-0 candidates are scored against
+        // `future[0]` (what they will actually serve) and deeper levels
+        // against `future[k]`. With no forecast this degrades to the
+        // paper's reactive Algorithm 1 (score against current demand).
+        let (w0, rest) = match ctx.future.split_first() {
+            Some((&w0, rest)) => (w0, rest),
+            None => (workload, ctx.future),
+        };
+        let (next, score) = self.path_score(current, w0, rest, self.depth - 1, ctx);
+        let fallback = score >= INFEASIBLE_LEVEL_PENALTY * 0.5;
+        if fallback && next == current {
+            // nothing feasible anywhere on the path: behave like the
+            // Algorithm-1 fallback so we still make progress.
+            let up = ctx
+                .model
+                .plane()
+                .fallback_up(&current, self.moves.allow_dh, self.moves.allow_dv);
+            return Decision { next: up, score: INFEASIBLE, fallback: true };
+        }
+        Decision { next, score, fallback }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::sla::SlaSpec;
+    use crate::surfaces::SurfaceModel;
+
+    fn fixture() -> (SurfaceModel, SlaSpec) {
+        let cfg = ModelConfig::default_paper();
+        (SurfaceModel::from_config(&cfg), SlaSpec::from_config(&cfg))
+    }
+
+    fn ctx<'a>(
+        m: &'a SurfaceModel,
+        s: &'a SlaSpec,
+        future: &'a [WorkloadPoint],
+    ) -> PolicyContext<'a> {
+        PolicyContext { model: m, sla: s, reb_h: 2.0, reb_v: 1.0, plan_queue: false, future }
+    }
+
+    #[test]
+    fn depth_one_matches_diagonal_scale_when_feasible() {
+        let (m, s) = fixture();
+        let c = ctx(&m, &s, &[]);
+        let w = WorkloadPoint::new(9000.0, 0.3);
+        for h in 0..4 {
+            for v in 0..4 {
+                let cur = Configuration::new(h, v);
+                let la = Lookahead::new(MoveFlags::DIAGONAL, 1).decide(cur, w, &c);
+                let ds = DiagonalScale::diagonal().decide(cur, w, &c);
+                if !ds.fallback {
+                    assert_eq!(la.next, ds.next, "at ({h},{v})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn anticipates_a_spike() {
+        let (m, s) = fixture();
+        // now: low demand; next step: a spike only (H=4, xlarge)-class
+        // configs can absorb.
+        let now = WorkloadPoint::new(6000.0, 0.3);
+        let spike = WorkloadPoint::new(16000.0, 0.3);
+        let future = [spike, spike];
+        let c = ctx(&m, &s, &future);
+
+        let cur = Configuration::new(1, 3); // (H=2, xlarge)
+        let greedy = DiagonalScale::diagonal().decide(cur, now, &c);
+        let mut la = Lookahead::new(MoveFlags::DIAGONAL, 3);
+        let ahead = la.decide(cur, now, &c);
+        // greedy downsizes into the cheap region, from where no single
+        // step reaches a spike-feasible config; lookahead only accepts
+        // positions that keep the spike reachable.
+        let plane = m.plane();
+        let reaches_spike = |from: &Configuration| {
+            plane
+                .neighbors(from, true, true)
+                .iter()
+                .any(|c| m.feasible(c, spike.lambda_req, &s, false))
+        };
+        assert!(!reaches_spike(&greedy.next), "greedy should be trapped");
+        assert!(
+            reaches_spike(&ahead.next),
+            "lookahead {:?} must keep the spike reachable",
+            ahead.next
+        );
+    }
+
+    #[test]
+    fn decision_is_always_a_neighbor() {
+        let (m, s) = fixture();
+        let future = [WorkloadPoint::new(16000.0, 0.3); 3];
+        let c = ctx(&m, &s, &future);
+        let mut la = Lookahead::new(MoveFlags::DIAGONAL, 3);
+        for h in 0..4 {
+            for v in 0..4 {
+                let cur = Configuration::new(h, v);
+                let d = la.decide(cur, WorkloadPoint::new(9000.0, 0.3), &c);
+                let (dh, dv) = cur.index_distance(&d.next);
+                assert!(dh <= 1 && dv <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn impossible_demand_still_scales_up() {
+        let (m, s) = fixture();
+        let c = ctx(&m, &s, &[]);
+        let mut la = Lookahead::new(MoveFlags::DIAGONAL, 2);
+        let d = la.decide(Configuration::new(0, 0), WorkloadPoint::new(1e9, 0.3), &c);
+        assert!(d.fallback);
+        assert!(d.next.h_idx + d.next.v_idx > 0, "must move up");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_depth_rejected() {
+        Lookahead::new(MoveFlags::DIAGONAL, 0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Autoscaling policies over the Scaling Plane.
+//!
+//! [`DiagonalScale`] is the paper's contribution (Algorithm 1); the same
+//! implementation restricted to one axis yields the horizontal-only and
+//! vertical-only baselines (§V.D). [`Threshold`] is the HPA-style
+//! reactive strawman the paper's introduction argues against,
+//! [`Oracle`] is the per-step global optimum (upper bound), and
+//! [`Lookahead`] is the §VIII multi-step extension. [`StaticPolicy`]
+//! never moves (do-nothing baseline).
+
+mod diagonal;
+mod forecast;
+mod lookahead;
+mod oracle;
+mod threshold;
+
+pub use diagonal::DiagonalScale;
+pub use forecast::ForecastLookahead;
+pub use lookahead::Lookahead;
+pub use oracle::Oracle;
+pub use threshold::Threshold;
+
+use crate::config::MoveFlags;
+use crate::plane::Configuration;
+use crate::sla::SlaSpec;
+use crate::surfaces::SurfaceModel;
+use crate::workload::WorkloadPoint;
+
+/// Shared read-only state handed to a policy at each decision point.
+pub struct PolicyContext<'a> {
+    pub model: &'a SurfaceModel,
+    pub sla: &'a SlaSpec,
+    /// Rebalance penalty weights (paper IV.D).
+    pub reb_h: f32,
+    pub reb_v: f32,
+    /// Planner uses queueing-corrected latency (paper VIII extension).
+    pub plan_queue: bool,
+    /// Future demand, if the controller has a forecast (used by
+    /// [`Lookahead`]; empty for purely reactive policies).
+    pub future: &'a [WorkloadPoint],
+}
+
+/// The outcome of one decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    pub next: Configuration,
+    /// Score of the chosen candidate (objective + rebalance penalty),
+    /// or [`crate::INFEASIBLE`] when the fallback fired.
+    pub score: f32,
+    /// True when no candidate was SLA-feasible and the one-step
+    /// scale-up fallback was taken (Algorithm 1 line 18).
+    pub fallback: bool,
+}
+
+/// An autoscaling policy: a (possibly stateful) map from
+/// (configuration, workload) to the next configuration.
+pub trait Policy {
+    fn name(&self) -> &'static str;
+    fn decide(
+        &mut self,
+        current: Configuration,
+        workload: WorkloadPoint,
+        ctx: &PolicyContext<'_>,
+    ) -> Decision;
+}
+
+/// The paper IV.D rebalance penalty between two configurations:
+/// `R = reb_h * |dH idx| + reb_v * |dV idx|`.
+pub fn rebalance_penalty(
+    from: &Configuration,
+    to: &Configuration,
+    reb_h: f32,
+    reb_v: f32,
+) -> f32 {
+    let (dh, dv) = from.index_distance(to);
+    reb_h * dh as f32 + reb_v * dv as f32
+}
+
+/// A policy that never moves — the "no autoscaling" baseline.
+#[derive(Debug, Default)]
+pub struct StaticPolicy;
+
+impl Policy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn decide(
+        &mut self,
+        current: Configuration,
+        workload: WorkloadPoint,
+        ctx: &PolicyContext<'_>,
+    ) -> Decision {
+        let obj = ctx
+            .model
+            .evaluate(&current, workload.lambda_req)
+            .objective;
+        Decision { next: current, score: obj, fallback: false }
+    }
+}
+
+/// Construct the paper's three compared policies (§V.D).
+pub fn paper_policies() -> Vec<(MoveFlags, Box<dyn Policy>)> {
+    vec![
+        (MoveFlags::DIAGONAL, Box::new(DiagonalScale::new(MoveFlags::DIAGONAL))),
+        (
+            MoveFlags::HORIZONTAL_ONLY,
+            Box::new(DiagonalScale::new(MoveFlags::HORIZONTAL_ONLY)),
+        ),
+        (
+            MoveFlags::VERTICAL_ONLY,
+            Box::new(DiagonalScale::new(MoveFlags::VERTICAL_ONLY)),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    #[test]
+    fn rebalance_penalty_weights_h_double() {
+        let cfg = ModelConfig::default_paper();
+        let a = Configuration::new(1, 1);
+        let h_move = Configuration::new(2, 1);
+        let v_move = Configuration::new(1, 2);
+        let rh = rebalance_penalty(&a, &h_move, cfg.policy.reb_h, cfg.policy.reb_v);
+        let rv = rebalance_penalty(&a, &v_move, cfg.policy.reb_h, cfg.policy.reb_v);
+        assert_eq!(rh, 2.0);
+        assert_eq!(rv, 1.0);
+        assert_eq!(rebalance_penalty(&a, &a, 2.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn rebalance_penalty_symmetric() {
+        let a = Configuration::new(0, 3);
+        let b = Configuration::new(2, 1);
+        assert_eq!(rebalance_penalty(&a, &b, 2.0, 1.0), rebalance_penalty(&b, &a, 2.0, 1.0));
+        assert_eq!(rebalance_penalty(&a, &b, 2.0, 1.0), 6.0);
+    }
+
+    #[test]
+    fn static_policy_never_moves() {
+        let cfg = ModelConfig::default_paper();
+        let model = SurfaceModel::from_config(&cfg);
+        let sla = SlaSpec::from_config(&cfg);
+        let ctx = PolicyContext {
+            model: &model,
+            sla: &sla,
+            reb_h: 2.0,
+            reb_v: 1.0,
+            plan_queue: false,
+            future: &[],
+        };
+        let mut p = StaticPolicy;
+        let c = Configuration::new(2, 2);
+        let d = p.decide(c, WorkloadPoint::new(1e9, 0.3), &ctx);
+        assert_eq!(d.next, c);
+        assert!(!d.fallback);
+    }
+}

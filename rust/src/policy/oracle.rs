@@ -1,0 +1,107 @@
+//! Oracle policy: per-step exhaustive search over the *entire* plane
+//! with no locality constraint and no rebalance penalty. Not deployable
+//! (it teleports across configurations), but it lower-bounds the
+//! objective any local policy can reach and upper-bounds feasibility —
+//! the ablation benches compare DIAGONALSCALE against it.
+
+use crate::plane::Configuration;
+use crate::workload::WorkloadPoint;
+use crate::INFEASIBLE;
+
+use super::{Decision, Policy, PolicyContext};
+
+/// Exhaustive global-best policy (ablation upper bound).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Oracle;
+
+impl Policy for Oracle {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn decide(
+        &mut self,
+        _current: Configuration,
+        workload: WorkloadPoint,
+        ctx: &PolicyContext<'_>,
+    ) -> Decision {
+        match ctx
+            .model
+            .best_feasible(workload.lambda_req, ctx.sla, ctx.plan_queue)
+        {
+            Some((cfg, point)) => Decision {
+                next: cfg,
+                score: if ctx.plan_queue {
+                    ctx.model.effective_objective(&cfg, workload.lambda_req)
+                } else {
+                    point.objective
+                },
+                fallback: false,
+            },
+            None => Decision {
+                // nothing feasible anywhere: max out the plane
+                next: Configuration::new(
+                    ctx.model.plane().n_h() - 1,
+                    ctx.model.plane().n_v() - 1,
+                ),
+                score: INFEASIBLE,
+                fallback: true,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::policy::DiagonalScale;
+    use crate::sla::SlaSpec;
+    use crate::surfaces::SurfaceModel;
+
+    fn fixture() -> (SurfaceModel, SlaSpec) {
+        let cfg = ModelConfig::default_paper();
+        (SurfaceModel::from_config(&cfg), SlaSpec::from_config(&cfg))
+    }
+
+    fn ctx<'a>(m: &'a SurfaceModel, s: &'a SlaSpec) -> PolicyContext<'a> {
+        PolicyContext { model: m, sla: s, reb_h: 2.0, reb_v: 1.0, plan_queue: false, future: &[] }
+    }
+
+    #[test]
+    fn oracle_at_least_as_good_as_any_neighbor() {
+        let (m, s) = fixture();
+        let c = ctx(&m, &s);
+        let w = WorkloadPoint::new(9000.0, 0.3);
+        let mut oracle = Oracle;
+        let od = oracle.decide(Configuration::new(1, 1), w, &c);
+        assert!(!od.fallback);
+        // objective of oracle's pick <= objective part of any feasible
+        // neighbor's score
+        let mut ds = DiagonalScale::diagonal();
+        let dd = ds.decide(Configuration::new(1, 1), w, &c);
+        let oracle_obj = m.evaluate(&od.next, w.lambda_req).objective;
+        let ds_obj = m.evaluate(&dd.next, w.lambda_req).objective;
+        assert!(oracle_obj <= ds_obj + 1e-3);
+    }
+
+    #[test]
+    fn oracle_pick_is_feasible() {
+        let (m, s) = fixture();
+        let c = ctx(&m, &s);
+        for lam in [1000.0, 6000.0, 10000.0, 16000.0] {
+            let d = Oracle.decide(Configuration::new(0, 0), WorkloadPoint::new(lam, 0.3), &c);
+            assert!(!d.fallback, "lam={lam}");
+            assert!(m.feasible(&d.next, lam, &s, false));
+        }
+    }
+
+    #[test]
+    fn oracle_falls_back_to_top_corner() {
+        let (m, s) = fixture();
+        let c = ctx(&m, &s);
+        let d = Oracle.decide(Configuration::new(0, 0), WorkloadPoint::new(1e9, 0.3), &c);
+        assert!(d.fallback);
+        assert_eq!(d.next, Configuration::new(3, 3));
+    }
+}

@@ -1,0 +1,154 @@
+//! HPA-style reactive threshold baseline (the policy family the paper's
+//! §I.A motivation argues against): scale out when utilization crosses
+//! a high-water mark, scale in below a low-water mark, with no SLA
+//! feasibility reasoning and no objective function.
+
+use crate::plane::Configuration;
+use crate::workload::WorkloadPoint;
+
+use super::{Decision, Policy, PolicyContext};
+
+/// Reactive utilization-threshold autoscaler.
+///
+/// * `u > high` — scale out (H+1); if H is maxed, scale up (V+1).
+/// * `u < low`  — scale in (H-1) if that stays under `high`; else try
+///   V-1; else stay.
+#[derive(Debug, Clone, Copy)]
+pub struct Threshold {
+    pub high: f32,
+    pub low: f32,
+}
+
+impl Default for Threshold {
+    fn default() -> Self {
+        // Kubernetes-ish defaults: target 80%, scale-in under 30%.
+        Self { high: 0.8, low: 0.3 }
+    }
+}
+
+impl Threshold {
+    pub fn new(high: f32, low: f32) -> Self {
+        assert!(low < high, "low watermark must be below high");
+        Self { high, low }
+    }
+
+    fn utilization(&self, cfg: &Configuration, w: WorkloadPoint, ctx: &PolicyContext<'_>) -> f32 {
+        w.lambda_req / ctx.model.throughput(cfg).max(f32::MIN_POSITIVE)
+    }
+}
+
+impl Policy for Threshold {
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+
+    fn decide(
+        &mut self,
+        current: Configuration,
+        workload: WorkloadPoint,
+        ctx: &PolicyContext<'_>,
+    ) -> Decision {
+        let plane = ctx.model.plane();
+        let u = self.utilization(&current, workload, ctx);
+        let next = if u > self.high {
+            if current.h_idx + 1 < plane.n_h() {
+                Configuration::new(current.h_idx + 1, current.v_idx)
+            } else if current.v_idx + 1 < plane.n_v() {
+                Configuration::new(current.h_idx, current.v_idx + 1)
+            } else {
+                current
+            }
+        } else if u < self.low {
+            // prefer shedding nodes; accept only if it stays healthy
+            let mut cand = current;
+            if current.h_idx > 0 {
+                let c = Configuration::new(current.h_idx - 1, current.v_idx);
+                if self.utilization(&c, workload, ctx) < self.high {
+                    cand = c;
+                }
+            }
+            if cand == current && current.v_idx > 0 {
+                let c = Configuration::new(current.h_idx, current.v_idx - 1);
+                if self.utilization(&c, workload, ctx) < self.high {
+                    cand = c;
+                }
+            }
+            cand
+        } else {
+            current
+        };
+        let score = ctx.model.evaluate(&next, workload.lambda_req).objective;
+        Decision { next, score, fallback: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::sla::SlaSpec;
+    use crate::surfaces::SurfaceModel;
+
+    fn fixture() -> (SurfaceModel, SlaSpec) {
+        let cfg = ModelConfig::default_paper();
+        (SurfaceModel::from_config(&cfg), SlaSpec::from_config(&cfg))
+    }
+
+    fn ctx<'a>(model: &'a SurfaceModel, sla: &'a SlaSpec) -> PolicyContext<'a> {
+        PolicyContext { model, sla, reb_h: 2.0, reb_v: 1.0, plan_queue: false, future: &[] }
+    }
+
+    #[test]
+    fn scales_out_under_pressure() {
+        let (m, s) = fixture();
+        let mut p = Threshold::default();
+        let cur = Configuration::new(1, 1);
+        let demand = m.throughput(&cur) * 0.95;
+        let d = p.decide(cur, WorkloadPoint::new(demand, 0.3), &ctx(&m, &s));
+        assert_eq!(d.next, Configuration::new(2, 1));
+    }
+
+    #[test]
+    fn scales_up_when_h_maxed() {
+        let (m, s) = fixture();
+        let mut p = Threshold::default();
+        let cur = Configuration::new(3, 1);
+        let demand = m.throughput(&cur) * 0.95;
+        let d = p.decide(cur, WorkloadPoint::new(demand, 0.3), &ctx(&m, &s));
+        assert_eq!(d.next, Configuration::new(3, 2));
+    }
+
+    #[test]
+    fn scales_in_when_idle() {
+        let (m, s) = fixture();
+        let mut p = Threshold::default();
+        let cur = Configuration::new(2, 2);
+        let d = p.decide(cur, WorkloadPoint::new(10.0, 0.3), &ctx(&m, &s));
+        assert_eq!(d.next, Configuration::new(1, 2));
+    }
+
+    #[test]
+    fn holds_in_band() {
+        let (m, s) = fixture();
+        let mut p = Threshold::default();
+        let cur = Configuration::new(1, 1);
+        let demand = m.throughput(&cur) * 0.5;
+        let d = p.decide(cur, WorkloadPoint::new(demand, 0.3), &ctx(&m, &s));
+        assert_eq!(d.next, cur);
+    }
+
+    #[test]
+    fn saturated_top_corner_stays() {
+        let (m, s) = fixture();
+        let mut p = Threshold::default();
+        let cur = Configuration::new(3, 3);
+        let d = p.decide(cur, WorkloadPoint::new(1e9, 0.3), &ctx(&m, &s));
+        assert_eq!(d.next, cur);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_inverted_watermarks() {
+        Threshold::new(0.2, 0.8);
+    }
+}

@@ -1,0 +1,349 @@
+//! Report generation: the Table I summary and the data behind every
+//! figure (1–8) as CSV, plus ASCII heatmaps for terminal inspection.
+//!
+//! Each emitter returns a `String`; [`write_all_figures`] materializes
+//! the full set into an output directory (used by
+//! `examples/paper_repro.rs` and the benches).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::metrics::Summary;
+use crate::simulator::RunResult;
+use crate::surfaces::SurfaceModel;
+
+/// Table I: one row per policy (paper §VI.A).
+pub fn table1(rows: &[(String, Summary)]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<18} {:>9} {:>11} {:>9} {:>10} {:>9} {:>9}",
+        "Policy", "Avg.Lat.", "Avg.Thr.", "Avg.Cost", "TotalCost", "Avg.Obj.", "SLAViol."
+    );
+    for (name, s) in rows {
+        let _ = writeln!(
+            out,
+            "{:<18} {:>9.2} {:>11.2} {:>9.3} {:>10.1} {:>9.2} {:>9}",
+            name, s.avg_latency, s.avg_throughput, s.avg_cost, s.total_cost,
+            s.avg_objective, s.violations
+        );
+    }
+    out
+}
+
+/// Table I as CSV (machine-readable twin).
+pub fn table1_csv(rows: &[(String, Summary)]) -> String {
+    let mut out = String::from(
+        "policy,avg_latency,max_latency,avg_throughput,avg_required,avg_cost,total_cost,avg_objective,violations,latency_violations,throughput_violations\n",
+    );
+    for (name, s) in rows {
+        let _ = writeln!(
+            out,
+            "{},{:.4},{:.4},{:.2},{:.2},{:.4},{:.2},{:.4},{},{},{}",
+            name, s.avg_latency, s.max_latency, s.avg_throughput, s.avg_required,
+            s.avg_cost, s.total_cost, s.avg_objective, s.violations,
+            s.latency_violations, s.throughput_violations
+        );
+    }
+    out
+}
+
+/// Which surface a heatmap shows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Surface {
+    Cost,
+    Latency,
+    Throughput,
+    Coordination,
+    Objective,
+}
+
+impl Surface {
+    fn value(&self, model: &SurfaceModel, c: &crate::plane::Configuration, lam: f32) -> f32 {
+        let p = model.evaluate(c, lam);
+        match self {
+            Surface::Cost => p.cost,
+            Surface::Latency => p.latency,
+            Surface::Throughput => p.throughput,
+            Surface::Coordination => p.coordination,
+            Surface::Objective => p.objective,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Surface::Cost => "cost",
+            Surface::Latency => "latency",
+            Surface::Throughput => "throughput",
+            Surface::Coordination => "coordination",
+            Surface::Objective => "objective",
+        }
+    }
+}
+
+/// Heatmap over the plane as CSV: rows H, columns V (figures 1, 2, 4).
+pub fn heatmap_csv(model: &SurfaceModel, surface: Surface, lambda_req: f32) -> String {
+    let plane = model.plane();
+    let mut out = String::from("h");
+    for t in plane.tiers() {
+        let _ = write!(out, ",{}", t.name);
+    }
+    out.push('\n');
+    for (i, h) in plane.h_values().iter().enumerate() {
+        let _ = write!(out, "{h}");
+        for j in 0..plane.n_v() {
+            let c = crate::plane::Configuration::new(i, j);
+            let _ = write!(out, ",{:.4}", surface.value(model, &c, lambda_req));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Long-form surface dump `(h, tier, value)` — figure 3's 3-D surface.
+pub fn surface_csv(model: &SurfaceModel, surface: Surface, lambda_req: f32) -> String {
+    let plane = model.plane();
+    let mut out = String::from("h,tier,value\n");
+    for c in plane.iter() {
+        let _ = writeln!(
+            out,
+            "{},{},{:.4}",
+            plane.h_value(&c),
+            plane.tier(&c).name,
+            surface.value(model, &c, lambda_req)
+        );
+    }
+    out
+}
+
+/// ASCII heatmap for terminal output (quickstart example).
+pub fn heatmap_ascii(model: &SurfaceModel, surface: Surface, lambda_req: f32) -> String {
+    let plane = model.plane();
+    let mut vals = Vec::with_capacity(plane.len());
+    for c in plane.iter() {
+        vals.push(surface.value(model, &c, lambda_req));
+    }
+    let (lo, hi) = vals
+        .iter()
+        .fold((f32::MAX, f32::MIN), |(l, h), &v| (l.min(v), h.max(v)));
+    let shades = [' ', '.', ':', '-', '=', '+', '*', '#', '@'];
+    let mut out = format!("{} surface (lambda_req={lambda_req})\n", surface.name());
+    let _ = writeln!(
+        out,
+        "      {}",
+        plane
+            .tiers()
+            .iter()
+            .map(|t| format!("{:>8}", t.name))
+            .collect::<String>()
+    );
+    for (i, h) in plane.h_values().iter().enumerate() {
+        let _ = write!(out, "H={h:<3} ");
+        for j in 0..plane.n_v() {
+            let v = vals[i * plane.n_v() + j];
+            let norm = if hi > lo { (v - lo) / (hi - lo) } else { 0.0 };
+            let idx = ((norm * (shades.len() - 1) as f32).round() as usize)
+                .min(shades.len() - 1);
+            let _ = write!(out, " {:>5.1} {}", v, shades[idx]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Policy trajectories (figure 5): step, per-policy (H, tier).
+pub fn trajectories_csv(runs: &[RunResult], model: &SurfaceModel) -> String {
+    let plane = model.plane();
+    let mut out = String::from("step");
+    for r in runs {
+        let _ = write!(out, ",{}_h,{}_tier", r.policy, r.policy);
+    }
+    out.push('\n');
+    let steps = runs.iter().map(|r| r.records.len()).max().unwrap_or(0);
+    for t in 0..steps {
+        let _ = write!(out, "{t}");
+        for r in runs {
+            match r.records.get(t) {
+                Some(rec) => {
+                    let _ = write!(
+                        out,
+                        ",{},{}",
+                        plane.h_value(&rec.config),
+                        plane.tier(&rec.config).name
+                    );
+                }
+                None => out.push_str(",,"),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// A per-step metric across policies (figures 6, 7, 8).
+pub fn timeseries_csv(runs: &[RunResult], metric: Metric) -> String {
+    let mut out = String::from("step");
+    for r in runs {
+        let _ = write!(out, ",{}", r.policy);
+    }
+    out.push('\n');
+    let steps = runs.iter().map(|r| r.records.len()).max().unwrap_or(0);
+    for t in 0..steps {
+        let _ = write!(out, "{t}");
+        for r in runs {
+            match r.records.get(t) {
+                Some(rec) => {
+                    let _ = write!(out, ",{:.4}", metric.value(rec));
+                }
+                None => out.push(','),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Time-series metric selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Latency,
+    Cost,
+    Objective,
+    Throughput,
+}
+
+impl Metric {
+    fn value(&self, rec: &crate::metrics::StepRecord) -> f32 {
+        match self {
+            Metric::Latency => rec.latency,
+            Metric::Cost => rec.cost,
+            Metric::Objective => rec.objective,
+            Metric::Throughput => rec.throughput,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::Latency => "latency",
+            Metric::Cost => "cost",
+            Metric::Objective => "objective",
+            Metric::Throughput => "throughput",
+        }
+    }
+}
+
+/// Emit every paper artifact (Table I + figures 1–8) into `dir`.
+pub fn write_all_figures(
+    dir: impl AsRef<Path>,
+    model: &SurfaceModel,
+    runs: &[RunResult],
+    default_lambda: f32,
+) -> Result<Vec<String>> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let rows: Vec<(String, Summary)> =
+        runs.iter().map(|r| (r.policy.clone(), r.summary)).collect();
+    let files: Vec<(&str, String)> = vec![
+        ("table1.txt", table1(&rows)),
+        ("table1.csv", table1_csv(&rows)),
+        ("fig1_cost_heatmap.csv", heatmap_csv(model, Surface::Cost, default_lambda)),
+        ("fig2_latency_heatmap.csv", heatmap_csv(model, Surface::Latency, default_lambda)),
+        ("fig3_latency_surface.csv", surface_csv(model, Surface::Latency, default_lambda)),
+        ("fig4_objective_heatmap.csv", heatmap_csv(model, Surface::Objective, default_lambda)),
+        ("fig5_trajectories.csv", trajectories_csv(runs, model)),
+        ("fig6_latency_over_time.csv", timeseries_csv(runs, Metric::Latency)),
+        ("fig7_cost_over_time.csv", timeseries_csv(runs, Metric::Cost)),
+        ("fig8_objective_over_time.csv", timeseries_csv(runs, Metric::Objective)),
+    ];
+    let mut written = Vec::new();
+    for (name, content) in files {
+        let path = dir.join(name);
+        std::fs::write(&path, content)?;
+        written.push(path.display().to_string());
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::simulator::Simulator;
+    use crate::workload::TraceBuilder;
+
+    fn runs() -> (SurfaceModel, Vec<RunResult>) {
+        let cfg = ModelConfig::default_paper();
+        let sim = Simulator::new(&cfg);
+        let trace = TraceBuilder::paper(&cfg);
+        let model = SurfaceModel::from_config(&cfg);
+        (model, sim.run_paper_set(&trace))
+    }
+
+    #[test]
+    fn table1_has_three_rows() {
+        let (_, runs) = runs();
+        let rows: Vec<_> = runs.iter().map(|r| (r.policy.clone(), r.summary)).collect();
+        let t = table1(&rows);
+        assert_eq!(t.lines().count(), 4); // header + 3 policies
+        assert!(t.contains("DiagonalScale"));
+        assert!(t.contains("Horizontal-only"));
+        assert!(t.contains("Vertical-only"));
+    }
+
+    #[test]
+    fn heatmap_csv_dimensions() {
+        let (model, _) = runs();
+        let csv = heatmap_csv(&model, Surface::Cost, 10_000.0);
+        let lines: Vec<_> = csv.lines().collect();
+        assert_eq!(lines.len(), 5); // header + 4 H rows
+        assert_eq!(lines[0], "h,small,medium,large,xlarge");
+        assert!(lines[1].starts_with("1,"));
+        assert!(lines[4].starts_with("8,"));
+    }
+
+    #[test]
+    fn surface_csv_is_long_form() {
+        let (model, _) = runs();
+        let csv = surface_csv(&model, Surface::Latency, 10_000.0);
+        assert_eq!(csv.lines().count(), 17); // header + 16 cells
+    }
+
+    #[test]
+    fn timeseries_has_a_column_per_policy() {
+        let (_, runs) = runs();
+        let csv = timeseries_csv(&runs, Metric::Latency);
+        let header = csv.lines().next().unwrap();
+        assert_eq!(header.split(',').count(), 4);
+        assert_eq!(csv.lines().count(), 51);
+    }
+
+    #[test]
+    fn trajectories_track_h_and_tier() {
+        let (model, runs) = runs();
+        let csv = trajectories_csv(&runs, &model);
+        assert_eq!(csv.lines().next().unwrap().split(',').count(), 7);
+        assert_eq!(csv.lines().count(), 51);
+    }
+
+    #[test]
+    fn ascii_heatmap_mentions_every_tier() {
+        let (model, _) = runs();
+        let art = heatmap_ascii(&model, Surface::Latency, 10_000.0);
+        for t in ["small", "medium", "large", "xlarge"] {
+            assert!(art.contains(t));
+        }
+    }
+
+    #[test]
+    fn write_all_figures_materializes_ten_files() {
+        let (model, runs) = runs();
+        let dir = crate::testkit::TempDir::new().unwrap();
+        let files = write_all_figures(dir.path(), &model, &runs, 10_000.0).unwrap();
+        assert_eq!(files.len(), 10);
+        for f in files {
+            assert!(std::fs::metadata(&f).unwrap().len() > 0);
+        }
+    }
+}

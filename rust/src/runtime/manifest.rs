@@ -1,0 +1,254 @@
+//! Artifact manifest: `python/compile/aot.py` emits
+//! `artifacts/manifest.json` describing every entry point (file, arg
+//! shapes, output arity) plus the packed-parameter ABI version; the
+//! engine validates it before compiling anything.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ABI_VERSION;
+use crate::util::json;
+
+/// One AOT entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntryPoint {
+    pub file: String,
+    /// Argument shapes, in call order.
+    pub args: Vec<Vec<usize>>,
+    pub num_outputs: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub abi_version: u64,
+    pub grid: usize,
+    pub params_len: usize,
+    pub neighbor_rows: usize,
+    pub neighbor_cols: usize,
+    pub rec_len: usize,
+    pub entry_points: BTreeMap<String, EntryPoint>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.as_ref().display()
+            )
+        })?;
+        Self::from_json(&text).context("parsing manifest.json")
+    }
+
+    /// Parse from JSON text (the shape `aot.py` emits).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(json::Value::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing numeric field `{k}`"))
+        };
+        let mut entry_points = BTreeMap::new();
+        let eps = v
+            .get("entry_points")
+            .and_then(json::Value::as_object)
+            .ok_or_else(|| anyhow!("manifest missing `entry_points`"))?;
+        for (name, ep) in eps {
+            let file = ep
+                .get("file")
+                .and_then(json::Value::as_str)
+                .ok_or_else(|| anyhow!("entry `{name}` missing `file`"))?
+                .to_string();
+            let args = ep
+                .get("args")
+                .and_then(json::Value::as_array)
+                .ok_or_else(|| anyhow!("entry `{name}` missing `args`"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_array()
+                        .ok_or_else(|| anyhow!("entry `{name}`: bad arg shape"))?
+                        .iter()
+                        .map(|d| {
+                            d.as_usize()
+                                .ok_or_else(|| anyhow!("entry `{name}`: bad dim"))
+                        })
+                        .collect::<Result<Vec<usize>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let num_outputs = ep
+                .get("num_outputs")
+                .and_then(json::Value::as_usize)
+                .ok_or_else(|| anyhow!("entry `{name}` missing `num_outputs`"))?;
+            entry_points.insert(name.clone(), EntryPoint { file, args, num_outputs });
+        }
+        Ok(Self {
+            abi_version: v
+                .get("abi_version")
+                .and_then(json::Value::as_u64)
+                .ok_or_else(|| anyhow!("manifest missing `abi_version`"))?,
+            grid: field("grid")?,
+            params_len: field("params_len")?,
+            neighbor_rows: field("neighbor_rows")?,
+            neighbor_cols: field("neighbor_cols")?,
+            rec_len: field("rec_len")?,
+            entry_points,
+        })
+    }
+
+    /// Check the artifact ABI matches what this crate was built for.
+    pub fn validate(&self) -> Result<()> {
+        if self.abi_version != ABI_VERSION {
+            return Err(anyhow!(
+                "artifact ABI v{} != crate ABI v{ABI_VERSION}: re-run `make artifacts`",
+                self.abi_version
+            ));
+        }
+        if self.grid != crate::GRID {
+            return Err(anyhow!("artifact grid {} != {}", self.grid, crate::GRID));
+        }
+        if self.params_len != crate::PARAMS_LEN {
+            return Err(anyhow!(
+                "artifact params_len {} != {}",
+                self.params_len,
+                crate::PARAMS_LEN
+            ));
+        }
+        if self.rec_len != crate::REC_LEN {
+            return Err(anyhow!(
+                "artifact rec_len {} != {}",
+                self.rec_len,
+                crate::REC_LEN
+            ));
+        }
+        for required in ["surfaces", "neighbor", "queueing"] {
+            if !self.entry_points.contains_key(required) {
+                return Err(anyhow!("manifest missing entry point `{required}`"));
+            }
+        }
+        if self.trace_lengths().is_empty() {
+            return Err(anyhow!("manifest has no policy_trace_<T> entry points"));
+        }
+        Ok(())
+    }
+
+    /// Compiled `policy_trace` lengths, ascending.
+    pub fn trace_lengths(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entry_points
+            .keys()
+            .filter_map(|k| k.strip_prefix("policy_trace_"))
+            .filter_map(|t| t.parse().ok())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let mut entry_points = BTreeMap::new();
+        entry_points.insert(
+            "surfaces".into(),
+            EntryPoint { file: "surfaces.hlo.txt".into(), args: vec![vec![8]], num_outputs: 5 },
+        );
+        entry_points.insert(
+            "neighbor".into(),
+            EntryPoint { file: "neighbor.hlo.txt".into(), args: vec![], num_outputs: 2 },
+        );
+        entry_points.insert(
+            "queueing".into(),
+            EntryPoint { file: "queueing.hlo.txt".into(), args: vec![], num_outputs: 7 },
+        );
+        entry_points.insert(
+            "policy_trace_50".into(),
+            EntryPoint { file: "policy_trace_50.hlo.txt".into(), args: vec![], num_outputs: 1 },
+        );
+        entry_points.insert(
+            "policy_trace_200".into(),
+            EntryPoint { file: "policy_trace_200.hlo.txt".into(), args: vec![], num_outputs: 1 },
+        );
+        Manifest {
+            abi_version: ABI_VERSION,
+            grid: crate::GRID,
+            params_len: crate::PARAMS_LEN,
+            neighbor_rows: 16,
+            neighbor_cols: 16,
+            rec_len: crate::REC_LEN,
+            entry_points,
+        }
+    }
+
+    #[test]
+    fn valid_manifest_passes() {
+        sample().validate().unwrap();
+    }
+
+    #[test]
+    fn wrong_abi_rejected() {
+        let mut m = sample();
+        m.abi_version = 999;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn wrong_grid_rejected() {
+        let mut m = sample();
+        m.grid = 4;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn missing_entry_point_rejected() {
+        let mut m = sample();
+        m.entry_points.remove("surfaces");
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn trace_lengths_sorted() {
+        assert_eq!(sample().trace_lengths(), vec![50, 200]);
+    }
+
+    #[test]
+    fn missing_trace_rejected() {
+        let mut m = sample();
+        m.entry_points.remove("policy_trace_50");
+        m.entry_points.remove("policy_trace_200");
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn parses_aot_json_shape() {
+        let text = r#"{
+          "abi_version": 1, "grid": 8, "params_len": 32,
+          "neighbor_rows": 16, "neighbor_cols": 16, "rec_len": 8,
+          "entry_points": {
+            "surfaces": {"file": "surfaces.hlo.txt",
+                         "args": [[8],[8,5],[32],[8,8]], "num_outputs": 5}
+          }
+        }"#;
+        let m = Manifest::from_json(text).unwrap();
+        assert_eq!(m.abi_version, 1);
+        assert_eq!(m.entry_points["surfaces"].args[1], vec![8, 5]);
+        assert_eq!(m.entry_points["surfaces"].num_outputs, 5);
+    }
+
+    #[test]
+    fn malformed_json_is_error() {
+        assert!(Manifest::from_json("{").is_err());
+        assert!(Manifest::from_json("{}").is_err());
+    }
+
+    #[test]
+    fn missing_file_is_helpful_error() {
+        let err = Manifest::load("/nonexistent/manifest.json").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

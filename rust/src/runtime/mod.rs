@@ -1,0 +1,457 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust decision
+//! path. Python never runs here — the artifacts are plain HLO text,
+//! compiled once per process by the PJRT CPU client.
+//!
+//! Pattern follows `/opt/xla-example/src/bin/load_hlo.rs`:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`.
+
+mod manifest;
+
+pub use manifest::{EntryPoint, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::config::{grid_arrays, pack_params, ModelConfig, MoveFlags};
+use crate::workload::Trace;
+use crate::{GRID, PARAMS_LEN, REC_LEN};
+
+/// All five surfaces over the padded grid, as returned by the
+/// `surfaces` artifact (row-major `GRID x GRID`, padding zeroed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SurfaceGrids {
+    pub latency: Vec<f32>,
+    pub throughput: Vec<f32>,
+    pub cost: Vec<f32>,
+    pub coordination: Vec<f32>,
+    pub objective: Vec<f32>,
+}
+
+/// Row-major grid lookup at plane indices.
+pub fn grid_at(grid: &[f32], h_idx: usize, v_idx: usize) -> f32 {
+    grid[h_idx * GRID + v_idx]
+}
+
+/// One decoded `policy_trace` step record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRecord {
+    pub h_idx: usize,
+    pub v_idx: usize,
+    pub latency: f32,
+    pub throughput: f32,
+    pub cost: f32,
+    pub objective: f32,
+    pub latency_violation: bool,
+    pub throughput_violation: bool,
+}
+
+/// The PJRT engine: one compiled executable per artifact entry point.
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Load every artifact listed in `<dir>/manifest.json` and compile
+    /// it on the PJRT CPU client. Validates the manifest ABI.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        manifest.validate()?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        let mut executables = HashMap::new();
+        for (name, ep) in &manifest.entry_points {
+            let path = dir.join(&ep.file);
+            let exe = Self::compile_file(&client, &path)
+                .with_context(|| format!("compiling artifact `{name}`"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Self { client, manifest, executables, dir })
+    }
+
+    /// Default artifact location (`artifacts/` at the repo root or the
+    /// `DIAGONAL_SCALE_ARTIFACTS` env override).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("DIAGONAL_SCALE_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    fn compile_file(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+        if !path.exists() {
+            return Err(anyhow!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            ));
+        }
+        let proto = HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .map_err(|e| anyhow!("PJRT compile {}: {e}", path.display()))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute an entry point with positional literal arguments and
+    /// decompose the (always-tupled) result.
+    pub fn execute(&self, name: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown entry point `{name}`"))?;
+        let ep = &self.manifest.entry_points[name];
+        if args.len() != ep.args.len() {
+            return Err(anyhow!(
+                "`{name}` expects {} args, got {}",
+                ep.args.len(),
+                args.len()
+            ));
+        }
+        let result = exe
+            .execute::<Literal>(args)
+            .map_err(|e| anyhow!("executing `{name}`: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching `{name}` result: {e}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing `{name}` result: {e}"))?;
+        if parts.len() != ep.num_outputs {
+            return Err(anyhow!(
+                "`{name}` returned {} outputs, manifest says {}",
+                parts.len(),
+                ep.num_outputs
+            ));
+        }
+        Ok(parts)
+    }
+
+    fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))
+    }
+
+    /// Upload host data to a device-resident buffer (done once for the
+    /// static grid arguments — the §Perf buffer-reuse optimization).
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("host->device upload: {e}"))
+    }
+
+    /// Execute an entry point with pre-uploaded device buffers (hot
+    /// path: skips per-call literal creation for static arguments).
+    pub fn execute_buffers(&self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown entry point `{name}`"))?;
+        let ep = &self.manifest.entry_points[name];
+        if args.len() != ep.args.len() {
+            return Err(anyhow!(
+                "`{name}` expects {} args, got {}",
+                ep.args.len(),
+                args.len()
+            ));
+        }
+        let result = exe
+            .execute_b::<&PjRtBuffer>(args)
+            .map_err(|e| anyhow!("executing `{name}`: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching `{name}` result: {e}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing `{name}` result: {e}"))?;
+        if parts.len() != ep.num_outputs {
+            return Err(anyhow!(
+                "`{name}` returned {} outputs, manifest says {}",
+                parts.len(),
+                ep.num_outputs
+            ));
+        }
+        Ok(parts)
+    }
+}
+
+/// High-level typed facade over the engine for the Diagonal Scaling
+/// entry points, with the static grid literals built once per model
+/// config (hot-path friendly: only the parameter vector changes per
+/// decision).
+pub struct SurfaceEngine {
+    engine: Engine,
+    hs: Literal,
+    tiers: Literal,
+    mask: Literal,
+    /// Device-resident copies of the static grid arguments (§Perf
+    /// buffer reuse: uploaded once, reused on every hot-path call).
+    hs_buf: PjRtBuffer,
+    tiers_buf: PjRtBuffer,
+    mask_buf: PjRtBuffer,
+    cfg: ModelConfig,
+}
+
+impl SurfaceEngine {
+    pub fn new(engine: Engine, cfg: &ModelConfig) -> Result<Self> {
+        if cfg.plane.grid != GRID {
+            return Err(anyhow!(
+                "config grid {} != artifact grid {GRID}",
+                cfg.plane.grid
+            ));
+        }
+        let (hs, tiers, mask) = grid_arrays(cfg);
+        let hs_buf = engine.upload(&hs, &[GRID])?;
+        let tiers_buf = engine.upload(&tiers, &[GRID, 5])?;
+        let mask_buf = engine.upload(&mask, &[GRID, GRID])?;
+        Ok(Self {
+            hs: Literal::vec1(&hs),
+            tiers: Literal::vec1(&tiers)
+                .reshape(&[GRID as i64, 5])
+                .map_err(|e| anyhow!("tiers reshape: {e}"))?,
+            mask: Literal::vec1(&mask)
+                .reshape(&[GRID as i64, GRID as i64])
+                .map_err(|e| anyhow!("mask reshape: {e}"))?,
+            hs_buf,
+            tiers_buf,
+            mask_buf,
+            engine,
+            cfg: cfg.clone(),
+        })
+    }
+
+    /// Load from the default artifact dir with a config.
+    pub fn from_config(cfg: &ModelConfig) -> Result<Self> {
+        Self::new(Engine::load(Engine::default_dir())?, cfg)
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    fn params_literal(&self, lambda_req: f32, moves: MoveFlags) -> Literal {
+        let p = pack_params(&self.cfg, lambda_req, moves);
+        Literal::vec1(&p)
+    }
+
+    /// Evaluate the five surfaces over the plane via the AOT kernel.
+    /// Hot path: the static grid arguments live on-device; only the
+    /// 32-float parameter vector is transferred per call.
+    pub fn surfaces(&self, lambda_req: f32) -> Result<SurfaceGrids> {
+        let p = pack_params(&self.cfg, lambda_req, MoveFlags::DIAGONAL);
+        let params = self.engine.upload(&p, &[PARAMS_LEN])?;
+        let out = self.engine.execute_buffers(
+            "surfaces",
+            &[&self.hs_buf, &self.tiers_buf, &params, &self.mask_buf],
+        )?;
+        let mut grids: Vec<Vec<f32>> = out
+            .iter()
+            .map(Engine::to_vec_f32)
+            .collect::<Result<_>>()?;
+        let objective = grids.pop().unwrap();
+        let coordination = grids.pop().unwrap();
+        let cost = grids.pop().unwrap();
+        let throughput = grids.pop().unwrap();
+        let latency = grids.pop().unwrap();
+        Ok(SurfaceGrids { latency, throughput, cost, coordination, objective })
+    }
+
+    /// Evaluate the five surfaces over the *wide* disaggregated plane
+    /// (paper VIII; `surfaces_wide` artifact). Arrays follow the
+    /// `disagg::wide_grid_arrays` ABI; returns five row-major
+    /// `GRID x W` grids `(L, T, C, K, F)`.
+    pub fn surfaces_wide(
+        &self,
+        hs: &[f32],
+        tiers: &[f32],
+        mask: &[f32],
+        lambda_req: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        let ep = self
+            .engine
+            .manifest
+            .entry_points
+            .get("surfaces_wide")
+            .ok_or_else(|| anyhow!("artifacts lack `surfaces_wide` — re-run `make artifacts`"))?;
+        let w = ep.args[1][0] as i64;
+        if tiers.len() != (w * 5) as usize || mask.len() != GRID * w as usize {
+            return Err(anyhow!("wide arrays must be {w}x5 tiers and {GRID}x{w} mask"));
+        }
+        let params = self.params_literal(lambda_req, MoveFlags::DIAGONAL);
+        let out = self.engine.execute(
+            "surfaces_wide",
+            &[
+                Literal::vec1(hs),
+                Literal::vec1(tiers)
+                    .reshape(&[w, 5])
+                    .map_err(|e| anyhow!("wide tiers reshape: {e}"))?,
+                params,
+                Literal::vec1(mask)
+                    .reshape(&[GRID as i64, w])
+                    .map_err(|e| anyhow!("wide mask reshape: {e}"))?,
+            ],
+        )?;
+        out.iter().map(Engine::to_vec_f32).collect()
+    }
+
+    /// Utilization-corrected latency grid (paper VIII):
+    /// `(l_final, saturated)` plus the five raw surfaces.
+    pub fn queueing(&self, lambda_req: f32) -> Result<(Vec<f32>, Vec<f32>, SurfaceGrids)> {
+        let p = pack_params(&self.cfg, lambda_req, MoveFlags::DIAGONAL);
+        let params = self.engine.upload(&p, &[PARAMS_LEN])?;
+        let out = self.engine.execute_buffers(
+            "queueing",
+            &[&self.hs_buf, &self.tiers_buf, &params, &self.mask_buf],
+        )?;
+        let v: Vec<Vec<f32>> = out
+            .iter()
+            .map(Engine::to_vec_f32)
+            .collect::<Result<_>>()?;
+        let [l_final, sat, lat, thr, cost, coord, obj]: [Vec<f32>; 7] =
+            v.try_into().map_err(|_| anyhow!("queueing arity"))?;
+        Ok((
+            l_final,
+            sat,
+            SurfaceGrids {
+                latency: lat,
+                throughput: thr,
+                cost,
+                coordination: coord,
+                objective: obj,
+            },
+        ))
+    }
+
+    /// Run the whole Algorithm-1 simulation inside XLA (the
+    /// `policy_trace_T` artifacts). The trace length must fit one of
+    /// the compiled lengths; shorter traces are zero-padded and
+    /// truncated on return.
+    pub fn policy_trace(
+        &self,
+        trace: &Trace,
+        moves: MoveFlags,
+        start: (usize, usize),
+    ) -> Result<Vec<TraceRecord>> {
+        let steps = trace.len();
+        let compiled = self
+            .engine
+            .manifest
+            .trace_lengths()
+            .into_iter()
+            .filter(|&t| t >= steps)
+            .min()
+            .ok_or_else(|| {
+                anyhow!("no policy_trace artifact can hold {steps} steps")
+            })?;
+        let name = format!("policy_trace_{compiled}");
+
+        let mut flat = trace.to_flat();
+        flat.resize(compiled * 2, 0.0);
+        let trace_lit = Literal::vec1(&flat)
+            .reshape(&[compiled as i64, 2])
+            .map_err(|e| anyhow!("trace reshape: {e}"))?;
+        let start_lit = Literal::vec1(&[start.0 as f32, start.1 as f32]);
+        let params = self.params_literal(0.0, moves); // per-step lambda in trace
+
+        let out = self.engine.execute(
+            &name,
+            &[
+                self.hs.clone(),
+                self.tiers.clone(),
+                params,
+                self.mask.clone(),
+                trace_lit,
+                start_lit,
+            ],
+        )?;
+        let recs = Engine::to_vec_f32(&out[0])?;
+        if recs.len() != compiled * REC_LEN {
+            return Err(anyhow!(
+                "policy_trace returned {} floats, expected {}",
+                recs.len(),
+                compiled * REC_LEN
+            ));
+        }
+        Ok(recs
+            .chunks_exact(REC_LEN)
+            .take(steps)
+            .map(|c| TraceRecord {
+                h_idx: c[0] as usize,
+                v_idx: c[1] as usize,
+                latency: c[2],
+                throughput: c[3],
+                cost: c[4],
+                objective: c[5],
+                latency_violation: c[6] > 0.5,
+                throughput_violation: c[7] > 0.5,
+            })
+            .collect())
+    }
+
+    /// Score a padded candidate batch via the `neighbor` artifact.
+    /// `cand` is row-major `[rows, cols]` as documented in
+    /// `python/compile/defaults.py`; returns `(scores, feasible)`.
+    pub fn neighbor_scores(
+        &self,
+        cand: &[f32],
+        lambda_req: f32,
+        moves: MoveFlags,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let ep = &self.engine.manifest.entry_points["neighbor"];
+        let rows = ep.args[0][0] as i64;
+        let cols = ep.args[0][1] as i64;
+        if cand.len() != (rows * cols) as usize {
+            return Err(anyhow!(
+                "candidate batch must be {}x{} floats",
+                rows,
+                cols
+            ));
+        }
+        // hot path: direct host->device uploads, no literal roundtrip
+        let cand_buf = self
+            .engine
+            .upload(cand, &[rows as usize, cols as usize])?;
+        let p = pack_params(&self.cfg, lambda_req, moves);
+        let params = self.engine.upload(&p, &[PARAMS_LEN])?;
+        let out = self
+            .engine
+            .execute_buffers("neighbor", &[&cand_buf, &params])?;
+        Ok((Engine::to_vec_f32(&out[0])?, Engine::to_vec_f32(&out[1])?))
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Sanity check: parameter-vector agreement between the config
+    /// packing and the artifact manifest.
+    pub fn check_abi(&self) -> Result<()> {
+        let m = &self.engine.manifest;
+        if m.params_len != PARAMS_LEN {
+            return Err(anyhow!(
+                "artifact params_len {} != crate PARAMS_LEN {PARAMS_LEN}",
+                m.params_len
+            ));
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,296 @@
+//! The Phase-1 analytical simulator (paper §V): drives a policy over a
+//! workload trace against the analytical surfaces and records the §V.E
+//! metrics.
+//!
+//! Semantics (shared bit-for-bit with `python/compile/model.policy_trace`
+//! and the numpy calibrator — see `python/compile/defaults.py`):
+//!
+//! * **serve-then-move** — the configuration carried into step *t*
+//!   serves workload *t*; the decision made at *t* takes effect at
+//!   *t + 1* (reconfiguration is not instantaneous).
+//! * measured latency is the §VIII utilization-corrected latency; the
+//!   reported objective uses it.
+//! * violations audit raw latency against `l_max` and served throughput
+//!   against the *raw* requirement.
+
+use crate::config::{ModelConfig, MoveFlags};
+use crate::metrics::{Recorder, StepRecord, Summary};
+use crate::plane::Configuration;
+use crate::policy::{DiagonalScale, Policy, PolicyContext};
+use crate::sla::SlaSpec;
+use crate::surfaces::SurfaceModel;
+use crate::workload::Trace;
+
+/// The paper's three compared policies plus the extensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Diagonal,
+    HorizontalOnly,
+    VerticalOnly,
+    Threshold,
+    Oracle,
+    /// Lookahead with the given depth (paper VIII).
+    Lookahead(usize),
+    Static,
+}
+
+impl PolicyKind {
+    pub fn build(&self) -> Box<dyn Policy> {
+        match self {
+            PolicyKind::Diagonal => Box::new(DiagonalScale::diagonal()),
+            PolicyKind::HorizontalOnly => Box::new(DiagonalScale::horizontal_only()),
+            PolicyKind::VerticalOnly => Box::new(DiagonalScale::vertical_only()),
+            PolicyKind::Threshold => Box::new(crate::policy::Threshold::default()),
+            PolicyKind::Oracle => Box::new(crate::policy::Oracle),
+            PolicyKind::Lookahead(d) => {
+                Box::new(crate::policy::Lookahead::new(MoveFlags::DIAGONAL, *d))
+            }
+            PolicyKind::Static => Box::new(crate::policy::StaticPolicy),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            PolicyKind::Diagonal => "DiagonalScale".into(),
+            PolicyKind::HorizontalOnly => "Horizontal-only".into(),
+            PolicyKind::VerticalOnly => "Vertical-only".into(),
+            PolicyKind::Threshold => "Threshold".into(),
+            PolicyKind::Oracle => "Oracle".into(),
+            PolicyKind::Lookahead(d) => format!("Lookahead-{d}"),
+            PolicyKind::Static => "Static".into(),
+        }
+    }
+
+    /// The three policies of the paper's evaluation (§V.D).
+    pub fn paper_set() -> [PolicyKind; 3] {
+        [PolicyKind::Diagonal, PolicyKind::HorizontalOnly, PolicyKind::VerticalOnly]
+    }
+}
+
+/// A complete run: the per-step records plus the summary.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub policy: String,
+    pub records: Vec<StepRecord>,
+    pub summary: Summary,
+    /// Number of steps on which the Algorithm-1 fallback fired.
+    pub fallbacks: usize,
+}
+
+impl RunResult {
+    /// Trajectory through the plane — Figure 5's data.
+    pub fn trajectory(&self) -> Vec<Configuration> {
+        self.records.iter().map(|r| r.config).collect()
+    }
+}
+
+/// Phase-1 analytical simulator.
+pub struct Simulator {
+    model: SurfaceModel,
+    sla: SlaSpec,
+    reb_h: f32,
+    reb_v: f32,
+    plan_queue: bool,
+    start: Configuration,
+}
+
+impl Simulator {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        Self {
+            model: SurfaceModel::from_config(cfg),
+            sla: SlaSpec::from_config(cfg),
+            reb_h: cfg.policy.reb_h,
+            reb_v: cfg.policy.reb_v,
+            plan_queue: cfg.policy.plan_queue,
+            start: Configuration::new(cfg.policy.start[0], cfg.policy.start[1]),
+        }
+    }
+
+    /// Override the planner-queueing extension flag (ablation A5).
+    pub fn with_plan_queue(mut self, on: bool) -> Self {
+        self.plan_queue = on;
+        self
+    }
+
+    /// Override the start configuration.
+    pub fn with_start(mut self, start: Configuration) -> Self {
+        assert!(self.model.plane().contains(&start));
+        self.start = start;
+        self
+    }
+
+    /// Override the rebalance weights (ablation A2).
+    pub fn with_rebalance(mut self, reb_h: f32, reb_v: f32) -> Self {
+        self.reb_h = reb_h;
+        self.reb_v = reb_v;
+        self
+    }
+
+    pub fn model(&self) -> &SurfaceModel {
+        &self.model
+    }
+
+    pub fn sla(&self) -> &SlaSpec {
+        &self.sla
+    }
+
+    pub fn start(&self) -> Configuration {
+        self.start
+    }
+
+    /// Run one policy over a trace.
+    pub fn run(&self, kind: PolicyKind, trace: &Trace) -> RunResult {
+        let mut policy = kind.build();
+        self.run_boxed(policy.as_mut(), &kind.label(), trace)
+    }
+
+    /// Run an arbitrary policy object over a trace.
+    pub fn run_boxed(&self, policy: &mut dyn Policy, label: &str, trace: &Trace) -> RunResult {
+        let mut recorder = Recorder::with_capacity(trace.len());
+        let mut fallbacks = 0usize;
+        let mut current = self.start;
+
+        for (t, w) in trace.points.iter().enumerate() {
+            // ---- serve + measure at the carried-in configuration ----
+            let point = self.model.evaluate(&current, w.lambda_req);
+            let lat_eff = self.model.effective_latency(&current, w.lambda_req);
+            let obj_eff = self.model.effective_objective(&current, w.lambda_req);
+            recorder.push(StepRecord {
+                step: t,
+                config: current,
+                lambda_req: w.lambda_req,
+                latency: lat_eff,
+                latency_raw: point.latency,
+                throughput: point.throughput,
+                cost: point.cost,
+                objective: obj_eff,
+                violation: self.sla.audit(point.latency, point.throughput, w.lambda_req),
+            });
+
+            // ---- decide; takes effect next step ----------------------
+            let ctx = PolicyContext {
+                model: &self.model,
+                sla: &self.sla,
+                reb_h: self.reb_h,
+                reb_v: self.reb_v,
+                plan_queue: self.plan_queue,
+                future: &trace.points[(t + 1).min(trace.len())..],
+            };
+            let d = policy.decide(current, *w, &ctx);
+            debug_assert!(self.model.plane().contains(&d.next));
+            if d.fallback {
+                fallbacks += 1;
+            }
+            current = d.next;
+        }
+
+        RunResult {
+            policy: label.to_string(),
+            summary: recorder.summary(),
+            records: recorder.records().to_vec(),
+            fallbacks,
+        }
+    }
+
+    /// Run the paper's three policies (Table I).
+    pub fn run_paper_set(&self, trace: &Trace) -> Vec<RunResult> {
+        PolicyKind::paper_set()
+            .iter()
+            .map(|k| self.run(*k, trace))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TraceBuilder;
+
+    fn sim() -> (Simulator, Trace) {
+        let cfg = ModelConfig::default_paper();
+        let trace = TraceBuilder::paper(&cfg);
+        (Simulator::new(&cfg), trace)
+    }
+
+    #[test]
+    fn table_one_shape_holds() {
+        let (sim, trace) = sim();
+        let rs = sim.run_paper_set(&trace);
+        let (ds, hz, vt) = (&rs[0].summary, &rs[1].summary, &rs[2].summary);
+        // violations: DS < V < H (paper: 3 < 21 < 32)
+        assert!(ds.violations < vt.violations);
+        assert!(vt.violations < hz.violations);
+        assert!(ds.violations <= 5);
+        assert!(hz.violations >= 25);
+        // latency: DS < V < H (paper: 4.05 < 4.89 < 13.06)
+        assert!(ds.avg_latency < vt.avg_latency);
+        assert!(vt.avg_latency < hz.avg_latency);
+        // objective: DS < V < H (paper: 65.53 < 77.70 < 180.94)
+        assert!(ds.avg_objective < vt.avg_objective);
+        assert!(vt.avg_objective < hz.avg_objective);
+        // cost premium: DS pays at least as much as the baselines
+        assert!(ds.avg_cost >= vt.avg_cost);
+        assert!(ds.avg_cost >= hz.avg_cost);
+        // throughput: DS highest
+        assert!(ds.avg_throughput > hz.avg_throughput);
+    }
+
+    #[test]
+    fn records_cover_every_step() {
+        let (sim, trace) = sim();
+        let r = sim.run(PolicyKind::Diagonal, &trace);
+        assert_eq!(r.records.len(), 50);
+        assert_eq!(r.summary.steps, 50);
+        assert!((r.summary.avg_required - 9600.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn first_step_serves_start_config() {
+        let (sim, trace) = sim();
+        let r = sim.run(PolicyKind::Diagonal, &trace);
+        assert_eq!(r.records[0].config, sim.start());
+    }
+
+    #[test]
+    fn axis_policies_respect_their_axis() {
+        let (sim, trace) = sim();
+        let h = sim.run(PolicyKind::HorizontalOnly, &trace);
+        assert!(h.records.iter().all(|r| r.config.v_idx == 1));
+        let v = sim.run(PolicyKind::VerticalOnly, &trace);
+        assert!(v.records.iter().all(|r| r.config.h_idx == 1));
+    }
+
+    #[test]
+    fn oracle_never_worse_on_violations() {
+        let (sim, trace) = sim();
+        let ds = sim.run(PolicyKind::Diagonal, &trace);
+        let oracle = sim.run(PolicyKind::Oracle, &trace);
+        assert!(oracle.summary.violations <= ds.summary.violations + 1);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (sim, trace) = sim();
+        let a = sim.run(PolicyKind::Diagonal, &trace);
+        let b = sim.run(PolicyKind::Diagonal, &trace);
+        assert_eq!(a.records, b.records);
+    }
+
+    #[test]
+    fn static_policy_never_moves() {
+        let (sim, trace) = sim();
+        let r = sim.run(PolicyKind::Static, &trace);
+        assert!(r.records.iter().all(|rec| rec.config == sim.start()));
+    }
+
+    #[test]
+    fn lookahead_no_worse_than_greedy_on_spike() {
+        let cfg = ModelConfig::default_paper();
+        let sim = Simulator::new(&cfg);
+        let b = TraceBuilder::from_config(&cfg);
+        let trace = b.spike(60.0, 160.0, 10, 10, 30);
+        let greedy = sim.run(PolicyKind::Diagonal, &trace);
+        let ahead = sim.run(PolicyKind::Lookahead(3), &trace);
+        assert!(ahead.summary.violations <= greedy.summary.violations);
+    }
+}

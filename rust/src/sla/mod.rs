@@ -1,0 +1,144 @@
+//! SLA specification, feasibility, and violation accounting (paper
+//! §IV.C, §V.E).
+//!
+//! Feasibility (the *planner's* filter) uses the latency bound and a
+//! buffered throughput requirement `lambda_req * b_sla`; violation
+//! accounting (the *auditor*) charges a step when the served
+//! configuration misses the latency bound or the raw requirement —
+//! the buffer is planning headroom, not part of the contract.
+
+
+use crate::config::ModelConfig;
+
+/// The SLA contract.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SlaSpec {
+    /// Maximum acceptable (raw analytical) latency L_max.
+    pub l_max: f32,
+    /// Throughput planning buffer b_sla (>= 1 keeps headroom).
+    pub b_sla: f32,
+}
+
+impl SlaSpec {
+    pub fn new(l_max: f32, b_sla: f32) -> Self {
+        Self { l_max, b_sla }
+    }
+
+    pub fn from_config(cfg: &ModelConfig) -> Self {
+        Self::new(cfg.sla.l_max, cfg.sla.b_sla)
+    }
+
+    /// The planner's minimum acceptable throughput for a demand level.
+    pub fn t_min(&self, lambda_req: f32) -> f32 {
+        lambda_req * self.b_sla
+    }
+
+    /// Planner-side feasibility (paper IV.C).
+    pub fn feasible(&self, latency: f32, throughput: f32, lambda_req: f32) -> bool {
+        latency <= self.l_max && throughput >= self.t_min(lambda_req)
+    }
+
+    /// Auditor-side violation of a *served* step.
+    pub fn audit(&self, raw_latency: f32, throughput: f32, lambda_req: f32) -> Violation {
+        Violation {
+            latency: raw_latency > self.l_max,
+            throughput: throughput < lambda_req,
+        }
+    }
+}
+
+/// Decomposed SLA violation for one served step (paper V.E).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Violation {
+    pub latency: bool,
+    pub throughput: bool,
+}
+
+impl Violation {
+    pub fn any(&self) -> bool {
+        self.latency || self.throughput
+    }
+}
+
+/// Running violation tally over a simulation (paper Table I column).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ViolationCounter {
+    pub steps: usize,
+    pub violated_steps: usize,
+    pub latency_violations: usize,
+    pub throughput_violations: usize,
+}
+
+impl ViolationCounter {
+    pub fn record(&mut self, v: Violation) {
+        self.steps += 1;
+        if v.any() {
+            self.violated_steps += 1;
+        }
+        if v.latency {
+            self.latency_violations += 1;
+        }
+        if v.throughput {
+            self.throughput_violations += 1;
+        }
+    }
+
+    /// Fraction of steps in violation.
+    pub fn rate(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.violated_steps as f64 / self.steps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sla() -> SlaSpec {
+        SlaSpec::new(5.0, 1.15)
+    }
+
+    #[test]
+    fn feasibility_uses_buffered_throughput() {
+        let s = sla();
+        assert!(s.feasible(4.0, 1150.0, 1000.0));
+        assert!(!s.feasible(4.0, 1100.0, 1000.0)); // meets raw, not buffer
+        assert!(!s.feasible(5.1, 99999.0, 1000.0));
+    }
+
+    #[test]
+    fn audit_uses_raw_requirement() {
+        let s = sla();
+        // planner-infeasible but not an audit violation (buffer zone)
+        let v = s.audit(4.0, 1100.0, 1000.0);
+        assert!(!v.any());
+        let v = s.audit(6.0, 900.0, 1000.0);
+        assert!(v.latency && v.throughput);
+    }
+
+    #[test]
+    fn boundary_conditions() {
+        let s = sla();
+        assert!(s.feasible(5.0, 1150.0, 1000.0)); // L == L_max passes
+        let v = s.audit(5.0, 1000.0, 1000.0); // equality is not violation
+        assert!(!v.any());
+    }
+
+    #[test]
+    fn counter_decomposes() {
+        let s = sla();
+        let mut c = ViolationCounter::default();
+        c.record(s.audit(6.0, 2000.0, 1000.0)); // latency only
+        c.record(s.audit(1.0, 500.0, 1000.0)); // throughput only
+        c.record(s.audit(6.0, 500.0, 1000.0)); // both
+        c.record(s.audit(1.0, 2000.0, 1000.0)); // none
+        assert_eq!(c.steps, 4);
+        assert_eq!(c.violated_steps, 3);
+        assert_eq!(c.latency_violations, 2);
+        assert_eq!(c.throughput_violations, 2);
+        assert!((c.rate() - 0.75).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,354 @@
+//! Native implementation of the five analytical surfaces (paper §III)
+//! and the §VIII queueing extension.
+//!
+//! This is the rust twin of the Pallas kernels in
+//! `python/compile/kernels/`; the integration tests assert the two agree
+//! to float tolerance on every grid cell (native vs HLO-executed).
+//! All math is `f32` and uses `exp(theta * ln H)` for the power term,
+//! exactly like the kernels, so the trajectories match bit-for-bit in
+//! structure.
+
+pub mod queueing;
+
+use crate::config::{ModelConfig, SurfaceConfig};
+use crate::plane::{Configuration, ScalingPlane, Tier};
+use crate::sla::SlaSpec;
+
+/// Point evaluation of every surface at one configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SurfacePoint {
+    /// L(H,V): node-intrinsic + coordination latency (paper III.C).
+    pub latency: f32,
+    /// T(H,V): aggregate throughput with diminishing returns (III.D).
+    pub throughput: f32,
+    /// C(H,V) = H * C_node(V): cluster cost (III.B).
+    pub cost: f32,
+    /// K(H,V): coordination cost under write pressure (III.E).
+    pub coordination: f32,
+    /// F(H,V) = alpha*L + beta*C + gamma*K - delta*T (III.F).
+    pub objective: f32,
+}
+
+/// The analytical surface model over a [`ScalingPlane`].
+#[derive(Debug, Clone)]
+pub struct SurfaceModel {
+    plane: ScalingPlane,
+    consts: SurfaceConfig,
+    write_ratio: f32,
+    // §Perf: the plane is tiny and fixed, so every per-axis term is
+    // precomputed at construction — the per-decision hot path does no
+    // ln/exp/pow at all.
+    l_node_cache: Vec<f32>,
+    t_node_cache: Vec<f32>,
+    l_coord_cache: Vec<f32>,
+    phi_cache: Vec<f32>,
+}
+
+impl SurfaceModel {
+    pub fn new(plane: ScalingPlane, consts: SurfaceConfig, write_ratio: f32) -> Self {
+        let mut m = Self {
+            plane,
+            consts,
+            write_ratio,
+            l_node_cache: Vec::new(),
+            t_node_cache: Vec::new(),
+            l_coord_cache: Vec::new(),
+            phi_cache: Vec::new(),
+        };
+        m.l_node_cache = m.plane.tiers().iter().map(|t| m.node_latency(t)).collect();
+        m.t_node_cache = m
+            .plane
+            .tiers()
+            .iter()
+            .map(|t| m.node_throughput(t))
+            .collect();
+        m.l_coord_cache = m
+            .plane
+            .h_values()
+            .iter()
+            .map(|&h| m.coord_latency(h))
+            .collect();
+        m.phi_cache = m
+            .plane
+            .h_values()
+            .iter()
+            .map(|&h| m.horiz_efficiency(h))
+            .collect();
+        m
+    }
+
+    pub fn from_config(cfg: &ModelConfig) -> Self {
+        Self::new(cfg.plane(), cfg.surfaces, cfg.write_ratio())
+    }
+
+    pub fn plane(&self) -> &ScalingPlane {
+        &self.plane
+    }
+
+    pub fn constants(&self) -> &SurfaceConfig {
+        &self.consts
+    }
+
+    /// L_node(V) = a/cpu + b/ram + c/bw + d/(iops/1000)   (paper III.C).
+    pub fn node_latency(&self, tier: &Tier) -> f32 {
+        let s = &self.consts;
+        s.a / tier.cpu + s.b / tier.ram + s.c / tier.bandwidth + s.d / tier.iops_k()
+    }
+
+    /// L_coord(H) = eta ln H + mu H^theta   (paper III.C).
+    pub fn coord_latency(&self, h: u32) -> f32 {
+        let s = &self.consts;
+        let log_h = (h as f32).ln();
+        s.eta * log_h + s.mu * (s.theta * log_h).exp()
+    }
+
+    /// T_node(V) = kappa * min(cpu, ram, bw, iops/1000)   (paper III.D).
+    pub fn node_throughput(&self, tier: &Tier) -> f32 {
+        self.consts.kappa * tier.min_resource()
+    }
+
+    /// phi(H) = 1 / (1 + omega ln H)   (paper III.D).
+    pub fn horiz_efficiency(&self, h: u32) -> f32 {
+        1.0 / (1.0 + self.consts.omega * (h as f32).ln())
+    }
+
+    /// Latency surface L(H,V).
+    #[inline]
+    pub fn latency(&self, cfg: &Configuration) -> f32 {
+        self.l_node_cache[cfg.v_idx] + self.l_coord_cache[cfg.h_idx]
+    }
+
+    /// Throughput surface T(H,V).
+    #[inline]
+    pub fn throughput(&self, cfg: &Configuration) -> f32 {
+        self.plane.h_value(cfg) as f32 * self.t_node_cache[cfg.v_idx] * self.phi_cache[cfg.h_idx]
+    }
+
+    /// Cost surface C(H,V).
+    pub fn cost(&self, cfg: &Configuration) -> f32 {
+        self.plane.h_value(cfg) as f32 * self.plane.tier(cfg).cost
+    }
+
+    /// Coordination-cost surface K(H,V) for a write arrival rate.
+    #[inline]
+    pub fn coordination(&self, cfg: &Configuration, lambda_w: f32) -> f32 {
+        self.consts.rho * self.l_coord_cache[cfg.h_idx] * lambda_w / self.throughput(cfg)
+    }
+
+    /// Objective surface F(H,V) for a workload (paper III.F).
+    pub fn objective(&self, cfg: &Configuration, lambda_w: f32) -> f32 {
+        let s = &self.consts;
+        s.alpha * self.latency(cfg) + s.beta * self.cost(cfg)
+            + s.gamma * self.coordination(cfg, lambda_w)
+            - s.delta * self.throughput(cfg)
+    }
+
+    /// Every surface at one configuration for a required throughput
+    /// `lambda_req` (write rate derived via the configured write ratio).
+    #[inline]
+    pub fn evaluate(&self, cfg: &Configuration, lambda_req: f32) -> SurfacePoint {
+        let lambda_w = lambda_req * self.write_ratio;
+        let latency = self.latency(cfg);
+        let throughput = self.throughput(cfg);
+        let cost = self.cost(cfg);
+        let coordination =
+            self.consts.rho * self.l_coord_cache[cfg.h_idx] * lambda_w / throughput;
+        let s = &self.consts;
+        let objective = s.alpha * latency + s.beta * cost + s.gamma * coordination
+            - s.delta * throughput;
+        SurfacePoint { latency, throughput, cost, coordination, objective }
+    }
+
+    /// Evaluate the whole plane in row-major order (the heatmap figures).
+    pub fn evaluate_grid(&self, lambda_req: f32) -> Vec<(Configuration, SurfacePoint)> {
+        self.plane
+            .iter()
+            .map(|c| (c, self.evaluate(&c, lambda_req)))
+            .collect()
+    }
+
+    /// Measured (utilization-corrected) latency at a configuration
+    /// (paper VIII): `L / (1 - min(lambda_req / T, u_max))`.
+    pub fn effective_latency(&self, cfg: &Configuration, lambda_req: f32) -> f32 {
+        queueing::effective_latency(
+            self.latency(cfg),
+            self.throughput(cfg),
+            lambda_req,
+            self.consts.u_max,
+        )
+    }
+
+    /// Objective with the measured latency substituted for the raw one —
+    /// what the simulator reports per served step.
+    pub fn effective_objective(&self, cfg: &Configuration, lambda_req: f32) -> f32 {
+        let s = &self.consts;
+        let p = self.evaluate(cfg, lambda_req);
+        let l_eff = queueing::effective_latency(p.latency, p.throughput, lambda_req, s.u_max);
+        s.alpha * l_eff + s.beta * p.cost + s.gamma * p.coordination - s.delta * p.throughput
+    }
+
+    /// SLA feasibility of a configuration (paper IV.C), optionally using
+    /// the queueing-corrected latency (the §VIII planner extension).
+    pub fn feasible(
+        &self,
+        cfg: &Configuration,
+        lambda_req: f32,
+        sla: &SlaSpec,
+        plan_queue: bool,
+    ) -> bool {
+        let lat = if plan_queue {
+            self.effective_latency(cfg, lambda_req)
+        } else {
+            self.latency(cfg)
+        };
+        lat <= sla.l_max && self.throughput(cfg) >= lambda_req * sla.b_sla
+    }
+
+    /// The global optimum over the *whole* plane for one workload point
+    /// (the oracle policy / objective-heatmap minimum). Returns `None`
+    /// if nothing is feasible.
+    pub fn best_feasible(
+        &self,
+        lambda_req: f32,
+        sla: &SlaSpec,
+        plan_queue: bool,
+    ) -> Option<(Configuration, SurfacePoint)> {
+        let mut best: Option<(Configuration, SurfacePoint)> = None;
+        for c in self.plane.iter() {
+            if !self.feasible(&c, lambda_req, sla, plan_queue) {
+                continue;
+            }
+            let p = self.evaluate(&c, lambda_req);
+            let score = if plan_queue {
+                self.effective_objective(&c, lambda_req)
+            } else {
+                p.objective
+            };
+            let better = match &best {
+                None => true,
+                Some((bc, _)) => {
+                    let bs = if plan_queue {
+                        self.effective_objective(bc, lambda_req)
+                    } else {
+                        self.evaluate(bc, lambda_req).objective
+                    };
+                    score < bs
+                }
+            };
+            if better {
+                best = Some((c, p));
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> SurfaceModel {
+        SurfaceModel::from_config(&ModelConfig::default_paper())
+    }
+
+    #[test]
+    fn cost_monotone_in_both_axes_fig1() {
+        let m = model();
+        for i in 0..3 {
+            for j in 0..3 {
+                let c = m.cost(&Configuration::new(i, j));
+                assert!(m.cost(&Configuration::new(i + 1, j)) > c);
+                assert!(m.cost(&Configuration::new(i, j + 1)) > c);
+            }
+        }
+    }
+
+    #[test]
+    fn latency_tradeoff_fig2() {
+        let m = model();
+        for i in 0..4 {
+            for j in 0..3 {
+                // better tier -> lower latency
+                assert!(
+                    m.latency(&Configuration::new(i, j + 1))
+                        < m.latency(&Configuration::new(i, j))
+                );
+            }
+        }
+        for j in 0..4 {
+            for i in 0..3 {
+                // more nodes -> higher latency (coordination)
+                assert!(
+                    m.latency(&Configuration::new(i + 1, j))
+                        > m.latency(&Configuration::new(i, j))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_has_no_log_coordination() {
+        let m = model();
+        assert!((m.coord_latency(1) - m.constants().mu).abs() < 1e-6);
+    }
+
+    #[test]
+    fn throughput_diminishing_returns() {
+        let m = model();
+        for j in 0..4 {
+            for i in 0..3 {
+                let lo = m.throughput(&Configuration::new(i, j));
+                let hi = m.throughput(&Configuration::new(i + 1, j));
+                assert!(hi > lo, "more nodes should add throughput");
+                assert!(hi < 2.0 * lo, "but sublinearly (phi < 1)");
+            }
+        }
+    }
+
+    #[test]
+    fn effective_latency_inflates_under_load() {
+        let m = model();
+        let c = Configuration::new(1, 1);
+        let raw = m.latency(&c);
+        assert!(m.effective_latency(&c, 1.0) >= raw);
+        assert!(m.effective_latency(&c, 1e9) > m.effective_latency(&c, 1.0));
+        // clamped: never infinite
+        assert!(m.effective_latency(&c, 1e9).is_finite());
+    }
+
+    #[test]
+    fn feasibility_matches_manual_check() {
+        let cfg = ModelConfig::default_paper();
+        let m = SurfaceModel::from_config(&cfg);
+        let sla = SlaSpec::from_config(&cfg);
+        let c = Configuration::new(0, 3); // (H=1, xlarge)
+        let t = m.throughput(&c);
+        assert!(m.feasible(&c, t / cfg.sla.b_sla - 1.0, &sla, false));
+        assert!(!m.feasible(&c, t / cfg.sla.b_sla + 1.0, &sla, false));
+    }
+
+    #[test]
+    fn best_feasible_none_under_impossible_load() {
+        let cfg = ModelConfig::default_paper();
+        let m = SurfaceModel::from_config(&cfg);
+        let sla = SlaSpec::from_config(&cfg);
+        assert!(m.best_feasible(1e9, &sla, false).is_none());
+        assert!(m.best_feasible(100.0, &sla, false).is_some());
+    }
+
+    #[test]
+    fn evaluate_consistent_with_point_functions() {
+        let cfg = ModelConfig::default_paper();
+        let m = SurfaceModel::from_config(&cfg);
+        let lam = 10_000.0;
+        for c in m.plane().iter().collect::<Vec<_>>() {
+            let p = m.evaluate(&c, lam);
+            assert_eq!(p.latency, m.latency(&c));
+            assert_eq!(p.throughput, m.throughput(&c));
+            assert_eq!(p.cost, m.cost(&c));
+            let lw = lam * cfg.write_ratio();
+            assert!((p.coordination - m.coordination(&c, lw)).abs() < 1e-4);
+            assert!((p.objective - m.objective(&c, lw)).abs() < 1e-2);
+        }
+    }
+}

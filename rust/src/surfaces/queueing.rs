@@ -1,0 +1,67 @@
+//! Utilization-sensitive queueing latency (paper §VIII, future work):
+//! `u = lambda_req / T`, `L_final = L / (1 - u)` with `u` clamped at
+//! `u_max` so latency spikes but stays finite at saturation.
+//!
+//! Twin of `python/compile/kernels/queueing.py`.
+
+/// Raw utilization `lambda_req / throughput` (unclamped).
+pub fn utilization(throughput: f32, lambda_req: f32) -> f32 {
+    if throughput > 0.0 {
+        lambda_req / throughput
+    } else {
+        lambda_req // mirrors the kernel's safe-divide placeholder of 1.0
+    }
+}
+
+/// `L / (1 - min(u, u_max))`.
+pub fn effective_latency(latency: f32, throughput: f32, lambda_req: f32, u_max: f32) -> f32 {
+    let u = utilization(throughput, lambda_req).min(u_max);
+    latency / (1.0 - u)
+}
+
+/// Whether the raw utilization reached/exceeded the clamp (the cell is
+/// saturated — the 1/(1-u) model is out of its validity range).
+pub fn saturated(throughput: f32, lambda_req: f32, u_max: f32) -> bool {
+    utilization(throughput, lambda_req) >= u_max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_load_is_raw_latency() {
+        assert_eq!(effective_latency(2.0, 100.0, 0.0, 0.75), 2.0);
+    }
+
+    #[test]
+    fn half_load_doubles_latency() {
+        assert!((effective_latency(2.0, 100.0, 50.0, 0.75) - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clamped_at_u_max() {
+        let at_clamp = effective_latency(2.0, 100.0, 75.0, 0.75);
+        let beyond = effective_latency(2.0, 100.0, 1e9, 0.75);
+        assert!((at_clamp - beyond).abs() < 1e-3);
+        assert!(beyond.is_finite());
+        assert!((beyond - 8.0).abs() < 1e-3); // 2 / (1 - 0.75)
+    }
+
+    #[test]
+    fn saturation_flag() {
+        assert!(!saturated(100.0, 74.0, 0.75));
+        assert!(saturated(100.0, 75.0, 0.75));
+        assert!(saturated(100.0, 200.0, 0.75));
+    }
+
+    #[test]
+    fn monotone_in_load() {
+        let mut prev = 0.0;
+        for lam in [0.0, 10.0, 30.0, 60.0, 74.0, 90.0] {
+            let l = effective_latency(1.0, 100.0, lam, 0.9);
+            assert!(l >= prev);
+            prev = l;
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Property-testing and test-support helpers (offline substitute for
+//! `proptest`/`tempfile`): seeded random case generation with failing-
+//! seed reporting, and a self-cleaning temporary directory.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::workload::XorShift64;
+
+/// Run `cases` randomized property checks. The closure receives a
+/// seeded RNG per case; panics are re-raised with the case index and
+/// seed so failures reproduce deterministically.
+pub fn forall(cases: usize, seed: u64, mut f: impl FnMut(usize, &mut XorShift64)) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = XorShift64::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(case, &mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} (seed {case_seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Uniform f32 in [lo, hi).
+pub fn uniform(rng: &mut XorShift64, lo: f32, hi: f32) -> f32 {
+    rng.range_f64(lo as f64, hi as f64) as f32
+}
+
+/// Random element of a slice.
+pub fn choice<'a, T>(rng: &mut XorShift64, xs: &'a [T]) -> &'a T {
+    &xs[rng.below(xs.len() as u64) as usize]
+}
+
+static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A temporary directory removed on drop (offline `tempfile` stand-in).
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new() -> std::io::Result<Self> {
+        let n = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "diagonal-scale-test-{}-{}",
+            std::process::id(),
+            n
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall(10, 1, |_, _| count += 1);
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn forall_seeds_are_deterministic() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        forall(5, 2, |_, rng| a.push(rng.next_u64()));
+        forall(5, 2, |_, rng| b.push(rng.next_u64()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failures() {
+        forall(10, 3, |case, _| assert!(case < 5));
+    }
+
+    #[test]
+    fn tempdir_creates_and_cleans() {
+        let p;
+        {
+            let d = TempDir::new().unwrap();
+            p = d.path().to_path_buf();
+            assert!(p.is_dir());
+            std::fs::write(p.join("x"), "y").unwrap();
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut rng = XorShift64::new(4);
+        for _ in 0..100 {
+            let x = uniform(&mut rng, 2.0, 3.0);
+            assert!((2.0..3.0).contains(&x));
+        }
+    }
+}

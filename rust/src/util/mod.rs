@@ -1,0 +1,7 @@
+//! Small in-tree substrates for functionality usually pulled from
+//! crates.io: this repo builds fully offline against the `xla` crate's
+//! vendored closure, so config parsing (TOML), manifest parsing (JSON),
+//! and the test/bench scaffolding are implemented here from scratch.
+
+pub mod json;
+pub mod toml;

@@ -1,0 +1,318 @@
+//! Minimal TOML parser covering the subset used by
+//! `config/default.toml`: `[section]`, nested `[a.b]`, array-of-tables
+//! `[[a.b]]`, and `key = value` with strings, integers, floats,
+//! booleans, and flat arrays. Comments (`#`) and blank lines are
+//! skipped. Not a general TOML implementation — see the tests for the
+//! supported grammar.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+    /// Array of tables (`[[x]]`).
+    TableArray(Vec<BTreeMap<String, Value>>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<f32> {
+        self.as_f64().map(|f| f as f32)
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn as_table_array(&self) -> Option<&[BTreeMap<String, Value>]> {
+        match self {
+            Value::TableArray(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup into nested tables.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse TOML text into a root [`Value::Table`].
+pub fn parse(text: &str) -> Result<Value> {
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    // Path of the currently open [section]; empty = root. The bool
+    // marks whether it is the latest element of a [[table array]].
+    let mut section: Vec<String> = Vec::new();
+    let mut in_array_tail = false;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |m: &str| anyhow!("TOML line {}: {m}: `{raw}`", lineno + 1);
+
+        if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let path: Vec<String> = name.split('.').map(|s| s.trim().to_string()).collect();
+            push_table_array(&mut root, &path).map_err(|e| err(&e.to_string()))?;
+            section = path;
+            in_array_tail = true;
+        } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.split('.').map(|s| s.trim().to_string()).collect();
+            in_array_tail = false;
+            ensure_table(&mut root, &section).map_err(|e| err(&e.to_string()))?;
+        } else if let Some(eq) = line.find('=') {
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim()).map_err(|e| err(&e.to_string()))?;
+            let table = open_table(&mut root, &section, in_array_tail)
+                .map_err(|e| err(&e.to_string()))?;
+            if table.insert(key.clone(), value).is_some() {
+                return Err(err(&format!("duplicate key `{key}`")));
+            }
+        } else {
+            return Err(err("expected `[section]` or `key = value`"));
+        }
+    }
+    Ok(Value::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // no escape handling needed: strings in our configs never contain #
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Array(items));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value `{s}`")
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Value>> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            Value::TableArray(v) => v.last_mut().expect("table arrays are never empty"),
+            _ => bail!("`{part}` is not a table"),
+        };
+    }
+    Ok(cur)
+}
+
+fn push_table_array(root: &mut BTreeMap<String, Value>, path: &[String]) -> Result<()> {
+    let (last, parents) = path.split_last().ok_or_else(|| anyhow!("empty path"))?;
+    let parent = ensure_table(root, parents)?;
+    match parent
+        .entry(last.clone())
+        .or_insert_with(|| Value::TableArray(Vec::new()))
+    {
+        Value::TableArray(v) => {
+            v.push(BTreeMap::new());
+            Ok(())
+        }
+        _ => bail!("`{last}` is not an array of tables"),
+    }
+}
+
+fn open_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    section: &[String],
+    in_array_tail: bool,
+) -> Result<&'a mut BTreeMap<String, Value>> {
+    if !in_array_tail {
+        return ensure_table(root, section);
+    }
+    let (last, parents) = section.split_last().ok_or_else(|| anyhow!("empty section"))?;
+    let parent = ensure_table(root, parents)?;
+    match parent.get_mut(last) {
+        Some(Value::TableArray(v)) => Ok(v.last_mut().expect("non-empty")),
+        _ => bail!("`{last}` is not an array of tables"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let v = parse("a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = -3\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(2.5));
+        assert_eq!(v.get("c").unwrap().as_str(), Some("hi"));
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("e").unwrap().as_i64(), Some(-3));
+    }
+
+    #[test]
+    fn int_promotes_to_float_via_accessor() {
+        let v = parse("x = 4\n").unwrap();
+        assert_eq!(v.get("x").unwrap().as_f32(), Some(4.0));
+    }
+
+    #[test]
+    fn parses_sections_and_nested_paths() {
+        let v = parse("[a]\nx = 1\n[a.b]\ny = 2\n").unwrap();
+        assert_eq!(v.get("a.x").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("a.b.y").unwrap().as_i64(), Some(2));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let v = parse("xs = [1, 2, 4, 8]\nys = [1.5, 2.5]\nempty = []\n").unwrap();
+        let xs = v.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.len(), 4);
+        assert_eq!(xs[3].as_i64(), Some(8));
+        assert_eq!(v.get("empty").unwrap().as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn parses_table_arrays() {
+        let text = "[[t]]\nname = \"a\"\n[[t]]\nname = \"b\"\nv = 2\n";
+        let v = parse(text).unwrap();
+        let ts = v.get("t").unwrap().as_table_array().unwrap();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0]["name"].as_str(), Some("a"));
+        assert_eq!(ts[1]["v"].as_i64(), Some(2));
+    }
+
+    #[test]
+    fn nested_table_arrays_under_section() {
+        let text = "[p]\nk = 1\n[[p.tiers]]\nname = \"small\"\n[[p.tiers]]\nname = \"big\"\n";
+        let v = parse(text).unwrap();
+        let tiers = v.get("p.tiers").unwrap().as_table_array().unwrap();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[1]["name"].as_str(), Some("big"));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let v = parse("# hello\n\na = 1  # trailing\nb = \"x # y\"\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x # y"));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn garbage_rejected_with_line_number() {
+        let err = parse("a = 1\nnot a line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn parses_the_bundled_default_config() {
+        let text = include_str!("../../../config/default.toml");
+        let v = parse(text).unwrap();
+        assert_eq!(v.get("surfaces.kappa").unwrap().as_f64(), Some(585.0));
+        assert_eq!(v.get("plane.h_values").unwrap().as_array().unwrap().len(), 4);
+        assert_eq!(v.get("plane.tiers").unwrap().as_table_array().unwrap().len(), 4);
+        assert_eq!(v.get("policy.plan_queue").unwrap().as_bool(), Some(false));
+    }
+}

@@ -1,0 +1,355 @@
+//! Workload engine: the paper's 50-step phased timeline (§V.C) plus the
+//! synthetic trace families used by the extended benchmarks (sine,
+//! bursty, spike, ramp) and YCSB-style read/write mixes.
+
+mod rng;
+
+pub use rng::XorShift64;
+
+
+use crate::config::ModelConfig;
+
+/// One timestep of demand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadPoint {
+    /// Required throughput lambda_req (synthetic ops per interval).
+    pub lambda_req: f32,
+    /// Write arrival rate lambda_w (paper III.E).
+    pub lambda_w: f32,
+}
+
+impl WorkloadPoint {
+    pub fn new(lambda_req: f32, write_ratio: f32) -> Self {
+        Self { lambda_req, lambda_w: lambda_req * write_ratio }
+    }
+}
+
+/// A demand trace: a finite sequence of workload points.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub name: String,
+    pub points: Vec<WorkloadPoint>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Average required throughput (the paper reports 9600 for the
+    /// default trace).
+    pub fn avg_lambda_req(&self) -> f32 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|p| p.lambda_req).sum::<f32>() / self.points.len() as f32
+    }
+
+    /// Flatten into the `f32[T, 2]` row-major layout the HLO
+    /// `policy_trace` artifacts take.
+    pub fn to_flat(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.points.len() * 2);
+        for p in &self.points {
+            out.push(p.lambda_req);
+            out.push(p.lambda_w);
+        }
+        out
+    }
+
+    /// Serialize as CSV (`step,lambda_req,lambda_w`) for interchange
+    /// with external trace tooling.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,lambda_req,lambda_w\n");
+        for (i, p) in self.points.iter().enumerate() {
+            use std::fmt::Write as _;
+            let _ = writeln!(out, "{i},{},{}", p.lambda_req, p.lambda_w);
+        }
+        out
+    }
+
+    /// Parse a CSV trace (the `to_csv` format; the `step` column is
+    /// ignored so externally produced traces can use timestamps).
+    pub fn from_csv(name: &str, text: &str) -> anyhow::Result<Self> {
+        use anyhow::{anyhow, Context};
+        let mut points = Vec::new();
+        for (lineno, line) in text.lines().enumerate().skip(1) {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut cols = line.split(',');
+            let _step = cols.next();
+            let lambda_req: f32 = cols
+                .next()
+                .ok_or_else(|| anyhow!("line {}: missing lambda_req", lineno + 1))?
+                .trim()
+                .parse()
+                .with_context(|| format!("line {}: bad lambda_req", lineno + 1))?;
+            let lambda_w: f32 = cols
+                .next()
+                .ok_or_else(|| anyhow!("line {}: missing lambda_w", lineno + 1))?
+                .trim()
+                .parse()
+                .with_context(|| format!("line {}: bad lambda_w", lineno + 1))?;
+            if lambda_req < 0.0 || lambda_w < 0.0 {
+                return Err(anyhow!("line {}: negative demand", lineno + 1));
+            }
+            points.push(WorkloadPoint { lambda_req, lambda_w });
+        }
+        if points.is_empty() {
+            return Err(anyhow!("trace `{name}` has no data rows"));
+        }
+        Ok(Trace { name: name.to_string(), points })
+    }
+
+    /// Load a CSV trace from disk.
+    pub fn from_csv_path(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        use anyhow::Context;
+        let p = path.as_ref();
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading trace {}", p.display()))?;
+        let name = p
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "trace".into());
+        Self::from_csv(&name, &text)
+    }
+}
+
+/// YCSB-style workload mixes (read fraction).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mix {
+    /// YCSB-A: update heavy (50/50).
+    UpdateHeavy,
+    /// YCSB-B: read mostly (95/5).
+    ReadMostly,
+    /// YCSB-C: read only.
+    ReadOnly,
+    /// The paper's default mixed workload (70/30).
+    PaperMixed,
+    Custom(f32),
+}
+
+impl Mix {
+    pub fn read_ratio(&self) -> f32 {
+        match self {
+            Mix::UpdateHeavy => 0.5,
+            Mix::ReadMostly => 0.95,
+            Mix::ReadOnly => 1.0,
+            Mix::PaperMixed => 0.7,
+            Mix::Custom(r) => r.clamp(0.0, 1.0),
+        }
+    }
+
+    pub fn write_ratio(&self) -> f32 {
+        1.0 - self.read_ratio()
+    }
+}
+
+/// Trace generators.
+pub struct TraceBuilder {
+    thr_factor: f32,
+    write_ratio: f32,
+}
+
+impl TraceBuilder {
+    pub fn new(thr_factor: f32, write_ratio: f32) -> Self {
+        Self { thr_factor, write_ratio }
+    }
+
+    pub fn from_config(cfg: &ModelConfig) -> Self {
+        Self::new(cfg.workload.thr_factor, cfg.write_ratio())
+    }
+
+    fn point(&self, intensity: f32) -> WorkloadPoint {
+        WorkloadPoint::new(intensity * self.thr_factor, self.write_ratio)
+    }
+
+    /// The paper's phased timeline (§V.C): each phase intensity held for
+    /// `steps_per_phase` steps.
+    pub fn phased(&self, phases: &[f32], steps_per_phase: usize) -> Trace {
+        let points = phases
+            .iter()
+            .flat_map(|&i| std::iter::repeat(self.point(i)).take(steps_per_phase))
+            .collect();
+        Trace { name: "phased".into(), points }
+    }
+
+    /// The exact paper trace for a config (low/med/high/med/low).
+    pub fn paper(cfg: &ModelConfig) -> Trace {
+        let b = Self::from_config(cfg);
+        let mut t = b.phased(&cfg.workload.phases, cfg.workload.steps_per_phase);
+        t.name = "paper-50".into();
+        t
+    }
+
+    /// Constant demand.
+    pub fn constant(&self, intensity: f32, steps: usize) -> Trace {
+        Trace {
+            name: "constant".into(),
+            points: vec![self.point(intensity); steps],
+        }
+    }
+
+    /// Diurnal-style sinusoid between `lo` and `hi` intensity.
+    pub fn sine(&self, lo: f32, hi: f32, period: usize, steps: usize) -> Trace {
+        let mid = (lo + hi) / 2.0;
+        let amp = (hi - lo) / 2.0;
+        let points = (0..steps)
+            .map(|t| {
+                let phase = t as f32 / period.max(1) as f32 * std::f32::consts::TAU;
+                self.point(mid + amp * phase.sin())
+            })
+            .collect();
+        Trace { name: "sine".into(), points }
+    }
+
+    /// Baseline demand with seeded random bursts (failure of smooth
+    /// assumptions; exercises transient behaviour).
+    pub fn bursty(
+        &self,
+        base: f32,
+        burst: f32,
+        burst_prob: f64,
+        steps: usize,
+        seed: u64,
+    ) -> Trace {
+        let mut rng = XorShift64::new(seed);
+        let points = (0..steps)
+            .map(|_| {
+                let i = if rng.next_f64() < burst_prob { burst } else { base };
+                self.point(i)
+            })
+            .collect();
+        Trace { name: "bursty".into(), points }
+    }
+
+    /// A single sudden spike — the paper's §VII concern about one-step
+    /// local search needing multiple steps to reach feasibility.
+    pub fn spike(&self, base: f32, peak: f32, at: usize, width: usize, steps: usize) -> Trace {
+        let points = (0..steps)
+            .map(|t| {
+                let i = if t >= at && t < at + width { peak } else { base };
+                self.point(i)
+            })
+            .collect();
+        Trace { name: "spike".into(), points }
+    }
+
+    /// Linear ramp from `lo` to `hi`.
+    pub fn ramp(&self, lo: f32, hi: f32, steps: usize) -> Trace {
+        let points = (0..steps)
+            .map(|t| {
+                let frac = if steps > 1 { t as f32 / (steps - 1) as f32 } else { 0.0 };
+                self.point(lo + (hi - lo) * frac)
+            })
+            .collect();
+        Trace { name: "ramp".into(), points }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn builder() -> TraceBuilder {
+        TraceBuilder::new(100.0, 0.3)
+    }
+
+    #[test]
+    fn paper_trace_matches_section_v_c() {
+        let cfg = ModelConfig::default_paper();
+        let t = TraceBuilder::paper(&cfg);
+        assert_eq!(t.len(), 50);
+        assert_eq!(t.points[0].lambda_req, 6000.0);
+        assert_eq!(t.points[10].lambda_req, 10000.0);
+        assert_eq!(t.points[20].lambda_req, 16000.0);
+        assert_eq!(t.points[30].lambda_req, 10000.0);
+        assert_eq!(t.points[49].lambda_req, 6000.0);
+        // paper: average required throughput is 9600
+        assert!((t.avg_lambda_req() - 9600.0).abs() < 1.0);
+        // write rate is 30% of demand
+        assert!((t.points[0].lambda_w - 1800.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn flat_layout_interleaves() {
+        let t = builder().constant(10.0, 2);
+        assert_eq!(t.to_flat(), vec![1000.0, 300.0, 1000.0, 300.0]);
+    }
+
+    #[test]
+    fn sine_bounded() {
+        let t = builder().sine(50.0, 150.0, 20, 100);
+        for p in &t.points {
+            assert!(p.lambda_req >= 4999.0 && p.lambda_req <= 15001.0);
+        }
+    }
+
+    #[test]
+    fn bursty_deterministic_per_seed() {
+        let a = builder().bursty(60.0, 200.0, 0.2, 50, 7);
+        let b = builder().bursty(60.0, 200.0, 0.2, 50, 7);
+        let c = builder().bursty(60.0, 200.0, 0.2, 50, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn bursty_hits_both_levels() {
+        let t = builder().bursty(60.0, 200.0, 0.3, 200, 42);
+        let bursts = t.points.iter().filter(|p| p.lambda_req > 10_000.0).count();
+        assert!(bursts > 20 && bursts < 120);
+    }
+
+    #[test]
+    fn spike_placed_correctly() {
+        let t = builder().spike(60.0, 300.0, 10, 5, 30);
+        assert_eq!(t.points[9].lambda_req, 6000.0);
+        assert_eq!(t.points[10].lambda_req, 30000.0);
+        assert_eq!(t.points[14].lambda_req, 30000.0);
+        assert_eq!(t.points[15].lambda_req, 6000.0);
+    }
+
+    #[test]
+    fn ramp_endpoints() {
+        let t = builder().ramp(10.0, 20.0, 11);
+        assert_eq!(t.points[0].lambda_req, 1000.0);
+        assert_eq!(t.points[10].lambda_req, 2000.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let cfg = ModelConfig::default_paper();
+        let t = TraceBuilder::paper(&cfg);
+        let back = Trace::from_csv("paper-50", &t.to_csv()).unwrap();
+        assert_eq!(t.points, back.points);
+    }
+
+    #[test]
+    fn csv_rejects_garbage() {
+        assert!(Trace::from_csv("x", "step,lambda_req,lambda_w\n").is_err());
+        assert!(Trace::from_csv("x", "h\n1,abc,2\n").is_err());
+        assert!(Trace::from_csv("x", "h\n1,5\n").is_err());
+        assert!(Trace::from_csv("x", "h\n1,-5,1\n").is_err());
+    }
+
+    #[test]
+    fn csv_ignores_step_column_and_blank_lines() {
+        let t = Trace::from_csv("x", "ts,req,w\n1699999999,100,30\n\n1700000000,200,60\n")
+            .unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.points[1].lambda_req, 200.0);
+    }
+
+    #[test]
+    fn mixes() {
+        assert_eq!(Mix::ReadOnly.write_ratio(), 0.0);
+        assert!((Mix::PaperMixed.write_ratio() - 0.3).abs() < 1e-6);
+        assert_eq!(Mix::Custom(2.0).read_ratio(), 1.0);
+    }
+}

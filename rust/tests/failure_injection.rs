@@ -1,0 +1,163 @@
+//! Failure injection: corrupt/missing artifacts, impossible workloads,
+//! and node failures mid-run — the system must fail loudly where it
+//! should and degrade gracefully where it can.
+
+use diagonal_scale::cluster::{ClusterParams, ClusterSim};
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::coordinator::{self, native_coordinator};
+use diagonal_scale::plane::Configuration;
+use diagonal_scale::policy::DiagonalScale;
+use diagonal_scale::runtime::Engine;
+use diagonal_scale::simulator::{PolicyKind, Simulator};
+use diagonal_scale::testkit::TempDir;
+use diagonal_scale::workload::{TraceBuilder, WorkloadPoint};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn missing_artifact_dir_is_a_clear_error() {
+    let err = Engine::load("/definitely/not/a/real/dir").map(|_| ()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "got: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_is_rejected() {
+    let dir = TempDir::new().unwrap();
+    std::fs::write(dir.path().join("manifest.json"), "{ not json !").unwrap();
+    assert!(Engine::load(dir.path()).is_err());
+}
+
+#[test]
+fn manifest_with_wrong_abi_is_rejected() {
+    let dir = TempDir::new().unwrap();
+    let real = std::fs::read_to_string(artifacts_dir().join("manifest.json")).unwrap();
+    let tampered = real.replace("\"abi_version\": 1", "\"abi_version\": 99");
+    std::fs::write(dir.path().join("manifest.json"), tampered).unwrap();
+    let err = Engine::load(dir.path()).map(|_| ()).unwrap_err();
+    assert!(format!("{err:#}").contains("ABI"));
+}
+
+#[test]
+fn manifest_referencing_missing_hlo_is_rejected() {
+    let dir = TempDir::new().unwrap();
+    let real = std::fs::read_to_string(artifacts_dir().join("manifest.json")).unwrap();
+    std::fs::write(dir.path().join("manifest.json"), real).unwrap();
+    // no .hlo.txt files copied
+    let err = Engine::load(dir.path()).map(|_| ()).unwrap_err();
+    assert!(format!("{err:#}").contains("not found"));
+}
+
+#[test]
+fn corrupt_hlo_text_is_rejected() {
+    let dir = TempDir::new().unwrap();
+    for entry in std::fs::read_dir(artifacts_dir()).unwrap() {
+        let p = entry.unwrap().path();
+        let name = p.file_name().unwrap().to_string_lossy().to_string();
+        if name.ends_with(".hlo.txt") {
+            std::fs::write(dir.path().join(name), "HloModule garbage\n%%%%").unwrap();
+        } else {
+            std::fs::copy(&p, dir.path().join(name)).unwrap();
+        }
+    }
+    assert!(Engine::load(dir.path()).is_err());
+}
+
+#[test]
+fn impossible_demand_never_panics_the_simulator() {
+    let cfg = ModelConfig::default_paper();
+    let sim = Simulator::new(&cfg);
+    let b = TraceBuilder::from_config(&cfg);
+    let trace = b.constant(1.0e7, 20); // far beyond any config
+    for kind in [
+        PolicyKind::Diagonal,
+        PolicyKind::HorizontalOnly,
+        PolicyKind::VerticalOnly,
+        PolicyKind::Threshold,
+        PolicyKind::Oracle,
+        PolicyKind::Lookahead(3),
+    ] {
+        let run = sim.run(kind, &trace);
+        assert_eq!(run.summary.steps, 20);
+        assert_eq!(
+            run.summary.violations, 20,
+            "{kind:?}: every step must violate under impossible demand"
+        );
+    }
+}
+
+#[test]
+fn zero_demand_is_handled() {
+    let cfg = ModelConfig::default_paper();
+    let sim = Simulator::new(&cfg);
+    let b = TraceBuilder::from_config(&cfg);
+    let trace = b.constant(0.0, 10);
+    let run = sim.run(PolicyKind::Diagonal, &trace);
+    assert_eq!(run.summary.violations, 0);
+    // with zero demand the policy drifts to the cheapest *feasible*
+    // config: (H=1, medium) — (H=1, small) has L = 5.04 > l_max = 5.0,
+    // so the small tier is latency-infeasible at any demand.
+    assert_eq!(run.records.last().unwrap().config, Configuration::new(0, 1));
+}
+
+#[test]
+fn cluster_survives_node_failures_mid_trace() {
+    let cfg = ModelConfig::default_paper();
+    let mut c = native_coordinator(
+        &cfg,
+        Box::new(DiagonalScale::diagonal()),
+        ClusterParams::default(),
+        41,
+    );
+    let trace = TraceBuilder::paper(&cfg);
+    let mut reports = Vec::new();
+    for (i, w) in trace.points.iter().enumerate() {
+        if i == 25 {
+            // kill a node at peak load — the next reconfiguration
+            // replaces the fleet
+            let victim = 0;
+            // (reach into the cluster through a fresh failure API)
+            c.cluster_mut().fail_node(victim);
+        }
+        reports.push(c.tick(i, *w).unwrap());
+    }
+    let s = coordinator::summarize(&reports);
+    assert_eq!(s.steps, 50);
+    // the run must complete and keep serving most traffic overall
+    assert!(s.completed_ratio > 0.8, "completed={}", s.completed_ratio);
+    let cl = c.cluster();
+    let total = cl.total_completed + cl.total_dropped;
+    assert!((cl.total_offered - total).abs() < 1e-6 * cl.total_offered);
+}
+
+#[test]
+fn cluster_with_all_nodes_down_sheds_everything_but_survives() {
+    let cfg = ModelConfig::default_paper();
+    let mut cluster = ClusterSim::new(&cfg, ClusterParams::default(), 43);
+    for i in 0..cluster.n_nodes() {
+        cluster.fail_node(i);
+    }
+    let m = cluster.step(WorkloadPoint::new(5000.0, 0.3));
+    assert_eq!(m.completed, 0.0);
+    assert!(m.dropped > 0.0);
+}
+
+#[test]
+fn malformed_config_files_are_rejected_loudly() {
+    for bad in [
+        "",                                      // empty
+        "plane = 3\n",                           // wrong type
+        "[plane]\nh_values = [8, 4]\n",          // decreasing
+        "[plane]\nh_values = [1,2]\n[[plane.tiers]]\nname=\"a\"\ncpu=0.0\nram=1\nbandwidth=1\niops=1\ncost=1\n", // zero resource
+    ] {
+        assert!(ModelConfig::from_toml(bad).is_err(), "should reject: {bad:?}");
+    }
+}
+
+#[test]
+fn missing_config_file_is_a_clear_error() {
+    let err = ModelConfig::from_path("/no/such/config.toml").unwrap_err();
+    assert!(format!("{err:#}").contains("reading config"));
+}

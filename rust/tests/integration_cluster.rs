@@ -1,0 +1,229 @@
+//! Integration: the Phase-2 DES cluster driven by the coordinator —
+//! the "empirical calibration" path the paper defers to future work
+//! (§VIII), exercised end to end: observe → plan → actuate → measure,
+//! plus online calibration from measured data.
+
+use diagonal_scale::calibrate::{Calibrator, Observation};
+use diagonal_scale::cluster::{ClusterParams, ClusterSim};
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::coordinator::{self, native_coordinator, Backend, Coordinator};
+use diagonal_scale::plane::Configuration;
+use diagonal_scale::policy::{DiagonalScale, StaticPolicy, Threshold};
+use diagonal_scale::workload::{TraceBuilder, WorkloadPoint};
+
+fn cfg() -> ModelConfig {
+    ModelConfig::default_paper()
+}
+
+#[test]
+fn coordinator_beats_static_on_measured_violations() {
+    let cfg = cfg();
+    let trace = TraceBuilder::paper(&cfg);
+    let mut diag = native_coordinator(
+        &cfg,
+        Box::new(DiagonalScale::diagonal()),
+        ClusterParams::default(),
+        7,
+    );
+    let mut stat = native_coordinator(
+        &cfg,
+        Box::new(StaticPolicy),
+        ClusterParams::default(),
+        7,
+    );
+    let d = coordinator::summarize(&diag.run_trace(&trace).unwrap());
+    let s = coordinator::summarize(&stat.run_trace(&trace).unwrap());
+    assert!(
+        d.violations < s.violations,
+        "diag {} vs static {}",
+        d.violations,
+        s.violations
+    );
+    assert!(d.completed_ratio > s.completed_ratio);
+}
+
+#[test]
+fn coordinator_beats_threshold_on_completion() {
+    let cfg = cfg();
+    let trace = TraceBuilder::paper(&cfg);
+    let mut diag = native_coordinator(
+        &cfg,
+        Box::new(DiagonalScale::diagonal()),
+        ClusterParams::default(),
+        11,
+    );
+    let mut thr = native_coordinator(
+        &cfg,
+        Box::new(Threshold::default()),
+        ClusterParams::default(),
+        11,
+    );
+    let d = coordinator::summarize(&diag.run_trace(&trace).unwrap());
+    let t = coordinator::summarize(&thr.run_trace(&trace).unwrap());
+    assert!(d.completed_ratio >= t.completed_ratio - 0.02);
+    assert!(d.violations <= t.violations + 2);
+}
+
+#[test]
+fn conservation_holds_across_a_full_run() {
+    let cfg = cfg();
+    let trace = TraceBuilder::paper(&cfg);
+    let mut c = native_coordinator(
+        &cfg,
+        Box::new(DiagonalScale::diagonal()),
+        ClusterParams::default(),
+        13,
+    );
+    c.run_trace(&trace).unwrap();
+    let cl = c.cluster();
+    let total = cl.total_completed + cl.total_dropped;
+    assert!(
+        (cl.total_offered - total).abs() < 1e-6 * cl.total_offered,
+        "ops must be conserved: offered={} completed+dropped={}",
+        cl.total_offered,
+        total
+    );
+}
+
+#[test]
+fn rebalances_happen_but_are_bounded() {
+    let cfg = cfg();
+    let trace = TraceBuilder::paper(&cfg);
+    let mut c = native_coordinator(
+        &cfg,
+        Box::new(DiagonalScale::diagonal()),
+        ClusterParams::default(),
+        17,
+    );
+    let reports = c.run_trace(&trace).unwrap();
+    let s = coordinator::summarize(&reports);
+    assert!(s.reconfigurations >= 2, "must adapt to the phases");
+    assert!(
+        s.reconfigurations <= 20,
+        "rebalance penalty must prevent thrash: {}",
+        s.reconfigurations
+    );
+    assert!(s.total_moved_shards > 0, "H changes move shards");
+}
+
+#[test]
+fn hlo_backend_drives_the_cluster() {
+    // the PJRT path on the decision loop: neighbor scoring through the
+    // AOT-compiled Pallas kernel
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(artifacts.join("manifest.json").exists(), "run `make artifacts`");
+    let cfg = cfg();
+    let engine = diagonal_scale::runtime::SurfaceEngine::new(
+        diagonal_scale::runtime::Engine::load(&artifacts).unwrap(),
+        &cfg,
+    )
+    .unwrap();
+    let cluster = ClusterSim::new(&cfg, ClusterParams::default(), 19);
+    let mut coord = Coordinator::new(
+        &cfg,
+        cluster,
+        Backend::Hlo { engine, moves: diagonal_scale::config::MoveFlags::DIAGONAL },
+    );
+    let trace = TraceBuilder::paper(&cfg);
+    let reports = coord.run_trace(&trace).unwrap();
+    let s = coordinator::summarize(&reports);
+    assert_eq!(s.steps, 50);
+    assert!(s.reconfigurations >= 2);
+    assert!(s.completed_ratio > 0.9, "completed={}", s.completed_ratio);
+}
+
+#[test]
+fn hlo_and_native_backends_agree_on_decisions() {
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let cfg = cfg();
+    let engine = diagonal_scale::runtime::SurfaceEngine::new(
+        diagonal_scale::runtime::Engine::load(&artifacts).unwrap(),
+        &cfg,
+    )
+    .unwrap();
+    // identical seeds => identical measured metrics => identical plans
+    let mut native = native_coordinator(
+        &cfg,
+        Box::new(DiagonalScale::diagonal()),
+        ClusterParams::default(),
+        23,
+    );
+    let mut hlo = Coordinator::new(
+        &cfg,
+        ClusterSim::new(&cfg, ClusterParams::default(), 23),
+        Backend::Hlo { engine, moves: diagonal_scale::config::MoveFlags::DIAGONAL },
+    );
+    let trace = TraceBuilder::paper(&cfg);
+    let a = native.run_trace(&trace).unwrap();
+    let b = hlo.run_trace(&trace).unwrap();
+    let ca: Vec<_> = a.iter().map(|r| r.served_config).collect();
+    let cb: Vec<_> = b.iter().map(|r| r.served_config).collect();
+    assert_eq!(ca, cb, "native and PJRT planners must make the same moves");
+}
+
+#[test]
+fn online_calibration_from_cluster_measurements() {
+    // paper §VIII: benchmark selected plane points on the "real" system
+    // and fit the surfaces from measurements.
+    let cfg = cfg();
+    let plane = cfg.plane();
+    let mut cal = Calibrator::new(cfg.surfaces);
+    for c in plane.iter() {
+        let mut cluster = ClusterSim::new(&cfg, ClusterParams::default(), 29);
+        cluster.apply(c);
+        // settle after the reconfiguration window
+        for _ in 0..3 {
+            cluster.step(WorkloadPoint::new(100.0, 0.3));
+        }
+        // probe at moderate utilization for latency
+        let probe = cluster.capacity() as f32 * 0.3;
+        let m = cluster.step(WorkloadPoint::new(probe, 0.3));
+        cal.observe(
+            &plane,
+            Observation {
+                config: c,
+                latency: m.avg_latency,
+                throughput: cluster.capacity(),
+            },
+        );
+    }
+    let lat = cal.fit_latency().expect("latency fit");
+    let thr = cal.fit_throughput().expect("throughput fit");
+    assert!(lat.rmse.is_finite());
+    // measured capacity ~ kappa * min_resource * H (no phi in the DES),
+    // so the fitted kappa must land near the configured one and the
+    // fitted omega near zero.
+    assert!(
+        (thr.kappa - cfg.surfaces.kappa as f64).abs() / (cfg.surfaces.kappa as f64) < 0.1,
+        "kappa={}",
+        thr.kappa
+    );
+    assert!(thr.omega.abs() < 0.1, "omega={}", thr.omega);
+    let calibrated = cal.calibrated_config();
+    assert!(calibrated.kappa > 0.0);
+}
+
+#[test]
+fn ewma_smoothing_is_configurable() {
+    let cfg = cfg();
+    let mut c = native_coordinator(
+        &cfg,
+        Box::new(DiagonalScale::diagonal()),
+        ClusterParams::default(),
+        31,
+    );
+    c.ewma_alpha = 1.0; // no smoothing: estimate == last observation
+    c.tick(0, WorkloadPoint::new(5000.0, 0.3)).unwrap();
+    let r = c.tick(1, WorkloadPoint::new(9000.0, 0.3)).unwrap();
+    assert!((r.demand_estimate - 9000.0).abs() < 1.0);
+}
+
+#[test]
+fn cluster_start_config_matches_model_config() {
+    let cfg = cfg();
+    let cluster = ClusterSim::new(&cfg, ClusterParams::default(), 1);
+    assert_eq!(
+        cluster.current(),
+        Configuration::new(cfg.policy.start[0], cfg.policy.start[1])
+    );
+}

@@ -1,0 +1,256 @@
+//! Integration: the PJRT runtime executing the AOT-compiled Pallas/JAX
+//! artifacts must agree with the native rust surfaces — the contract
+//! that lets the coordinator plan on either backend.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use diagonal_scale::config::{ModelConfig, MoveFlags};
+use diagonal_scale::plane::Configuration;
+use diagonal_scale::runtime::{grid_at, Engine, SurfaceEngine};
+use diagonal_scale::simulator::{PolicyKind, Simulator};
+use diagonal_scale::surfaces::SurfaceModel;
+use diagonal_scale::workload::TraceBuilder;
+use diagonal_scale::GRID;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    let p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        p.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` before `cargo test`"
+    );
+    p
+}
+
+fn engine() -> SurfaceEngine {
+    let cfg = ModelConfig::default_paper();
+    SurfaceEngine::new(Engine::load(artifacts_dir()).unwrap(), &cfg).unwrap()
+}
+
+fn assert_close(a: f32, b: f32, tol: f32, what: &str) {
+    let denom = a.abs().max(b.abs()).max(1.0);
+    assert!(
+        (a - b).abs() / denom <= tol,
+        "{what}: native={a} hlo={b}"
+    );
+}
+
+#[test]
+fn abi_check_passes() {
+    engine().check_abi().unwrap();
+}
+
+#[test]
+fn surfaces_hlo_matches_native_on_all_cells() {
+    let cfg = ModelConfig::default_paper();
+    let model = SurfaceModel::from_config(&cfg);
+    let eng = engine();
+    for lambda in [100.0f32, 6000.0, 10000.0, 16000.0] {
+        let grids = eng.surfaces(lambda).unwrap();
+        for c in model.plane().iter() {
+            let p = model.evaluate(&c, lambda);
+            let at = |g: &[f32]| grid_at(g, c.h_idx, c.v_idx);
+            assert_close(p.latency, at(&grids.latency), 1e-4, "latency");
+            assert_close(p.throughput, at(&grids.throughput), 1e-4, "throughput");
+            assert_close(p.cost, at(&grids.cost), 1e-4, "cost");
+            assert_close(p.coordination, at(&grids.coordination), 1e-4, "coordination");
+            assert_close(p.objective, at(&grids.objective), 1e-3, "objective");
+        }
+    }
+}
+
+#[test]
+fn surfaces_hlo_zeroes_padding() {
+    let eng = engine();
+    let grids = eng.surfaces(10000.0).unwrap();
+    for i in 0..GRID {
+        for j in 0..GRID {
+            if i >= 4 || j >= 4 {
+                assert_eq!(grid_at(&grids.latency, i, j), 0.0, "pad ({i},{j})");
+                assert_eq!(grid_at(&grids.objective, i, j), 0.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn queueing_hlo_matches_native_effective_latency() {
+    let cfg = ModelConfig::default_paper();
+    let model = SurfaceModel::from_config(&cfg);
+    let eng = engine();
+    for lambda in [1000.0f32, 9000.0, 1.0e9] {
+        let (l_final, saturated, _) = eng.queueing(lambda).unwrap();
+        for c in model.plane().iter() {
+            let want = model.effective_latency(&c, lambda);
+            assert_close(want, grid_at(&l_final, c.h_idx, c.v_idx), 1e-4, "l_eff");
+            let sat = grid_at(&saturated, c.h_idx, c.v_idx) > 0.5;
+            let u = lambda / model.throughput(&c);
+            assert_eq!(sat, u >= cfg.surfaces.u_max, "sat at {c:?} lambda={lambda}");
+        }
+    }
+}
+
+#[test]
+fn neighbor_hlo_matches_native_scoring() {
+    use diagonal_scale::policy::{DiagonalScale, PolicyContext};
+    use diagonal_scale::sla::SlaSpec;
+    use diagonal_scale::workload::WorkloadPoint;
+
+    let cfg = ModelConfig::default_paper();
+    let model = SurfaceModel::from_config(&cfg);
+    let sla = SlaSpec::from_config(&cfg);
+    let eng = engine();
+    let (rows, cols) = {
+        let m = eng.engine().manifest();
+        (m.neighbor_rows, m.neighbor_cols)
+    };
+    let plane = cfg.plane();
+
+    for (h, v, lambda) in [(1, 1, 6000.0f32), (0, 3, 10000.0), (2, 2, 16000.0), (3, 3, 100.0)] {
+        let cur = Configuration::new(h, v);
+        let cands = plane.neighbors(&cur, true, true);
+        let mut batch = vec![0.0f32; rows * cols];
+        for (i, c) in cands.iter().enumerate() {
+            let t = plane.tier(c);
+            let (dh, dv) = cur.index_distance(c);
+            batch[i * cols..i * cols + 9].copy_from_slice(&[
+                plane.h_value(c) as f32,
+                t.cpu,
+                t.ram,
+                t.bandwidth,
+                t.iops_k(),
+                t.cost,
+                dh as f32,
+                dv as f32,
+                1.0,
+            ]);
+        }
+        let (scores, feas) = eng
+            .neighbor_scores(&batch, lambda, MoveFlags::DIAGONAL)
+            .unwrap();
+        let ctx = PolicyContext {
+            model: &model,
+            sla: &sla,
+            reb_h: cfg.policy.reb_h,
+            reb_v: cfg.policy.reb_v,
+            plan_queue: false,
+            future: &[],
+        };
+        let w = WorkloadPoint::new(lambda, cfg.write_ratio());
+        for (i, c) in cands.iter().enumerate() {
+            let native = DiagonalScale::score_candidate(&cur, c, w, &ctx);
+            let infeasible = native >= diagonal_scale::INFEASIBLE * 0.5;
+            assert_eq!(feas[i] > 0.5, !infeasible, "feasibility at {c:?}");
+            if !infeasible {
+                assert_close(native, scores[i], 1e-3, "score");
+            } else {
+                assert!(scores[i] >= diagonal_scale::INFEASIBLE * 0.5);
+            }
+        }
+        // padded rows are invalid
+        for i in cands.len()..rows {
+            assert_eq!(feas[i], 0.0, "padding row {i}");
+        }
+    }
+}
+
+#[test]
+fn surfaces_wide_hlo_matches_native_disagg_model() {
+    use diagonal_scale::disagg::{wide_grid_arrays, DisaggConfig, DisaggModel, WIDE};
+
+    let cfg = ModelConfig::default_paper();
+    let model = DisaggModel::from_config(&cfg);
+    let (hs, tiers, mask, combos) = wide_grid_arrays(model.plane());
+    let eng = engine();
+    for lambda in [1000.0f32, 9600.0, 16000.0] {
+        let grids = eng.surfaces_wide(&hs, &tiers, &mask, lambda).unwrap();
+        assert_eq!(grids.len(), 5);
+        for h in 0..4 {
+            for (j, combo) in combos.iter().enumerate() {
+                let c = DisaggConfig::new(h, combo.c_idx, combo.m_idx, combo.s_idx);
+                let p = model.evaluate(&c, lambda);
+                let idx = h * WIDE + j;
+                assert_close(p.latency, grids[0][idx], 1e-4, "wide latency");
+                assert_close(p.throughput, grids[1][idx], 1e-4, "wide throughput");
+                assert_close(p.cost, grids[2][idx], 1e-4, "wide cost");
+                assert_close(p.objective, grids[4][idx], 1e-3, "wide objective");
+            }
+        }
+    }
+}
+
+#[test]
+fn policy_trace_hlo_matches_native_simulator() {
+    let cfg = ModelConfig::default_paper();
+    let sim = Simulator::new(&cfg);
+    let trace = TraceBuilder::paper(&cfg);
+    let eng = engine();
+    let start = (cfg.policy.start[0], cfg.policy.start[1]);
+
+    for (kind, moves) in [
+        (PolicyKind::Diagonal, MoveFlags::DIAGONAL),
+        (PolicyKind::HorizontalOnly, MoveFlags::HORIZONTAL_ONLY),
+        (PolicyKind::VerticalOnly, MoveFlags::VERTICAL_ONLY),
+    ] {
+        let native = sim.run(kind, &trace);
+        let hlo = eng.policy_trace(&trace, moves, start).unwrap();
+        assert_eq!(hlo.len(), native.records.len());
+        for (t, (n, h)) in native.records.iter().zip(&hlo).enumerate() {
+            assert_eq!(
+                (n.config.h_idx, n.config.v_idx),
+                (h.h_idx, h.v_idx),
+                "{kind:?} trajectory diverges at step {t}"
+            );
+            assert_eq!(n.violation.latency, h.latency_violation, "step {t}");
+            assert_eq!(n.violation.throughput, h.throughput_violation, "step {t}");
+            assert_close(n.latency, h.latency, 1e-3, "latency");
+            assert_close(n.throughput, h.throughput, 1e-3, "throughput");
+            assert_close(n.cost, h.cost, 1e-4, "cost");
+            assert_close(n.objective, h.objective, 1e-3, "objective");
+        }
+    }
+}
+
+#[test]
+fn policy_trace_pads_short_traces() {
+    let cfg = ModelConfig::default_paper();
+    let eng = engine();
+    let b = TraceBuilder::from_config(&cfg);
+    let trace = b.constant(60.0, 7);
+    let recs = eng
+        .policy_trace(&trace, MoveFlags::DIAGONAL, (1, 1))
+        .unwrap();
+    assert_eq!(recs.len(), 7);
+}
+
+#[test]
+fn policy_trace_long_traces_use_bigger_artifact() {
+    let cfg = ModelConfig::default_paper();
+    let eng = engine();
+    let b = TraceBuilder::from_config(&cfg);
+    let trace = b.sine(60.0, 160.0, 25, 150);
+    let recs = eng
+        .policy_trace(&trace, MoveFlags::DIAGONAL, (1, 1))
+        .unwrap();
+    assert_eq!(recs.len(), 150);
+}
+
+#[test]
+fn policy_trace_rejects_oversized_traces() {
+    let cfg = ModelConfig::default_paper();
+    let eng = engine();
+    let b = TraceBuilder::from_config(&cfg);
+    let trace = b.constant(60.0, 100_000);
+    assert!(eng.policy_trace(&trace, MoveFlags::DIAGONAL, (1, 1)).is_err());
+}
+
+#[test]
+fn unknown_entry_point_is_an_error() {
+    let eng = engine();
+    assert!(eng.engine().execute("nonexistent", &[]).is_err());
+}
+
+#[test]
+fn wrong_arity_is_an_error() {
+    let eng = engine();
+    assert!(eng.engine().execute("surfaces", &[]).is_err());
+}

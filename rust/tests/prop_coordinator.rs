@@ -1,0 +1,238 @@
+//! Property tests (via the in-tree `testkit`) on the coordinator
+//! invariants DESIGN.md calls out: neighbor generation, feasibility of
+//! chosen configs, fallback conditions, rebalance-penalty metric
+//! properties, and simulator determinism.
+
+use diagonal_scale::config::{ModelConfig, MoveFlags};
+use diagonal_scale::plane::Configuration;
+use diagonal_scale::policy::{
+    rebalance_penalty, DiagonalScale, Lookahead, Policy, PolicyContext,
+};
+use diagonal_scale::simulator::{PolicyKind, Simulator};
+use diagonal_scale::sla::SlaSpec;
+use diagonal_scale::surfaces::SurfaceModel;
+use diagonal_scale::testkit::{choice, forall, uniform};
+use diagonal_scale::workload::{TraceBuilder, WorkloadPoint, XorShift64};
+
+struct Fx {
+    cfg: ModelConfig,
+    model: SurfaceModel,
+    sla: SlaSpec,
+}
+
+impl Fx {
+    fn new() -> Self {
+        let cfg = ModelConfig::default_paper();
+        Self {
+            model: SurfaceModel::from_config(&cfg),
+            sla: SlaSpec::from_config(&cfg),
+            cfg,
+        }
+    }
+
+    fn ctx(&self) -> PolicyContext<'_> {
+        PolicyContext {
+            model: &self.model,
+            sla: &self.sla,
+            reb_h: self.cfg.policy.reb_h,
+            reb_v: self.cfg.policy.reb_v,
+            plan_queue: false,
+            future: &[],
+        }
+    }
+}
+
+fn random_config(rng: &mut XorShift64) -> Configuration {
+    Configuration::new(rng.below(4) as usize, rng.below(4) as usize)
+}
+
+fn random_workload(rng: &mut XorShift64) -> WorkloadPoint {
+    // spans infeasible-everywhere to trivially-feasible
+    let lam = uniform(rng, 10.0, 60_000.0);
+    WorkloadPoint::new(lam, 0.3)
+}
+
+#[test]
+fn neighborhood_invariants() {
+    let fx = Fx::new();
+    let plane = fx.model.plane();
+    forall(300, 0xA1, |_, rng| {
+        let cur = random_config(rng);
+        let adh = rng.next_f64() < 0.5;
+        let adv = rng.next_f64() < 0.5;
+        let n = plane.neighbors(&cur, adh, adv);
+        assert!(n.contains(&cur), "self always included");
+        assert!(n.len() <= 9);
+        for c in &n {
+            assert!(plane.contains(c));
+            let (dh, dv) = cur.index_distance(c);
+            assert!(dh <= 1 && dv <= 1, "one-step locality");
+            if !adh {
+                assert_eq!(dh, 0, "H frozen");
+            }
+            if !adv {
+                assert_eq!(dv, 0, "V frozen");
+            }
+        }
+        // row-major, no duplicates
+        let flat: Vec<usize> = n.iter().map(|c| c.h_idx * 8 + c.v_idx).collect();
+        let mut sorted = flat.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(flat.len(), sorted.len(), "no duplicates");
+        assert!(flat.windows(2).all(|w| w[0] < w[1]), "row-major order");
+    });
+}
+
+#[test]
+fn decision_always_in_plane_and_local() {
+    let fx = Fx::new();
+    forall(300, 0xA2, |_, rng| {
+        let cur = random_config(rng);
+        let w = random_workload(rng);
+        let moves = *choice(
+            rng,
+            &[MoveFlags::DIAGONAL, MoveFlags::HORIZONTAL_ONLY, MoveFlags::VERTICAL_ONLY],
+        );
+        let d = DiagonalScale::new(moves).decide(cur, w, &fx.ctx());
+        assert!(fx.model.plane().contains(&d.next));
+        let (dh, dv) = cur.index_distance(&d.next);
+        assert!(dh <= 1 && dv <= 1, "local search moves one step");
+        if !moves.allow_dh {
+            assert_eq!(d.next.h_idx, cur.h_idx);
+        }
+        if !moves.allow_dv {
+            assert_eq!(d.next.v_idx, cur.v_idx);
+        }
+    });
+}
+
+#[test]
+fn chosen_config_feasible_iff_not_fallback() {
+    let fx = Fx::new();
+    forall(300, 0xA3, |_, rng| {
+        let cur = random_config(rng);
+        let w = random_workload(rng);
+        let d = DiagonalScale::diagonal().decide(cur, w, &fx.ctx());
+        let any_feasible = fx
+            .model
+            .plane()
+            .neighbors(&cur, true, true)
+            .iter()
+            .any(|c| fx.model.feasible(c, w.lambda_req, &fx.sla, false));
+        assert_eq!(d.fallback, !any_feasible, "fallback fires iff nothing feasible");
+        if !d.fallback {
+            assert!(
+                fx.model.feasible(&d.next, w.lambda_req, &fx.sla, false),
+                "chosen config must satisfy the SLA filter"
+            );
+        }
+    });
+}
+
+#[test]
+fn chosen_score_is_the_neighborhood_minimum() {
+    let fx = Fx::new();
+    forall(300, 0xA4, |_, rng| {
+        let cur = random_config(rng);
+        let w = random_workload(rng);
+        let ctx = fx.ctx();
+        let d = DiagonalScale::diagonal().decide(cur, w, &ctx);
+        if d.fallback {
+            return;
+        }
+        for c in fx.model.plane().neighbors(&cur, true, true) {
+            let s = DiagonalScale::score_candidate(&cur, &c, w, &ctx);
+            assert!(
+                d.score <= s + 1e-3,
+                "chosen {:?} score {} beaten by {:?} score {}",
+                d.next,
+                d.score,
+                c,
+                s
+            );
+        }
+    });
+}
+
+#[test]
+fn rebalance_penalty_is_a_metric() {
+    forall(500, 0xA5, |_, rng| {
+        let a = random_config(rng);
+        let b = random_config(rng);
+        let c = random_config(rng);
+        let (rh, rv) = (uniform(rng, 0.0, 10.0), uniform(rng, 0.0, 10.0));
+        let d = |x: &Configuration, y: &Configuration| rebalance_penalty(x, y, rh, rv);
+        assert_eq!(d(&a, &a), 0.0, "identity");
+        assert_eq!(d(&a, &b), d(&b, &a), "symmetry");
+        assert!(d(&a, &c) <= d(&a, &b) + d(&b, &c) + 1e-5, "triangle inequality");
+        assert!(d(&a, &b) >= 0.0, "non-negative");
+    });
+}
+
+#[test]
+fn h_moves_cost_at_least_v_moves() {
+    // paper IV.D: with the default weights, a pure-H step is strictly
+    // costlier than a pure-V step of the same index distance.
+    let cfg = ModelConfig::default_paper();
+    forall(200, 0xA6, |_, rng| {
+        let a = random_config(rng);
+        let dh = Configuration::new((a.h_idx + 1).min(3), a.v_idx);
+        let dv = Configuration::new(a.h_idx, (a.v_idx + 1).min(3));
+        if dh != a && dv != a {
+            let rh = rebalance_penalty(&a, &dh, cfg.policy.reb_h, cfg.policy.reb_v);
+            let rv = rebalance_penalty(&a, &dv, cfg.policy.reb_h, cfg.policy.reb_v);
+            assert!(rh > rv);
+        }
+    });
+}
+
+#[test]
+fn simulator_deterministic_on_random_traces() {
+    let cfg = ModelConfig::default_paper();
+    let sim = Simulator::new(&cfg);
+    let b = TraceBuilder::from_config(&cfg);
+    forall(25, 0xA7, |case, rng| {
+        let trace = b.bursty(
+            uniform(rng, 30.0, 100.0),
+            uniform(rng, 100.0, 200.0),
+            0.3,
+            40,
+            case as u64,
+        );
+        let x = sim.run(PolicyKind::Diagonal, &trace);
+        let y = sim.run(PolicyKind::Diagonal, &trace);
+        assert_eq!(x.records, y.records);
+    });
+}
+
+#[test]
+fn lookahead_depth_one_equals_greedy_when_feasible() {
+    let fx = Fx::new();
+    forall(200, 0xA8, |_, rng| {
+        let cur = random_config(rng);
+        let w = random_workload(rng);
+        let ctx = fx.ctx();
+        let g = DiagonalScale::diagonal().decide(cur, w, &ctx);
+        let l = Lookahead::new(MoveFlags::DIAGONAL, 1).decide(cur, w, &ctx);
+        if !g.fallback {
+            assert_eq!(g.next, l.next);
+        }
+    });
+}
+
+#[test]
+fn violations_monotone_in_demand_scale() {
+    // scaling the whole trace up cannot reduce violations
+    let cfg = ModelConfig::default_paper();
+    let sim = Simulator::new(&cfg);
+    let b = TraceBuilder::from_config(&cfg);
+    forall(20, 0xA9, |_, rng| {
+        let base_level = uniform(rng, 40.0, 120.0);
+        let lo = b.constant(base_level, 30);
+        let hi = b.constant(base_level * 2.5, 30);
+        let v_lo = sim.run(PolicyKind::Diagonal, &lo).summary.violations;
+        let v_hi = sim.run(PolicyKind::Diagonal, &hi).summary.violations;
+        assert!(v_hi >= v_lo, "demand x2.5: {v_lo} -> {v_hi}");
+    });
+}

@@ -1,0 +1,208 @@
+//! Property tests on the analytical surfaces (paper §III): sign,
+//! monotonicity, and consistency invariants over randomized tier
+//! tables and workloads.
+
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::plane::{Configuration, ScalingPlane, Tier};
+use diagonal_scale::sla::SlaSpec;
+use diagonal_scale::surfaces::{queueing, SurfaceModel};
+use diagonal_scale::testkit::{forall, uniform};
+use diagonal_scale::workload::XorShift64;
+
+fn random_tier(rng: &mut XorShift64, name: &str) -> Tier {
+    Tier {
+        name: name.to_string(),
+        cpu: uniform(rng, 0.5, 64.0),
+        ram: uniform(rng, 0.5, 128.0),
+        bandwidth: uniform(rng, 0.5, 50.0),
+        iops: uniform(rng, 500.0, 50_000.0),
+        cost: uniform(rng, 0.01, 5.0),
+    }
+}
+
+fn random_model(rng: &mut XorShift64) -> SurfaceModel {
+    let cfg = ModelConfig::default_paper();
+    let tiers = (0..4)
+        .map(|i| random_tier(rng, &format!("t{i}")))
+        .collect();
+    let plane = ScalingPlane::new(vec![1, 2, 4, 8], tiers);
+    SurfaceModel::new(plane, cfg.surfaces, 0.3)
+}
+
+#[test]
+fn surfaces_finite_and_signed_for_random_tiers() {
+    forall(200, 0xB1, |_, rng| {
+        let m = random_model(rng);
+        let lam = uniform(rng, 1.0, 100_000.0);
+        for c in m.plane().iter() {
+            let p = m.evaluate(&c, lam);
+            assert!(p.latency.is_finite() && p.latency > 0.0);
+            assert!(p.throughput.is_finite() && p.throughput > 0.0);
+            assert!(p.cost.is_finite() && p.cost >= 0.0);
+            assert!(p.coordination.is_finite() && p.coordination >= 0.0);
+            assert!(p.objective.is_finite());
+        }
+    });
+}
+
+#[test]
+fn latency_rises_with_node_count_for_any_tier() {
+    forall(200, 0xB2, |_, rng| {
+        let m = random_model(rng);
+        for v in 0..4 {
+            for h in 0..3 {
+                assert!(
+                    m.latency(&Configuration::new(h + 1, v))
+                        > m.latency(&Configuration::new(h, v)),
+                    "coordination latency must grow with H"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn better_resources_never_raise_node_latency() {
+    // improving a single tier resource strictly lowers L_node
+    let cfg = ModelConfig::default_paper();
+    let plane = cfg.plane();
+    let m = SurfaceModel::from_config(&cfg);
+    forall(200, 0xB3, |_, rng| {
+        let base = plane.tiers()[rng.below(4) as usize].clone();
+        let mut better = base.clone();
+        match rng.below(4) {
+            0 => better.cpu *= 2.0,
+            1 => better.ram *= 2.0,
+            2 => better.bandwidth *= 2.0,
+            _ => better.iops *= 2.0,
+        }
+        assert!(m.node_latency(&better) < m.node_latency(&base));
+    });
+}
+
+#[test]
+fn throughput_monotone_in_h_and_sublinear() {
+    forall(200, 0xB4, |_, rng| {
+        let m = random_model(rng);
+        for v in 0..4 {
+            for h in 0..3 {
+                let lo = m.throughput(&Configuration::new(h, v));
+                let hi = m.throughput(&Configuration::new(h + 1, v));
+                assert!(hi > lo, "adding nodes must add capacity");
+                assert!(hi < 2.0 * lo + 1e-3, "phi(H) < 1: sublinear scaling");
+            }
+        }
+    });
+}
+
+#[test]
+fn throughput_tracks_the_bottleneck_resource() {
+    let cfg = ModelConfig::default_paper();
+    let m = SurfaceModel::from_config(&cfg);
+    forall(200, 0xB5, |_, rng| {
+        let mut t = random_tier(rng, "x");
+        let before = m.node_throughput(&t);
+        // raising a non-bottleneck resource never changes T_node
+        let min = t.min_resource();
+        if t.cpu > min {
+            t.cpu *= 2.0;
+            assert_eq!(m.node_throughput(&t), before);
+        }
+    });
+}
+
+#[test]
+fn cost_is_bilinear() {
+    forall(200, 0xB6, |_, rng| {
+        let m = random_model(rng);
+        let plane = m.plane();
+        for c in plane.iter() {
+            let want = plane.h_value(&c) as f32 * plane.tier(&c).cost;
+            assert_eq!(m.cost(&c), want);
+        }
+    });
+}
+
+#[test]
+fn effective_latency_bounds() {
+    forall(300, 0xB7, |_, rng| {
+        let lat = uniform(rng, 0.1, 20.0);
+        let thr = uniform(rng, 10.0, 100_000.0);
+        let u_max = uniform(rng, 0.1, 0.99);
+        let lam = uniform(rng, 0.0, 1.0e9);
+        let l_eff = queueing::effective_latency(lat, thr, lam, u_max);
+        assert!(l_eff >= lat, "queueing can only add latency");
+        assert!(l_eff <= lat / (1.0 - u_max) + 1e-3, "clamp bounds the blowup");
+        assert!(l_eff.is_finite());
+    });
+}
+
+#[test]
+fn effective_latency_monotone_in_demand() {
+    forall(200, 0xB8, |_, rng| {
+        let lat = uniform(rng, 0.1, 20.0);
+        let thr = uniform(rng, 100.0, 100_000.0);
+        let lam_a = uniform(rng, 0.0, thr);
+        let lam_b = lam_a + uniform(rng, 0.0, thr);
+        let a = queueing::effective_latency(lat, thr, lam_a, 0.95);
+        let b = queueing::effective_latency(lat, thr, lam_b, 0.95);
+        assert!(b >= a - 1e-6);
+    });
+}
+
+#[test]
+fn planner_feasible_implies_audit_clean() {
+    // with b_sla >= 1, a planner-feasible config can never be an SLA
+    // violation when served at the same demand
+    let cfg = ModelConfig::default_paper();
+    let m = SurfaceModel::from_config(&cfg);
+    let sla = SlaSpec::from_config(&cfg);
+    assert!(cfg.sla.b_sla >= 1.0);
+    forall(300, 0xB9, |_, rng| {
+        let c = Configuration::new(rng.below(4) as usize, rng.below(4) as usize);
+        let lam = uniform(rng, 1.0, 60_000.0);
+        if m.feasible(&c, lam, &sla, false) {
+            let v = sla.audit(m.latency(&c), m.throughput(&c), lam);
+            assert!(!v.any(), "feasible config audited as violating at {c:?}");
+        }
+    });
+}
+
+#[test]
+fn best_feasible_agrees_with_exhaustive_scan() {
+    let cfg = ModelConfig::default_paper();
+    let m = SurfaceModel::from_config(&cfg);
+    let sla = SlaSpec::from_config(&cfg);
+    forall(200, 0xBA, |_, rng| {
+        let lam = uniform(rng, 1.0, 60_000.0);
+        let fast = m.best_feasible(lam, &sla, false);
+        // brute force
+        let mut brute: Option<(Configuration, f32)> = None;
+        for c in m.plane().iter() {
+            if !m.feasible(&c, lam, &sla, false) {
+                continue;
+            }
+            let obj = m.evaluate(&c, lam).objective;
+            if brute.map_or(true, |(_, b)| obj < b) {
+                brute = Some((c, obj));
+            }
+        }
+        match (fast, brute) {
+            (None, None) => {}
+            (Some((fc, _)), Some((bc, _))) => assert_eq!(fc, bc),
+            (f, b) => panic!("mismatch: fast={f:?} brute={b:?}"),
+        }
+    });
+}
+
+#[test]
+fn grid_evaluation_consistent_with_point_evaluation() {
+    forall(100, 0xBB, |_, rng| {
+        let m = random_model(rng);
+        let lam = uniform(rng, 1.0, 50_000.0);
+        for (c, p) in m.evaluate_grid(lam) {
+            let q = m.evaluate(&c, lam);
+            assert_eq!(p, q);
+        }
+    });
+}
