@@ -1,0 +1,117 @@
+//! Fleet under a shared cost budget: 8 tenants, 3 priority classes.
+//!
+//! ```text
+//! cargo run --release --example fleet_budget
+//! ```
+//!
+//! 1. Run the fleet unconstrained to find its natural peak spend.
+//! 2. Re-run with a budget at ~65% of that peak: the arbiter's greedy
+//!    knapsack + priority classes decide who scales.
+//! 3. Verify, tick by tick, that total fleet spend never exceeds the
+//!    budget; that Gold tenants keep their p95 (raw) latency within the
+//!    SLA bound; and that Bronze absorbs the bulk of the denials.
+
+use anyhow::{bail, Result};
+
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::fleet::{self, FleetSimulator, PriorityClass, TenantSpec};
+use diagonal_scale::workload::TraceBuilder;
+
+const TENANTS: usize = 8;
+const STEPS: usize = 100;
+const FAIRNESS_K: usize = 3;
+
+fn specs(cfg: &ModelConfig) -> Vec<TenantSpec> {
+    let base = TraceBuilder::paper(cfg);
+    // 2 Gold, 3 Silver, 3 Bronze; each tenant's demand is the paper
+    // timeline phase-shifted so peaks stagger across the fleet.
+    let classes = [
+        PriorityClass::Gold,
+        PriorityClass::Gold,
+        PriorityClass::Silver,
+        PriorityClass::Silver,
+        PriorityClass::Silver,
+        PriorityClass::Bronze,
+        PriorityClass::Bronze,
+        PriorityClass::Bronze,
+    ];
+    classes
+        .iter()
+        .enumerate()
+        .map(|(i, &class)| {
+            TenantSpec::from_config(
+                cfg,
+                format!("{}-{i}", class.label()),
+                class,
+                base.shifted(i * base.len() / TENANTS),
+            )
+        })
+        .collect()
+}
+
+fn main() -> Result<()> {
+    let cfg = ModelConfig::default_paper();
+
+    // 1. unconstrained baseline: what would the fleet naturally spend?
+    let mut free = FleetSimulator::new(&cfg, specs(&cfg), 1.0e9, FAIRNESS_K);
+    let free_res = free.run(STEPS);
+    let free_peak = free_res.peak_spend();
+    println!(
+        "unconstrained fleet: peak spend {free_peak:.2}/h, total cost {:.1}, denials {}",
+        free_res.report.total_cost, free_res.report.denied_moves
+    );
+
+    // 2. the same fleet under a budget at ~65% of the natural peak
+    let budget = (free_peak * 0.65 * 10.0).round() / 10.0;
+    println!("\nshared budget: {budget:.2}/h  ({TENANTS} tenants, K={FAIRNESS_K})\n");
+    let mut fleet = FleetSimulator::new(&cfg, specs(&cfg), budget, FAIRNESS_K);
+    let res = fleet.run(STEPS);
+
+    for t in &res.ticks {
+        let ok = t.spend <= budget + 1e-3;
+        println!(
+            "tick {:>3}  spend {:>6.2} / {budget:<6.2} {}  admitted {:>2}  denied {:>2}  rescues {}",
+            t.step,
+            t.spend,
+            if ok { "ok  " } else { "OVER" },
+            t.admitted_moves,
+            t.denied_moves,
+            t.rescues
+        );
+    }
+    println!("\n{}", fleet::report::table(&res.report));
+
+    // 3. the three acceptance checks
+    if !res.within_budget(budget) {
+        bail!("FAIL: fleet spend exceeded the budget (peak {:.2})", res.peak_spend());
+    }
+    println!("CHECK spend: every tick within budget (peak {:.2} <= {budget:.2})", res.peak_spend());
+
+    for t in res.report.tenants.iter().filter(|t| t.class == PriorityClass::Gold) {
+        if !t.p95_within_sla() {
+            bail!(
+                "FAIL: gold tenant {} p95 raw latency {:.3} exceeds its SLA bound {:.2}",
+                t.name,
+                t.p95_latency_raw,
+                t.sla_l_max
+            );
+        }
+        println!(
+            "CHECK gold SLA: {} p95 raw latency {:.3} <= {:.2}",
+            t.name, t.p95_latency_raw, t.sla_l_max
+        );
+    }
+
+    let denied = |c: PriorityClass| res.report.class(c).map_or(0, |r| r.denied);
+    let (gold_d, silver_d, bronze_d) =
+        (denied(PriorityClass::Gold), denied(PriorityClass::Silver), denied(PriorityClass::Bronze));
+    println!("CHECK denials by class: gold {gold_d}  silver {silver_d}  bronze {bronze_d}");
+    if res.report.denied_moves == 0 {
+        bail!("FAIL: the budget never bit — no contention was exercised");
+    }
+    if bronze_d < gold_d {
+        bail!("FAIL: bronze ({bronze_d}) should absorb at least as many denials as gold ({gold_d})");
+    }
+    println!("\nall checks passed: budget respected, gold SLAs held, bronze absorbed contention");
+    Ok(())
+}

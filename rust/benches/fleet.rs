@@ -1,0 +1,75 @@
+//! Bench F — fleet decision-loop throughput: full tick wall time
+//! (serve + propose + arbitrate + actuate for every tenant) as the
+//! tenant count sweeps 1 → 64.
+//!
+//! ```text
+//! cargo bench --bench fleet
+//! ```
+//!
+//! The surface model is shared across tenants and per-decision surface
+//! lookups are cache-table reads, so the marginal tenant is cheap: the
+//! fitted scaling exponent of tick cost vs tenant count comes out below
+//! 1.0 (sub-linear) on the sweep endpoints.
+
+use diagonal_scale::benchkit::{group, Bench};
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::fleet::{FleetSimulator, PriorityClass, TenantSpec};
+use diagonal_scale::workload::TraceBuilder;
+
+fn build_fleet(cfg: &ModelConfig, n: usize) -> FleetSimulator {
+    let base = TraceBuilder::paper(cfg);
+    let specs: Vec<TenantSpec> = (0..n)
+        .map(|i| {
+            let class = match i % 3 {
+                0 => PriorityClass::Gold,
+                1 => PriorityClass::Silver,
+                _ => PriorityClass::Bronze,
+            };
+            TenantSpec::from_config(
+                cfg,
+                format!("t{i:02}"),
+                class,
+                base.shifted(i * base.len() / n),
+            )
+        })
+        .collect();
+    // budget scaled per tenant so contention (and the arbiter's full
+    // knapsack path) is exercised at every fleet size
+    let mut fleet = FleetSimulator::new(cfg, specs, 2.2 * n as f32, 3);
+    fleet.set_recording(false); // bounded memory over millions of ticks
+    fleet
+}
+
+fn main() {
+    let cfg = ModelConfig::default_paper();
+    let b = Bench::default();
+
+    group("fleet decision loop — full tick wall time vs tenant count");
+    let mut points: Vec<(usize, f64)> = Vec::new();
+    for n in [1usize, 2, 4, 8, 16, 32, 64] {
+        let mut fleet = build_fleet(&cfg, n);
+        let stats = b.run(&format!("fleet_tick/{n:>2}_tenants"), || {
+            fleet.tick().admitted_moves
+        });
+        b.report_metric(
+            &format!("fleet_tick/{n:>2}_tenants per-tenant"),
+            stats.mean.as_secs_f64() * 1e9 / n as f64,
+            "ns/tenant/tick",
+        );
+        points.push((n, stats.mean.as_secs_f64()));
+    }
+
+    group("scaling fit");
+    let (n0, t0) = points[0];
+    let (n1, t1) = *points.last().unwrap();
+    let alpha = (t1 / t0).ln() / ((n1 as f64) / (n0 as f64)).ln();
+    b.report_metric("tick-cost scaling exponent (1.0 = linear)", alpha, "alpha");
+    if alpha < 1.0 {
+        println!(
+            "decision-loop time scales SUB-LINEARLY in tenant count \
+             (alpha = {alpha:.2}: shared surface model + amortized per-tick overhead)"
+        );
+    } else {
+        println!("decision-loop time scaled super-linearly (alpha = {alpha:.2}) — investigate");
+    }
+}

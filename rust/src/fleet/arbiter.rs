@@ -1,0 +1,315 @@
+//! Fleet budget arbiter: admission control for per-tenant scaling moves
+//! under a shared monetary budget.
+//!
+//! Each tick every tenant proposes its best Algorithm-1 move; the
+//! arbiter admits a subset so projected fleet spend never exceeds the
+//! budget:
+//!
+//! 1. **Holds and shrinks** — no-ops and cost-non-increasing moves are
+//!    always admitted (they free headroom before anything is spent).
+//! 2. **Fairness rescues** — a tenant denied `fairness_k`+ consecutive
+//!    ticks while SLA-violating goes to the front of the queue, ahead
+//!    of every economic move; it is denied again only if its move does
+//!    not fit the remaining budget after the cost cuts and any
+//!    more-starved rescues.
+//! 3. **Greedy knapsack** — remaining cost-increasing moves, ordered by
+//!    priority class, then gain-per-dollar density, then smaller cost,
+//!    admitted while they fit.
+//!
+//! The order is total (tenant id is the last tie-break), so admission is
+//! deterministic and independent of proposal arrival order — a property
+//! `rust/tests/prop_fleet.rs` asserts.
+
+use super::tenant::Proposal;
+
+/// Why a proposal was admitted or denied this tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// No configuration change requested.
+    Hold,
+    /// Cost-non-increasing move: always admitted.
+    AdmittedShrink,
+    /// Admitted by the fairness guard (denial streak ≥ K while
+    /// SLA-violating).
+    AdmittedRescue,
+    /// Admitted by the greedy knapsack.
+    Admitted,
+    /// Denied: admitting would push projected fleet spend over budget.
+    DeniedBudget,
+    /// The fairness guard applied, but the move does not fit the
+    /// budget remaining after cost cuts and more-starved rescues.
+    DeniedRescueUnaffordable,
+}
+
+impl Verdict {
+    /// Whether the tenant may actuate its proposal.
+    pub fn admitted(&self) -> bool {
+        matches!(
+            self,
+            Verdict::Hold | Verdict::AdmittedShrink | Verdict::AdmittedRescue | Verdict::Admitted
+        )
+    }
+
+    pub fn denied(&self) -> bool {
+        !self.admitted()
+    }
+}
+
+/// The arbiter's decision for one tick.
+#[derive(Debug, Clone)]
+pub struct Admission {
+    /// Verdict per proposal, in input order.
+    pub verdicts: Vec<Verdict>,
+    /// Fleet spend before any admission (Σ cost of serving configs).
+    pub base_spend: f32,
+    /// Projected fleet spend after every admitted move takes effect
+    /// (this is the next tick's spend).
+    pub projected_spend: f32,
+    /// Admitted configuration *changes* (holds excluded).
+    pub admitted_moves: usize,
+    pub denied_moves: usize,
+    pub rescues: usize,
+    pub rescue_denials: usize,
+}
+
+impl Admission {
+    pub fn verdict_for(&self, proposals: &[Proposal], tenant: usize) -> Option<Verdict> {
+        proposals
+            .iter()
+            .position(|p| p.tenant == tenant)
+            .map(|i| self.verdicts[i])
+    }
+}
+
+/// Fleet-level admission control under a shared budget.
+#[derive(Debug, Clone, Copy)]
+pub struct BudgetArbiter {
+    /// Global hourly-cost budget the fleet must stay under.
+    pub budget: f32,
+    /// Fairness guard K: an SLA-violating tenant is denied at most K
+    /// consecutive ticks before jumping ahead of every economic move
+    /// (only budget exhaustion by more-starved rescues can extend it).
+    pub fairness_k: usize,
+}
+
+impl BudgetArbiter {
+    pub fn new(budget: f32, fairness_k: usize) -> Self {
+        assert!(budget > 0.0, "budget must be positive");
+        assert!(fairness_k > 0, "fairness K must be at least 1");
+        Self { budget, fairness_k }
+    }
+
+    /// Decide every proposal for one tick. Projected spend starts at
+    /// Σ `cost_from` and never exceeds `budget` through admissions
+    /// (if the fleet already overspends — e.g. the budget was lowered
+    /// mid-run — only shrinks are admitted until it fits again).
+    pub fn admit(&self, proposals: &[Proposal]) -> Admission {
+        let base_spend: f32 = proposals.iter().map(|p| p.cost_from).sum();
+        let mut spend = base_spend;
+        let mut verdicts = vec![Verdict::DeniedBudget; proposals.len()];
+
+        // pass 0: holds + cost-non-increasing moves
+        for (i, p) in proposals.iter().enumerate() {
+            if !p.is_move() {
+                verdicts[i] = Verdict::Hold;
+            } else if p.cost_delta() <= 0.0 {
+                verdicts[i] = Verdict::AdmittedShrink;
+                spend += p.cost_delta();
+            }
+        }
+
+        // pass 1: fairness rescues, most-starved first
+        let mut rescue: Vec<usize> = (0..proposals.len())
+            .filter(|&i| {
+                verdicts[i] == Verdict::DeniedBudget
+                    && proposals[i].sla_violating
+                    && proposals[i].denial_streak >= self.fairness_k
+            })
+            .collect();
+        rescue.sort_by(|&a, &b| {
+            let (pa, pb) = (&proposals[a], &proposals[b]);
+            pb.denial_streak
+                .cmp(&pa.denial_streak)
+                .then(pb.class.rank().cmp(&pa.class.rank()))
+                .then(pb.density().total_cmp(&pa.density()))
+                .then(pa.tenant.cmp(&pb.tenant))
+        });
+        for i in rescue {
+            if spend + proposals[i].cost_delta() <= self.budget {
+                verdicts[i] = Verdict::AdmittedRescue;
+                spend += proposals[i].cost_delta();
+            } else {
+                verdicts[i] = Verdict::DeniedRescueUnaffordable;
+            }
+        }
+
+        // pass 2: greedy knapsack over the remaining cost increases
+        let mut rest: Vec<usize> = (0..proposals.len())
+            .filter(|&i| verdicts[i] == Verdict::DeniedBudget)
+            .collect();
+        rest.sort_by(|&a, &b| {
+            let (pa, pb) = (&proposals[a], &proposals[b]);
+            pb.class
+                .rank()
+                .cmp(&pa.class.rank())
+                .then(pb.density().total_cmp(&pa.density()))
+                .then(pa.cost_delta().total_cmp(&pb.cost_delta()))
+                .then(pa.tenant.cmp(&pb.tenant))
+        });
+        for i in rest {
+            if spend + proposals[i].cost_delta() <= self.budget {
+                verdicts[i] = Verdict::Admitted;
+                spend += proposals[i].cost_delta();
+            }
+        }
+
+        let admitted_moves = proposals
+            .iter()
+            .zip(&verdicts)
+            .filter(|(p, v)| v.admitted() && p.is_move())
+            .count();
+        let denied_moves = verdicts.iter().filter(|v| v.denied()).count();
+        Admission {
+            rescues: verdicts.iter().filter(|&&v| v == Verdict::AdmittedRescue).count(),
+            rescue_denials: verdicts
+                .iter()
+                .filter(|&&v| v == Verdict::DeniedRescueUnaffordable)
+                .count(),
+            verdicts,
+            base_spend,
+            projected_spend: spend,
+            admitted_moves,
+            denied_moves,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::tenant::PriorityClass;
+    use crate::plane::Configuration;
+
+    fn proposal(tenant: usize, class: PriorityClass, cost_from: f32, cost_to: f32) -> Proposal {
+        Proposal {
+            tenant,
+            class,
+            from: Configuration::new(0, 0),
+            to: Configuration::new(1, 1),
+            cost_from,
+            cost_to,
+            gain: 10.0,
+            emergency: false,
+            sla_violating: false,
+            denial_streak: 0,
+        }
+    }
+
+    fn hold(tenant: usize, cost: f32) -> Proposal {
+        let c = Configuration::new(1, 1);
+        Proposal {
+            tenant,
+            class: PriorityClass::Silver,
+            from: c,
+            to: c,
+            cost_from: cost,
+            cost_to: cost,
+            gain: 0.0,
+            emergency: false,
+            sla_violating: false,
+            denial_streak: 0,
+        }
+    }
+
+    #[test]
+    fn holds_and_shrinks_always_admitted() {
+        let arb = BudgetArbiter::new(1.0, 3);
+        let ps = vec![hold(0, 0.4), proposal(1, PriorityClass::Bronze, 0.5, 0.3)];
+        let adm = arb.admit(&ps);
+        assert_eq!(adm.verdicts[0], Verdict::Hold);
+        assert_eq!(adm.verdicts[1], Verdict::AdmittedShrink);
+        assert!((adm.projected_spend - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn budget_is_never_exceeded() {
+        let arb = BudgetArbiter::new(2.0, 3);
+        let ps = vec![
+            proposal(0, PriorityClass::Gold, 0.5, 1.2),
+            proposal(1, PriorityClass::Gold, 0.5, 1.2),
+            proposal(2, PriorityClass::Gold, 0.5, 1.2),
+        ];
+        let adm = arb.admit(&ps);
+        assert!(adm.projected_spend <= 2.0 + 1e-6);
+        // only one 0.7 increase fits on top of the 1.5 base
+        assert_eq!(adm.admitted_moves, 0);
+        let arb = BudgetArbiter::new(2.3, 3);
+        let adm = arb.admit(&ps);
+        assert_eq!(adm.admitted_moves, 1);
+        assert_eq!(adm.denied_moves, 2);
+    }
+
+    #[test]
+    fn higher_class_wins_the_last_slot() {
+        let arb = BudgetArbiter::new(1.7, 3);
+        let ps = vec![
+            proposal(0, PriorityClass::Bronze, 0.5, 1.2),
+            proposal(1, PriorityClass::Gold, 0.5, 1.2),
+        ];
+        let adm = arb.admit(&ps);
+        assert_eq!(adm.verdicts[0], Verdict::DeniedBudget);
+        assert_eq!(adm.verdicts[1], Verdict::Admitted);
+    }
+
+    #[test]
+    fn rescue_preempts_higher_class_greedy() {
+        // Bronze has starved past K while violating; Gold's economic move
+        // competes for the same headroom — the rescue goes first.
+        let arb = BudgetArbiter::new(1.7, 2);
+        let mut bronze = proposal(0, PriorityClass::Bronze, 0.5, 1.2);
+        bronze.sla_violating = true;
+        bronze.denial_streak = 2;
+        let gold = proposal(1, PriorityClass::Gold, 0.5, 1.2);
+        let adm = arb.admit(&[bronze, gold]);
+        assert_eq!(adm.verdicts[0], Verdict::AdmittedRescue);
+        assert_eq!(adm.verdicts[1], Verdict::DeniedBudget);
+        assert_eq!(adm.rescues, 1);
+    }
+
+    #[test]
+    fn unaffordable_rescue_is_reported() {
+        let arb = BudgetArbiter::new(1.0, 1);
+        let mut p = proposal(0, PriorityClass::Bronze, 0.8, 4.0);
+        p.sla_violating = true;
+        p.denial_streak = 5;
+        let adm = arb.admit(&[p]);
+        assert_eq!(adm.verdicts[0], Verdict::DeniedRescueUnaffordable);
+        assert_eq!(adm.rescue_denials, 1);
+        assert!(adm.projected_spend <= 1.0);
+    }
+
+    #[test]
+    fn emergencies_outrank_economic_moves_within_class() {
+        let arb = BudgetArbiter::new(1.7, 3);
+        let mut emergency = proposal(0, PriorityClass::Silver, 0.5, 1.2);
+        emergency.emergency = true;
+        emergency.gain = 0.1;
+        let economic = proposal(1, PriorityClass::Silver, 0.5, 1.2);
+        let adm = arb.admit(&[economic, emergency]);
+        assert_eq!(adm.verdicts[1], Verdict::Admitted);
+        assert_eq!(adm.verdicts[0], Verdict::DeniedBudget);
+    }
+
+    #[test]
+    fn overspent_fleet_admits_only_shrinks() {
+        let arb = BudgetArbiter::new(1.0, 3);
+        let ps = vec![
+            proposal(0, PriorityClass::Gold, 1.0, 1.5),
+            proposal(1, PriorityClass::Gold, 0.8, 0.4),
+        ];
+        let adm = arb.admit(&ps);
+        assert_eq!(adm.verdicts[0], Verdict::DeniedBudget);
+        assert_eq!(adm.verdicts[1], Verdict::AdmittedShrink);
+        assert!(adm.projected_spend < adm.base_spend);
+    }
+}

@@ -1,0 +1,270 @@
+//! Multi-tenant fleet control: N tenant databases scaling concurrently
+//! under a shared monetary budget — the first cross-cluster layer on
+//! the road from the paper's single-cluster optimizer to a
+//! production-scale service.
+//!
+//! Every existing layer composes N-way behind this API: each
+//! [`Tenant`] owns a Scaling-Plane position, an [`crate::sla::SlaSpec`],
+//! a phase-shifted [`crate::workload::Trace`], and the paper's
+//! DIAGONALSCALE policy (optionally backed by its own Phase-2
+//! [`crate::cluster::ClusterSim`]); the [`BudgetArbiter`] admits the
+//! per-tick moves via greedy knapsack over marginal cost with priority
+//! classes and a starvation guard; [`report`] aggregates fleet-level
+//! metrics (per-class p95, total cost, denial counts).
+//!
+//! Tick semantics are serve-then-move, exactly like
+//! [`crate::simulator::Simulator`]: the configuration carried into tick
+//! *t* serves demand *t*; admitted moves take effect at *t + 1*. The
+//! budget invariant follows: projected spend after admission **is**
+//! the next tick's spend, so fleet spend never exceeds the budget once
+//! under it.
+
+pub mod arbiter;
+pub mod report;
+pub mod tenant;
+
+pub use arbiter::{Admission, BudgetArbiter, Verdict};
+pub use report::{ClassReport, FleetReport, TenantReport};
+pub use tenant::{PriorityClass, Proposal, Tenant, TenantSpec};
+
+use std::sync::Arc;
+
+use crate::cluster::ClusterParams;
+use crate::config::ModelConfig;
+use crate::surfaces::SurfaceModel;
+
+/// Tolerance for float drift when comparing fleet spend to the budget
+/// (spend is re-summed per tick; the arbiter sums base + deltas).
+pub const BUDGET_EPS: f32 = 1e-3;
+
+/// One tick's fleet-level outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetTick {
+    pub step: usize,
+    /// Σ hourly cost of the configurations that served this tick.
+    pub spend: f32,
+    /// Projected spend once the admitted moves take effect (== next
+    /// tick's spend).
+    pub projected_spend: f32,
+    pub admitted_moves: usize,
+    pub denied_moves: usize,
+    pub rescues: usize,
+    pub rescue_denials: usize,
+}
+
+/// A complete fleet run: the per-tick timeline plus the final report.
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    pub ticks: Vec<FleetTick>,
+    pub report: FleetReport,
+}
+
+impl FleetResult {
+    /// Highest per-tick spend observed.
+    pub fn peak_spend(&self) -> f32 {
+        self.report.peak_spend
+    }
+
+    /// Whether every tick stayed within the budget.
+    pub fn within_budget(&self, budget: f32) -> bool {
+        self.peak_spend() <= budget + BUDGET_EPS
+    }
+}
+
+/// Drives N tenants and the budget arbiter over their traces.
+pub struct FleetSimulator {
+    tenants: Vec<Tenant>,
+    arbiter: BudgetArbiter,
+    step: usize,
+}
+
+impl FleetSimulator {
+    /// Build a fleet. All tenants share one [`SurfaceModel`] (the plane
+    /// geometry and surface constants are fleet-wide), so construction
+    /// cost is independent of tenant count.
+    pub fn new(
+        cfg: &ModelConfig,
+        specs: Vec<TenantSpec>,
+        budget: f32,
+        fairness_k: usize,
+    ) -> Self {
+        assert!(!specs.is_empty(), "fleet needs at least one tenant");
+        let model = Arc::new(SurfaceModel::from_config(cfg));
+        let tenants = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| Tenant::new(i, s, Arc::clone(&model), cfg))
+            .collect();
+        Self { tenants, arbiter: BudgetArbiter::new(budget, fairness_k), step: 0 }
+    }
+
+    /// Back every tenant with its own discrete-event cluster substrate
+    /// (seeded per tenant for reproducibility).
+    pub fn attach_clusters(&mut self, cfg: &ModelConfig, params: ClusterParams, seed: u64) {
+        for t in &mut self.tenants {
+            t.attach_cluster(cfg, params, seed.wrapping_add(t.id as u64));
+        }
+    }
+
+    /// Disable per-step recording (benchmark mode: bounded memory).
+    pub fn set_recording(&mut self, on: bool) {
+        for t in &mut self.tenants {
+            t.set_recording(on);
+        }
+    }
+
+    pub fn arbiter(&self) -> &BudgetArbiter {
+        &self.arbiter
+    }
+
+    pub fn tenants(&self) -> &[Tenant] {
+        &self.tenants
+    }
+
+    /// Current fleet spend (Σ hourly cost of serving configurations).
+    pub fn spend(&self) -> f32 {
+        self.tenants.iter().map(Tenant::cost).sum()
+    }
+
+    /// Longest tenant trace (the natural run length).
+    pub fn longest_trace(&self) -> usize {
+        self.tenants.iter().map(|t| t.trace().len()).max().unwrap_or(0)
+    }
+
+    /// One fleet tick: every tenant serves, proposes; the arbiter
+    /// admits under the budget; admitted moves actuate for next tick.
+    pub fn tick(&mut self) -> FleetTick {
+        let t = self.step;
+        let mut spend = 0.0f32;
+        for tn in &mut self.tenants {
+            spend += tn.serve(t).cost;
+        }
+
+        let proposals: Vec<Proposal> =
+            self.tenants.iter_mut().map(|tn| tn.propose(t)).collect();
+        let adm = self.arbiter.admit(&proposals);
+
+        for (p, v) in proposals.iter().zip(&adm.verdicts) {
+            let tn = &mut self.tenants[p.tenant];
+            match v {
+                Verdict::Hold => tn.note_no_move(),
+                Verdict::AdmittedShrink | Verdict::Admitted => tn.apply(p.to),
+                Verdict::AdmittedRescue => {
+                    tn.rescued_total += 1;
+                    tn.apply(p.to);
+                }
+                Verdict::DeniedBudget => tn.note_denied(),
+                Verdict::DeniedRescueUnaffordable => tn.note_rescue_unaffordable(),
+            }
+        }
+
+        self.step += 1;
+        FleetTick {
+            step: t,
+            spend,
+            projected_spend: adm.projected_spend,
+            admitted_moves: adm.admitted_moves,
+            denied_moves: adm.denied_moves,
+            rescues: adm.rescues,
+            rescue_denials: adm.rescue_denials,
+        }
+    }
+
+    /// Run `steps` ticks (traces repeat cyclically) and aggregate.
+    pub fn run(&mut self, steps: usize) -> FleetResult {
+        let ticks: Vec<FleetTick> = (0..steps).map(|_| self.tick()).collect();
+        let report = report::fleet_report(&self.tenants, &ticks, self.arbiter.budget);
+        FleetResult { ticks, report }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TraceBuilder;
+
+    fn specs(cfg: &ModelConfig, n: usize) -> Vec<TenantSpec> {
+        let base = TraceBuilder::paper(cfg);
+        (0..n)
+            .map(|i| {
+                let class = match i % 3 {
+                    0 => PriorityClass::Gold,
+                    1 => PriorityClass::Silver,
+                    _ => PriorityClass::Bronze,
+                };
+                TenantSpec::from_config(
+                    cfg,
+                    format!("t{i}"),
+                    class,
+                    base.shifted(i * base.len() / n.max(1)),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn generous_budget_never_denies() {
+        let cfg = ModelConfig::default_paper();
+        let mut fleet = FleetSimulator::new(&cfg, specs(&cfg, 4), 1.0e6, 3);
+        let res = fleet.run(50);
+        assert!(res.ticks.iter().all(|t| t.denied_moves == 0));
+        assert!(res.within_budget(1.0e6));
+    }
+
+    #[test]
+    fn spend_stays_within_budget_every_tick() {
+        let cfg = ModelConfig::default_paper();
+        let budget = 8.0f32; // tight: unconstrained peaks exceed this
+        let mut fleet = FleetSimulator::new(&cfg, specs(&cfg, 6), budget, 3);
+        let res = fleet.run(100);
+        assert!(res.within_budget(budget), "peak {}", res.peak_spend());
+        // contention must actually bite for the test to mean anything
+        assert!(res.ticks.iter().any(|t| t.denied_moves > 0));
+    }
+
+    #[test]
+    fn projected_spend_is_next_ticks_spend() {
+        let cfg = ModelConfig::default_paper();
+        let mut fleet = FleetSimulator::new(&cfg, specs(&cfg, 5), 9.0, 3);
+        let res = fleet.run(60);
+        for w in res.ticks.windows(2) {
+            assert!(
+                (w[0].projected_spend - w[1].spend).abs() < 1e-3,
+                "projected {} vs served {}",
+                w[0].projected_spend,
+                w[1].spend
+            );
+        }
+    }
+
+    #[test]
+    fn constrained_fleet_never_outperforms_unconstrained_on_spend() {
+        let cfg = ModelConfig::default_paper();
+        let mut free = FleetSimulator::new(&cfg, specs(&cfg, 6), 1.0e6, 3);
+        let free_res = free.run(50);
+        let budget = free_res.peak_spend() * 0.7;
+        let mut tight = FleetSimulator::new(&cfg, specs(&cfg, 6), budget, 3);
+        let tight_res = tight.run(50);
+        assert!(tight_res.peak_spend() <= budget + 1e-3);
+        assert!(tight_res.peak_spend() < free_res.peak_spend());
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = ModelConfig::default_paper();
+        let a = FleetSimulator::new(&cfg, specs(&cfg, 4), 7.0, 3).run(50);
+        let b = FleetSimulator::new(&cfg, specs(&cfg, 4), 7.0, 3).run(50);
+        assert_eq!(a.ticks, b.ticks);
+    }
+
+    #[test]
+    fn cluster_backed_fleet_runs() {
+        let cfg = ModelConfig::default_paper();
+        let mut fleet = FleetSimulator::new(&cfg, specs(&cfg, 3), 1.0e6, 3);
+        fleet.attach_clusters(&cfg, ClusterParams::default(), 42);
+        let res = fleet.run(20);
+        assert_eq!(res.ticks.len(), 20);
+        // measured throughput flows into the summaries
+        assert!(res.report.tenants.iter().all(|t| t.summary.avg_throughput > 0.0));
+    }
+}

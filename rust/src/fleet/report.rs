@@ -1,0 +1,303 @@
+//! Fleet-level metrics aggregation: per-tenant summaries, per-class
+//! rollups (p95 latency, total cost, denial counts), and text/CSV
+//! renderers for the CLI, example, and bench.
+
+use std::fmt::Write as _;
+
+use crate::metrics::Summary;
+
+use super::tenant::{PriorityClass, Tenant};
+use super::FleetTick;
+
+/// Nearest-rank percentile over unsorted samples (0 when empty).
+pub fn percentile(xs: &[f32], q: f64) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(f32::total_cmp);
+    let rank = ((q / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
+/// One tenant's end-of-run rollup.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub name: String,
+    pub class: PriorityClass,
+    pub summary: Summary,
+    /// p95 of measured (queueing-corrected / DES) latency.
+    pub p95_latency: f32,
+    /// p95 of raw analytical latency (what the SLA bound governs).
+    pub p95_latency_raw: f32,
+    /// The tenant's latency SLA bound.
+    pub sla_l_max: f32,
+    pub denied: usize,
+    pub rescues: usize,
+    pub max_denial_streak: usize,
+    /// Hourly cost of the final configuration.
+    pub final_cost: f32,
+}
+
+impl TenantReport {
+    /// Whether the tenant's p95 raw latency met its SLA bound.
+    pub fn p95_within_sla(&self) -> bool {
+        self.p95_latency_raw <= self.sla_l_max
+    }
+}
+
+/// Per-priority-class rollup.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub class: PriorityClass,
+    pub tenants: usize,
+    /// p95 over every step latency of every tenant in the class.
+    pub p95_latency: f32,
+    pub p95_latency_raw: f32,
+    pub total_cost: f64,
+    pub denied: usize,
+    pub rescues: usize,
+    pub violations: usize,
+}
+
+/// The whole fleet's end-of-run report.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub budget: f32,
+    pub peak_spend: f32,
+    pub total_cost: f64,
+    pub admitted_moves: usize,
+    pub denied_moves: usize,
+    pub tenants: Vec<TenantReport>,
+    pub classes: Vec<ClassReport>,
+}
+
+impl FleetReport {
+    pub fn class(&self, class: PriorityClass) -> Option<&ClassReport> {
+        self.classes.iter().find(|c| c.class == class)
+    }
+
+    /// Whether fleet spend stayed within the budget at every tick.
+    pub fn within_budget(&self) -> bool {
+        self.peak_spend <= self.budget + super::BUDGET_EPS
+    }
+}
+
+/// Aggregate tenants + tick timeline into a [`FleetReport`].
+pub fn fleet_report(tenants: &[Tenant], ticks: &[FleetTick], budget: f32) -> FleetReport {
+    let tenant_reports: Vec<TenantReport> = tenants
+        .iter()
+        .map(|t| {
+            let lat: Vec<f32> = t.records().iter().map(|r| r.latency).collect();
+            let raw: Vec<f32> = t.records().iter().map(|r| r.latency_raw).collect();
+            TenantReport {
+                name: t.name().to_string(),
+                class: t.class(),
+                summary: t.summary(),
+                p95_latency: percentile(&lat, 95.0),
+                p95_latency_raw: percentile(&raw, 95.0),
+                sla_l_max: t.sla().l_max,
+                denied: t.denied_total,
+                rescues: t.rescued_total,
+                max_denial_streak: t.max_denial_streak,
+                final_cost: t.cost(),
+            }
+        })
+        .collect();
+
+    let classes = PriorityClass::ALL
+        .iter()
+        .filter_map(|&class| {
+            let members: Vec<&Tenant> =
+                tenants.iter().filter(|t| t.class() == class).collect();
+            if members.is_empty() {
+                return None;
+            }
+            let lat: Vec<f32> = members
+                .iter()
+                .flat_map(|t| t.records().iter().map(|r| r.latency))
+                .collect();
+            let raw: Vec<f32> = members
+                .iter()
+                .flat_map(|t| t.records().iter().map(|r| r.latency_raw))
+                .collect();
+            Some(ClassReport {
+                class,
+                tenants: members.len(),
+                p95_latency: percentile(&lat, 95.0),
+                p95_latency_raw: percentile(&raw, 95.0),
+                total_cost: members.iter().map(|t| t.summary().total_cost).sum(),
+                denied: members.iter().map(|t| t.denied_total).sum(),
+                rescues: members.iter().map(|t| t.rescued_total).sum(),
+                violations: members.iter().map(|t| t.summary().violations).sum(),
+            })
+        })
+        .collect();
+
+    FleetReport {
+        budget,
+        peak_spend: ticks.iter().map(|t| t.spend).fold(0.0, f32::max),
+        total_cost: tenant_reports.iter().map(|t| t.summary.total_cost).sum(),
+        admitted_moves: ticks.iter().map(|t| t.admitted_moves).sum(),
+        denied_moves: ticks.iter().map(|t| t.denied_moves).sum(),
+        tenants: tenant_reports,
+        classes,
+    }
+}
+
+/// Human-readable fleet table (classes then tenants).
+pub fn table(report: &FleetReport) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "fleet: budget {:.2}/h  peak spend {:.2}/h ({})  total cost {:.1}  moves admitted {} denied {}",
+        report.budget,
+        report.peak_spend,
+        if report.within_budget() { "within budget" } else { "OVER BUDGET" },
+        report.total_cost,
+        report.admitted_moves,
+        report.denied_moves,
+    );
+    let _ = writeln!(
+        out,
+        "\n{:<8} {:>7} {:>10} {:>12} {:>10} {:>8} {:>8} {:>8}",
+        "class", "tenants", "p95 lat", "p95 raw lat", "cost", "denied", "rescues", "viol."
+    );
+    for c in &report.classes {
+        let _ = writeln!(
+            out,
+            "{:<8} {:>7} {:>10.3} {:>12.3} {:>10.1} {:>8} {:>8} {:>8}",
+            c.class.label(),
+            c.tenants,
+            c.p95_latency,
+            c.p95_latency_raw,
+            c.total_cost,
+            c.denied,
+            c.rescues,
+            c.violations
+        );
+    }
+    let _ = writeln!(
+        out,
+        "\n{:<12} {:<8} {:>10} {:>12} {:>7} {:>9} {:>8} {:>8} {:>10}",
+        "tenant", "class", "p95 lat", "p95 raw lat", "sla", "avg cost", "denied", "rescues", "max streak"
+    );
+    for t in &report.tenants {
+        let _ = writeln!(
+            out,
+            "{:<12} {:<8} {:>10.3} {:>12.3} {:>7.2} {:>9.3} {:>8} {:>8} {:>10}",
+            t.name,
+            t.class.label(),
+            t.p95_latency,
+            t.p95_latency_raw,
+            t.sla_l_max,
+            t.summary.avg_cost,
+            t.denied,
+            t.rescues,
+            t.max_denial_streak
+        );
+    }
+    out
+}
+
+/// Per-tenant CSV (machine-readable twin of [`table`]).
+pub fn csv(report: &FleetReport) -> String {
+    let mut out = String::from(
+        "tenant,class,p95_latency,p95_latency_raw,sla_l_max,avg_cost,total_cost,violations,denied,rescues,max_denial_streak\n",
+    );
+    for t in &report.tenants {
+        let _ = writeln!(
+            out,
+            "{},{},{:.4},{:.4},{:.2},{:.4},{:.2},{},{},{},{}",
+            t.name,
+            t.class.label(),
+            t.p95_latency,
+            t.p95_latency_raw,
+            t.sla_l_max,
+            t.summary.avg_cost,
+            t.summary.total_cost,
+            t.summary.violations,
+            t.denied,
+            t.rescues,
+            t.max_denial_streak
+        );
+    }
+    out
+}
+
+/// Spend timeline CSV (`step,spend,projected,admitted,denied,rescues`).
+pub fn ticks_csv(ticks: &[FleetTick]) -> String {
+    let mut out = String::from("step,spend,projected_spend,admitted,denied,rescues\n");
+    for t in ticks {
+        let _ = writeln!(
+            out,
+            "{},{:.4},{:.4},{},{},{}",
+            t.step, t.spend, t.projected_spend, t.admitted_moves, t.denied_moves, t.rescues
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::fleet::{FleetSimulator, TenantSpec};
+    use crate::workload::TraceBuilder;
+
+    fn run_fleet() -> (crate::fleet::FleetResult, f32) {
+        let cfg = ModelConfig::default_paper();
+        let base = TraceBuilder::paper(&cfg);
+        let specs = vec![
+            TenantSpec::from_config(&cfg, "gold-0", PriorityClass::Gold, base.clone()),
+            TenantSpec::from_config(&cfg, "silver-0", PriorityClass::Silver, base.shifted(17)),
+            TenantSpec::from_config(&cfg, "bronze-0", PriorityClass::Bronze, base.shifted(33)),
+        ];
+        let budget = 7.5f32;
+        let mut fleet = FleetSimulator::new(&cfg, specs, budget, 3);
+        (fleet.run(50), budget)
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f32> = (1..=100).map(|i| i as f32).collect();
+        assert_eq!(percentile(&xs, 95.0), 95.0);
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&[2.0], 95.0), 2.0);
+        assert_eq!(percentile(&[], 95.0), 0.0);
+    }
+
+    #[test]
+    fn report_covers_every_class_and_tenant() {
+        let (res, budget) = run_fleet();
+        assert_eq!(res.report.tenants.len(), 3);
+        assert_eq!(res.report.classes.len(), 3);
+        assert!(res.report.within_budget());
+        assert!(res.report.peak_spend <= budget + 1e-3);
+        for c in PriorityClass::ALL {
+            assert!(res.report.class(c).is_some());
+        }
+    }
+
+    #[test]
+    fn totals_are_consistent() {
+        let (res, _) = run_fleet();
+        let class_cost: f64 = res.report.classes.iter().map(|c| c.total_cost).sum();
+        assert!((class_cost - res.report.total_cost).abs() < 1e-6);
+        let tick_moves: usize = res.ticks.iter().map(|t| t.admitted_moves).sum();
+        assert_eq!(tick_moves, res.report.admitted_moves);
+    }
+
+    #[test]
+    fn renderers_mention_every_tenant() {
+        let (res, _) = run_fleet();
+        let t = table(&res.report);
+        let c = csv(&res.report);
+        for name in ["gold-0", "silver-0", "bronze-0"] {
+            assert!(t.contains(name));
+            assert!(c.contains(name));
+        }
+        assert_eq!(csv(&res.report).lines().count(), 4);
+        assert_eq!(ticks_csv(&res.ticks).lines().count(), 51);
+    }
+}

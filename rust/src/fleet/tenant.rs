@@ -1,0 +1,488 @@
+//! A fleet tenant: one database cluster with its own Scaling-Plane
+//! state, SLA contract, phase-shifted demand trace, and Algorithm-1
+//! policy, plus the admission bookkeeping the budget arbiter needs
+//! (per-tick proposals, denial streaks, violation state).
+//!
+//! Tenants share one [`SurfaceModel`] (the plane geometry and surface
+//! constants are fleet-wide), so adding a tenant costs state, not model
+//! construction — the fleet bench leans on this.
+
+use std::sync::Arc;
+
+use crate::cluster::{ClusterParams, ClusterSim};
+use crate::config::ModelConfig;
+use crate::metrics::{Recorder, StepRecord, Summary};
+use crate::plane::Configuration;
+use crate::policy::{DiagonalScale, Policy, PolicyContext};
+use crate::sla::{SlaSpec, Violation};
+use crate::surfaces::SurfaceModel;
+use crate::workload::{Trace, WorkloadPoint};
+use crate::INFEASIBLE;
+
+/// Admission priority of a tenant. Ties in the arbiter's knapsack break
+/// toward the higher class (`Bronze < Silver < Gold`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PriorityClass {
+    Bronze,
+    Silver,
+    Gold,
+}
+
+impl PriorityClass {
+    /// All classes, highest priority first.
+    pub const ALL: [PriorityClass; 3] =
+        [PriorityClass::Gold, PriorityClass::Silver, PriorityClass::Bronze];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PriorityClass::Gold => "gold",
+            PriorityClass::Silver => "silver",
+            PriorityClass::Bronze => "bronze",
+        }
+    }
+
+    /// Numeric rank; higher admits first.
+    pub fn rank(&self) -> u8 {
+        match self {
+            PriorityClass::Gold => 2,
+            PriorityClass::Silver => 1,
+            PriorityClass::Bronze => 0,
+        }
+    }
+}
+
+/// Static description of one tenant.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    pub class: PriorityClass,
+    pub sla: SlaSpec,
+    pub trace: Trace,
+    pub start: Configuration,
+}
+
+impl TenantSpec {
+    /// Spec with the model-config defaults for SLA and start config.
+    pub fn from_config(
+        cfg: &ModelConfig,
+        name: impl Into<String>,
+        class: PriorityClass,
+        trace: Trace,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            class,
+            sla: SlaSpec::from_config(cfg),
+            trace,
+            start: Configuration::new(cfg.policy.start[0], cfg.policy.start[1]),
+        }
+    }
+}
+
+/// One tenant's proposed move for a tick, as the arbiter sees it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Proposal {
+    pub tenant: usize,
+    pub class: PriorityClass,
+    pub from: Configuration,
+    pub to: Configuration,
+    /// Hourly cost of the configuration currently serving.
+    pub cost_from: f32,
+    /// Hourly cost of the proposed configuration.
+    pub cost_to: f32,
+    /// Objective improvement the move claims (positive = better).
+    pub gain: f32,
+    /// SLA emergency: the Algorithm-1 fallback fired, or the current
+    /// configuration is planner-infeasible for this tick's demand.
+    pub emergency: bool,
+    /// The tenant's last served step violated its SLA.
+    pub sla_violating: bool,
+    /// Consecutive ticks this tenant has been denied while
+    /// SLA-violating (the fairness guard's counter).
+    pub denial_streak: usize,
+}
+
+impl Proposal {
+    /// Marginal fleet cost of admitting this move.
+    pub fn cost_delta(&self) -> f32 {
+        self.cost_to - self.cost_from
+    }
+
+    /// Whether the proposal changes the configuration at all.
+    pub fn is_move(&self) -> bool {
+        self.to != self.from
+    }
+
+    /// Greedy-knapsack value density: claimed gain per added dollar.
+    /// SLA emergencies outrank any economic move.
+    pub fn density(&self) -> f32 {
+        if self.emergency {
+            return INFEASIBLE;
+        }
+        self.gain / self.cost_delta().max(1e-6)
+    }
+}
+
+/// Runtime state of one tenant cluster.
+pub struct Tenant {
+    pub id: usize,
+    spec: TenantSpec,
+    model: Arc<SurfaceModel>,
+    policy: DiagonalScale,
+    current: Configuration,
+    recorder: Recorder,
+    recording: bool,
+    last_violation: bool,
+    /// Consecutive denials while SLA-violating (fairness counter).
+    pub denial_streak: usize,
+    pub max_denial_streak: usize,
+    pub denied_total: usize,
+    pub rescued_total: usize,
+    /// Rescue attempts the arbiter could not afford (the move did not
+    /// fit the budget left after cost cuts and more-starved rescues).
+    pub rescue_unaffordable_total: usize,
+    reb_h: f32,
+    reb_v: f32,
+    plan_queue: bool,
+    /// Optional Phase-2 DES substrate backing this tenant.
+    cluster: Option<ClusterSim>,
+}
+
+impl Tenant {
+    pub fn new(id: usize, spec: TenantSpec, model: Arc<SurfaceModel>, cfg: &ModelConfig) -> Self {
+        assert!(!spec.trace.is_empty(), "tenant {} has an empty trace", spec.name);
+        assert!(model.plane().contains(&spec.start), "tenant start outside plane");
+        let current = spec.start;
+        Self {
+            id,
+            spec,
+            model,
+            policy: DiagonalScale::diagonal(),
+            current,
+            recorder: Recorder::new(),
+            recording: true,
+            last_violation: false,
+            denial_streak: 0,
+            max_denial_streak: 0,
+            denied_total: 0,
+            rescued_total: 0,
+            rescue_unaffordable_total: 0,
+            reb_h: cfg.policy.reb_h,
+            reb_v: cfg.policy.reb_v,
+            plan_queue: cfg.policy.plan_queue,
+            cluster: None,
+        }
+    }
+
+    /// Back this tenant with its own discrete-event cluster substrate
+    /// (per-tenant `ClusterSim`, mirroring the single-cluster
+    /// coordinator); metrics then come from measurement, not the model.
+    pub fn attach_cluster(&mut self, cfg: &ModelConfig, params: ClusterParams, seed: u64) {
+        let mut sim = ClusterSim::new(cfg, params, seed);
+        if sim.current() != self.current {
+            sim.apply(self.current);
+        }
+        self.cluster = Some(sim);
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    pub fn class(&self) -> PriorityClass {
+        self.spec.class
+    }
+
+    pub fn sla(&self) -> &SlaSpec {
+        &self.spec.sla
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.spec.trace
+    }
+
+    pub fn current(&self) -> Configuration {
+        self.current
+    }
+
+    /// Hourly cost of the configuration currently serving.
+    pub fn cost(&self) -> f32 {
+        self.model.cost(&self.current)
+    }
+
+    /// The tenant's last served step violated its SLA.
+    pub fn violating(&self) -> bool {
+        self.last_violation
+    }
+
+    pub fn set_recording(&mut self, on: bool) {
+        self.recording = on;
+    }
+
+    pub fn records(&self) -> &[StepRecord] {
+        self.recorder.records()
+    }
+
+    pub fn summary(&self) -> Summary {
+        self.recorder.summary()
+    }
+
+    /// Demand at fleet tick `t` (traces repeat cyclically).
+    pub fn workload_at(&self, t: usize) -> WorkloadPoint {
+        self.spec.trace.points[t % self.spec.trace.len()]
+    }
+
+    /// Serve tick `t` at the carried-in configuration and record the
+    /// step (serve-then-move, mirroring [`crate::simulator::Simulator`]).
+    pub fn serve(&mut self, t: usize) -> StepRecord {
+        let w = self.workload_at(t);
+        let rec = match &mut self.cluster {
+            None => {
+                let point = self.model.evaluate(&self.current, w.lambda_req);
+                let lat_eff = self.model.effective_latency(&self.current, w.lambda_req);
+                let obj_eff = self.model.effective_objective(&self.current, w.lambda_req);
+                StepRecord {
+                    step: t,
+                    config: self.current,
+                    lambda_req: w.lambda_req,
+                    latency: lat_eff,
+                    latency_raw: point.latency,
+                    throughput: point.throughput,
+                    cost: point.cost,
+                    objective: obj_eff,
+                    violation: self.spec.sla.audit(
+                        point.latency,
+                        point.throughput,
+                        w.lambda_req,
+                    ),
+                }
+            }
+            Some(sim) => {
+                let m = sim.step(w);
+                let point = self.model.evaluate(&self.current, w.lambda_req);
+                StepRecord {
+                    step: t,
+                    config: self.current,
+                    lambda_req: w.lambda_req,
+                    latency: m.p99_latency as f32,
+                    latency_raw: point.latency,
+                    throughput: m.completed as f32,
+                    cost: point.cost,
+                    objective: self.model.effective_objective(&self.current, w.lambda_req),
+                    violation: Violation {
+                        latency: m.p99_latency > sim.params().sla_latency,
+                        throughput: m.completed < m.offered * 0.999,
+                    },
+                }
+            }
+        };
+        self.last_violation = rec.violation.any();
+        if self.recording {
+            self.recorder.push(rec);
+        }
+        rec
+    }
+
+    /// The tenant's best local move for tick `t`, packaged for the
+    /// arbiter. The policy is the paper's DIAGONALSCALE; the claimed
+    /// gain is the score improvement over holding still.
+    pub fn propose(&mut self, t: usize) -> Proposal {
+        let w = self.workload_at(t);
+        // field-disjoint borrows: the context reads model/spec while the
+        // policy below needs `&mut self.policy`
+        let ctx = PolicyContext {
+            model: self.model.as_ref(),
+            sla: &self.spec.sla,
+            reb_h: self.reb_h,
+            reb_v: self.reb_v,
+            plan_queue: self.plan_queue,
+            future: &[],
+        };
+        let current_feasible =
+            self.model
+                .feasible(&self.current, w.lambda_req, &self.spec.sla, self.plan_queue);
+        let current_score = if self.plan_queue {
+            self.model.effective_objective(&self.current, w.lambda_req)
+        } else {
+            self.model.evaluate(&self.current, w.lambda_req).objective
+        };
+        let d = self.policy.decide(self.current, w, &ctx);
+        let gain = if d.fallback { 0.0 } else { current_score - d.score };
+        Proposal {
+            tenant: self.id,
+            class: self.spec.class,
+            from: self.current,
+            to: d.next,
+            cost_from: self.model.cost(&self.current),
+            cost_to: self.model.cost(&d.next),
+            gain,
+            emergency: d.fallback || !current_feasible,
+            sla_violating: self.last_violation,
+            denial_streak: self.denial_streak,
+        }
+    }
+
+    /// Actuate an admitted move (resets the fairness counter).
+    pub fn apply(&mut self, to: Configuration) {
+        assert!(self.model.plane().contains(&to));
+        if let Some(sim) = &mut self.cluster {
+            if to != self.current {
+                sim.apply(to);
+            }
+        }
+        self.current = to;
+        self.denial_streak = 0;
+    }
+
+    /// The tenant proposed no change this tick.
+    pub fn note_no_move(&mut self) {
+        self.denial_streak = 0;
+    }
+
+    /// The arbiter denied this tick's move.
+    pub fn note_denied(&mut self) {
+        self.denied_total += 1;
+        if self.last_violation {
+            self.denial_streak += 1;
+            self.max_denial_streak = self.max_denial_streak.max(self.denial_streak);
+        } else {
+            self.denial_streak = 0;
+        }
+    }
+
+    /// The fairness guard fired but the move did not fit the budget
+    /// left after cost cuts and more-starved rescues.
+    pub fn note_rescue_unaffordable(&mut self) {
+        self.rescue_unaffordable_total += 1;
+        self.note_denied();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::TraceBuilder;
+
+    fn fixture() -> (ModelConfig, Arc<SurfaceModel>) {
+        let cfg = ModelConfig::default_paper();
+        let model = Arc::new(SurfaceModel::from_config(&cfg));
+        (cfg, model)
+    }
+
+    fn tenant(class: PriorityClass) -> Tenant {
+        let (cfg, model) = fixture();
+        let spec = TenantSpec::from_config(&cfg, "t0", class, TraceBuilder::paper(&cfg));
+        Tenant::new(0, spec, model, &cfg)
+    }
+
+    #[test]
+    fn class_order_and_rank_agree() {
+        assert!(PriorityClass::Bronze < PriorityClass::Silver);
+        assert!(PriorityClass::Silver < PriorityClass::Gold);
+        assert!(PriorityClass::Gold.rank() > PriorityClass::Bronze.rank());
+        assert_eq!(PriorityClass::ALL[0], PriorityClass::Gold);
+    }
+
+    #[test]
+    fn serve_records_cost_of_current_config() {
+        let mut t = tenant(PriorityClass::Gold);
+        let rec = t.serve(0);
+        assert_eq!(rec.config, t.current());
+        assert!((rec.cost - t.cost()).abs() < 1e-6);
+        assert_eq!(t.records().len(), 1);
+    }
+
+    #[test]
+    fn proposal_is_a_neighbor_with_consistent_costs() {
+        let mut t = tenant(PriorityClass::Silver);
+        for tick in 0..50 {
+            t.serve(tick);
+            let p = t.propose(tick);
+            let (dh, dv) = p.from.index_distance(&p.to);
+            assert!(dh <= 1 && dv <= 1);
+            assert!((p.cost_delta() - (p.cost_to - p.cost_from)).abs() < 1e-6);
+            t.apply(p.to);
+        }
+    }
+
+    #[test]
+    fn gain_nonnegative_when_current_feasible() {
+        let (cfg, model) = fixture();
+        let b = TraceBuilder::from_config(&cfg);
+        // lambda 3000 at (H=2, medium): T ≈ 3988 ≥ 3000 * 1.15 — feasible
+        let spec = TenantSpec::from_config(
+            &cfg,
+            "calm",
+            PriorityClass::Gold,
+            b.constant(30.0, 10),
+        );
+        let mut t = Tenant::new(0, spec, model, &cfg);
+        t.serve(0);
+        let p = t.propose(0);
+        assert!(!p.emergency);
+        assert!(p.gain >= 0.0, "gain={}", p.gain);
+    }
+
+    #[test]
+    fn emergency_flagged_when_infeasible() {
+        let (cfg, model) = fixture();
+        let b = TraceBuilder::from_config(&cfg);
+        let spec = TenantSpec {
+            start: Configuration::new(0, 0),
+            ..TenantSpec::from_config(&cfg, "hot", PriorityClass::Bronze, b.constant(160.0, 10))
+        };
+        let mut t = Tenant::new(0, spec, model, &cfg);
+        t.serve(0);
+        let p = t.propose(0);
+        assert!(p.emergency);
+        assert_eq!(p.density(), INFEASIBLE);
+    }
+
+    #[test]
+    fn denial_streak_counts_only_while_violating() {
+        let mut t = tenant(PriorityClass::Bronze);
+        t.last_violation = true;
+        t.note_denied();
+        t.note_denied();
+        assert_eq!(t.denial_streak, 2);
+        t.last_violation = false;
+        t.note_denied();
+        assert_eq!(t.denial_streak, 0);
+        assert_eq!(t.denied_total, 3);
+        assert_eq!(t.max_denial_streak, 2);
+    }
+
+    #[test]
+    fn apply_resets_streak() {
+        let mut t = tenant(PriorityClass::Bronze);
+        t.last_violation = true;
+        t.note_denied();
+        assert_eq!(t.denial_streak, 1);
+        t.apply(Configuration::new(2, 2));
+        assert_eq!(t.denial_streak, 0);
+        assert_eq!(t.current(), Configuration::new(2, 2));
+    }
+
+    #[test]
+    fn recording_off_keeps_no_records() {
+        let mut t = tenant(PriorityClass::Gold);
+        t.set_recording(false);
+        for tick in 0..20 {
+            t.serve(tick);
+        }
+        assert!(t.records().is_empty());
+    }
+
+    #[test]
+    fn cluster_backed_tenant_measures() {
+        let (cfg, model) = fixture();
+        let spec =
+            TenantSpec::from_config(&cfg, "des", PriorityClass::Gold, TraceBuilder::paper(&cfg));
+        let mut t = Tenant::new(0, spec, model, &cfg);
+        t.attach_cluster(&cfg, ClusterParams::default(), 7);
+        let rec = t.serve(0);
+        // measured latency comes from the DES, not the analytical model
+        assert!(rec.latency > 0.0);
+        assert!(rec.throughput > 0.0);
+    }
+}

@@ -23,6 +23,10 @@
 //!   real deployments the paper defers to future work (§VII).
 //! * [`coordinator`] — the autoscaler control loop that drives the
 //!   cluster substrate with any policy.
+//! * [`fleet`] — multi-tenant fleet control: N tenant clusters (each a
+//!   full plane/SLA/policy/trace stack) scaling concurrently under a
+//!   shared monetary budget, with priority classes and a starvation
+//!   guard in the fleet-level budget arbiter.
 //! * [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes the
 //!   Pallas-backed surface kernels on the decision path.
@@ -40,6 +44,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod disagg;
+pub mod fleet;
 pub mod forecast;
 pub mod metrics;
 pub mod plane;

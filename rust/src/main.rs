@@ -9,6 +9,7 @@
 //! diagonal-scale cluster [--policy P] [--seed N]   # Phase-2 DES run
 //! diagonal-scale trace-hlo [--artifacts DIR]       # Table I via PJRT
 //! diagonal-scale daemon [--steps N] [--seed N]     # threaded autoscaler
+//! diagonal-scale fleet [--tenants N] [--budget F]  # multi-tenant fleet
 //! ```
 //!
 //! Global flag: `--config <path.toml>` (defaults to the bundled paper
@@ -21,6 +22,7 @@ use anyhow::{anyhow, bail, Result};
 use diagonal_scale::cluster::{ClusterParams, ClusterSim};
 use diagonal_scale::config::{ModelConfig, MoveFlags};
 use diagonal_scale::coordinator::{self, Backend, Coordinator};
+use diagonal_scale::fleet::{self, FleetSimulator, PriorityClass, TenantSpec};
 use diagonal_scale::policy::{DiagonalScale, Lookahead, Oracle, Policy, StaticPolicy, Threshold};
 use diagonal_scale::report::{self, Surface};
 use diagonal_scale::runtime::{Engine, SurfaceEngine};
@@ -48,6 +50,13 @@ COMMANDS:
                 [--artifacts <dir>] (default artifacts/)
   daemon      Threaded autoscaler daemon on a synthetic demand feed
                 [--steps <n>] (default 100)  [--seed <u64>] (default 42)
+  fleet       Multi-tenant fleet under a shared cost budget
+                [--tenants <n>] (default 8)
+                [--budget <f32>/h] (default 2.2 per tenant)
+                [--steps <n>] (default 100)
+                [--k <n>] fairness guard K (default 3)
+                [--cluster <bool>] back tenants with the DES substrate
+                [--seed <u64>] (default 42, DES mode only)
 ";
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -265,6 +274,55 @@ fn main() -> Result<()> {
             feeder.join().expect("feeder thread");
             let summary = handle.join().expect("daemon thread")?;
             println!("daemon summary: {summary:?}");
+        }
+        "fleet" => {
+            let n: usize = args.parse_num("tenants", 8)?;
+            if n == 0 {
+                bail!("--tenants must be at least 1");
+            }
+            let steps: usize = args.parse_num("steps", 100)?;
+            let k: usize = args.parse_num("k", 3)?;
+            let budget: f32 = args.parse_num("budget", 2.2 * n as f32)?;
+            let seed: u64 = args.parse_num("seed", 42)?;
+            let des: bool = args.parse_num("cluster", false)?;
+
+            // Classes: top quarter Gold, next quarter Silver, rest
+            // Bronze; traces are the paper timeline phase-shifted so
+            // tenant peaks stagger across the fleet.
+            let base = TraceBuilder::paper(&cfg);
+            let specs: Vec<TenantSpec> = (0..n)
+                .map(|i| {
+                    let class = if 4 * i < n {
+                        PriorityClass::Gold
+                    } else if 2 * i < n {
+                        PriorityClass::Silver
+                    } else {
+                        PriorityClass::Bronze
+                    };
+                    TenantSpec::from_config(
+                        &cfg,
+                        format!("tenant-{i:02}"),
+                        class,
+                        base.shifted(i * base.len() / n),
+                    )
+                })
+                .collect();
+
+            let mut fleetsim = FleetSimulator::new(&cfg, specs, budget, k);
+            if des {
+                fleetsim.attach_clusters(&cfg, ClusterParams::default(), seed);
+            }
+            let res = fleetsim.run(steps);
+            for t in &res.ticks {
+                println!(
+                    "tick {:>4}  spend {:>7.2} / {budget:<7.2}  admitted {:>2}  denied {:>2}  rescues {}",
+                    t.step, t.spend, t.admitted_moves, t.denied_moves, t.rescues
+                );
+            }
+            println!("\n{}", fleet::report::table(&res.report));
+            if !res.within_budget(budget) {
+                bail!("fleet spend exceeded the budget (peak {:.2})", res.peak_spend());
+            }
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {

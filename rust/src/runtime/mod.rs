@@ -65,6 +65,17 @@ impl Engine {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(dir.join("manifest.json"))?;
         manifest.validate()?;
+        // fail on missing artifact files before spinning up PJRT: a
+        // clearer error, and no client is created for a doomed load
+        for (name, ep) in &manifest.entry_points {
+            let path = dir.join(&ep.file);
+            if !path.exists() {
+                return Err(anyhow!(
+                    "artifact {} (entry `{name}`) not found — run `make artifacts` first",
+                    path.display()
+                ));
+            }
+        }
         let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
         let mut executables = HashMap::new();
         for (name, ep) in &manifest.entry_points {
@@ -85,12 +96,7 @@ impl Engine {
     }
 
     fn compile_file(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
-        if !path.exists() {
-            return Err(anyhow!(
-                "artifact {} not found — run `make artifacts` first",
-                path.display()
-            ));
-        }
+        // existence is pre-checked in `load` (before the client exists)
         let proto = HloModuleProto::from_text_file(path)
             .map_err(|e| anyhow!("parsing HLO text {}: {e}", path.display()))?;
         let comp = XlaComputation::from_proto(&proto);

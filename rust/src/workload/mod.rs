@@ -60,6 +60,30 @@ impl Trace {
         out
     }
 
+    /// Append another trace after this one (multi-day timelines, fleet
+    /// scenario stitching). The result is named `<self>+<other>`.
+    pub fn concat(&self, other: &Trace) -> Trace {
+        let mut points = Vec::with_capacity(self.points.len() + other.points.len());
+        points.extend_from_slice(&self.points);
+        points.extend_from_slice(&other.points);
+        Trace { name: format!("{}+{}", self.name, other.name), points }
+    }
+
+    /// Cyclic phase shift: the trace rotated left by `offset` steps, so
+    /// `shifted.points[t] == self.points[(t + offset) % len]`. This is
+    /// how the fleet builds phase-shifted per-tenant demand from one
+    /// base timeline (tenants peak at different ticks).
+    pub fn shifted(&self, offset: usize) -> Trace {
+        if self.points.is_empty() {
+            return self.clone();
+        }
+        let k = offset % self.points.len();
+        let mut points = Vec::with_capacity(self.points.len());
+        points.extend_from_slice(&self.points[k..]);
+        points.extend_from_slice(&self.points[..k]);
+        Trace { name: format!("{}@{k}", self.name), points }
+    }
+
     /// Serialize as CSV (`step,lambda_req,lambda_w`) for interchange
     /// with external trace tooling.
     pub fn to_csv(&self) -> String {
@@ -320,6 +344,41 @@ mod tests {
         let t = builder().ramp(10.0, 20.0, 11);
         assert_eq!(t.points[0].lambda_req, 1000.0);
         assert_eq!(t.points[10].lambda_req, 2000.0);
+    }
+
+    #[test]
+    fn concat_appends_in_order() {
+        let a = builder().constant(10.0, 3);
+        let b = builder().ramp(20.0, 30.0, 2);
+        let c = a.concat(&b);
+        assert_eq!(c.len(), 5);
+        assert_eq!(&c.points[..3], &a.points[..]);
+        assert_eq!(&c.points[3..], &b.points[..]);
+        assert_eq!(c.name, "constant+ramp");
+    }
+
+    #[test]
+    fn shifted_rotates_cyclically() {
+        let cfg = ModelConfig::default_paper();
+        let t = TraceBuilder::paper(&cfg);
+        let s = t.shifted(10);
+        assert_eq!(s.len(), t.len());
+        for i in 0..t.len() {
+            assert_eq!(s.points[i], t.points[(i + 10) % t.len()], "step {i}");
+        }
+        // the shifted trace starts in the paper's medium phase
+        assert_eq!(s.points[0].lambda_req, 10000.0);
+        // same multiset of demand: averages agree
+        assert!((s.avg_lambda_req() - t.avg_lambda_req()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn shift_by_len_or_zero_is_identity() {
+        let t = builder().ramp(10.0, 20.0, 7);
+        assert_eq!(t.shifted(0).points, t.points);
+        assert_eq!(t.shifted(7).points, t.points);
+        assert_eq!(t.shifted(14).points, t.points);
+        assert_eq!(t.shifted(9).points, t.shifted(2).points);
     }
 
     #[test]
