@@ -1,0 +1,28 @@
+# diagonal-scale build entry points. Everything except `artifacts` is
+# pure offline cargo; `artifacts` AOT-lowers the JAX/Pallas kernels to
+# HLO text and needs a python environment with jax installed (see
+# python/compile/aot.py).
+
+.DEFAULT_GOAL := help
+
+.PHONY: help build test bench-compile examples artifacts
+
+help: ## list the available targets
+	@grep -E '^[a-zA-Z_-]+:.*?## ' $(MAKEFILE_LIST) | awk 'BEGIN {FS = ":.*?## "}; {printf "  %-14s %s\n", $$1, $$2}'
+
+build: ## release build of the library, binary, and examples
+	cargo build --release
+
+test: ## tier-1 verify: release build + full test suite
+	cargo build --release
+	cargo test -q
+
+bench-compile: ## compile every bench target without running it
+	cargo bench --no-run
+
+examples: ## run the quickstart and fleet_budget smoke examples
+	cargo run --release --example quickstart
+	cargo run --release --example fleet_budget
+
+artifacts: ## AOT-lower the JAX/Pallas kernels to artifacts/ (needs jax)
+	cd python && python3 -m compile.aot --out-dir ../artifacts

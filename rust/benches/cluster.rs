@@ -1,0 +1,122 @@
+//! Bench C — substrate engines head-to-head: steps/sec (and ops/sec)
+//! for the event-driven engine vs the legacy per-op sampling engine,
+//! swept over cluster size H ∈ {2..64} at paper-peak load and over
+//! offered load at a fixed H.
+//!
+//! ```text
+//! cargo bench --bench cluster
+//! ```
+//!
+//! The sampling engine runs with thinning disabled
+//! (`max_ops_per_step = usize::MAX`) so both engines simulate every
+//! arrival — the honest comparison. The acceptance bar for the event
+//! engine is ≥ 5x at H=32 under paper-peak load (16k ops/interval).
+
+use diagonal_scale::benchkit::{group, Bench};
+use diagonal_scale::cluster::{ClusterParams, ClusterSim, EventSim, Substrate};
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::plane::Configuration;
+use diagonal_scale::workload::WorkloadPoint;
+
+/// Paper-peak offered load (ops per interval).
+const PEAK: f32 = 16_000.0;
+
+/// A plane whose H axis reaches 64 nodes (the default paper plane
+/// stops at 8); tiers are unchanged.
+fn wide_cfg() -> ModelConfig {
+    let mut cfg = ModelConfig::default_paper();
+    cfg.plane.h_values = vec![2, 4, 8, 16, 32, 64];
+    cfg.policy.start = [0, 1];
+    cfg.validate().expect("bench plane must validate");
+    cfg
+}
+
+fn params() -> ClusterParams {
+    // disable thinning so the sampling engine does the same physical
+    // work per offered op as the event engine
+    ClusterParams { max_ops_per_step: usize::MAX, ..ClusterParams::default() }
+}
+
+/// Settle a substrate at the given H index: apply, then burn past the
+/// rebalance window at negligible load.
+fn settle<S: Substrate>(sub: &mut S, h_idx: usize) {
+    sub.apply(Configuration::new(h_idx, 1));
+    for _ in 0..3 {
+        sub.step(WorkloadPoint::new(100.0, 0.3));
+    }
+}
+
+fn bench_steps<S: Substrate>(b: &Bench, name: &str, sub: &mut S, lambda: f32) -> f64 {
+    let w = WorkloadPoint::new(lambda, 0.3);
+    let stats = b.run(name, || sub.step(w).completed);
+    let mean = stats.mean.as_secs_f64();
+    b.report_metric(
+        &format!("{name} throughput"),
+        lambda as f64 / mean,
+        "sim-ops/s",
+    );
+    mean
+}
+
+fn main() {
+    let cfg = wide_cfg();
+    let b = Bench::default();
+    let bq = Bench::quick();
+
+    group("substrate step cost vs cluster size H (paper-peak load, 16k ops/interval)");
+    let mut at_h32: Option<(f64, f64)> = None;
+    for (h_idx, h) in [2usize, 4, 8, 16, 32, 64].into_iter().enumerate() {
+        let mut sampling = ClusterSim::new(&cfg, params(), 42);
+        settle(&mut sampling, h_idx);
+        let t_sampling =
+            bench_steps(&b, &format!("sampling/H={h:>2}"), &mut sampling, PEAK);
+
+        let mut event = EventSim::new(&cfg, params(), 42);
+        settle(&mut event, h_idx);
+        let t_event = bench_steps(&b, &format!("event   /H={h:>2}"), &mut event, PEAK);
+
+        b.report_metric(
+            &format!("event-engine speedup at H={h}"),
+            t_sampling / t_event,
+            "x",
+        );
+        if h == 32 {
+            at_h32 = Some((t_sampling, t_event));
+        }
+    }
+
+    group("substrate step cost vs offered load (H=8)");
+    for lambda in [2_000.0f32, 8_000.0, 16_000.0, 32_000.0, 64_000.0] {
+        let mut sampling = ClusterSim::new(&cfg, params(), 42);
+        settle(&mut sampling, 2);
+        let t_sampling = bench_steps(
+            &bq,
+            &format!("sampling/lambda={:>5}", lambda as u32),
+            &mut sampling,
+            lambda,
+        );
+
+        let mut event = EventSim::new(&cfg, params(), 42);
+        settle(&mut event, 2);
+        let t_event = bench_steps(
+            &bq,
+            &format!("event   /lambda={:>5}", lambda as u32),
+            &mut event,
+            lambda,
+        );
+        b.report_metric(
+            &format!("event-engine speedup at lambda={}", lambda as u32),
+            t_sampling / t_event,
+            "x",
+        );
+    }
+
+    group("acceptance: event engine vs sampling at H=32, paper-peak load");
+    let (ts, te) = at_h32.expect("H=32 measured");
+    let speedup = ts / te;
+    println!(
+        "event engine is {speedup:.1}x the sampling path at H=32 under paper-peak load \
+         (target >= 5x): {}",
+        if speedup >= 5.0 { "PASS" } else { "MISS — investigate" }
+    );
+}

@@ -1,6 +1,8 @@
 //! Bench F — fleet decision-loop throughput: full tick wall time
 //! (serve + propose + arbitrate + actuate for every tenant) as the
-//! tenant count sweeps 1 → 64.
+//! tenant count sweeps 1 → 64, analytical first and then with every
+//! tenant backed by the event-driven DES engine (full queueing physics
+//! per tick).
 //!
 //! ```text
 //! cargo bench --bench fleet
@@ -11,7 +13,10 @@
 //! fitted scaling exponent of tick cost vs tenant count comes out below
 //! 1.0 (sub-linear) on the sweep endpoints.
 
+use std::time::Instant;
+
 use diagonal_scale::benchkit::{group, Bench};
+use diagonal_scale::cluster::{ClusterParams, SubstrateKind};
 use diagonal_scale::config::ModelConfig;
 use diagonal_scale::fleet::{FleetSimulator, PriorityClass, TenantSpec};
 use diagonal_scale::workload::TraceBuilder;
@@ -72,4 +77,32 @@ fn main() {
     } else {
         println!("decision-loop time scaled super-linearly (alpha = {alpha:.2}) — investigate");
     }
+
+    group("fleet decision loop — DES(event)-backed tenants, full queueing physics");
+    let bq = Bench::quick();
+    for n in [8usize, 64] {
+        let mut fleet = build_fleet(&cfg, n);
+        fleet.attach_substrates(&cfg, ClusterParams::default(), 42, SubstrateKind::Des);
+        let stats = bq.run(&format!("fleet_tick_des/{n:>2}_tenants"), || {
+            fleet.tick().admitted_moves
+        });
+        bq.report_metric(
+            &format!("fleet_tick_des/{n:>2}_tenants per-tenant"),
+            stats.mean.as_secs_f64() * 1e6 / n as f64,
+            "us/tenant/tick",
+        );
+    }
+
+    // acceptance sweep: 64 event-backed tenants through one full paper
+    // trace (every tenant serving, proposing, and being arbitrated)
+    let mut fleet = build_fleet(&cfg, 64);
+    fleet.attach_substrates(&cfg, ClusterParams::default(), 42, SubstrateKind::Des);
+    let steps = TraceBuilder::paper(&cfg).len();
+    let t = Instant::now();
+    for _ in 0..steps {
+        fleet.tick();
+    }
+    let secs = t.elapsed().as_secs_f64();
+    b.report_metric("64 DES tenants, full 50-tick sweep", secs, "s total");
+    b.report_metric("64 DES tenants, full 50-tick sweep", steps as f64 / secs, "ticks/s");
 }

@@ -1,0 +1,726 @@
+//! Event-driven DES core: the binary-heap event calendar and the
+//! [`EventSim`] engine that replaces [`super::ClusterSim`]'s per-op
+//! Monte-Carlo sampling loop on the hot path.
+//!
+//! The physics is identical to the sampling engine — c-server queueing
+//! nodes behind a consistent-hash ring, quorum writes, round-robin
+//! reads, timeout-based shedding — but the mechanics differ where the
+//! sampling loop burns time:
+//!
+//! * **Calendar, not recomputation.** Rebalance-end, restart-end, and
+//!   compaction-start/end transitions are *scheduled events* popped
+//!   from a binary heap as simulated time passes, instead of per-step
+//!   window arithmetic and per-node compaction-phase recomputation.
+//!   Transitions take effect mid-interval at their exact event time.
+//! * **Allocation-free hot path.** Shard→replica sets are precomputed
+//!   into a flat table at reconfiguration time (the per-op consistent-
+//!   hash lookup disappears), and quorum selection runs over a reusable
+//!   scratch buffer — the sampling engine allocates three `Vec`s per
+//!   sampled op.
+//! * **No thinning.** Every arrival is simulated;
+//!   [`ClusterParams::max_ops_per_step`] is a sampling-engine knob.
+//!   At equal offered load the two engines consume the RNG in the same
+//!   order, so below the sampling cap (and with compaction disabled)
+//!   their measurements coincide; the `prop_cluster` suite pins the
+//!   parity.
+//!
+//! Per-seed determinism holds: same seed + same inputs → identical
+//! event order (heap ties break on schedule order) and identical
+//! measurements.
+
+use std::collections::BinaryHeap;
+
+use crate::config::ModelConfig;
+use crate::metrics::LatencyHistogram;
+use crate::plane::{Configuration, ScalingPlane};
+use crate::workload::{WorkloadPoint, XorShift64};
+
+use super::rebalance;
+use super::ring::HashRing;
+use super::{
+    ClusterParams, ClusterStepMetrics, Node, RebalancePlan, Substrate, SubstrateStatus,
+};
+
+/// A discrete event on the cluster calendar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// A shard-movement window closes: full capacity restored.
+    RebalanceEnd,
+    /// A rolling-restart window closes: full capacity restored.
+    RestartEnd,
+    /// `node` enters its periodic background-compaction window.
+    CompactionStart { node: usize },
+    /// `node` leaves its compaction window (and the next one is
+    /// scheduled one period later).
+    CompactionEnd { node: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Scheduled {
+    time: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl Eq for Scheduled {}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Scheduled {
+    // Reversed so std's max-heap pops the earliest entry first; the
+    // seq tie-break keeps same-time events in schedule order, which
+    // makes runs reproducible per seed.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Binary-heap event calendar: earliest (time, schedule-order) first.
+#[derive(Debug, Clone, Default)]
+pub struct EventCalendar {
+    heap: BinaryHeap<Scheduled>,
+    seq: u64,
+}
+
+impl EventCalendar {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn schedule(&mut self, time: f64, event: Event) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { time, seq, event });
+    }
+
+    /// Earliest pending event time, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.time)
+    }
+
+    /// Pop the earliest event if it is due at or before `t`.
+    pub fn pop_due(&mut self, t: f64) -> Option<(f64, Event)> {
+        if self.heap.peek().map_or(false, |s| s.time <= t) {
+            self.heap.pop().map(|s| (s.time, s.event))
+        } else {
+            None
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+/// The event-driven cluster engine. Public surface mirrors
+/// [`super::ClusterSim`]; both implement [`Substrate`].
+pub struct EventSim {
+    plane: ScalingPlane,
+    kappa: f32,
+    write_ratio: f64,
+    params: ClusterParams,
+    current: Configuration,
+    nodes: Vec<Node>,
+    time: f64,
+    rng: XorShift64,
+    rr: usize,
+    /// Cumulative zipf CDF over shards (empty when access is uniform).
+    zipf_cdf: Vec<f64>,
+    calendar: EventCalendar,
+    /// Rebalance/restart capacity multiplier (1.0 = healthy); the
+    /// window closes when its end event fires. A later `apply` replaces
+    /// the window outright (rebuild clears the calendar), matching the
+    /// sampling engine's `degraded_until` overwrite.
+    window_deg: f64,
+    /// Per-node compaction multiplier (1.0 = not compacting).
+    compaction_deg: Vec<f64>,
+    /// Flat shard→replica table (`shards * repl` node ids, primary
+    /// first), rebuilt on reconfiguration: the hot path never touches
+    /// the hash ring.
+    replica_table: Vec<u32>,
+    /// Effective replication factor (capped by cluster size).
+    repl: usize,
+    /// Scratch buffer of completion delays for the op in flight, kept
+    /// sorted by insertion — never reallocated between ops.
+    scratch: Vec<f64>,
+    /// `shards - 1` when the shard count is a power of two: uniform
+    /// sampling then uses a mask instead of a modulo (same value the
+    /// sampling engine's `below()` computes, minus the division).
+    shard_mask: Option<u64>,
+    /// Any node failed since the last reconfiguration; false keeps the
+    /// hot path on the no-liveness-check fast lane.
+    any_down: bool,
+    /// Cached earliest calendar entry (`+inf` when empty), so the
+    /// per-arrival due-event check is one float compare.
+    next_event: f64,
+    /// Conservation counters (offered = completed + dropped).
+    pub total_offered: f64,
+    pub total_completed: f64,
+    pub total_dropped: f64,
+}
+
+impl EventSim {
+    pub fn new(cfg: &ModelConfig, params: ClusterParams, seed: u64) -> Self {
+        let plane = cfg.plane();
+        let start = Configuration::new(cfg.policy.start[0], cfg.policy.start[1]);
+        let mut sim = Self {
+            plane,
+            kappa: cfg.surfaces.kappa,
+            write_ratio: cfg.write_ratio() as f64,
+            params,
+            current: start,
+            nodes: Vec::new(),
+            time: 0.0,
+            rng: XorShift64::new(seed),
+            rr: 0,
+            zipf_cdf: Vec::new(),
+            calendar: EventCalendar::new(),
+            window_deg: 1.0,
+            compaction_deg: Vec::new(),
+            replica_table: Vec::new(),
+            repl: 1,
+            scratch: Vec::new(),
+            shard_mask: params
+                .shards
+                .is_power_of_two()
+                .then_some(params.shards as u64 - 1),
+            any_down: false,
+            next_event: f64::INFINITY,
+            total_offered: 0.0,
+            total_completed: 0.0,
+            total_dropped: 0.0,
+        };
+        sim.zipf_cdf = super::zipf_shard_cdf(sim.params.shards, sim.params.zipf_s);
+        sim.rebuild();
+        sim
+    }
+
+    /// Replace the node fleet for the current configuration, precompute
+    /// the shard→replica table, and re-seed the compaction schedule.
+    fn rebuild(&mut self) {
+        let h = self.plane.h_value(&self.current) as usize;
+        let tier = self.plane.tier(&self.current).clone();
+        self.nodes = (0..h).map(|_| Node::new(&tier, self.kappa)).collect();
+        self.repl = self.params.replication.min(h).max(1);
+        let ring = HashRing::new(h);
+        self.replica_table.clear();
+        self.replica_table.reserve(self.params.shards * self.repl);
+        for s in 0..self.params.shards as u64 {
+            for r in ring.replicas(s, self.repl) {
+                self.replica_table.push(r as u32);
+            }
+        }
+        self.scratch = Vec::with_capacity(self.repl);
+        self.any_down = false;
+        // a reconfiguration replaces the fleet: stale window/compaction
+        // events would reference the old node set, so reset the
+        // calendar and re-seed (apply() schedules its window after)
+        self.calendar.clear();
+        self.window_deg = 1.0;
+        self.compaction_deg = vec![1.0; h];
+        self.seed_compaction();
+        self.refresh_degradations();
+        self.next_event = self.calendar.peek_time().unwrap_or(f64::INFINITY);
+    }
+
+    /// Schedule each node's next compaction transition from the same
+    /// staggered phase the sampling engine derives per step.
+    fn seed_compaction(&mut self) {
+        let period = self.params.compaction_period;
+        if period <= 0.0 {
+            return;
+        }
+        let n = self.nodes.len().max(1) as f64;
+        for i in 0..self.nodes.len() {
+            let phase = (self.time + i as f64 * period / n) % period;
+            if phase < self.params.compaction_duration {
+                self.compaction_deg[i] = self.params.compaction_degradation;
+                self.calendar.schedule(
+                    self.time + self.params.compaction_duration - phase,
+                    Event::CompactionEnd { node: i },
+                );
+            } else {
+                self.calendar
+                    .schedule(self.time + period - phase, Event::CompactionStart { node: i });
+            }
+        }
+    }
+
+    fn refresh_degradations(&mut self) {
+        for (i, n) in self.nodes.iter_mut().enumerate() {
+            n.set_degradation(self.window_deg * self.compaction_deg[i]);
+        }
+    }
+
+    /// Fire one calendar event at its scheduled time.
+    fn fire(&mut self, at: f64, ev: Event) {
+        match ev {
+            Event::RebalanceEnd | Event::RestartEnd => {
+                // a popped end always belongs to the open window:
+                // rebuild() clears the calendar on every apply(), so
+                // stale end-events from superseded windows cannot exist
+                self.window_deg = 1.0;
+            }
+            Event::CompactionStart { node } => {
+                if node < self.compaction_deg.len() {
+                    self.compaction_deg[node] = self.params.compaction_degradation;
+                    self.calendar.schedule(
+                        at + self.params.compaction_duration,
+                        Event::CompactionEnd { node },
+                    );
+                }
+            }
+            Event::CompactionEnd { node } => {
+                if node < self.compaction_deg.len() {
+                    self.compaction_deg[node] = 1.0;
+                    let gap = (self.params.compaction_period
+                        - self.params.compaction_duration)
+                        .max(0.0);
+                    self.calendar.schedule(at + gap, Event::CompactionStart { node });
+                }
+            }
+        }
+        self.refresh_degradations();
+    }
+
+    /// Drain every calendar entry due at or before `t`, then refresh
+    /// the cached next-event time.
+    fn drain_due(&mut self, t: f64) {
+        while let Some((te, ev)) = self.calendar.pop_due(t) {
+            self.fire(te, ev);
+        }
+        self.next_event = self.calendar.peek_time().unwrap_or(f64::INFINITY);
+    }
+
+    /// Sample a shard id: uniform, or zipfian when `zipf_s > 0` (same
+    /// RNG consumption and values as the sampling engine — the mask is
+    /// exactly `below()`'s modulo for power-of-two shard counts).
+    #[inline]
+    fn sample_shard(&mut self) -> usize {
+        if self.zipf_cdf.is_empty() {
+            if let Some(mask) = self.shard_mask {
+                (self.rng.next_u64() & mask) as usize
+            } else {
+                self.rng.below(self.params.shards as u64) as usize
+            }
+        } else {
+            let u = self.rng.next_f64();
+            self.zipf_cdf.partition_point(|&c| c < u)
+        }
+    }
+
+    pub fn current(&self) -> Configuration {
+        self.current
+    }
+
+    pub fn params(&self) -> &ClusterParams {
+        &self.params
+    }
+
+    pub fn time(&self) -> f64 {
+        self.time
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Pending calendar entries (diagnostics / tests).
+    pub fn pending_events(&self) -> usize {
+        self.calendar.len()
+    }
+
+    /// Aggregate healthy capacity (ops per unit time).
+    pub fn capacity(&self) -> f64 {
+        self.nodes.iter().map(|n| n.capacity()).sum::<f64>() * self.window_deg
+    }
+
+    /// Reconfigure the cluster; physical transition costs match the
+    /// sampling engine exactly (shared [`rebalance::plan_reconfiguration`]),
+    /// but the window *closes* at its event time mid-interval instead
+    /// of at the next step boundary.
+    pub fn apply(&mut self, next: Configuration) -> RebalancePlan {
+        assert!(self.plane.contains(&next), "config out of plane");
+        if next == self.current {
+            return RebalancePlan::none();
+        }
+        let plan =
+            rebalance::plan_reconfiguration(&self.plane, &self.current, &next, &self.params);
+        self.current = next;
+        self.rebuild();
+        if plan.duration > 0.0 {
+            self.window_deg = plan.degradation;
+            let end = if plan.moved_shards > 0 {
+                Event::RebalanceEnd
+            } else {
+                Event::RestartEnd
+            };
+            self.calendar.schedule(self.time + plan.duration, end);
+            self.refresh_degradations();
+            self.next_event = self.calendar.peek_time().unwrap_or(f64::INFINITY);
+        }
+        plan
+    }
+
+    /// Inject a node failure: node `idx` serves nothing until the next
+    /// reconfiguration (failure-injection tests).
+    pub fn fail_node(&mut self, idx: usize) {
+        if let Some(n) = self.nodes.get_mut(idx) {
+            n.up = false;
+            self.any_down = true;
+        }
+    }
+
+    /// Simulate one workload interval, firing due calendar events at
+    /// their exact times between arrivals.
+    pub fn step(&mut self, w: WorkloadPoint) -> ClusterStepMetrics {
+        let interval = self.params.interval;
+        let t0 = self.time;
+        let t1 = t0 + interval;
+        let offered = w.lambda_req as f64 * interval;
+        let degraded = self.window_deg < 1.0;
+
+        // every arrival is simulated — `scale` only absorbs the
+        // rounding of a fractional offered count onto whole ops
+        let n_ops = (offered.round() as usize).max(1);
+        let scale = offered / n_ops as f64;
+
+        let mut hist = LatencyHistogram::new(1e-5);
+        let mut dropped = 0usize;
+        let timeout = self.params.sla_latency * 10.0;
+        let quorum = self.repl / 2 + 1;
+        let h = self.nodes.len();
+        let write_net = self.params.net_latency
+            + self.params.write_coord_overhead * ((h as f64).ln() + 1.0);
+
+        for i in 0..n_ops {
+            let t = t0 + interval * (i as f64 + self.rng.next_f64()) / n_ops as f64;
+            if self.next_event <= t {
+                self.drain_due(t);
+            }
+            let base = self.sample_shard() * self.repl;
+            let is_write = self.rng.next_f64() < self.write_ratio;
+            let lat = if is_write {
+                // quorum write: wait for the majority of replica acks
+                self.scratch.clear();
+                if !self.any_down {
+                    for k in 0..self.repl {
+                        let r = self.replica_table[base + k] as usize;
+                        let delay = self.nodes[r].serve_delay(t, &mut self.rng);
+                        let pos = self.scratch.partition_point(|&x| x <= delay);
+                        self.scratch.insert(pos, delay);
+                    }
+                } else {
+                    for k in 0..self.repl {
+                        let r = self.replica_table[base + k] as usize;
+                        if self.nodes[r].up {
+                            let delay = self.nodes[r].serve_delay(t, &mut self.rng);
+                            let pos = self.scratch.partition_point(|&x| x <= delay);
+                            self.scratch.insert(pos, delay);
+                        }
+                    }
+                }
+                if self.scratch.is_empty() {
+                    dropped += 1;
+                    continue;
+                }
+                let q = quorum.min(self.scratch.len());
+                write_net + self.scratch[q - 1]
+            } else {
+                // read: round-robin over live replicas
+                let node = if !self.any_down {
+                    self.rr = self.rr.wrapping_add(1);
+                    // constant-divisor modulo for the common factors
+                    let pick = match self.repl {
+                        1 => 0,
+                        2 => self.rr & 1,
+                        3 => self.rr % 3,
+                        r => self.rr % r,
+                    };
+                    self.replica_table[base + pick] as usize
+                } else {
+                    let mut live = 0usize;
+                    for k in 0..self.repl {
+                        if self.nodes[self.replica_table[base + k] as usize].up {
+                            live += 1;
+                        }
+                    }
+                    if live == 0 {
+                        dropped += 1;
+                        continue;
+                    }
+                    self.rr = self.rr.wrapping_add(1);
+                    let mut pick = self.rr % live;
+                    let mut node = usize::MAX;
+                    for k in 0..self.repl {
+                        let r = self.replica_table[base + k] as usize;
+                        if self.nodes[r].up {
+                            if pick == 0 {
+                                node = r;
+                                break;
+                            }
+                            pick -= 1;
+                        }
+                    }
+                    node
+                };
+                self.params.net_latency + self.nodes[node].serve_delay(t, &mut self.rng)
+            };
+            if lat > timeout {
+                dropped += 1;
+            } else {
+                hist.record(lat);
+            }
+        }
+
+        // fire whatever else falls inside this interval
+        if self.next_event <= t1 {
+            self.drain_due(t1);
+        }
+
+        self.time = t1;
+        let completed = hist.len() as f64 * scale;
+        let dropped_scaled = dropped as f64 * scale;
+        self.total_offered += offered;
+        self.total_completed += completed;
+        self.total_dropped += dropped_scaled;
+
+        let cap = self.capacity();
+        ClusterStepMetrics {
+            offered,
+            completed,
+            dropped: dropped_scaled,
+            avg_latency: hist.mean(),
+            p99_latency: hist.p99(),
+            p999_latency: hist.p999(),
+            utilization: if cap > 0.0 { offered / (cap * interval) } else { f64::INFINITY },
+            degraded,
+        }
+    }
+}
+
+impl Substrate for EventSim {
+    fn current(&self) -> Configuration {
+        EventSim::current(self)
+    }
+
+    fn step(&mut self, w: WorkloadPoint) -> ClusterStepMetrics {
+        EventSim::step(self, w)
+    }
+
+    fn apply(&mut self, next: Configuration) -> RebalancePlan {
+        EventSim::apply(self, next)
+    }
+
+    fn observe(&self) -> SubstrateStatus {
+        SubstrateStatus {
+            time: self.time,
+            nodes: self.nodes.len(),
+            capacity: self.capacity(),
+            degraded: self.window_deg < 1.0,
+            total_offered: self.total_offered,
+            total_completed: self.total_completed,
+            total_dropped: self.total_dropped,
+        }
+    }
+
+    fn params(&self) -> &ClusterParams {
+        EventSim::params(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(seed: u64) -> EventSim {
+        let cfg = ModelConfig::default_paper();
+        EventSim::new(&cfg, ClusterParams::default(), seed)
+    }
+
+    fn point(lam: f32) -> WorkloadPoint {
+        WorkloadPoint::new(lam, 0.3)
+    }
+
+    #[test]
+    fn calendar_pops_in_time_then_schedule_order() {
+        let mut cal = EventCalendar::new();
+        cal.schedule(2.0, Event::RebalanceEnd);
+        cal.schedule(1.0, Event::RestartEnd);
+        cal.schedule(1.0, Event::CompactionStart { node: 0 });
+        assert_eq!(cal.peek_time(), Some(1.0));
+        assert_eq!(cal.pop_due(5.0), Some((1.0, Event::RestartEnd)));
+        assert_eq!(cal.pop_due(5.0), Some((1.0, Event::CompactionStart { node: 0 })));
+        // not yet due
+        assert_eq!(cal.pop_due(1.5), None);
+        assert_eq!(cal.pop_due(2.0), Some((2.0, Event::RebalanceEnd)));
+        assert!(cal.is_empty());
+    }
+
+    #[test]
+    fn starts_at_config_with_right_node_count() {
+        let s = sim(1);
+        assert_eq!(s.current(), Configuration::new(1, 1));
+        assert_eq!(s.n_nodes(), 2);
+        assert_eq!(s.pending_events(), 0); // compaction disabled
+    }
+
+    #[test]
+    fn conservation_without_thinning() {
+        let mut s = sim(2);
+        // above the sampling engine's default cap: the event engine
+        // still simulates every arrival and conserves exactly
+        for _ in 0..5 {
+            s.step(point(25_000.0));
+        }
+        let total = s.total_completed + s.total_dropped;
+        assert!(
+            (s.total_offered - total).abs() < 1e-6 * s.total_offered,
+            "offered={} completed+dropped={}",
+            s.total_offered,
+            total
+        );
+    }
+
+    #[test]
+    fn light_load_completes_everything_quickly() {
+        let mut s = sim(3);
+        let m = s.step(point(500.0));
+        assert_eq!(m.dropped, 0.0);
+        assert!(m.avg_latency < ClusterParams::default().sla_latency);
+        assert!(m.utilization < 0.3);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = sim(9);
+        let mut b = sim(9);
+        a.apply(Configuration::new(2, 1));
+        b.apply(Configuration::new(2, 1));
+        for _ in 0..5 {
+            assert_eq!(a.step(point(4000.0)), b.step(point(4000.0)));
+        }
+    }
+
+    #[test]
+    fn rebalance_window_closes_via_event() {
+        let mut s = sim(6);
+        let plan = s.apply(Configuration::new(3, 1)); // H=2 -> H=8
+        assert!(plan.moved_shards > 0 && plan.duration > 0.0);
+        assert_eq!(s.pending_events(), 1);
+        let m = s.step(point(1000.0));
+        assert!(m.degraded);
+        // default shard_gb keeps the window inside one interval
+        assert!(plan.duration < s.params().interval);
+        assert_eq!(s.pending_events(), 0);
+        let m2 = s.step(point(1000.0));
+        assert!(!m2.degraded);
+    }
+
+    #[test]
+    fn vertical_resize_restores_capacity_after_restart_window() {
+        let mut s = sim(5);
+        let before = s.capacity();
+        let plan = s.apply(Configuration::new(1, 3)); // medium -> xlarge
+        assert_eq!(plan.moved_shards, 0);
+        assert!(plan.duration > 0.0);
+        for _ in 0..3 {
+            s.step(point(100.0));
+        }
+        assert!(s.capacity() > 3.0 * before);
+    }
+
+    #[test]
+    fn compaction_cycles_through_scheduled_events() {
+        let cfg = ModelConfig::default_paper();
+        let mut s = EventSim::new(
+            &cfg,
+            ClusterParams {
+                compaction_period: 4.0,
+                compaction_duration: 2.0,
+                compaction_degradation: 0.3,
+                ..ClusterParams::default()
+            },
+            22,
+        );
+        // one pending transition per node at all times
+        assert_eq!(s.pending_events(), s.n_nodes());
+        let lat: Vec<f64> = (0..12).map(|_| s.step(point(3800.0)).avg_latency).collect();
+        assert_eq!(s.pending_events(), s.n_nodes());
+        let hi = lat.iter().cloned().fold(0.0, f64::max);
+        let lo = lat.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(hi > 2.0 * lo, "compaction cycles visible: {lat:?}");
+    }
+
+    #[test]
+    fn node_failure_sheds_load_but_survivors_serve() {
+        let mut s = sim(10);
+        s.fail_node(0);
+        let m = s.step(point(3000.0));
+        assert!(m.completed > 0.0);
+        s.fail_node(1);
+        let m = s.step(point(1000.0));
+        assert_eq!(m.completed, 0.0);
+        assert!(m.dropped > 0.0);
+    }
+
+    #[test]
+    fn zipf_skew_imbalances_node_load() {
+        let cfg = ModelConfig::default_paper();
+        let mut uniform = EventSim::new(&cfg, ClusterParams::default(), 20);
+        let mut skewed = EventSim::new(
+            &cfg,
+            ClusterParams { zipf_s: 1.2, ..ClusterParams::default() },
+            20,
+        );
+        let imbalance = |s: &mut EventSim| {
+            s.apply(Configuration::new(3, 1)); // H=8, medium
+            for _ in 0..20 {
+                s.step(point(12_000.0));
+            }
+            let served: Vec<u64> = s.nodes.iter().map(|n| n.served).collect();
+            let max = *served.iter().max().unwrap() as f64;
+            let min = *served.iter().min().unwrap() as f64;
+            max / min.max(1.0)
+        };
+        let iu = imbalance(&mut uniform);
+        let is = imbalance(&mut skewed);
+        assert!(is > 1.3 * iu, "zipf must imbalance node load: {is:.2} vs {iu:.2}");
+    }
+
+    #[test]
+    fn observe_reports_conservation_counters() {
+        let mut s = sim(12);
+        s.step(point(2000.0));
+        let st = Substrate::observe(&s);
+        assert_eq!(st.nodes, 2);
+        assert!((st.total_offered - 2000.0).abs() < 1e-9);
+        assert!(
+            (st.total_offered - st.total_completed - st.total_dropped).abs()
+                < 1e-6 * st.total_offered
+        );
+        assert!(st.capacity > 0.0);
+        assert!(!st.degraded);
+    }
+}

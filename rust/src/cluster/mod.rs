@@ -9,11 +9,30 @@
 //! and bandwidth-limited shard movement for horizontal resizes. The
 //! coordinator drives it with the *same* policy code path the
 //! analytical simulator uses — observe, score neighbors, actuate.
+//!
+//! Two physical engines share this model behind the [`Substrate`]
+//! trait:
+//!
+//! * [`ClusterSim`] — the original per-op *sampling* engine. It thins
+//!   arrivals above [`ClusterParams::max_ops_per_step`] (stretching
+//!   service times to preserve utilization) and recomputes compaction
+//!   windows per node per step.
+//! * [`events::EventSim`] — the event-driven engine: a binary-heap
+//!   [`events::EventCalendar`] schedules rebalance-end / restart-end /
+//!   compaction-start / compaction-end transitions, every arrival is
+//!   simulated (no thinning), and the hot path is allocation-free
+//!   (precomputed shard→replica tables and reusable scratch buffers).
+//!
+//! Every layer above (coordinator, fleet tenants) is generic over
+//! [`Substrate`], so analytical, sampling-backed, and event-backed
+//! instances mix freely in one run (`--substrate` on the CLI).
 
+pub mod events;
 pub mod node;
 pub mod rebalance;
 pub mod ring;
 
+pub use events::{Event, EventCalendar, EventSim};
 pub use node::Node;
 pub use rebalance::RebalancePlan;
 pub use ring::HashRing;
@@ -28,9 +47,9 @@ use crate::workload::{WorkloadPoint, XorShift64};
 pub struct ClusterParams {
     /// Number of data shards on the ring.
     pub shards: usize,
-    /// Replication factor (capped by cluster size).
+    /// Replication factor (capped by cluster size); the write quorum
+    /// is a majority of the effective replica set.
     pub replication: usize,
-    /// Write quorum = majority of the effective replica set.
     /// Data per shard (GB), for rebalance duration.
     pub shard_gb: f64,
     /// Fraction of aggregate bandwidth available to shard movement.
@@ -46,6 +65,8 @@ pub struct ClusterParams {
     /// Extra commit overhead per write, scaled by ln(H)+1.
     pub write_coord_overhead: f64,
     /// Ops sampled per step at most (arrivals above this are scaled).
+    /// Sampling-engine ([`ClusterSim`]) knob only: the event-driven
+    /// [`events::EventSim`] simulates every arrival and ignores it.
     pub max_ops_per_step: usize,
     /// Duration of one workload step (synthetic seconds).
     pub interval: f64,
@@ -103,6 +124,94 @@ impl ClusterParams {
     }
 }
 
+/// Cumulative zipf CDF over `shards` (empty when `zipf_s <= 0`, i.e.
+/// uniform access). Shared by both substrate engines so their shard
+/// sampling stays bit-identical.
+pub(crate) fn zipf_shard_cdf(shards: usize, zipf_s: f64) -> Vec<f64> {
+    if zipf_s <= 0.0 {
+        return Vec::new();
+    }
+    let mut acc = 0.0;
+    let mut cdf: Vec<f64> = (0..shards)
+        .map(|j| {
+            acc += 1.0 / ((j + 1) as f64).powf(zipf_s);
+            acc
+        })
+        .collect();
+    let total = *cdf.last().expect("at least one shard");
+    for v in &mut cdf {
+        *v /= total;
+    }
+    cdf
+}
+
+/// Cheap status snapshot of a substrate between steps (the `observe`
+/// half of the control loop's observe → plan → actuate cycle).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SubstrateStatus {
+    /// Simulated time (synthetic seconds).
+    pub time: f64,
+    /// Node count currently deployed.
+    pub nodes: usize,
+    /// Aggregate healthy capacity (ops per unit time), degradation
+    /// windows included.
+    pub capacity: f64,
+    /// A rebalance/restart window is currently open.
+    pub degraded: bool,
+    /// Conservation counters (offered = completed + dropped).
+    pub total_offered: f64,
+    pub total_completed: f64,
+    pub total_dropped: f64,
+}
+
+/// A physical (or pseudo-physical) execution substrate the control
+/// layers drive: the coordinator and fleet tenants are generic over
+/// this trait, so analytical, sampling-backed, and event-backed
+/// instances are interchangeable — and mixable within one fleet run.
+pub trait Substrate {
+    /// Configuration currently deployed.
+    fn current(&self) -> Configuration;
+    /// Serve one workload interval and measure it.
+    fn step(&mut self, w: WorkloadPoint) -> ClusterStepMetrics;
+    /// Actuate a reconfiguration, paying the physical transition cost.
+    fn apply(&mut self, next: Configuration) -> RebalancePlan;
+    /// Status snapshot between steps.
+    fn observe(&self) -> SubstrateStatus;
+    /// The physics parameters this substrate audits against.
+    fn params(&self) -> &ClusterParams;
+}
+
+/// Which substrate engine to build (CLI `--substrate`, fleet attach).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubstrateKind {
+    /// Legacy per-op sampling engine ([`ClusterSim`]).
+    Sampling,
+    /// Event-driven engine ([`events::EventSim`]).
+    Des,
+    /// Thin wrapper over the Phase-1 analytical surfaces
+    /// ([`crate::simulator::AnalyticalSubstrate`]).
+    Analytical,
+}
+
+impl SubstrateKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sampling" | "legacy" => Some(Self::Sampling),
+            "des" | "event" | "events" => Some(Self::Des),
+            "analytical" => Some(Self::Analytical),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Sampling => "sampling",
+            Self::Des => "des",
+            Self::Analytical => "analytical",
+        }
+    }
+}
+
 /// Measured metrics for one simulated step.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ClusterStepMetrics {
@@ -124,7 +233,8 @@ pub struct ClusterStepMetrics {
     pub degraded: bool,
 }
 
-/// The discrete-event cluster.
+/// The per-op sampling cluster engine (legacy path; see
+/// [`events::EventSim`] for the event-driven engine).
 pub struct ClusterSim {
     plane: ScalingPlane,
     kappa: f32,
@@ -168,19 +278,7 @@ impl ClusterSim {
             total_dropped: 0.0,
             plane,
         };
-        if sim.params.zipf_s > 0.0 {
-            let mut acc = 0.0;
-            sim.zipf_cdf = (0..sim.params.shards)
-                .map(|j| {
-                    acc += 1.0 / ((j + 1) as f64).powf(sim.params.zipf_s);
-                    acc
-                })
-                .collect();
-            let total = *sim.zipf_cdf.last().unwrap();
-            for v in &mut sim.zipf_cdf {
-                *v /= total;
-            }
-        }
+        sim.zipf_cdf = zipf_shard_cdf(sim.params.shards, sim.params.zipf_s);
         sim.rebuild();
         sim
     }
@@ -249,38 +347,8 @@ impl ClusterSim {
         if next == self.current {
             return RebalancePlan::none();
         }
-        let old_h = self.plane.h_value(&self.current) as usize;
-        let new_h = self.plane.h_value(&next) as usize;
-        let new_tier = self.plane.tier(&next);
-
-        let mut plan = if old_h != new_h {
-            let agg_bw = new_h as f64
-                * new_tier.bandwidth as f64
-                * self.params.move_bandwidth_frac;
-            rebalance::plan_h_change(
-                old_h,
-                new_h,
-                self.params.shards,
-                self.params.shard_gb,
-                agg_bw,
-                self.params.rebalance_degradation,
-            )
-        } else {
-            RebalancePlan::none()
-        };
-        if self.plane.tier(&self.current).name != new_tier.name {
-            let restart = rebalance::plan_v_change(
-                new_h,
-                self.params.restart_time,
-                self.params.restart_degradation,
-            );
-            plan.duration += restart.duration;
-            plan.degradation = plan.degradation.min(restart.degradation);
-            if plan.total_shards == 0 {
-                plan.total_shards = restart.total_shards;
-            }
-        }
-
+        let plan =
+            rebalance::plan_reconfiguration(&self.plane, &self.current, &next, &self.params);
         self.current = next;
         self.rebuild();
         if plan.duration > 0.0 {
@@ -397,6 +465,36 @@ impl ClusterSim {
             utilization: if cap > 0.0 { offered / (cap * interval) } else { f64::INFINITY },
             degraded,
         }
+    }
+}
+
+impl Substrate for ClusterSim {
+    fn current(&self) -> Configuration {
+        ClusterSim::current(self)
+    }
+
+    fn step(&mut self, w: WorkloadPoint) -> ClusterStepMetrics {
+        ClusterSim::step(self, w)
+    }
+
+    fn apply(&mut self, next: Configuration) -> RebalancePlan {
+        ClusterSim::apply(self, next)
+    }
+
+    fn observe(&self) -> SubstrateStatus {
+        SubstrateStatus {
+            time: self.time,
+            nodes: self.nodes.len(),
+            capacity: self.capacity(),
+            degraded: self.time < self.degraded_until,
+            total_offered: self.total_offered,
+            total_completed: self.total_completed,
+            total_dropped: self.total_dropped,
+        }
+    }
+
+    fn params(&self) -> &ClusterParams {
+        ClusterSim::params(self)
     }
 }
 

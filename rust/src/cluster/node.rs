@@ -57,21 +57,32 @@ impl Node {
     /// Serve an op arriving at time `t`; returns its completion time.
     /// FIFO to the earliest-free server; service time is exponential
     /// around the (possibly degraded) mean.
+    #[inline]
     pub fn serve(&mut self, t: f64, rng: &mut XorShift64) -> f64 {
         debug_assert!(self.up, "serve() on a down node");
-        let (idx, free_at) = self
-            .servers
-            .iter()
-            .enumerate()
-            .map(|(i, &f)| (i, f))
-            .min_by(|a, b| a.1.total_cmp(&b.1))
-            .expect("node has at least one server");
+        // manual first-min scan (service times are never NaN): this is
+        // the innermost loop of both substrate engines
+        let mut idx = 0usize;
+        let mut free_at = self.servers[0];
+        for (i, &f) in self.servers.iter().enumerate().skip(1) {
+            if f < free_at {
+                idx = i;
+                free_at = f;
+            }
+        }
         let start = t.max(free_at);
         let service = rng.exp(self.mean_service / self.degradation);
         let done = start + service;
         self.servers[idx] = done;
         self.served += 1;
         done
+    }
+
+    /// Serve an op and return its completion *delay* (`serve(t) - t`)
+    /// — the hot-path form the event engine records directly.
+    #[inline]
+    pub fn serve_delay(&mut self, t: f64, rng: &mut XorShift64) -> f64 {
+        self.serve(t, rng) - t
     }
 
     /// Earliest time any server frees up (backpressure signal).
@@ -163,6 +174,18 @@ mod tests {
             d += degraded.serve(t, &mut r2) - t;
         }
         assert!(d > 1.8 * h, "degraded mean {d} vs healthy {h}");
+    }
+
+    #[test]
+    fn serve_delay_matches_serve() {
+        let mut a = Node::new(&tier(), 585.0);
+        let mut b = Node::new(&tier(), 585.0);
+        let mut r1 = XorShift64::new(5);
+        let mut r2 = XorShift64::new(5);
+        for i in 0..100 {
+            let t = i as f64 * 0.001;
+            assert_eq!(a.serve(t, &mut r1) - t, b.serve_delay(t, &mut r2));
+        }
     }
 
     #[test]

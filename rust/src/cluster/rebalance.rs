@@ -6,6 +6,8 @@
 //! moves are penalized twice as much as V moves.
 
 use super::ring::HashRing;
+use super::ClusterParams;
+use crate::plane::{Configuration, ScalingPlane};
 
 /// A planned rebalance operation.
 #[derive(Debug, Clone, PartialEq)]
@@ -69,6 +71,46 @@ pub fn plan_v_change(n_nodes: usize, restart_time: f64, degradation: f64) -> Reb
     }
 }
 
+/// Plan the full physical transition between two plane configurations:
+/// shard movement for H changes plus a rolling restart for tier
+/// changes, merged into one degradation window (durations add, the
+/// deeper degradation wins). Shared by every [`super::Substrate`]
+/// engine so sampling, event-driven, and analytical modes pay
+/// identical transition costs.
+pub fn plan_reconfiguration(
+    plane: &ScalingPlane,
+    from: &Configuration,
+    to: &Configuration,
+    params: &ClusterParams,
+) -> RebalancePlan {
+    let old_h = plane.h_value(from) as usize;
+    let new_h = plane.h_value(to) as usize;
+    let new_tier = plane.tier(to);
+
+    let mut plan = if old_h != new_h {
+        let agg_bw = new_h as f64 * new_tier.bandwidth as f64 * params.move_bandwidth_frac;
+        plan_h_change(
+            old_h,
+            new_h,
+            params.shards,
+            params.shard_gb,
+            agg_bw,
+            params.rebalance_degradation,
+        )
+    } else {
+        RebalancePlan::none()
+    };
+    if plane.tier(from).name != new_tier.name {
+        let restart = plan_v_change(new_h, params.restart_time, params.restart_degradation);
+        plan.duration += restart.duration;
+        plan.degradation = plan.degradation.min(restart.degradation);
+        if plan.total_shards == 0 {
+            plan.total_shards = restart.total_shards;
+        }
+    }
+    plan
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,5 +160,32 @@ mod tests {
         let one = plan_h_change(4, 8, 512, 1.0, 10.0, 0.7);
         let two = plan_h_change(1, 8, 512, 1.0, 10.0, 0.7);
         assert!(two.moved_shards > one.moved_shards);
+    }
+
+    #[test]
+    fn reconfiguration_plans_match_axis_components() {
+        let plane = crate::config::ModelConfig::default_paper().plane();
+        let params = ClusterParams::default();
+        let from = Configuration::new(1, 1);
+
+        let same = plan_reconfiguration(&plane, &from, &from, &params);
+        assert!(same.is_noop());
+        assert_eq!(same.duration, 0.0);
+
+        let h_only = plan_reconfiguration(&plane, &from, &Configuration::new(2, 1), &params);
+        assert!(h_only.moved_shards > 0);
+        assert!((h_only.degradation - params.rebalance_degradation).abs() < 1e-12);
+
+        let v_only = plan_reconfiguration(&plane, &from, &Configuration::new(1, 2), &params);
+        assert_eq!(v_only.moved_shards, 0);
+        assert!((v_only.duration - params.restart_time * 2.0).abs() < 1e-12);
+
+        // a diagonal move pays both: shard movement plus the restart,
+        // degraded at the deeper of the two factors
+        let diag = plan_reconfiguration(&plane, &from, &Configuration::new(2, 2), &params);
+        assert_eq!(diag.moved_shards, h_only.moved_shards);
+        assert!(diag.duration > v_only.duration);
+        let deepest = params.rebalance_degradation.min(params.restart_degradation);
+        assert!((diag.degradation - deepest).abs() < 1e-12);
     }
 }

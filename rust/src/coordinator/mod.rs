@@ -10,12 +10,18 @@
 //! examples and benches; [`Coordinator::run_daemon`] wraps the same
 //! tick in a channel-fed loop suitable for running on its own thread
 //! (`std::sync::mpsc` — the offline build has no async runtime).
+//!
+//! The coordinator is generic over [`Substrate`], so the same control
+//! loop drives the legacy sampling engine ([`ClusterSim`], the default
+//! type parameter), the event-driven engine
+//! ([`crate::cluster::EventSim`]), or the analytical wrapper
+//! ([`crate::simulator::AnalyticalSubstrate`]).
 
 use std::sync::mpsc;
 
 use anyhow::Result;
 
-use crate::cluster::{ClusterParams, ClusterSim, ClusterStepMetrics};
+use crate::cluster::{ClusterParams, ClusterSim, ClusterStepMetrics, EventSim, Substrate};
 use crate::config::{MoveFlags, ModelConfig};
 use crate::plane::Configuration;
 use crate::policy::{Policy, PolicyContext};
@@ -61,11 +67,11 @@ pub struct CoordinatorSummary {
     pub reconfigurations: usize,
 }
 
-/// The control loop.
-pub struct Coordinator {
+/// The control loop, generic over the substrate it drives.
+pub struct Coordinator<S: Substrate = ClusterSim> {
     model: SurfaceModel,
     sla: SlaSpec,
-    cluster: ClusterSim,
+    cluster: S,
     backend: Backend,
     reb_h: f32,
     reb_v: f32,
@@ -76,8 +82,8 @@ pub struct Coordinator {
     pub ewma_alpha: f32,
 }
 
-impl Coordinator {
-    pub fn new(cfg: &ModelConfig, cluster: ClusterSim, backend: Backend) -> Self {
+impl<S: Substrate> Coordinator<S> {
+    pub fn new(cfg: &ModelConfig, cluster: S, backend: Backend) -> Self {
         let current = cluster.current();
         Self {
             model: SurfaceModel::from_config(cfg),
@@ -97,12 +103,12 @@ impl Coordinator {
         self.current
     }
 
-    pub fn cluster(&self) -> &ClusterSim {
+    pub fn cluster(&self) -> &S {
         &self.cluster
     }
 
     /// Mutable access for failure injection and test orchestration.
-    pub fn cluster_mut(&mut self) -> &mut ClusterSim {
+    pub fn cluster_mut(&mut self) -> &mut S {
         &mut self.cluster
     }
 
@@ -245,14 +251,27 @@ pub fn summarize(reports: &[TickReport]) -> CoordinatorSummary {
     }
 }
 
-/// Convenience: coordinator with a native policy on a fresh cluster.
+/// Convenience: coordinator with a native policy on a fresh
+/// sampling-engine cluster.
 pub fn native_coordinator(
     cfg: &ModelConfig,
     policy: Box<dyn Policy + Send>,
     params: ClusterParams,
     seed: u64,
-) -> Coordinator {
+) -> Coordinator<ClusterSim> {
     let cluster = ClusterSim::new(cfg, params, seed);
+    Coordinator::new(cfg, cluster, Backend::Native(policy))
+}
+
+/// Convenience: coordinator with a native policy on a fresh
+/// event-driven cluster.
+pub fn event_coordinator(
+    cfg: &ModelConfig,
+    policy: Box<dyn Policy + Send>,
+    params: ClusterParams,
+    seed: u64,
+) -> Coordinator<EventSim> {
+    let cluster = EventSim::new(cfg, params, seed);
     Coordinator::new(cfg, cluster, Backend::Native(policy))
 }
 
@@ -302,6 +321,23 @@ mod tests {
             peak.served_config,
             tail.served_config
         );
+    }
+
+    #[test]
+    fn event_substrate_drives_the_same_control_loop() {
+        let cfg = ModelConfig::default_paper();
+        let mut c = event_coordinator(
+            &cfg,
+            Box::new(DiagonalScale::diagonal()),
+            ClusterParams::default(),
+            1,
+        );
+        let trace = TraceBuilder::paper(&cfg);
+        let reports = c.run_trace(&trace).unwrap();
+        let s = summarize(&reports);
+        assert_eq!(s.steps, 50);
+        assert!(s.reconfigurations >= 2);
+        assert!(s.completed_ratio > 0.9, "completed={}", s.completed_ratio);
     }
 
     #[test]

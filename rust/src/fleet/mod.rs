@@ -6,8 +6,9 @@
 //! Every existing layer composes N-way behind this API: each
 //! [`Tenant`] owns a Scaling-Plane position, an [`crate::sla::SlaSpec`],
 //! a phase-shifted [`crate::workload::Trace`], and the paper's
-//! DIAGONALSCALE policy (optionally backed by its own Phase-2
-//! [`crate::cluster::ClusterSim`]); the [`BudgetArbiter`] admits the
+//! DIAGONALSCALE policy (optionally backed by any boxed
+//! [`crate::cluster::Substrate`] — sampling, event-driven, or
+//! analytical engines mix within one fleet); the [`BudgetArbiter`] admits the
 //! per-tick moves via greedy knapsack over marginal cost with priority
 //! classes and a starvation guard; [`report`] aggregates fleet-level
 //! metrics (per-class p95, total cost, denial counts).
@@ -29,8 +30,9 @@ pub use tenant::{PriorityClass, Proposal, Tenant, TenantSpec};
 
 use std::sync::Arc;
 
-use crate::cluster::ClusterParams;
+use crate::cluster::{ClusterParams, SubstrateKind};
 use crate::config::ModelConfig;
+use crate::simulator::build_substrate;
 use crate::surfaces::SurfaceModel;
 
 /// Tolerance for float drift when comparing fleet spend to the budget
@@ -98,11 +100,46 @@ impl FleetSimulator {
         Self { tenants, arbiter: BudgetArbiter::new(budget, fairness_k), step: 0 }
     }
 
-    /// Back every tenant with its own discrete-event cluster substrate
-    /// (seeded per tenant for reproducibility).
+    /// Back every tenant with its own sampling-engine cluster (seeded
+    /// per tenant for reproducibility).
     pub fn attach_clusters(&mut self, cfg: &ModelConfig, params: ClusterParams, seed: u64) {
+        self.attach_substrates(cfg, params, seed, SubstrateKind::Sampling);
+    }
+
+    /// Back every tenant with a substrate of the given kind (seeded per
+    /// tenant). [`SubstrateKind::Des`] is the bench-speed choice for
+    /// large fleets. Analytical tenants reuse the fleet-shared surface
+    /// model and their own SLA bound; all kinds emit latencies on the
+    /// substrate scale, so fleet reports aggregate one unit.
+    pub fn attach_substrates(
+        &mut self,
+        cfg: &ModelConfig,
+        params: ClusterParams,
+        seed: u64,
+        kind: SubstrateKind,
+    ) {
+        self.attach_mixed_substrates(cfg, params, seed, |_| kind);
+    }
+
+    /// Back each tenant with the substrate kind chosen per tenant id —
+    /// analytical, sampling, and event-driven tenants mix in one run.
+    pub fn attach_mixed_substrates(
+        &mut self,
+        cfg: &ModelConfig,
+        params: ClusterParams,
+        seed: u64,
+        choose: impl Fn(usize) -> SubstrateKind,
+    ) {
         for t in &mut self.tenants {
-            t.attach_cluster(cfg, params, seed.wrapping_add(t.id as u64));
+            match choose(t.id) {
+                SubstrateKind::Analytical => t.attach_analytical(params),
+                kind => t.attach_substrate(build_substrate(
+                    kind,
+                    cfg,
+                    params,
+                    seed.wrapping_add(t.id as u64),
+                )),
+            }
         }
     }
 
@@ -265,6 +302,30 @@ mod tests {
         let res = fleet.run(20);
         assert_eq!(res.ticks.len(), 20);
         // measured throughput flows into the summaries
+        assert!(res.report.tenants.iter().all(|t| t.summary.avg_throughput > 0.0));
+    }
+
+    #[test]
+    fn event_backed_fleet_runs() {
+        let cfg = ModelConfig::default_paper();
+        let mut fleet = FleetSimulator::new(&cfg, specs(&cfg, 6), 1.0e6, 3);
+        fleet.attach_substrates(&cfg, ClusterParams::default(), 42, SubstrateKind::Des);
+        let res = fleet.run(20);
+        assert_eq!(res.ticks.len(), 20);
+        assert!(res.report.tenants.iter().all(|t| t.summary.avg_throughput > 0.0));
+    }
+
+    #[test]
+    fn mixed_substrate_fleet_runs_in_one_pass() {
+        let cfg = ModelConfig::default_paper();
+        let mut fleet = FleetSimulator::new(&cfg, specs(&cfg, 6), 1.0e6, 3);
+        fleet.attach_mixed_substrates(&cfg, ClusterParams::default(), 42, |id| match id % 3 {
+            0 => SubstrateKind::Analytical,
+            1 => SubstrateKind::Sampling,
+            _ => SubstrateKind::Des,
+        });
+        let res = fleet.run(20);
+        assert_eq!(res.ticks.len(), 20);
         assert!(res.report.tenants.iter().all(|t| t.summary.avg_throughput > 0.0));
     }
 }

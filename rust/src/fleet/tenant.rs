@@ -6,10 +6,15 @@
 //! Tenants share one [`SurfaceModel`] (the plane geometry and surface
 //! constants are fleet-wide), so adding a tenant costs state, not model
 //! construction — the fleet bench leans on this.
+//!
+//! A tenant can optionally be backed by any boxed
+//! [`Substrate`] — the sampling [`ClusterSim`], the event-driven
+//! [`EventSim`], or an analytical wrapper — and substrates of
+//! different kinds mix freely within one fleet run.
 
 use std::sync::Arc;
 
-use crate::cluster::{ClusterParams, ClusterSim};
+use crate::cluster::{ClusterParams, ClusterSim, EventSim, Substrate};
 use crate::config::ModelConfig;
 use crate::metrics::{Recorder, StepRecord, Summary};
 use crate::plane::Configuration;
@@ -144,8 +149,8 @@ pub struct Tenant {
     reb_h: f32,
     reb_v: f32,
     plan_queue: bool,
-    /// Optional Phase-2 DES substrate backing this tenant.
-    cluster: Option<ClusterSim>,
+    /// Optional physical substrate backing this tenant (any engine).
+    substrate: Option<Box<dyn Substrate + Send>>,
 }
 
 impl Tenant {
@@ -170,19 +175,43 @@ impl Tenant {
             reb_h: cfg.policy.reb_h,
             reb_v: cfg.policy.reb_v,
             plan_queue: cfg.policy.plan_queue,
-            cluster: None,
+            substrate: None,
         }
     }
 
-    /// Back this tenant with its own discrete-event cluster substrate
-    /// (per-tenant `ClusterSim`, mirroring the single-cluster
-    /// coordinator); metrics then come from measurement, not the model.
-    pub fn attach_cluster(&mut self, cfg: &ModelConfig, params: ClusterParams, seed: u64) {
-        let mut sim = ClusterSim::new(cfg, params, seed);
-        if sim.current() != self.current {
-            sim.apply(self.current);
+    /// Back this tenant with a boxed substrate (any engine); metrics
+    /// then come from measurement, not the model. The substrate is
+    /// fast-forwarded to the tenant's current configuration.
+    pub fn attach_substrate(&mut self, mut sub: Box<dyn Substrate + Send>) {
+        if sub.current() != self.current {
+            sub.apply(self.current);
         }
-        self.cluster = Some(sim);
+        self.substrate = Some(sub);
+    }
+
+    /// Back this tenant with its own sampling-engine cluster
+    /// (per-tenant [`ClusterSim`], mirroring the single-cluster
+    /// coordinator).
+    pub fn attach_cluster(&mut self, cfg: &ModelConfig, params: ClusterParams, seed: u64) {
+        self.attach_substrate(Box::new(ClusterSim::new(cfg, params, seed)));
+    }
+
+    /// Back this tenant with its own event-driven cluster
+    /// ([`EventSim`] — the bench-speed engine for large fleets).
+    pub fn attach_event_cluster(&mut self, cfg: &ModelConfig, params: ClusterParams, seed: u64) {
+        self.attach_substrate(Box::new(EventSim::new(cfg, params, seed)));
+    }
+
+    /// Back this tenant with an analytical substrate built from the
+    /// fleet-shared surface model and audited against *this tenant's*
+    /// SLA latency bound.
+    pub fn attach_analytical(&mut self, params: ClusterParams) {
+        self.attach_substrate(Box::new(crate::simulator::AnalyticalSubstrate::from_model(
+            (*self.model).clone(),
+            params,
+            self.current,
+            self.spec.sla.l_max,
+        )));
     }
 
     pub fn name(&self) -> &str {
@@ -236,7 +265,7 @@ impl Tenant {
     /// step (serve-then-move, mirroring [`crate::simulator::Simulator`]).
     pub fn serve(&mut self, t: usize) -> StepRecord {
         let w = self.workload_at(t);
-        let rec = match &mut self.cluster {
+        let rec = match &mut self.substrate {
             None => {
                 let point = self.model.evaluate(&self.current, w.lambda_req);
                 let lat_eff = self.model.effective_latency(&self.current, w.lambda_req);
@@ -325,7 +354,7 @@ impl Tenant {
     /// Actuate an admitted move (resets the fairness counter).
     pub fn apply(&mut self, to: Configuration) {
         assert!(self.model.plane().contains(&to));
-        if let Some(sim) = &mut self.cluster {
+        if let Some(sim) = &mut self.substrate {
             if to != self.current {
                 sim.apply(to);
             }
@@ -484,5 +513,25 @@ mod tests {
         // measured latency comes from the DES, not the analytical model
         assert!(rec.latency > 0.0);
         assert!(rec.throughput > 0.0);
+    }
+
+    #[test]
+    fn event_backed_tenant_matches_sampling_measurements() {
+        let (cfg, model) = fixture();
+        let spec = |name: &str| {
+            TenantSpec::from_config(&cfg, name, PriorityClass::Gold, TraceBuilder::paper(&cfg))
+        };
+        let mut sampling = Tenant::new(0, spec("sampling"), Arc::clone(&model), &cfg);
+        sampling.attach_cluster(&cfg, ClusterParams::default(), 7);
+        let mut event = Tenant::new(1, spec("event"), model, &cfg);
+        event.attach_event_cluster(&cfg, ClusterParams::default(), 7);
+        // same seed, same trace, no reconfigurations: below the
+        // sampling cap the two engines measure identically
+        for tick in 0..5 {
+            let a = sampling.serve(tick);
+            let b = event.serve(tick);
+            assert!((a.latency - b.latency).abs() <= 1e-6 * a.latency.abs().max(1.0));
+            assert!((a.throughput - b.throughput).abs() <= 1e-3 * a.throughput.abs().max(1.0));
+        }
     }
 }

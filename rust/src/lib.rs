@@ -17,16 +17,23 @@
 //!   horizontal-only / vertical-only / threshold / oracle / lookahead
 //!   baselines and extensions.
 //! * [`workload`] — the paper's 50-step trace plus synthetic families.
-//! * [`simulator`] — the Phase-1 analytical simulator (paper §V).
-//! * [`cluster`] — a discrete-event distributed-database substrate
+//! * [`simulator`] — the Phase-1 analytical simulator (paper §V), plus
+//!   [`simulator::AnalyticalSubstrate`], the analytical surfaces behind
+//!   the [`cluster::Substrate`] trait.
+//! * [`cluster`] — the Phase-2 distributed-database substrate
 //!   (sharding, replication, rebalance, queueing) standing in for the
-//!   real deployments the paper defers to future work (§VII).
-//! * [`coordinator`] — the autoscaler control loop that drives the
-//!   cluster substrate with any policy.
+//!   real deployments the paper defers to future work (§VII). Two
+//!   engines implement the [`cluster::Substrate`] trait: the legacy
+//!   per-op sampling [`cluster::ClusterSim`] and the event-driven
+//!   [`cluster::EventSim`] (binary-heap event calendar, allocation-free
+//!   hot path, no arrival thinning).
+//! * [`coordinator`] — the autoscaler control loop that drives any
+//!   [`cluster::Substrate`] with any policy.
 //! * [`fleet`] — multi-tenant fleet control: N tenant clusters (each a
-//!   full plane/SLA/policy/trace stack) scaling concurrently under a
-//!   shared monetary budget, with priority classes and a starvation
-//!   guard in the fleet-level budget arbiter.
+//!   full plane/SLA/policy/trace stack, optionally backed by any
+//!   substrate engine — mixable within one run) scaling concurrently
+//!   under a shared monetary budget, with priority classes and a
+//!   starvation guard in the fleet-level budget arbiter.
 //! * [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes the
 //!   Pallas-backed surface kernels on the decision path.
@@ -58,10 +65,11 @@ pub mod testkit;
 pub mod util;
 pub mod workload;
 
+pub use cluster::{ClusterSim, EventSim, Substrate, SubstrateKind};
 pub use config::ModelConfig;
 pub use plane::{Configuration, ScalingPlane, Tier};
 pub use policy::{Decision, Policy};
-pub use simulator::{PolicyKind, Simulator};
+pub use simulator::{AnalyticalSubstrate, PolicyKind, Simulator};
 pub use surfaces::SurfaceModel;
 
 /// Score assigned to SLA-infeasible candidates (shared with the python

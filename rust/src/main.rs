@@ -6,10 +6,10 @@
 //! diagonal-scale simulate [--extra P]...   # Table I over the paper trace
 //! diagonal-scale surfaces [--lambda N]     # ASCII heatmaps (figs 1/2/4)
 //! diagonal-scale figures [--out DIR]       # all paper figure CSVs
-//! diagonal-scale cluster [--policy P] [--seed N]   # Phase-2 DES run
+//! diagonal-scale cluster [--policy P] [--substrate S] [--seed N]  # Phase-2 run
 //! diagonal-scale trace-hlo [--artifacts DIR]       # Table I via PJRT
 //! diagonal-scale daemon [--steps N] [--seed N]     # threaded autoscaler
-//! diagonal-scale fleet [--tenants N] [--budget F]  # multi-tenant fleet
+//! diagonal-scale fleet [--tenants N] [--budget F] [--substrate S]  # fleet
 //! ```
 //!
 //! Global flag: `--config <path.toml>` (defaults to the bundled paper
@@ -19,14 +19,14 @@ use std::sync::mpsc;
 
 use anyhow::{anyhow, bail, Result};
 
-use diagonal_scale::cluster::{ClusterParams, ClusterSim};
+use diagonal_scale::cluster::{ClusterParams, ClusterSim, EventSim, Substrate, SubstrateKind};
 use diagonal_scale::config::{ModelConfig, MoveFlags};
 use diagonal_scale::coordinator::{self, Backend, Coordinator};
 use diagonal_scale::fleet::{self, FleetSimulator, PriorityClass, TenantSpec};
 use diagonal_scale::policy::{DiagonalScale, Lookahead, Oracle, Policy, StaticPolicy, Threshold};
 use diagonal_scale::report::{self, Surface};
 use diagonal_scale::runtime::{Engine, SurfaceEngine};
-use diagonal_scale::simulator::{PolicyKind, Simulator};
+use diagonal_scale::simulator::{AnalyticalSubstrate, PolicyKind, Simulator};
 use diagonal_scale::surfaces::SurfaceModel;
 use diagonal_scale::workload::TraceBuilder;
 
@@ -42,9 +42,10 @@ COMMANDS:
                 [--lambda <f32>] demand level (default 10000)
   figures     Emit Table I + every figure CSV
                 [--out <dir>] output directory (default out/)
-  cluster     Drive the Phase-2 DES cluster with the coordinator
+  cluster     Drive a Phase-2 substrate with the coordinator
                 [--policy <p>] diagonal|horizontal|vertical|threshold|
                                oracle|lookahead|static (default diagonal)
+                [--substrate <s>] des|sampling|analytical (default des)
                 [--seed <u64>] (default 42)
   trace-hlo   Run Table I through the AOT-compiled PJRT policy_trace
                 [--artifacts <dir>] (default artifacts/)
@@ -55,8 +56,11 @@ COMMANDS:
                 [--budget <f32>/h] (default 2.2 per tenant)
                 [--steps <n>] (default 100)
                 [--k <n>] fairness guard K (default 3)
-                [--cluster <bool>] back tenants with the DES substrate
-                [--seed <u64>] (default 42, DES mode only)
+                [--cluster <bool>] back tenants with a physical substrate
+                [--substrate <s>] des|sampling|analytical — back tenants
+                                  with this engine (implies --cluster
+                                  true; default des)
+                [--seed <u64>] (default 42, substrate modes only)
 ";
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -133,6 +137,35 @@ fn policy_send(name: &str) -> Result<Box<dyn Policy + Send>> {
     })
 }
 
+fn substrate_kind(name: &str) -> Result<SubstrateKind> {
+    SubstrateKind::parse(name)
+        .ok_or_else(|| anyhow!("unknown substrate `{name}` (expected des|sampling|analytical)"))
+}
+
+/// Run the coordinator over the paper trace on any substrate engine.
+fn run_cluster<S: Substrate>(
+    cfg: &ModelConfig,
+    substrate: S,
+    policy: Box<dyn Policy + Send>,
+    label: &str,
+) -> Result<()> {
+    let mut coord = Coordinator::new(cfg, substrate, Backend::Native(policy));
+    let trace = TraceBuilder::paper(cfg);
+    let reports = coord.run_trace(&trace)?;
+    let s = coordinator::summarize(&reports);
+    println!(
+        "cluster run [{label}]: steps={} violations={} avg_lat={:.4} p99={:.4} completed={:.1}% moved_shards={} reconfigs={}",
+        s.steps,
+        s.violations,
+        s.avg_latency,
+        s.avg_p99,
+        100.0 * s.completed_ratio,
+        s.total_moved_shards,
+        s.reconfigurations
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
 
@@ -189,21 +222,25 @@ fn main() -> Result<()> {
         "cluster" => {
             let seed: u64 = args.parse_num("seed", 42)?;
             let policy = policy_send(args.get("policy").unwrap_or("diagonal"))?;
-            let cluster = ClusterSim::new(&cfg, ClusterParams::default(), seed);
-            let mut coord = Coordinator::new(&cfg, cluster, Backend::Native(policy));
-            let trace = TraceBuilder::paper(&cfg);
-            let reports = coord.run_trace(&trace)?;
-            let s = coordinator::summarize(&reports);
-            println!(
-                "cluster run: steps={} violations={} avg_lat={:.4}s p99={:.4}s completed={:.1}% moved_shards={} reconfigs={}",
-                s.steps,
-                s.violations,
-                s.avg_latency,
-                s.avg_p99,
-                100.0 * s.completed_ratio,
-                s.total_moved_shards,
-                s.reconfigurations
-            );
+            let kind = substrate_kind(args.get("substrate").unwrap_or("des"))?;
+            let params = ClusterParams::default();
+            match kind {
+                SubstrateKind::Des => {
+                    run_cluster(&cfg, EventSim::new(&cfg, params, seed), policy, kind.label())?
+                }
+                SubstrateKind::Sampling => run_cluster(
+                    &cfg,
+                    ClusterSim::new(&cfg, params, seed),
+                    policy,
+                    kind.label(),
+                )?,
+                SubstrateKind::Analytical => run_cluster(
+                    &cfg,
+                    AnalyticalSubstrate::new(&cfg, params),
+                    policy,
+                    kind.label(),
+                )?,
+            }
         }
         "trace-hlo" => {
             let artifacts = args.get("artifacts").unwrap_or("artifacts");
@@ -284,7 +321,11 @@ fn main() -> Result<()> {
             let k: usize = args.parse_num("k", 3)?;
             let budget: f32 = args.parse_num("budget", 2.2 * n as f32)?;
             let seed: u64 = args.parse_num("seed", 42)?;
-            let des: bool = args.parse_num("cluster", false)?;
+            // an explicit --substrate implies physical backing, so the
+            // flag is never silently ignored
+            let substrate_flag = args.get("substrate");
+            let attach: bool = args.parse_num("cluster", false)? || substrate_flag.is_some();
+            let kind = substrate_kind(substrate_flag.unwrap_or("des"))?;
 
             // Classes: top quarter Gold, next quarter Silver, rest
             // Bronze; traces are the paper timeline phase-shifted so
@@ -309,8 +350,8 @@ fn main() -> Result<()> {
                 .collect();
 
             let mut fleetsim = FleetSimulator::new(&cfg, specs, budget, k);
-            if des {
-                fleetsim.attach_clusters(&cfg, ClusterParams::default(), seed);
+            if attach {
+                fleetsim.attach_substrates(&cfg, ClusterParams::default(), seed, kind);
             }
             let res = fleetsim.run(steps);
             for t in &res.ticks {

@@ -12,6 +12,15 @@
 //!   reported objective uses it.
 //! * violations audit raw latency against `l_max` and served throughput
 //!   against the *raw* requirement.
+//!
+//! [`AnalyticalSubstrate`] re-exposes these surfaces behind the
+//! [`crate::cluster::Substrate`] trait, so the coordinator and fleet
+//! can drive the analytical model through the same observe → plan →
+//! actuate loop as the physical DES engines.
+
+mod substrate;
+
+pub use substrate::{build_substrate, AnalyticalSubstrate};
 
 use crate::config::{ModelConfig, MoveFlags};
 use crate::metrics::{Recorder, StepRecord, Summary};

@@ -1,0 +1,194 @@
+//! Substrate parity properties: the event-driven engine and the legacy
+//! sampling engine must conserve ops, be deterministic per seed, and
+//! agree with each other — exactly below the sampling cap (same RNG
+//! consumption order), and within tolerance once mid-step event timing
+//! (rebalance windows, compaction) comes into play.
+
+use diagonal_scale::cluster::{
+    ClusterParams, ClusterSim, ClusterStepMetrics, EventSim, Substrate,
+};
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::coordinator::{event_coordinator, native_coordinator, summarize};
+use diagonal_scale::plane::Configuration;
+use diagonal_scale::policy::DiagonalScale;
+use diagonal_scale::testkit::{forall, uniform};
+use diagonal_scale::workload::{TraceBuilder, WorkloadPoint};
+
+fn close(a: f64, b: f64, rel: f64) -> bool {
+    (a - b).abs() <= rel * a.abs().max(b.abs()).max(1e-9)
+}
+
+#[test]
+fn conservation_holds_in_both_engines() {
+    let cfg = ModelConfig::default_paper();
+    forall(10, 0xC0, |_, rng| {
+        let seed = rng.next_u64();
+        let lam = uniform(rng, 50.0, 8_000.0);
+        let h = rng.below(4) as usize;
+        let v = rng.below(4) as usize;
+        let mut sampling = ClusterSim::new(&cfg, ClusterParams::default(), seed);
+        let mut event = EventSim::new(&cfg, ClusterParams::default(), seed);
+        for sub in [
+            &mut sampling as &mut dyn Substrate,
+            &mut event as &mut dyn Substrate,
+        ] {
+            sub.apply(Configuration::new(h, v));
+            for _ in 0..5 {
+                sub.step(WorkloadPoint::new(lam, 0.3));
+            }
+            let st = sub.observe();
+            assert!(
+                (st.total_offered - st.total_completed - st.total_dropped).abs()
+                    <= 1e-6 * st.total_offered.max(1.0),
+                "offered={} completed={} dropped={}",
+                st.total_offered,
+                st.total_completed,
+                st.total_dropped
+            );
+        }
+    });
+}
+
+#[test]
+fn per_seed_determinism_in_both_engines() {
+    let cfg = ModelConfig::default_paper();
+    forall(6, 0xD1, |_, rng| {
+        let seed = rng.next_u64();
+        let lam = uniform(rng, 100.0, 6_000.0);
+        let run_sampling = |mut sim: ClusterSim| -> Vec<ClusterStepMetrics> {
+            sim.apply(Configuration::new(2, 1));
+            (0..4).map(|_| sim.step(WorkloadPoint::new(lam, 0.3))).collect()
+        };
+        assert_eq!(
+            run_sampling(ClusterSim::new(&cfg, ClusterParams::default(), seed)),
+            run_sampling(ClusterSim::new(&cfg, ClusterParams::default(), seed))
+        );
+        let run_event = |mut sim: EventSim| -> Vec<ClusterStepMetrics> {
+            sim.apply(Configuration::new(2, 1));
+            (0..4).map(|_| sim.step(WorkloadPoint::new(lam, 0.3))).collect()
+        };
+        assert_eq!(
+            run_event(EventSim::new(&cfg, ClusterParams::default(), seed)),
+            run_event(EventSim::new(&cfg, ClusterParams::default(), seed))
+        );
+    });
+}
+
+#[test]
+fn engines_agree_below_the_sampling_cap() {
+    // no compaction and a settled cluster: the two engines consume the
+    // RNG in the same order and must measure (near-)identically
+    let cfg = ModelConfig::default_paper();
+    forall(8, 0xE2, |_, rng| {
+        let seed = rng.next_u64();
+        let lam = uniform(rng, 100.0, 15_000.0);
+        let zipf = if rng.below(2) == 0 { 0.0 } else { 0.99 };
+        let params = ClusterParams { zipf_s: zipf, ..ClusterParams::default() };
+        let mut a = ClusterSim::new(&cfg, params, seed);
+        let mut b = EventSim::new(&cfg, params, seed);
+        a.apply(Configuration::new(2, 2));
+        b.apply(Configuration::new(2, 2));
+        // burn past the shared reconfiguration window and let queues
+        // drain so carried-over server state is equal
+        for _ in 0..3 {
+            a.step(WorkloadPoint::new(200.0, 0.3));
+            b.step(WorkloadPoint::new(200.0, 0.3));
+        }
+        for _ in 0..3 {
+            let ma = a.step(WorkloadPoint::new(lam, 0.3));
+            let mb = b.step(WorkloadPoint::new(lam, 0.3));
+            assert!(close(ma.utilization, mb.utilization, 1e-9), "{ma:?} vs {mb:?}");
+            assert!(close(ma.completed, mb.completed, 1e-3), "{ma:?} vs {mb:?}");
+            assert!(close(ma.avg_latency, mb.avg_latency, 1e-3), "{ma:?} vs {mb:?}");
+        }
+    });
+}
+
+#[test]
+fn coordinated_paper_trace_parity() {
+    // the full control loop on both engines: planning consumes only the
+    // offered load, so decisions must be identical; measurements agree
+    // within the tolerance left by mid-step window timing
+    let cfg = ModelConfig::default_paper();
+    let trace = TraceBuilder::paper(&cfg);
+    let mut a = native_coordinator(
+        &cfg,
+        Box::new(DiagonalScale::diagonal()),
+        ClusterParams::default(),
+        11,
+    );
+    let mut b = event_coordinator(
+        &cfg,
+        Box::new(DiagonalScale::diagonal()),
+        ClusterParams::default(),
+        11,
+    );
+    let ra = a.run_trace(&trace).unwrap();
+    let rb = b.run_trace(&trace).unwrap();
+
+    let ca: Vec<_> = ra.iter().map(|r| r.served_config).collect();
+    let cb: Vec<_> = rb.iter().map(|r| r.served_config).collect();
+    assert_eq!(ca, cb, "engines must induce the same scaling trajectory");
+
+    for (x, y) in ra.iter().zip(&rb) {
+        assert!(
+            close(x.metrics.utilization, y.metrics.utilization, 1e-6),
+            "step {}: utilization {} vs {}",
+            x.step,
+            x.metrics.utilization,
+            y.metrics.utilization
+        );
+    }
+
+    let sa = summarize(&ra);
+    let sb = summarize(&rb);
+    assert!(
+        (sa.completed_ratio - sb.completed_ratio).abs() < 0.05,
+        "completed ratio: sampling {} vs event {}",
+        sa.completed_ratio,
+        sb.completed_ratio
+    );
+}
+
+#[test]
+fn compaction_modes_agree_on_throughput_within_tolerance() {
+    // compaction windows toggle mid-step in the event engine but at
+    // step granularity in the sampling engine — aggregate completion
+    // must still line up
+    let cfg = ModelConfig::default_paper();
+    let params = ClusterParams {
+        compaction_period: 5.0,
+        compaction_duration: 1.0,
+        compaction_degradation: 0.5,
+        ..ClusterParams::default()
+    };
+    let mut a = ClusterSim::new(&cfg, params, 31);
+    let mut b = EventSim::new(&cfg, params, 31);
+    for _ in 0..20 {
+        a.step(WorkloadPoint::new(3_000.0, 0.3));
+        b.step(WorkloadPoint::new(3_000.0, 0.3));
+    }
+    let ra = a.total_completed / a.total_offered;
+    let rb = b.total_completed / b.total_offered;
+    assert!((ra - rb).abs() < 0.02, "sampling {ra} vs event {rb}");
+    assert!(ra > 0.9 && rb > 0.9, "sampling {ra} vs event {rb}");
+}
+
+#[test]
+fn event_engine_simulates_every_arrival_above_the_sampling_cap() {
+    let cfg = ModelConfig::default_paper();
+    let mut e = EventSim::new(&cfg, ClusterParams::default(), 17);
+    e.apply(Configuration::new(3, 3));
+    for _ in 0..3 {
+        e.step(WorkloadPoint::new(500.0, 0.3));
+    }
+    // well above the sampling engine's default 20k cap
+    let m = e.step(WorkloadPoint::new(30_000.0, 0.3));
+    assert!(m.offered > 29_000.0);
+    assert!(close(m.completed + m.dropped, m.offered, 1e-9), "{m:?}");
+    let st = Substrate::observe(&e);
+    assert!(
+        (st.total_offered - st.total_completed - st.total_dropped).abs()
+            <= 1e-6 * st.total_offered
+    );
+}
