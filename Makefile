@@ -5,7 +5,7 @@
 
 .DEFAULT_GOAL := help
 
-.PHONY: help build test bench-compile examples artifacts
+.PHONY: help build test bench-compile examples fleet-demo artifacts
 
 help: ## list the available targets
 	@grep -E '^[a-zA-Z_-]+:.*?## ' $(MAKEFILE_LIST) | awk 'BEGIN {FS = ":.*?## "}; {printf "  %-14s %s\n", $$1, $$2}'
@@ -22,6 +22,9 @@ bench-compile: ## compile every bench target without running it
 
 examples: ## run the quickstart and fleet_budget smoke examples
 	cargo run --release --example quickstart
+	cargo run --release --example fleet_budget
+
+fleet-demo: ## budget-aware fleet demo: envelopes + forecasting + planning-vs-flat A/B
 	cargo run --release --example fleet_budget
 
 artifacts: ## AOT-lower the JAX/Pallas kernels to artifacts/ (needs jax)

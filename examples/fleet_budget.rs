@@ -1,20 +1,27 @@
-//! Fleet under a shared cost budget: 8 tenants, 3 priority classes.
+//! Fleet under a shared cost budget: 8 tenants, 3 priority classes,
+//! budget-aware planning (candidate lists + shed re-negotiation +
+//! class envelopes + per-tenant forecasting).
 //!
 //! ```text
-//! cargo run --release --example fleet_budget
+//! cargo run --release --example fleet_budget    # or: make fleet-demo
 //! ```
 //!
 //! 1. Run the fleet unconstrained to find its natural peak spend.
-//! 2. Re-run with a budget at ~65% of that peak: the arbiter's greedy
-//!    knapsack + priority classes decide who scales.
+//! 2. Re-run with a budget at ~65% of that peak, with planning fully
+//!    enabled: Gold/Silver/Bronze envelopes (burst credits on) and
+//!    seasonal per-tenant demand forecasting behind the proposals.
 //! 3. Verify, tick by tick, that total fleet spend never exceeds the
 //!    budget; that Gold tenants keep their p95 (raw) latency within the
-//!    SLA bound; and that Bronze absorbs the bulk of the denials.
+//!    SLA bound; that Bronze absorbs the bulk of the denials; and that
+//!    planning admission does not violate more than the PR-2
+//!    flat-denial arbiter at the same budget.
 
 use anyhow::{bail, Result};
 
 use diagonal_scale::config::ModelConfig;
-use diagonal_scale::fleet::{self, FleetSimulator, PriorityClass, TenantSpec};
+use diagonal_scale::fleet::{
+    self, BudgetArbiter, ClassEnvelopes, FleetSimulator, ForecastKind, PriorityClass, TenantSpec,
+};
 use diagonal_scale::workload::TraceBuilder;
 
 const TENANTS: usize = 8;
@@ -49,6 +56,16 @@ fn specs(cfg: &ModelConfig) -> Vec<TenantSpec> {
         .collect()
 }
 
+/// A fleet with planning fully enabled: envelopes + burst credits and
+/// seasonal per-tenant forecasting.
+fn planning_fleet(cfg: &ModelConfig, budget: f32) -> FleetSimulator {
+    let arb = BudgetArbiter::new(budget, FAIRNESS_K)
+        .with_envelopes(ClassEnvelopes::default_split());
+    let mut fleet = FleetSimulator::with_arbiter(cfg, specs(cfg), arb);
+    fleet.enable_forecasts(ForecastKind::Seasonal, 3);
+    fleet
+}
+
 fn main() -> Result<()> {
     let cfg = ModelConfig::default_paper();
 
@@ -61,27 +78,33 @@ fn main() -> Result<()> {
         free_res.report.total_cost, free_res.report.denied_moves
     );
 
-    // 2. the same fleet under a budget at ~65% of the natural peak
+    // 2. the same fleet under a budget at ~65% of the natural peak,
+    //    with envelopes + forecasting enabled
     let budget = (free_peak * 0.65 * 10.0).round() / 10.0;
-    println!("\nshared budget: {budget:.2}/h  ({TENANTS} tenants, K={FAIRNESS_K})\n");
-    let mut fleet = FleetSimulator::new(&cfg, specs(&cfg), budget, FAIRNESS_K);
+    println!(
+        "\nshared budget: {budget:.2}/h  ({TENANTS} tenants, K={FAIRNESS_K}, \
+         envelopes gold/silver/bronze = 0.5/0.3/0.2, seasonal forecast)\n"
+    );
+    let mut fleet = planning_fleet(&cfg, budget);
     let res = fleet.run(STEPS);
 
     for t in &res.ticks {
         let ok = t.spend <= budget + 1e-3;
         println!(
-            "tick {:>3}  spend {:>6.2} / {budget:<6.2} {}  admitted {:>2}  denied {:>2}  rescues {}",
+            "tick {:>3}  spend {:>6.2} / {budget:<6.2} {}  admitted {:>2}  denied {:>2}  rescues {}  degraded {}  sheds {}",
             t.step,
             t.spend,
             if ok { "ok  " } else { "OVER" },
             t.admitted_moves,
             t.denied_moves,
-            t.rescues
+            t.rescues,
+            t.degraded_moves,
+            t.shed_moves
         );
     }
     println!("\n{}", fleet::report::table(&res.report));
 
-    // 3. the three acceptance checks
+    // 3. the acceptance checks
     if !res.within_budget(budget) {
         bail!("FAIL: fleet spend exceeded the budget (peak {:.2})", res.peak_spend());
     }
@@ -112,6 +135,24 @@ fn main() -> Result<()> {
     if bronze_d < gold_d {
         bail!("FAIL: bronze ({bronze_d}) should absorb at least as many denials as gold ({gold_d})");
     }
-    println!("\nall checks passed: budget respected, gold SLAs held, bronze absorbed contention");
+
+    // planning vs the PR-2 flat-denial arbiter at the same budget
+    let mut flat =
+        FleetSimulator::with_arbiter(&cfg, specs(&cfg), BudgetArbiter::flat(budget, FAIRNESS_K));
+    let flat_res = flat.run(STEPS);
+    let (pv, fv) = (res.total_violations(), flat_res.total_violations());
+    println!(
+        "CHECK planning vs flat denial: {pv} violation ticks vs {fv} \
+         (sheds actuated: {})",
+        res.ticks.iter().map(|t| t.shed_moves).sum::<usize>()
+    );
+    if pv > fv {
+        bail!("FAIL: planning admission violated more than flat denial ({pv} > {fv})");
+    }
+
+    println!(
+        "\nall checks passed: budget respected, gold SLAs held, bronze absorbed \
+         contention, planning beat flat denial"
+    );
     Ok(())
 }

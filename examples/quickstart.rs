@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         reb_v: cfg.policy.reb_v,
         plan_queue: false,
         future: &[],
+        budget: None,
     };
     let d = DiagonalScale::diagonal().decide(current, demand, &ctx);
     println!(

@@ -26,6 +26,7 @@ fn main() {
         reb_v: cfg.policy.reb_v,
         plan_queue: false,
         future: &[],
+        budget: None,
     };
     let b = Bench::default();
     let w = WorkloadPoint::new(10_000.0, cfg.write_ratio());

@@ -18,12 +18,14 @@ use std::time::Instant;
 use diagonal_scale::benchkit::{group, Bench};
 use diagonal_scale::cluster::{ClusterParams, SubstrateKind};
 use diagonal_scale::config::ModelConfig;
-use diagonal_scale::fleet::{FleetSimulator, PriorityClass, TenantSpec};
+use diagonal_scale::fleet::{
+    BudgetArbiter, ClassEnvelopes, FleetSimulator, ForecastKind, PriorityClass, TenantSpec,
+};
 use diagonal_scale::workload::TraceBuilder;
 
-fn build_fleet(cfg: &ModelConfig, n: usize) -> FleetSimulator {
+fn specs(cfg: &ModelConfig, n: usize) -> Vec<TenantSpec> {
     let base = TraceBuilder::paper(cfg);
-    let specs: Vec<TenantSpec> = (0..n)
+    (0..n)
         .map(|i| {
             let class = match i % 3 {
                 0 => PriorityClass::Gold,
@@ -37,10 +39,13 @@ fn build_fleet(cfg: &ModelConfig, n: usize) -> FleetSimulator {
                 base.shifted(i * base.len() / n),
             )
         })
-        .collect();
+        .collect()
+}
+
+fn build_fleet(cfg: &ModelConfig, n: usize) -> FleetSimulator {
     // budget scaled per tenant so contention (and the arbiter's full
     // knapsack path) is exercised at every fleet size
-    let mut fleet = FleetSimulator::new(cfg, specs, 2.2 * n as f32, 3);
+    let mut fleet = FleetSimulator::new(cfg, specs(cfg, n), 2.2 * n as f32, 3);
     fleet.set_recording(false); // bounded memory over millions of ticks
     fleet
 }
@@ -76,6 +81,31 @@ fn main() {
         );
     } else {
         println!("decision-loop time scaled super-linearly (alpha = {alpha:.2}) — investigate");
+    }
+
+    group("planning admission overhead — flat denial vs full planning (16 tenants)");
+    {
+        let n = 16;
+        let budget = 2.2 * n as f32;
+        let mut flat = FleetSimulator::with_arbiter(
+            &cfg,
+            specs(&cfg, n),
+            BudgetArbiter::flat(budget, 3),
+        );
+        flat.set_recording(false);
+        let flat_stats = b.run("fleet_tick/flat_denial", || flat.tick().admitted_moves);
+        let arb =
+            BudgetArbiter::new(budget, 3).with_envelopes(ClassEnvelopes::default_split());
+        let mut plan = FleetSimulator::with_arbiter(&cfg, specs(&cfg, n), arb);
+        plan.enable_forecasts(ForecastKind::Seasonal, 3);
+        plan.set_recording(false);
+        let plan_stats =
+            b.run("fleet_tick/planning+envelopes+forecast", || plan.tick().admitted_moves);
+        b.report_metric(
+            "planning/flat tick-time ratio",
+            plan_stats.mean.as_secs_f64() / flat_stats.mean.as_secs_f64().max(1e-12),
+            "x",
+        );
     }
 
     group("fleet decision loop — DES(event)-backed tenants, full queueing physics");

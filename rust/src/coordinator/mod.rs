@@ -123,6 +123,7 @@ impl<S: Substrate> Coordinator<S> {
                     reb_v: self.reb_v,
                     plan_queue: self.plan_queue,
                     future: &[],
+                    budget: None,
                 };
                 Ok(policy.decide(self.current, est, &ctx).next)
             }

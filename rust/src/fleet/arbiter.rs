@@ -1,26 +1,42 @@
 //! Fleet budget arbiter: admission control for per-tenant scaling moves
 //! under a shared monetary budget.
 //!
-//! Each tick every tenant proposes its best Algorithm-1 move; the
-//! arbiter admits a subset so projected fleet spend never exceeds the
-//! budget:
+//! Each tick every tenant proposes a *ranked candidate list* (best move
+//! first, cheaper alternatives and stepping stones behind it) plus —
+//! for tenants not repairing their own SLA — *shed offers* the arbiter
+//! may actuate to fund someone else's repair. Admission walks, in
+//! order:
 //!
-//! 1. **Holds and shrinks** — no-ops and cost-non-increasing moves are
-//!    always admitted (they free headroom before anything is spent).
+//! 1. **Holds and shrinks** — no-ops and cost-non-increasing best moves
+//!    are always admitted (they free headroom before anything is
+//!    spent).
 //! 2. **Fairness rescues** — a tenant denied `fairness_k`+ consecutive
 //!    ticks while SLA-violating goes to the front of the queue, ahead
-//!    of every economic move; it is denied again only if its move does
-//!    not fit the remaining budget after the cost cuts and any
-//!    more-starved rescues.
-//! 3. **Greedy knapsack** — remaining cost-increasing moves, ordered by
-//!    priority class, then gain-per-dollar density, then smaller cost,
-//!    admitted while they fit.
+//!    of every economic move; its candidate list is walked and may draw
+//!    shed funding; it is denied again only when nothing fits even
+//!    after re-negotiation.
+//! 3. **SLA repairs** — remaining emergency/violating proposals,
+//!    ordered by class, density, cost, id. Repairs outrank economic
+//!    moves *fleet-wide* (a Bronze repair beats a Gold economic move),
+//!    walk their candidate lists, may draw shed funding, and are
+//!    exempt from class envelopes (envelopes shape discretionary
+//!    spending, never SLA repair).
+//! 4. **Economic knapsack** — remaining cost-increasing moves, ordered
+//!    by priority class, then gain-per-dollar density, then smaller
+//!    cost. Checked against both the budget and the class envelopes
+//!    (with burst credits), and **frozen** for the tick whenever some
+//!    SLA repair went unmet — freed headroom then accrues to the
+//!    starving repair next tick instead of being re-consumed.
 //!
-//! The order is total (tenant id is the last tie-break), so admission is
-//! deterministic and independent of proposal arrival order — a property
-//! `rust/tests/prop_fleet.rs` asserts.
+//! The order is total (tenant id is the last tie-break), so admission
+//! is deterministic and independent of proposal arrival order — a
+//! property `rust/tests/prop_fleet.rs` asserts.
+//!
+//! [`BudgetArbiter::flat`] preserves the PR-2 baseline: first candidate
+//! only, no re-negotiation, no envelopes — kept for A/B comparisons
+//! (the fleet tests pin that planning strictly beats it on violations).
 
-use super::tenant::Proposal;
+use super::tenant::{PriorityClass, Proposal};
 
 /// Why a proposal was admitted or denied this tick.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,26 +48,121 @@ pub enum Verdict {
     /// Admitted by the fairness guard (denial streak ≥ K while
     /// SLA-violating).
     AdmittedRescue,
-    /// Admitted by the greedy knapsack.
+    /// The preferred candidate was admitted.
     Admitted,
-    /// Denied: admitting would push projected fleet spend over budget.
+    /// A lower-ranked candidate was admitted: the first choice did not
+    /// fit, the tenant degraded instead of being denied.
+    AdmittedDegraded,
+    /// A holding tenant's shed offer was actuated to fund another
+    /// tenant's SLA repair (online budget re-negotiation).
+    AdmittedShed,
+    /// Denied: admitting would push projected fleet spend over budget
+    /// (or past the class envelope, for economic moves).
     DeniedBudget,
-    /// The fairness guard applied, but the move does not fit the
-    /// budget remaining after cost cuts and more-starved rescues.
+    /// The fairness guard applied, but no candidate fit the budget
+    /// remaining after cost cuts, more-starved rescues, and shed
+    /// funding.
     DeniedRescueUnaffordable,
 }
 
 impl Verdict {
-    /// Whether the tenant may actuate its proposal.
+    /// Whether the tenant actuates a configuration change (or hold).
     pub fn admitted(&self) -> bool {
-        matches!(
-            self,
-            Verdict::Hold | Verdict::AdmittedShrink | Verdict::AdmittedRescue | Verdict::Admitted
-        )
+        !self.denied()
     }
 
     pub fn denied(&self) -> bool {
-        !self.admitted()
+        matches!(self, Verdict::DeniedBudget | Verdict::DeniedRescueUnaffordable)
+    }
+}
+
+/// Fraction of another class's *unused* envelope headroom a class may
+/// borrow as burst credits. Borrowing everything would make envelopes
+/// vacuous (envelope + full burst is never tighter than the plain
+/// budget check when shares sum to 1); half keeps the other half
+/// reserved for its owner within the tick.
+pub const BURST_FRACTION: f32 = 0.5;
+
+/// Per-class budget envelopes: each priority class owns a share of the
+/// fleet budget for *economic* (discretionary) scaling. A class may
+/// borrow up to [`BURST_FRACTION`] of each other class's unused
+/// envelope headroom — burst credits — within a tick; because
+/// envelopes are re-derived from actual class spend every tick,
+/// borrowed headroom is implicitly reclaimed at the next tick: a class
+/// left above its envelope can only shrink (or repair SLAs) until it
+/// fits its share again. SLA repairs and rescues ignore envelopes by
+/// design.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassEnvelopes {
+    /// Budget share per class, indexed by [`PriorityClass::rank`]
+    /// (bronze, silver, gold). Normalized to sum to 1.
+    shares: [f32; 3],
+}
+
+impl ClassEnvelopes {
+    /// Shares in Gold/Silver/Bronze order; must be positive. They are
+    /// normalized, so any positive weights work.
+    pub fn new(gold: f32, silver: f32, bronze: f32) -> Self {
+        assert!(
+            gold > 0.0 && silver > 0.0 && bronze > 0.0,
+            "envelope shares must be positive"
+        );
+        let total = gold + silver + bronze;
+        Self { shares: [bronze / total, silver / total, gold / total] }
+    }
+
+    /// The default split: half the budget for Gold, 30% Silver, 20%
+    /// Bronze.
+    pub fn default_split() -> Self {
+        Self::new(0.5, 0.3, 0.2)
+    }
+
+    /// This class's share of the budget.
+    pub fn share(&self, class: PriorityClass) -> f32 {
+        self.shares[class.rank() as usize]
+    }
+
+    /// This class's envelope in absolute budget units.
+    pub fn envelope(&self, class: PriorityClass, budget: f32) -> f32 {
+        self.share(class) * budget
+    }
+
+    /// Economic headroom of `class` given the current per-class spend
+    /// (indexed by rank): its envelope plus [`BURST_FRACTION`] of each
+    /// other class's unused envelope headroom, minus its own spend.
+    /// May be negative when the class sits above its envelope — the
+    /// single formula both the arbiter's admission check and the
+    /// fleet's per-tenant [`crate::policy::BudgetHint`] derive from.
+    pub fn class_headroom(
+        &self,
+        class: PriorityClass,
+        class_spend: &[f32; 3],
+        budget: f32,
+    ) -> f32 {
+        let rank = class.rank() as usize;
+        let burst: f32 = BURST_FRACTION
+            * (0..3)
+                .filter(|&r| r != rank)
+                .map(|r| {
+                    (self.envelope(PriorityClass::from_rank(r as u8), budget) - class_spend[r])
+                        .max(0.0)
+                })
+                .sum::<f32>();
+        self.envelope(class, budget) + burst - class_spend[rank]
+    }
+
+    /// Parse `"g:s:b"` (e.g. `"0.5:0.3:0.2"`) or the `"default"`
+    /// keyword.
+    pub fn parse(text: &str) -> Option<Self> {
+        if text == "default" {
+            return Some(Self::default_split());
+        }
+        let parts: Vec<f32> =
+            text.split(':').map(|p| p.trim().parse().ok()).collect::<Option<_>>()?;
+        match parts[..] {
+            [g, s, b] if g > 0.0 && s > 0.0 && b > 0.0 => Some(Self::new(g, s, b)),
+            _ => None,
+        }
     }
 }
 
@@ -60,16 +171,24 @@ impl Verdict {
 pub struct Admission {
     /// Verdict per proposal, in input order.
     pub verdicts: Vec<Verdict>,
+    /// For each admitted proposal, which option was actuated: an index
+    /// into `candidates` (moves) or into `sheds` (for
+    /// [`Verdict::AdmittedShed`]). `None` for holds and denials.
+    pub chosen: Vec<Option<usize>>,
     /// Fleet spend before any admission (Σ cost of serving configs).
     pub base_spend: f32,
     /// Projected fleet spend after every admitted move takes effect
     /// (this is the next tick's spend).
     pub projected_spend: f32,
-    /// Admitted configuration *changes* (holds excluded).
+    /// Admitted configuration *changes* (holds and sheds excluded).
     pub admitted_moves: usize,
     pub denied_moves: usize,
     pub rescues: usize,
     pub rescue_denials: usize,
+    /// Moves admitted as a lower-ranked candidate.
+    pub degraded_moves: usize,
+    /// Shed offers actuated to fund SLA repairs.
+    pub shed_moves: usize,
 }
 
 impl Admission {
@@ -90,13 +209,33 @@ pub struct BudgetArbiter {
     /// consecutive ticks before jumping ahead of every economic move
     /// (only budget exhaustion by more-starved rescues can extend it).
     pub fairness_k: usize,
+    /// Walk ranked candidate lists and re-negotiate via sheds (the PR-3
+    /// planning admission). `false` restores the PR-2 flat-denial
+    /// baseline: first candidate only, one knapsack.
+    pub planning: bool,
+    /// Optional per-class envelopes with burst credits, applied to
+    /// economic moves when `planning` is on.
+    pub envelopes: Option<ClassEnvelopes>,
 }
 
 impl BudgetArbiter {
+    /// The planning arbiter (candidate walks + re-negotiation), no
+    /// envelopes.
     pub fn new(budget: f32, fairness_k: usize) -> Self {
         assert!(budget > 0.0, "budget must be positive");
         assert!(fairness_k > 0, "fairness K must be at least 1");
-        Self { budget, fairness_k }
+        Self { budget, fairness_k, planning: true, envelopes: None }
+    }
+
+    /// The PR-2 flat-denial baseline (first candidate only).
+    pub fn flat(budget: f32, fairness_k: usize) -> Self {
+        Self { planning: false, ..Self::new(budget, fairness_k) }
+    }
+
+    /// Builder: apply per-class envelopes (planning mode only).
+    pub fn with_envelopes(mut self, envelopes: ClassEnvelopes) -> Self {
+        self.envelopes = Some(envelopes);
+        self
     }
 
     /// Decide every proposal for one tick. Projected spend starts at
@@ -104,9 +243,20 @@ impl BudgetArbiter {
     /// (if the fleet already overspends — e.g. the budget was lowered
     /// mid-run — only shrinks are admitted until it fits again).
     pub fn admit(&self, proposals: &[Proposal]) -> Admission {
+        if self.planning {
+            self.admit_planning(proposals)
+        } else {
+            self.admit_flat(proposals)
+        }
+    }
+
+    /// Exact PR-2 admission: first candidate only, one knapsack, no
+    /// envelopes, no re-negotiation.
+    fn admit_flat(&self, proposals: &[Proposal]) -> Admission {
         let base_spend: f32 = proposals.iter().map(|p| p.cost_from).sum();
         let mut spend = base_spend;
         let mut verdicts = vec![Verdict::DeniedBudget; proposals.len()];
+        let mut chosen: Vec<Option<usize>> = vec![None; proposals.len()];
 
         // pass 0: holds + cost-non-increasing moves
         for (i, p) in proposals.iter().enumerate() {
@@ -114,11 +264,227 @@ impl BudgetArbiter {
                 verdicts[i] = Verdict::Hold;
             } else if p.cost_delta() <= 0.0 {
                 verdicts[i] = Verdict::AdmittedShrink;
+                chosen[i] = Some(0);
                 spend += p.cost_delta();
             }
         }
 
         // pass 1: fairness rescues, most-starved first
+        for i in self.rescue_order(proposals, &verdicts) {
+            if spend + proposals[i].cost_delta() <= self.budget {
+                verdicts[i] = Verdict::AdmittedRescue;
+                chosen[i] = Some(0);
+                spend += proposals[i].cost_delta();
+            } else {
+                verdicts[i] = Verdict::DeniedRescueUnaffordable;
+            }
+        }
+
+        // pass 2: greedy knapsack over the remaining cost increases
+        let mut rest: Vec<usize> = (0..proposals.len())
+            .filter(|&i| verdicts[i] == Verdict::DeniedBudget)
+            .collect();
+        rest.sort_by(|&a, &b| Self::knapsack_key(&proposals[a], &proposals[b]));
+        for i in rest {
+            if spend + proposals[i].cost_delta() <= self.budget {
+                verdicts[i] = Verdict::Admitted;
+                chosen[i] = Some(0);
+                spend += proposals[i].cost_delta();
+            }
+        }
+
+        Self::tally(proposals, verdicts, chosen, base_spend, spend)
+    }
+
+    /// PR-3 planning admission: candidate-list walks, shed funding,
+    /// repair-before-economic ordering, envelopes with burst credits.
+    fn admit_planning(&self, proposals: &[Proposal]) -> Admission {
+        let n = proposals.len();
+        let base_spend: f32 = proposals.iter().map(|p| p.cost_from).sum();
+        let mut spend = base_spend;
+        // per-class spend, indexed by rank (bronze, silver, gold)
+        let mut class_spend = [0.0f32; 3];
+        for p in proposals {
+            class_spend[p.class.rank() as usize] += p.cost_from;
+        }
+        let mut verdicts = vec![Verdict::DeniedBudget; n];
+        let mut chosen: Vec<Option<usize>> = vec![None; n];
+
+        // Admission epsilon: shed funding targets exact deficits, so a
+        // funded move lands exactly on the budget boundary in real
+        // arithmetic — f32 summation noise (~1e-6 at fleet scale) must
+        // not flip those admissions. 1e-4 is three orders below the
+        // cheapest tier step (0.08/h), so no real overrun can slip
+        // through, and it stays well inside the fleet-level
+        // [`super::BUDGET_EPS`].
+        const FIT_EPS: f32 = 1e-4;
+        // a cost delta fits when the fleet budget holds and — for
+        // envelope-checked (economic) admissions — the class stays
+        // within its envelope plus burst credits (the same
+        // [`ClassEnvelopes::class_headroom`] the fleet's budget hints
+        // are derived from)
+        let fits = |spend: f32, class_spend: &[f32; 3], class: PriorityClass, delta: f32,
+                    check_env: bool| {
+            if spend + delta > self.budget + FIT_EPS {
+                return false;
+            }
+            if check_env && delta > 0.0 {
+                if let Some(e) = &self.envelopes {
+                    if delta > e.class_headroom(class, class_spend, self.budget) + FIT_EPS {
+                        return false;
+                    }
+                }
+            }
+            true
+        };
+
+        // actuate option `ci` (candidate, or shed when `shed`) of
+        // proposal `i`
+        macro_rules! take {
+            ($i:expr, $ci:expr, $shed:expr) => {{
+                let p = &proposals[$i];
+                let opt =
+                    if $shed { &p.sheds[$ci] } else { &p.candidates[$ci] };
+                let delta = opt.cost_to - p.cost_from;
+                spend += delta;
+                class_spend[p.class.rank() as usize] += delta;
+                chosen[$i] = Some($ci);
+            }};
+        }
+
+        // shed offers from tenants still holding or awaiting the
+        // economic pass: bronze yields first, least objective sacrifice
+        // first, tenant id last. All-or-nothing: sheds actuate only
+        // when their combined savings cover the deficit, so no tenant
+        // is pushed down without funding an admission.
+        macro_rules! fund {
+            ($deficit:expr) => {{
+                let deficit: f32 = $deficit;
+                let mut offers: Vec<usize> = (0..n)
+                    .filter(|&j| {
+                        matches!(verdicts[j], Verdict::Hold | Verdict::DeniedBudget)
+                            // never scale down a tenant that is itself
+                            // repairing its SLA, even if a caller hands
+                            // us a repair proposal carrying shed offers
+                            && !proposals[j].is_repair()
+                            && proposals[j]
+                                .sheds
+                                .first()
+                                .map_or(false, |s| s.cost_to < proposals[j].cost_from)
+                    })
+                    .collect();
+                offers.sort_by(|&a, &b| {
+                    let (pa, pb) = (&proposals[a], &proposals[b]);
+                    pa.class
+                        .rank()
+                        .cmp(&pb.class.rank())
+                        .then(pa.sheds[0].gain.total_cmp(&pb.sheds[0].gain))
+                        .then(pa.tenant.cmp(&pb.tenant))
+                });
+                let capacity: f32 = offers
+                    .iter()
+                    .map(|&j| proposals[j].cost_from - proposals[j].sheds[0].cost_to)
+                    .sum();
+                if capacity >= deficit - 1e-6 {
+                    let mut freed = 0.0f32;
+                    for j in offers {
+                        if freed >= deficit - 1e-6 {
+                            break;
+                        }
+                        verdicts[j] = Verdict::AdmittedShed;
+                        freed += proposals[j].cost_from - proposals[j].sheds[0].cost_to;
+                        take!(j, 0, true);
+                    }
+                }
+            }};
+        }
+
+        // walk proposal `i`'s candidate list; admit the first option
+        // that fits, drawing shed funding for the preferred candidate
+        // when allowed. Returns true when something was admitted.
+        macro_rules! try_admit {
+            ($i:expr, $first:expr, $rest:expr, $check_env:expr, $can_fund:expr) => {{
+                let i: usize = $i;
+                let p = &proposals[i];
+                let mut admitted = verdicts[i] != Verdict::DeniedBudget;
+                // (skip proposals a funding pass already decided)
+                for ci in 0..p.candidates.len() {
+                    if admitted {
+                        break;
+                    }
+                    let delta = p.candidates[ci].cost_to - p.cost_from;
+                    if fits(spend, &class_spend, p.class, delta, $check_env) {
+                        verdicts[i] = if ci == 0 { $first } else { $rest };
+                        take!(i, ci, false);
+                        admitted = true;
+                        break;
+                    }
+                    if $can_fund && ci == 0 {
+                        let deficit = (spend + delta) - self.budget;
+                        if deficit > 0.0 {
+                            fund!(deficit);
+                            if fits(spend, &class_spend, p.class, delta, $check_env) {
+                                verdicts[i] = $first;
+                                take!(i, ci, false);
+                                admitted = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+                admitted
+            }};
+        }
+
+        // pass 0: holds + cost-non-increasing best moves
+        for (i, p) in proposals.iter().enumerate() {
+            if !p.is_move() {
+                verdicts[i] = Verdict::Hold;
+            } else if p.cost_delta() <= 0.0 {
+                verdicts[i] = Verdict::AdmittedShrink;
+                take!(i, 0, false);
+            }
+        }
+
+        // pass 1: fairness rescues — candidate walks + shed funding,
+        // envelope-exempt
+        let mut unmet_repair = false;
+        for i in self.rescue_order(proposals, &verdicts) {
+            if !try_admit!(i, Verdict::AdmittedRescue, Verdict::AdmittedRescue, false, true) {
+                verdicts[i] = Verdict::DeniedRescueUnaffordable;
+                unmet_repair = true;
+            }
+        }
+
+        // pass 2: SLA repairs fleet-wide ahead of economic moves,
+        // envelope-exempt, shed-fundable
+        let mut repairs: Vec<usize> = (0..n)
+            .filter(|&i| verdicts[i] == Verdict::DeniedBudget && proposals[i].is_repair())
+            .collect();
+        repairs.sort_by(|&a, &b| Self::knapsack_key(&proposals[a], &proposals[b]));
+        for i in repairs {
+            if !try_admit!(i, Verdict::Admitted, Verdict::AdmittedDegraded, false, true) {
+                unmet_repair = true;
+            }
+        }
+
+        // pass 3: economic knapsack — envelope-checked, frozen while
+        // any SLA repair went unmet this tick
+        if !unmet_repair {
+            let mut rest: Vec<usize> = (0..n)
+                .filter(|&i| verdicts[i] == Verdict::DeniedBudget)
+                .collect();
+            rest.sort_by(|&a, &b| Self::knapsack_key(&proposals[a], &proposals[b]));
+            for i in rest {
+                try_admit!(i, Verdict::Admitted, Verdict::AdmittedDegraded, true, false);
+            }
+        }
+
+        Self::tally(proposals, verdicts, chosen, base_spend, spend)
+    }
+
+    /// Starved SLA-violating proposals, most-starved first.
+    fn rescue_order(&self, proposals: &[Proposal], verdicts: &[Verdict]) -> Vec<usize> {
         let mut rescue: Vec<usize> = (0..proposals.len())
             .filter(|&i| {
                 verdicts[i] == Verdict::DeniedBudget
@@ -134,39 +500,33 @@ impl BudgetArbiter {
                 .then(pb.density().total_cmp(&pa.density()))
                 .then(pa.tenant.cmp(&pb.tenant))
         });
-        for i in rescue {
-            if spend + proposals[i].cost_delta() <= self.budget {
-                verdicts[i] = Verdict::AdmittedRescue;
-                spend += proposals[i].cost_delta();
-            } else {
-                verdicts[i] = Verdict::DeniedRescueUnaffordable;
-            }
-        }
+        rescue
+    }
 
-        // pass 2: greedy knapsack over the remaining cost increases
-        let mut rest: Vec<usize> = (0..proposals.len())
-            .filter(|&i| verdicts[i] == Verdict::DeniedBudget)
-            .collect();
-        rest.sort_by(|&a, &b| {
-            let (pa, pb) = (&proposals[a], &proposals[b]);
-            pb.class
-                .rank()
-                .cmp(&pa.class.rank())
-                .then(pb.density().total_cmp(&pa.density()))
-                .then(pa.cost_delta().total_cmp(&pb.cost_delta()))
-                .then(pa.tenant.cmp(&pb.tenant))
-        });
-        for i in rest {
-            if spend + proposals[i].cost_delta() <= self.budget {
-                verdicts[i] = Verdict::Admitted;
-                spend += proposals[i].cost_delta();
-            }
-        }
+    /// Total knapsack order: class rank desc, density desc, cheaper
+    /// first, tenant id asc.
+    fn knapsack_key(pa: &Proposal, pb: &Proposal) -> std::cmp::Ordering {
+        pb.class
+            .rank()
+            .cmp(&pa.class.rank())
+            .then(pb.density().total_cmp(&pa.density()))
+            .then(pa.cost_delta().total_cmp(&pb.cost_delta()))
+            .then(pa.tenant.cmp(&pb.tenant))
+    }
 
+    fn tally(
+        proposals: &[Proposal],
+        verdicts: Vec<Verdict>,
+        chosen: Vec<Option<usize>>,
+        base_spend: f32,
+        spend: f32,
+    ) -> Admission {
         let admitted_moves = proposals
             .iter()
             .zip(&verdicts)
-            .filter(|(p, v)| v.admitted() && p.is_move())
+            .filter(|(p, v)| {
+                v.admitted() && p.is_move() && !matches!(v, Verdict::Hold | Verdict::AdmittedShed)
+            })
             .count();
         let denied_moves = verdicts.iter().filter(|v| v.denied()).count();
         Admission {
@@ -175,7 +535,13 @@ impl BudgetArbiter {
                 .iter()
                 .filter(|&&v| v == Verdict::DeniedRescueUnaffordable)
                 .count(),
+            degraded_moves: verdicts
+                .iter()
+                .filter(|&&v| v == Verdict::AdmittedDegraded)
+                .count(),
+            shed_moves: verdicts.iter().filter(|&&v| v == Verdict::AdmittedShed).count(),
             verdicts,
+            chosen,
             base_spend,
             projected_spend: spend,
             admitted_moves,
@@ -187,37 +553,38 @@ impl BudgetArbiter {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fleet::tenant::PriorityClass;
+    use crate::fleet::tenant::{Candidate, PriorityClass};
     use crate::plane::Configuration;
+
+    fn candidate(to: Configuration, cost_to: f32, gain: f32) -> Candidate {
+        Candidate { to, cost_to, gain }
+    }
 
     fn proposal(tenant: usize, class: PriorityClass, cost_from: f32, cost_to: f32) -> Proposal {
         Proposal {
             tenant,
             class,
             from: Configuration::new(0, 0),
-            to: Configuration::new(1, 1),
             cost_from,
-            cost_to,
-            gain: 10.0,
             emergency: false,
             sla_violating: false,
             denial_streak: 0,
+            candidates: vec![candidate(Configuration::new(1, 1), cost_to, 10.0)],
+            sheds: Vec::new(),
         }
     }
 
     fn hold(tenant: usize, cost: f32) -> Proposal {
-        let c = Configuration::new(1, 1);
         Proposal {
             tenant,
             class: PriorityClass::Silver,
-            from: c,
-            to: c,
+            from: Configuration::new(1, 1),
             cost_from: cost,
-            cost_to: cost,
-            gain: 0.0,
             emergency: false,
             sla_violating: false,
             denial_streak: 0,
+            candidates: Vec::new(),
+            sheds: Vec::new(),
         }
     }
 
@@ -293,11 +660,28 @@ mod tests {
         let arb = BudgetArbiter::new(1.7, 3);
         let mut emergency = proposal(0, PriorityClass::Silver, 0.5, 1.2);
         emergency.emergency = true;
-        emergency.gain = 0.1;
+        emergency.candidates[0].gain = 0.1;
         let economic = proposal(1, PriorityClass::Silver, 0.5, 1.2);
         let adm = arb.admit(&[economic, emergency]);
         assert_eq!(adm.verdicts[1], Verdict::Admitted);
         assert_eq!(adm.verdicts[0], Verdict::DeniedBudget);
+    }
+
+    #[test]
+    fn repairs_outrank_economic_moves_across_classes() {
+        // a Bronze SLA repair beats a Gold economic move fleet-wide
+        let arb = BudgetArbiter::new(1.7, 3);
+        let mut bronze = proposal(0, PriorityClass::Bronze, 0.5, 1.2);
+        bronze.sla_violating = true;
+        let gold = proposal(1, PriorityClass::Gold, 0.5, 1.2);
+        let adm = arb.admit(&[gold, bronze.clone()]);
+        assert_eq!(adm.verdicts[1], Verdict::Admitted);
+        assert_eq!(adm.verdicts[0], Verdict::DeniedBudget);
+        // ...but the flat baseline (PR-2) admits Gold first
+        let flat = BudgetArbiter::flat(1.7, 3);
+        let adm = flat.admit(&[gold, bronze]);
+        assert_eq!(adm.verdicts[0], Verdict::Admitted);
+        assert_eq!(adm.verdicts[1], Verdict::DeniedBudget);
     }
 
     #[test]
@@ -311,5 +695,109 @@ mod tests {
         assert_eq!(adm.verdicts[0], Verdict::DeniedBudget);
         assert_eq!(adm.verdicts[1], Verdict::AdmittedShrink);
         assert!(adm.projected_spend < adm.base_spend);
+    }
+
+    #[test]
+    fn first_choice_degrades_to_a_cheaper_candidate() {
+        // budget fits the +0.4 alternative but not the +1.0 first choice
+        let arb = BudgetArbiter::new(1.4, 3);
+        let mut p = proposal(0, PriorityClass::Silver, 0.5, 1.5);
+        p.sla_violating = true; // repair walks are exercised hardest
+        p.candidates.push(candidate(Configuration::new(1, 0), 0.9, 4.0));
+        let adm = arb.admit(&[p.clone()]);
+        assert_eq!(adm.verdicts[0], Verdict::AdmittedDegraded);
+        assert_eq!(adm.chosen[0], Some(1));
+        assert!((adm.projected_spend - 0.9).abs() < 1e-6);
+        assert_eq!(adm.degraded_moves, 1);
+        // flat baseline denies outright
+        let adm = BudgetArbiter::flat(1.4, 3).admit(&[p]);
+        assert_eq!(adm.verdicts[0], Verdict::DeniedBudget);
+    }
+
+    #[test]
+    fn sheds_fund_sla_repairs_all_or_nothing() {
+        // the funded admission lands exactly on the budget boundary —
+        // FIT_EPS must absorb the f32 summation noise there
+        let arb = BudgetArbiter::new(2.0, 3);
+        // repairing tenant needs +0.5 but only +0.3 headroom exists;
+        // the holder offers a 0.2 shed — together they fit exactly
+        let mut repair = proposal(0, PriorityClass::Bronze, 0.7, 1.2);
+        repair.sla_violating = true;
+        let mut holder = hold(1, 1.0);
+        holder.sheds.push(candidate(Configuration::new(1, 0), 0.8, 0.5));
+        let adm = arb.admit(&[repair.clone(), holder.clone()]);
+        assert_eq!(adm.verdicts[0], Verdict::Admitted);
+        assert_eq!(adm.verdicts[1], Verdict::AdmittedShed);
+        assert_eq!(adm.chosen[1], Some(0));
+        assert_eq!(adm.shed_moves, 1);
+        assert!(adm.projected_spend <= 2.0 + 1e-6);
+        // a deficit the sheds cannot cover actuates nothing
+        let mut big = repair.clone();
+        big.candidates[0].cost_to = 3.0;
+        big.candidates.truncate(1);
+        let adm = arb.admit(&[big, holder]);
+        assert_eq!(adm.verdicts[0], Verdict::DeniedBudget);
+        assert_eq!(adm.verdicts[1], Verdict::Hold, "no shed without funding an admission");
+    }
+
+    #[test]
+    fn unmet_repair_freezes_economic_upgrades() {
+        let arb = BudgetArbiter::new(2.0, 3);
+        // the repair needs +1.5 (cannot fit), the economic +0.1 (could)
+        let mut repair = proposal(0, PriorityClass::Bronze, 0.9, 2.4);
+        repair.sla_violating = true;
+        let economic = proposal(1, PriorityClass::Gold, 0.9, 1.0);
+        let adm = arb.admit(&[repair, economic.clone()]);
+        assert_eq!(adm.verdicts[0], Verdict::DeniedBudget);
+        assert_eq!(
+            adm.verdicts[1],
+            Verdict::DeniedBudget,
+            "economic upgrades are frozen while a repair starves"
+        );
+        // without the starving repair the same economic move is admitted
+        let adm = arb.admit(&[economic]);
+        assert_eq!(adm.verdicts[0], Verdict::Admitted);
+    }
+
+    #[test]
+    fn envelopes_cap_economic_spending_with_burst_credits() {
+        let env = ClassEnvelopes::new(0.5, 0.3, 0.2);
+        let arb = BudgetArbiter::new(10.0, 3).with_envelopes(env);
+        assert!((env.envelope(PriorityClass::Gold, 10.0) - 5.0).abs() < 1e-6);
+        // gold fully consumes its 5.0 envelope; silver uses 0.5 of 3.0,
+        // so bronze (envelope 2.0) may borrow half of silver's unused
+        // 2.5 => headroom 2.0 + 1.25 - 0.4 spent. A +2.6 economic move
+        // fits the envelope (and the 10.0 budget with 4.1 headroom)...
+        let mut gold = hold(1, 5.0);
+        gold.class = PriorityClass::Gold;
+        let mut silver = hold(2, 0.5);
+        silver.class = PriorityClass::Silver;
+        let fits = proposal(0, PriorityClass::Bronze, 0.4, 3.0);
+        let adm = arb.admit(&[fits, gold.clone(), silver.clone()]);
+        assert_eq!(adm.verdicts[0], Verdict::Admitted);
+        // ...but +3.0 exceeds envelope + burst (3.4 > 3.25) while the
+        // fleet budget alone would have allowed it: envelope-denied
+        let over = proposal(0, PriorityClass::Bronze, 0.4, 3.4);
+        let adm = arb.admit(&[over.clone(), gold.clone(), silver.clone()]);
+        assert_eq!(adm.verdicts[0], Verdict::DeniedBudget);
+        let no_env = BudgetArbiter::new(10.0, 3);
+        let adm = no_env.admit(&[over.clone(), gold.clone(), silver.clone()]);
+        assert_eq!(adm.verdicts[0], Verdict::Admitted, "budget alone admits");
+        // SLA repairs ignore envelopes entirely
+        let mut repair = over;
+        repair.sla_violating = true;
+        let adm = arb.admit(&[repair, gold, silver]);
+        assert_eq!(adm.verdicts[0], Verdict::Admitted);
+    }
+
+    #[test]
+    fn envelope_parse_and_normalize() {
+        let e = ClassEnvelopes::parse("default").unwrap();
+        assert!((e.share(PriorityClass::Gold) - 0.5).abs() < 1e-6);
+        let e = ClassEnvelopes::parse("2:1:1").unwrap();
+        assert!((e.share(PriorityClass::Gold) - 0.5).abs() < 1e-6);
+        assert!((e.share(PriorityClass::Silver) - 0.25).abs() < 1e-6);
+        assert!(ClassEnvelopes::parse("1:0:1").is_none());
+        assert!(ClassEnvelopes::parse("nope").is_none());
     }
 }

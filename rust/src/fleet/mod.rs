@@ -6,12 +6,30 @@
 //! Every existing layer composes N-way behind this API: each
 //! [`Tenant`] owns a Scaling-Plane position, an [`crate::sla::SlaSpec`],
 //! a phase-shifted [`crate::workload::Trace`], and the paper's
-//! DIAGONALSCALE policy (optionally backed by any boxed
-//! [`crate::cluster::Substrate`] — sampling, event-driven, or
-//! analytical engines mix within one fleet); the [`BudgetArbiter`] admits the
-//! per-tick moves via greedy knapsack over marginal cost with priority
-//! classes and a starvation guard; [`report`] aggregates fleet-level
-//! metrics (per-class p95, total cost, denial counts).
+//! DIAGONALSCALE policy — optionally upgraded to forecast-driven
+//! lookahead per tenant ([`FleetSimulator::enable_forecasts`]) and
+//! optionally backed by any boxed [`crate::cluster::Substrate`]
+//! (sampling, event-driven, or analytical engines mix within one
+//! fleet).
+//!
+//! ## Admission: a two-sided negotiation (PR 3)
+//!
+//! Admission is no longer a one-shot filter. Each tick the fleet hands
+//! every tenant a [`BudgetHint`] (remaining fleet headroom plus its
+//! class-envelope headroom) so the policy shapes its proposal to what
+//! is affordable; tenants answer with *ranked candidate lists* (best
+//! move, cheaper feasible alternatives, stepping stones toward an SLA
+//! repair) plus *shed offers* (feasible downgrades a non-violating
+//! tenant volunteers). The [`BudgetArbiter`] walks each list so a
+//! tenant whose first choice does not fit degrades to its cheapest
+//! feasible improvement instead of being denied, actuates sheds to
+//! fund SLA repairs (online budget re-negotiation), freezes economic
+//! upgrades while any repair is starving, and confines discretionary
+//! spending to per-class envelopes with burst credits
+//! ([`ClassEnvelopes`], [`arbiter::BURST_FRACTION`]).
+//! [`BudgetArbiter::flat`] keeps the PR-2 flat-denial baseline; the
+//! tests pin that planning strictly reduces SLA-violation ticks
+//! against it on the contended 6-tenant scenario at the same budget.
 //!
 //! Tick semantics are serve-then-move, exactly like
 //! [`crate::simulator::Simulator`]: the configuration carried into tick
@@ -24,19 +42,24 @@ pub mod arbiter;
 pub mod report;
 pub mod tenant;
 
-pub use arbiter::{Admission, BudgetArbiter, Verdict};
+pub use arbiter::{Admission, BudgetArbiter, ClassEnvelopes, Verdict};
 pub use report::{ClassReport, FleetReport, TenantReport};
-pub use tenant::{PriorityClass, Proposal, Tenant, TenantSpec};
+pub use tenant::{Candidate, ForecastKind, PriorityClass, Proposal, Tenant, TenantSpec};
 
 use std::sync::Arc;
 
 use crate::cluster::{ClusterParams, SubstrateKind};
 use crate::config::ModelConfig;
-use crate::simulator::build_substrate;
+use crate::policy::BudgetHint;
 use crate::surfaces::SurfaceModel;
 
-/// Tolerance for float drift when comparing fleet spend to the budget
-/// (spend is re-summed per tick; the arbiter sums base + deltas).
+/// Tolerance for float drift when comparing fleet spend to the budget.
+/// Spend is re-summed from tenant configurations every tick while the
+/// arbiter tracks base + admitted deltas; the two walks accumulate
+/// different f32 rounding, so exact comparison would flag phantom
+/// overruns. 1e-3 is ~4 orders below the cheapest tier step (0.08/h),
+/// so no real overspend can hide inside it. Admission itself compares
+/// exactly (no epsilon): the arbiter never *plans* past the budget.
 pub const BUDGET_EPS: f32 = 1e-3;
 
 /// One tick's fleet-level outcome.
@@ -52,6 +75,10 @@ pub struct FleetTick {
     pub denied_moves: usize,
     pub rescues: usize,
     pub rescue_denials: usize,
+    /// Moves admitted as a lower-ranked candidate (degradations).
+    pub degraded_moves: usize,
+    /// Shed offers actuated to fund SLA repairs.
+    pub shed_moves: usize,
 }
 
 /// A complete fleet run: the per-tick timeline plus the final report.
@@ -71,6 +98,11 @@ impl FleetResult {
     pub fn within_budget(&self, budget: f32) -> bool {
         self.peak_spend() <= budget + BUDGET_EPS
     }
+
+    /// Total SLA-violation ticks across all tenants.
+    pub fn total_violations(&self) -> usize {
+        self.report.tenants.iter().map(|t| t.summary.violations).sum()
+    }
 }
 
 /// Drives N tenants and the budget arbiter over their traces.
@@ -81,23 +113,50 @@ pub struct FleetSimulator {
 }
 
 impl FleetSimulator {
-    /// Build a fleet. All tenants share one [`SurfaceModel`] (the plane
-    /// geometry and surface constants are fleet-wide), so construction
-    /// cost is independent of tenant count.
+    /// Build a fleet with the planning arbiter (candidate walks, shed
+    /// re-negotiation, budget hints; envelopes off until
+    /// [`Self::set_envelopes`]). All tenants share one [`SurfaceModel`]
+    /// (the plane geometry and surface constants are fleet-wide), so
+    /// construction cost is independent of tenant count.
     pub fn new(
         cfg: &ModelConfig,
         specs: Vec<TenantSpec>,
         budget: f32,
         fairness_k: usize,
     ) -> Self {
+        Self::with_arbiter(cfg, specs, BudgetArbiter::new(budget, fairness_k))
+    }
+
+    /// Build a fleet around an explicit arbiter — the PR-2 flat-denial
+    /// baseline ([`BudgetArbiter::flat`]), or a planning arbiter with
+    /// envelopes pre-applied.
+    pub fn with_arbiter(cfg: &ModelConfig, specs: Vec<TenantSpec>, arbiter: BudgetArbiter) -> Self {
         assert!(!specs.is_empty(), "fleet needs at least one tenant");
         let model = Arc::new(SurfaceModel::from_config(cfg));
-        let tenants = specs
+        let tenants: Vec<Tenant> = specs
             .into_iter()
             .enumerate()
-            .map(|(i, s)| Tenant::new(i, s, Arc::clone(&model), cfg))
+            .map(|(i, s)| {
+                let mut t = Tenant::new(i, s, Arc::clone(&model), cfg);
+                t.set_escalation(arbiter.fairness_k);
+                t
+            })
             .collect();
-        Self { tenants, arbiter: BudgetArbiter::new(budget, fairness_k), step: 0 }
+        Self { tenants, arbiter, step: 0 }
+    }
+
+    /// Apply (or clear) per-class budget envelopes with burst credits.
+    pub fn set_envelopes(&mut self, envelopes: Option<ClassEnvelopes>) {
+        self.arbiter.envelopes = envelopes;
+    }
+
+    /// Upgrade every tenant to forecast-driven lookahead proposals
+    /// (`depth` >= 1; seasonal predictors use each tenant's own trace
+    /// length as their period).
+    pub fn enable_forecasts(&mut self, kind: ForecastKind, depth: usize) {
+        for t in &mut self.tenants {
+            t.enable_forecast(kind, depth);
+        }
     }
 
     /// Back every tenant with its own sampling-engine cluster (seeded
@@ -108,9 +167,10 @@ impl FleetSimulator {
 
     /// Back every tenant with a substrate of the given kind (seeded per
     /// tenant). [`SubstrateKind::Des`] is the bench-speed choice for
-    /// large fleets. Analytical tenants reuse the fleet-shared surface
-    /// model and their own SLA bound; all kinds emit latencies on the
-    /// substrate scale, so fleet reports aggregate one unit.
+    /// large fleets. Every kind audits against the owning tenant's own
+    /// SLA bound (the shared [`ClusterParams::sla_latency`] is rescaled
+    /// per tenant) and emits latencies on the substrate scale, so fleet
+    /// reports aggregate one unit.
     pub fn attach_substrates(
         &mut self,
         cfg: &ModelConfig,
@@ -132,13 +192,13 @@ impl FleetSimulator {
     ) {
         for t in &mut self.tenants {
             match choose(t.id) {
-                SubstrateKind::Analytical => t.attach_analytical(params),
-                kind => t.attach_substrate(build_substrate(
-                    kind,
-                    cfg,
-                    params,
-                    seed.wrapping_add(t.id as u64),
-                )),
+                SubstrateKind::Analytical => t.attach_analytical(cfg, params),
+                SubstrateKind::Sampling => {
+                    t.attach_cluster(cfg, params, seed.wrapping_add(t.id as u64))
+                }
+                SubstrateKind::Des => {
+                    t.attach_event_cluster(cfg, params, seed.wrapping_add(t.id as u64))
+                }
             }
         }
     }
@@ -158,6 +218,12 @@ impl FleetSimulator {
         &self.tenants
     }
 
+    /// Mutable tenant access for test orchestration (custom substrates,
+    /// per-tenant planner tweaks).
+    pub fn tenants_mut(&mut self) -> &mut [Tenant] {
+        &mut self.tenants
+    }
+
     /// Current fleet spend (Σ hourly cost of serving configurations).
     pub fn spend(&self) -> f32 {
         self.tenants.iter().map(Tenant::cost).sum()
@@ -168,8 +234,40 @@ impl FleetSimulator {
         self.tenants.iter().map(|t| t.trace().len()).max().unwrap_or(0)
     }
 
-    /// One fleet tick: every tenant serves, proposes; the arbiter
-    /// admits under the budget; admitted moves actuate for next tick.
+    /// Per-tenant budget hints: remaining fleet headroom plus each
+    /// tenant's class-envelope headroom (burst credits included).
+    /// Fleet and class spend are summed once, so the whole batch is
+    /// O(N). All `None` under the flat (PR-2) arbiter — its tenants
+    /// plan budget-blind.
+    fn hints(&self) -> Vec<Option<BudgetHint>> {
+        if !self.arbiter.planning {
+            return vec![None; self.tenants.len()];
+        }
+        let spend = self.spend();
+        let fleet_headroom = (self.arbiter.budget - spend).max(0.0);
+        let mut class_spend = [0.0f32; 3];
+        if self.arbiter.envelopes.is_some() {
+            for t in &self.tenants {
+                class_spend[t.class().rank() as usize] += t.cost();
+            }
+        }
+        self.tenants
+            .iter()
+            .map(|tenant| {
+                let class_headroom = match &self.arbiter.envelopes {
+                    None => fleet_headroom,
+                    Some(env) => env
+                        .class_headroom(tenant.class(), &class_spend, self.arbiter.budget)
+                        .max(0.0),
+                };
+                Some(BudgetHint::new(fleet_headroom, class_headroom))
+            })
+            .collect()
+    }
+
+    /// One fleet tick: every tenant serves, proposes (budget-hinted);
+    /// the arbiter admits under the budget (walking candidate lists,
+    /// re-negotiating via sheds); admitted moves actuate for next tick.
     pub fn tick(&mut self) -> FleetTick {
         let t = self.step;
         let mut spend = 0.0f32;
@@ -177,18 +275,33 @@ impl FleetSimulator {
             spend += tn.serve(t).cost;
         }
 
-        let proposals: Vec<Proposal> =
-            self.tenants.iter_mut().map(|tn| tn.propose(t)).collect();
+        let hints = self.hints();
+        let proposals: Vec<Proposal> = self
+            .tenants
+            .iter_mut()
+            .zip(hints)
+            .map(|(tn, hint)| tn.propose(t, hint))
+            .collect();
         let adm = self.arbiter.admit(&proposals);
 
-        for (p, v) in proposals.iter().zip(&adm.verdicts) {
+        for (i, (p, v)) in proposals.iter().zip(&adm.verdicts).enumerate() {
             let tn = &mut self.tenants[p.tenant];
             match v {
                 Verdict::Hold => tn.note_no_move(),
-                Verdict::AdmittedShrink | Verdict::Admitted => tn.apply(p.to),
+                Verdict::AdmittedShrink | Verdict::Admitted => {
+                    tn.apply(p.candidates[adm.chosen[i].expect("admitted move has a choice")].to)
+                }
+                Verdict::AdmittedDegraded => {
+                    tn.degraded_total += 1;
+                    tn.apply(p.candidates[adm.chosen[i].expect("degraded move has a choice")].to);
+                }
                 Verdict::AdmittedRescue => {
                     tn.rescued_total += 1;
-                    tn.apply(p.to);
+                    tn.apply(p.candidates[adm.chosen[i].expect("rescue has a choice")].to);
+                }
+                Verdict::AdmittedShed => {
+                    tn.shed_total += 1;
+                    tn.apply(p.sheds[adm.chosen[i].expect("shed has a choice")].to);
                 }
                 Verdict::DeniedBudget => tn.note_denied(),
                 Verdict::DeniedRescueUnaffordable => tn.note_rescue_unaffordable(),
@@ -204,6 +317,8 @@ impl FleetSimulator {
             denied_moves: adm.denied_moves,
             rescues: adm.rescues,
             rescue_denials: adm.rescue_denials,
+            degraded_moves: adm.degraded_moves,
+            shed_moves: adm.shed_moves,
         }
     }
 
@@ -245,6 +360,7 @@ mod tests {
         let mut fleet = FleetSimulator::new(&cfg, specs(&cfg, 4), 1.0e6, 3);
         let res = fleet.run(50);
         assert!(res.ticks.iter().all(|t| t.denied_moves == 0));
+        assert!(res.ticks.iter().all(|t| t.shed_moves == 0), "no re-negotiation without pressure");
         assert!(res.within_budget(1.0e6));
     }
 
@@ -294,6 +410,48 @@ mod tests {
         assert_eq!(a.ticks, b.ticks);
     }
 
+    /// The PR-3 acceptance pin: on the contended 6-tenant scenario at
+    /// the same 8.0/h budget, budget-aware planning (candidate lists +
+    /// shed re-negotiation + envelopes + per-tenant forecasting) must
+    /// yield strictly fewer total SLA-violation ticks than the PR-2
+    /// flat-denial arbiter, stay within budget on every tick, and stay
+    /// deterministic. (A python mirror of the analytical model puts
+    /// planning at ~196 violation ticks vs ~244 for flat — the strict
+    /// inequality has a wide margin.)
+    #[test]
+    fn planning_beats_flat_denial_on_violations() {
+        let cfg = ModelConfig::default_paper();
+        let budget = 8.0f32;
+
+        let mut flat =
+            FleetSimulator::with_arbiter(&cfg, specs(&cfg, 6), BudgetArbiter::flat(budget, 3));
+        let flat_res = flat.run(100);
+
+        let build_planning = || {
+            let arb = BudgetArbiter::new(budget, 3)
+                .with_envelopes(ClassEnvelopes::default_split());
+            let mut fleet = FleetSimulator::with_arbiter(&cfg, specs(&cfg, 6), arb);
+            fleet.enable_forecasts(ForecastKind::Seasonal, 3);
+            fleet
+        };
+        let plan_res = build_planning().run(100);
+
+        assert!(flat_res.within_budget(budget));
+        assert!(plan_res.within_budget(budget), "peak {}", plan_res.peak_spend());
+        assert!(
+            plan_res.total_violations() < flat_res.total_violations(),
+            "planning must strictly beat flat denial: {} vs {}",
+            plan_res.total_violations(),
+            flat_res.total_violations()
+        );
+        // re-negotiation actually engaged (the win is not incidental)
+        let sheds: usize = plan_res.ticks.iter().map(|t| t.shed_moves).sum();
+        assert!(sheds > 0, "planning run never re-negotiated");
+        // planning runs stay deterministic
+        let again = build_planning().run(100);
+        assert_eq!(plan_res.ticks, again.ticks);
+    }
+
     #[test]
     fn cluster_backed_fleet_runs() {
         let cfg = ModelConfig::default_paper();
@@ -327,5 +485,17 @@ mod tests {
         let res = fleet.run(20);
         assert_eq!(res.ticks.len(), 20);
         assert!(res.report.tenants.iter().all(|t| t.summary.avg_throughput > 0.0));
+    }
+
+    #[test]
+    fn forecasting_fleet_runs_and_stays_within_budget() {
+        let cfg = ModelConfig::default_paper();
+        let budget = 8.0f32;
+        for kind in [ForecastKind::Holt, ForecastKind::Seasonal] {
+            let mut fleet = FleetSimulator::new(&cfg, specs(&cfg, 6), budget, 3);
+            fleet.enable_forecasts(kind, 3);
+            let res = fleet.run(60);
+            assert!(res.within_budget(budget), "{kind:?} peak {}", res.peak_spend());
+        }
     }
 }

@@ -34,6 +34,10 @@ pub struct TenantReport {
     pub sla_l_max: f32,
     pub denied: usize,
     pub rescues: usize,
+    /// Moves admitted as a lower-ranked candidate (degradations).
+    pub degraded: usize,
+    /// Shed offers actuated to fund other tenants' SLA repairs.
+    pub sheds: usize,
     pub max_denial_streak: usize,
     /// Hourly cost of the final configuration.
     pub final_cost: f32,
@@ -99,6 +103,8 @@ pub fn fleet_report(tenants: &[Tenant], ticks: &[FleetTick], budget: f32) -> Fle
                 sla_l_max: t.sla().l_max,
                 denied: t.denied_total,
                 rescues: t.rescued_total,
+                degraded: t.degraded_total,
+                sheds: t.shed_total,
                 max_denial_streak: t.max_denial_streak,
                 final_cost: t.cost(),
             }
@@ -179,13 +185,23 @@ pub fn table(report: &FleetReport) -> String {
     }
     let _ = writeln!(
         out,
-        "\n{:<12} {:<8} {:>10} {:>12} {:>7} {:>9} {:>8} {:>8} {:>10}",
-        "tenant", "class", "p95 lat", "p95 raw lat", "sla", "avg cost", "denied", "rescues", "max streak"
+        "\n{:<12} {:<8} {:>10} {:>12} {:>7} {:>9} {:>8} {:>8} {:>9} {:>6} {:>10}",
+        "tenant",
+        "class",
+        "p95 lat",
+        "p95 raw lat",
+        "sla",
+        "avg cost",
+        "denied",
+        "rescues",
+        "degraded",
+        "sheds",
+        "max streak"
     );
     for t in &report.tenants {
         let _ = writeln!(
             out,
-            "{:<12} {:<8} {:>10.3} {:>12.3} {:>7.2} {:>9.3} {:>8} {:>8} {:>10}",
+            "{:<12} {:<8} {:>10.3} {:>12.3} {:>7.2} {:>9.3} {:>8} {:>8} {:>9} {:>6} {:>10}",
             t.name,
             t.class.label(),
             t.p95_latency,
@@ -194,6 +210,8 @@ pub fn table(report: &FleetReport) -> String {
             t.summary.avg_cost,
             t.denied,
             t.rescues,
+            t.degraded,
+            t.sheds,
             t.max_denial_streak
         );
     }
@@ -203,12 +221,12 @@ pub fn table(report: &FleetReport) -> String {
 /// Per-tenant CSV (machine-readable twin of [`table`]).
 pub fn csv(report: &FleetReport) -> String {
     let mut out = String::from(
-        "tenant,class,p95_latency,p95_latency_raw,sla_l_max,avg_cost,total_cost,violations,denied,rescues,max_denial_streak\n",
+        "tenant,class,p95_latency,p95_latency_raw,sla_l_max,avg_cost,total_cost,violations,denied,rescues,degraded,sheds,max_denial_streak\n",
     );
     for t in &report.tenants {
         let _ = writeln!(
             out,
-            "{},{},{:.4},{:.4},{:.2},{:.4},{:.2},{},{},{},{}",
+            "{},{},{:.4},{:.4},{:.2},{:.4},{:.2},{},{},{},{},{},{}",
             t.name,
             t.class.label(),
             t.p95_latency,
@@ -219,20 +237,31 @@ pub fn csv(report: &FleetReport) -> String {
             t.summary.violations,
             t.denied,
             t.rescues,
+            t.degraded,
+            t.sheds,
             t.max_denial_streak
         );
     }
     out
 }
 
-/// Spend timeline CSV (`step,spend,projected,admitted,denied,rescues`).
+/// Spend timeline CSV
+/// (`step,spend,projected,admitted,denied,rescues,degraded,sheds`).
 pub fn ticks_csv(ticks: &[FleetTick]) -> String {
-    let mut out = String::from("step,spend,projected_spend,admitted,denied,rescues\n");
+    let mut out =
+        String::from("step,spend,projected_spend,admitted,denied,rescues,degraded,sheds\n");
     for t in ticks {
         let _ = writeln!(
             out,
-            "{},{:.4},{:.4},{},{},{}",
-            t.step, t.spend, t.projected_spend, t.admitted_moves, t.denied_moves, t.rescues
+            "{},{:.4},{:.4},{},{},{},{},{}",
+            t.step,
+            t.spend,
+            t.projected_spend,
+            t.admitted_moves,
+            t.denied_moves,
+            t.rescues,
+            t.degraded_moves,
+            t.shed_moves
         );
     }
     out

@@ -3,6 +3,17 @@
 //! policy, plus the admission bookkeeping the budget arbiter needs
 //! (per-tick proposals, denial streaks, violation state).
 //!
+//! Since PR 3 a proposal is a *ranked candidate list*, not a single
+//! move: the policy's best move first (budget-shaped via the
+//! [`BudgetHint`] in its [`PolicyContext`]), then cheaper feasible
+//! alternatives, then — for SLA-repair proposals — a *stepping stone*
+//! that strictly reduces Chebyshev distance to the cheapest
+//! audit-clearing configuration (monotone, so multi-tick walks toward
+//! a repair target cannot cycle). Non-repairing tenants additionally
+//! publish *shed offers*: feasible cost-decreasing moves the arbiter
+//! may actuate to fund another tenant's SLA repair (online budget
+//! re-negotiation).
+//!
 //! Tenants share one [`SurfaceModel`] (the plane geometry and surface
 //! constants are fleet-wide), so adding a tenant costs state, not model
 //! construction — the fleet bench leans on this.
@@ -10,15 +21,20 @@
 //! A tenant can optionally be backed by any boxed
 //! [`Substrate`] — the sampling [`ClusterSim`], the event-driven
 //! [`EventSim`], or an analytical wrapper — and substrates of
-//! different kinds mix freely within one fleet run.
+//! different kinds mix freely within one fleet run. Physical
+//! substrates audit against *this tenant's* SLA: the shared
+//! [`ClusterParams::sla_latency`] is rescaled by the ratio of the
+//! tenant's `l_max` to the fleet config's default, so heterogeneous
+//! per-tenant SLAs survive the analytical-to-substrate unit mapping.
 
 use std::sync::Arc;
 
 use crate::cluster::{ClusterParams, ClusterSim, EventSim, Substrate};
-use crate::config::ModelConfig;
+use crate::config::{ModelConfig, MoveFlags};
+use crate::forecast::{Forecaster, Holt, SeasonalNaive};
 use crate::metrics::{Recorder, StepRecord, Summary};
 use crate::plane::Configuration;
-use crate::policy::{DiagonalScale, Policy, PolicyContext};
+use crate::policy::{BudgetHint, DiagonalScale, ForecastLookahead, Policy, PolicyContext};
 use crate::sla::{SlaSpec, Violation};
 use crate::surfaces::SurfaceModel;
 use crate::workload::{Trace, WorkloadPoint};
@@ -54,6 +70,42 @@ impl PriorityClass {
             PriorityClass::Bronze => 0,
         }
     }
+
+    /// Inverse of [`Self::rank`] (ranks above Gold clamp to Gold).
+    pub fn from_rank(rank: u8) -> Self {
+        match rank {
+            0 => PriorityClass::Bronze,
+            1 => PriorityClass::Silver,
+            _ => PriorityClass::Gold,
+        }
+    }
+}
+
+/// Per-tenant demand predictor choice for forecast-driven proposals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ForecastKind {
+    /// Holt double exponential smoothing (tracks ramps).
+    Holt,
+    /// Seasonal naive with the tenant's trace length as the period
+    /// (exact for the cyclically repeated fleet traces after one cycle).
+    Seasonal,
+}
+
+impl ForecastKind {
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "holt" => Some(ForecastKind::Holt),
+            "seasonal" => Some(ForecastKind::Seasonal),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ForecastKind::Holt => "holt",
+            ForecastKind::Seasonal => "seasonal",
+        }
+    }
 }
 
 /// Static description of one tenant.
@@ -84,19 +136,37 @@ impl TenantSpec {
     }
 }
 
-/// One tenant's proposed move for a tick, as the arbiter sees it.
+/// One ranked option within a tenant's proposal: a target configuration
+/// with its hourly cost and a non-negative weight whose meaning depends
+/// on the list it sits in — for move candidates it is the objective
+/// *improvement* claimed over holding (zero for fallbacks and stepping
+/// stones); for shed offers it is the objective *sacrifice* the
+/// downgrade costs its owner (the arbiter drains least-sacrifice
+/// offers first).
 #[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub to: Configuration,
+    /// Hourly cost of the target configuration.
+    pub cost_to: f32,
+    /// Objective improvement (moves) or sacrifice (sheds); >= 0.
+    pub gain: f32,
+}
+
+/// Cap on ranked alternatives behind the best candidate — proposals
+/// stay short so the arbiter walk is O(1) per tenant.
+pub const MAX_ALTERNATIVES: usize = 3;
+
+/// One tenant's proposal for a tick, as the arbiter sees it: a ranked
+/// candidate list (best first) plus — for tenants not repairing their
+/// own SLA — shed offers the arbiter may actuate to fund someone
+/// else's repair.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Proposal {
     pub tenant: usize,
     pub class: PriorityClass,
     pub from: Configuration,
-    pub to: Configuration,
     /// Hourly cost of the configuration currently serving.
     pub cost_from: f32,
-    /// Hourly cost of the proposed configuration.
-    pub cost_to: f32,
-    /// Objective improvement the move claims (positive = better).
-    pub gain: f32,
     /// SLA emergency: the Algorithm-1 fallback fired, or the current
     /// configuration is planner-infeasible for this tick's demand.
     pub emergency: bool,
@@ -105,35 +175,62 @@ pub struct Proposal {
     /// Consecutive ticks this tenant has been denied while
     /// SLA-violating (the fairness guard's counter).
     pub denial_streak: usize,
+    /// Ranked moves, best first; empty means the tenant holds.
+    pub candidates: Vec<Candidate>,
+    /// Feasible cost-decreasing fallbacks this (non-repairing) tenant
+    /// offers as burst funding for other tenants' SLA repairs, least
+    /// objective sacrifice first (each `gain` is that sacrifice). The
+    /// arbiter draws at most the first offer per tick — configurations
+    /// move one neighbor step per tick, and the deeper offers document
+    /// the next rungs a multi-tick drain would take.
+    pub sheds: Vec<Candidate>,
 }
 
 impl Proposal {
-    /// Marginal fleet cost of admitting this move.
-    pub fn cost_delta(&self) -> f32 {
-        self.cost_to - self.cost_from
+    /// The preferred move, if the proposal is not a hold.
+    pub fn best(&self) -> Option<&Candidate> {
+        self.candidates.first()
     }
 
-    /// Whether the proposal changes the configuration at all.
+    /// Whether the proposal requests any configuration change.
     pub fn is_move(&self) -> bool {
-        self.to != self.from
+        !self.candidates.is_empty()
     }
 
-    /// Greedy-knapsack value density: claimed gain per added dollar.
-    /// SLA emergencies outrank any economic move.
+    /// Marginal fleet cost of admitting the preferred move (0 for
+    /// holds).
+    pub fn cost_delta(&self) -> f32 {
+        self.best().map_or(0.0, |c| c.cost_to - self.cost_from)
+    }
+
+    /// Whether this proposal repairs the tenant's own SLA (emergency or
+    /// currently violating) — repair moves outrank economic moves
+    /// fleet-wide and may draw shed funding.
+    pub fn is_repair(&self) -> bool {
+        self.emergency || self.sla_violating
+    }
+
+    /// Greedy-knapsack value density of the preferred move: claimed
+    /// gain per added dollar. SLA emergencies outrank any economic
+    /// move.
     pub fn density(&self) -> f32 {
         if self.emergency {
             return INFEASIBLE;
         }
-        self.gain / self.cost_delta().max(1e-6)
+        self.best().map_or(0.0, |c| c.gain / (c.cost_to - self.cost_from).max(1e-6))
     }
 }
+
+/// The planner driving a tenant's proposals: reactive DIAGONALSCALE by
+/// default, or forecast-driven lookahead over a boxed predictor.
+type TenantPlanner = Box<dyn Policy + Send>;
 
 /// Runtime state of one tenant cluster.
 pub struct Tenant {
     pub id: usize,
     spec: TenantSpec,
     model: Arc<SurfaceModel>,
-    policy: DiagonalScale,
+    planner: TenantPlanner,
     current: Configuration,
     recorder: Recorder,
     recording: bool,
@@ -146,6 +243,17 @@ pub struct Tenant {
     /// Rescue attempts the arbiter could not afford (the move did not
     /// fit the budget left after cost cuts and more-starved rescues).
     pub rescue_unaffordable_total: usize,
+    /// Moves admitted as a lower-ranked candidate (first choice did not
+    /// fit; the tenant degraded instead of being denied).
+    pub degraded_total: usize,
+    /// Shed offers the arbiter actuated to fund other tenants' repairs.
+    pub shed_total: usize,
+    /// Consecutive ticks the tenant held still while SLA-violating
+    /// (substrate-measured violations the analytical planner cannot
+    /// see); at `escalate_k` the tenant escalates to an emergency
+    /// scale-up so it cannot starve silently.
+    violating_holds: usize,
+    escalate_k: usize,
     reb_h: f32,
     reb_v: f32,
     plan_queue: bool,
@@ -162,7 +270,7 @@ impl Tenant {
             id,
             spec,
             model,
-            policy: DiagonalScale::diagonal(),
+            planner: Box::new(DiagonalScale::diagonal()),
             current,
             recorder: Recorder::new(),
             recording: true,
@@ -172,11 +280,59 @@ impl Tenant {
             denied_total: 0,
             rescued_total: 0,
             rescue_unaffordable_total: 0,
+            degraded_total: 0,
+            shed_total: 0,
+            violating_holds: 0,
+            escalate_k: 3,
             reb_h: cfg.policy.reb_h,
             reb_v: cfg.policy.reb_v,
             plan_queue: cfg.policy.plan_queue,
             substrate: None,
         }
+    }
+
+    /// Replace the reactive planner with forecast-driven lookahead
+    /// (`depth` >= 1; the paper suggests 2-3). Seasonal predictors use
+    /// the tenant's trace length as their period — exact once the
+    /// cyclic trace has repeated.
+    pub fn enable_forecast(&mut self, kind: ForecastKind, depth: usize) {
+        let predictor: Box<dyn Forecaster + Send> = match kind {
+            ForecastKind::Holt => Box::new(Holt::default_tuned()),
+            ForecastKind::Seasonal => Box::new(SeasonalNaive::new(self.spec.trace.len())),
+        };
+        let write_ratio = {
+            let w = self.spec.trace.points[0];
+            if w.lambda_req > 0.0 {
+                w.lambda_w / w.lambda_req
+            } else {
+                0.0
+            }
+        };
+        self.planner = Box::new(ForecastLookahead::new(
+            MoveFlags::DIAGONAL,
+            depth,
+            predictor,
+            write_ratio,
+        ));
+    }
+
+    /// Ticks a violating-but-holding tenant waits before escalating to
+    /// an emergency scale-up (the fleet wires its fairness K here).
+    pub fn set_escalation(&mut self, k: usize) {
+        assert!(k > 0, "escalation threshold must be at least 1");
+        self.escalate_k = k;
+    }
+
+    /// The shared [`ClusterParams`] rescaled to this tenant's SLA: the
+    /// fleet-wide `sla_latency` bound corresponds to the config-default
+    /// `l_max`, so a tenant whose contract is k times looser is audited
+    /// (and timed out) against a k-times-looser substrate bound. This
+    /// keeps substrate latencies on one fleet-wide unit while each
+    /// tenant is audited against its *own* contract.
+    pub fn tenant_params(&self, cfg: &ModelConfig, params: ClusterParams) -> ClusterParams {
+        let mut p = params;
+        p.sla_latency = params.sla_latency * (self.spec.sla.l_max / cfg.sla.l_max) as f64;
+        p
     }
 
     /// Back this tenant with a boxed substrate (any engine); metrics
@@ -191,27 +347,37 @@ impl Tenant {
 
     /// Back this tenant with its own sampling-engine cluster
     /// (per-tenant [`ClusterSim`], mirroring the single-cluster
-    /// coordinator).
+    /// coordinator), audited against *this tenant's* SLA bound.
     pub fn attach_cluster(&mut self, cfg: &ModelConfig, params: ClusterParams, seed: u64) {
+        let params = self.tenant_params(cfg, params);
         self.attach_substrate(Box::new(ClusterSim::new(cfg, params, seed)));
     }
 
     /// Back this tenant with its own event-driven cluster
-    /// ([`EventSim`] — the bench-speed engine for large fleets).
+    /// ([`EventSim`] — the bench-speed engine for large fleets),
+    /// audited against *this tenant's* SLA bound.
     pub fn attach_event_cluster(&mut self, cfg: &ModelConfig, params: ClusterParams, seed: u64) {
+        let params = self.tenant_params(cfg, params);
         self.attach_substrate(Box::new(EventSim::new(cfg, params, seed)));
     }
 
     /// Back this tenant with an analytical substrate built from the
     /// fleet-shared surface model and audited against *this tenant's*
     /// SLA latency bound.
-    pub fn attach_analytical(&mut self, params: ClusterParams) {
+    pub fn attach_analytical(&mut self, cfg: &ModelConfig, params: ClusterParams) {
+        let params = self.tenant_params(cfg, params);
         self.attach_substrate(Box::new(crate::simulator::AnalyticalSubstrate::from_model(
-            (*self.model).clone(),
+            Arc::clone(&self.model),
             params,
             self.current,
             self.spec.sla.l_max,
         )));
+    }
+
+    /// The substrate-scale SLA bound this tenant is audited against, if
+    /// a substrate backs it.
+    pub fn substrate_sla(&self) -> Option<f64> {
+        self.substrate.as_ref().map(|s| s.params().sla_latency)
     }
 
     pub fn name(&self) -> &str {
@@ -299,6 +465,8 @@ impl Tenant {
                     cost: point.cost,
                     objective: self.model.effective_objective(&self.current, w.lambda_req),
                     violation: Violation {
+                        // each substrate carries this tenant's rescaled
+                        // SLA bound (see `tenant_params`)
                         latency: m.p99_latency > sim.params().sla_latency,
                         throughput: m.completed < m.offered * 0.999,
                     },
@@ -312,42 +480,182 @@ impl Tenant {
         rec
     }
 
-    /// The tenant's best local move for tick `t`, packaged for the
-    /// arbiter. The policy is the paper's DIAGONALSCALE; the claimed
-    /// gain is the score improvement over holding still.
-    pub fn propose(&mut self, t: usize) -> Proposal {
+    fn candidate(&self, to: Configuration, gain: f32) -> Candidate {
+        Candidate { to, cost_to: self.model.cost(&to), gain }
+    }
+
+    /// The cheapest configuration that clears this tenant's *audit* for
+    /// demand `lambda` (raw latency within `l_max`, throughput at least
+    /// the raw requirement), if one exists anywhere on the plane.
+    fn cheapest_clearing(&self, lambda: f32) -> Option<Configuration> {
+        let mut best: Option<Configuration> = None;
+        for c in self.model.plane().iter() {
+            if self.model.latency(&c) <= self.spec.sla.l_max
+                && self.model.throughput(&c) >= lambda
+            {
+                if best.map_or(true, |b| self.model.cost(&c) < self.model.cost(&b)) {
+                    best = Some(c);
+                }
+            }
+        }
+        best
+    }
+
+    /// The tenant's ranked proposal for tick `t`, shaped to the fleet
+    /// budget hint. The preferred move comes from the configured
+    /// planner (reactive DIAGONALSCALE or forecast lookahead); cheaper
+    /// feasible alternatives and — for SLA repairs — a stepping stone
+    /// toward the cheapest clearing configuration follow, so the
+    /// arbiter can degrade the tenant instead of denying it outright.
+    pub fn propose(&mut self, t: usize, hint: Option<BudgetHint>) -> Proposal {
         let w = self.workload_at(t);
-        // field-disjoint borrows: the context reads model/spec while the
-        // policy below needs `&mut self.policy`
+        // the context borrows a cheap Arc clone + copied SLA so `self`
+        // stays free for the bookkeeping below
+        let model = Arc::clone(&self.model);
+        let sla = self.spec.sla;
         let ctx = PolicyContext {
-            model: self.model.as_ref(),
-            sla: &self.spec.sla,
+            model: model.as_ref(),
+            sla: &sla,
             reb_h: self.reb_h,
             reb_v: self.reb_v,
             plan_queue: self.plan_queue,
             future: &[],
+            budget: hint,
         };
-        let current_feasible =
-            self.model
-                .feasible(&self.current, w.lambda_req, &self.spec.sla, self.plan_queue);
+        let current = self.current;
+        let current_feasible = model.feasible(&current, w.lambda_req, &sla, self.plan_queue);
         let current_score = if self.plan_queue {
-            self.model.effective_objective(&self.current, w.lambda_req)
+            model.effective_objective(&current, w.lambda_req)
         } else {
-            self.model.evaluate(&self.current, w.lambda_req).objective
+            model.evaluate(&current, w.lambda_req).objective
         };
-        let d = self.policy.decide(self.current, w, &ctx);
-        let gain = if d.fallback { 0.0 } else { current_score - d.score };
+        let d = self.planner.decide(current, w, &ctx);
+        let mut emergency = d.fallback || !current_feasible;
+        let repair = emergency || self.last_violation;
+        let raw_score =
+            |cand: &Configuration| DiagonalScale::score_candidate(&current, cand, w, &ctx);
+        // the neighborhood is scored once (row-major order preserved);
+        // alternatives, shed offers, and the stepping stone below all
+        // slice this instead of re-evaluating the surfaces
+        let scored: Vec<(Configuration, f32)> = model
+            .plane()
+            .neighbors(&current, true, true)
+            .into_iter()
+            .map(|c| {
+                let s = raw_score(&c);
+                (c, s)
+            })
+            .collect();
+
+        let mut candidates: Vec<Candidate> = Vec::new();
+        if d.next != current {
+            let raw = raw_score(&d.next);
+            let gain =
+                if raw >= INFEASIBLE * 0.5 { 0.0 } else { (current_score - raw).max(0.0) };
+            candidates.push(self.candidate(d.next, gain));
+            let best_cost = candidates[0].cost_to;
+
+            // cheaper feasible alternatives, ranked by score (stable
+            // sort: ties keep row-major order): economic proposals only
+            // list strict improvements over holding; repair proposals
+            // accept any clearing neighbor
+            let mut alts: Vec<(f32, Configuration)> = Vec::new();
+            for &(cand, raw) in &scored {
+                if cand == current || cand == d.next || model.cost(&cand) >= best_cost {
+                    continue;
+                }
+                if raw >= INFEASIBLE * 0.5 {
+                    continue;
+                }
+                if repair || raw < current_score {
+                    alts.push((raw, cand));
+                }
+            }
+            alts.sort_by(|a, b| a.0.total_cmp(&b.0));
+            alts.truncate(MAX_ALTERNATIVES);
+            for (raw, cand) in alts {
+                candidates.push(self.candidate(cand, (current_score - raw).max(0.0)));
+            }
+
+            // stepping stone for repairs: the cheapest neighbor that
+            // strictly reduces Chebyshev distance to the cheapest
+            // audit-clearing configuration — monotone progress, so
+            // multi-tick walks toward the repair target cannot cycle
+            if repair {
+                if let Some(target) = self.cheapest_clearing(w.lambda_req) {
+                    let dist = |c: &Configuration| {
+                        let (dh, dv) = c.index_distance(&target);
+                        dh.max(dv)
+                    };
+                    let d0 = dist(&current);
+                    let mut stone: Option<Configuration> = None;
+                    for &(cand, _) in &scored {
+                        if cand == current || candidates.iter().any(|c| c.to == cand) {
+                            continue;
+                        }
+                        if dist(&cand) < d0
+                            && stone.map_or(true, |s| model.cost(&cand) < model.cost(&s))
+                        {
+                            stone = Some(cand);
+                        }
+                    }
+                    if let Some(s) = stone {
+                        candidates.push(self.candidate(s, 0.0));
+                    }
+                }
+            }
+            self.violating_holds = 0;
+        } else if self.last_violation {
+            // holding while violating: the model sees no better config
+            // (substrate-measured violations the planner cannot see, or
+            // the top corner). After `escalate_k` such ticks escalate
+            // to an emergency scale-up so the fairness machinery — not
+            // silence — owns the outcome.
+            self.violating_holds += 1;
+            if self.violating_holds >= self.escalate_k {
+                let up = self.model.plane().fallback_up(&self.current, true, true);
+                if up != self.current {
+                    candidates.push(self.candidate(up, 0.0));
+                    emergency = true;
+                }
+            }
+        } else {
+            self.violating_holds = 0;
+        }
+
+        // shed offers: feasible cost-decreasing moves a non-repairing
+        // tenant volunteers as funding for other tenants' SLA repairs
+        let mut sheds: Vec<Candidate> = Vec::new();
+        if !repair {
+            let mut offers: Vec<(f32, Configuration)> = Vec::new();
+            for &(cand, raw) in &scored {
+                if cand == current || model.cost(&cand) >= model.cost(&current) {
+                    continue;
+                }
+                if raw < INFEASIBLE * 0.5 {
+                    offers.push((raw, cand));
+                }
+            }
+            // least objective sacrifice first (stable: ties keep
+            // row-major order); the gain field carries the sacrifice
+            // so the arbiter's funding order matches this ranking
+            offers.sort_by(|a, b| a.0.total_cmp(&b.0));
+            offers.truncate(MAX_ALTERNATIVES);
+            for (raw, cand) in offers {
+                sheds.push(self.candidate(cand, (raw - current_score).max(0.0)));
+            }
+        }
+
         Proposal {
             tenant: self.id,
             class: self.spec.class,
             from: self.current,
-            to: d.next,
             cost_from: self.model.cost(&self.current),
-            cost_to: self.model.cost(&d.next),
-            gain,
-            emergency: d.fallback || !current_feasible,
+            emergency,
             sla_violating: self.last_violation,
             denial_streak: self.denial_streak,
+            candidates,
+            sheds,
         }
     }
 
@@ -422,15 +730,29 @@ mod tests {
     }
 
     #[test]
-    fn proposal_is_a_neighbor_with_consistent_costs() {
+    fn proposal_candidates_are_neighbors_with_consistent_costs() {
         let mut t = tenant(PriorityClass::Silver);
         for tick in 0..50 {
             t.serve(tick);
-            let p = t.propose(tick);
-            let (dh, dv) = p.from.index_distance(&p.to);
-            assert!(dh <= 1 && dv <= 1);
-            assert!((p.cost_delta() - (p.cost_to - p.cost_from)).abs() < 1e-6);
-            t.apply(p.to);
+            let p = t.propose(tick, None);
+            for c in p.candidates.iter().chain(&p.sheds) {
+                let (dh, dv) = p.from.index_distance(&c.to);
+                assert!(dh <= 1 && dv <= 1);
+                assert!(c.gain >= 0.0);
+            }
+            assert!((p.cost_delta()
+                - p.best().map_or(0.0, |c| c.cost_to - p.cost_from))
+            .abs()
+                < 1e-6);
+            // candidate targets are unique (no duplicate walk entries)
+            for (i, a) in p.candidates.iter().enumerate() {
+                for b in &p.candidates[i + 1..] {
+                    assert_ne!(a.to, b.to);
+                }
+            }
+            if let Some(best) = p.best().copied() {
+                t.apply(best.to);
+            }
         }
     }
 
@@ -447,9 +769,11 @@ mod tests {
         );
         let mut t = Tenant::new(0, spec, model, &cfg);
         t.serve(0);
-        let p = t.propose(0);
+        let p = t.propose(0, None);
         assert!(!p.emergency);
-        assert!(p.gain >= 0.0, "gain={}", p.gain);
+        for c in &p.candidates {
+            assert!(c.gain >= 0.0, "gain={}", c.gain);
+        }
     }
 
     #[test]
@@ -462,9 +786,87 @@ mod tests {
         };
         let mut t = Tenant::new(0, spec, model, &cfg);
         t.serve(0);
-        let p = t.propose(0);
+        let p = t.propose(0, None);
         assert!(p.emergency);
+        assert!(p.is_repair());
         assert_eq!(p.density(), INFEASIBLE);
+        assert!(p.sheds.is_empty(), "repairing tenants offer no sheds");
+    }
+
+    #[test]
+    fn repair_proposal_includes_a_stepping_stone_toward_clearing() {
+        let (cfg, model) = fixture();
+        let b = TraceBuilder::from_config(&cfg);
+        // (H=2, medium) at lambda 16000: only (H=4, xlarge) clears, two
+        // steps away — the candidate list must contain a move that gets
+        // strictly closer to it than the current config is.
+        let spec = TenantSpec::from_config(
+            &cfg,
+            "peak",
+            PriorityClass::Gold,
+            b.constant(160.0, 10),
+        );
+        let mut t = Tenant::new(0, spec, model.clone(), &cfg);
+        t.serve(0);
+        let p = t.propose(0, None);
+        assert!(p.is_repair());
+        let target = Configuration::new(2, 3);
+        let d0 = {
+            let (dh, dv) = p.from.index_distance(&target);
+            dh.max(dv)
+        };
+        assert!(p.candidates.iter().any(|c| {
+            let (dh, dv) = c.to.index_distance(&target);
+            dh.max(dv) < d0
+        }));
+    }
+
+    #[test]
+    fn nonviolating_holder_offers_cheaper_feasible_sheds() {
+        let (cfg, model) = fixture();
+        let b = TraceBuilder::from_config(&cfg);
+        // start at (H=1, xlarge) under calm demand: holding is optimal,
+        // and (H=2, large) is the feasible cheaper fallback
+        let spec = TenantSpec {
+            start: Configuration::new(0, 3),
+            ..TenantSpec::from_config(&cfg, "idle", PriorityClass::Silver, b.constant(60.0, 10))
+        };
+        let mut t = Tenant::new(0, spec, model.clone(), &cfg);
+        t.serve(0);
+        let p = t.propose(0, None);
+        assert!(!p.is_repair());
+        assert!(!p.sheds.is_empty(), "an idle tenant must offer sheds");
+        for s in &p.sheds {
+            assert!(s.cost_to < p.cost_from);
+            assert!(model.feasible(&s.to, t.workload_at(0).lambda_req, t.sla(), false));
+        }
+    }
+
+    #[test]
+    fn holding_while_violating_escalates_after_k_ticks() {
+        let (cfg, model) = fixture();
+        let b = TraceBuilder::from_config(&cfg);
+        // (H=1, xlarge) at lambda 6000 is the objective optimum — the
+        // planner holds. Force the measured-violation flag a substrate
+        // would set: after K violating holds the tenant must escalate.
+        let spec = TenantSpec {
+            start: Configuration::new(0, 3),
+            ..TenantSpec::from_config(&cfg, "stuck", PriorityClass::Bronze, b.constant(60.0, 10))
+        };
+        let mut t = Tenant::new(0, spec, model, &cfg);
+        t.set_escalation(3);
+        t.serve(0);
+        t.last_violation = true;
+        let mut escalated_at = None;
+        for tick in 0..5 {
+            let p = t.propose(tick, None);
+            if p.is_move() {
+                assert!(p.emergency, "escalated move must be an emergency");
+                escalated_at = Some(tick);
+                break;
+            }
+        }
+        assert_eq!(escalated_at, Some(2), "must escalate exactly at the K-th violating hold");
     }
 
     #[test]
@@ -513,6 +915,54 @@ mod tests {
         // measured latency comes from the DES, not the analytical model
         assert!(rec.latency > 0.0);
         assert!(rec.throughput > 0.0);
+    }
+
+    #[test]
+    fn substrate_audits_against_the_tenants_own_sla() {
+        let (cfg, model) = fixture();
+        let trace = TraceBuilder::paper(&cfg);
+        let mk = |name: &str, l_max: f32| TenantSpec {
+            sla: SlaSpec::new(l_max, cfg.sla.b_sla),
+            ..TenantSpec::from_config(&cfg, name, PriorityClass::Gold, trace.clone())
+        };
+        // two tenants whose SLA bounds differ by 4x: the physical
+        // substrates must carry bounds in the same 4x ratio (this is
+        // the regression for the shared-`sla_latency` bug — DES and
+        // sampling tenants used to audit against the fleet default)
+        let mut strict = Tenant::new(0, mk("strict", cfg.sla.l_max), Arc::clone(&model), &cfg);
+        let mut loose =
+            Tenant::new(1, mk("loose", cfg.sla.l_max * 4.0), Arc::clone(&model), &cfg);
+        strict.attach_event_cluster(&cfg, ClusterParams::default(), 7);
+        loose.attach_event_cluster(&cfg, ClusterParams::default(), 7);
+        let (s_sla, l_sla) = (strict.substrate_sla().unwrap(), loose.substrate_sla().unwrap());
+        assert!(
+            (l_sla / s_sla - 4.0).abs() < 1e-9,
+            "substrate bounds must scale with the tenant SLA: {s_sla} vs {l_sla}"
+        );
+        assert!((s_sla - ClusterParams::default().sla_latency).abs() < 1e-12);
+
+        // analytical substrates share one latency unit per the rescale,
+        // so the two tenants *measure* identically while only the
+        // audit bound differs: the looser contract can never see more
+        // violations than the strict one
+        let mut strict = Tenant::new(0, mk("strict-a", cfg.sla.l_max), Arc::clone(&model), &cfg);
+        let mut loose = Tenant::new(1, mk("loose-a", cfg.sla.l_max * 4.0), model, &cfg);
+        strict.attach_analytical(&cfg, ClusterParams::default());
+        loose.attach_analytical(&cfg, ClusterParams::default());
+        let (mut sv, mut lv) = (0usize, 0usize);
+        for tick in 0..30 {
+            let a = strict.serve(tick);
+            let b = loose.serve(tick);
+            assert!(
+                (a.latency - b.latency).abs() <= 1e-6 * a.latency.abs().max(1e-6),
+                "analytical measurements must share one unit: {} vs {}",
+                a.latency,
+                b.latency
+            );
+            sv += a.violation.any() as usize;
+            lv += b.violation.any() as usize;
+        }
+        assert!(lv <= sv, "loose SLA violated more ({lv}) than strict ({sv})");
     }
 
     #[test]

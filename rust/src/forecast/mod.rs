@@ -23,6 +23,20 @@ pub trait Forecaster {
     }
 }
 
+// Boxed forecasters forward, so call sites that pick a predictor at
+// runtime (fleet tenants, the CLI's --forecast flag) can drive
+// `ForecastLookahead<Box<dyn Forecaster + Send>>` without a generic
+// parameter per predictor kind.
+impl<F: Forecaster + ?Sized> Forecaster for Box<F> {
+    fn observe(&mut self, demand: f64) {
+        (**self).observe(demand)
+    }
+
+    fn forecast(&self, horizon: usize) -> f64 {
+        (**self).forecast(horizon)
+    }
+}
+
 /// Simple moving average over a fixed window.
 #[derive(Debug, Clone)]
 pub struct MovingAverage {
@@ -238,6 +252,15 @@ mod tests {
         let mut f = Holt::default_tuned();
         f.observe(10.0);
         assert_eq!(f.forecast_n(3).len(), 3);
+    }
+
+    #[test]
+    fn boxed_forecaster_forwards() {
+        let mut b: Box<dyn Forecaster + Send> = Box::new(Holt::default_tuned());
+        b.observe(100.0);
+        b.observe(100.0);
+        assert!((b.forecast(1) - 100.0).abs() < 1e-9);
+        assert_eq!(b.forecast_n(3).len(), 3);
     }
 
     #[test]

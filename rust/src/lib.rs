@@ -31,9 +31,16 @@
 //!   [`cluster::Substrate`] with any policy.
 //! * [`fleet`] — multi-tenant fleet control: N tenant clusters (each a
 //!   full plane/SLA/policy/trace stack, optionally backed by any
-//!   substrate engine — mixable within one run) scaling concurrently
-//!   under a shared monetary budget, with priority classes and a
-//!   starvation guard in the fleet-level budget arbiter.
+//!   substrate engine — mixable within one run, each audited against
+//!   its *own* SLA) scaling concurrently under a shared monetary
+//!   budget. Admission is a two-sided negotiation: tenants shape
+//!   ranked candidate lists to a per-tick budget hint (optionally with
+//!   forecast-driven lookahead per tenant), and the budget arbiter
+//!   walks the lists — degrading first choices to cheaper feasible
+//!   alternatives, actuating volunteered sheds to fund SLA repairs,
+//!   and confining discretionary spending to Gold/Silver/Bronze
+//!   envelopes with burst credits — on top of priority classes and
+//!   the starvation guard.
 //! * [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes the
 //!   Pallas-backed surface kernels on the decision path.

@@ -56,6 +56,15 @@ COMMANDS:
                 [--budget <f32>/h] (default 2.2 per tenant)
                 [--steps <n>] (default 100)
                 [--k <n>] fairness guard K (default 3)
+                [--envelopes <g:s:b|default|off>] per-class budget
+                                  envelopes with burst credits
+                                  (default off)
+                [--forecast <holt|seasonal|off>] per-tenant demand
+                                  forecasting behind the proposals
+                                  (default off)
+                [--planning <bool>] candidate-list walks + shed
+                                  re-negotiation (default true; false =
+                                  the PR-2 flat-denial arbiter)
                 [--cluster <bool>] back tenants with a physical substrate
                 [--substrate <s>] des|sampling|analytical — back tenants
                                   with this engine (implies --cluster
@@ -349,15 +358,44 @@ fn main() -> Result<()> {
                 })
                 .collect();
 
-            let mut fleetsim = FleetSimulator::new(&cfg, specs, budget, k);
+            let planning: bool = args.parse_num("planning", true)?;
+            let mut arb = if planning {
+                fleet::BudgetArbiter::new(budget, k)
+            } else {
+                fleet::BudgetArbiter::flat(budget, k)
+            };
+            match args.get("envelopes") {
+                None | Some("off") => {}
+                Some(spec) => {
+                    if !planning {
+                        bail!("--envelopes requires --planning true (the flat arbiter ignores envelopes)");
+                    }
+                    arb = arb.with_envelopes(
+                        fleet::ClassEnvelopes::parse(spec).ok_or_else(|| {
+                            anyhow!("invalid --envelopes `{spec}` (expected g:s:b or default)")
+                        })?,
+                    )
+                }
+            }
+            let mut fleetsim = FleetSimulator::with_arbiter(&cfg, specs, arb);
+            match args.get("forecast") {
+                None | Some("off") => {}
+                Some(name) => {
+                    let kind = fleet::ForecastKind::parse(name).ok_or_else(|| {
+                        anyhow!("unknown --forecast `{name}` (expected holt|seasonal|off)")
+                    })?;
+                    fleetsim.enable_forecasts(kind, 3);
+                }
+            }
             if attach {
                 fleetsim.attach_substrates(&cfg, ClusterParams::default(), seed, kind);
             }
             let res = fleetsim.run(steps);
             for t in &res.ticks {
                 println!(
-                    "tick {:>4}  spend {:>7.2} / {budget:<7.2}  admitted {:>2}  denied {:>2}  rescues {}",
-                    t.step, t.spend, t.admitted_moves, t.denied_moves, t.rescues
+                    "tick {:>4}  spend {:>7.2} / {budget:<7.2}  admitted {:>2}  denied {:>2}  rescues {}  degraded {}  sheds {}",
+                    t.step, t.spend, t.admitted_moves, t.denied_moves, t.rescues,
+                    t.degraded_moves, t.shed_moves
                 );
             }
             println!("\n{}", fleet::report::table(&res.report));

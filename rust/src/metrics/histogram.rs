@@ -53,6 +53,14 @@ impl LatencyHistogram {
         self.min_value * 2f64.powf(k as f64 / SUBDIV as f64)
     }
 
+    /// Geometric midpoint of bucket `k` — the unbiased representative
+    /// of a log-spaced bucket. Reporting the lower edge instead would
+    /// bias every quantile systematically low by up to one bucket
+    /// width (~9%); the midpoint halves the worst case to ~±4.4%.
+    fn bucket_midpoint(&self, k: usize) -> f64 {
+        self.bucket_value(k) * 2f64.powf(0.5 / SUBDIV as f64)
+    }
+
     pub fn record(&mut self, v: f64) {
         self.total += 1;
         self.sum += v;
@@ -84,8 +92,9 @@ impl LatencyHistogram {
         self.max
     }
 
-    /// Value at quantile `q` in [0, 1] (bucket lower edge — within one
-    /// bucket width, ≈ 9%, of the true value).
+    /// Value at quantile `q` in [0, 1] (geometric bucket midpoint —
+    /// within half a bucket width, ≈ ±4.4%, of the true value; clamped
+    /// to the observed maximum so quantiles never exceed `max()`).
     pub fn quantile(&self, q: f64) -> f64 {
         if self.total == 0 {
             return 0.0;
@@ -98,7 +107,7 @@ impl LatencyHistogram {
         for (k, &c) in self.counts.iter().enumerate() {
             seen += c;
             if seen >= target {
-                return self.bucket_value(k);
+                return self.bucket_midpoint(k).min(self.max);
             }
         }
         self.max
@@ -166,11 +175,14 @@ mod tests {
             h.record(v);
         }
         values.sort_by(f64::total_cmp);
+        // midpoint reporting: within half a bucket width (~4.4%) of the
+        // exact sample quantile, plus nearest-rank slack — 8% is tight
+        // against the former lower-edge bias of up to ~9%
         for q in [0.5, 0.9, 0.99] {
             let exact = values[((q * values.len() as f64) as usize).min(values.len() - 1)];
             let approx = h.quantile(q);
             assert!(
-                (approx - exact).abs() / exact < 0.15,
+                (approx - exact).abs() / exact < 0.08,
                 "q={q}: approx {approx} vs exact {exact}"
             );
         }

@@ -16,7 +16,7 @@ use crate::plane::Configuration;
 use crate::workload::WorkloadPoint;
 use crate::INFEASIBLE;
 
-use super::{rebalance_penalty, Decision, Policy, PolicyContext};
+use super::{rebalance_penalty, Decision, Policy, PolicyContext, BUDGET_PENALTY};
 
 /// The paper's local-search autoscaler.
 #[derive(Debug, Clone, Copy)]
@@ -89,13 +89,25 @@ impl Policy for DiagonalScale {
         ctx: &PolicyContext<'_>,
     ) -> Decision {
         let plane = ctx.model.plane();
+        let cur_cost = ctx.model.cost(&current);
         let mut best: Option<(Configuration, f32)> = None;
         // Row-major order + strict improvement == the kernel's argmin.
         // (allocation-free visit: this is the control loop's hot path)
         plane.for_each_neighbor(&current, self.moves.allow_dh, self.moves.allow_dv, |cand| {
-            let score = Self::score_candidate(&current, &cand, workload, ctx);
+            let mut score = Self::score_candidate(&current, &cand, workload, ctx);
             if score >= INFEASIBLE * 0.5 {
                 return; // Algorithm 1 line 6: SLA-infeasible
+            }
+            // Budget-aware planning: a feasible candidate whose cost
+            // increase does not fit the fleet headroom is kept but
+            // deprioritized, so the policy prefers the best *affordable*
+            // move and escalates an unaffordable one only when nothing
+            // affordable is feasible. No hint (the single-cluster path)
+            // leaves the kernel-parity scoring untouched.
+            if let Some(hint) = &ctx.budget {
+                if !hint.fits(ctx.model.cost(&cand) - cur_cost) {
+                    score += BUDGET_PENALTY;
+                }
             }
             if best.map_or(true, |(_, b)| score < b) {
                 best = Some((cand, score));
@@ -143,6 +155,7 @@ mod tests {
                 reb_v: 1.0,
                 plan_queue: false,
                 future: &[],
+                budget: None,
             }
         }
     }
@@ -236,6 +249,57 @@ mod tests {
                 assert!(dh <= 1 && dv <= 1);
             }
         }
+    }
+
+    #[test]
+    fn budget_hint_prefers_affordable_feasible_candidates() {
+        use crate::policy::BudgetHint;
+        let f = Fixture::new();
+        let mut p = DiagonalScale::diagonal();
+        // At (H=2, medium) under lambda 6000 holding is infeasible and
+        // every feasible neighbor costs more: a zero-headroom hint
+        // penalizes them all equally, so the decision matches the
+        // unbudgeted one (the emergency still surfaces).
+        let cur = Configuration::new(1, 1);
+        let w = WorkloadPoint::new(6000.0, 0.3);
+        let free = p.decide(cur, w, &f.ctx());
+        let ctx_tight = PolicyContext { budget: Some(BudgetHint::new(1.0e9, 1.0e9)), ..f.ctx() };
+        // an effectively unlimited hint never changes the decision
+        assert_eq!(p.decide(cur, w, &ctx_tight).next, free.next);
+        // zero headroom: cost increases are penalized, so if any
+        // feasible non-increasing candidate exists it wins
+        let ctx_zero = PolicyContext { budget: Some(BudgetHint::new(0.0, 0.0)), ..f.ctx() };
+        let d = p.decide(cur, w, &ctx_zero);
+        let model = &f.model;
+        let affordable_feasible = model
+            .plane()
+            .neighbors(&cur, true, true)
+            .into_iter()
+            .any(|c| {
+                model.cost(&c) <= model.cost(&cur)
+                    && model.feasible(&c, w.lambda_req, &f.sla, false)
+            });
+        if affordable_feasible {
+            assert!(model.cost(&d.next) <= model.cost(&cur), "picked {:?}", d.next);
+        }
+        assert!(!d.fallback);
+        // At (H=2, large) under calm demand the objective-best neighbor
+        // is the upgrade to (H=1, xlarge) (+0.1/h); holding still is the
+        // best *free* feasible option. The hint must flip between them.
+        let cur = Configuration::new(1, 2);
+        let free = p.decide(cur, w, &f.ctx());
+        assert_eq!(free.next, Configuration::new(0, 3));
+        let ctx_rich = PolicyContext { budget: Some(BudgetHint::new(1.0e9, 1.0e9)), ..f.ctx() };
+        assert_eq!(p.decide(cur, w, &ctx_rich).next, free.next);
+        let d = p.decide(cur, w, &ctx_zero);
+        assert_eq!(d.next, cur, "zero headroom must hold at (1,2)");
+        assert!(!d.fallback);
+        // when nothing affordable is feasible, the policy still
+        // escalates to the unaffordable best (emergencies surface)
+        let hot = WorkloadPoint::new(10_000.0, 0.3);
+        let d = p.decide(Configuration::new(0, 3), hot, &ctx_zero);
+        assert_eq!(d.next, Configuration::new(1, 3));
+        assert!(!d.fallback);
     }
 
     #[test]

@@ -15,6 +15,9 @@ use super::{Decision, Lookahead, Policy, PolicyContext};
 pub struct ForecastLookahead<F: Forecaster> {
     inner: Lookahead,
     forecaster: F,
+    /// Write ratio stamped onto forecasted points: seeded at
+    /// construction, then carried forward from the last observed
+    /// workload so mix drift in the trace reaches the planner.
     write_ratio: f32,
 }
 
@@ -25,6 +28,13 @@ impl<F: Forecaster> ForecastLookahead<F> {
 
     pub fn forecaster(&self) -> &F {
         &self.forecaster
+    }
+
+    /// The write ratio currently stamped onto forecasted points (the
+    /// last observed mix, or the construction seed before any
+    /// observation).
+    pub fn write_ratio(&self) -> f32 {
+        self.write_ratio
     }
 }
 
@@ -40,6 +50,9 @@ impl<F: Forecaster> Policy for ForecastLookahead<F> {
         ctx: &PolicyContext<'_>,
     ) -> Decision {
         self.forecaster.observe(workload.lambda_req as f64);
+        if workload.lambda_req > 0.0 {
+            self.write_ratio = workload.lambda_w / workload.lambda_req;
+        }
         let horizon = self.inner.depth().saturating_sub(1);
         let future: Vec<WorkloadPoint> = self
             .forecaster
@@ -54,6 +67,7 @@ impl<F: Forecaster> Policy for ForecastLookahead<F> {
             reb_v: ctx.reb_v,
             plan_queue: ctx.plan_queue,
             future: &future,
+            budget: ctx.budget,
         };
         self.inner.decide(current, workload, &fctx)
     }
@@ -111,6 +125,33 @@ mod tests {
             fl.summary.violations,
             greedy.summary.violations
         );
+    }
+
+    #[test]
+    fn write_ratio_tracks_observed_mix_drift() {
+        let cfg = ModelConfig::default_paper();
+        let model = crate::surfaces::SurfaceModel::from_config(&cfg);
+        let sla = crate::sla::SlaSpec::from_config(&cfg);
+        let ctx = crate::policy::PolicyContext {
+            model: &model,
+            sla: &sla,
+            reb_h: 2.0,
+            reb_v: 1.0,
+            plan_queue: false,
+            future: &[],
+            budget: None,
+        };
+        let mut p =
+            ForecastLookahead::new(MoveFlags::DIAGONAL, 3, Holt::default_tuned(), 0.3);
+        assert!((p.write_ratio() - 0.3).abs() < 1e-6);
+        let cur = crate::plane::Configuration::new(1, 1);
+        // the observed trace drifts to a 60% write mix: forecasted
+        // points must carry the drifted ratio, not the seed
+        p.decide(cur, WorkloadPoint::new(5000.0, 0.6), &ctx);
+        assert!((p.write_ratio() - 0.6).abs() < 1e-6);
+        // a zero-demand observation keeps the last ratio
+        p.decide(cur, WorkloadPoint::new(0.0, 0.6), &ctx);
+        assert!((p.write_ratio() - 0.6).abs() < 1e-6);
     }
 
     #[test]

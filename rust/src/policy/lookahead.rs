@@ -10,7 +10,10 @@ use crate::plane::Configuration;
 use crate::workload::WorkloadPoint;
 use crate::INFEASIBLE;
 
-use super::{rebalance_penalty, Decision, DiagonalScale, Policy, PolicyContext};
+use super::{
+    rebalance_penalty, BudgetHint, Decision, DiagonalScale, Policy, PolicyContext,
+    BUDGET_PENALTY,
+};
 
 /// Per-level penalty charged to paths that pass through an infeasible
 /// configuration — large enough to dominate any objective difference,
@@ -38,7 +41,9 @@ impl Lookahead {
 
     /// Best achievable path score starting by moving from `current` at
     /// forecast level `level` (demand `w`), with `remaining` further
-    /// levels below.
+    /// levels below. `budget` is the fleet headroom hint charged against
+    /// level-0 moves only (the one actually paid this tick); deeper
+    /// levels are planned budget-blind.
     fn path_score(
         &self,
         current: Configuration,
@@ -46,8 +51,10 @@ impl Lookahead {
         future: &[WorkloadPoint],
         remaining: usize,
         ctx: &PolicyContext<'_>,
+        budget: Option<BudgetHint>,
     ) -> (Configuration, f32) {
         let plane = ctx.model.plane();
+        let cur_cost = ctx.model.cost(&current);
         let mut best: Option<(Configuration, f32)> = None;
         for cand in plane.neighbors(&current, self.moves.allow_dh, self.moves.allow_dv) {
             let here = DiagonalScale::score_candidate(&current, &cand, w, ctx);
@@ -59,9 +66,15 @@ impl Lookahead {
             } else {
                 here
             };
+            if let Some(hint) = &budget {
+                if !hint.fits(ctx.model.cost(&cand) - cur_cost) {
+                    score += BUDGET_PENALTY;
+                }
+            }
             if remaining > 0 {
                 if let Some((&next_w, rest)) = future.split_first() {
-                    let (_, tail) = self.path_score(cand, next_w, rest, remaining - 1, ctx);
+                    let (_, tail) =
+                        self.path_score(cand, next_w, rest, remaining - 1, ctx, None);
                     score += tail;
                 }
             }
@@ -95,7 +108,7 @@ impl Policy for Lookahead {
             Some((&w0, rest)) => (w0, rest),
             None => (workload, ctx.future),
         };
-        let (next, score) = self.path_score(current, w0, rest, self.depth - 1, ctx);
+        let (next, score) = self.path_score(current, w0, rest, self.depth - 1, ctx, ctx.budget);
         let fallback = score >= INFEASIBLE_LEVEL_PENALTY * 0.5;
         if fallback && next == current {
             // nothing feasible anywhere on the path: behave like the
@@ -127,7 +140,15 @@ mod tests {
         s: &'a SlaSpec,
         future: &'a [WorkloadPoint],
     ) -> PolicyContext<'a> {
-        PolicyContext { model: m, sla: s, reb_h: 2.0, reb_v: 1.0, plan_queue: false, future }
+        PolicyContext {
+            model: m,
+            sla: s,
+            reb_h: 2.0,
+            reb_v: 1.0,
+            plan_queue: false,
+            future,
+            budget: None,
+        }
     }
 
     #[test]

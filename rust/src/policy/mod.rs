@@ -26,6 +26,42 @@ use crate::sla::SlaSpec;
 use crate::surfaces::SurfaceModel;
 use crate::workload::WorkloadPoint;
 
+/// Soft score penalty for candidates whose cost increase does not fit
+/// the fleet budget hint: large enough to dominate any objective
+/// difference, small enough that SLA feasibility (and the lookahead's
+/// [`crate::INFEASIBLE`]-level path penalties) still outranks it. With
+/// no hint in the context the penalty never applies and every policy is
+/// bit-identical to its budget-blind form (kernel parity preserved).
+pub const BUDGET_PENALTY: f32 = 1.0e11;
+
+/// Fleet budget headroom handed to a tenant's policy so proposals are
+/// shaped to what the arbiter can actually admit (cost-aware planning
+/// inside the policy, not just filtering by the arbiter).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BudgetHint {
+    /// Fleet-wide headroom: budget minus current fleet spend.
+    pub fleet_headroom: f32,
+    /// Headroom within the tenant's class envelope, burst credits
+    /// included (equals `fleet_headroom` when envelopes are off).
+    pub class_headroom: f32,
+}
+
+impl BudgetHint {
+    pub fn new(fleet_headroom: f32, class_headroom: f32) -> Self {
+        Self { fleet_headroom, class_headroom }
+    }
+
+    /// Headroom a cost increase must fit into.
+    pub fn headroom(&self) -> f32 {
+        self.fleet_headroom.min(self.class_headroom)
+    }
+
+    /// Whether a move with this cost delta fits the hinted headroom.
+    pub fn fits(&self, cost_delta: f32) -> bool {
+        cost_delta <= self.headroom()
+    }
+}
+
 /// Shared read-only state handed to a policy at each decision point.
 pub struct PolicyContext<'a> {
     pub model: &'a SurfaceModel,
@@ -38,6 +74,9 @@ pub struct PolicyContext<'a> {
     /// Future demand, if the controller has a forecast (used by
     /// [`Lookahead`]; empty for purely reactive policies).
     pub future: &'a [WorkloadPoint],
+    /// Fleet budget headroom, if a budget arbiter governs this tenant
+    /// (`None` outside the fleet: single-cluster runs are budget-blind).
+    pub budget: Option<BudgetHint>,
 }
 
 /// The outcome of one decision.
@@ -141,6 +180,17 @@ mod tests {
     }
 
     #[test]
+    fn budget_hint_headroom_is_the_binding_minimum() {
+        let h = BudgetHint::new(1.5, 0.4);
+        assert_eq!(h.headroom(), 0.4);
+        assert!(h.fits(0.4));
+        assert!(!h.fits(0.41));
+        // shrinks always fit
+        assert!(h.fits(-1.0));
+        assert!(BUDGET_PENALTY < crate::INFEASIBLE);
+    }
+
+    #[test]
     fn static_policy_never_moves() {
         let cfg = ModelConfig::default_paper();
         let model = SurfaceModel::from_config(&cfg);
@@ -152,6 +202,7 @@ mod tests {
             reb_v: 1.0,
             plan_queue: false,
             future: &[],
+            budget: None,
         };
         let mut p = StaticPolicy;
         let c = Configuration::new(2, 2);

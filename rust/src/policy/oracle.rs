@@ -65,7 +65,15 @@ mod tests {
     }
 
     fn ctx<'a>(m: &'a SurfaceModel, s: &'a SlaSpec) -> PolicyContext<'a> {
-        PolicyContext { model: m, sla: s, reb_h: 2.0, reb_v: 1.0, plan_queue: false, future: &[] }
+        PolicyContext {
+            model: m,
+            sla: s,
+            reb_h: 2.0,
+            reb_v: 1.0,
+            plan_queue: false,
+            future: &[],
+            budget: None,
+        }
     }
 
     #[test]

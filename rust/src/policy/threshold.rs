@@ -95,7 +95,15 @@ mod tests {
     }
 
     fn ctx<'a>(model: &'a SurfaceModel, sla: &'a SlaSpec) -> PolicyContext<'a> {
-        PolicyContext { model, sla, reb_h: 2.0, reb_v: 1.0, plan_queue: false, future: &[] }
+        PolicyContext {
+            model,
+            sla,
+            reb_h: 2.0,
+            reb_v: 1.0,
+            plan_queue: false,
+            future: &[],
+            budget: None,
+        }
     }
 
     #[test]

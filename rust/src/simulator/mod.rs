@@ -184,6 +184,7 @@ impl Simulator {
                 reb_v: self.reb_v,
                 plan_queue: self.plan_queue,
                 future: &trace.points[(t + 1).min(trace.len())..],
+                budget: None,
             };
             let d = policy.decide(current, *w, &ctx);
             debug_assert!(self.model.plane().contains(&d.next));

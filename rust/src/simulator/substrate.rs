@@ -17,6 +17,8 @@
 //! `params.sla_latency` — so violation audits are unchanged and
 //! mixed-substrate fleet reports aggregate one consistent unit.
 
+use std::sync::Arc;
+
 use crate::cluster::{
     rebalance, ClusterParams, ClusterSim, ClusterStepMetrics, EventSim, RebalancePlan,
     Substrate, SubstrateKind, SubstrateStatus,
@@ -26,9 +28,11 @@ use crate::plane::Configuration;
 use crate::surfaces::{queueing, SurfaceModel};
 use crate::workload::WorkloadPoint;
 
-/// Thin substrate over the analytical surface model.
+/// Thin substrate over the analytical surface model. The model is
+/// shared (`Arc`), so fleet tenants reuse one precomputed surface
+/// table instead of cloning it per substrate.
 pub struct AnalyticalSubstrate {
-    model: SurfaceModel,
+    model: Arc<SurfaceModel>,
     params: ClusterParams,
     current: Configuration,
     time: f64,
@@ -47,14 +51,14 @@ pub struct AnalyticalSubstrate {
 impl AnalyticalSubstrate {
     pub fn new(cfg: &ModelConfig, params: ClusterParams) -> Self {
         let start = Configuration::new(cfg.policy.start[0], cfg.policy.start[1]);
-        Self::from_model(SurfaceModel::from_config(cfg), params, start, cfg.sla.l_max)
+        Self::from_model(Arc::new(SurfaceModel::from_config(cfg)), params, start, cfg.sla.l_max)
     }
 
-    /// Build from an existing model and a specific SLA latency bound —
-    /// the fleet path, where tenants carry their own SLAs and already
-    /// hold a constructed [`SurfaceModel`].
+    /// Build from an existing (shared) model and a specific SLA latency
+    /// bound — the fleet path, where tenants carry their own SLAs and
+    /// already hold a constructed [`SurfaceModel`].
     pub fn from_model(
-        model: SurfaceModel,
+        model: Arc<SurfaceModel>,
         params: ClusterParams,
         start: Configuration,
         l_max: f32,

@@ -147,6 +147,7 @@ fn neighbor_hlo_matches_native_scoring() {
             reb_v: cfg.policy.reb_v,
             plan_queue: false,
             future: &[],
+            budget: None,
         };
         let w = WorkloadPoint::new(lambda, cfg.write_ratio());
         for (i, c) in cands.iter().enumerate() {

@@ -38,6 +38,7 @@ impl Fx {
             reb_v: self.cfg.policy.reb_v,
             plan_queue: false,
             future: &[],
+            budget: None,
         }
     }
 }

@@ -1,12 +1,16 @@
-//! Property tests for the fleet invariants (satellites of the fleet
-//! subsystem): the budget arbiter never exceeds the global budget, its
-//! admission order is total (priority classes break ties, input order
-//! is irrelevant), and the fairness guard bounds consecutive denials of
-//! SLA-violating tenants whenever their rescue is affordable.
+//! Property tests for the fleet invariants: the budget arbiter never
+//! exceeds the global budget (with or without class envelopes and
+//! burst credits), its admission order is total (priority classes
+//! break ties, input order is irrelevant — including which *candidate*
+//! each tenant degrades to and which sheds are actuated), rescue
+//! preemption still beats economic moves under the planning admission,
+//! and the fairness guard bounds consecutive denials of SLA-violating
+//! tenants whenever their rescue is affordable.
 
 use diagonal_scale::config::ModelConfig;
 use diagonal_scale::fleet::{
-    BudgetArbiter, FleetSimulator, PriorityClass, Proposal, TenantSpec, Verdict,
+    BudgetArbiter, Candidate, ClassEnvelopes, FleetSimulator, PriorityClass, Proposal, TenantSpec,
+    Verdict,
 };
 use diagonal_scale::plane::Configuration;
 use diagonal_scale::testkit::{forall, uniform};
@@ -20,33 +24,78 @@ fn rand_class(rng: &mut XorShift64) -> PriorityClass {
     }
 }
 
-/// A random proposal with self-consistent shape (hold ⇔ equal costs).
+fn rand_config(rng: &mut XorShift64) -> Configuration {
+    Configuration::new(rng.below(4) as usize, rng.below(4) as usize)
+}
+
+/// A random proposal with self-consistent shape: a hold (no
+/// candidates, possibly shed offers) or a ranked candidate list whose
+/// alternatives are strictly cheaper than the best move.
 fn rand_proposal(rng: &mut XorShift64, tenant: usize) -> Proposal {
-    let from = Configuration::new(rng.below(4) as usize, rng.below(4) as usize);
-    let hold = rng.next_f64() < 0.2;
-    let to = if hold {
-        from
-    } else {
-        Configuration::new(rng.below(4) as usize, rng.below(4) as usize)
-    };
+    let from = rand_config(rng);
     let cost_from = uniform(rng, 0.08, 8.0);
-    let cost_to = if to == from { cost_from } else { uniform(rng, 0.08, 8.0) };
+    let hold = rng.next_f64() < 0.25;
+    let mut candidates = Vec::new();
+    if !hold {
+        let n_cands = 1 + rng.below(3) as usize;
+        let mut cost = uniform(rng, 0.08, 8.0);
+        for _ in 0..n_cands {
+            candidates.push(Candidate {
+                to: rand_config(rng),
+                cost_to: cost,
+                gain: uniform(rng, 0.0, 50.0),
+            });
+            // alternatives get strictly cheaper down the list
+            cost *= uniform(rng, 0.3, 0.95);
+        }
+    }
+    let sla_violating = rng.next_f64() < 0.3;
+    let emergency = !hold && rng.next_f64() < 0.1;
+    let mut sheds = Vec::new();
+    if hold && !sla_violating && rng.next_f64() < 0.6 {
+        sheds.push(Candidate {
+            to: rand_config(rng),
+            cost_to: cost_from * uniform(rng, 0.3, 0.95),
+            gain: uniform(rng, 0.0, 5.0),
+        });
+    }
     Proposal {
         tenant,
         class: rand_class(rng),
         from,
-        to,
         cost_from,
-        cost_to,
-        gain: uniform(rng, -2.0, 50.0),
-        emergency: rng.next_f64() < 0.1,
-        sla_violating: rng.next_f64() < 0.3,
+        emergency,
+        sla_violating,
         denial_streak: rng.below(6) as usize,
+        candidates,
+        sheds,
     }
 }
 
 fn rand_proposals(rng: &mut XorShift64, n: usize) -> Vec<Proposal> {
     (0..n).map(|i| rand_proposal(rng, i)).collect()
+}
+
+fn rand_envelopes(rng: &mut XorShift64) -> ClassEnvelopes {
+    ClassEnvelopes::new(
+        uniform(rng, 0.1, 1.0),
+        uniform(rng, 0.1, 1.0),
+        uniform(rng, 0.1, 1.0),
+    )
+}
+
+/// Recompute projected spend from the admitted options.
+fn recompute_spend(proposals: &[Proposal], adm: &diagonal_scale::fleet::Admission) -> f32 {
+    let base: f32 = proposals.iter().map(|p| p.cost_from).sum();
+    base + proposals
+        .iter()
+        .zip(adm.verdicts.iter().zip(&adm.chosen))
+        .map(|(p, (v, c))| match v {
+            Verdict::Hold | Verdict::DeniedBudget | Verdict::DeniedRescueUnaffordable => 0.0,
+            Verdict::AdmittedShed => p.sheds[c.unwrap()].cost_to - p.cost_from,
+            _ => p.candidates[c.unwrap()].cost_to - p.cost_from,
+        })
+        .sum::<f32>()
 }
 
 #[test]
@@ -57,25 +106,25 @@ fn arbiter_never_exceeds_budget() {
         let base: f32 = proposals.iter().map(|p| p.cost_from).sum();
         // budget at/above the base spend: admissions must keep it
         let budget = base * uniform(rng, 1.0, 1.6) + 0.01;
-        let adm = BudgetArbiter::new(budget, 3).admit(&proposals);
-        assert!(
-            adm.projected_spend <= budget + 1e-3,
-            "projected {} over budget {budget}",
-            adm.projected_spend
-        );
-        // projected spend must equal base + admitted deltas
-        let recomputed: f32 = base
-            + proposals
-                .iter()
-                .zip(&adm.verdicts)
-                .filter(|(p, v)| v.admitted() && p.is_move())
-                .map(|(p, _)| p.cost_delta())
-                .sum::<f32>();
-        assert!(
-            (recomputed - adm.projected_spend).abs() <= 1e-3,
-            "recomputed {recomputed} vs projected {}",
-            adm.projected_spend
-        );
+        for arb in [
+            BudgetArbiter::new(budget, 3),
+            BudgetArbiter::flat(budget, 3),
+            BudgetArbiter::new(budget, 3).with_envelopes(rand_envelopes(rng)),
+        ] {
+            let adm = arb.admit(&proposals);
+            assert!(
+                adm.projected_spend <= budget + 1e-3,
+                "projected {} over budget {budget}",
+                adm.projected_spend
+            );
+            // projected spend must equal base + admitted deltas
+            let recomputed = recompute_spend(&proposals, &adm);
+            assert!(
+                (recomputed - adm.projected_spend).abs() <= 1e-3,
+                "recomputed {recomputed} vs projected {}",
+                adm.projected_spend
+            );
+        }
     });
 }
 
@@ -87,7 +136,10 @@ fn shrinks_and_holds_are_always_admitted() {
         let adm = BudgetArbiter::new(budget, 3).admit(&proposals);
         for (p, v) in proposals.iter().zip(&adm.verdicts) {
             if !p.is_move() {
-                assert_eq!(*v, Verdict::Hold);
+                assert!(
+                    matches!(v, Verdict::Hold | Verdict::AdmittedShed),
+                    "hold got {v:?}"
+                );
             } else if p.cost_delta() <= 0.0 {
                 assert_eq!(*v, Verdict::AdmittedShrink);
             }
@@ -102,33 +154,30 @@ fn admission_is_independent_of_input_order() {
         let mut proposals = rand_proposals(rng, n);
         let budget: f32 =
             proposals.iter().map(|p| p.cost_from).sum::<f32>() * uniform(rng, 1.0, 1.4) + 0.01;
-        let arb = BudgetArbiter::new(budget, 3);
-
-        let adm_a = arb.admit(&proposals);
-        let mut admitted_a: Vec<usize> = proposals
-            .iter()
-            .zip(&adm_a.verdicts)
-            .filter(|(_, v)| v.admitted())
-            .map(|(p, _)| p.tenant)
-            .collect();
-
-        // Fisher–Yates shuffle, then re-admit
-        for i in (1..proposals.len()).rev() {
-            let j = rng.below(i as u64 + 1) as usize;
-            proposals.swap(i, j);
+        for arb in [
+            BudgetArbiter::new(budget, 3),
+            BudgetArbiter::new(budget, 3).with_envelopes(rand_envelopes(rng)),
+        ] {
+            // per-tenant outcome: (verdict, chosen option), keyed by id
+            let outcome = |ps: &[Proposal]| -> Vec<(usize, Verdict, Option<usize>)> {
+                let adm = arb.admit(ps);
+                let mut out: Vec<(usize, Verdict, Option<usize>)> = ps
+                    .iter()
+                    .zip(adm.verdicts.iter().zip(&adm.chosen))
+                    .map(|(p, (v, c))| (p.tenant, *v, *c))
+                    .collect();
+                out.sort_by_key(|&(t, _, _)| t);
+                out
+            };
+            let a = outcome(&proposals);
+            // Fisher–Yates shuffle, then re-admit
+            for i in (1..proposals.len()).rev() {
+                let j = rng.below(i as u64 + 1) as usize;
+                proposals.swap(i, j);
+            }
+            let b = outcome(&proposals);
+            assert_eq!(a, b, "admission depended on input order");
         }
-        let adm_b = arb.admit(&proposals);
-        let mut admitted_b: Vec<usize> = proposals
-            .iter()
-            .zip(&adm_b.verdicts)
-            .filter(|(_, v)| v.admitted())
-            .map(|(p, _)| p.tenant)
-            .collect();
-
-        admitted_a.sort_unstable();
-        admitted_b.sort_unstable();
-        assert_eq!(admitted_a, admitted_b, "admission depended on input order");
-        assert!((adm_a.projected_spend - adm_b.projected_spend).abs() < 1e-3);
     });
 }
 
@@ -142,14 +191,14 @@ fn priority_class_breaks_ties_for_the_last_slot() {
         let mut lo = rand_proposal(rng, 0);
         lo.class = PriorityClass::Bronze;
         lo.from = Configuration::new(0, 0);
-        lo.to = Configuration::new(1, 1);
         lo.cost_from = cost_from;
-        lo.cost_to = cost_from + delta;
-        lo.gain = 10.0;
+        lo.candidates =
+            vec![Candidate { to: Configuration::new(1, 1), cost_to: cost_from + delta, gain: 10.0 }];
         lo.emergency = false;
         lo.sla_violating = false;
         lo.denial_streak = 0;
-        let mut hi = lo;
+        lo.sheds.clear();
+        let mut hi = lo.clone();
         hi.tenant = 1;
         hi.class = if rng.next_f64() < 0.5 { PriorityClass::Gold } else { PriorityClass::Silver };
 
@@ -158,7 +207,8 @@ fn priority_class_breaks_ties_for_the_last_slot() {
         let budget = (cost_from + cost_from) + lo.cost_delta();
         let arb = BudgetArbiter::new(budget, 3);
         let first_hi = rng.next_f64() < 0.5;
-        let proposals = if first_hi { vec![hi, lo] } else { vec![lo, hi] };
+        let proposals =
+            if first_hi { vec![hi.clone(), lo.clone()] } else { vec![lo, hi] };
         let adm = arb.admit(&proposals);
         for (p, v) in proposals.iter().zip(&adm.verdicts) {
             if p.tenant == 1 {
@@ -167,6 +217,70 @@ fn priority_class_breaks_ties_for_the_last_slot() {
                 assert!(v.denied(), "lower class won the tie");
             }
         }
+    });
+}
+
+#[test]
+fn rescue_preemption_beats_economic_moves() {
+    forall(100, 0x0E5C0E, |_, rng| {
+        // a starved violating Bronze rescue and a Gold economic move
+        // compete for headroom that fits only one: the rescue wins
+        // under both the flat and the planning admission
+        let cost_from = uniform(rng, 0.2, 1.0);
+        let delta = uniform(rng, 0.3, 1.5);
+        let mut bronze = rand_proposal(rng, 0);
+        bronze.class = PriorityClass::Bronze;
+        bronze.cost_from = cost_from;
+        bronze.candidates =
+            vec![Candidate { to: Configuration::new(1, 1), cost_to: cost_from + delta, gain: 1.0 }];
+        bronze.emergency = false;
+        bronze.sla_violating = true;
+        bronze.denial_streak = 3;
+        bronze.sheds.clear();
+        let mut gold = bronze.clone();
+        gold.tenant = 1;
+        gold.class = PriorityClass::Gold;
+        gold.sla_violating = false;
+        gold.denial_streak = 0;
+        gold.candidates[0].gain = 100.0;
+        let budget = (cost_from + cost_from) + delta;
+        for arb in [BudgetArbiter::new(budget, 3), BudgetArbiter::flat(budget, 3)] {
+            let adm = arb.admit(&[gold.clone(), bronze.clone()]);
+            assert_eq!(adm.verdicts[1], Verdict::AdmittedRescue, "rescue lost to economics");
+            assert!(adm.verdicts[0].denied());
+        }
+    });
+}
+
+#[test]
+fn degradation_walks_to_the_best_fitting_candidate() {
+    forall(200, 0xDE62ADE, |_, rng| {
+        let mut p = rand_proposal(rng, 0);
+        while p.candidates.len() < 2 {
+            p = rand_proposal(rng, 0);
+        }
+        p.sheds.clear();
+        p.denial_streak = 0; // keep the rescue pass out of this walk
+        let budget = p.cost_from.max(p.candidates.last().unwrap().cost_to) + 0.01;
+        let adm = BudgetArbiter::new(budget, 3).admit(&[p.clone()]);
+        let v = adm.verdicts[0];
+        if let Some(ci) = adm.chosen[0] {
+            // every earlier-ranked candidate must NOT have fit (the
+            // arbiter rejects at budget + FIT_EPS = 1e-4, so anything
+            // walked past costs strictly more than the budget)
+            for c in p.candidates.iter().take(ci) {
+                assert!(c.cost_to > budget, "walk skipped a fitting candidate");
+            }
+            assert!(p.candidates[ci].cost_to <= budget + 1e-3);
+            if ci > 0 {
+                assert_eq!(v, Verdict::AdmittedDegraded);
+            }
+        } else {
+            assert!(v.denied() || v == Verdict::Hold);
+        }
+        // the flat arbiter never degrades
+        let adm = BudgetArbiter::flat(budget, 3).admit(&[p]);
+        assert_ne!(adm.verdicts[0], Verdict::AdmittedDegraded);
     });
 }
 
@@ -189,7 +303,12 @@ fn fleet_spend_never_exceeds_budget_over_a_full_run() {
         // start spend is n * cost(H=2, medium) = n * 0.4; budgets from
         // barely-above-start to comfortable
         let budget = n as f32 * uniform(rng, 0.5, 3.0);
-        let mut fleet = FleetSimulator::new(&cfg, specs, budget, 3);
+        let arb = if rng.next_f64() < 0.5 {
+            BudgetArbiter::new(budget, 3).with_envelopes(rand_envelopes(rng))
+        } else {
+            BudgetArbiter::new(budget, 3)
+        };
+        let mut fleet = FleetSimulator::with_arbiter(&cfg, specs, arb);
         let res = fleet.run(75);
         assert!(
             res.within_budget(budget),
@@ -240,6 +359,37 @@ fn fairness_guard_bounds_consecutive_denials() {
             }
         }
     });
+}
+
+#[test]
+fn holding_but_violating_tenant_cannot_starve_forever() {
+    use diagonal_scale::cluster::{ClusterParams, EventSim};
+    // a tenant whose substrate measures persistent SLA violations the
+    // analytical planner cannot see (an artificially tight measured
+    // bound) must escalate out of its start config instead of
+    // holding-and-violating silently forever
+    let cfg = ModelConfig::default_paper();
+    let base = TraceBuilder::from_config(&cfg);
+    let specs = vec![TenantSpec {
+        start: Configuration::new(0, 3),
+        ..TenantSpec::from_config(
+            &cfg,
+            "tight",
+            PriorityClass::Bronze,
+            base.constant(60.0, 50),
+        )
+    }];
+    let mut fleet = FleetSimulator::new(&cfg, specs, 1.0e6, 3);
+    // every measured p99 violates the artificially tight bound
+    let params = ClusterParams { sla_latency: 1e-9, ..ClusterParams::default() };
+    fleet.tenants_mut()[0].attach_substrate(Box::new(EventSim::new(&cfg, params, 7)));
+    let start = fleet.tenants()[0].current();
+    fleet.run(20);
+    assert_ne!(
+        fleet.tenants()[0].current(),
+        start,
+        "holding-but-violating tenant never escalated"
+    );
 }
 
 #[test]
