@@ -5,7 +5,7 @@
 
 .DEFAULT_GOAL := help
 
-.PHONY: help build test bench-compile examples fleet-demo artifacts
+.PHONY: help build test bench-compile examples fleet-demo placement-demo artifacts
 
 help: ## list the available targets
 	@grep -E '^[a-zA-Z_-]+:.*?## ' $(MAKEFILE_LIST) | awk 'BEGIN {FS = ":.*?## "}; {printf "  %-14s %s\n", $$1, $$2}'
@@ -26,6 +26,9 @@ examples: ## run the quickstart and fleet_budget smoke examples
 
 fleet-demo: ## budget-aware fleet demo: envelopes + forecasting + planning-vs-flat A/B
 	cargo run --release --example fleet_budget
+
+placement-demo: ## cross-tenant bin-packing demo: packed-vs-dedicated A/B with priced migrations
+	cargo run --release --example placement_packing
 
 artifacts: ## AOT-lower the JAX/Pallas kernels to artifacts/ (needs jax)
 	cd python && python3 -m compile.aot --out-dir ../artifacts

@@ -1,0 +1,76 @@
+//! Bench P — placement at fleet scale: packed (shared clusters) vs
+//! dedicated (one cluster per tenant) as the tenant count sweeps
+//! 4 → 64, on the staggered small-tenant scenario.
+//!
+//! ```text
+//! cargo bench --bench placement
+//! ```
+//!
+//! Reports per-mode tick wall time (the packer replans every 4 ticks,
+//! so the amortized cost of FFD + local search is included) and the
+//! cost ratio packed/dedicated over a full trace cycle — the number
+//! the tentpole exists for.
+
+use diagonal_scale::benchkit::{group, Bench};
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::placement::{small_tenant_specs, PlacementConfig, PlacementSim};
+
+const BUDGET: f32 = 1.0e9;
+const K: usize = 3;
+
+fn main() {
+    let cfg = ModelConfig::default_paper();
+    let pcfg = PlacementConfig::default();
+    let b = Bench::quick();
+
+    group("placement tick wall time — packed vs dedicated vs tenant count");
+    for n in [4usize, 8, 16, 32, 64] {
+        let mut packed =
+            PlacementSim::packed(&cfg, small_tenant_specs(&cfg, n, 0.1), BUDGET, K, pcfg);
+        packed.set_recording(false);
+        let ps = b.run(&format!("placement_tick/packed/{n:>2}_tenants"), || {
+            packed.tick().admitted_moves
+        });
+        let mut dedicated =
+            PlacementSim::dedicated(&cfg, small_tenant_specs(&cfg, n, 0.1), BUDGET, K, pcfg);
+        dedicated.set_recording(false);
+        let ds = b.run(&format!("placement_tick/dedicated/{n:>2}_tenants"), || {
+            dedicated.tick().admitted_moves
+        });
+        b.report_metric(
+            &format!("packed/dedicated tick-time ratio at {n} tenants"),
+            ps.mean.as_secs_f64() / ds.mean.as_secs_f64().max(1e-12),
+            "x",
+        );
+    }
+
+    group("fleet cost over one trace cycle — packed vs dedicated");
+    let steps = 50;
+    for n in [4usize, 8, 16, 32, 64] {
+        let mut packed =
+            PlacementSim::packed(&cfg, small_tenant_specs(&cfg, n, 0.1), BUDGET, K, pcfg);
+        packed.set_recording(false);
+        let pk = packed.run(steps);
+        let mut dedicated =
+            PlacementSim::dedicated(&cfg, small_tenant_specs(&cfg, n, 0.1), BUDGET, K, pcfg);
+        dedicated.set_recording(false);
+        let ded = dedicated.run(steps);
+        b.report_metric(
+            &format!("cost ratio packed/dedicated at {n:>2} tenants"),
+            pk.total_cost() / ded.total_cost().max(1e-9),
+            "x",
+        );
+        b.report_metric(
+            &format!("migrations at {n:>2} tenants"),
+            pk.total_migrations() as f64,
+            "moves",
+        );
+        if pk.total_violations() > ded.total_violations() {
+            println!(
+                "note: packed violated more than dedicated at {n} tenants ({} vs {})",
+                pk.total_violations(),
+                ded.total_violations()
+            );
+        }
+    }
+}

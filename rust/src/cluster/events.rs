@@ -48,6 +48,11 @@ pub enum Event {
     RebalanceEnd,
     /// A rolling-restart window closes: full capacity restored.
     RestartEnd,
+    /// A cross-tenant migration window closes (scheduled by the
+    /// placement layer on shared-cluster calendars —
+    /// [`crate::placement::SharedCluster`]; [`EventSim`] never emits
+    /// it and treats a stray one as a plain window close).
+    MigrationEnd,
     /// `node` enters its periodic background-compaction window.
     CompactionStart { node: usize },
     /// `node` leaves its compaction window (and the next one is
@@ -276,7 +281,7 @@ impl EventSim {
     /// Fire one calendar event at its scheduled time.
     fn fire(&mut self, at: f64, ev: Event) {
         match ev {
-            Event::RebalanceEnd | Event::RestartEnd => {
+            Event::RebalanceEnd | Event::RestartEnd | Event::MigrationEnd => {
                 // a popped end always belongs to the open window:
                 // rebuild() clears the calendar on every apply(), so
                 // stale end-events from superseded windows cannot exist
@@ -360,6 +365,16 @@ impl EventSim {
     /// sampling engine exactly (shared [`rebalance::plan_reconfiguration`]),
     /// but the window *closes* at its event time mid-interval instead
     /// of at the next step boundary.
+    ///
+    /// Queueing backlog carries across the reconfiguration: surviving
+    /// node slots (index < min(old H, new H)) inherit their servers'
+    /// remaining busy time, so work queued before a resize still
+    /// delays ops after it instead of vanishing with the node rebuild
+    /// (the ROADMAP DES open item). Nodes that disappear shed their
+    /// queues with their shards — the rebalance window prices that
+    /// disruption. The legacy sampling engine keeps its wipe-on-apply
+    /// behaviour; the cross-engine parity suite only pins trajectories
+    /// and utilization, both backlog-independent.
     pub fn apply(&mut self, next: Configuration) -> RebalancePlan {
         assert!(self.plane.contains(&next), "config out of plane");
         if next == self.current {
@@ -367,8 +382,15 @@ impl EventSim {
         }
         let plan =
             rebalance::plan_reconfiguration(&self.plane, &self.current, &next, &self.params);
+        let carried: Vec<Vec<f64>> =
+            self.nodes.iter().map(|n| n.server_backlog(self.time)).collect();
         self.current = next;
         self.rebuild();
+        for (i, node) in self.nodes.iter_mut().enumerate() {
+            if let Some(backlog) = carried.get(i) {
+                node.inherit_backlog(backlog, self.time);
+            }
+        }
         if plan.duration > 0.0 {
             self.window_deg = plan.degradation;
             let end = if plan.moved_shards > 0 {
@@ -707,6 +729,56 @@ mod tests {
         let iu = imbalance(&mut uniform);
         let is = imbalance(&mut skewed);
         assert!(is > 1.3 * iu, "zipf must imbalance node load: {is:.2} vs {iu:.2}");
+    }
+
+    #[test]
+    fn backlog_survives_step_boundaries() {
+        // pins the *pre-existing* invariant that server free-times
+        // persist across plain step() boundaries (nodes are reused, no
+        // rebuild) — the PR-4 change extends the same guarantee across
+        // apply(), covered by the two resize tests below
+        let mut s = sim(30);
+        s.step(point(30_000.0));
+        let m = s.step(point(200.0));
+        assert!(
+            m.dropped > 0.9 * m.offered,
+            "carried backlog must delay step-2 ops: {m:?}"
+        );
+        // a fresh cluster at the same trickle sheds nothing
+        let mut fresh = sim(30);
+        let f = fresh.step(point(200.0));
+        assert_eq!(f.dropped, 0.0);
+    }
+
+    #[test]
+    fn vertical_resize_carries_queue_backlog() {
+        // build a deep queue, then resize medium -> large: surviving
+        // nodes must inherit their servers' remaining busy time, so the
+        // first post-resize interval still sheds (before PR 4 the
+        // rebuild silently wiped the queue)
+        let mut s = sim(31);
+        s.step(point(30_000.0));
+        s.apply(Configuration::new(1, 2));
+        let m = s.step(point(200.0));
+        assert!(
+            m.dropped > 0.9 * m.offered,
+            "backlog must survive the resize: {m:?}"
+        );
+        // same resize without prior load serves the trickle cleanly
+        let mut fresh = sim(31);
+        fresh.apply(Configuration::new(1, 2));
+        let f = fresh.step(point(200.0));
+        assert_eq!(f.dropped, 0.0);
+    }
+
+    #[test]
+    fn horizontal_shrink_keeps_surviving_nodes_backlog() {
+        // H=2 -> H=1 under backlog: the surviving node keeps its queue
+        let mut s = sim(32);
+        s.step(point(30_000.0));
+        s.apply(Configuration::new(0, 1));
+        let m = s.step(point(100.0));
+        assert!(m.dropped > 0.5 * m.offered, "survivor kept no backlog: {m:?}");
     }
 
     #[test]

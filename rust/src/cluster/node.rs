@@ -90,6 +90,36 @@ impl Node {
         self.servers.iter().copied().fold(f64::MAX, f64::min)
     }
 
+    /// Remaining busy time per server at `t` (0 for idle servers) —
+    /// the queue backlog a reconfiguration carries forward.
+    pub fn server_backlog(&self, t: f64) -> Vec<f64> {
+        self.servers.iter().map(|&f| (f - t).max(0.0)).collect()
+    }
+
+    /// Inherit queued-work backlog from a predecessor node's servers:
+    /// remaining busy durations are assigned longest-first onto the
+    /// least-loaded server (LPT), so total backlog is conserved even
+    /// when the server count changes across tiers. Existing state is
+    /// replaced (the node is freshly built at `t`).
+    pub fn inherit_backlog(&mut self, backlog: &[f64], t: f64) {
+        let mut rem: Vec<f64> = backlog.iter().copied().filter(|&b| b > 0.0).collect();
+        rem.sort_by(|a, b| b.total_cmp(a));
+        for f in &mut self.servers {
+            *f = t;
+        }
+        for b in rem {
+            let mut idx = 0usize;
+            let mut min = self.servers[0];
+            for (i, &f) in self.servers.iter().enumerate().skip(1) {
+                if f < min {
+                    idx = i;
+                    min = f;
+                }
+            }
+            self.servers[idx] += b;
+        }
+    }
+
     /// Queue depth proxy: servers busy past time `t`.
     pub fn busy_servers(&self, t: f64) -> usize {
         self.servers.iter().filter(|&&f| f > t).count()

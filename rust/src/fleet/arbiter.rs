@@ -111,6 +111,13 @@ impl ClassEnvelopes {
         Self { shares: [bronze / total, silver / total, gold / total] }
     }
 
+    /// The configuration-time baseline: fixed shares that never adapt
+    /// (alias of [`Self::new`], named for the A/B against
+    /// [`EnvelopeAdapter`]-driven re-weighting).
+    pub fn fixed(gold: f32, silver: f32, bronze: f32) -> Self {
+        Self::new(gold, silver, bronze)
+    }
+
     /// The default split: half the budget for Gold, 30% Silver, 20%
     /// Bronze.
     pub fn default_split() -> Self {
@@ -163,6 +170,70 @@ impl ClassEnvelopes {
             [g, s, b] if g > 0.0 && s > 0.0 && b > 0.0 => Some(Self::new(g, s, b)),
             _ => None,
         }
+    }
+}
+
+/// EWMA smoothing for adaptive envelope re-weighting: how fast the
+/// per-class contention estimate tracks the latest tick.
+pub const ADAPT_ALPHA: f32 = 0.2;
+
+/// How strongly observed contention bends the envelope shares: a class
+/// carrying *all* the fleet's contention grows its share by at most
+/// this fraction of its base share (before renormalization).
+pub const ADAPT_STRENGTH: f32 = 1.0;
+
+/// Dynamic envelope re-weighting: instead of fixing class shares at
+/// configuration time ([`ClassEnvelopes::fixed`]), derive them from an
+/// EWMA of observed per-class *contention* — denials plus
+/// SLA-violation ticks. A class that keeps getting denied while
+/// violating earns a larger slice of the discretionary budget; calm
+/// classes cede theirs. With zero observed contention the shares sit
+/// exactly at the base split, so the adapter is a no-op until pressure
+/// appears.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnvelopeAdapter {
+    base: ClassEnvelopes,
+    /// Contention EWMA, indexed by [`PriorityClass::rank`].
+    ewma: [f32; 3],
+}
+
+impl EnvelopeAdapter {
+    pub fn new(base: ClassEnvelopes) -> Self {
+        Self { base, ewma: [0.0; 3] }
+    }
+
+    /// The configuration-time split the adapter bends.
+    pub fn base(&self) -> ClassEnvelopes {
+        self.base
+    }
+
+    /// Current contention estimate (rank-indexed; diagnostics/tests).
+    pub fn ewma(&self) -> [f32; 3] {
+        self.ewma
+    }
+
+    /// Fold one tick's per-class contention (rank-indexed counts of
+    /// denials + violation ticks) into the EWMA and return the
+    /// re-weighted envelopes.
+    pub fn observe(&mut self, contention: [f32; 3]) -> ClassEnvelopes {
+        for r in 0..3 {
+            self.ewma[r] = (1.0 - ADAPT_ALPHA) * self.ewma[r] + ADAPT_ALPHA * contention[r];
+        }
+        let total: f32 = self.ewma.iter().sum();
+        if total <= 1e-9 {
+            return self.base;
+        }
+        let share = |class: PriorityClass| {
+            let r = class.rank() as usize;
+            self.base.share(class) * (1.0 + ADAPT_STRENGTH * self.ewma[r] / total)
+        };
+        // ClassEnvelopes::new renormalizes, so only the relative bend
+        // matters; every share stays strictly positive
+        ClassEnvelopes::new(
+            share(PriorityClass::Gold),
+            share(PriorityClass::Silver),
+            share(PriorityClass::Bronze),
+        )
     }
 }
 
@@ -788,6 +859,44 @@ mod tests {
         repair.sla_violating = true;
         let adm = arb.admit(&[repair, gold, silver]);
         assert_eq!(adm.verdicts[0], Verdict::Admitted);
+    }
+
+    #[test]
+    fn adapter_is_identity_without_contention() {
+        let base = ClassEnvelopes::fixed(0.5, 0.3, 0.2);
+        let mut ad = EnvelopeAdapter::new(base);
+        for _ in 0..5 {
+            assert_eq!(ad.observe([0.0; 3]), base);
+        }
+        assert_eq!(ad.ewma(), [0.0; 3]);
+    }
+
+    #[test]
+    fn adapter_grows_the_contended_class_share() {
+        let base = ClassEnvelopes::fixed(0.5, 0.3, 0.2);
+        let mut ad = EnvelopeAdapter::new(base);
+        // bronze (rank 0) carries all the contention for a while
+        let mut env = base;
+        for _ in 0..20 {
+            env = ad.observe([3.0, 1.0, 0.0]);
+        }
+        assert!(
+            env.share(PriorityClass::Bronze) > base.share(PriorityClass::Bronze),
+            "contended bronze must gain share: {} vs {}",
+            env.share(PriorityClass::Bronze),
+            base.share(PriorityClass::Bronze)
+        );
+        assert!(env.share(PriorityClass::Gold) < base.share(PriorityClass::Gold));
+        // shares stay a distribution
+        let sum: f32 = PriorityClass::ALL.iter().map(|&c| env.share(c)).sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        // contention gone: the EWMA decays back toward the base split
+        for _ in 0..200 {
+            env = ad.observe([0.0, 0.0, 0.0]);
+        }
+        let drift =
+            (env.share(PriorityClass::Bronze) - base.share(PriorityClass::Bronze)).abs();
+        assert!(drift < 0.06, "shares must decay toward base, drift {drift}");
     }
 
     #[test]

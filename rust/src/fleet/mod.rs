@@ -42,7 +42,7 @@ pub mod arbiter;
 pub mod report;
 pub mod tenant;
 
-pub use arbiter::{Admission, BudgetArbiter, ClassEnvelopes, Verdict};
+pub use arbiter::{Admission, BudgetArbiter, ClassEnvelopes, EnvelopeAdapter, Verdict};
 pub use report::{ClassReport, FleetReport, TenantReport};
 pub use tenant::{Candidate, ForecastKind, PriorityClass, Proposal, Tenant, TenantSpec};
 
@@ -50,6 +50,7 @@ use std::sync::Arc;
 
 use crate::cluster::{ClusterParams, SubstrateKind};
 use crate::config::ModelConfig;
+use crate::placement::{PlacementConfig, PlacementSim};
 use crate::policy::BudgetHint;
 use crate::surfaces::SurfaceModel;
 
@@ -109,6 +110,9 @@ impl FleetResult {
 pub struct FleetSimulator {
     tenants: Vec<Tenant>,
     arbiter: BudgetArbiter,
+    /// Dynamic envelope re-weighting from observed per-class contention
+    /// (None = fixed configuration-time shares).
+    adapter: Option<EnvelopeAdapter>,
     step: usize,
 }
 
@@ -142,12 +146,47 @@ impl FleetSimulator {
                 t
             })
             .collect();
-        Self { tenants, arbiter, step: 0 }
+        Self { tenants, arbiter, adapter: None, step: 0 }
+    }
+
+    /// Placement-mode fleet: co-locate tenants on shared clusters under
+    /// the same budget machinery. Returns a [`PlacementSim`] — a
+    /// different control loop (clusters are shared, tenants are demand
+    /// sources) that routes every placement action through the
+    /// [`BudgetArbiter`]. See [`crate::placement`] for the model;
+    /// [`PlacementSim::dedicated`] builds the one-cluster-per-tenant
+    /// baseline for A/B runs.
+    pub fn with_placement(
+        cfg: &ModelConfig,
+        specs: Vec<TenantSpec>,
+        budget: f32,
+        fairness_k: usize,
+        pcfg: PlacementConfig,
+    ) -> PlacementSim {
+        PlacementSim::packed(cfg, specs, budget, fairness_k, pcfg)
     }
 
     /// Apply (or clear) per-class budget envelopes with burst credits.
     pub fn set_envelopes(&mut self, envelopes: Option<ClassEnvelopes>) {
         self.arbiter.envelopes = envelopes;
+    }
+
+    /// Switch the class envelopes to dynamic re-weighting: shares are
+    /// re-derived every tick from an EWMA of observed per-class
+    /// contention (denials + SLA-violation ticks) instead of staying at
+    /// the configuration-time split. The current envelopes (or the
+    /// default split when none are set) become the base the adapter
+    /// bends. ROADMAP open item; CLI `--adaptive-envelopes`.
+    pub fn enable_adaptive_envelopes(&mut self) {
+        let base = self.arbiter.envelopes.unwrap_or_else(ClassEnvelopes::default_split);
+        self.arbiter.envelopes = Some(base);
+        self.adapter = Some(EnvelopeAdapter::new(base));
+    }
+
+    /// The envelopes currently governing economic admission (changes
+    /// tick to tick when adaptive re-weighting is on).
+    pub fn envelopes(&self) -> Option<ClassEnvelopes> {
+        self.arbiter.envelopes
     }
 
     /// Upgrade every tenant to forecast-driven lookahead proposals
@@ -308,6 +347,23 @@ impl FleetSimulator {
             }
         }
 
+        // dynamic envelope re-weighting: fold this tick's per-class
+        // contention (denials + violation ticks) into the adapter and
+        // install the bent shares for the next admission
+        if let Some(adapter) = &mut self.adapter {
+            let mut contention = [0.0f32; 3];
+            for (p, v) in proposals.iter().zip(&adm.verdicts) {
+                let r = p.class.rank() as usize;
+                if v.denied() {
+                    contention[r] += 1.0;
+                }
+                if self.tenants[p.tenant].violating() {
+                    contention[r] += 1.0;
+                }
+            }
+            self.arbiter.envelopes = Some(adapter.observe(contention));
+        }
+
         self.step += 1;
         FleetTick {
             step: t,
@@ -450,6 +506,35 @@ mod tests {
         // planning runs stay deterministic
         let again = build_planning().run(100);
         assert_eq!(plan_res.ticks, again.ticks);
+    }
+
+    /// Adaptive envelopes (ROADMAP open item): under the contended
+    /// 6-tenant scenario the adapter must actually bend the shares
+    /// away from the fixed split, keep them a distribution, stay
+    /// within budget, and stay deterministic.
+    #[test]
+    fn adaptive_envelopes_track_observed_contention() {
+        let cfg = ModelConfig::default_paper();
+        let budget = 8.0f32;
+        let base = ClassEnvelopes::default_split();
+        let build = || {
+            let arb = BudgetArbiter::new(budget, 3).with_envelopes(base);
+            let mut fleet = FleetSimulator::with_arbiter(&cfg, specs(&cfg, 6), arb);
+            fleet.enable_adaptive_envelopes();
+            fleet
+        };
+        let mut fleet = build();
+        let res = fleet.run(100);
+        assert!(res.within_budget(budget), "peak {}", res.peak_spend());
+        // contention was real, so the shares moved off the base split
+        assert!(res.ticks.iter().any(|t| t.denied_moves > 0), "budget never bit");
+        let env = fleet.envelopes().expect("adaptive envelopes installed");
+        assert_ne!(env, base, "adapter never re-weighted the shares");
+        let sum: f32 = PriorityClass::ALL.iter().map(|&c| env.share(c)).sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        // deterministic
+        let again = build().run(100);
+        assert_eq!(res.ticks, again.ticks);
     }
 
     #[test]

@@ -39,8 +39,21 @@
 //!   walks the lists — degrading first choices to cheaper feasible
 //!   alternatives, actuating volunteered sheds to fund SLA repairs,
 //!   and confining discretionary spending to Gold/Silver/Bronze
-//!   envelopes with burst credits — on top of priority classes and
+//!   envelopes with burst credits (optionally re-weighted each tick
+//!   from observed per-class contention,
+//!   [`fleet::EnvelopeAdapter`]) — on top of priority classes and
 //!   the starvation guard.
+//! * [`placement`] — cross-tenant bin-packing onto shared clusters:
+//!   [`placement::SharedCluster`] splits one host's capacity by
+//!   weighted fair shares with a contention penalty past a utilization
+//!   knee, [`placement::Packer`] runs FFD seeding + local search over
+//!   {migrate, merge, split, resize} under per-tenant SLAs, and
+//!   [`placement::MigrationPlanner`] prices each tenant move as a
+//!   degradation window on the cluster's DES calendar. Placement
+//!   actions are admitted by the fleet's budget arbiter
+//!   ([`fleet::FleetSimulator::with_placement`]); the pinned tests
+//!   show packing strictly lowering fleet cost at no more
+//!   SLA-violation ticks than dedicated clusters.
 //! * [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes the
 //!   Pallas-backed surface kernels on the decision path.
@@ -61,6 +74,7 @@ pub mod disagg;
 pub mod fleet;
 pub mod forecast;
 pub mod metrics;
+pub mod placement;
 pub mod plane;
 pub mod policy;
 pub mod report;

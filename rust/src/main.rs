@@ -10,6 +10,7 @@
 //! diagonal-scale trace-hlo [--artifacts DIR]       # Table I via PJRT
 //! diagonal-scale daemon [--steps N] [--seed N]     # threaded autoscaler
 //! diagonal-scale fleet [--tenants N] [--budget F] [--substrate S]  # fleet
+//! diagonal-scale placement [--tenants N] [--mode M]  # shared-cluster packing
 //! ```
 //!
 //! Global flag: `--config <path.toml>` (defaults to the bundled paper
@@ -23,6 +24,7 @@ use diagonal_scale::cluster::{ClusterParams, ClusterSim, EventSim, Substrate, Su
 use diagonal_scale::config::{ModelConfig, MoveFlags};
 use diagonal_scale::coordinator::{self, Backend, Coordinator};
 use diagonal_scale::fleet::{self, FleetSimulator, PriorityClass, TenantSpec};
+use diagonal_scale::placement::{self, PlacementConfig, PlacementSim};
 use diagonal_scale::policy::{DiagonalScale, Lookahead, Oracle, Policy, StaticPolicy, Threshold};
 use diagonal_scale::report::{self, Surface};
 use diagonal_scale::runtime::{Engine, SurfaceEngine};
@@ -65,11 +67,31 @@ COMMANDS:
                 [--planning <bool>] candidate-list walks + shed
                                   re-negotiation (default true; false =
                                   the PR-2 flat-denial arbiter)
+                [--adaptive-envelopes <bool>] re-derive class shares
+                                  each tick from an EWMA of observed
+                                  per-class contention (denials +
+                                  violation ticks); uses --envelopes as
+                                  the base split, or the default split
+                                  when unset (default false)
                 [--cluster <bool>] back tenants with a physical substrate
                 [--substrate <s>] des|sampling|analytical — back tenants
                                   with this engine (implies --cluster
                                   true; default des)
                 [--seed <u64>] (default 42, substrate modes only)
+  placement   Cross-tenant bin-packing onto shared clusters: small
+              tenants co-locate behind shared hosts (fair shares +
+              contention knee), the packer replans on a cadence, and
+              migrations are priced as DES-calendar windows
+                [--tenants <n>] (default 12)
+                [--steps <n>] (default 100)
+                [--budget <f32>/h] (default 1e9: uncapped)
+                [--k <n>] fairness guard K (default 3)
+                [--scale <f32>] demand scale vs the paper trace
+                                  (default 0.1: small tenants)
+                [--replan <n>] packer cadence in ticks (default 4)
+                [--mode <m>] packed|dedicated|both (default both:
+                                  A/B the packer against
+                                  one-cluster-per-tenant)
 ";
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -378,6 +400,12 @@ fn main() -> Result<()> {
                 }
             }
             let mut fleetsim = FleetSimulator::with_arbiter(&cfg, specs, arb);
+            if args.parse_num("adaptive-envelopes", false)? {
+                if !planning {
+                    bail!("--adaptive-envelopes requires --planning true");
+                }
+                fleetsim.enable_adaptive_envelopes();
+            }
             match args.get("forecast") {
                 None | Some("off") => {}
                 Some(name) => {
@@ -401,6 +429,62 @@ fn main() -> Result<()> {
             println!("\n{}", fleet::report::table(&res.report));
             if !res.within_budget(budget) {
                 bail!("fleet spend exceeded the budget (peak {:.2})", res.peak_spend());
+            }
+        }
+        "placement" => {
+            let n: usize = args.parse_num("tenants", 12)?;
+            if n == 0 {
+                bail!("--tenants must be at least 1");
+            }
+            let steps: usize = args.parse_num("steps", 100)?;
+            let budget: f32 = args.parse_num("budget", 1.0e9)?;
+            let k: usize = args.parse_num("k", 3)?;
+            let scale: f32 = args.parse_num("scale", 0.1)?;
+            let mode = args.get("mode").unwrap_or("both");
+            if !matches!(mode, "packed" | "dedicated" | "both") {
+                bail!("unknown --mode `{mode}` (expected packed|dedicated|both)");
+            }
+            let pcfg = PlacementConfig {
+                replan_every: args.parse_num("replan", 4)?,
+                ..PlacementConfig::default()
+            };
+            let specs = || placement::small_tenant_specs(&cfg, n, scale);
+
+            let mut runs: Vec<(&str, placement::PlacementResult)> = Vec::new();
+            if mode != "packed" {
+                let mut ded = PlacementSim::dedicated(&cfg, specs(), budget, k, pcfg);
+                runs.push(("dedicated", ded.run(steps)));
+            }
+            if mode != "dedicated" {
+                let mut packed = PlacementSim::packed(&cfg, specs(), budget, k, pcfg);
+                runs.push(("packed", packed.run(steps)));
+            }
+            for (label, res) in &runs {
+                println!("== {label} ==");
+                for t in &res.ticks {
+                    println!(
+                        "tick {:>4}  spend {:>7.2}  clusters {:>2}  degraded {:>2}  migrations {:>2}  admitted {:>2}  denied {:>2}  viol {:>2}",
+                        t.step, t.spend, t.clusters, t.degraded_clusters, t.migrations,
+                        t.admitted_moves, t.denied_moves, t.violations
+                    );
+                }
+                println!("\n{}", res.report.table());
+                if !res.within_budget(budget) {
+                    bail!("{label} placement exceeded the budget (peak {:.2})", res.peak_spend());
+                }
+            }
+            if runs.len() == 2 {
+                let (ded, packed) = (&runs[0].1, &runs[1].1);
+                println!(
+                    "A/B: packed cost {:.1} vs dedicated {:.1} ({:.0}% of dedicated), \
+                     violations {} vs {}, migrations {}",
+                    packed.total_cost(),
+                    ded.total_cost(),
+                    100.0 * packed.total_cost() / ded.total_cost().max(1e-9),
+                    packed.total_violations(),
+                    ded.total_violations(),
+                    packed.total_migrations(),
+                );
             }
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),

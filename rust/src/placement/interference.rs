@@ -1,0 +1,145 @@
+//! Interference model for shared clusters: weighted max-min fair
+//! capacity shares plus a contention penalty on the latency surface
+//! once total host utilization crosses a knee.
+//!
+//! Co-located tenants are not isolated: they draw from one host's
+//! capacity and they inflate each other's tail latency as the host
+//! runs hot. The model here is deliberately the simplest thing with
+//! both properties — a water-filling allocator splits observed
+//! capacity (so a class-weighted tenant keeps throughput under
+//! shortage), and a piecewise-linear penalty multiplies the latency
+//! surface above the knee (so packing tenants onto a hot host has a
+//! latency price the packer must respect).
+
+/// Weighted max-min fair (water-filling) allocation of `capacity`
+/// among `demands` with positive `weights`.
+///
+/// Properties (pinned by the tests below and `prop_placement`):
+/// * `alloc[i] <= demands[i]` — nobody receives more than they asked;
+/// * `sum(alloc) <= capacity` — the host is never oversubscribed;
+/// * if `sum(demands) <= capacity`, everyone is fully satisfied;
+/// * under shortage, leftover capacity splits in proportion to the
+///   weights among the still-unsatisfied tenants (higher class keeps
+///   throughput first).
+pub fn fair_shares(capacity: f64, demands: &[f64], weights: &[f64]) -> Vec<f64> {
+    assert_eq!(demands.len(), weights.len());
+    let n = demands.len();
+    let mut alloc = vec![0.0f64; n];
+    let mut active: Vec<bool> = demands.iter().map(|&d| d > 0.0).collect();
+    let mut cap = capacity.max(0.0);
+    // every round either fully satisfies at least one tenant or splits
+    // the remainder and stops, so n rounds always suffice
+    for _ in 0..n {
+        let wsum: f64 = (0..n).filter(|&i| active[i]).map(|i| weights[i]).sum();
+        if wsum <= 0.0 || cap <= 1e-12 {
+            break;
+        }
+        // saturation test against one capacity snapshot (the shares of
+        // this round), so the outcome is order-independent
+        let sat: Vec<usize> = (0..n)
+            .filter(|&i| active[i] && demands[i] - alloc[i] <= cap * weights[i] / wsum + 1e-12)
+            .collect();
+        if sat.is_empty() {
+            // every active tenant is capacity-bound: split what is left
+            // by weight and stop
+            for i in 0..n {
+                if active[i] {
+                    alloc[i] += cap * weights[i] / wsum;
+                }
+            }
+            break;
+        }
+        for i in sat {
+            cap -= demands[i] - alloc[i];
+            alloc[i] = demands[i];
+            active[i] = false;
+        }
+    }
+    alloc
+}
+
+/// Latency multiplier for a host at `util` = total demand / capacity:
+/// 1.0 below the `knee`, rising linearly with `slope` above it. Every
+/// co-located tenant pays it — the contention price of sharing.
+pub fn contention_factor(util: f64, knee: f64, slope: f64) -> f64 {
+    1.0 + slope * (util - knee).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+    use crate::workload::XorShift64;
+
+    fn uniform(rng: &mut XorShift64, lo: f64, hi: f64) -> f64 {
+        rng.range_f64(lo, hi)
+    }
+
+    #[test]
+    fn underload_satisfies_everyone_exactly() {
+        let a = fair_shares(1000.0, &[100.0, 300.0, 200.0], &[1.0, 2.0, 4.0]);
+        assert_eq!(a, vec![100.0, 300.0, 200.0]);
+    }
+
+    #[test]
+    fn shortage_splits_by_weight_after_satisfying_small_demands() {
+        // gold (w=4) asks 800 of 1000: its weighted share is exactly
+        // 800, so it saturates; bronze gets the remaining 200
+        let a = fair_shares(1000.0, &[800.0, 800.0], &[4.0, 1.0]);
+        assert!((a[0] - 800.0).abs() < 1e-9, "{a:?}");
+        assert!((a[1] - 200.0).abs() < 1e-9, "{a:?}");
+    }
+
+    #[test]
+    fn deep_shortage_is_weight_proportional() {
+        let a = fair_shares(300.0, &[1000.0, 1000.0, 1000.0], &[1.0, 1.0, 2.0]);
+        assert!((a[0] - 75.0).abs() < 1e-9, "{a:?}");
+        assert!((a[1] - 75.0).abs() < 1e-9, "{a:?}");
+        assert!((a[2] - 150.0).abs() < 1e-9, "{a:?}");
+    }
+
+    #[test]
+    fn zero_demand_tenants_get_nothing() {
+        let a = fair_shares(100.0, &[0.0, 50.0], &[4.0, 1.0]);
+        assert_eq!(a[0], 0.0);
+        assert_eq!(a[1], 50.0);
+    }
+
+    #[test]
+    fn allocation_invariants_hold_for_random_inputs() {
+        forall(500, 0xFA125, |_, rng| {
+            let n = 1 + rng.below(8) as usize;
+            let cap = uniform(rng, 0.0, 5000.0);
+            let demands: Vec<f64> = (0..n).map(|_| uniform(rng, 0.0, 1500.0)).collect();
+            let weights: Vec<f64> =
+                (0..n).map(|_| [1.0, 2.0, 4.0][rng.below(3) as usize]).collect();
+            let alloc = fair_shares(cap, &demands, &weights);
+            let total: f64 = alloc.iter().sum();
+            assert!(total <= cap + 1e-6, "oversubscribed: {total} > {cap}");
+            for (a, d) in alloc.iter().zip(&demands) {
+                assert!(*a <= d + 1e-9, "over-served: {a} > {d}");
+                assert!(*a >= 0.0);
+            }
+            if demands.iter().sum::<f64>() <= cap {
+                for (a, d) in alloc.iter().zip(&demands) {
+                    assert!((a - d).abs() < 1e-6, "underload must satisfy: {a} vs {d}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn contention_is_flat_below_the_knee_and_linear_above() {
+        assert_eq!(contention_factor(0.0, 0.7, 2.0), 1.0);
+        assert_eq!(contention_factor(0.7, 0.7, 2.0), 1.0);
+        assert!((contention_factor(0.8, 0.7, 2.0) - 1.2).abs() < 1e-12);
+        assert!((contention_factor(1.0, 0.7, 2.0) - 1.6).abs() < 1e-12);
+        // monotone in utilization
+        let mut prev = 0.0;
+        for u in [0.0, 0.5, 0.7, 0.75, 0.9, 1.2] {
+            let f = contention_factor(u, 0.7, 2.0);
+            assert!(f >= prev);
+            prev = f;
+        }
+    }
+}

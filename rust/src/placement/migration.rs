@@ -1,0 +1,155 @@
+//! Migration pricing: a tenant move is a rebalance event on the DES
+//! calendar, not bookkeeping. The data moved is the tenant's dataset
+//! share; the transfer runs over the destination host's movement
+//! bandwidth (the same `move_bandwidth_frac` slice the substrate
+//! engines grant shard rebalancing), and while it is in flight the
+//! destination serves at `rebalance_degradation` capacity — so packing
+//! decisions pay a latency price on the ticks the move spans.
+
+use crate::cluster::ClusterParams;
+use crate::plane::{Configuration, ScalingPlane};
+
+/// Where a migration lands: an existing live cluster (by id) or the
+/// `k`-th cluster a rebalance bundle creates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterRef {
+    Existing(usize),
+    New(usize),
+}
+
+/// One planned tenant move.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlannedMigration {
+    pub tenant: usize,
+    /// Live cluster id the tenant leaves.
+    pub from: usize,
+    pub to: ClusterRef,
+}
+
+/// The degradation window a migration opens on its destination.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationWindow {
+    /// Data moved (the tenant's dataset share, GB).
+    pub data_gb: f64,
+    /// Wall-clock transfer time (synthetic seconds) over the host's
+    /// movement bandwidth.
+    pub duration: f64,
+    /// Capacity multiplier on the destination while in flight.
+    pub degradation: f64,
+}
+
+/// Diff between the live placement and a packer target, priced as a
+/// single budget-consuming action: migrations to actuate, host
+/// resizes, clusters to create, and the hourly-cost edge the budget
+/// arbiter admits or defers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RebalanceBundle {
+    pub migrations: Vec<PlannedMigration>,
+    /// Existing cluster id → new host config.
+    pub resizes: Vec<(usize, Configuration)>,
+    /// New clusters to open: config + the tenants migrating in.
+    pub creates: Vec<(Configuration, Vec<usize>)>,
+    /// Σ current hourly cost of the clusters the bundle touches.
+    pub cost_from: f32,
+    /// Σ target hourly cost of the same clusters (retired ones count 0).
+    pub cost_to: f32,
+}
+
+impl RebalanceBundle {
+    pub fn is_empty(&self) -> bool {
+        self.migrations.is_empty() && self.resizes.is_empty() && self.creates.is_empty()
+    }
+
+    /// Hourly-cost delta the arbiter accounts for (negative bundles are
+    /// consolidation savings and admit as shrinks).
+    pub fn cost_delta(&self) -> f32 {
+        self.cost_to - self.cost_from
+    }
+}
+
+/// Prices tenant moves against a host's movement bandwidth.
+#[derive(Debug, Clone, Copy)]
+pub struct MigrationPlanner {
+    /// Dataset share per tenant (GB) — what a migration must move.
+    pub tenant_gb: f64,
+}
+
+impl MigrationPlanner {
+    pub fn new(tenant_gb: f64) -> Self {
+        assert!(tenant_gb >= 0.0, "dataset share cannot be negative");
+        Self { tenant_gb }
+    }
+
+    /// The window one tenant move opens on a destination at `dest`:
+    /// `tenant_gb` over the host's aggregate movement bandwidth
+    /// (`H × tier bandwidth × move_bandwidth_frac`), degraded at the
+    /// substrate's rebalance factor while in flight.
+    pub fn price(
+        &self,
+        plane: &ScalingPlane,
+        dest: &Configuration,
+        params: &ClusterParams,
+    ) -> MigrationWindow {
+        let h = plane.h_value(dest) as f64;
+        let bw = h * plane.tier(dest).bandwidth as f64 * params.move_bandwidth_frac;
+        let duration = if bw > 0.0 { self.tenant_gb / bw } else { 0.0 };
+        MigrationWindow {
+            data_gb: self.tenant_gb,
+            duration,
+            degradation: params.rebalance_degradation,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn plane() -> ScalingPlane {
+        ModelConfig::default_paper().plane()
+    }
+
+    #[test]
+    fn bigger_hosts_absorb_migrations_faster() {
+        let planner = MigrationPlanner::new(2.0);
+        let params = ClusterParams::default();
+        let p = plane();
+        let small = planner.price(&p, &Configuration::new(0, 1), &params);
+        let big = planner.price(&p, &Configuration::new(2, 3), &params);
+        assert!(small.duration > big.duration);
+        assert_eq!(small.data_gb, 2.0);
+        assert_eq!(small.degradation, params.rebalance_degradation);
+    }
+
+    #[test]
+    fn duration_scales_linearly_with_dataset_share() {
+        let params = ClusterParams::default();
+        let p = plane();
+        let dest = Configuration::new(1, 1);
+        let one = MigrationPlanner::new(1.0).price(&p, &dest, &params);
+        let four = MigrationPlanner::new(4.0).price(&p, &dest, &params);
+        assert!((four.duration - 4.0 * one.duration).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_duration_formula() {
+        // (H=1, medium): bw 5.0, move fraction 0.2 → 1.0 GB/s; 2 GB → 2 s
+        let params = ClusterParams::default();
+        let w = MigrationPlanner::new(2.0).price(&plane(), &Configuration::new(0, 1), &params);
+        assert!((w.duration - 2.0).abs() < 1e-12, "duration {}", w.duration);
+    }
+
+    #[test]
+    fn bundle_cost_delta() {
+        let b = RebalanceBundle {
+            migrations: Vec::new(),
+            resizes: Vec::new(),
+            creates: Vec::new(),
+            cost_from: 2.4,
+            cost_to: 1.8,
+        };
+        assert!(b.is_empty());
+        assert!((b.cost_delta() + 0.6).abs() < 1e-6);
+    }
+}

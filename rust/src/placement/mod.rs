@@ -1,0 +1,277 @@
+//! Cross-tenant placement: co-locate small tenants on shared physical
+//! clusters and make scaling decisions placement-aware.
+//!
+//! The fleet layer (PR 1–3) scales N tenants under one budget but pays
+//! the worst case on cost: one dedicated cluster per tenant, so every
+//! small Bronze tenant carries a full per-node fixed cost. This module
+//! is the control layer that wins that cost back:
+//!
+//! * [`SharedCluster`] hosts multiple tenants behind one host
+//!   configuration. Observed capacity splits by weighted max-min fair
+//!   shares ([`interference::fair_shares`]; Gold outweighs Silver
+//!   outweighs Bronze), and every co-located tenant pays a contention
+//!   penalty on the latency surface once total utilization crosses a
+//!   knee ([`interference::contention_factor`]) — sharing is priced,
+//!   not free.
+//! * [`Packer`] plans placements: first-fit-decreasing seeding plus
+//!   DIAGONALSCALE-style local search over {migrate tenant, merge
+//!   clusters, split cluster, resize host}, minimizing fleet cost
+//!   subject to every hosted tenant's SLA — including a *transition
+//!   guard* that refuses plans which only work at full health (a
+//!   migration window degrades the destination while data moves).
+//! * [`MigrationPlanner`] prices each tenant move as a rebalance event
+//!   on the cluster's DES calendar: data moved is the tenant's dataset
+//!   share, transfer time runs over the host's movement bandwidth, and
+//!   the destination serves degraded until the
+//!   [`Event::MigrationEnd`](crate::cluster::Event::MigrationEnd)
+//!   event fires — migrations have latency consequences.
+//! * [`PlacementSim`] drives it end to end: serve → propose → admit →
+//!   actuate, with every placement action (reactive host resizes and
+//!   the packer's rebalance bundles) walking through the fleet's
+//!   [`BudgetArbiter`](crate::fleet::BudgetArbiter) as a
+//!   budget-consuming proposal. `PlacementSim::dedicated` keeps the
+//!   one-cluster-per-tenant baseline for A/B runs; the pinned tests
+//!   assert packing strictly lowers fleet cost at no more
+//!   SLA-violation ticks on the 12-small-tenant scenario.
+//!
+//! Entry points: [`crate::fleet::FleetSimulator::with_placement`], the
+//! `placement` CLI subcommand, `examples/placement_packing.rs`, and
+//! `cargo bench --bench placement`.
+
+pub mod interference;
+pub mod migration;
+pub mod packer;
+pub mod sim;
+
+pub use interference::{contention_factor, fair_shares};
+pub use migration::{
+    ClusterRef, MigrationPlanner, MigrationWindow, PlannedMigration, RebalanceBundle,
+};
+pub use packer::{PackInput, Packer, Placement, PlannedCluster};
+pub use sim::{
+    constant_tenant_specs, small_tenant_specs, PlacementReport, PlacementResult, PlacementSim,
+    PlacementTick, TenantPlacementReport,
+};
+
+use crate::cluster::{Event, EventCalendar};
+use crate::fleet::PriorityClass;
+use crate::plane::Configuration;
+
+/// Tunables of the placement subsystem.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlacementConfig {
+    /// Utilization knee where the contention penalty starts.
+    pub knee: f64,
+    /// Latency-penalty slope above the knee.
+    pub contention: f64,
+    /// Dataset share per tenant (GB) — what a migration moves.
+    pub tenant_gb: f64,
+    /// Packer cadence: full replans every this many ticks.
+    pub replan_every: usize,
+    /// Planning lookahead: size hosts for the peak demand over the next
+    /// this many ticks (seasonal one-period lookahead — the fleet's
+    /// cyclic traces make it exact, mirroring `ForecastKind::Seasonal`).
+    pub plan_horizon: usize,
+    /// Local-search improvement rounds per replan.
+    pub search_rounds: usize,
+    /// Score penalty per tenant moved, so equal-cost shuffles never
+    /// happen (a quarter of the smallest tier cost step).
+    pub migration_penalty: f32,
+    /// Capacity multiplier assumed while a transition window is open —
+    /// plans must stay feasible at this degraded capacity.
+    /// [`PlacementSim::new`] overrides it with
+    /// `min(rebalance_degradation, restart_degradation)` from the live
+    /// [`crate::cluster::ClusterParams`], so the guard always mirrors
+    /// the windows the simulator actually opens; the default here only
+    /// serves packers built standalone.
+    pub transition_guard: f64,
+}
+
+impl Default for PlacementConfig {
+    fn default() -> Self {
+        Self {
+            knee: 0.7,
+            contention: 2.0,
+            tenant_gb: 2.0,
+            replan_every: 4,
+            plan_horizon: 4,
+            search_rounds: 64,
+            migration_penalty: 0.02,
+            // matches ClusterParams::default(): min(rebalance 0.7,
+            // restart 0.8)
+            transition_guard: 0.7,
+        }
+    }
+}
+
+/// Fair-share weight of a priority class on a shared host: Gold
+/// outweighs Silver outweighs Bronze 4:2:1, so under capacity shortage
+/// the allocator satisfies higher classes first.
+pub fn class_weight(class: PriorityClass) -> f64 {
+    match class {
+        PriorityClass::Gold => 4.0,
+        PriorityClass::Silver => 2.0,
+        PriorityClass::Bronze => 1.0,
+    }
+}
+
+/// One shared physical cluster: a host configuration, the tenants
+/// co-located on it, and the DES calendar of open degradation windows
+/// (migrations in flight, reconfigurations rolling).
+#[derive(Debug)]
+pub struct SharedCluster {
+    id: usize,
+    config: Configuration,
+    /// Hosted tenant ids, sorted ascending.
+    tenants: Vec<usize>,
+    calendar: EventCalendar,
+    /// Open degradation windows as `(end time, factor)`; each entry
+    /// leaves when its calendar event fires, so the live factor is
+    /// always the min over the windows *still* open (a deep window
+    /// closing restores the shallower survivor's factor).
+    open: Vec<(f64, f64)>,
+    /// Any hosted tenant violated its SLA on the last served tick.
+    pub violating: bool,
+    /// Consecutive denied repair proposals while violating (feeds the
+    /// arbiter's fairness rescue, like a tenant's denial streak).
+    pub denial_streak: usize,
+}
+
+impl SharedCluster {
+    pub fn new(id: usize, config: Configuration, mut tenants: Vec<usize>) -> Self {
+        tenants.sort_unstable();
+        Self {
+            id,
+            config,
+            tenants,
+            calendar: EventCalendar::new(),
+            open: Vec::new(),
+            violating: false,
+            denial_streak: 0,
+        }
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn config(&self) -> Configuration {
+        self.config
+    }
+
+    pub fn tenants(&self) -> &[usize] {
+        &self.tenants
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// A degradation window is currently open.
+    pub fn degraded(&self) -> bool {
+        !self.open.is_empty()
+    }
+
+    /// Current capacity multiplier: the deepest *still-open* window's
+    /// factor (1.0 healthy).
+    pub fn degradation(&self) -> f64 {
+        self.open.iter().map(|&(_, d)| d).fold(1.0, f64::min)
+    }
+
+    /// Pending calendar entries (diagnostics / tests).
+    pub fn pending_events(&self) -> usize {
+        self.calendar.len()
+    }
+
+    /// Fire every window-close event due at or before `t`; the matching
+    /// window entries leave, so the live factor recovers to the min of
+    /// what remains open.
+    pub(crate) fn drain_due(&mut self, t: f64) {
+        while let Some((_, ev)) = self.calendar.pop_due(t) {
+            match ev {
+                Event::MigrationEnd | Event::RebalanceEnd | Event::RestartEnd => {}
+                // compaction is owned by the substrate engines, never
+                // scheduled on placement calendars
+                Event::CompactionStart { .. } | Event::CompactionEnd { .. } => {}
+            }
+        }
+        self.open.retain(|&(end, _)| end > t);
+    }
+
+    /// Open a degradation window closing at `end`. Overlapping windows
+    /// stack: the cluster stays degraded until the last one closes, at
+    /// the deepest factor among those still open.
+    pub(crate) fn open_window(&mut self, end: f64, degradation: f64, event: Event) {
+        self.open.push((end, degradation));
+        self.calendar.schedule(end, event);
+    }
+
+    pub(crate) fn set_config(&mut self, config: Configuration) {
+        self.config = config;
+    }
+
+    pub(crate) fn add_tenant(&mut self, tenant: usize) {
+        if let Err(pos) = self.tenants.binary_search(&tenant) {
+            self.tenants.insert(pos, tenant);
+        }
+    }
+
+    pub(crate) fn remove_tenant(&mut self, tenant: usize) {
+        if let Ok(pos) = self.tenants.binary_search(&tenant) {
+            self.tenants.remove(pos);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_weights_are_ordered() {
+        assert!(class_weight(PriorityClass::Gold) > class_weight(PriorityClass::Silver));
+        assert!(class_weight(PriorityClass::Silver) > class_weight(PriorityClass::Bronze));
+    }
+
+    #[test]
+    fn windows_stack_and_close_via_calendar_events() {
+        let mut cl = SharedCluster::new(0, Configuration::new(1, 1), vec![2, 0, 1]);
+        assert_eq!(cl.tenants(), &[0, 1, 2]);
+        assert!(!cl.degraded());
+        assert_eq!(cl.degradation(), 1.0);
+
+        cl.open_window(1.5, 0.7, Event::MigrationEnd);
+        cl.open_window(2.5, 0.8, Event::MigrationEnd);
+        assert!(cl.degraded());
+        // deepest open factor wins while both are open
+        assert_eq!(cl.degradation(), 0.7);
+        assert_eq!(cl.pending_events(), 2);
+
+        cl.drain_due(1.0);
+        assert!(cl.degraded(), "nothing due yet");
+        assert_eq!(cl.degradation(), 0.7);
+        cl.drain_due(1.5);
+        assert!(cl.degraded(), "one window still open");
+        assert_eq!(cl.pending_events(), 1);
+        // the deep window closed: capacity recovers to the survivor's
+        // factor, not the ratcheted minimum
+        assert_eq!(cl.degradation(), 0.8);
+        cl.drain_due(3.0);
+        assert!(!cl.degraded());
+        assert_eq!(cl.degradation(), 1.0);
+        assert_eq!(cl.pending_events(), 0);
+    }
+
+    #[test]
+    fn tenant_membership_stays_sorted_and_deduplicated() {
+        let mut cl = SharedCluster::new(0, Configuration::new(1, 1), vec![5]);
+        cl.add_tenant(3);
+        cl.add_tenant(9);
+        cl.add_tenant(3); // duplicate ignored
+        assert_eq!(cl.tenants(), &[3, 5, 9]);
+        cl.remove_tenant(5);
+        assert_eq!(cl.tenants(), &[3, 9]);
+        cl.remove_tenant(42); // absent: no-op
+        assert_eq!(cl.tenants(), &[3, 9]);
+    }
+}

@@ -1,0 +1,547 @@
+//! The bin-packer: first-fit-decreasing seeding plus DIAGONALSCALE-style
+//! local search over placement moves — migrate a tenant, merge two
+//! clusters, split a cluster, resize a host — minimizing fleet cost
+//! subject to every hosted tenant's SLA.
+//!
+//! Feasibility is interference-aware: a host is feasible for a tenant
+//! set when its throughput covers the *buffered* total demand and the
+//! latency surface, inflated by the contention penalty at the implied
+//! utilization, stays within the tightest hosted `l_max`. Any move that
+//! changes a cluster's shape (gaining tenants, or a config change) is
+//! additionally checked against the **transition guard**: the window
+//! opened by the implied migration/rebalance degrades capacity, and a
+//! plan that only works at full health would violate SLAs for the whole
+//! window. This is why the packer will consolidate twelve small tenants
+//! onto a host one notch larger than the steady-state optimum, and why
+//! it refuses the last downsize that a window could not absorb —
+//! hysteresis, not a bug.
+//!
+//! All enumeration orders are fixed (clusters by position, tenants by
+//! id, the plane row-major), so packing is deterministic: same inputs,
+//! same placement.
+
+use std::sync::Arc;
+
+use crate::plane::Configuration;
+use crate::surfaces::SurfaceModel;
+
+use super::interference::contention_factor;
+use super::PlacementConfig;
+
+/// Per-tenant planning inputs: the demand each tenant must be hosted
+/// for (the fleet plans against the peak over its lookahead horizon)
+/// and its latency bound.
+#[derive(Debug, Clone)]
+pub struct PackInput {
+    /// Planning demand per tenant (ops per unit time).
+    pub demand: Vec<f64>,
+    /// Per-tenant latency bound (`SlaSpec::l_max`).
+    pub l_max: Vec<f32>,
+    /// Throughput planning buffer (`SlaSpec::b_sla`).
+    pub b_sla: f64,
+}
+
+impl PackInput {
+    pub fn len(&self) -> usize {
+        self.demand.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.demand.is_empty()
+    }
+
+    /// Total planning demand of a tenant set.
+    pub fn lam_sum(&self, tenants: &[usize]) -> f64 {
+        tenants.iter().map(|&t| self.demand[t]).sum()
+    }
+
+    /// Tightest latency bound across a tenant set.
+    pub fn lmax_min(&self, tenants: &[usize]) -> f64 {
+        tenants
+            .iter()
+            .map(|&t| self.l_max[t] as f64)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// One shared cluster as the packer plans it: a host configuration and
+/// the tenants co-located on it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedCluster {
+    pub config: Configuration,
+    /// Hosted tenant ids, sorted ascending.
+    pub tenants: Vec<usize>,
+}
+
+/// A full fleet placement: every tenant on exactly one cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub clusters: Vec<PlannedCluster>,
+}
+
+impl Placement {
+    /// One cluster per tenant at a common start config (the un-packed
+    /// baseline every simulation starts from).
+    pub fn dedicated(n: usize, config: Configuration) -> Self {
+        Self {
+            clusters: (0..n)
+                .map(|t| PlannedCluster { config, tenants: vec![t] })
+                .collect(),
+        }
+    }
+
+    /// Index of the cluster hosting `tenant`, if any.
+    pub fn host_of(&self, tenant: usize) -> Option<usize> {
+        self.clusters.iter().position(|c| c.tenants.contains(&tenant))
+    }
+
+    /// Every tenant id in 0..n hosted exactly once.
+    pub fn hosts_all(&self, n: usize) -> bool {
+        let mut seen = vec![0usize; n];
+        for c in &self.clusters {
+            for &t in &c.tenants {
+                if t >= n {
+                    return false;
+                }
+                seen[t] += 1;
+            }
+        }
+        seen.iter().all(|&k| k == 1)
+    }
+
+    /// Total planning demand hosted (conserved by every packer move).
+    pub fn total_demand(&self, input: &PackInput) -> f64 {
+        self.clusters.iter().map(|c| input.lam_sum(&c.tenants)).sum()
+    }
+
+    /// Σ host hourly cost.
+    pub fn cost(&self, model: &SurfaceModel) -> f32 {
+        self.clusters.iter().map(|c| model.cost(&c.config)).sum()
+    }
+}
+
+/// FFD seeding + local search over placement moves.
+pub struct Packer {
+    model: Arc<SurfaceModel>,
+    pcfg: PlacementConfig,
+}
+
+impl Packer {
+    pub fn new(model: Arc<SurfaceModel>, pcfg: PlacementConfig) -> Self {
+        Self { model, pcfg }
+    }
+
+    pub fn model(&self) -> &SurfaceModel {
+        &self.model
+    }
+
+    /// Host feasibility for a tenant set at full health: buffered total
+    /// demand within throughput, contention-inflated latency within the
+    /// tightest hosted bound.
+    pub fn steady_feasible(&self, cfg: &Configuration, lam: f64, lmax: f64, input: &PackInput) -> bool {
+        self.feasible(cfg, lam, lmax, input, 1.0)
+    }
+
+    /// Host feasibility *during a migration/rebalance window*: capacity
+    /// degraded by the transition guard must still carry the plan.
+    pub fn transition_feasible(
+        &self,
+        cfg: &Configuration,
+        lam: f64,
+        lmax: f64,
+        input: &PackInput,
+    ) -> bool {
+        self.feasible(cfg, lam, lmax, input, self.pcfg.transition_guard)
+    }
+
+    fn feasible(&self, cfg: &Configuration, lam: f64, lmax: f64, input: &PackInput, deg: f64) -> bool {
+        let cap = self.model.throughput(cfg) as f64 * deg;
+        if cap < lam * input.b_sla {
+            return false;
+        }
+        let util = if cap > 0.0 { lam / cap } else { f64::INFINITY };
+        let factor = contention_factor(util, self.pcfg.knee, self.pcfg.contention);
+        self.model.latency(cfg) as f64 * factor <= lmax
+    }
+
+    /// Cheapest plane config hosting the set (row-major tie-break),
+    /// `None` if nothing on the plane is feasible.
+    pub fn cheapest_host(
+        &self,
+        lam: f64,
+        lmax: f64,
+        input: &PackInput,
+        guard: bool,
+    ) -> Option<Configuration> {
+        let deg = if guard { self.pcfg.transition_guard } else { 1.0 };
+        let mut best: Option<Configuration> = None;
+        for c in self.model.plane().iter() {
+            if self.feasible(&c, lam, lmax, input, deg)
+                && best.map_or(true, |b| self.model.cost(&c) < self.model.cost(&b))
+            {
+                best = Some(c);
+            }
+        }
+        best
+    }
+
+    /// Config for a cluster whose shape changes: the transition-guarded
+    /// cheapest, falling back to the steady cheapest (violate through
+    /// the window rather than forever), falling back to the
+    /// violation-minimizing max-throughput config.
+    pub fn sizing(&self, lam: f64, lmax: f64, input: &PackInput) -> Configuration {
+        if let Some(c) = self.cheapest_host(lam, lmax, input, true) {
+            return c;
+        }
+        if let Some(c) = self.cheapest_host(lam, lmax, input, false) {
+            return c;
+        }
+        let mut best = Configuration::new(0, 0);
+        for c in self.model.plane().iter() {
+            if self.model.throughput(&c) > self.model.throughput(&best) {
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// First-fit-decreasing seed: tenants by planning demand descending
+    /// (id ascending on ties), each into the first cluster that stays
+    /// steady-feasible with it, opening a new cluster otherwise.
+    pub fn ffd(&self, input: &PackInput) -> Placement {
+        let mut order: Vec<usize> = (0..input.len()).collect();
+        order.sort_by(|&a, &b| {
+            input.demand[b].total_cmp(&input.demand[a]).then(a.cmp(&b))
+        });
+        let mut clusters: Vec<PlannedCluster> = Vec::new();
+        for t in order {
+            let mut placed = false;
+            for c in clusters.iter_mut() {
+                let mut members = c.tenants.clone();
+                members.push(t);
+                let lam = input.lam_sum(&members);
+                let lmax = input.lmax_min(&members);
+                if let Some(cfg) = self.cheapest_host(lam, lmax, input, false) {
+                    members.sort_unstable();
+                    c.config = cfg;
+                    c.tenants = members;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                let cfg = self.sizing(input.demand[t], input.l_max[t] as f64, input);
+                clusters.push(PlannedCluster { config: cfg, tenants: vec![t] });
+            }
+        }
+        Placement { clusters }
+    }
+
+    /// Merge clusters `i` and `j` (j's tenants migrate onto i), resizing
+    /// the union under the transition guard. `None` when no feasible
+    /// host exists for the union.
+    pub fn merge(&self, p: &Placement, i: usize, j: usize, input: &PackInput) -> Option<Placement> {
+        if i == j || i >= p.clusters.len() || j >= p.clusters.len() {
+            return None;
+        }
+        let mut union = p.clusters[i].tenants.clone();
+        union.extend_from_slice(&p.clusters[j].tenants);
+        union.sort_unstable();
+        let cfg =
+            self.cheapest_host(input.lam_sum(&union), input.lmax_min(&union), input, true)?;
+        let mut out = p.clone();
+        out.clusters[i] = PlannedCluster { config: cfg, tenants: union };
+        out.clusters.remove(j);
+        Some(out)
+    }
+
+    /// Split cluster `i` into two halves (alternating by planning
+    /// demand); the half that stays keeps the cheaper of its current
+    /// config and a guarded downsize, the leaving half is sized under
+    /// the transition guard. `None` for singletons or when the leaving
+    /// half has no feasible host.
+    pub fn split(&self, p: &Placement, i: usize, input: &PackInput) -> Option<Placement> {
+        let cl = p.clusters.get(i)?;
+        if cl.tenants.len() < 2 {
+            return None;
+        }
+        let mut bydem = cl.tenants.clone();
+        bydem.sort_by(|&a, &b| {
+            input.demand[b].total_cmp(&input.demand[a]).then(a.cmp(&b))
+        });
+        let mut stay: Vec<usize> = bydem.iter().copied().step_by(2).collect();
+        let mut leave: Vec<usize> = bydem.iter().copied().skip(1).step_by(2).collect();
+        stay.sort_unstable();
+        leave.sort_unstable();
+        let stay_cfg = self.keep_or_downsize(&cl.config, &stay, input);
+        let leave_cfg =
+            self.cheapest_host(input.lam_sum(&leave), input.lmax_min(&leave), input, true)?;
+        let mut out = p.clone();
+        out.clusters[i] = PlannedCluster { config: stay_cfg, tenants: stay };
+        out.clusters.push(PlannedCluster { config: leave_cfg, tenants: leave });
+        Some(out)
+    }
+
+    /// For a cluster that only *loses* tenants: keeping the current
+    /// config is transition-free, so take the cheaper of that (when
+    /// still steady-feasible) and a guarded downsize.
+    fn keep_or_downsize(
+        &self,
+        current: &Configuration,
+        members: &[usize],
+        input: &PackInput,
+    ) -> Configuration {
+        let lam = input.lam_sum(members);
+        let lmax = input.lmax_min(members);
+        let down = self.cheapest_host(lam, lmax, input, true);
+        match down {
+            Some(d) if self.model.cost(&d) < self.model.cost(current) => d,
+            _ if self.feasible(current, lam, lmax, input, 1.0) => *current,
+            Some(d) => d,
+            None => self.sizing(lam, lmax, input),
+        }
+    }
+
+    /// Best-improvement local search from `start` (the live placement:
+    /// its configs are what is deployed). Every accepted move strictly
+    /// lowers Σ host cost + `migration_penalty` × tenants moved, so the
+    /// search terminates and never shuffles tenants for free.
+    pub fn improve(&self, start: &Placement, input: &PackInput) -> Placement {
+        let mut clusters: Vec<PlannedCluster> = start
+            .clusters
+            .iter()
+            .filter(|c| !c.tenants.is_empty())
+            .cloned()
+            .collect();
+        let penalty = self.pcfg.migration_penalty;
+
+        for _ in 0..self.pcfg.search_rounds {
+            let n = clusters.len();
+            // (delta, placement after the move)
+            let mut best: Option<(f32, Vec<PlannedCluster>)> = None;
+            let mut consider = |delta: f32, next: Vec<PlannedCluster>| {
+                if delta < -1e-4 && best.as_ref().map_or(true, |(d, _)| delta < *d) {
+                    best = Some((delta, next));
+                }
+            };
+            let p = Placement { clusters: clusters.clone() };
+
+            // resize: the cheapest steady config that also survives its
+            // own reconfiguration window
+            for i in 0..n {
+                let cl = &clusters[i];
+                let lam = input.lam_sum(&cl.tenants);
+                let lmax = input.lmax_min(&cl.tenants);
+                if let Some(s) = self.cheapest_host(lam, lmax, input, false) {
+                    if s != cl.config
+                        && self.model.cost(&s) < self.model.cost(&cl.config)
+                        && self.transition_feasible(&s, lam, lmax, input)
+                    {
+                        let mut next = clusters.clone();
+                        next[i].config = s;
+                        consider(self.model.cost(&s) - self.model.cost(&cl.config), next);
+                    }
+                }
+            }
+
+            // migrate: one tenant from i to j; the source keeps-or-
+            // downsizes, the destination resizes under the guard
+            for i in 0..n {
+                let from_cost = self.model.cost(&clusters[i].config);
+                for &t in &clusters[i].tenants {
+                    let src: Vec<usize> =
+                        clusters[i].tenants.iter().copied().filter(|&x| x != t).collect();
+                    let (src_cfg, src_cost) = if src.is_empty() {
+                        (None, 0.0)
+                    } else {
+                        let c = self.keep_or_downsize(&clusters[i].config, &src, input);
+                        (Some(c), self.model.cost(&c))
+                    };
+                    for j in 0..n {
+                        if j == i {
+                            continue;
+                        }
+                        let mut dst = clusters[j].tenants.clone();
+                        dst.push(t);
+                        dst.sort_unstable();
+                        let Some(dst_cfg) = self.cheapest_host(
+                            input.lam_sum(&dst),
+                            input.lmax_min(&dst),
+                            input,
+                            true,
+                        ) else {
+                            continue;
+                        };
+                        let dst_cost = self.model.cost(&dst_cfg);
+                        let delta = (src_cost + dst_cost)
+                            - (from_cost + self.model.cost(&clusters[j].config))
+                            + penalty;
+                        if delta < -1e-4 {
+                            let mut next = clusters.clone();
+                            next[j] = PlannedCluster { config: dst_cfg, tenants: dst };
+                            match src_cfg {
+                                Some(c) => {
+                                    next[i] = PlannedCluster { config: c, tenants: src.clone() }
+                                }
+                                None => {
+                                    next.remove(i);
+                                }
+                            }
+                            consider(delta, next);
+                        }
+                    }
+                }
+            }
+
+            // merge i+j / split i
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    if let Some(m) = self.merge(&p, i, j, input) {
+                        let delta = m.cost(&self.model) - p.cost(&self.model)
+                            + penalty * clusters[j].tenants.len() as f32;
+                        consider(delta, m.clusters);
+                    }
+                }
+                if let Some(s) = self.split(&p, i, input) {
+                    let moved = clusters[i].tenants.len() / 2;
+                    let delta =
+                        s.cost(&self.model) - p.cost(&self.model) + penalty * moved as f32;
+                    consider(delta, s.clusters);
+                }
+            }
+
+            match best {
+                Some((_, next)) => clusters = next,
+                None => break,
+            }
+        }
+        Placement { clusters }
+    }
+
+    /// FFD seed + local search — packing from scratch (tests, tools).
+    pub fn pack(&self, input: &PackInput) -> Placement {
+        let seed = self.ffd(input);
+        self.improve(&seed, input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::testkit::forall;
+
+    fn fixture() -> (Packer, PackInput) {
+        let cfg = ModelConfig::default_paper();
+        let model = Arc::new(SurfaceModel::from_config(&cfg));
+        let packer = Packer::new(model, PlacementConfig::default());
+        // 12 small tenants, demand 400..800 ops/unit time
+        let demand: Vec<f64> = (0..12).map(|i| 100.0 * (4 + (i % 5)) as f64).collect();
+        let input = PackInput {
+            demand,
+            l_max: vec![cfg.sla.l_max; 12],
+            b_sla: cfg.sla.b_sla as f64,
+        };
+        (packer, input)
+    }
+
+    #[test]
+    fn ffd_hosts_every_tenant_feasibly() {
+        let (packer, input) = fixture();
+        let p = packer.ffd(&input);
+        assert!(p.hosts_all(12));
+        for c in &p.clusters {
+            let lam = input.lam_sum(&c.tenants);
+            let lmax = input.lmax_min(&c.tenants);
+            assert!(
+                packer.steady_feasible(&c.config, lam, lmax, &input),
+                "FFD produced an infeasible host: {:?}",
+                c
+            );
+        }
+    }
+
+    #[test]
+    fn local_search_only_lowers_cost_and_keeps_everyone_hosted() {
+        let (packer, input) = fixture();
+        let seed = packer.ffd(&input);
+        let packed = packer.improve(&seed, &input);
+        assert!(packed.hosts_all(12));
+        assert!(packed.cost(packer.model()) <= seed.cost(packer.model()) + 1e-6);
+        assert!(
+            (packed.total_demand(&input) - seed.total_demand(&input)).abs() < 1e-9,
+            "moves must conserve demand"
+        );
+    }
+
+    #[test]
+    fn packing_small_tenants_beats_dedicated_on_cost() {
+        let (packer, input) = fixture();
+        // dedicated baseline: cheapest feasible host per tenant alone
+        let dedicated: f32 = (0..12)
+            .map(|t| {
+                let cfg = packer.sizing(input.demand[t], input.l_max[t] as f64, &input);
+                packer.model().cost(&cfg)
+            })
+            .sum();
+        let packed = packer.pack(&input).cost(packer.model());
+        assert!(
+            packed < dedicated,
+            "packing must be cheaper: packed {packed} vs dedicated {dedicated}"
+        );
+    }
+
+    #[test]
+    fn packing_is_deterministic() {
+        let (packer, input) = fixture();
+        assert_eq!(packer.pack(&input), packer.pack(&input));
+    }
+
+    #[test]
+    fn merge_and_split_conserve_tenants_and_demand() {
+        let (packer, input) = fixture();
+        let p = packer.pack(&input);
+        let d0 = p.total_demand(&input);
+        if p.clusters.len() >= 2 {
+            if let Some(m) = packer.merge(&p, 0, 1, &input) {
+                assert!(m.hosts_all(12));
+                assert!((m.total_demand(&input) - d0).abs() < 1e-9);
+                // split the merged cluster back apart
+                if let Some(s) = packer.split(&m, 0, &input) {
+                    assert!(s.hosts_all(12));
+                    assert!((s.total_demand(&input) - d0).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transition_guard_is_stricter_than_steady() {
+        let (packer, input) = fixture();
+        forall(200, 0x6A12D, |_, rng| {
+            let lam = rng.range_f64(100.0, 20_000.0);
+            for c in packer.model().plane().iter().collect::<Vec<_>>() {
+                if packer.transition_feasible(&c, lam, 5.0, &input) {
+                    assert!(
+                        packer.steady_feasible(&c, lam, 5.0, &input),
+                        "guarded feasibility must imply steady feasibility"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sizing_falls_back_to_max_throughput_when_nothing_clears() {
+        let (packer, input) = fixture();
+        // demand beyond every plane config: fall back, never panic
+        let cfg = packer.sizing(1.0e9, 5.0, &input);
+        let t_best = packer
+            .model()
+            .plane()
+            .iter()
+            .map(|c| packer.model().throughput(&c))
+            .fold(0.0f32, f32::max);
+        assert_eq!(packer.model().throughput(&cfg), t_best);
+    }
+}

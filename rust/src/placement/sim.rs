@@ -1,0 +1,1054 @@
+//! The placement-mode fleet driver: shared clusters serve co-located
+//! tenants (fair shares + contention), the packer replans on a cadence,
+//! and every placement action — reactive host resizes and the packer's
+//! rebalance bundles — walks through the fleet's [`BudgetArbiter`] as a
+//! budget-consuming proposal before it actuates. Consolidation bundles
+//! that *save* money admit as shrinks; emergency upsizes compete for
+//! budget like any SLA repair, with the arbiter's rescue machinery fed
+//! by per-cluster denial streaks.
+//!
+//! Tick semantics are serve-then-move, exactly like the fleet and the
+//! Phase-1 simulator: the placement that served tick *t* is what tick
+//! *t* pays for; admitted actions actuate for *t + 1*, and the
+//! degradation windows they open (migrations in flight, hosts
+//! restarting) cover the following ticks until their calendar events
+//! fire.
+//!
+//! Planning demand is the peak over the next
+//! [`PlacementConfig::plan_horizon`] trace points — seasonal one-period
+//! lookahead (exact for the fleet's cyclic traces, the same premise as
+//! `ForecastKind::Seasonal`), so hosts are sized for what the window
+//! will actually see, not for the demand that just ended.
+
+use std::sync::Arc;
+
+use crate::cluster::{rebalance, ClusterParams, Event};
+use crate::config::ModelConfig;
+use crate::fleet::{BudgetArbiter, Candidate, PriorityClass, Proposal, TenantSpec};
+use crate::metrics::{Recorder, StepRecord, Summary};
+use crate::plane::Configuration;
+use crate::sla::Violation;
+use crate::surfaces::{queueing, SurfaceModel};
+use crate::workload::{Trace, TraceBuilder, WorkloadPoint};
+
+use super::interference::{contention_factor, fair_shares};
+use super::migration::{ClusterRef, MigrationPlanner, PlannedMigration, RebalanceBundle};
+use super::packer::{PackInput, Packer, Placement, PlannedCluster};
+use super::{class_weight, PlacementConfig, SharedCluster};
+
+/// One placement tick's fleet-level outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlacementTick {
+    pub step: usize,
+    /// Σ hourly cost of the host configurations that served this tick.
+    pub spend: f32,
+    /// Live shared clusters at serve time.
+    pub clusters: usize,
+    /// Clusters that served inside an open degradation window.
+    pub degraded_clusters: usize,
+    /// Tenant SLA violations this tick.
+    pub violations: usize,
+    /// Tenant migrations actuated this tick.
+    pub migrations: usize,
+    pub admitted_moves: usize,
+    pub denied_moves: usize,
+}
+
+/// End-of-run rollup for one tenant in placement mode.
+#[derive(Debug, Clone)]
+pub struct TenantPlacementReport {
+    pub name: String,
+    pub class: PriorityClass,
+    /// Final host cluster id.
+    pub host: usize,
+    pub summary: Summary,
+}
+
+/// The placement run's end-of-run report.
+#[derive(Debug, Clone)]
+pub struct PlacementReport {
+    pub budget: f32,
+    pub peak_spend: f32,
+    /// Σ per-tick spend (hourly cost × ticks served).
+    pub total_cost: f64,
+    pub final_clusters: usize,
+    pub migrations: usize,
+    pub tenants: Vec<TenantPlacementReport>,
+}
+
+impl PlacementReport {
+    pub fn within_budget(&self) -> bool {
+        self.peak_spend <= self.budget + crate::fleet::BUDGET_EPS
+    }
+
+    /// Human-readable table: totals, then one row per tenant.
+    pub fn table(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "placement: budget {:.2}/h  peak spend {:.2}/h ({})  total cost {:.1}  clusters {}  migrations {}",
+            self.budget,
+            self.peak_spend,
+            if self.within_budget() { "within budget" } else { "OVER BUDGET" },
+            self.total_cost,
+            self.final_clusters,
+            self.migrations,
+        );
+        let _ = writeln!(
+            out,
+            "\n{:<12} {:<8} {:>5} {:>10} {:>10} {:>9} {:>6}",
+            "tenant", "class", "host", "avg lat", "avg thpt", "avg cost", "viol."
+        );
+        for t in &self.tenants {
+            let _ = writeln!(
+                out,
+                "{:<12} {:<8} {:>5} {:>10.3} {:>10.1} {:>9.3} {:>6}",
+                t.name,
+                t.class.label(),
+                t.host,
+                t.summary.avg_latency,
+                t.summary.avg_throughput,
+                t.summary.avg_cost,
+                t.summary.violations,
+            );
+        }
+        out
+    }
+}
+
+/// A complete placement run: per-tick timeline plus the final report.
+#[derive(Debug, Clone)]
+pub struct PlacementResult {
+    pub ticks: Vec<PlacementTick>,
+    pub report: PlacementReport,
+}
+
+impl PlacementResult {
+    /// Σ per-tick spend — the fleet cost the run paid (the single
+    /// source is the report; ticks carry the same spends).
+    pub fn total_cost(&self) -> f64 {
+        self.report.total_cost
+    }
+
+    /// Σ tenant SLA violations across ticks (independent of recording).
+    pub fn total_violations(&self) -> usize {
+        self.ticks.iter().map(|t| t.violations).sum()
+    }
+
+    pub fn total_migrations(&self) -> usize {
+        self.ticks.iter().map(|t| t.migrations).sum()
+    }
+
+    pub fn peak_spend(&self) -> f32 {
+        self.ticks.iter().map(|t| t.spend).fold(0.0, f32::max)
+    }
+
+    pub fn within_budget(&self, budget: f32) -> bool {
+        self.peak_spend() <= budget + crate::fleet::BUDGET_EPS
+    }
+
+    /// Any tick served inside a degradation window (migrations were
+    /// actually priced through the calendar, not just bookkept).
+    pub fn any_degraded_tick(&self) -> bool {
+        self.ticks.iter().any(|t| t.degraded_clusters > 0)
+    }
+}
+
+/// A planned action for one tick, aligned 1:1 with the proposal batch
+/// handed to the arbiter.
+enum PlannedAction {
+    /// Cluster (by index) requests nothing.
+    Hold(usize),
+    /// Cluster (by index) resizes its host; `emergency` marks SLA
+    /// repairs (current config infeasible or tenants violating).
+    Resize { cluster: usize, to: Configuration, emergency: bool },
+    /// The packer's full rebalance, all-or-nothing.
+    Bundle(RebalanceBundle),
+}
+
+/// Drives shared clusters, the packer, and the budget arbiter over the
+/// tenants' traces.
+pub struct PlacementSim {
+    model: Arc<SurfaceModel>,
+    specs: Vec<TenantSpec>,
+    weights: Vec<f64>,
+    recorders: Vec<Recorder>,
+    recording: bool,
+    last_violation: Vec<bool>,
+    clusters: Vec<SharedCluster>,
+    next_cluster_id: usize,
+    arbiter: BudgetArbiter,
+    params: ClusterParams,
+    pcfg: PlacementConfig,
+    packer: Packer,
+    planner: MigrationPlanner,
+    packed: bool,
+    b_sla: f64,
+    step: usize,
+}
+
+impl PlacementSim {
+    /// Build a placement-mode fleet. `packed` enables the packer's
+    /// replan cadence; `false` keeps the one-cluster-per-tenant
+    /// baseline (reactive resizes only) for A/B comparisons.
+    pub fn new(
+        cfg: &ModelConfig,
+        specs: Vec<TenantSpec>,
+        arbiter: BudgetArbiter,
+        params: ClusterParams,
+        pcfg: PlacementConfig,
+        packed: bool,
+    ) -> Self {
+        assert!(!specs.is_empty(), "placement needs at least one tenant");
+        let model = Arc::new(SurfaceModel::from_config(cfg));
+        for s in &specs {
+            assert!(model.plane().contains(&s.start), "tenant start outside plane");
+            assert!(!s.trace.is_empty(), "tenant {} has an empty trace", s.name);
+        }
+        // the transition guard must mirror the degradation the windows
+        // will actually apply — derive it from the live ClusterParams
+        // so non-default physics cannot diverge from the packer's
+        // window-feasibility checks
+        let mut pcfg = pcfg;
+        pcfg.transition_guard = params.rebalance_degradation.min(params.restart_degradation);
+        let clusters: Vec<SharedCluster> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| SharedCluster::new(i, s.start, vec![i]))
+            .collect();
+        let weights: Vec<f64> = specs.iter().map(|s| class_weight(s.class)).collect();
+        let b_sla = specs.iter().map(|s| s.sla.b_sla as f64).fold(1.0, f64::max);
+        let n = specs.len();
+        Self {
+            packer: Packer::new(Arc::clone(&model), pcfg),
+            planner: MigrationPlanner::new(pcfg.tenant_gb),
+            model,
+            specs,
+            weights,
+            recorders: (0..n).map(|_| Recorder::new()).collect(),
+            recording: true,
+            last_violation: vec![false; n],
+            next_cluster_id: n,
+            clusters,
+            arbiter,
+            params,
+            pcfg,
+            packed,
+            b_sla,
+            step: 0,
+        }
+    }
+
+    /// Packed placement under a budget (the tentpole mode).
+    pub fn packed(
+        cfg: &ModelConfig,
+        specs: Vec<TenantSpec>,
+        budget: f32,
+        fairness_k: usize,
+        pcfg: PlacementConfig,
+    ) -> Self {
+        Self::new(
+            cfg,
+            specs,
+            BudgetArbiter::new(budget, fairness_k),
+            ClusterParams::default(),
+            pcfg,
+            true,
+        )
+    }
+
+    /// One-cluster-per-tenant baseline under the same budget and
+    /// reactive sizing (the A/B control).
+    pub fn dedicated(
+        cfg: &ModelConfig,
+        specs: Vec<TenantSpec>,
+        budget: f32,
+        fairness_k: usize,
+        pcfg: PlacementConfig,
+    ) -> Self {
+        Self::new(
+            cfg,
+            specs,
+            BudgetArbiter::new(budget, fairness_k),
+            ClusterParams::default(),
+            pcfg,
+            false,
+        )
+    }
+
+    pub fn clusters(&self) -> &[SharedCluster] {
+        &self.clusters
+    }
+
+    pub fn arbiter(&self) -> &BudgetArbiter {
+        &self.arbiter
+    }
+
+    /// Current fleet spend (Σ host hourly costs).
+    pub fn spend(&self) -> f32 {
+        self.clusters.iter().map(|c| self.model.cost(&c.config())).sum()
+    }
+
+    /// Live host cluster id of a tenant, if hosted.
+    pub fn host_of(&self, tenant: usize) -> Option<usize> {
+        self.clusters
+            .iter()
+            .find(|c| c.tenants().binary_search(&tenant).is_ok())
+            .map(|c| c.id())
+    }
+
+    /// Every tenant hosted by exactly one live cluster (the same
+    /// invariant [`Placement::hosts_all`] checks for planned
+    /// placements).
+    pub fn assignment_valid(&self) -> bool {
+        self.live_placement().hosts_all(self.specs.len())
+    }
+
+    /// Whether a tenant's last served tick violated its SLA.
+    pub fn tenant_violating(&self, tenant: usize) -> bool {
+        self.last_violation.get(tenant).copied().unwrap_or(false)
+    }
+
+    /// Disable per-step recording (benchmark mode: bounded memory).
+    pub fn set_recording(&mut self, on: bool) {
+        self.recording = on;
+    }
+
+    /// Longest tenant trace (the natural run length).
+    pub fn longest_trace(&self) -> usize {
+        self.specs.iter().map(|s| s.trace.len()).max().unwrap_or(0)
+    }
+
+    fn demand_at(&self, tenant: usize, t: usize) -> f64 {
+        let tr = &self.specs[tenant].trace;
+        tr.points[t % tr.len()].lambda_req as f64
+    }
+
+    /// Planning inputs for a tick: peak demand over the lookahead
+    /// horizon per tenant.
+    fn plan_input(&self, t: usize) -> PackInput {
+        let h = self.pcfg.plan_horizon.max(1);
+        let demand: Vec<f64> = (0..self.specs.len())
+            .map(|i| (1..=h).map(|k| self.demand_at(i, t + k)).fold(0.0f64, f64::max))
+            .collect();
+        PackInput {
+            demand,
+            l_max: self.specs.iter().map(|s| s.sla.l_max).collect(),
+            b_sla: self.b_sla,
+        }
+    }
+
+    fn cluster_index(&self, id: usize) -> Option<usize> {
+        self.clusters.iter().position(|c| c.id() == id)
+    }
+
+    fn live_placement(&self) -> Placement {
+        Placement {
+            clusters: self
+                .clusters
+                .iter()
+                .map(|c| PlannedCluster { config: c.config(), tenants: c.tenants().to_vec() })
+                .collect(),
+        }
+    }
+
+    /// Reactive per-cluster sizing: an economic downsize that survives
+    /// its own window, or an emergency repair when the current config
+    /// no longer clears the planning demand.
+    fn resize_target(&self, ci: usize, input: &PackInput) -> Option<(Configuration, bool)> {
+        let cl = &self.clusters[ci];
+        let members = cl.tenants();
+        if members.is_empty() {
+            return None;
+        }
+        let lam = input.lam_sum(members);
+        let lmax = input.lmax_min(members);
+        let current = cl.config();
+        let current_ok = self.packer.steady_feasible(&current, lam, lmax, input);
+        if let Some(s) = self.packer.cheapest_host(lam, lmax, input, false) {
+            if s != current
+                && self.model.cost(&s) < self.model.cost(&current)
+                && self.packer.transition_feasible(&s, lam, lmax, input)
+            {
+                // cheaper and window-safe: take it (also repairs if the
+                // current config was infeasible)
+                return Some((s, !current_ok || cl.violating));
+            }
+        }
+        if !current_ok {
+            let z = self.packer.sizing(lam, lmax, input);
+            if z != current {
+                return Some((z, true));
+            }
+        }
+        None
+    }
+
+    /// Diff the live placement against a packer target: migrations,
+    /// resizes, creates, and the hourly-cost edge, priced as one
+    /// all-or-nothing bundle.
+    fn diff(&self, target: &Placement) -> RebalanceBundle {
+        let n_live = self.clusters.len();
+        // tenant -> live host id
+        let mut host = vec![usize::MAX; self.specs.len()];
+        for cl in &self.clusters {
+            for &t in cl.tenants() {
+                host[t] = cl.id();
+            }
+        }
+        // match target clusters to live clusters by max member overlap
+        // (first maximum wins — deterministic)
+        let mut used = vec![false; n_live];
+        let mut matched: Vec<Option<usize>> = Vec::with_capacity(target.clusters.len());
+        for tc in &target.clusters {
+            let mut best: Option<usize> = None;
+            let mut best_ov = 0usize;
+            for (ci, cl) in self.clusters.iter().enumerate() {
+                if used[ci] {
+                    continue;
+                }
+                let ov = tc
+                    .tenants
+                    .iter()
+                    .filter(|&t| cl.tenants().binary_search(t).is_ok())
+                    .count();
+                if ov > best_ov {
+                    best_ov = ov;
+                    best = Some(ci);
+                }
+            }
+            if let Some(ci) = best {
+                used[ci] = true;
+            }
+            matched.push(best);
+        }
+
+        let mut migrations: Vec<PlannedMigration> = Vec::new();
+        let mut resizes: Vec<(usize, Configuration)> = Vec::new();
+        let mut creates: Vec<(Configuration, Vec<usize>)> = Vec::new();
+        let mut affected = vec![false; n_live];
+        let mut target_cfg: Vec<Option<Configuration>> = vec![None; n_live];
+
+        for (ti, tc) in target.clusters.iter().enumerate() {
+            match matched[ti] {
+                Some(ci) => {
+                    target_cfg[ci] = Some(tc.config);
+                    let cl = &self.clusters[ci];
+                    if tc.config != cl.config() {
+                        resizes.push((cl.id(), tc.config));
+                        affected[ci] = true;
+                    }
+                    for &x in &tc.tenants {
+                        if cl.tenants().binary_search(&x).is_err() {
+                            migrations.push(PlannedMigration {
+                                tenant: x,
+                                from: host[x],
+                                to: ClusterRef::Existing(cl.id()),
+                            });
+                            affected[ci] = true;
+                            if let Some(si) = self.cluster_index(host[x]) {
+                                affected[si] = true;
+                            }
+                        }
+                    }
+                }
+                None => {
+                    let k = creates.len();
+                    creates.push((tc.config, tc.tenants.clone()));
+                    for &x in &tc.tenants {
+                        migrations.push(PlannedMigration {
+                            tenant: x,
+                            from: host[x],
+                            to: ClusterRef::New(k),
+                        });
+                        if let Some(si) = self.cluster_index(host[x]) {
+                            affected[si] = true;
+                        }
+                    }
+                }
+            }
+        }
+        // live clusters no target cluster matched lose every tenant
+        for ci in 0..n_live {
+            if !used[ci] {
+                affected[ci] = true;
+            }
+        }
+
+        let mut cost_from = 0.0f32;
+        let mut cost_to = 0.0f32;
+        for ci in 0..n_live {
+            if !affected[ci] {
+                continue;
+            }
+            cost_from += self.model.cost(&self.clusters[ci].config());
+            if used[ci] {
+                let cfg = target_cfg[ci].unwrap_or_else(|| self.clusters[ci].config());
+                cost_to += self.model.cost(&cfg);
+            }
+            // unmatched (retiring) clusters contribute 0 to cost_to
+        }
+        for (cfg, _) in &creates {
+            cost_to += self.model.cost(cfg);
+        }
+        RebalanceBundle { migrations, resizes, creates, cost_from, cost_to }
+    }
+
+    /// Live cluster indices a bundle touches.
+    fn bundle_affected(&self, b: &RebalanceBundle) -> Vec<bool> {
+        let mut affected = vec![false; self.clusters.len()];
+        for (id, _) in &b.resizes {
+            if let Some(ci) = self.cluster_index(*id) {
+                affected[ci] = true;
+            }
+        }
+        for m in &b.migrations {
+            if let Some(ci) = self.cluster_index(m.from) {
+                affected[ci] = true;
+            }
+            if let ClusterRef::Existing(id) = m.to {
+                if let Some(ci) = self.cluster_index(id) {
+                    affected[ci] = true;
+                }
+            }
+        }
+        affected
+    }
+
+    fn highest_class(&self, tenants: &[usize]) -> PriorityClass {
+        tenants
+            .iter()
+            .map(|&t| self.specs[t].class)
+            .max()
+            .unwrap_or(PriorityClass::Bronze)
+    }
+
+    fn proposal_for(&self, slot: usize, action: &PlannedAction) -> Proposal {
+        match action {
+            PlannedAction::Hold(ci) => {
+                let cl = &self.clusters[*ci];
+                Proposal {
+                    tenant: slot,
+                    class: self.highest_class(cl.tenants()),
+                    from: cl.config(),
+                    cost_from: self.model.cost(&cl.config()),
+                    emergency: false,
+                    sla_violating: cl.violating,
+                    denial_streak: cl.denial_streak,
+                    candidates: Vec::new(),
+                    sheds: Vec::new(),
+                }
+            }
+            PlannedAction::Resize { cluster, to, emergency } => {
+                let cl = &self.clusters[*cluster];
+                let cost_from = self.model.cost(&cl.config());
+                let cost_to = self.model.cost(to);
+                Proposal {
+                    tenant: slot,
+                    class: self.highest_class(cl.tenants()),
+                    from: cl.config(),
+                    cost_from,
+                    emergency: *emergency,
+                    sla_violating: cl.violating,
+                    denial_streak: cl.denial_streak,
+                    candidates: vec![Candidate {
+                        to: *to,
+                        cost_to,
+                        gain: (cost_from - cost_to).max(0.0),
+                    }],
+                    sheds: Vec::new(),
+                }
+            }
+            PlannedAction::Bundle(b) => {
+                let affected = self.bundle_affected(b);
+                let mut class = PriorityClass::Bronze;
+                let mut violating = false;
+                let mut streak = 0usize;
+                // `from` is the first affected cluster's config (the
+                // arbiter only reads costs, but reporting should point
+                // at a cluster the bundle actually touches)
+                let mut from: Option<Configuration> = None;
+                for (ci, cl) in self.clusters.iter().enumerate() {
+                    if !affected[ci] {
+                        continue;
+                    }
+                    class = class.max(self.highest_class(cl.tenants()));
+                    violating |= cl.violating;
+                    streak = streak.max(cl.denial_streak);
+                    if from.is_none() {
+                        from = Some(cl.config());
+                    }
+                }
+                let to = b
+                    .resizes
+                    .first()
+                    .map(|(_, cfg)| *cfg)
+                    .or_else(|| b.creates.first().map(|(cfg, _)| *cfg))
+                    .or(from)
+                    .unwrap_or_else(|| Configuration::new(0, 0));
+                Proposal {
+                    tenant: slot,
+                    class,
+                    from: from.unwrap_or_else(|| Configuration::new(0, 0)),
+                    cost_from: b.cost_from,
+                    emergency: violating,
+                    sla_violating: violating,
+                    denial_streak: streak,
+                    candidates: vec![Candidate {
+                        to,
+                        cost_to: b.cost_to,
+                        gain: (b.cost_from - b.cost_to).max(0.0),
+                    }],
+                    sheds: Vec::new(),
+                }
+            }
+        }
+    }
+
+    /// Apply a host reconfiguration, opening its degradation window on
+    /// the cluster calendar (active from the next tick, exactly like
+    /// the substrate engines' serve-then-move accounting).
+    fn actuate_resize(&mut self, ci: usize, next: Configuration, time: f64) {
+        let from = self.clusters[ci].config();
+        if next == from {
+            return;
+        }
+        let plan =
+            rebalance::plan_reconfiguration(self.model.plane(), &from, &next, &self.params);
+        let end = time + self.params.interval + plan.duration;
+        let cl = &mut self.clusters[ci];
+        cl.set_config(next);
+        if plan.duration > 0.0 {
+            let ev = if plan.moved_shards > 0 { Event::RebalanceEnd } else { Event::RestartEnd };
+            cl.open_window(end, plan.degradation, ev);
+        }
+    }
+
+    /// Actuate an admitted rebalance bundle: resizes first, then new
+    /// clusters, then tenant migrations — each migration opening a
+    /// priced window on its destination's calendar. Returns the number
+    /// of migrations actuated.
+    fn actuate_bundle(&mut self, b: &RebalanceBundle, time: f64) -> usize {
+        for (id, cfg) in &b.resizes {
+            if let Some(ci) = self.cluster_index(*id) {
+                self.actuate_resize(ci, *cfg, time);
+            }
+        }
+        let mut new_ids = Vec::with_capacity(b.creates.len());
+        for (cfg, _) in &b.creates {
+            let id = self.next_cluster_id;
+            self.next_cluster_id += 1;
+            self.clusters.push(SharedCluster::new(id, *cfg, Vec::new()));
+            new_ids.push(id);
+        }
+        let t_act = time + self.params.interval;
+        let mut moved = 0usize;
+        for m in &b.migrations {
+            let dest_id = match m.to {
+                ClusterRef::Existing(id) => id,
+                ClusterRef::New(k) => new_ids[k],
+            };
+            // resolve the destination BEFORE touching the source, so an
+            // unresolvable migration leaves the tenant hosted where it
+            // was instead of silently dropping it
+            let Some(di) = self.cluster_index(dest_id) else {
+                debug_assert!(false, "bundle migration to unknown cluster {dest_id}");
+                continue;
+            };
+            if let Some(si) = self.cluster_index(m.from) {
+                self.clusters[si].remove_tenant(m.tenant);
+            }
+            let dest_cfg = self.clusters[di].config();
+            let w = self.planner.price(self.model.plane(), &dest_cfg, &self.params);
+            self.clusters[di].add_tenant(m.tenant);
+            if w.duration > 0.0 {
+                self.clusters[di].open_window(
+                    t_act + w.duration,
+                    w.degradation,
+                    Event::MigrationEnd,
+                );
+            }
+            moved += 1;
+        }
+        self.clusters.retain(|c| !c.is_empty());
+        moved
+    }
+
+    /// One placement tick: drain calendars, serve every cluster (fair
+    /// shares + contention), plan, admit through the arbiter, actuate.
+    pub fn tick(&mut self) -> PlacementTick {
+        let t = self.step;
+        let interval = self.params.interval;
+        let time = t as f64 * interval;
+        let u_max = self.model.constants().u_max;
+
+        // ---- serve ----
+        let mut spend = 0.0f32;
+        let mut violations = 0usize;
+        let mut degraded_clusters = 0usize;
+        for ci in 0..self.clusters.len() {
+            self.clusters[ci].drain_due(time);
+            let deg = self.clusters[ci].degradation();
+            let cfg = self.clusters[ci].config();
+            let members: Vec<usize> = self.clusters[ci].tenants().to_vec();
+            if deg < 1.0 {
+                degraded_clusters += 1;
+            }
+            let host_cost = self.model.cost(&cfg);
+            spend += host_cost;
+            if members.is_empty() {
+                continue;
+            }
+            let demands: Vec<f64> = members.iter().map(|&i| self.demand_at(i, t)).collect();
+            let weights: Vec<f64> = members.iter().map(|&i| self.weights[i]).collect();
+            let offered: Vec<f64> = demands.iter().map(|d| d * interval).collect();
+            let lam_total: f64 = demands.iter().sum();
+            let cap = self.model.throughput(&cfg) as f64 * deg;
+            let alloc = fair_shares(cap * interval, &offered, &weights);
+            let util = if cap > 0.0 { lam_total / cap } else { f64::INFINITY };
+            let factor = contention_factor(util, self.pcfg.knee, self.pcfg.contention);
+            let lat_raw = self.model.latency(&cfg) as f64 * factor;
+            let lat_eff = queueing::effective_latency(
+                self.model.latency(&cfg),
+                cap as f32,
+                lam_total as f32,
+                u_max,
+            ) as f64
+                * factor;
+            // the reported objective uses the SAME latency the tenants
+            // actually saw (degraded capacity + contention), so
+            // packed-vs-dedicated objective comparisons are not biased
+            // on exactly the ticks where packing hurts
+            let host_obj = {
+                let s = self.model.constants();
+                let p = self.model.evaluate(&cfg, lam_total as f32);
+                s.alpha * lat_eff as f32 + s.beta * p.cost + s.gamma * p.coordination
+                    - s.delta * p.throughput
+            };
+            let mut any_viol = false;
+            for (k, &i) in members.iter().enumerate() {
+                // cost/objective are billed by *usage* (demand share),
+                // not by fair-share weight: class weights decide who
+                // keeps throughput under shortage, not who pays more
+                let share = if lam_total > 0.0 {
+                    (demands[k] / lam_total) as f32
+                } else {
+                    1.0 / members.len() as f32
+                };
+                let viol = Violation {
+                    latency: lat_raw > self.specs[i].sla.l_max as f64,
+                    throughput: alloc[k] < offered[k] - 1e-9,
+                };
+                self.last_violation[i] = viol.any();
+                if viol.any() {
+                    violations += 1;
+                    any_viol = true;
+                }
+                if self.recording {
+                    self.recorders[i].push(StepRecord {
+                        step: t,
+                        config: cfg,
+                        lambda_req: demands[k] as f32,
+                        latency: lat_eff as f32,
+                        latency_raw: lat_raw as f32,
+                        throughput: (alloc[k] / interval) as f32,
+                        cost: host_cost * share,
+                        objective: host_obj * share,
+                        violation: viol,
+                    });
+                }
+            }
+            self.clusters[ci].violating = any_viol;
+        }
+        let live_clusters = self.clusters.len();
+
+        // ---- plan ----
+        let input = self.plan_input(t);
+        let mut actions: Vec<PlannedAction> = Vec::new();
+        let bundle = if self.packed && t % self.pcfg.replan_every.max(1) == 0 {
+            let target = self.packer.improve(&self.live_placement(), &input);
+            let b = self.diff(&target);
+            if b.is_empty() {
+                None
+            } else {
+                Some(b)
+            }
+        } else {
+            None
+        };
+        let affected = match &bundle {
+            Some(b) => self.bundle_affected(b),
+            None => vec![false; self.clusters.len()],
+        };
+        for ci in 0..self.clusters.len() {
+            if affected[ci] {
+                continue; // the bundle owns this cluster's tick
+            }
+            match self.resize_target(ci, &input) {
+                Some((to, emergency)) => {
+                    actions.push(PlannedAction::Resize { cluster: ci, to, emergency })
+                }
+                None => actions.push(PlannedAction::Hold(ci)),
+            }
+        }
+        // the bundle goes LAST: Hold/Resize actions address clusters by
+        // index, and only actuate_bundle may retire clusters (retain),
+        // so index-addressed actions must all actuate before it
+        if let Some(b) = bundle {
+            actions.push(PlannedAction::Bundle(b));
+        }
+
+        // ---- admit + actuate ----
+        let proposals: Vec<Proposal> = actions
+            .iter()
+            .enumerate()
+            .map(|(slot, a)| self.proposal_for(slot, a))
+            .collect();
+        let adm = self.arbiter.admit(&proposals);
+        let mut migrations = 0usize;
+        let mut admitted_moves = 0usize;
+        let mut denied_moves = 0usize;
+        for (slot, action) in actions.iter().enumerate() {
+            let v = adm.verdicts[slot];
+            match action {
+                PlannedAction::Hold(ci) => {
+                    self.clusters[*ci].denial_streak = 0;
+                }
+                PlannedAction::Resize { cluster, to, .. } => {
+                    if v.admitted() {
+                        self.actuate_resize(*cluster, *to, time);
+                        self.clusters[*cluster].denial_streak = 0;
+                        admitted_moves += 1;
+                    } else {
+                        denied_moves += 1;
+                        let cl = &mut self.clusters[*cluster];
+                        if cl.violating {
+                            cl.denial_streak += 1;
+                        } else {
+                            cl.denial_streak = 0;
+                        }
+                    }
+                }
+                PlannedAction::Bundle(b) => {
+                    if v.admitted() {
+                        migrations += self.actuate_bundle(b, time);
+                        admitted_moves += 1;
+                    } else {
+                        // today's packer only emits cost-decreasing
+                        // bundles (always admitted as shrinks); this
+                        // branch guards future packers that propose
+                        // paid rebalances under a tight budget
+                        denied_moves += 1;
+                        let affected = self.bundle_affected(b);
+                        for (ci, touched) in affected.iter().enumerate() {
+                            if *touched && self.clusters[ci].violating {
+                                self.clusters[ci].denial_streak += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        self.step += 1;
+        PlacementTick {
+            step: t,
+            spend,
+            clusters: live_clusters,
+            degraded_clusters,
+            violations,
+            migrations,
+            admitted_moves,
+            denied_moves,
+        }
+    }
+
+    /// Run `steps` ticks (traces repeat cyclically) and aggregate.
+    pub fn run(&mut self, steps: usize) -> PlacementResult {
+        let ticks: Vec<PlacementTick> = (0..steps).map(|_| self.tick()).collect();
+        let tenants: Vec<TenantPlacementReport> = self
+            .specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| TenantPlacementReport {
+                name: s.name.clone(),
+                class: s.class,
+                host: self.host_of(i).unwrap_or(usize::MAX),
+                summary: self.recorders[i].summary(),
+            })
+            .collect();
+        let report = PlacementReport {
+            budget: self.arbiter.budget,
+            peak_spend: ticks.iter().map(|t| t.spend).fold(0.0, f32::max),
+            total_cost: ticks.iter().map(|t| t.spend as f64).sum(),
+            final_clusters: self.clusters.len(),
+            migrations: ticks.iter().map(|t| t.migrations).sum(),
+            tenants,
+        };
+        PlacementResult { ticks, report }
+    }
+}
+
+/// The *pinned* co-location scenario: `n` small tenants with constant
+/// demands cycling 400..800 ops/unit time (intensities `4 + i % 5`),
+/// classes cycling Gold/Silver/Bronze. One definition shared by the
+/// acceptance test, the sim unit tests, and the CI-smoked example, so
+/// "the pinned scenario" means exactly one thing everywhere.
+pub fn constant_tenant_specs(cfg: &ModelConfig, n: usize) -> Vec<TenantSpec> {
+    let b = TraceBuilder::from_config(cfg);
+    (0..n)
+        .map(|i| {
+            let class = match i % 3 {
+                0 => PriorityClass::Gold,
+                1 => PriorityClass::Silver,
+                _ => PriorityClass::Bronze,
+            };
+            TenantSpec::from_config(
+                cfg,
+                format!("t{i:02}"),
+                class,
+                b.constant((4 + (i % 5)) as f32, 1),
+            )
+        })
+        .collect()
+}
+
+/// The co-location scenario family: `n` small tenants, each the paper
+/// timeline scaled by `scale` and phase-shifted so peaks stagger,
+/// classes cycling Gold/Silver/Bronze — shared by the CLI, the example,
+/// the bench, and the tests.
+pub fn small_tenant_specs(cfg: &ModelConfig, n: usize, scale: f32) -> Vec<TenantSpec> {
+    let base = TraceBuilder::paper(cfg);
+    (0..n)
+        .map(|i| {
+            let class = match i % 3 {
+                0 => PriorityClass::Gold,
+                1 => PriorityClass::Silver,
+                _ => PriorityClass::Bronze,
+            };
+            let shifted = base.shifted(i * base.len() / n.max(1));
+            let points: Vec<WorkloadPoint> = shifted
+                .points
+                .iter()
+                .map(|p| WorkloadPoint {
+                    lambda_req: p.lambda_req * scale,
+                    lambda_w: p.lambda_w * scale,
+                })
+                .collect();
+            let trace = Trace { name: format!("{}x{scale}", shifted.name), points };
+            TenantSpec::from_config(cfg, format!("small-{i:02}"), class, trace)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn constant_specs(cfg: &ModelConfig, n: usize) -> Vec<TenantSpec> {
+        constant_tenant_specs(cfg, n)
+    }
+
+    #[test]
+    fn starts_dedicated_and_serves() {
+        let cfg = ModelConfig::default_paper();
+        let mut sim = PlacementSim::dedicated(
+            &cfg,
+            constant_specs(&cfg, 4),
+            1.0e6,
+            3,
+            PlacementConfig::default(),
+        );
+        assert_eq!(sim.clusters().len(), 4);
+        assert!(sim.assignment_valid());
+        let tick = sim.tick();
+        assert_eq!(tick.clusters, 4);
+        assert_eq!(tick.migrations, 0);
+        assert!(sim.assignment_valid());
+    }
+
+    #[test]
+    fn packed_mode_consolidates_small_tenants() {
+        let cfg = ModelConfig::default_paper();
+        let mut sim = PlacementSim::packed(
+            &cfg,
+            constant_specs(&cfg, 12),
+            1.0e6,
+            3,
+            PlacementConfig::default(),
+        );
+        let res = sim.run(20);
+        assert!(sim.assignment_valid());
+        assert!(
+            sim.clusters().len() < 12,
+            "packing never consolidated: {} clusters",
+            sim.clusters().len()
+        );
+        assert!(res.total_migrations() > 0);
+        assert!(res.any_degraded_tick(), "migrations must open priced windows");
+    }
+
+    #[test]
+    fn dedicated_mode_never_migrates() {
+        let cfg = ModelConfig::default_paper();
+        let mut sim = PlacementSim::dedicated(
+            &cfg,
+            constant_specs(&cfg, 6),
+            1.0e6,
+            3,
+            PlacementConfig::default(),
+        );
+        let res = sim.run(30);
+        assert_eq!(res.total_migrations(), 0);
+        assert_eq!(sim.clusters().len(), 6);
+    }
+
+    #[test]
+    fn deterministic_runs() {
+        let cfg = ModelConfig::default_paper();
+        let build = || {
+            PlacementSim::packed(
+                &cfg,
+                small_tenant_specs(&cfg, 8, 0.1),
+                1.0e6,
+                3,
+                PlacementConfig::default(),
+            )
+        };
+        let a = build().run(40);
+        let b = build().run(40);
+        assert_eq!(a.ticks, b.ticks);
+    }
+
+    #[test]
+    fn spend_respects_a_tight_budget() {
+        let cfg = ModelConfig::default_paper();
+        // start spend is 12 × 0.4 = 4.8/h; a 5.0/h budget admits the
+        // consolidation shrinks but denies expensive upsizes
+        let budget = 5.0f32;
+        let mut sim = PlacementSim::packed(
+            &cfg,
+            constant_specs(&cfg, 12),
+            budget,
+            3,
+            PlacementConfig::default(),
+        );
+        let res = sim.run(40);
+        assert!(res.within_budget(budget), "peak {}", res.peak_spend());
+    }
+
+    #[test]
+    fn scenario_specs_scale_and_stagger() {
+        let cfg = ModelConfig::default_paper();
+        let specs = small_tenant_specs(&cfg, 12, 0.1);
+        assert_eq!(specs.len(), 12);
+        // scaled: the paper's 6000 low phase becomes 600
+        assert!((specs[0].trace.points[0].lambda_req - 600.0).abs() < 1e-3);
+        // staggered: tenant 6 starts in a different phase than tenant 0
+        assert!(
+            (specs[0].trace.points[0].lambda_req - specs[6].trace.points[0].lambda_req).abs()
+                > 1.0
+        );
+    }
+}

@@ -1,0 +1,197 @@
+//! Placement invariants: every tenant is hosted exactly once, host
+//! capacity is never exceeded by the fair-share allocator, packing is
+//! deterministic per seed, merge/split round-trips preserve the tenant
+//! multiset and total demand — and the PR-4 acceptance pin: packed
+//! placement strictly lowers fleet cost at no more SLA-violation ticks
+//! than dedicated clusters on the 12-small-tenant scenario, with
+//! migrations priced through the DES event calendar.
+
+use std::sync::Arc;
+
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::fleet::{FleetSimulator, TenantSpec};
+use diagonal_scale::placement::{
+    constant_tenant_specs, fair_shares, PackInput, Packer, PlacementConfig, PlacementSim,
+};
+use diagonal_scale::surfaces::SurfaceModel;
+use diagonal_scale::testkit::forall;
+use diagonal_scale::workload::XorShift64;
+
+fn packer(cfg: &ModelConfig) -> Packer {
+    Packer::new(
+        Arc::new(SurfaceModel::from_config(cfg)),
+        PlacementConfig::default(),
+    )
+}
+
+/// Random single-tenant-feasible demands (every tenant can be hosted
+/// alone somewhere on the plane).
+fn rand_input(cfg: &ModelConfig, rng: &mut XorShift64, n: usize) -> PackInput {
+    PackInput {
+        demand: (0..n).map(|_| rng.range_f64(50.0, 18_000.0)).collect(),
+        l_max: vec![cfg.sla.l_max; n],
+        b_sla: cfg.sla.b_sla as f64,
+    }
+}
+
+/// The pinned 12-small-tenant scenario: constant demands 400..800,
+/// classes cycling Gold/Silver/Bronze (the one shared definition).
+fn pinned_specs(cfg: &ModelConfig) -> Vec<TenantSpec> {
+    constant_tenant_specs(cfg, 12)
+}
+
+#[test]
+fn every_tenant_hosted_exactly_once_and_hosts_feasible() {
+    let cfg = ModelConfig::default_paper();
+    let packer = packer(&cfg);
+    forall(60, 0x9AC4, |_, rng| {
+        let n = 1 + rng.below(24) as usize;
+        let input = rand_input(&cfg, rng, n);
+        let p = packer.pack(&input);
+        assert!(p.hosts_all(n), "packing lost or duplicated a tenant");
+        for c in &p.clusters {
+            assert!(!c.tenants.is_empty(), "packer emitted an empty cluster");
+            let lam = input.lam_sum(&c.tenants);
+            let lmax = input.lmax_min(&c.tenants);
+            assert!(
+                packer.steady_feasible(&c.config, lam, lmax, &input),
+                "host over capacity: {:?} lam {lam}",
+                c
+            );
+        }
+    });
+}
+
+#[test]
+fn fair_shares_never_exceed_host_capacity() {
+    forall(300, 0xCAB5, |_, rng| {
+        let n = 1 + rng.below(10) as usize;
+        let cap = rng.range_f64(0.0, 30_000.0);
+        let demands: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 8_000.0)).collect();
+        let weights: Vec<f64> =
+            (0..n).map(|_| [1.0, 2.0, 4.0][rng.below(3) as usize]).collect();
+        let alloc = fair_shares(cap, &demands, &weights);
+        assert!(alloc.iter().sum::<f64>() <= cap + 1e-6, "host capacity exceeded");
+        for (a, d) in alloc.iter().zip(&demands) {
+            assert!(*a <= d + 1e-9 && *a >= 0.0);
+        }
+    });
+}
+
+#[test]
+fn packing_is_deterministic_per_seed() {
+    let cfg = ModelConfig::default_paper();
+    let packer = packer(&cfg);
+    forall(30, 0xDE7E12, |_, rng| {
+        let seed = rng.next_u64();
+        let n = 2 + rng.below(16) as usize;
+        let build = |s: u64| {
+            let mut r = XorShift64::new(s);
+            let input = rand_input(&cfg, &mut r, n);
+            (packer.pack(&input), input)
+        };
+        let (a, _) = build(seed);
+        let (b, _) = build(seed);
+        assert_eq!(a, b, "same seed must pack identically");
+    });
+}
+
+#[test]
+fn merge_split_round_trips_preserve_demand_and_tenants() {
+    let cfg = ModelConfig::default_paper();
+    let packer = packer(&cfg);
+    forall(40, 0x5B117, |_, rng| {
+        let n = 4 + rng.below(12) as usize;
+        let input = rand_input(&cfg, rng, n);
+        let p = packer.pack(&input);
+        let d0 = p.total_demand(&input);
+        // merge every adjacent pair that merges; then split what splits
+        if p.clusters.len() >= 2 {
+            let i = rng.below(p.clusters.len() as u64) as usize;
+            let j = (i + 1) % p.clusters.len();
+            let (i, j) = (i.min(j), i.max(j));
+            if i != j {
+                if let Some(m) = packer.merge(&p, i, j, &input) {
+                    assert!(m.hosts_all(n), "merge lost a tenant");
+                    assert!(
+                        (m.total_demand(&input) - d0).abs() < 1e-9 * d0.max(1.0),
+                        "merge changed total demand"
+                    );
+                    if let Some(s) = packer.split(&m, i, &input) {
+                        assert!(s.hosts_all(n), "split lost a tenant");
+                        assert!(
+                            (s.total_demand(&input) - d0).abs() < 1e-9 * d0.max(1.0),
+                            "split changed total demand"
+                        );
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn placement_sim_keeps_assignment_valid_over_a_run() {
+    let cfg = ModelConfig::default_paper();
+    let mut sim = PlacementSim::packed(
+        &cfg,
+        diagonal_scale::placement::small_tenant_specs(&cfg, 10, 0.1),
+        1.0e9,
+        3,
+        PlacementConfig::default(),
+    );
+    for _ in 0..60 {
+        sim.tick();
+        assert!(sim.assignment_valid(), "a tick left a tenant unhosted");
+    }
+}
+
+/// The PR-4 acceptance pin. On 12 small constant-demand tenants:
+/// packed placement must cost strictly less than one-cluster-per-
+/// tenant (the f64 mirror of the analytical model puts it at ~51.6 vs
+/// ~98.4 over 40 ticks — a wide margin), at no more SLA-violation
+/// ticks, with real migrations whose windows actually degrade serving
+/// ticks (priced through the DES event calendar), deterministically.
+#[test]
+fn packed_beats_dedicated_on_the_pinned_12_tenant_scenario() {
+    let cfg = ModelConfig::default_paper();
+    let pcfg = PlacementConfig::default();
+    let steps = 40;
+
+    let mut dedicated = PlacementSim::dedicated(&cfg, pinned_specs(&cfg), 1.0e6, 3, pcfg);
+    let ded = dedicated.run(steps);
+
+    let build_packed =
+        || FleetSimulator::with_placement(&cfg, pinned_specs(&cfg), 1.0e6, 3, pcfg);
+    let packed = build_packed().run(steps);
+
+    assert!(
+        packed.total_cost() < ded.total_cost(),
+        "packed must be strictly cheaper: {} vs {}",
+        packed.total_cost(),
+        ded.total_cost()
+    );
+    // the mirror puts the packed fleet at ~52% of dedicated; leave slack
+    assert!(
+        packed.total_cost() < 0.85 * ded.total_cost(),
+        "packing should save substantially: {} vs {}",
+        packed.total_cost(),
+        ded.total_cost()
+    );
+    assert!(
+        packed.total_violations() <= ded.total_violations(),
+        "packed violated more: {} vs {}",
+        packed.total_violations(),
+        ded.total_violations()
+    );
+    assert!(packed.total_migrations() > 0, "consolidation never migrated");
+    assert!(
+        packed.any_degraded_tick(),
+        "migrations were never priced through the calendar"
+    );
+    assert_eq!(ded.total_migrations(), 0, "dedicated baseline must not migrate");
+
+    // deterministic end to end
+    let again = build_packed().run(steps);
+    assert_eq!(packed.ticks, again.ticks);
+}
