@@ -5,7 +5,7 @@
 
 .DEFAULT_GOAL := help
 
-.PHONY: help build test bench-compile examples fleet-demo placement-demo artifacts
+.PHONY: help build test doc bench-compile examples fleet-demo placement-demo explain-demo artifacts
 
 help: ## list the available targets
 	@grep -E '^[a-zA-Z_-]+:.*?## ' $(MAKEFILE_LIST) | awk 'BEGIN {FS = ":.*?## "}; {printf "  %-14s %s\n", $$1, $$2}'
@@ -16,6 +16,9 @@ build: ## release build of the library, binary, and examples
 test: ## tier-1 verify: release build + full test suite
 	cargo build --release
 	cargo test -q
+
+doc: ## build the API docs with warnings denied (the CI doc gate)
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 bench-compile: ## compile every bench target without running it
 	cargo bench --no-run
@@ -29,6 +32,9 @@ fleet-demo: ## budget-aware fleet demo: envelopes + forecasting + planning-vs-fl
 
 placement-demo: ## cross-tenant bin-packing demo: packed-vs-dedicated A/B with priced migrations
 	cargo run --release --example placement_packing
+
+explain-demo: ## ranked-proposal explain demo: top-k candidates + versioned JSON on the paper trace
+	cargo run --release --example proposal_explain
 
 artifacts: ## AOT-lower the JAX/Pallas kernels to artifacts/ (needs jax)
 	cd python && python3 -m compile.aot --out-dir ../artifacts

@@ -16,15 +16,30 @@
 //! type parameter), the event-driven engine
 //! ([`crate::cluster::EventSim`]), or the analytical wrapper
 //! ([`crate::simulator::AnalyticalSubstrate`]).
+//!
+//! Since PR 5 the coordinator consumes ranked [`Proposal`]s rather than
+//! single decisions: when a [`MoveGuard`] (spend caps, change windows —
+//! anything that can veto an actuation) rejects the policy's first
+//! choice, the coordinator *walks the alternative list* and actuates
+//! the best admitted candidate instead of freezing
+//! (degradation-aware stepping; [`TickReport::chosen_rank`] records
+//! which rank actuated). It can also feed every [`Substrate::observe`]
+//! snapshot into an online surface refit
+//! ([`Coordinator::enable_online_calibration`], CLI
+//! `cluster --calibrate-online`): measured latency/capacity
+//! observations recalibrate the planning surfaces on the decision path
+//! every few ticks, closing the ROADMAP's calibration loop for
+//! single-cluster runs.
 
 use std::sync::mpsc;
 
 use anyhow::Result;
 
+use crate::calibrate::{Calibrator, Observation};
 use crate::cluster::{ClusterParams, ClusterSim, ClusterStepMetrics, EventSim, Substrate};
-use crate::config::{MoveFlags, ModelConfig};
+use crate::config::{MoveFlags, ModelConfig, SurfaceConfig};
 use crate::plane::Configuration;
-use crate::policy::{Policy, PolicyContext};
+use crate::policy::{Candidate, Policy, PolicyContext, Proposal};
 use crate::runtime::SurfaceEngine;
 use crate::sla::SlaSpec;
 use crate::surfaces::SurfaceModel;
@@ -40,6 +55,61 @@ pub enum Backend {
     Hlo { engine: SurfaceEngine, moves: MoveFlags },
 }
 
+/// A veto on actuations: anything that can reject a candidate move —
+/// spend caps, maintenance windows, external change control. The
+/// coordinator walks the ranked candidate list and actuates the first
+/// admitted entry; if the guard rejects everything it holds.
+pub trait MoveGuard: Send {
+    /// May the coordinator actuate `cand` from `from` this tick?
+    fn admit(&mut self, from: &Configuration, cand: &Candidate) -> bool;
+}
+
+/// The simplest [`MoveGuard`]: reject any candidate whose hourly cost
+/// exceeds a cap (a single-cluster spend ceiling).
+#[derive(Debug, Clone, Copy)]
+pub struct CostCapGuard {
+    pub cap: f32,
+}
+
+impl MoveGuard for CostCapGuard {
+    fn admit(&mut self, _from: &Configuration, cand: &Candidate) -> bool {
+        cand.cost_to <= self.cap
+    }
+}
+
+/// Minimum calibrator samples before the first online refit fires.
+const MIN_CALIBRATION_OBS: usize = 8;
+/// Minimum *distinct* configurations observed before a refit: with
+/// fewer, the 3-parameter latency fit is exactly determined (any theta
+/// interpolates the samples) and extrapolates arbitrarily badly.
+const MIN_CALIBRATION_CONFIGS: usize = 4;
+
+/// Online surface-refit state: observations stream in from the
+/// substrate, the planning model is rebuilt on a cadence.
+struct OnlineCalibration {
+    cal: Calibrator,
+    refit_every: usize,
+    l_max: f32,
+    u_max: f32,
+    write_ratio: f32,
+    observed: usize,
+    refits: usize,
+    /// Distinct configurations observed so far (the plane holds 16, so
+    /// a Vec scan is cheaper than hashing).
+    seen: Vec<Configuration>,
+}
+
+impl OnlineCalibration {
+    /// Enough coverage for a well-posed refit: the latency fit is
+    /// overdetermined and the throughput fit sees at least two distinct
+    /// H values.
+    fn coverage_ok(&self) -> bool {
+        self.seen.len() >= MIN_CALIBRATION_CONFIGS
+            && self.seen.iter().map(|c| c.h_idx).collect::<std::collections::HashSet<_>>().len()
+                >= 2
+    }
+}
+
 /// One coordinator tick's record.
 #[derive(Debug, Clone)]
 pub struct TickReport {
@@ -53,6 +123,14 @@ pub struct TickReport {
     pub moved_shards: usize,
     /// Measured SLA violation: p99 over the bound, or throughput short.
     pub violation: bool,
+    /// Rank of the actuated candidate in the ranked proposal (0 = the
+    /// policy's first choice; higher = the guard degraded the move).
+    /// `None` when a [`MoveGuard`] rejected every candidate and the
+    /// coordinator held.
+    pub chosen_rank: Option<usize>,
+    /// Top-k ranked candidates for this tick's decision (empty unless
+    /// [`Coordinator::set_explain`] enabled the dump).
+    pub explain: Vec<Candidate>,
 }
 
 /// Aggregate over a coordinator run.
@@ -67,12 +145,23 @@ pub struct CoordinatorSummary {
     pub reconfigurations: usize,
 }
 
+/// What one planning pass produced: the configuration to actuate, the
+/// rank it held in the proposal, and the optional explain dump.
+struct Planned {
+    next: Configuration,
+    chosen_rank: Option<usize>,
+    explain: Vec<Candidate>,
+}
+
 /// The control loop, generic over the substrate it drives.
 pub struct Coordinator<S: Substrate = ClusterSim> {
     model: SurfaceModel,
     sla: SlaSpec,
     cluster: S,
     backend: Backend,
+    guard: Option<Box<dyn MoveGuard>>,
+    online: Option<OnlineCalibration>,
+    explain_k: usize,
     reb_h: f32,
     reb_v: f32,
     plan_queue: bool,
@@ -90,6 +179,9 @@ impl<S: Substrate> Coordinator<S> {
             sla: SlaSpec::from_config(cfg),
             cluster,
             backend,
+            guard: None,
+            online: None,
+            explain_k: 0,
             reb_h: cfg.policy.reb_h,
             reb_v: cfg.policy.reb_v,
             plan_queue: cfg.policy.plan_queue,
@@ -112,12 +204,93 @@ impl<S: Substrate> Coordinator<S> {
         &mut self.cluster
     }
 
+    /// Install (or clear) an actuation guard. With a guard the
+    /// coordinator walks each tick's ranked proposal and actuates the
+    /// first candidate the guard admits — degradation-aware stepping
+    /// instead of freezing on a rejected first choice.
+    pub fn set_guard(&mut self, guard: Option<Box<dyn MoveGuard>>) {
+        self.guard = guard;
+    }
+
+    /// Record the top-`k` ranked candidates of every tick's proposal in
+    /// [`TickReport::explain`] (0 disables; CLI `cluster --explain`).
+    pub fn set_explain(&mut self, k: usize) {
+        self.explain_k = k;
+    }
+
+    /// Feed every substrate `observe()` snapshot into an online surface
+    /// refit: measured (queueing-deflated, unit-mapped) latency plus
+    /// observed capacity accumulate in a [`Calibrator`], and every
+    /// `refit_every` undegraded ticks the planning model is rebuilt
+    /// from the fitted constants — the ROADMAP's calibration-driven
+    /// planning loop, scoped to single-cluster runs
+    /// (CLI `cluster --calibrate-online`).
+    pub fn enable_online_calibration(&mut self, cfg: &ModelConfig, refit_every: usize) {
+        assert!(refit_every > 0, "refit cadence must be at least 1 tick");
+        // HLO kernel constants are baked at artifact-compile time, so a
+        // refit would recalibrate pricing/feasibility but not the kernel
+        // scores — a silent half-calibrated ranking. Native only.
+        assert!(
+            matches!(self.backend, Backend::Native(_)),
+            "online calibration requires the native backend"
+        );
+        self.online = Some(OnlineCalibration {
+            cal: Calibrator::new(cfg.surfaces),
+            refit_every,
+            l_max: cfg.sla.l_max,
+            u_max: cfg.surfaces.u_max,
+            write_ratio: cfg.write_ratio(),
+            observed: 0,
+            refits: 0,
+            seen: Vec::new(),
+        });
+    }
+
+    /// How many online refits have replaced the planning surfaces.
+    pub fn refits(&self) -> usize {
+        self.online.as_ref().map_or(0, |o| o.refits)
+    }
+
+    /// The surface constants currently driving planning (the calibrated
+    /// set once online refits have fired).
+    pub fn planning_constants(&self) -> &SurfaceConfig {
+        self.model.constants()
+    }
+
+    /// Walk a ranked proposal through the guard: first admitted
+    /// candidate wins; with no guard the top candidate actuates
+    /// unconditionally (bit-identical to the pre-proposal coordinator).
+    fn walk(
+        guard: &mut Option<Box<dyn MoveGuard>>,
+        current: Configuration,
+        p: &Proposal,
+    ) -> (Configuration, Option<usize>) {
+        let Some(g) = guard.as_mut() else {
+            return (p.decision().next, Some(0));
+        };
+        for (rank, c) in p.candidates.iter().enumerate() {
+            // trailing infeasible entries are stepping-stone vocabulary,
+            // not actuation targets; only the promoted fallback head may
+            // pass the guard at the sentinel score
+            if !c.feasible() && !(p.fallback && rank == 0) {
+                continue;
+            }
+            if g.admit(&current, c) {
+                return (c.to, Some(rank));
+            }
+        }
+        (current, None)
+    }
+
     /// Plan the next configuration for an estimated demand.
-    fn plan(&mut self, est: WorkloadPoint) -> Result<Configuration> {
+    fn plan(&mut self, est: WorkloadPoint) -> Result<Planned> {
+        let model = &self.model;
+        let current = self.current;
+        let explain_k = self.explain_k;
         match &mut self.backend {
             Backend::Native(policy) => {
                 let ctx = PolicyContext {
-                    model: &self.model,
+                    model,
                     sla: &self.sla,
                     reb_h: self.reb_h,
                     reb_v: self.reb_v,
@@ -125,20 +298,24 @@ impl<S: Substrate> Coordinator<S> {
                     future: &[],
                     budget: None,
                 };
-                Ok(policy.decide(self.current, est, &ctx).next)
+                let proposal = policy.propose(current, est, &ctx);
+                let explain = proposal.candidates.iter().take(explain_k).copied().collect();
+                let (next, chosen_rank) = Self::walk(&mut self.guard, current, &proposal);
+                Ok(Planned { next, chosen_rank, explain })
             }
             Backend::Hlo { engine, moves } => {
                 // Build the padded candidate batch for the `neighbor`
-                // kernel, score on PJRT, argmin in rust (row-major order,
-                // strict <, matching the native policy exactly).
+                // kernel, score on PJRT, rank in rust (stable sort keeps
+                // row-major ties, so the top entry is the strict-<
+                // argmin — matching the native policy exactly).
                 let m = engine.engine().manifest();
                 let (rows, cols) = (m.neighbor_rows, m.neighbor_cols);
-                let plane = self.model.plane();
-                let cands = plane.neighbors(&self.current, moves.allow_dh, moves.allow_dv);
+                let plane = model.plane();
+                let cands = plane.neighbors(&current, moves.allow_dh, moves.allow_dv);
                 let mut batch = vec![0.0f32; rows * cols];
                 for (i, c) in cands.iter().enumerate() {
                     let t = plane.tier(c);
-                    let (dh, dv) = self.current.index_distance(c);
+                    let (dh, dv) = current.index_distance(c);
                     let row = &mut batch[i * cols..i * cols + 9];
                     row.copy_from_slice(&[
                         plane.h_value(c) as f32,
@@ -152,18 +329,29 @@ impl<S: Substrate> Coordinator<S> {
                         1.0,
                     ]);
                 }
-                let (scores, _) =
-                    engine.neighbor_scores(&batch, est.lambda_req, *moves)?;
-                let mut best: Option<(usize, f32)> = None;
-                for (i, &s) in scores.iter().take(cands.len()).enumerate() {
-                    if s < INFEASIBLE * 0.5 && best.map_or(true, |(_, b)| s < b) {
-                        best = Some((i, s));
-                    }
+                let (scores, _) = engine.neighbor_scores(&batch, est.lambda_req, *moves)?;
+                let mut ranked: Vec<Candidate> = scores
+                    .iter()
+                    .take(cands.len())
+                    .enumerate()
+                    .filter(|(_, s)| **s < INFEASIBLE * 0.5)
+                    .map(|(i, &s)| Candidate {
+                        to: cands[i],
+                        cost_to: model.cost(&cands[i]),
+                        score: s,
+                        raw: s,
+                        gain: 0.0,
+                    })
+                    .collect();
+                ranked.sort_by(|a, b| a.score.total_cmp(&b.score));
+                let mut p = Proposal::ranked(current, model.cost(&current), 0.0, ranked);
+                if p.candidates.is_empty() {
+                    let up = plane.fallback_up(&current, moves.allow_dh, moves.allow_dv);
+                    p.promote_fallback(up, model.cost(&up));
                 }
-                Ok(match best {
-                    Some((i, _)) => cands[i],
-                    None => plane.fallback_up(&self.current, moves.allow_dh, moves.allow_dv),
-                })
+                let explain = p.candidates.iter().take(explain_k).copied().collect();
+                let (next, chosen_rank) = Self::walk(&mut self.guard, current, &p);
+                Ok(Planned { next, chosen_rank, explain })
             }
         }
     }
@@ -182,22 +370,61 @@ impl<S: Substrate> Coordinator<S> {
         };
         let est = WorkloadPoint::new(self.ewma, demand.lambda_w / demand.lambda_req.max(1e-9));
 
-        let next = self.plan(est)?;
-        let plan = self.cluster.apply(next);
-        self.current = next;
+        // Online surface refit: fold this tick's measurement into the
+        // calibrator before planning, so refits reach the decision path
+        // the same tick they fire.
+        if let Some(o) = &mut self.online {
+            let status = self.cluster.observe();
+            if !status.degraded {
+                // undo the queueing inflation and the substrate unit
+                // mapping so the calibrator sees raw paper-scale latency
+                let u = metrics.utilization.min(o.u_max as f64);
+                let raw_paper = metrics.avg_latency * (1.0 - u) * o.l_max as f64
+                    / self.cluster.params().sla_latency;
+                o.cal.observe(
+                    self.model.plane(),
+                    Observation {
+                        config: served_config,
+                        latency: raw_paper,
+                        throughput: status.capacity,
+                    },
+                );
+                o.observed += 1;
+                if !o.seen.contains(&served_config) {
+                    o.seen.push(served_config);
+                }
+                if o.observed % o.refit_every == 0
+                    && o.cal.len() >= MIN_CALIBRATION_OBS
+                    && o.coverage_ok()
+                {
+                    self.model = SurfaceModel::new(
+                        self.model.plane().clone(),
+                        o.cal.calibrated_config(),
+                        o.write_ratio,
+                    );
+                    o.refits += 1;
+                }
+            }
+        }
+
+        let planned = self.plan(est)?;
+        let plan = self.cluster.apply(planned.next);
+        self.current = planned.next;
 
         let violation = metrics.p99_latency > self.cluster.params().sla_latency
             || metrics.completed < demand.lambda_req as f64 * 0.999;
         Ok(TickReport {
             step,
             served_config,
-            next_config: next,
+            next_config: planned.next,
             demand: demand.lambda_req,
             demand_estimate: self.ewma,
             metrics,
             rebalanced: !plan.is_noop() || plan.duration > 0.0,
             moved_shards: plan.moved_shards,
             violation,
+            chosen_rank: planned.chosen_rank,
+            explain: planned.explain,
         })
     }
 
@@ -339,6 +566,77 @@ mod tests {
         assert_eq!(s.steps, 50);
         assert!(s.reconfigurations >= 2);
         assert!(s.completed_ratio > 0.9, "completed={}", s.completed_ratio);
+    }
+
+    #[test]
+    fn cost_cap_guard_degrades_or_holds() {
+        let cfg = ModelConfig::default_paper();
+        let mut c = coordinator(5);
+        let cap = 0.9f32;
+        c.set_guard(Some(Box::new(CostCapGuard { cap })));
+        let trace = TraceBuilder::paper(&cfg);
+        let reports = c.run_trace(&trace).unwrap();
+        let model = SurfaceModel::from_config(&cfg);
+        for r in &reports {
+            assert!(
+                model.cost(&r.next_config) <= cap + 1e-6,
+                "guard let {:?} through at {:.2}/h",
+                r.next_config,
+                model.cost(&r.next_config)
+            );
+        }
+        // the paper's high phase wants configs beyond the cap: the
+        // guard must have stepped down the ranked list or held
+        assert!(
+            reports.iter().any(|r| r.chosen_rank.map_or(true, |k| k > 0)),
+            "guard never bit on the paper trace"
+        );
+    }
+
+    #[test]
+    fn explain_records_the_ranked_top_k() {
+        let cfg = ModelConfig::default_paper();
+        let mut c = coordinator(6);
+        c.set_explain(3);
+        let reports = c.run_trace(&TraceBuilder::paper(&cfg)).unwrap();
+        for r in &reports {
+            assert!(!r.explain.is_empty() && r.explain.len() <= 3);
+            for w in r.explain.windows(2) {
+                assert!(
+                    w[0].score.total_cmp(&w[1].score) != std::cmp::Ordering::Greater,
+                    "explain dump out of rank order"
+                );
+            }
+            // no guard: the top-ranked candidate is what actuated
+            assert_eq!(r.explain[0].to, r.next_config);
+            assert_eq!(r.chosen_rank, Some(0));
+        }
+    }
+
+    /// ROADMAP satellite: `observe()` snapshots feed an online surface
+    /// refit on the decision path. Against the analytical substrate the
+    /// measurements *are* the model, so the fitted constants must land
+    /// back on the priors (self-consistency) while the control loop
+    /// keeps reconfiguring.
+    #[test]
+    fn online_calibration_refits_on_the_decision_path() {
+        use crate::simulator::AnalyticalSubstrate;
+        let cfg = ModelConfig::default_paper();
+        let sub = AnalyticalSubstrate::new(&cfg, ClusterParams::default());
+        let mut c =
+            Coordinator::new(&cfg, sub, Backend::Native(Box::new(DiagonalScale::diagonal())));
+        c.enable_online_calibration(&cfg, 10);
+        let trace = TraceBuilder::paper(&cfg);
+        let reports = c.run_trace(&trace).unwrap();
+        assert!(c.refits() >= 1, "refit cadence never fired");
+        let kappa = c.planning_constants().kappa;
+        assert!(
+            (kappa - cfg.surfaces.kappa).abs() / cfg.surfaces.kappa < 0.05,
+            "kappa drifted under self-consistent data: {kappa}"
+        );
+        let s = summarize(&reports);
+        assert_eq!(s.steps, 50);
+        assert!(s.reconfigurations >= 2);
     }
 
     #[test]

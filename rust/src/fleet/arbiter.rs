@@ -36,7 +36,7 @@
 //! only, no re-negotiation, no envelopes — kept for A/B comparisons
 //! (the fleet tests pin that planning strictly beats it on violations).
 
-use super::tenant::{PriorityClass, Proposal};
+use crate::policy::{PriorityClass, Proposal};
 
 /// Why a proposal was admitted or denied this tick.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -628,7 +628,7 @@ mod tests {
     use crate::plane::Configuration;
 
     fn candidate(to: Configuration, cost_to: f32, gain: f32) -> Candidate {
-        Candidate { to, cost_to, gain }
+        Candidate::priced(to, cost_to, gain)
     }
 
     fn proposal(tenant: usize, class: PriorityClass, cost_from: f32, cost_to: f32) -> Proposal {
@@ -637,9 +637,11 @@ mod tests {
             class,
             from: Configuration::new(0, 0),
             cost_from,
+            current_score: 0.0,
             emergency: false,
             sla_violating: false,
             denial_streak: 0,
+            fallback: false,
             candidates: vec![candidate(Configuration::new(1, 1), cost_to, 10.0)],
             sheds: Vec::new(),
         }
@@ -651,9 +653,11 @@ mod tests {
             class: PriorityClass::Silver,
             from: Configuration::new(1, 1),
             cost_from: cost,
+            current_score: 0.0,
             emergency: false,
             sla_violating: false,
             denial_streak: 0,
+            fallback: false,
             candidates: Vec::new(),
             sheds: Vec::new(),
         }

@@ -31,6 +31,11 @@
 //! tests pin that planning strictly reduces SLA-violation ticks
 //! against it on the contended 6-tenant scenario at the same budget.
 //!
+//! Since PR 5 the ranked enumeration itself comes from the *policy*
+//! ([`crate::policy::Policy::propose`]); [`Tenant::propose`] distills
+//! that proposal instead of re-walking the neighborhood, so exactly one
+//! enumeration happens per tenant per tick.
+//!
 //! Tick semantics are serve-then-move, exactly like
 //! [`crate::simulator::Simulator`]: the configuration carried into tick
 //! *t* serves demand *t*; admitted moves take effect at *t + 1*. The
@@ -44,13 +49,16 @@ pub mod tenant;
 
 pub use arbiter::{Admission, BudgetArbiter, ClassEnvelopes, EnvelopeAdapter, Verdict};
 pub use report::{ClassReport, FleetReport, TenantReport};
-pub use tenant::{Candidate, ForecastKind, PriorityClass, Proposal, Tenant, TenantSpec};
+pub use tenant::{
+    Candidate, ForecastKind, PriorityClass, Proposal, Tenant, TenantPlanner, TenantSpec,
+};
 
 use std::sync::Arc;
 
 use crate::cluster::{ClusterParams, SubstrateKind};
 use crate::config::ModelConfig;
 use crate::placement::{PlacementConfig, PlacementSim};
+use crate::plane::Configuration;
 use crate::policy::BudgetHint;
 use crate::surfaces::SurfaceModel;
 
@@ -106,6 +114,22 @@ impl FleetResult {
     }
 }
 
+/// One tenant's ranked candidates at one tick, captured for the CLI's
+/// `--explain` dump (enable with [`FleetSimulator::enable_explain`];
+/// holds are skipped — only proposals that requested a move record).
+#[derive(Debug, Clone)]
+pub struct ExplainRecord {
+    pub step: usize,
+    pub tenant: usize,
+    pub class: PriorityClass,
+    pub verdict: Verdict,
+    pub from: Configuration,
+    /// Top-k ranked candidates of the admission proposal.
+    pub candidates: Vec<Candidate>,
+    /// How many shed offers the tenant published alongside.
+    pub sheds: usize,
+}
+
 /// Drives N tenants and the budget arbiter over their traces.
 pub struct FleetSimulator {
     tenants: Vec<Tenant>,
@@ -113,6 +137,9 @@ pub struct FleetSimulator {
     /// Dynamic envelope re-weighting from observed per-class contention
     /// (None = fixed configuration-time shares).
     adapter: Option<EnvelopeAdapter>,
+    /// Top-k explain capture (0 = off).
+    explain_k: usize,
+    explain: Vec<ExplainRecord>,
     step: usize,
 }
 
@@ -146,7 +173,19 @@ impl FleetSimulator {
                 t
             })
             .collect();
-        Self { tenants, arbiter, adapter: None, step: 0 }
+        Self { tenants, arbiter, adapter: None, explain_k: 0, explain: Vec::new(), step: 0 }
+    }
+
+    /// Record every moving tenant's top-`k` ranked candidates per tick
+    /// in [`Self::explain_log`] (0 disables; CLI `fleet --explain`).
+    pub fn enable_explain(&mut self, k: usize) {
+        self.explain_k = k;
+    }
+
+    /// The captured explain records (empty unless
+    /// [`Self::enable_explain`] was called before running).
+    pub fn explain_log(&self) -> &[ExplainRecord] {
+        &self.explain
     }
 
     /// Placement-mode fleet: co-locate tenants on shared clusters under
@@ -322,6 +361,22 @@ impl FleetSimulator {
             .map(|(tn, hint)| tn.propose(t, hint))
             .collect();
         let adm = self.arbiter.admit(&proposals);
+
+        if self.explain_k > 0 {
+            for (p, v) in proposals.iter().zip(&adm.verdicts) {
+                if p.is_move() {
+                    self.explain.push(ExplainRecord {
+                        step: t,
+                        tenant: p.tenant,
+                        class: p.class,
+                        verdict: *v,
+                        from: p.from,
+                        candidates: p.candidates.iter().take(self.explain_k).copied().collect(),
+                        sheds: p.sheds.len(),
+                    });
+                }
+            }
+        }
 
         for (i, (p, v)) in proposals.iter().zip(&adm.verdicts).enumerate() {
             let tn = &mut self.tenants[p.tenant];

@@ -14,6 +14,17 @@
 //! may actuate to fund another tenant's SLA repair (online budget
 //! re-negotiation).
 //!
+//! Since PR 5 the ranked enumeration lives in the *policy*
+//! ([`Policy::propose`] returns a [`crate::policy::Proposal`] carrying
+//! every scored neighbor); [`Tenant::propose`] no longer re-walks the
+//! neighborhood. It distills the policy's proposal into the
+//! admission-side view — strict moves only, alternatives capped at
+//! [`MAX_ALTERNATIVES`], the repair stepping stone, shed offers — and
+//! layers on the SLA-audit bookkeeping only the tenant knows
+//! (measured violations, escalation after K violating holds, class and
+//! denial-streak stamps). Exactly one policy enumeration happens per
+//! tick, pinned by `planner_enumerates_exactly_once_per_tick`.
+//!
 //! Tenants share one [`SurfaceModel`] (the plane geometry and surface
 //! constants are fleet-wide), so adding a tenant costs state, not model
 //! construction — the fleet bench leans on this.
@@ -40,46 +51,9 @@ use crate::surfaces::SurfaceModel;
 use crate::workload::{Trace, WorkloadPoint};
 use crate::INFEASIBLE;
 
-/// Admission priority of a tenant. Ties in the arbiter's knapsack break
-/// toward the higher class (`Bronze < Silver < Gold`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub enum PriorityClass {
-    Bronze,
-    Silver,
-    Gold,
-}
-
-impl PriorityClass {
-    /// All classes, highest priority first.
-    pub const ALL: [PriorityClass; 3] =
-        [PriorityClass::Gold, PriorityClass::Silver, PriorityClass::Bronze];
-
-    pub fn label(&self) -> &'static str {
-        match self {
-            PriorityClass::Gold => "gold",
-            PriorityClass::Silver => "silver",
-            PriorityClass::Bronze => "bronze",
-        }
-    }
-
-    /// Numeric rank; higher admits first.
-    pub fn rank(&self) -> u8 {
-        match self {
-            PriorityClass::Gold => 2,
-            PriorityClass::Silver => 1,
-            PriorityClass::Bronze => 0,
-        }
-    }
-
-    /// Inverse of [`Self::rank`] (ranks above Gold clamp to Gold).
-    pub fn from_rank(rank: u8) -> Self {
-        match rank {
-            0 => PriorityClass::Bronze,
-            1 => PriorityClass::Silver,
-            _ => PriorityClass::Gold,
-        }
-    }
-}
+// The decision vocabulary moved into `policy` in PR 5; these re-exports
+// keep `fleet::{Candidate, Proposal, PriorityClass}` paths working.
+pub use crate::policy::{Candidate, PriorityClass, Proposal, MAX_ALTERNATIVES};
 
 /// Per-tenant demand predictor choice for forecast-driven proposals.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -136,94 +110,9 @@ impl TenantSpec {
     }
 }
 
-/// One ranked option within a tenant's proposal: a target configuration
-/// with its hourly cost and a non-negative weight whose meaning depends
-/// on the list it sits in — for move candidates it is the objective
-/// *improvement* claimed over holding (zero for fallbacks and stepping
-/// stones); for shed offers it is the objective *sacrifice* the
-/// downgrade costs its owner (the arbiter drains least-sacrifice
-/// offers first).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct Candidate {
-    pub to: Configuration,
-    /// Hourly cost of the target configuration.
-    pub cost_to: f32,
-    /// Objective improvement (moves) or sacrifice (sheds); >= 0.
-    pub gain: f32,
-}
-
-/// Cap on ranked alternatives behind the best candidate — proposals
-/// stay short so the arbiter walk is O(1) per tenant.
-pub const MAX_ALTERNATIVES: usize = 3;
-
-/// One tenant's proposal for a tick, as the arbiter sees it: a ranked
-/// candidate list (best first) plus — for tenants not repairing their
-/// own SLA — shed offers the arbiter may actuate to fund someone
-/// else's repair.
-#[derive(Debug, Clone, PartialEq)]
-pub struct Proposal {
-    pub tenant: usize,
-    pub class: PriorityClass,
-    pub from: Configuration,
-    /// Hourly cost of the configuration currently serving.
-    pub cost_from: f32,
-    /// SLA emergency: the Algorithm-1 fallback fired, or the current
-    /// configuration is planner-infeasible for this tick's demand.
-    pub emergency: bool,
-    /// The tenant's last served step violated its SLA.
-    pub sla_violating: bool,
-    /// Consecutive ticks this tenant has been denied while
-    /// SLA-violating (the fairness guard's counter).
-    pub denial_streak: usize,
-    /// Ranked moves, best first; empty means the tenant holds.
-    pub candidates: Vec<Candidate>,
-    /// Feasible cost-decreasing fallbacks this (non-repairing) tenant
-    /// offers as burst funding for other tenants' SLA repairs, least
-    /// objective sacrifice first (each `gain` is that sacrifice). The
-    /// arbiter draws at most the first offer per tick — configurations
-    /// move one neighbor step per tick, and the deeper offers document
-    /// the next rungs a multi-tick drain would take.
-    pub sheds: Vec<Candidate>,
-}
-
-impl Proposal {
-    /// The preferred move, if the proposal is not a hold.
-    pub fn best(&self) -> Option<&Candidate> {
-        self.candidates.first()
-    }
-
-    /// Whether the proposal requests any configuration change.
-    pub fn is_move(&self) -> bool {
-        !self.candidates.is_empty()
-    }
-
-    /// Marginal fleet cost of admitting the preferred move (0 for
-    /// holds).
-    pub fn cost_delta(&self) -> f32 {
-        self.best().map_or(0.0, |c| c.cost_to - self.cost_from)
-    }
-
-    /// Whether this proposal repairs the tenant's own SLA (emergency or
-    /// currently violating) — repair moves outrank economic moves
-    /// fleet-wide and may draw shed funding.
-    pub fn is_repair(&self) -> bool {
-        self.emergency || self.sla_violating
-    }
-
-    /// Greedy-knapsack value density of the preferred move: claimed
-    /// gain per added dollar. SLA emergencies outrank any economic
-    /// move.
-    pub fn density(&self) -> f32 {
-        if self.emergency {
-            return INFEASIBLE;
-        }
-        self.best().map_or(0.0, |c| c.gain / (c.cost_to - self.cost_from).max(1e-6))
-    }
-}
-
 /// The planner driving a tenant's proposals: reactive DIAGONALSCALE by
 /// default, or forecast-driven lookahead over a boxed predictor.
-type TenantPlanner = Box<dyn Policy + Send>;
+pub type TenantPlanner = Box<dyn Policy + Send>;
 
 /// Runtime state of one tenant cluster.
 pub struct Tenant {
@@ -321,6 +210,12 @@ impl Tenant {
     pub fn set_escalation(&mut self, k: usize) {
         assert!(k > 0, "escalation threshold must be at least 1");
         self.escalate_k = k;
+    }
+
+    /// Replace the planner outright (test orchestration and custom
+    /// policies; [`Self::enable_forecast`] is the production path).
+    pub fn set_planner(&mut self, planner: TenantPlanner) {
+        self.planner = planner;
     }
 
     /// The shared [`ClusterParams`] rescaled to this tenant's SLA: the
@@ -480,10 +375,6 @@ impl Tenant {
         rec
     }
 
-    fn candidate(&self, to: Configuration, gain: f32) -> Candidate {
-        Candidate { to, cost_to: self.model.cost(&to), gain }
-    }
-
     /// The cheapest configuration that clears this tenant's *audit* for
     /// demand `lambda` (raw latency within `l_max`, throughput at least
     /// the raw requirement), if one exists anywhere on the plane.
@@ -501,12 +392,15 @@ impl Tenant {
         best
     }
 
-    /// The tenant's ranked proposal for tick `t`, shaped to the fleet
-    /// budget hint. The preferred move comes from the configured
-    /// planner (reactive DIAGONALSCALE or forecast lookahead); cheaper
-    /// feasible alternatives and — for SLA repairs — a stepping stone
-    /// toward the cheapest clearing configuration follow, so the
-    /// arbiter can degrade the tenant instead of denying it outright.
+    /// The tenant's ranked admission proposal for tick `t`, shaped to
+    /// the fleet budget hint. The *policy* enumerates and scores the
+    /// neighborhood exactly once ([`Policy::propose`]); this method
+    /// only distills that proposal — preferred move, cheaper feasible
+    /// alternatives, and for SLA repairs a stepping stone toward the
+    /// cheapest clearing configuration — and layers on the SLA-audit
+    /// bookkeeping (measured violations, escalation, class stamps), so
+    /// the arbiter can degrade the tenant instead of denying it
+    /// outright.
     pub fn propose(&mut self, t: usize, hint: Option<BudgetHint>) -> Proposal {
         let w = self.workload_at(t);
         // the context borrows a cheap Arc clone + copied SLA so `self`
@@ -523,59 +417,51 @@ impl Tenant {
             budget: hint,
         };
         let current = self.current;
-        let current_feasible = model.feasible(&current, w.lambda_req, &sla, self.plan_queue);
-        let current_score = if self.plan_queue {
-            model.effective_objective(&current, w.lambda_req)
-        } else {
-            model.evaluate(&current, w.lambda_req).objective
-        };
-        let d = self.planner.decide(current, w, &ctx);
-        let mut emergency = d.fallback || !current_feasible;
+        // the ONE neighborhood enumeration this tick: every scored
+        // neighbor, budget-blind myopic scores included
+        let planned = self.planner.propose(current, w, &ctx);
+        let current_score = planned.current_score;
+        // row-major view of the scored neighborhood, so ties in the
+        // alternative/shed/stone walks keep the kernel's candidate
+        // order exactly as the pre-PR-5 re-enumeration did
+        let mut scored: Vec<Candidate> = planned.candidates.clone();
+        scored.sort_by_key(|c| (c.to.h_idx, c.to.v_idx));
+        let current_feasible = scored
+            .iter()
+            .find(|c| c.to == current)
+            .map_or_else(
+                || model.feasible(&current, w.lambda_req, &sla, self.plan_queue),
+                Candidate::feasible,
+            );
+        let best = planned.decision();
+        let mut emergency = planned.fallback || !current_feasible;
         let repair = emergency || self.last_violation;
-        let raw_score =
-            |cand: &Configuration| DiagonalScale::score_candidate(&current, cand, w, &ctx);
-        // the neighborhood is scored once (row-major order preserved);
-        // alternatives, shed offers, and the stepping stone below all
-        // slice this instead of re-evaluating the surfaces
-        let scored: Vec<(Configuration, f32)> = model
-            .plane()
-            .neighbors(&current, true, true)
-            .into_iter()
-            .map(|c| {
-                let s = raw_score(&c);
-                (c, s)
-            })
-            .collect();
 
         let mut candidates: Vec<Candidate> = Vec::new();
-        if d.next != current {
-            let raw = raw_score(&d.next);
-            let gain =
-                if raw >= INFEASIBLE * 0.5 { 0.0 } else { (current_score - raw).max(0.0) };
-            candidates.push(self.candidate(d.next, gain));
-            let best_cost = candidates[0].cost_to;
+        if best.next != current {
+            let top = *planned.top().expect("a move decision has a top candidate");
+            candidates.push(top);
+            let best_cost = top.cost_to;
 
-            // cheaper feasible alternatives, ranked by score (stable
-            // sort: ties keep row-major order): economic proposals only
-            // list strict improvements over holding; repair proposals
-            // accept any clearing neighbor
-            let mut alts: Vec<(f32, Configuration)> = Vec::new();
-            for &(cand, raw) in &scored {
-                if cand == current || cand == d.next || model.cost(&cand) >= best_cost {
+            // cheaper feasible alternatives, ranked by myopic score
+            // (stable sort: ties keep row-major order): economic
+            // proposals only list strict improvements over holding;
+            // repair proposals accept any clearing neighbor
+            let mut alts: Vec<Candidate> = Vec::new();
+            for c in &scored {
+                if c.to == current || c.to == top.to || c.cost_to >= best_cost {
                     continue;
                 }
-                if raw >= INFEASIBLE * 0.5 {
+                if !c.feasible() {
                     continue;
                 }
-                if repair || raw < current_score {
-                    alts.push((raw, cand));
+                if repair || c.raw < current_score {
+                    alts.push(*c);
                 }
             }
-            alts.sort_by(|a, b| a.0.total_cmp(&b.0));
+            alts.sort_by(|a, b| a.raw.total_cmp(&b.raw));
             alts.truncate(MAX_ALTERNATIVES);
-            for (raw, cand) in alts {
-                candidates.push(self.candidate(cand, (current_score - raw).max(0.0)));
-            }
+            candidates.extend(alts);
 
             // stepping stone for repairs: the cheapest neighbor that
             // strictly reduces Chebyshev distance to the cheapest
@@ -588,19 +474,19 @@ impl Tenant {
                         dh.max(dv)
                     };
                     let d0 = dist(&current);
-                    let mut stone: Option<Configuration> = None;
-                    for &(cand, _) in &scored {
-                        if cand == current || candidates.iter().any(|c| c.to == cand) {
+                    let mut stone: Option<Candidate> = None;
+                    for c in &scored {
+                        if c.to == current || candidates.iter().any(|k| k.to == c.to) {
                             continue;
                         }
-                        if dist(&cand) < d0
-                            && stone.map_or(true, |s| model.cost(&cand) < model.cost(&s))
+                        if dist(&c.to) < d0
+                            && stone.map_or(true, |s: Candidate| c.cost_to < s.cost_to)
                         {
-                            stone = Some(cand);
+                            stone = Some(*c);
                         }
                     }
                     if let Some(s) = stone {
-                        candidates.push(self.candidate(s, 0.0));
+                        candidates.push(Candidate { gain: 0.0, ..s });
                     }
                 }
             }
@@ -613,9 +499,17 @@ impl Tenant {
             // silence — owns the outcome.
             self.violating_holds += 1;
             if self.violating_holds >= self.escalate_k {
-                let up = self.model.plane().fallback_up(&self.current, true, true);
-                if up != self.current {
-                    candidates.push(self.candidate(up, 0.0));
+                let up = self.model.plane().fallback_up(&current, true, true);
+                if up != current {
+                    // beyond what the model justifies: sentinel scores,
+                    // no claimed gain
+                    candidates.push(Candidate {
+                        to: up,
+                        cost_to: model.cost(&up),
+                        score: INFEASIBLE,
+                        raw: INFEASIBLE,
+                        gain: 0.0,
+                    });
                     emergency = true;
                 }
             }
@@ -627,33 +521,35 @@ impl Tenant {
         // tenant volunteers as funding for other tenants' SLA repairs
         let mut sheds: Vec<Candidate> = Vec::new();
         if !repair {
-            let mut offers: Vec<(f32, Configuration)> = Vec::new();
-            for &(cand, raw) in &scored {
-                if cand == current || model.cost(&cand) >= model.cost(&current) {
+            let mut offers: Vec<Candidate> = Vec::new();
+            for c in &scored {
+                if c.to == current || c.cost_to >= planned.cost_from {
                     continue;
                 }
-                if raw < INFEASIBLE * 0.5 {
-                    offers.push((raw, cand));
+                if c.feasible() {
+                    offers.push(*c);
                 }
             }
             // least objective sacrifice first (stable: ties keep
             // row-major order); the gain field carries the sacrifice
             // so the arbiter's funding order matches this ranking
-            offers.sort_by(|a, b| a.0.total_cmp(&b.0));
+            offers.sort_by(|a, b| a.raw.total_cmp(&b.raw));
             offers.truncate(MAX_ALTERNATIVES);
-            for (raw, cand) in offers {
-                sheds.push(self.candidate(cand, (raw - current_score).max(0.0)));
+            for c in offers {
+                sheds.push(Candidate { gain: (c.raw - current_score).max(0.0), ..c });
             }
         }
 
         Proposal {
             tenant: self.id,
             class: self.spec.class,
-            from: self.current,
-            cost_from: self.model.cost(&self.current),
+            from: current,
+            cost_from: planned.cost_from,
+            current_score,
             emergency,
             sla_violating: self.last_violation,
             denial_streak: self.denial_streak,
+            fallback: planned.fallback,
             candidates,
             sheds,
         }
@@ -748,6 +644,60 @@ mod tests {
             for (i, a) in p.candidates.iter().enumerate() {
                 for b in &p.candidates[i + 1..] {
                     assert_ne!(a.to, b.to);
+                }
+            }
+            if let Some(best) = p.best().copied() {
+                t.apply(best.to);
+            }
+        }
+    }
+
+    /// The PR-5 bugfix pin: `Tenant::propose` used to re-enumerate and
+    /// re-score the whole neighborhood after the policy already had —
+    /// now the policy's proposal is the single enumeration and the
+    /// tenant only distills it. A counting planner proves the policy is
+    /// consulted exactly once per tick, and the distilled lists still
+    /// come out ranked and duplicate-free.
+    #[test]
+    fn planner_enumerates_exactly_once_per_tick() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct CountingPlanner {
+            inner: DiagonalScale,
+            calls: Arc<AtomicUsize>,
+        }
+        impl Policy for CountingPlanner {
+            fn name(&self) -> &'static str {
+                "counting"
+            }
+            fn propose(
+                &mut self,
+                current: Configuration,
+                workload: WorkloadPoint,
+                ctx: &PolicyContext<'_>,
+            ) -> Proposal {
+                self.calls.fetch_add(1, Ordering::SeqCst);
+                self.inner.propose(current, workload, ctx)
+            }
+        }
+
+        let mut t = tenant(PriorityClass::Silver);
+        let calls = Arc::new(AtomicUsize::new(0));
+        t.set_planner(Box::new(CountingPlanner {
+            inner: DiagonalScale::diagonal(),
+            calls: Arc::clone(&calls),
+        }));
+        for tick in 0..30 {
+            t.serve(tick);
+            let p = t.propose(tick, None);
+            assert_eq!(
+                calls.load(Ordering::SeqCst),
+                tick + 1,
+                "exactly one policy enumeration per tick"
+            );
+            for (i, a) in p.candidates.iter().enumerate() {
+                for b in &p.candidates[i + 1..] {
+                    assert_ne!(a.to, b.to, "distilled list has duplicates");
                 }
             }
             if let Some(best) = p.best().copied() {

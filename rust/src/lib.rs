@@ -13,9 +13,12 @@
 //!   cost, coordination cost, objective) in native rust (paper §III.B–F),
 //!   plus the §VIII utilization-sensitive queueing extension.
 //! * [`sla`] — SLA feasibility and violation accounting (paper §IV.C).
-//! * [`policy`] — [`policy::DiagonalScale`] (Algorithm 1) and the
-//!   horizontal-only / vertical-only / threshold / oracle / lookahead
-//!   baselines and extensions.
+//! * [`policy`] — the **proposal-first** decision vocabulary:
+//!   [`policy::Policy::propose`] returns a ranked [`policy::Proposal`]
+//!   (every scored candidate, best first; `decide` is derived as its
+//!   top entry). [`policy::DiagonalScale`] (Algorithm 1) plus the
+//!   horizontal-only / vertical-only / threshold / oracle / lookahead /
+//!   forecast-lookahead baselines and extensions all speak it natively.
 //! * [`workload`] — the paper's 50-step trace plus synthetic families.
 //! * [`simulator`] — the Phase-1 analytical simulator (paper §V), plus
 //!   [`simulator::AnalyticalSubstrate`], the analytical surfaces behind
@@ -28,7 +31,11 @@
 //!   [`cluster::EventSim`] (binary-heap event calendar, allocation-free
 //!   hot path, no arrival thinning).
 //! * [`coordinator`] — the autoscaler control loop that drives any
-//!   [`cluster::Substrate`] with any policy.
+//!   [`cluster::Substrate`] with any policy: walks the ranked proposal
+//!   when a [`coordinator::MoveGuard`] vetoes the first choice
+//!   (degradation-aware stepping) and can refit the planning surfaces
+//!   online from `observe()` snapshots
+//!   ([`coordinator::Coordinator::enable_online_calibration`]).
 //! * [`fleet`] — multi-tenant fleet control: N tenant clusters (each a
 //!   full plane/SLA/policy/trace stack, optionally backed by any
 //!   substrate engine — mixable within one run, each audited against
@@ -89,7 +96,7 @@ pub mod workload;
 pub use cluster::{ClusterSim, EventSim, Substrate, SubstrateKind};
 pub use config::ModelConfig;
 pub use plane::{Configuration, ScalingPlane, Tier};
-pub use policy::{Decision, Policy};
+pub use policy::{Candidate, Decision, Policy, Proposal};
 pub use simulator::{AnalyticalSubstrate, PolicyKind, Simulator};
 pub use surfaces::SurfaceModel;
 

@@ -40,6 +40,11 @@ USAGE: diagonal-scale [--config <file.toml>] <COMMAND> [flags]
 COMMANDS:
   simulate    Phase-1 analytical simulation: Table I over the paper trace
                 [--extra <policy>]... add threshold|oracle|lookahead|static
+                [--explain <k>] print each step's top-k ranked candidates
+                                of the DiagonalScale proposal (0 = off)
+                [--explain-out <file.json>] write the explain dump as
+                                versioned JSON (diagonal-scale/explain-v1;
+                                requires --explain)
   surfaces    ASCII heatmaps of the analytical surfaces (figures 1/2/4)
                 [--lambda <f32>] demand level (default 10000)
   figures     Emit Table I + every figure CSV
@@ -49,6 +54,16 @@ COMMANDS:
                                oracle|lookahead|static (default diagonal)
                 [--substrate <s>] des|sampling|analytical (default des)
                 [--seed <u64>] (default 42)
+                [--explain <k>] print each tick's top-k ranked candidates
+                                (0 = off)
+                [--cost-cap <f32>/h] guard: never actuate a config above
+                                this hourly cost — the coordinator walks
+                                the ranked alternatives instead
+                [--calibrate-online <bool>] refit the planning surfaces
+                                from observe() snapshots on the decision
+                                path (default false)
+                [--refit-every <n>] online-calibration refit cadence in
+                                ticks (default 10)
   trace-hlo   Run Table I through the AOT-compiled PJRT policy_trace
                 [--artifacts <dir>] (default artifacts/)
   daemon      Threaded autoscaler daemon on a synthetic demand feed
@@ -78,6 +93,8 @@ COMMANDS:
                                   with this engine (implies --cluster
                                   true; default des)
                 [--seed <u64>] (default 42, substrate modes only)
+                [--explain <k>] print each moving tenant's top-k ranked
+                                  candidates per tick (0 = off)
   placement   Cross-tenant bin-packing onto shared clusters: small
               tenants co-locate behind shared hosts (fair shares +
               contention knee), the packer replans on a cadence, and
@@ -173,16 +190,67 @@ fn substrate_kind(name: &str) -> Result<SubstrateKind> {
         .ok_or_else(|| anyhow!("unknown substrate `{name}` (expected des|sampling|analytical)"))
 }
 
+/// One line per ranked candidate: `(h,v) score cost gain [infeasible]`.
+fn candidate_line(cands: &[diagonal_scale::policy::Candidate]) -> String {
+    cands
+        .iter()
+        .map(|c| {
+            format!(
+                "({},{}) s={:.6} c={:.2} g={:.2}{}",
+                c.to.h_idx,
+                c.to.v_idx,
+                c.score,
+                c.cost_to,
+                c.gain,
+                if c.feasible() { "" } else { " INFEASIBLE" }
+            )
+        })
+        .collect::<Vec<_>>()
+        .join("  |  ")
+}
+
+/// Coordinator knobs shared by every `cluster` substrate choice.
+struct ClusterOpts {
+    explain: usize,
+    cost_cap: Option<f32>,
+    calibrate: bool,
+    refit_every: usize,
+}
+
 /// Run the coordinator over the paper trace on any substrate engine.
 fn run_cluster<S: Substrate>(
     cfg: &ModelConfig,
     substrate: S,
     policy: Box<dyn Policy + Send>,
     label: &str,
+    opts: &ClusterOpts,
 ) -> Result<()> {
     let mut coord = Coordinator::new(cfg, substrate, Backend::Native(policy));
+    coord.set_explain(opts.explain);
+    if let Some(cap) = opts.cost_cap {
+        coord.set_guard(Some(Box::new(coordinator::CostCapGuard { cap })));
+    }
+    if opts.calibrate {
+        coord.enable_online_calibration(cfg, opts.refit_every);
+    }
     let trace = TraceBuilder::paper(cfg);
     let reports = coord.run_trace(&trace)?;
+    if opts.explain > 0 {
+        for r in &reports {
+            println!(
+                "tick {:>3}  demand {:>8.0}  -> ({},{}) rank {}  |  {}",
+                r.step,
+                r.demand,
+                r.next_config.h_idx,
+                r.next_config.v_idx,
+                match r.chosen_rank {
+                    Some(k) => k.to_string(),
+                    None => "held".to_string(),
+                },
+                candidate_line(&r.explain),
+            );
+        }
+    }
     let s = coordinator::summarize(&reports);
     println!(
         "cluster run [{label}]: steps={} violations={} avg_lat={:.4} p99={:.4} completed={:.1}% moved_shards={} reconfigs={}",
@@ -194,6 +262,15 @@ fn run_cluster<S: Substrate>(
         s.total_moved_shards,
         s.reconfigurations
     );
+    if opts.calibrate {
+        let k = coord.planning_constants().kappa;
+        println!(
+            "online calibration: {} refits  kappa {:.1} (prior {:.1})",
+            coord.refits(),
+            k,
+            cfg.surfaces.kappa
+        );
+    }
     Ok(())
 }
 
@@ -232,6 +309,27 @@ fn main() -> Result<()> {
             }
             let rows: Vec<_> = runs.iter().map(|r| (r.policy.clone(), r.summary)).collect();
             println!("{}", report::table1(&rows));
+            let explain: usize = args.parse_num("explain", 0)?;
+            if explain > 0 {
+                let (run, steps) = sim.run_explained(PolicyKind::Diagonal, &trace, explain);
+                for s in &steps {
+                    println!(
+                        "step {:>3}  demand {:>8.0}  -> ({},{}){}  |  {}",
+                        s.step,
+                        s.demand,
+                        s.chosen.h_idx,
+                        s.chosen.v_idx,
+                        if s.fallback { " FALLBACK" } else { "" },
+                        candidate_line(&s.candidates),
+                    );
+                }
+                if let Some(path) = args.get("explain-out") {
+                    std::fs::write(path, report::explain_json(&run.policy, &steps))?;
+                    println!("wrote {path} ({})", report::EXPLAIN_SCHEMA);
+                }
+            } else if args.get("explain-out").is_some() {
+                bail!("--explain-out requires --explain <k>");
+            }
         }
         "surfaces" => {
             let lambda: f32 = args.parse_num("lambda", 10000.0)?;
@@ -255,21 +353,36 @@ fn main() -> Result<()> {
             let policy = policy_send(args.get("policy").unwrap_or("diagonal"))?;
             let kind = substrate_kind(args.get("substrate").unwrap_or("des"))?;
             let params = ClusterParams::default();
+            let opts = ClusterOpts {
+                explain: args.parse_num("explain", 0)?,
+                cost_cap: match args.get("cost-cap") {
+                    None => None,
+                    Some(_) => Some(args.parse_num("cost-cap", 0.0)?),
+                },
+                calibrate: args.parse_num("calibrate-online", false)?,
+                refit_every: args.parse_num("refit-every", 10)?,
+            };
             match kind {
-                SubstrateKind::Des => {
-                    run_cluster(&cfg, EventSim::new(&cfg, params, seed), policy, kind.label())?
-                }
+                SubstrateKind::Des => run_cluster(
+                    &cfg,
+                    EventSim::new(&cfg, params, seed),
+                    policy,
+                    kind.label(),
+                    &opts,
+                )?,
                 SubstrateKind::Sampling => run_cluster(
                     &cfg,
                     ClusterSim::new(&cfg, params, seed),
                     policy,
                     kind.label(),
+                    &opts,
                 )?,
                 SubstrateKind::Analytical => run_cluster(
                     &cfg,
                     AnalyticalSubstrate::new(&cfg, params),
                     policy,
                     kind.label(),
+                    &opts,
                 )?,
             }
         }
@@ -418,7 +531,24 @@ fn main() -> Result<()> {
             if attach {
                 fleetsim.attach_substrates(&cfg, ClusterParams::default(), seed, kind);
             }
+            let explain: usize = args.parse_num("explain", 0)?;
+            fleetsim.enable_explain(explain);
             let res = fleetsim.run(steps);
+            if explain > 0 {
+                for r in fleetsim.explain_log() {
+                    println!(
+                        "tick {:>4}  tenant {:>3} [{:<6}] ({},{}) {:?} sheds={}  |  {}",
+                        r.step,
+                        r.tenant,
+                        r.class.label(),
+                        r.from.h_idx,
+                        r.from.v_idx,
+                        r.verdict,
+                        r.sheds,
+                        candidate_line(&r.candidates),
+                    );
+                }
+            }
             for t in &res.ticks {
                 println!(
                     "tick {:>4}  spend {:>7.2} / {budget:<7.2}  admitted {:>2}  denied {:>2}  rescues {}  degraded {}  sheds {}",

@@ -160,11 +160,26 @@ impl PlacementResult {
 enum PlannedAction {
     /// Cluster (by index) requests nothing.
     Hold(usize),
-    /// Cluster (by index) resizes its host; `emergency` marks SLA
-    /// repairs (current config infeasible or tenants violating).
-    Resize { cluster: usize, to: Configuration, emergency: bool },
+    /// Cluster (by index) resizes its host along a *ranked* candidate
+    /// list (preferred target first, then — for emergencies whose
+    /// target is several plane steps away — a one-step stepping stone,
+    /// so a tight budget degrades the repair instead of denying it);
+    /// `emergency` marks SLA repairs (current config infeasible or
+    /// tenants violating).
+    Resize { cluster: usize, candidates: Vec<Candidate>, emergency: bool },
     /// The packer's full rebalance, all-or-nothing.
     Bundle(RebalanceBundle),
+}
+
+/// The configuration one plane step from `from` toward `to` on each
+/// axis (equal to `to` when already adjacent).
+fn step_toward(from: &Configuration, to: &Configuration) -> Configuration {
+    let step = |a: usize, b: usize| match b.cmp(&a) {
+        std::cmp::Ordering::Greater => a + 1,
+        std::cmp::Ordering::Less => a - 1,
+        std::cmp::Ordering::Equal => a,
+    };
+    Configuration::new(step(from.h_idx, to.h_idx), step(from.v_idx, to.v_idx))
 }
 
 /// Drives shared clusters, the packer, and the budget arbiter over the
@@ -353,10 +368,13 @@ impl PlacementSim {
         }
     }
 
-    /// Reactive per-cluster sizing: an economic downsize that survives
-    /// its own window, or an emergency repair when the current config
-    /// no longer clears the planning demand.
-    fn resize_target(&self, ci: usize, input: &PackInput) -> Option<(Configuration, bool)> {
+    /// Reactive per-cluster sizing as a *ranked candidate list*: an
+    /// economic downsize that survives its own window, or an emergency
+    /// repair when the current config no longer clears the planning
+    /// demand — followed, for multi-step emergency jumps, by a one-step
+    /// stepping stone toward the target so the arbiter can degrade the
+    /// repair under a tight budget instead of flat-denying it.
+    fn resize_candidates(&self, ci: usize, input: &PackInput) -> Option<(Vec<Candidate>, bool)> {
         let cl = &self.clusters[ci];
         let members = cl.tenants();
         if members.is_empty() {
@@ -365,21 +383,32 @@ impl PlacementSim {
         let lam = input.lam_sum(members);
         let lmax = input.lmax_min(members);
         let current = cl.config();
+        let cost_from = self.model.cost(&current);
+        let priced = |to: Configuration| {
+            let cost_to = self.model.cost(&to);
+            Candidate::priced(to, cost_to, (cost_from - cost_to).max(0.0))
+        };
         let current_ok = self.packer.steady_feasible(&current, lam, lmax, input);
         if let Some(s) = self.packer.cheapest_host(lam, lmax, input, false) {
             if s != current
-                && self.model.cost(&s) < self.model.cost(&current)
+                && self.model.cost(&s) < cost_from
                 && self.packer.transition_feasible(&s, lam, lmax, input)
             {
                 // cheaper and window-safe: take it (also repairs if the
-                // current config was infeasible)
-                return Some((s, !current_ok || cl.violating));
+                // current config was infeasible); already the cheapest,
+                // so no alternative ranks behind it
+                return Some((vec![priced(s)], !current_ok || cl.violating));
             }
         }
         if !current_ok {
             let z = self.packer.sizing(lam, lmax, input);
             if z != current {
-                return Some((z, true));
+                let mut candidates = vec![priced(z)];
+                let stone = step_toward(&current, &z);
+                if stone != z && stone != current {
+                    candidates.push(priced(stone));
+                }
+                return Some((candidates, true));
             }
         }
         None
@@ -533,30 +562,28 @@ impl PlacementSim {
                     class: self.highest_class(cl.tenants()),
                     from: cl.config(),
                     cost_from: self.model.cost(&cl.config()),
+                    current_score: 0.0,
                     emergency: false,
                     sla_violating: cl.violating,
                     denial_streak: cl.denial_streak,
+                    fallback: false,
                     candidates: Vec::new(),
                     sheds: Vec::new(),
                 }
             }
-            PlannedAction::Resize { cluster, to, emergency } => {
+            PlannedAction::Resize { cluster, candidates, emergency } => {
                 let cl = &self.clusters[*cluster];
-                let cost_from = self.model.cost(&cl.config());
-                let cost_to = self.model.cost(to);
                 Proposal {
                     tenant: slot,
                     class: self.highest_class(cl.tenants()),
                     from: cl.config(),
-                    cost_from,
+                    cost_from: self.model.cost(&cl.config()),
+                    current_score: 0.0,
                     emergency: *emergency,
                     sla_violating: cl.violating,
                     denial_streak: cl.denial_streak,
-                    candidates: vec![Candidate {
-                        to: *to,
-                        cost_to,
-                        gain: (cost_from - cost_to).max(0.0),
-                    }],
+                    fallback: false,
+                    candidates: candidates.clone(),
                     sheds: Vec::new(),
                 }
             }
@@ -592,14 +619,16 @@ impl PlacementSim {
                     class,
                     from: from.unwrap_or_else(|| Configuration::new(0, 0)),
                     cost_from: b.cost_from,
+                    current_score: 0.0,
                     emergency: violating,
                     sla_violating: violating,
                     denial_streak: streak,
-                    candidates: vec![Candidate {
+                    fallback: false,
+                    candidates: vec![Candidate::priced(
                         to,
-                        cost_to: b.cost_to,
-                        gain: (b.cost_from - b.cost_to).max(0.0),
-                    }],
+                        b.cost_to,
+                        (b.cost_from - b.cost_to).max(0.0),
+                    )],
                     sheds: Vec::new(),
                 }
             }
@@ -785,9 +814,9 @@ impl PlacementSim {
             if affected[ci] {
                 continue; // the bundle owns this cluster's tick
             }
-            match self.resize_target(ci, &input) {
-                Some((to, emergency)) => {
-                    actions.push(PlannedAction::Resize { cluster: ci, to, emergency })
+            match self.resize_candidates(ci, &input) {
+                Some((candidates, emergency)) => {
+                    actions.push(PlannedAction::Resize { cluster: ci, candidates, emergency })
                 }
                 None => actions.push(PlannedAction::Hold(ci)),
             }
@@ -815,9 +844,13 @@ impl PlacementSim {
                 PlannedAction::Hold(ci) => {
                     self.clusters[*ci].denial_streak = 0;
                 }
-                PlannedAction::Resize { cluster, to, .. } => {
+                PlannedAction::Resize { cluster, candidates, .. } => {
                     if v.admitted() {
-                        self.actuate_resize(*cluster, *to, time);
+                        // the arbiter's walk picks which ranked candidate
+                        // actuates (0 = preferred target, 1 = the
+                        // degradation stepping stone)
+                        let ci = adm.chosen[slot].expect("admitted resize has a choice");
+                        self.actuate_resize(*cluster, candidates[ci].to, time);
                         self.clusters[*cluster].denial_streak = 0;
                         admitted_moves += 1;
                     } else {
@@ -1019,6 +1052,44 @@ mod tests {
         let a = build().run(40);
         let b = build().run(40);
         assert_eq!(a.ticks, b.ticks);
+    }
+
+    #[test]
+    fn step_toward_moves_one_index_per_axis() {
+        let a = Configuration::new(0, 3);
+        let b = Configuration::new(2, 1);
+        assert_eq!(step_toward(&a, &b), Configuration::new(1, 2));
+        assert_eq!(step_toward(&b, &a), Configuration::new(1, 2));
+        assert_eq!(step_toward(&a, &a), a);
+        assert_eq!(step_toward(&Configuration::new(1, 1), &Configuration::new(2, 1)), b);
+    }
+
+    /// PR-5: reactive emergency repairs are ranked candidate lists, not
+    /// single moves — a multi-step jump carries a one-step stepping
+    /// stone behind it so a tight budget degrades the repair instead of
+    /// flat-denying it.
+    #[test]
+    fn emergency_resize_ranks_a_stepping_stone_behind_the_target() {
+        let cfg = ModelConfig::default_paper();
+        let b = TraceBuilder::from_config(&cfg);
+        let mut specs = constant_tenant_specs(&cfg, 1);
+        specs[0].trace = b.constant(160.0, 4);
+        specs[0].start = Configuration::new(0, 0);
+        let sim =
+            PlacementSim::dedicated(&cfg, specs, 1.0e6, 3, PlacementConfig::default());
+        let input = sim.plan_input(0);
+        let (cands, emergency) =
+            sim.resize_candidates(0, &input).expect("an infeasible host must propose a repair");
+        assert!(emergency);
+        let target = cands[0].to;
+        let cur = Configuration::new(0, 0);
+        let (dh, dv) = cur.index_distance(&target);
+        assert!(dh.max(dv) > 1, "scenario must need a multi-step jump, got {target:?}");
+        assert_eq!(cands.len(), 2, "a stepping stone must rank behind the target");
+        let stone = cands[1].to;
+        let (sh, sv) = cur.index_distance(&stone);
+        assert!(sh <= 1 && sv <= 1, "stone is one plane step from current");
+        assert!(cands[1].cost_to < cands[0].cost_to, "stone degrades the spend");
     }
 
     #[test]

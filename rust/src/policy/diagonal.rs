@@ -16,7 +16,7 @@ use crate::plane::Configuration;
 use crate::workload::WorkloadPoint;
 use crate::INFEASIBLE;
 
-use super::{rebalance_penalty, Decision, Policy, PolicyContext, BUDGET_PENALTY};
+use super::{rebalance_penalty, Candidate, Policy, PolicyContext, Proposal, BUDGET_PENALTY};
 
 /// The paper's local-search autoscaler.
 #[derive(Debug, Clone, Copy)]
@@ -82,47 +82,58 @@ impl Policy for DiagonalScale {
         }
     }
 
-    fn decide(
+    fn propose(
         &mut self,
         current: Configuration,
         workload: WorkloadPoint,
         ctx: &PolicyContext<'_>,
-    ) -> Decision {
+    ) -> Proposal {
         let plane = ctx.model.plane();
         let cur_cost = ctx.model.cost(&current);
-        let mut best: Option<(Configuration, f32)> = None;
-        // Row-major order + strict improvement == the kernel's argmin.
-        // (allocation-free visit: this is the control loop's hot path)
+        let current_score = ctx.hold_score(&current, workload);
+        let mut candidates: Vec<Candidate> = Vec::with_capacity(9);
+        let mut any_feasible = false;
         plane.for_each_neighbor(&current, self.moves.allow_dh, self.moves.allow_dv, |cand| {
-            let mut score = Self::score_candidate(&current, &cand, workload, ctx);
-            if score >= INFEASIBLE * 0.5 {
-                return; // Algorithm 1 line 6: SLA-infeasible
-            }
-            // Budget-aware planning: a feasible candidate whose cost
-            // increase does not fit the fleet headroom is kept but
-            // deprioritized, so the policy prefers the best *affordable*
-            // move and escalates an unaffordable one only when nothing
-            // affordable is feasible. No hint (the single-cluster path)
-            // leaves the kernel-parity scoring untouched.
-            if let Some(hint) = &ctx.budget {
-                if !hint.fits(ctx.model.cost(&cand) - cur_cost) {
-                    score += BUDGET_PENALTY;
+            let raw = Self::score_candidate(&current, &cand, workload, ctx);
+            let mut score = raw;
+            if raw < INFEASIBLE * 0.5 {
+                any_feasible = true;
+                // Budget-aware planning: a feasible candidate whose cost
+                // increase does not fit the fleet headroom is kept but
+                // deprioritized, so the policy prefers the best
+                // *affordable* move and escalates an unaffordable one
+                // only when nothing affordable is feasible. No hint (the
+                // single-cluster path) leaves the kernel-parity scoring
+                // untouched. Infeasible candidates keep the sentinel
+                // (Algorithm 1 line 6) and trail the ranking.
+                if let Some(hint) = &ctx.budget {
+                    if !hint.fits(ctx.model.cost(&cand) - cur_cost) {
+                        score += BUDGET_PENALTY;
+                    }
                 }
             }
-            if best.map_or(true, |(_, b)| score < b) {
-                best = Some((cand, score));
-            }
+            let gain =
+                if raw >= INFEASIBLE * 0.5 { 0.0 } else { (current_score - raw).max(0.0) };
+            candidates.push(Candidate {
+                to: cand,
+                cost_to: ctx.model.cost(&cand),
+                score,
+                raw,
+                gain,
+            });
         });
-        match best {
-            Some((next, score)) => Decision { next, score, fallback: false },
-            None => Decision {
-                // Algorithm 1 line 18: one-step scale-up fallback along
-                // the axes this policy may move.
-                next: plane.fallback_up(&current, self.moves.allow_dh, self.moves.allow_dv),
-                score: INFEASIBLE,
-                fallback: true,
-            },
+        // Stable sort from row-major enumeration order: equal scores
+        // keep the kernel's candidate order, so the top entry is
+        // exactly the strict-< argmin the pre-proposal decide computed.
+        candidates.sort_by(|a, b| a.score.total_cmp(&b.score));
+        let mut p = Proposal::ranked(current, cur_cost, current_score, candidates);
+        if !any_feasible {
+            // Algorithm 1 line 18: one-step scale-up fallback along the
+            // axes this policy may move.
+            let up = plane.fallback_up(&current, self.moves.allow_dh, self.moves.allow_dv);
+            p.promote_fallback(up, ctx.model.cost(&up));
         }
+        p
     }
 }
 

@@ -9,7 +9,7 @@ use crate::forecast::Forecaster;
 use crate::plane::Configuration;
 use crate::workload::WorkloadPoint;
 
-use super::{Decision, Lookahead, Policy, PolicyContext};
+use super::{Lookahead, Policy, PolicyContext, Proposal};
 
 /// Lookahead over a self-maintained forecast.
 pub struct ForecastLookahead<F: Forecaster> {
@@ -43,12 +43,12 @@ impl<F: Forecaster> Policy for ForecastLookahead<F> {
         "forecast-lookahead"
     }
 
-    fn decide(
+    fn propose(
         &mut self,
         current: Configuration,
         workload: WorkloadPoint,
         ctx: &PolicyContext<'_>,
-    ) -> Decision {
+    ) -> Proposal {
         self.forecaster.observe(workload.lambda_req as f64);
         if workload.lambda_req > 0.0 {
             self.write_ratio = workload.lambda_w / workload.lambda_req;
@@ -69,7 +69,7 @@ impl<F: Forecaster> Policy for ForecastLookahead<F> {
             future: &future,
             budget: ctx.budget,
         };
-        self.inner.decide(current, workload, &fctx)
+        self.inner.propose(current, workload, &fctx)
     }
 }
 

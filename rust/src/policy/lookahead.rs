@@ -11,7 +11,7 @@ use crate::workload::WorkloadPoint;
 use crate::INFEASIBLE;
 
 use super::{
-    rebalance_penalty, BudgetHint, Decision, DiagonalScale, Policy, PolicyContext,
+    rebalance_penalty, BudgetHint, Candidate, DiagonalScale, Policy, PolicyContext, Proposal,
     BUDGET_PENALTY,
 };
 
@@ -39,11 +39,50 @@ impl Lookahead {
         self.depth
     }
 
+    /// Path score of moving from `current` to `cand` at forecast level
+    /// 0 (demand `w`), with `remaining` further levels below, paired
+    /// with the level-0 myopic score (`here`) so `propose` can reuse it
+    /// as `Candidate::raw` when no forecast substitutes the workload.
+    /// `budget` is the fleet headroom hint charged against level-0
+    /// moves only (the one actually paid this tick); deeper levels are
+    /// planned budget-blind.
+    #[allow(clippy::too_many_arguments)]
+    fn candidate_score(
+        &self,
+        current: Configuration,
+        cand: Configuration,
+        w: WorkloadPoint,
+        future: &[WorkloadPoint],
+        remaining: usize,
+        ctx: &PolicyContext<'_>,
+        budget: Option<BudgetHint>,
+    ) -> (f32, f32) {
+        let here = DiagonalScale::score_candidate(&current, &cand, w, ctx);
+        let mut score = if here >= INFEASIBLE * 0.5 {
+            // keep expanding through infeasible states but charge them
+            INFEASIBLE_LEVEL_PENALTY
+                + ctx.model.evaluate(&cand, w.lambda_req).objective
+                + rebalance_penalty(&current, &cand, ctx.reb_h, ctx.reb_v)
+        } else {
+            here
+        };
+        if let Some(hint) = &budget {
+            if !hint.fits(ctx.model.cost(&cand) - ctx.model.cost(&current)) {
+                score += BUDGET_PENALTY;
+            }
+        }
+        if remaining > 0 {
+            if let Some((&next_w, rest)) = future.split_first() {
+                let (_, tail) = self.path_score(cand, next_w, rest, remaining - 1, ctx, None);
+                score += tail;
+            }
+        }
+        (score, here)
+    }
+
     /// Best achievable path score starting by moving from `current` at
-    /// forecast level `level` (demand `w`), with `remaining` further
-    /// levels below. `budget` is the fleet headroom hint charged against
-    /// level-0 moves only (the one actually paid this tick); deeper
-    /// levels are planned budget-blind.
+    /// one forecast level (demand `w`), with `remaining` further levels
+    /// below.
     fn path_score(
         &self,
         current: Configuration,
@@ -54,30 +93,10 @@ impl Lookahead {
         budget: Option<BudgetHint>,
     ) -> (Configuration, f32) {
         let plane = ctx.model.plane();
-        let cur_cost = ctx.model.cost(&current);
         let mut best: Option<(Configuration, f32)> = None;
         for cand in plane.neighbors(&current, self.moves.allow_dh, self.moves.allow_dv) {
-            let here = DiagonalScale::score_candidate(&current, &cand, w, ctx);
-            let mut score = if here >= INFEASIBLE * 0.5 {
-                // keep expanding through infeasible states but charge them
-                INFEASIBLE_LEVEL_PENALTY
-                    + ctx.model.evaluate(&cand, w.lambda_req).objective
-                    + rebalance_penalty(&current, &cand, ctx.reb_h, ctx.reb_v)
-            } else {
-                here
-            };
-            if let Some(hint) = &budget {
-                if !hint.fits(ctx.model.cost(&cand) - cur_cost) {
-                    score += BUDGET_PENALTY;
-                }
-            }
-            if remaining > 0 {
-                if let Some((&next_w, rest)) = future.split_first() {
-                    let (_, tail) =
-                        self.path_score(cand, next_w, rest, remaining - 1, ctx, None);
-                    score += tail;
-                }
-            }
+            let (score, _) =
+                self.candidate_score(current, cand, w, future, remaining, ctx, budget);
             if best.map_or(true, |(_, b)| score < b) {
                 best = Some((cand, score));
             }
@@ -92,12 +111,12 @@ impl Policy for Lookahead {
         "lookahead"
     }
 
-    fn decide(
+    fn propose(
         &mut self,
         current: Configuration,
         workload: WorkloadPoint,
         ctx: &PolicyContext<'_>,
-    ) -> Decision {
+    ) -> Proposal {
         // Serve-then-move alignment: under the simulator's semantics the
         // configuration chosen NOW serves the NEXT step's demand, so when
         // a forecast exists, level-0 candidates are scored against
@@ -108,18 +127,49 @@ impl Policy for Lookahead {
             Some((&w0, rest)) => (w0, rest),
             None => (workload, ctx.future),
         };
-        let (next, score) = self.path_score(current, w0, rest, self.depth - 1, ctx, ctx.budget);
-        let fallback = score >= INFEASIBLE_LEVEL_PENALTY * 0.5;
-        if fallback && next == current {
-            // nothing feasible anywhere on the path: behave like the
-            // Algorithm-1 fallback so we still make progress.
-            let up = ctx
-                .model
-                .plane()
-                .fallback_up(&current, self.moves.allow_dh, self.moves.allow_dv);
-            return Decision { next: up, score: INFEASIBLE, fallback: true };
+        let plane = ctx.model.plane();
+        // `raw` and the gain anchor speak to the *observed* demand even
+        // when the ranking looks ahead: downstream negotiation (the
+        // fleet's alternatives/sheds) reasons about this tick.
+        let current_score = ctx.hold_score(&current, workload);
+        let mut candidates: Vec<Candidate> = Vec::with_capacity(9);
+        for cand in plane.neighbors(&current, self.moves.allow_dh, self.moves.allow_dv) {
+            let (score, here) =
+                self.candidate_score(current, cand, w0, rest, self.depth - 1, ctx, ctx.budget);
+            // with no forecast the level-0 demand IS the observed
+            // workload, so `here` already is the myopic score; only a
+            // forecast-substituted w0 needs the extra evaluation
+            let raw = if ctx.future.is_empty() {
+                here
+            } else {
+                DiagonalScale::score_candidate(&current, &cand, workload, ctx)
+            };
+            let gain =
+                if raw >= INFEASIBLE * 0.5 { 0.0 } else { (current_score - raw).max(0.0) };
+            candidates.push(Candidate {
+                to: cand,
+                cost_to: ctx.model.cost(&cand),
+                score,
+                raw,
+                gain,
+            });
         }
-        Decision { next, score, fallback }
+        // stable sort keeps enumeration order on ties: the top entry is
+        // the strict-< argmin of the path search
+        candidates.sort_by(|a, b| a.score.total_cmp(&b.score));
+        let mut p = Proposal::ranked(current, ctx.model.cost(&current), current_score, candidates);
+        let top = p.candidates[0];
+        if top.score >= INFEASIBLE_LEVEL_PENALTY * 0.5 {
+            if top.to == current {
+                // nothing feasible anywhere on the path: behave like the
+                // Algorithm-1 fallback so we still make progress.
+                let up = plane.fallback_up(&current, self.moves.allow_dh, self.moves.allow_dv);
+                p.promote_fallback(up, ctx.model.cost(&up));
+            } else {
+                p.fallback = true;
+            }
+        }
+        p
     }
 }
 

@@ -1,23 +1,55 @@
-//! Autoscaling policies over the Scaling Plane.
+//! Autoscaling policies over the Scaling Plane — **proposal-first**.
 //!
 //! [`DiagonalScale`] is the paper's contribution (Algorithm 1); the same
 //! implementation restricted to one axis yields the horizontal-only and
 //! vertical-only baselines (§V.D). [`Threshold`] is the HPA-style
 //! reactive strawman the paper's introduction argues against,
 //! [`Oracle`] is the per-step global optimum (upper bound), and
-//! [`Lookahead`] is the §VIII multi-step extension. [`StaticPolicy`]
-//! never moves (do-nothing baseline).
+//! [`Lookahead`] / [`ForecastLookahead`] are the §VIII multi-step
+//! extensions. [`StaticPolicy`] never moves (do-nothing baseline).
+//!
+//! ## The decision vocabulary
+//!
+//! Algorithm 1 enumerates and scores a full candidate set every tick;
+//! since PR 5 that set *is* the policy's output. [`Policy::propose`] is
+//! the required method and returns a [`Proposal`] — the ranked
+//! enumeration, best candidate first — while [`Policy::decide`] is a
+//! provided method that collapses the proposal to its top candidate
+//! (bit-identical to the pre-proposal `decide`, pinned by
+//! `rust/tests/prop_policy.rs`). Everything downstream speaks this one
+//! vocabulary:
+//!
+//! * the [`crate::coordinator`] walks the ranked list when a
+//!   [`crate::coordinator::MoveGuard`] rejects the first choice
+//!   (degradation instead of a frozen cluster),
+//! * the fleet tenant distills the proposal into an admission proposal
+//!   (strict moves, capped alternatives, an SLA-repair *stepping stone*
+//!   that monotonically approaches the cheapest audit-clearing config,
+//!   and *shed offers* — see [`proposal`]) without re-enumerating the
+//!   neighborhood,
+//! * and the budget arbiter walks candidates/sheds to degrade, fund,
+//!   and re-negotiate instead of flat-denying.
+//!
+//! [`Candidate::score`] is the ranking score (`decide`'s reported
+//! score: objective + rebalance penalty + budget/path penalties);
+//! [`Candidate::raw`] is the budget-blind myopic score against the
+//! observed workload; [`Candidate::gain`] claims the objective
+//! improvement over holding (or, on shed offers, the sacrifice).
+//! Infeasible candidates score [`crate::INFEASIBLE`] and trail the
+//! list — stepping-stone vocabulary, not actuation targets.
 
 mod diagonal;
 mod forecast;
 mod lookahead;
 mod oracle;
+pub mod proposal;
 mod threshold;
 
 pub use diagonal::DiagonalScale;
 pub use forecast::ForecastLookahead;
 pub use lookahead::Lookahead;
 pub use oracle::Oracle;
+pub use proposal::{Candidate, PriorityClass, Proposal, MAX_ALTERNATIVES};
 pub use threshold::Threshold;
 
 use crate::config::MoveFlags;
@@ -79,6 +111,20 @@ pub struct PolicyContext<'a> {
     pub budget: Option<BudgetHint>,
 }
 
+impl PolicyContext<'_> {
+    /// The budget-blind myopic score of holding `current` for
+    /// `workload` (plan-queue aware, never masked to
+    /// [`crate::INFEASIBLE`]) — the anchor proposals measure candidate
+    /// gains against.
+    pub fn hold_score(&self, current: &Configuration, workload: WorkloadPoint) -> f32 {
+        if self.plan_queue {
+            self.model.effective_objective(current, workload.lambda_req)
+        } else {
+            self.model.evaluate(current, workload.lambda_req).objective
+        }
+    }
+}
+
 /// The outcome of one decision.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Decision {
@@ -92,15 +138,34 @@ pub struct Decision {
 }
 
 /// An autoscaling policy: a (possibly stateful) map from
-/// (configuration, workload) to the next configuration.
+/// (configuration, workload) to a ranked [`Proposal`].
+///
+/// `propose` is the required method; `decide` is provided and returns
+/// the proposal's top candidate as a [`Decision`]. Implementations
+/// must rank candidates best-score-first (stable on enumeration order,
+/// so the top is exactly the strict-`<` argmin the AOT kernels
+/// compute) and list each configuration at most once.
 pub trait Policy {
     fn name(&self) -> &'static str;
+
+    /// The full ranked proposal for one decision point.
+    fn propose(
+        &mut self,
+        current: Configuration,
+        workload: WorkloadPoint,
+        ctx: &PolicyContext<'_>,
+    ) -> Proposal;
+
+    /// The top candidate as a [`Decision`] (provided; bit-identical to
+    /// the pre-proposal `decide` for every in-tree policy).
     fn decide(
         &mut self,
         current: Configuration,
         workload: WorkloadPoint,
         ctx: &PolicyContext<'_>,
-    ) -> Decision;
+    ) -> Decision {
+        self.propose(current, workload, ctx).decision()
+    }
 }
 
 /// The paper IV.D rebalance penalty between two configurations:
@@ -124,17 +189,28 @@ impl Policy for StaticPolicy {
         "static"
     }
 
-    fn decide(
+    fn propose(
         &mut self,
         current: Configuration,
         workload: WorkloadPoint,
         ctx: &PolicyContext<'_>,
-    ) -> Decision {
-        let obj = ctx
-            .model
-            .evaluate(&current, workload.lambda_req)
-            .objective;
-        Decision { next: current, score: obj, fallback: false }
+    ) -> Proposal {
+        // candidate score = the plain objective decide always reported
+        // (parity); the hold anchor honors the plan-queue contract of
+        // `Proposal::current_score`
+        let obj = ctx.model.evaluate(&current, workload.lambda_req).objective;
+        Proposal::ranked(
+            current,
+            ctx.model.cost(&current),
+            ctx.hold_score(&current, workload),
+            vec![Candidate {
+                to: current,
+                cost_to: ctx.model.cost(&current),
+                score: obj,
+                raw: obj,
+                gain: 0.0,
+            }],
+        )
     }
 }
 
@@ -206,8 +282,11 @@ mod tests {
         };
         let mut p = StaticPolicy;
         let c = Configuration::new(2, 2);
+        let prop = p.propose(c, WorkloadPoint::new(1e9, 0.3), &ctx);
+        assert_eq!(prop.candidates.len(), 1);
         let d = p.decide(c, WorkloadPoint::new(1e9, 0.3), &ctx);
         assert_eq!(d.next, c);
         assert!(!d.fallback);
+        assert_eq!(prop.decision(), d);
     }
 }

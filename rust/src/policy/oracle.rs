@@ -6,9 +6,8 @@
 
 use crate::plane::Configuration;
 use crate::workload::WorkloadPoint;
-use crate::INFEASIBLE;
 
-use super::{Decision, Policy, PolicyContext};
+use super::{Candidate, Policy, PolicyContext, Proposal};
 
 /// Exhaustive global-best policy (ablation upper bound).
 #[derive(Debug, Default, Clone, Copy)]
@@ -19,35 +18,45 @@ impl Policy for Oracle {
         "oracle"
     }
 
-    fn decide(
+    fn propose(
         &mut self,
-        _current: Configuration,
+        current: Configuration,
         workload: WorkloadPoint,
         ctx: &PolicyContext<'_>,
-    ) -> Decision {
-        match ctx
-            .model
-            .best_feasible(workload.lambda_req, ctx.sla, ctx.plan_queue)
-        {
-            Some((cfg, point)) => Decision {
-                next: cfg,
-                score: if ctx.plan_queue {
-                    ctx.model.effective_objective(&cfg, workload.lambda_req)
-                } else {
-                    point.objective
-                },
-                fallback: false,
-            },
-            None => Decision {
-                // nothing feasible anywhere: max out the plane
-                next: Configuration::new(
-                    ctx.model.plane().n_h() - 1,
-                    ctx.model.plane().n_v() - 1,
-                ),
-                score: INFEASIBLE,
-                fallback: true,
-            },
+    ) -> Proposal {
+        let model = ctx.model;
+        let current_score = ctx.hold_score(&current, workload);
+        // the oracle's candidate set is the whole feasible plane, ranked
+        // by objective — no locality, no rebalance penalty (infeasible
+        // cells are omitted: the oracle has no stepping-stone story)
+        let mut candidates: Vec<Candidate> = Vec::new();
+        for c in model.plane().iter() {
+            if !model.feasible(&c, workload.lambda_req, ctx.sla, ctx.plan_queue) {
+                continue;
+            }
+            let score = if ctx.plan_queue {
+                model.effective_objective(&c, workload.lambda_req)
+            } else {
+                model.evaluate(&c, workload.lambda_req).objective
+            };
+            candidates.push(Candidate {
+                to: c,
+                cost_to: model.cost(&c),
+                score,
+                raw: score,
+                gain: (current_score - score).max(0.0),
+            });
         }
+        // stable on plane iteration order: the top is best_feasible's
+        // strict-< argmin
+        candidates.sort_by(|a, b| a.score.total_cmp(&b.score));
+        let mut p = Proposal::ranked(current, model.cost(&current), current_score, candidates);
+        if p.candidates.is_empty() {
+            // nothing feasible anywhere: max out the plane
+            let top = Configuration::new(model.plane().n_h() - 1, model.plane().n_v() - 1);
+            p.promote_fallback(top, model.cost(&top));
+        }
+        p
     }
 }
 

@@ -1,0 +1,364 @@
+//! The proposal vocabulary: a ranked candidate list is the native
+//! output of every policy, not an afterthought bolted onto the fleet.
+//!
+//! Algorithm 1 already *enumerates and scores* the whole neighborhood
+//! each tick; [`Proposal`] keeps that work instead of throwing away
+//! everything but the argmin. A proposal carries, best ranking score
+//! first:
+//!
+//! * the policy's preferred move (the old `decide` answer — always
+//!   `candidates[0]`, pinned bit-identical by `rust/tests/prop_policy.rs`),
+//! * every other scored candidate, feasible ones ahead of infeasible
+//!   ones (infeasible entries score [`crate::INFEASIBLE`] and trail the
+//!   list — they are stepping-stone vocabulary for SLA repairs, not
+//!   actuation targets),
+//! * and, on admission-side proposals (built by `fleet::Tenant` and
+//!   `placement`), *shed offers*: feasible cost-decreasing moves a
+//!   non-repairing tenant volunteers as funding for someone else's SLA
+//!   repair.
+//!
+//! Each [`Candidate`] carries two scores and a gain:
+//!
+//! * `score` — the *ranking* score: objective + rebalance penalty, plus
+//!   [`super::BUDGET_PENALTY`] when the move does not fit the budget
+//!   hint, plus lookahead path penalties for multi-step policies. This
+//!   is exactly what `decide` reports for the top candidate.
+//! * `raw` — the budget-blind *myopic* score of the candidate for the
+//!   observed workload (no budget penalty, no path terms);
+//!   [`crate::INFEASIBLE`] when the configuration is SLA-infeasible for
+//!   it. Downstream consumers (the fleet tenant's audit bookkeeping)
+//!   rank alternatives and sheds by `raw`, so forecast-driven policies
+//!   still negotiate in this-tick terms.
+//! * `gain` — a non-negative weight whose meaning depends on the list
+//!   it sits in: for move candidates it is the objective *improvement*
+//!   claimed over holding (zero for fallbacks and stepping stones); for
+//!   shed offers it is the objective *sacrifice* the downgrade costs
+//!   its owner (the arbiter drains least-sacrifice offers first).
+
+use crate::plane::Configuration;
+use crate::INFEASIBLE;
+
+use super::Decision;
+
+/// Admission priority of a tenant. Ties in the arbiter's knapsack break
+/// toward the higher class (`Bronze < Silver < Gold`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum PriorityClass {
+    Bronze,
+    Silver,
+    Gold,
+}
+
+impl PriorityClass {
+    /// All classes, highest priority first.
+    pub const ALL: [PriorityClass; 3] =
+        [PriorityClass::Gold, PriorityClass::Silver, PriorityClass::Bronze];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PriorityClass::Gold => "gold",
+            PriorityClass::Silver => "silver",
+            PriorityClass::Bronze => "bronze",
+        }
+    }
+
+    /// Numeric rank; higher admits first.
+    pub fn rank(&self) -> u8 {
+        match self {
+            PriorityClass::Gold => 2,
+            PriorityClass::Silver => 1,
+            PriorityClass::Bronze => 0,
+        }
+    }
+
+    /// Inverse of [`Self::rank`] (ranks above Gold clamp to Gold).
+    pub fn from_rank(rank: u8) -> Self {
+        match rank {
+            0 => PriorityClass::Bronze,
+            1 => PriorityClass::Silver,
+            _ => PriorityClass::Gold,
+        }
+    }
+}
+
+impl Default for PriorityClass {
+    /// Policy-side proposals default to the lowest class; the fleet
+    /// tenant stamps the real one when it distills an admission
+    /// proposal.
+    fn default() -> Self {
+        PriorityClass::Bronze
+    }
+}
+
+/// One ranked option within a proposal: a target configuration with its
+/// hourly cost, its ranking and myopic scores, and its claimed weight.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub to: Configuration,
+    /// Hourly cost of the target configuration.
+    pub cost_to: f32,
+    /// Ranking score — what `decide` reports when this candidate tops
+    /// the list (objective + rebalance penalty, budget/path penalties
+    /// included; [`crate::INFEASIBLE`] when SLA-infeasible).
+    pub score: f32,
+    /// Budget-blind myopic score vs the observed workload
+    /// ([`crate::INFEASIBLE`] when SLA-infeasible for it).
+    pub raw: f32,
+    /// Objective improvement (moves) or sacrifice (sheds); >= 0.
+    pub gain: f32,
+}
+
+impl Candidate {
+    /// An admission-side candidate priced by the caller (arbiter tests,
+    /// placement bundles) whose planner scores are not meaningful.
+    pub fn priced(to: Configuration, cost_to: f32, gain: f32) -> Self {
+        Self { to, cost_to, score: 0.0, raw: 0.0, gain }
+    }
+
+    /// SLA-feasible for the workload it was scored against.
+    pub fn feasible(&self) -> bool {
+        self.raw < INFEASIBLE * 0.5
+    }
+}
+
+/// Cap on ranked alternatives behind the best candidate in an
+/// *admission* proposal — distilled lists stay short so the arbiter
+/// walk is O(1) per tenant. Policy-side proposals are uncapped (the
+/// whole scored neighborhood, at most 9 entries on the plane).
+pub const MAX_ALTERNATIVES: usize = 3;
+
+/// A ranked proposal — the outcome of one decision point.
+///
+/// Two conventions share this type, distinguished by who built it:
+///
+/// * **Policy proposals** ([`super::Policy::propose`]) rank *every*
+///   scored candidate, holding (`from` itself) included; the list is
+///   never empty and `candidates[0]` is exactly the old `decide`
+///   answer ([`Self::decision`] reconstructs it). Fleet bookkeeping
+///   fields (`tenant`, `class`, `denial_streak`, `sheds`) sit at their
+///   defaults.
+/// * **Admission proposals** (`fleet::Tenant::propose`, `placement`)
+///   distill a policy proposal for the budget arbiter: candidates are
+///   strict *moves* (an empty list means the tenant holds), capped at
+///   1 + [`MAX_ALTERNATIVES`] (+ a repair stepping stone), and shed
+///   offers are populated for non-repairing tenants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Proposal {
+    /// Tenant slot in the fleet batch (0 for single-cluster proposals).
+    pub tenant: usize,
+    pub class: PriorityClass,
+    pub from: Configuration,
+    /// Hourly cost of the configuration currently serving.
+    pub cost_from: f32,
+    /// Budget-blind myopic score of holding `from` for the observed
+    /// workload (plan-queue aware, never masked to INFEASIBLE) — the
+    /// anchor `gain` values are measured against.
+    pub current_score: f32,
+    /// SLA emergency: the Algorithm-1 fallback fired, or the current
+    /// configuration is planner-infeasible for this tick's demand.
+    pub emergency: bool,
+    /// The tenant's last served step violated its SLA.
+    pub sla_violating: bool,
+    /// Consecutive ticks this tenant has been denied while
+    /// SLA-violating (the fairness guard's counter).
+    pub denial_streak: usize,
+    /// No candidate was SLA-feasible and the one-step scale-up fallback
+    /// was taken (Algorithm 1 line 18); `candidates[0]` is the fallback.
+    pub fallback: bool,
+    /// Ranked candidates, best ranking score first. Policy proposals:
+    /// the full scored neighborhood (holding included, infeasible
+    /// entries trailing). Admission proposals: strict moves only; empty
+    /// means the tenant holds.
+    pub candidates: Vec<Candidate>,
+    /// Feasible cost-decreasing fallbacks this (non-repairing) tenant
+    /// offers as burst funding for other tenants' SLA repairs, least
+    /// objective sacrifice first (each `gain` is that sacrifice). The
+    /// arbiter draws at most the first offer per tick — configurations
+    /// move one neighbor step per tick, and the deeper offers document
+    /// the next rungs a multi-tick drain would take.
+    pub sheds: Vec<Candidate>,
+}
+
+impl Proposal {
+    /// A policy-side proposal: the ranked enumeration for one decision
+    /// point, fleet bookkeeping fields at their defaults.
+    pub fn ranked(
+        from: Configuration,
+        cost_from: f32,
+        current_score: f32,
+        candidates: Vec<Candidate>,
+    ) -> Self {
+        Self {
+            tenant: 0,
+            class: PriorityClass::default(),
+            from,
+            cost_from,
+            current_score,
+            emergency: false,
+            sla_violating: false,
+            denial_streak: 0,
+            fallback: false,
+            candidates,
+            sheds: Vec::new(),
+        }
+    }
+
+    /// The top-ranked candidate — `decide`'s answer on policy
+    /// proposals, the preferred move on admission proposals.
+    pub fn top(&self) -> Option<&Candidate> {
+        self.candidates.first()
+    }
+
+    /// The preferred move, if the proposal is not a hold (admission
+    /// naming for [`Self::top`]).
+    pub fn best(&self) -> Option<&Candidate> {
+        self.candidates.first()
+    }
+
+    /// Collapse the ranked list back to the single-answer [`Decision`]
+    /// the pre-proposal API returned: the top candidate, or holding at
+    /// `from` when the list is empty.
+    pub fn decision(&self) -> Decision {
+        match self.candidates.first() {
+            Some(c) => Decision { next: c.to, score: c.score, fallback: self.fallback },
+            None => {
+                Decision { next: self.from, score: self.current_score, fallback: self.fallback }
+            }
+        }
+    }
+
+    /// Mark this proposal as an Algorithm-1 fallback: promote `up` (the
+    /// one-step scale-up) to the top of the list at the
+    /// [`crate::INFEASIBLE`] sentinel score, deduplicating the entry
+    /// the enumeration already produced for it (its myopic `raw` and
+    /// gain survive the promotion).
+    pub fn promote_fallback(&mut self, up: Configuration, cost_up: f32) {
+        let raw = self
+            .candidates
+            .iter()
+            .position(|c| c.to == up)
+            .map(|i| self.candidates.remove(i).raw)
+            .unwrap_or(INFEASIBLE);
+        let gain =
+            if raw >= INFEASIBLE * 0.5 { 0.0 } else { (self.current_score - raw).max(0.0) };
+        self.candidates.insert(
+            0,
+            Candidate { to: up, cost_to: cost_up, score: INFEASIBLE, raw, gain },
+        );
+        self.fallback = true;
+    }
+
+    /// Whether the candidate list is sorted by ranking score (best
+    /// first). The promoted fallback head is exempt: it carries the
+    /// sentinel score by construction.
+    pub fn is_ranked(&self) -> bool {
+        let skip = usize::from(self.fallback);
+        let tail = self.candidates.get(skip..).unwrap_or(&[]);
+        tail.windows(2)
+            .all(|w| w[0].score.total_cmp(&w[1].score) != std::cmp::Ordering::Greater)
+    }
+
+    /// Whether the proposal requests any configuration change
+    /// (admission convention: an empty list is a hold).
+    pub fn is_move(&self) -> bool {
+        !self.candidates.is_empty()
+    }
+
+    /// Marginal fleet cost of admitting the preferred move (0 for
+    /// holds).
+    pub fn cost_delta(&self) -> f32 {
+        self.best().map_or(0.0, |c| c.cost_to - self.cost_from)
+    }
+
+    /// Whether this proposal repairs the tenant's own SLA (emergency or
+    /// currently violating) — repair moves outrank economic moves
+    /// fleet-wide and may draw shed funding.
+    pub fn is_repair(&self) -> bool {
+        self.emergency || self.sla_violating
+    }
+
+    /// Greedy-knapsack value density of the preferred move: claimed
+    /// gain per added dollar. SLA emergencies outrank any economic
+    /// move.
+    pub fn density(&self) -> f32 {
+        if self.emergency {
+            return INFEASIBLE;
+        }
+        self.best().map_or(0.0, |c| c.gain / (c.cost_to - self.cost_from).max(1e-6))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(h: usize, v: usize, score: f32) -> Candidate {
+        Candidate { to: Configuration::new(h, v), cost_to: 1.0, score, raw: score, gain: 0.0 }
+    }
+
+    #[test]
+    fn decision_is_the_top_candidate() {
+        let p = Proposal::ranked(
+            Configuration::new(1, 1),
+            0.4,
+            7.0,
+            vec![cand(2, 2, 1.0), cand(1, 1, 2.0)],
+        );
+        let d = p.decision();
+        assert_eq!(d.next, Configuration::new(2, 2));
+        assert_eq!(d.score, 1.0);
+        assert!(!d.fallback);
+        assert!(p.is_ranked());
+    }
+
+    #[test]
+    fn empty_candidates_decide_to_hold() {
+        let p = Proposal::ranked(Configuration::new(1, 2), 0.8, 5.0, Vec::new());
+        let d = p.decision();
+        assert_eq!(d.next, Configuration::new(1, 2));
+        assert_eq!(d.score, 5.0);
+        assert!(!p.is_move());
+        assert_eq!(p.cost_delta(), 0.0);
+    }
+
+    #[test]
+    fn promote_fallback_deduplicates_and_leads() {
+        let mut p = Proposal::ranked(
+            Configuration::new(0, 0),
+            0.08,
+            3.0,
+            vec![cand(0, 0, INFEASIBLE), cand(1, 1, INFEASIBLE)],
+        );
+        p.promote_fallback(Configuration::new(1, 1), 0.4);
+        assert!(p.fallback);
+        assert_eq!(p.candidates.len(), 2, "the existing (1,1) entry was deduplicated");
+        let d = p.decision();
+        assert_eq!(d.next, Configuration::new(1, 1));
+        assert_eq!(d.score, INFEASIBLE);
+        assert!(d.fallback);
+        // no duplicate configurations survive the promotion
+        for (i, a) in p.candidates.iter().enumerate() {
+            for b in &p.candidates[i + 1..] {
+                assert_ne!(a.to, b.to);
+            }
+        }
+    }
+
+    #[test]
+    fn priced_candidates_read_as_feasible() {
+        let c = Candidate::priced(Configuration::new(1, 0), 0.2, 1.5);
+        assert!(c.feasible());
+        assert_eq!(c.gain, 1.5);
+        assert!(!cand(0, 0, INFEASIBLE).feasible());
+    }
+
+    #[test]
+    fn class_order_and_rank_agree() {
+        assert!(PriorityClass::Bronze < PriorityClass::Silver);
+        assert!(PriorityClass::Silver < PriorityClass::Gold);
+        assert!(PriorityClass::Gold.rank() > PriorityClass::Bronze.rank());
+        assert_eq!(PriorityClass::ALL[0], PriorityClass::Gold);
+        assert_eq!(PriorityClass::from_rank(1), PriorityClass::Silver);
+        assert_eq!(PriorityClass::default(), PriorityClass::Bronze);
+    }
+}

@@ -6,7 +6,7 @@
 use crate::plane::Configuration;
 use crate::workload::WorkloadPoint;
 
-use super::{Decision, Policy, PolicyContext};
+use super::{Candidate, Policy, PolicyContext, Proposal};
 
 /// Reactive utilization-threshold autoscaler.
 ///
@@ -42,12 +42,12 @@ impl Policy for Threshold {
         "threshold"
     }
 
-    fn decide(
+    fn propose(
         &mut self,
         current: Configuration,
         workload: WorkloadPoint,
         ctx: &PolicyContext<'_>,
-    ) -> Decision {
+    ) -> Proposal {
         let plane = ctx.model.plane();
         let u = self.utilization(&current, workload, ctx);
         let next = if u > self.high {
@@ -77,8 +77,25 @@ impl Policy for Threshold {
         } else {
             current
         };
+        // the candidate score stays the plain objective (what decide
+        // always reported — parity); the hold anchor honors the
+        // plan-queue contract of `Proposal::current_score`
         let score = ctx.model.evaluate(&next, workload.lambda_req).objective;
-        Decision { next, score, fallback: false }
+        let current_score = ctx.hold_score(&current, workload);
+        // threshold rules have no SLA reasoning and no alternatives: the
+        // proposal is the single watermark-chosen target
+        Proposal::ranked(
+            current,
+            ctx.model.cost(&current),
+            current_score,
+            vec![Candidate {
+                to: next,
+                cost_to: ctx.model.cost(&next),
+                score,
+                raw: score,
+                gain: (current_score - score).max(0.0),
+            }],
+        )
     }
 }
 

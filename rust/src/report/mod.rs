@@ -83,6 +83,73 @@ impl Surface {
     }
 }
 
+/// Version tag of the ranked-candidate explain schema. Bump when the
+/// JSON shape below changes; consumers dispatch on the `schema` field.
+pub const EXPLAIN_SCHEMA: &str = "diagonal-scale/explain-v1";
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// The ranked candidates of a run as versioned JSON
+/// ([`EXPLAIN_SCHEMA`]): one entry per step carrying the proposal's
+/// top-k candidates — target, hourly cost, ranking/myopic scores,
+/// claimed gain, SLA feasibility — plus the chosen move and the
+/// fallback flag. Hand-rolled emitter: the offline vendor set has no
+/// serde.
+pub fn explain_json(policy: &str, steps: &[crate::simulator::StepExplain]) -> String {
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{{\"schema\":\"{}\",\"policy\":\"{}\",\"steps\":[",
+        EXPLAIN_SCHEMA,
+        json_escape(policy)
+    );
+    for (i, s) in steps.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"step\":{},\"demand\":{},\"fallback\":{},\"chosen\":{{\"h\":{},\"v\":{}}},\"candidates\":[",
+            s.step, s.demand, s.fallback, s.chosen.h_idx, s.chosen.v_idx
+        );
+        for (j, c) in s.candidates.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"h\":{},\"v\":{},\"cost\":{},\"score\":{},\"raw\":{},\"gain\":{},\"feasible\":{}}}",
+                c.to.h_idx,
+                c.to.v_idx,
+                c.cost_to,
+                c.score,
+                c.raw,
+                c.gain,
+                c.feasible()
+            );
+        }
+        out.push_str("]}");
+    }
+    out.push_str("]}");
+    out
+}
+
 /// Heatmap over the plane as CSV: rows H, columns V (figures 1, 2, 4).
 pub fn heatmap_csv(model: &SurfaceModel, surface: Surface, lambda_req: f32) -> String {
     let plane = model.plane();
@@ -334,6 +401,40 @@ mod tests {
         for t in ["small", "medium", "large", "xlarge"] {
             assert!(art.contains(t));
         }
+    }
+
+    #[test]
+    fn explain_json_is_versioned_and_carries_ranked_candidates() {
+        let cfg = ModelConfig::default_paper();
+        let sim = Simulator::new(&cfg);
+        let trace = TraceBuilder::paper(&cfg);
+        let (run, steps) = sim.run_explained(crate::simulator::PolicyKind::Diagonal, &trace, 3);
+        assert_eq!(steps.len(), 50);
+        let json = explain_json(&run.policy, &steps);
+        assert!(json.starts_with(&format!("{{\"schema\":\"{EXPLAIN_SCHEMA}\"")));
+        assert!(json.contains("\"policy\":\"DiagonalScale\""));
+        assert!(json.contains("\"candidates\":["));
+        assert!(json.contains("\"feasible\":true"));
+        // structurally sound: balanced braces/brackets, one step object
+        // per simulation step
+        assert_eq!(
+            json.matches('{').count(),
+            json.matches('}').count(),
+            "unbalanced braces"
+        );
+        assert_eq!(json.matches("\"step\":").count(), 50);
+        // the explained trajectory is the plain run, bit for bit
+        let plain = sim.run(crate::simulator::PolicyKind::Diagonal, &trace);
+        assert_eq!(plain.records, run.records);
+        for (s, rec) in steps.iter().zip(plain.records.iter().skip(1)) {
+            assert_eq!(s.chosen, rec.config, "explain chose a different trajectory");
+        }
+    }
+
+    #[test]
+    fn json_escape_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("plain"), "plain");
     }
 
     #[test]

@@ -25,7 +25,7 @@ pub use substrate::{build_substrate, AnalyticalSubstrate};
 use crate::config::{ModelConfig, MoveFlags};
 use crate::metrics::{Recorder, StepRecord, Summary};
 use crate::plane::Configuration;
-use crate::policy::{DiagonalScale, Policy, PolicyContext};
+use crate::policy::{Candidate, DiagonalScale, Policy, PolicyContext};
 use crate::sla::SlaSpec;
 use crate::surfaces::SurfaceModel;
 use crate::workload::Trace;
@@ -74,6 +74,20 @@ impl PolicyKind {
     pub fn paper_set() -> [PolicyKind; 3] {
         [PolicyKind::Diagonal, PolicyKind::HorizontalOnly, PolicyKind::VerticalOnly]
     }
+}
+
+/// One step's ranked-candidate capture: what the policy proposed, which
+/// candidate won, and whether the Algorithm-1 fallback fired — the data
+/// behind `simulate --explain` and the versioned
+/// [`crate::report::explain_json`] schema.
+#[derive(Debug, Clone)]
+pub struct StepExplain {
+    pub step: usize,
+    pub demand: f32,
+    pub fallback: bool,
+    pub chosen: Configuration,
+    /// Top-k ranked candidates of the step's proposal.
+    pub candidates: Vec<Candidate>,
 }
 
 /// A complete run: the per-step records plus the summary.
@@ -155,8 +169,34 @@ impl Simulator {
 
     /// Run an arbitrary policy object over a trace.
     pub fn run_boxed(&self, policy: &mut dyn Policy, label: &str, trace: &Trace) -> RunResult {
+        self.run_explained_boxed(policy, label, trace, 0).0
+    }
+
+    /// Run one policy over a trace, capturing the top-`k` ranked
+    /// candidates of every step's proposal (`simulate --explain`).
+    pub fn run_explained(
+        &self,
+        kind: PolicyKind,
+        trace: &Trace,
+        k: usize,
+    ) -> (RunResult, Vec<StepExplain>) {
+        let mut policy = kind.build();
+        self.run_explained_boxed(policy.as_mut(), &kind.label(), trace, k)
+    }
+
+    /// [`Self::run_boxed`] plus the per-step top-`k` explain capture
+    /// (`k == 0` skips the capture). The trajectory is identical either
+    /// way: the decision *is* the proposal's top candidate.
+    pub fn run_explained_boxed(
+        &self,
+        policy: &mut dyn Policy,
+        label: &str,
+        trace: &Trace,
+        k: usize,
+    ) -> (RunResult, Vec<StepExplain>) {
         let mut recorder = Recorder::with_capacity(trace.len());
         let mut fallbacks = 0usize;
+        let mut explains: Vec<StepExplain> = Vec::new();
         let mut current = self.start;
 
         for (t, w) in trace.points.iter().enumerate() {
@@ -176,7 +216,7 @@ impl Simulator {
                 violation: self.sla.audit(point.latency, point.throughput, w.lambda_req),
             });
 
-            // ---- decide; takes effect next step ----------------------
+            // ---- propose; the top candidate takes effect next step ---
             let ctx = PolicyContext {
                 model: &self.model,
                 sla: &self.sla,
@@ -186,7 +226,17 @@ impl Simulator {
                 future: &trace.points[(t + 1).min(trace.len())..],
                 budget: None,
             };
-            let d = policy.decide(current, *w, &ctx);
+            let proposal = policy.propose(current, *w, &ctx);
+            let d = proposal.decision();
+            if k > 0 {
+                explains.push(StepExplain {
+                    step: t,
+                    demand: w.lambda_req,
+                    fallback: proposal.fallback,
+                    chosen: d.next,
+                    candidates: proposal.candidates.iter().take(k).copied().collect(),
+                });
+            }
             debug_assert!(self.model.plane().contains(&d.next));
             if d.fallback {
                 fallbacks += 1;
@@ -194,12 +244,15 @@ impl Simulator {
             current = d.next;
         }
 
-        RunResult {
-            policy: label.to_string(),
-            summary: recorder.summary(),
-            records: recorder.records().to_vec(),
-            fallbacks,
-        }
+        (
+            RunResult {
+                policy: label.to_string(),
+                summary: recorder.summary(),
+                records: recorder.records().to_vec(),
+                fallbacks,
+            },
+            explains,
+        )
     }
 
     /// Run the paper's three policies (Table I).

@@ -40,11 +40,7 @@ fn rand_proposal(rng: &mut XorShift64, tenant: usize) -> Proposal {
         let n_cands = 1 + rng.below(3) as usize;
         let mut cost = uniform(rng, 0.08, 8.0);
         for _ in 0..n_cands {
-            candidates.push(Candidate {
-                to: rand_config(rng),
-                cost_to: cost,
-                gain: uniform(rng, 0.0, 50.0),
-            });
+            candidates.push(Candidate::priced(rand_config(rng), cost, uniform(rng, 0.0, 50.0)));
             // alternatives get strictly cheaper down the list
             cost *= uniform(rng, 0.3, 0.95);
         }
@@ -53,20 +49,22 @@ fn rand_proposal(rng: &mut XorShift64, tenant: usize) -> Proposal {
     let emergency = !hold && rng.next_f64() < 0.1;
     let mut sheds = Vec::new();
     if hold && !sla_violating && rng.next_f64() < 0.6 {
-        sheds.push(Candidate {
-            to: rand_config(rng),
-            cost_to: cost_from * uniform(rng, 0.3, 0.95),
-            gain: uniform(rng, 0.0, 5.0),
-        });
+        sheds.push(Candidate::priced(
+            rand_config(rng),
+            cost_from * uniform(rng, 0.3, 0.95),
+            uniform(rng, 0.0, 5.0),
+        ));
     }
     Proposal {
         tenant,
         class: rand_class(rng),
         from,
         cost_from,
+        current_score: 0.0,
         emergency,
         sla_violating,
         denial_streak: rng.below(6) as usize,
+        fallback: false,
         candidates,
         sheds,
     }
@@ -193,7 +191,7 @@ fn priority_class_breaks_ties_for_the_last_slot() {
         lo.from = Configuration::new(0, 0);
         lo.cost_from = cost_from;
         lo.candidates =
-            vec![Candidate { to: Configuration::new(1, 1), cost_to: cost_from + delta, gain: 10.0 }];
+            vec![Candidate::priced(Configuration::new(1, 1), cost_from + delta, 10.0)];
         lo.emergency = false;
         lo.sla_violating = false;
         lo.denial_streak = 0;
@@ -232,7 +230,7 @@ fn rescue_preemption_beats_economic_moves() {
         bronze.class = PriorityClass::Bronze;
         bronze.cost_from = cost_from;
         bronze.candidates =
-            vec![Candidate { to: Configuration::new(1, 1), cost_to: cost_from + delta, gain: 1.0 }];
+            vec![Candidate::priced(Configuration::new(1, 1), cost_from + delta, 1.0)];
         bronze.emergency = false;
         bronze.sla_violating = true;
         bronze.denial_streak = 3;

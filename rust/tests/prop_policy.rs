@@ -1,0 +1,151 @@
+//! PR-5 parity pins for the proposal-first policy API: for EVERY
+//! in-tree policy, `propose().top()` must equal `decide()`
+//! bit-for-bit (same target, same score bits, same fallback flag),
+//! candidate lists must be sorted by ranking score with no duplicate
+//! configurations, and gains must be non-negative (zero on infeasible
+//! entries). Stateful policies (forecast lookahead) are driven as two
+//! instances in lockstep so the comparison never desynchronizes their
+//! predictors.
+
+use diagonal_scale::config::{ModelConfig, MoveFlags};
+use diagonal_scale::forecast::{Holt, SeasonalNaive};
+use diagonal_scale::plane::Configuration;
+use diagonal_scale::policy::{
+    BudgetHint, DiagonalScale, ForecastLookahead, Lookahead, Oracle, Policy, PolicyContext,
+    StaticPolicy, Threshold,
+};
+use diagonal_scale::sla::SlaSpec;
+use diagonal_scale::surfaces::SurfaceModel;
+use diagonal_scale::testkit::{forall, uniform};
+use diagonal_scale::workload::WorkloadPoint;
+
+fn builders() -> Vec<(&'static str, fn() -> Box<dyn Policy>)> {
+    vec![
+        ("diagonal", || Box::new(DiagonalScale::diagonal())),
+        ("horizontal-only", || Box::new(DiagonalScale::horizontal_only())),
+        ("vertical-only", || Box::new(DiagonalScale::vertical_only())),
+        ("lookahead-1", || Box::new(Lookahead::new(MoveFlags::DIAGONAL, 1))),
+        ("lookahead-3", || Box::new(Lookahead::new(MoveFlags::DIAGONAL, 3))),
+        ("forecast-holt", || {
+            Box::new(ForecastLookahead::new(MoveFlags::DIAGONAL, 3, Holt::default_tuned(), 0.3))
+        }),
+        ("forecast-seasonal", || {
+            Box::new(ForecastLookahead::new(MoveFlags::DIAGONAL, 3, SeasonalNaive::new(10), 0.3))
+        }),
+        ("threshold", || Box::new(Threshold::default())),
+        ("oracle", || Box::new(Oracle)),
+        ("static", || Box::new(StaticPolicy)),
+    ]
+}
+
+#[test]
+fn propose_top_matches_decide_bit_for_bit_for_every_policy() {
+    let cfg = ModelConfig::default_paper();
+    let model = SurfaceModel::from_config(&cfg);
+    let sla = SlaSpec::from_config(&cfg);
+    for (name, build) in builders() {
+        forall(40, 0x9201, |case, rng| {
+            // two fresh instances driven in lockstep over one random
+            // trajectory (stateful policies update per call)
+            let mut a = build();
+            let mut b = build();
+            let mut cur = Configuration::new(rng.below(4) as usize, rng.below(4) as usize);
+            let budget = if rng.next_f64() < 0.5 {
+                Some(BudgetHint::new(uniform(rng, 0.0, 4.0), uniform(rng, 0.0, 4.0)))
+            } else {
+                None
+            };
+            let plan_queue = rng.next_f64() < 0.3;
+            let future: Vec<WorkloadPoint> = (0..3)
+                .map(|_| WorkloadPoint::new(uniform(rng, 10.0, 40_000.0), 0.3))
+                .collect();
+            for step in 0..8 {
+                let w = WorkloadPoint::new(uniform(rng, 10.0, 40_000.0), 0.3);
+                let ctx = PolicyContext {
+                    model: &model,
+                    sla: &sla,
+                    reb_h: cfg.policy.reb_h,
+                    reb_v: cfg.policy.reb_v,
+                    plan_queue,
+                    future: &future,
+                    budget,
+                };
+                let d = a.decide(cur, w, &ctx);
+                let p = b.propose(cur, w, &ctx);
+                let top = *p.top().expect("every policy ranks at least one candidate");
+                assert_eq!(top.to, d.next, "{name} case {case} step {step}: top != decide");
+                assert_eq!(
+                    top.score.to_bits(),
+                    d.score.to_bits(),
+                    "{name} case {case} step {step}: score bits differ ({} vs {})",
+                    top.score,
+                    d.score
+                );
+                assert_eq!(p.fallback, d.fallback, "{name}: fallback flag diverged");
+                assert_eq!(p.decision(), d, "{name}: derived decision diverged");
+                assert!(p.is_ranked(), "{name}: candidates not sorted by score");
+                for (i, x) in p.candidates.iter().enumerate() {
+                    assert!(model.plane().contains(&x.to), "{name}: off-plane candidate");
+                    assert!(x.gain >= 0.0, "{name}: negative gain {}", x.gain);
+                    if !x.feasible() {
+                        assert_eq!(x.gain, 0.0, "{name}: infeasible candidate claims gain");
+                    }
+                    let expect_cost = model.cost(&x.to);
+                    assert!(
+                        (x.cost_to - expect_cost).abs() < 1e-6,
+                        "{name}: candidate cost drifted from the surface"
+                    );
+                    for y in &p.candidates[i + 1..] {
+                        assert_ne!(x.to, y.to, "{name}: duplicate configuration in ranking");
+                    }
+                }
+                cur = d.next;
+            }
+        });
+    }
+}
+
+/// The enumerating policies (local search + lookahead family) must rank
+/// the ENTIRE neighborhood — holding included — so downstream
+/// distillation (fleet alternatives, sheds, stepping stones) never
+/// needs a second enumeration.
+#[test]
+fn enumerating_policies_rank_the_whole_neighborhood() {
+    let cfg = ModelConfig::default_paper();
+    let model = SurfaceModel::from_config(&cfg);
+    let sla = SlaSpec::from_config(&cfg);
+    forall(60, 0x9202, |_, rng| {
+        let cur = Configuration::new(rng.below(4) as usize, rng.below(4) as usize);
+        let w = WorkloadPoint::new(uniform(rng, 10.0, 40_000.0), 0.3);
+        let ctx = PolicyContext {
+            model: &model,
+            sla: &sla,
+            reb_h: cfg.policy.reb_h,
+            reb_v: cfg.policy.reb_v,
+            plan_queue: false,
+            future: &[],
+            budget: None,
+        };
+        let neighborhood = model.plane().neighbors(&cur, true, true);
+        for mut policy in [
+            Box::new(DiagonalScale::diagonal()) as Box<dyn Policy>,
+            Box::new(Lookahead::new(MoveFlags::DIAGONAL, 2)),
+        ] {
+            let p = policy.propose(cur, w, &ctx);
+            assert_eq!(
+                p.candidates.len(),
+                neighborhood.len(),
+                "{}: proposal must cover the whole neighborhood",
+                policy.name()
+            );
+            for n in &neighborhood {
+                assert!(
+                    p.candidates.iter().any(|c| c.to == *n),
+                    "{}: neighbor {:?} missing from the proposal",
+                    policy.name(),
+                    n
+                );
+            }
+        }
+    });
+}
