@@ -5,7 +5,7 @@
 
 .DEFAULT_GOAL := help
 
-.PHONY: help build test doc bench-compile examples fleet-demo placement-demo explain-demo artifacts
+.PHONY: help build test doc bench-compile examples fleet-demo placement-demo explain-demo serverless-demo artifacts
 
 help: ## list the available targets
 	@grep -E '^[a-zA-Z_-]+:.*?## ' $(MAKEFILE_LIST) | awk 'BEGIN {FS = ":.*?## "}; {printf "  %-14s %s\n", $$1, $$2}'
@@ -35,6 +35,9 @@ placement-demo: ## cross-tenant bin-packing demo: packed-vs-dedicated A/B with p
 
 explain-demo: ## ranked-proposal explain demo: top-k candidates + versioned JSON on the paper trace
 	cargo run --release --example proposal_explain
+
+serverless-demo: ## scale-to-zero demo: suspend/wake lifecycle + priced cold starts vs always-on
+	cargo run --release --example scale_to_zero
 
 artifacts: ## AOT-lower the JAX/Pallas kernels to artifacts/ (needs jax)
 	cd python && python3 -m compile.aot --out-dir ../artifacts

@@ -21,6 +21,7 @@ use diagonal_scale::config::ModelConfig;
 use diagonal_scale::fleet::{
     BudgetArbiter, ClassEnvelopes, FleetSimulator, ForecastKind, PriorityClass, TenantSpec,
 };
+use diagonal_scale::serverless::{mostly_idle_specs, ServerlessParams};
 use diagonal_scale::workload::TraceBuilder;
 
 fn specs(cfg: &ModelConfig, n: usize) -> Vec<TenantSpec> {
@@ -135,4 +136,27 @@ fn main() {
     let secs = t.elapsed().as_secs_f64();
     b.report_metric("64 DES tenants, full 50-tick sweep", secs, "s total");
     b.report_metric("64 DES tenants, full 50-tick sweep", steps as f64 / secs, "ticks/s");
+
+    group("serverless tier — mostly-idle fleet (64 tenants, 75% idle), scale-to-zero vs always-on");
+    {
+        let n = 64;
+        let mut on = FleetSimulator::new(&cfg, mostly_idle_specs(&cfg, n, 0.75), 1.0e6, 3);
+        on.set_recording(false);
+        let on_stats = bq.run("fleet_tick_idle/always_on", || on.tick().admitted_moves);
+        let mut sv = FleetSimulator::new(&cfg, mostly_idle_specs(&cfg, n, 0.75), 1.0e6, 3);
+        sv.enable_serverless(ServerlessParams::default());
+        sv.set_recording(false);
+        let sv_stats = bq.run("fleet_tick_idle/serverless", || sv.tick().admitted_moves);
+        bq.report_metric(
+            "serverless/always-on tick-time ratio",
+            sv_stats.mean.as_secs_f64() / on_stats.mean.as_secs_f64().max(1e-12),
+            "x",
+        );
+        // after the warm benchmark sweeps both fleets sit deep in the
+        // trace cycle — compare one more tick's spend directly
+        let (t_on, t_sv) = (on.tick(), sv.tick());
+        bq.report_metric("steady-state spend, always-on", t_on.spend as f64, "/h");
+        bq.report_metric("steady-state spend, serverless", t_sv.spend as f64, "/h");
+        bq.report_metric("suspended tenants at steady state", t_sv.suspended as f64, "tenants");
+    }
 }

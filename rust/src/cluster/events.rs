@@ -53,6 +53,17 @@ pub enum Event {
     /// [`crate::placement::SharedCluster`]; [`EventSim`] never emits
     /// it and treats a stray one as a plain window close).
     MigrationEnd,
+    /// A serverless cold-start window closes: tenant `tenant`'s pages
+    /// are read back from the storage tier and it serves again
+    /// (scheduled by the fleet layer on its own calendar —
+    /// [`crate::fleet::FleetSimulator`] with
+    /// [`crate::serverless`] enabled; [`EventSim`] never emits it and
+    /// treats a stray one as a plain window close).
+    ResumeEnd { tenant: usize },
+    /// `node` fails at the scheduled time and serves nothing until the
+    /// next reconfiguration (calendar-injected failure — see
+    /// [`super::Substrate::schedule_failure`]).
+    NodeFail { node: usize },
     /// `node` enters its periodic background-compaction window.
     CompactionStart { node: usize },
     /// `node` leaves its compaction window (and the next one is
@@ -281,11 +292,20 @@ impl EventSim {
     /// Fire one calendar event at its scheduled time.
     fn fire(&mut self, at: f64, ev: Event) {
         match ev {
-            Event::RebalanceEnd | Event::RestartEnd | Event::MigrationEnd => {
+            Event::RebalanceEnd
+            | Event::RestartEnd
+            | Event::MigrationEnd
+            | Event::ResumeEnd { .. } => {
                 // a popped end always belongs to the open window:
                 // rebuild() clears the calendar on every apply(), so
                 // stale end-events from superseded windows cannot exist
                 self.window_deg = 1.0;
+            }
+            Event::NodeFail { node } => {
+                if node < self.nodes.len() {
+                    self.nodes[node].up = false;
+                    self.any_down = true;
+                }
             }
             Event::CompactionStart { node } => {
                 if node < self.compaction_deg.len() {
@@ -412,6 +432,16 @@ impl EventSim {
             n.up = false;
             self.any_down = true;
         }
+    }
+
+    /// Schedule a node failure on the calendar: `node` goes down at
+    /// simulated time `at` — mid-interval, at its exact event time,
+    /// like every other calendar transition. A reconfiguration before
+    /// `at` clears the calendar, superseding the failure along with
+    /// the node set it referenced.
+    pub fn schedule_node_failure(&mut self, at: f64, node: usize) {
+        self.calendar.schedule(at, Event::NodeFail { node });
+        self.next_event = self.calendar.peek_time().unwrap_or(f64::INFINITY);
     }
 
     /// Simulate one workload interval, firing due calendar events at
@@ -570,6 +600,11 @@ impl Substrate for EventSim {
     fn params(&self) -> &ClusterParams {
         EventSim::params(self)
     }
+
+    fn schedule_failure(&mut self, at: f64, node: usize) -> bool {
+        EventSim::schedule_node_failure(self, at, node);
+        true
+    }
 }
 
 #[cfg(test)]
@@ -693,6 +728,23 @@ mod tests {
         let hi = lat.iter().cloned().fold(0.0, f64::max);
         let lo = lat.iter().cloned().fold(f64::MAX, f64::min);
         assert!(hi > 2.0 * lo, "compaction cycles visible: {lat:?}");
+    }
+
+    #[test]
+    fn scheduled_node_failure_fires_at_its_calendar_time() {
+        let mut s = sim(11);
+        let interval = s.params().interval;
+        // failure scheduled mid-second-interval: the first step must
+        // not see it, the step containing the event pops and fires it
+        s.schedule_node_failure(1.5 * interval, 0);
+        assert_eq!(s.pending_events(), 1);
+        s.step(point(1000.0));
+        assert_eq!(s.pending_events(), 1, "failure must not fire early");
+        assert!(s.nodes[0].up);
+        let m = s.step(point(1000.0));
+        assert_eq!(s.pending_events(), 0);
+        assert!(!s.nodes[0].up, "node must be down after its event fired");
+        assert!(m.completed > 0.0, "survivor keeps serving");
     }
 
     #[test]

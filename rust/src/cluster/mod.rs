@@ -179,6 +179,14 @@ pub trait Substrate {
     fn observe(&self) -> SubstrateStatus;
     /// The physics parameters this substrate audits against.
     fn params(&self) -> &ClusterParams;
+    /// Schedule a node failure at simulated time `at` on the
+    /// substrate's event calendar, if it has one (failure injection;
+    /// the fleet forwards through [`crate::fleet::Tenant`]). Returns
+    /// whether the failure was scheduled — engines without a calendar
+    /// ignore the request and return false.
+    fn schedule_failure(&mut self, _at: f64, _node: usize) -> bool {
+        false
+    }
 }
 
 /// Which substrate engine to build (CLI `--substrate`, fleet attach).

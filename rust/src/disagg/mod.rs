@@ -14,6 +14,17 @@
 //! Because the coupled 2-D ladder is a *subspace* of this plane (the
 //! "matched" combos), the disaggregated optimum can only be equal or
 //! better — the `ablations` bench quantifies the cost savings.
+//!
+//! **Relation to [`crate::serverless`].** This module detaches the
+//! storage *axis inside a provisioned node* — every combo still pays
+//! for H live replicas. The serverless tier takes the detachment one
+//! step further: [`crate::serverless::StorageService`] moves the
+//! durable pages off the nodes entirely, so the storage bill survives
+//! compute scale-to-zero (H = 0) while every provisioned axis here
+//! goes away with the nodes. [`DisaggPlane::detached_storage_cost`] is
+//! the bridge: the per-node storage-axis price that a suspended tenant
+//! stops paying and the shared service replaces with its per-GB-hour
+//! rate.
 
 use crate::config::{ModelConfig, SurfaceConfig};
 use crate::metrics::{Recorder, StepRecord, Summary};
@@ -195,6 +206,16 @@ impl DisaggPlane {
             }
         }
         out
+    }
+
+    /// The storage-axis share of a combo's fleet-wide hourly price:
+    /// `H * cost(S)`. This is exactly the slice of the bill that the
+    /// serverless tier replaces with the shared
+    /// [`crate::serverless::StorageService`] per-GB-hour rate when a
+    /// tenant suspends — the compute and memory axes vanish with the
+    /// nodes, the storage obligation does not.
+    pub fn detached_storage_cost(&self, c: &DisaggConfig) -> f32 {
+        self.h_values[c.h_idx] as f32 * self.storage.steps[c.s_idx].1
     }
 
     /// One-step scale-up on every axis (fallback).
@@ -468,6 +489,24 @@ mod tests {
         );
         assert!(summary.steps == 50);
         assert!(summary.violations <= 5);
+    }
+
+    #[test]
+    fn detached_storage_cost_is_the_s_axis_slice() {
+        // independent of the compute/memory indices, scales with H,
+        // and sums with the other axes back to the full combo price
+        let m = model();
+        let p = m.plane();
+        let a = DisaggConfig::new(1, 0, 0, 2);
+        let b = DisaggConfig::new(1, 3, 3, 2);
+        assert!((p.detached_storage_cost(&a) - p.detached_storage_cost(&b)).abs() < 1e-6);
+        let lo = DisaggConfig::new(0, 1, 1, 1);
+        let hi = DisaggConfig::new(2, 1, 1, 1);
+        assert!(p.detached_storage_cost(&hi) > p.detached_storage_cost(&lo));
+        let (cax, max_, _) = p.axes();
+        let full = p.h_value(&a) as f32 * p.tier_for(&a).cost;
+        let rest = p.h_value(&a) as f32 * (cax.steps[a.c_idx].1 + max_.steps[a.m_idx].1);
+        assert!((p.detached_storage_cost(&a) + rest - full).abs() < 1e-4);
     }
 
     #[test]

@@ -42,6 +42,19 @@
 //! budget invariant follows: projected spend after admission **is**
 //! the next tick's spend, so fleet spend never exceeds the budget once
 //! under it.
+//!
+//! ## Serverless tier (PR 6)
+//!
+//! [`FleetSimulator::enable_serverless`] detaches storage from compute
+//! (see [`crate::serverless`]): tenants register their working sets in
+//! a shared [`StorageService`] and gain the scale-to-zero lifecycle.
+//! Suspension rides the existing pipeline as a pass-0 shrink; wakes are
+//! class-ordered emergency repairs whose admitted moves open
+//! *cold-start windows* on the fleet's own [`EventCalendar`] — an
+//! [`Event::ResumeEnd`] closes each window, and until it fires the
+//! tenant pays for compute without serving. The serve-then-move and
+//! projected-spend invariants hold unchanged because every lifecycle
+//! state prices exactly what the next tick will pay.
 
 pub mod arbiter;
 pub mod report;
@@ -55,11 +68,12 @@ pub use tenant::{
 
 use std::sync::Arc;
 
-use crate::cluster::{ClusterParams, SubstrateKind};
+use crate::cluster::{ClusterParams, Event, EventCalendar, SubstrateKind};
 use crate::config::ModelConfig;
 use crate::placement::{PlacementConfig, PlacementSim};
 use crate::plane::Configuration;
 use crate::policy::BudgetHint;
+use crate::serverless::{Lifecycle, ServerlessParams, StorageService};
 use crate::surfaces::SurfaceModel;
 
 /// Tolerance for float drift when comparing fleet spend to the budget.
@@ -88,6 +102,14 @@ pub struct FleetTick {
     pub degraded_moves: usize,
     /// Shed offers actuated to fund SLA repairs.
     pub shed_moves: usize,
+    /// Tenants at storage-only cost after this tick (draining or
+    /// suspended); 0 unless serverless mode is on.
+    pub suspended: usize,
+    /// Tenants inside a cold-start window after this tick.
+    pub resuming: usize,
+    /// Cold-start windows that closed at the start of this tick
+    /// (`Event::ResumeEnd` fired from the fleet calendar).
+    pub resume_ends: usize,
 }
 
 /// A complete fleet run: the per-tick timeline plus the final report.
@@ -128,6 +150,12 @@ pub struct ExplainRecord {
     pub candidates: Vec<Candidate>,
     /// How many shed offers the tenant published alongside.
     pub sheds: usize,
+    /// Serverless lifecycle at proposal time (None for always-on
+    /// tenants) — additive explain-v1 field.
+    pub lifecycle: Option<&'static str>,
+    /// Tick the cold-start window opened by this verdict closes at
+    /// (wakes only) — additive explain-v1 field.
+    pub resume_end: Option<usize>,
 }
 
 /// Drives N tenants and the budget arbiter over their traces.
@@ -140,6 +168,10 @@ pub struct FleetSimulator {
     /// Top-k explain capture (0 = off).
     explain_k: usize,
     explain: Vec<ExplainRecord>,
+    /// Shared storage tier (Some = serverless mode).
+    serverless: Option<StorageService>,
+    /// Fleet-level DES calendar: cold-start windows live here.
+    calendar: EventCalendar,
     step: usize,
 }
 
@@ -173,7 +205,48 @@ impl FleetSimulator {
                 t
             })
             .collect();
-        Self { tenants, arbiter, adapter: None, explain_k: 0, explain: Vec::new(), step: 0 }
+        Self {
+            tenants,
+            arbiter,
+            adapter: None,
+            explain_k: 0,
+            explain: Vec::new(),
+            serverless: None,
+            calendar: EventCalendar::new(),
+            step: 0,
+        }
+    }
+
+    /// Opt the whole fleet into the serverless tier: build the shared
+    /// storage service, size each tenant's working set from its average
+    /// demand, and register it. Suspend/resume lifecycle moves then
+    /// flow through the unchanged proposal pipeline (see
+    /// [`crate::serverless`]).
+    pub fn enable_serverless(&mut self, params: ServerlessParams) {
+        let mut storage = StorageService::new(params);
+        for t in &mut self.tenants {
+            let trace = t.trace();
+            let avg = trace.points.iter().map(|w| w.lambda_req).sum::<f32>()
+                / trace.len().max(1) as f32;
+            let gb = storage.register(t.id, params.working_set_gb(avg));
+            t.enable_serverless(params, gb);
+        }
+        self.serverless = Some(storage);
+    }
+
+    /// The shared storage tier, when serverless mode is on.
+    pub fn storage(&self) -> Option<&StorageService> {
+        self.serverless.as_ref()
+    }
+
+    /// Cold-start windows currently open on the fleet calendar.
+    pub fn pending_resumes(&self) -> usize {
+        self.calendar.len()
+    }
+
+    /// The fleet's DES calendar (cold-start `ResumeEnd` events).
+    pub fn calendar(&self) -> &EventCalendar {
+        &self.calendar
     }
 
     /// Record every moving tenant's top-`k` ranked candidates per tick
@@ -346,8 +419,35 @@ impl FleetSimulator {
     /// One fleet tick: every tenant serves, proposes (budget-hinted);
     /// the arbiter admits under the budget (walking candidate lists,
     /// re-negotiating via sheds); admitted moves actuate for next tick.
+    /// Actuate one admitted candidate. A suspended tenant's admitted
+    /// move is a *wake*: apply the target configuration, then open a
+    /// cold-start window on the fleet calendar — the tenant is Resuming
+    /// (paying, not serving) until `Event::ResumeEnd` fires. Everyone
+    /// else reconfigures directly.
+    fn actuate(&mut self, tenant: usize, to: Configuration, t: usize) {
+        let waking = matches!(self.tenants[tenant].lifecycle(), Some(Lifecycle::Suspended));
+        let tn = &mut self.tenants[tenant];
+        tn.apply(to);
+        if waking {
+            // the move takes effect at t+1 (serve-then-move), so the
+            // window spans the cold-start ticks after that
+            let until = t + 1 + tn.cold_start_ticks();
+            tn.begin_resume(until);
+            self.calendar.schedule(until as f64, Event::ResumeEnd { tenant });
+        }
+    }
+
     pub fn tick(&mut self) -> FleetTick {
         let t = self.step;
+        // close cold-start windows due *before* serving: a window
+        // scheduled to end at t means the tenant serves tick t
+        let mut resume_ends = 0usize;
+        while let Some((_, ev)) = self.calendar.pop_due(t as f64) {
+            if let Event::ResumeEnd { tenant } = ev {
+                self.tenants[tenant].finish_resume();
+                resume_ends += 1;
+            }
+        }
         let mut spend = 0.0f32;
         for tn in &mut self.tenants {
             spend += tn.serve(t).cost;
@@ -373,32 +473,49 @@ impl FleetSimulator {
                         from: p.from,
                         candidates: p.candidates.iter().take(self.explain_k).copied().collect(),
                         sheds: p.sheds.len(),
+                        lifecycle: self.tenants[p.tenant].lifecycle().map(|l| l.label()),
+                        resume_end: None,
                     });
                 }
             }
         }
 
         for (i, (p, v)) in proposals.iter().zip(&adm.verdicts).enumerate() {
-            let tn = &mut self.tenants[p.tenant];
             match v {
-                Verdict::Hold => tn.note_no_move(),
+                Verdict::Hold => self.tenants[p.tenant].note_no_move(),
                 Verdict::AdmittedShrink | Verdict::Admitted => {
-                    tn.apply(p.candidates[adm.chosen[i].expect("admitted move has a choice")].to)
+                    let to = p.candidates[adm.chosen[i].expect("admitted move has a choice")].to;
+                    self.actuate(p.tenant, to, t);
                 }
                 Verdict::AdmittedDegraded => {
-                    tn.degraded_total += 1;
-                    tn.apply(p.candidates[adm.chosen[i].expect("degraded move has a choice")].to);
+                    self.tenants[p.tenant].degraded_total += 1;
+                    let to = p.candidates[adm.chosen[i].expect("degraded move has a choice")].to;
+                    self.actuate(p.tenant, to, t);
                 }
                 Verdict::AdmittedRescue => {
-                    tn.rescued_total += 1;
-                    tn.apply(p.candidates[adm.chosen[i].expect("rescue has a choice")].to);
+                    self.tenants[p.tenant].rescued_total += 1;
+                    let to = p.candidates[adm.chosen[i].expect("rescue has a choice")].to;
+                    self.actuate(p.tenant, to, t);
                 }
                 Verdict::AdmittedShed => {
-                    tn.shed_total += 1;
-                    tn.apply(p.sheds[adm.chosen[i].expect("shed has a choice")].to);
+                    self.tenants[p.tenant].shed_total += 1;
+                    let to = p.sheds[adm.chosen[i].expect("shed has a choice")].to;
+                    self.actuate(p.tenant, to, t);
                 }
-                Verdict::DeniedBudget => tn.note_denied(),
-                Verdict::DeniedRescueUnaffordable => tn.note_rescue_unaffordable(),
+                Verdict::DeniedBudget => self.tenants[p.tenant].note_denied(),
+                Verdict::DeniedRescueUnaffordable => {
+                    self.tenants[p.tenant].note_rescue_unaffordable()
+                }
+            }
+        }
+
+        // stamp cold-start windows opened this tick into the explain
+        // records (wakes actuate after the capture above)
+        if self.explain_k > 0 {
+            for r in self.explain.iter_mut().rev().take_while(|r| r.step == t) {
+                if let Some(Lifecycle::Resuming { until }) = self.tenants[r.tenant].lifecycle() {
+                    r.resume_end = Some(until);
+                }
             }
         }
 
@@ -419,6 +536,15 @@ impl FleetSimulator {
             self.arbiter.envelopes = Some(adapter.observe(contention));
         }
 
+        let (mut suspended, mut resuming) = (0usize, 0usize);
+        for tn in &self.tenants {
+            match tn.lifecycle() {
+                Some(Lifecycle::Draining) | Some(Lifecycle::Suspended) => suspended += 1,
+                Some(Lifecycle::Resuming { .. }) => resuming += 1,
+                _ => {}
+            }
+        }
+
         self.step += 1;
         FleetTick {
             step: t,
@@ -430,6 +556,9 @@ impl FleetSimulator {
             rescue_denials: adm.rescue_denials,
             degraded_moves: adm.degraded_moves,
             shed_moves: adm.shed_moves,
+            suspended,
+            resuming,
+            resume_ends,
         }
     }
 
@@ -625,6 +754,46 @@ mod tests {
         let res = fleet.run(20);
         assert_eq!(res.ticks.len(), 20);
         assert!(res.report.tenants.iter().all(|t| t.summary.avg_throughput > 0.0));
+    }
+
+    #[test]
+    fn serverless_fleet_suspends_idle_tenants_and_wakes_them() {
+        let cfg = ModelConfig::default_paper();
+        let specs = crate::serverless::mostly_idle_specs(&cfg, 8, 0.75);
+        let mut fleet = FleetSimulator::new(&cfg, specs, 1.0e6, 3);
+        fleet.enable_serverless(ServerlessParams::default());
+        let res = fleet.run(100);
+        // idle tenants actually scale to zero...
+        assert!(res.ticks.iter().any(|t| t.suspended > 0), "no tenant ever suspended");
+        // ...and their bursts wake them through priced cold starts
+        assert!(res.ticks.iter().any(|t| t.resuming > 0), "no cold-start window opened");
+        let wakes: usize = res.ticks.iter().map(|t| t.resume_ends).sum();
+        assert!(wakes > 0, "no cold-start window ever closed");
+        let resumes: usize =
+            fleet.tenants().iter().filter_map(Tenant::serverless).map(|s| s.resumes).sum();
+        assert_eq!(wakes, resumes, "every admitted wake closes exactly once");
+        assert!(fleet.storage().unwrap().total_gb() > 0.0);
+    }
+
+    /// The PR-3 projected-spend invariant must survive the serverless
+    /// lifecycle: every state (draining, suspended, cold-starting,
+    /// active-with-storage) prices exactly what the next tick pays.
+    #[test]
+    fn serverless_keeps_the_projected_spend_invariant() {
+        let cfg = ModelConfig::default_paper();
+        let specs = crate::serverless::mostly_idle_specs(&cfg, 8, 0.75);
+        let mut fleet = FleetSimulator::new(&cfg, specs, 1.0e6, 3);
+        fleet.enable_serverless(ServerlessParams::default());
+        let res = fleet.run(80);
+        for w in res.ticks.windows(2) {
+            assert!(
+                (w[0].projected_spend - w[1].spend).abs() < 1e-3,
+                "tick {}: projected {} vs served {}",
+                w[0].step,
+                w[0].projected_spend,
+                w[1].spend
+            );
+        }
     }
 
     #[test]

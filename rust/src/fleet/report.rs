@@ -1,6 +1,12 @@
 //! Fleet-level metrics aggregation: per-tenant summaries, per-class
 //! rollups (p95 latency, total cost, denial counts), and text/CSV
 //! renderers for the CLI, example, and bench.
+//!
+//! Since PR 6 the p99 columns come from *mergeable* log-bucketed
+//! histograms ([`crate::metrics::LatencyHistogram`]): each tenant's
+//! history may span several suspend/resume segments, and class rollups
+//! merge the per-tenant sketches instead of concatenating raw samples —
+//! the first brick of the ROADMAP's mergeable-sketch pipeline.
 
 use std::fmt::Write as _;
 
@@ -41,6 +47,13 @@ pub struct TenantReport {
     pub max_denial_streak: usize,
     /// Hourly cost of the final configuration.
     pub final_cost: f32,
+    /// p99 of measured latency from the merged histogram — spans every
+    /// suspend/resume segment of a serverless tenant's history.
+    pub p99_latency: f32,
+    /// Ticks spent at storage-only cost (0 for always-on tenants).
+    pub suspended_ticks: usize,
+    /// Admitted wakes (0 for always-on tenants).
+    pub resumes: usize,
 }
 
 impl TenantReport {
@@ -58,6 +71,9 @@ pub struct ClassReport {
     /// p95 over every step latency of every tenant in the class.
     pub p95_latency: f32,
     pub p95_latency_raw: f32,
+    /// p99 from the class-merged latency histograms (merge of each
+    /// member's segment-merged sketch).
+    pub p99_latency: f32,
     pub total_cost: f64,
     pub denied: usize,
     pub rescues: usize,
@@ -107,6 +123,9 @@ pub fn fleet_report(tenants: &[Tenant], ticks: &[FleetTick], budget: f32) -> Fle
                 sheds: t.shed_total,
                 max_denial_streak: t.max_denial_streak,
                 final_cost: t.cost(),
+                p99_latency: t.merged_histogram().p99() as f32,
+                suspended_ticks: t.serverless().map_or(0, |s| s.suspended_ticks),
+                resumes: t.serverless().map_or(0, |s| s.resumes),
             }
         })
         .collect();
@@ -127,11 +146,18 @@ pub fn fleet_report(tenants: &[Tenant], ticks: &[FleetTick], budget: f32) -> Fle
                 .iter()
                 .flat_map(|t| t.records().iter().map(|r| r.latency_raw))
                 .collect();
+            // class p99: merge the members' sketches — O(buckets) per
+            // tenant instead of concatenating every raw sample
+            let mut class_hist = members[0].merged_histogram();
+            for m in &members[1..] {
+                class_hist.merge(&m.merged_histogram());
+            }
             Some(ClassReport {
                 class,
                 tenants: members.len(),
                 p95_latency: percentile(&lat, 95.0),
                 p95_latency_raw: percentile(&raw, 95.0),
+                p99_latency: class_hist.p99() as f32,
                 total_cost: members.iter().map(|t| t.summary().total_cost).sum(),
                 denied: members.iter().map(|t| t.denied_total).sum(),
                 rescues: members.iter().map(|t| t.rescued_total).sum(),
@@ -166,17 +192,19 @@ pub fn table(report: &FleetReport) -> String {
     );
     let _ = writeln!(
         out,
-        "\n{:<8} {:>7} {:>10} {:>12} {:>10} {:>8} {:>8} {:>8}",
-        "class", "tenants", "p95 lat", "p95 raw lat", "cost", "denied", "rescues", "viol."
+        "\n{:<8} {:>7} {:>10} {:>12} {:>10} {:>10} {:>8} {:>8} {:>8}",
+        "class", "tenants", "p95 lat", "p95 raw lat", "p99 lat", "cost", "denied", "rescues",
+        "viol."
     );
     for c in &report.classes {
         let _ = writeln!(
             out,
-            "{:<8} {:>7} {:>10.3} {:>12.3} {:>10.1} {:>8} {:>8} {:>8}",
+            "{:<8} {:>7} {:>10.3} {:>12.3} {:>10.3} {:>10.1} {:>8} {:>8} {:>8}",
             c.class.label(),
             c.tenants,
             c.p95_latency,
             c.p95_latency_raw,
+            c.p99_latency,
             c.total_cost,
             c.denied,
             c.rescues,
@@ -185,7 +213,7 @@ pub fn table(report: &FleetReport) -> String {
     }
     let _ = writeln!(
         out,
-        "\n{:<12} {:<8} {:>10} {:>12} {:>7} {:>9} {:>8} {:>8} {:>9} {:>6} {:>10}",
+        "\n{:<12} {:<8} {:>10} {:>12} {:>7} {:>9} {:>8} {:>8} {:>9} {:>6} {:>10} {:>9} {:>7}",
         "tenant",
         "class",
         "p95 lat",
@@ -196,12 +224,14 @@ pub fn table(report: &FleetReport) -> String {
         "rescues",
         "degraded",
         "sheds",
-        "max streak"
+        "max streak",
+        "susp.tks",
+        "resumes"
     );
     for t in &report.tenants {
         let _ = writeln!(
             out,
-            "{:<12} {:<8} {:>10.3} {:>12.3} {:>7.2} {:>9.3} {:>8} {:>8} {:>9} {:>6} {:>10}",
+            "{:<12} {:<8} {:>10.3} {:>12.3} {:>7.2} {:>9.3} {:>8} {:>8} {:>9} {:>6} {:>10} {:>9} {:>7}",
             t.name,
             t.class.label(),
             t.p95_latency,
@@ -212,7 +242,9 @@ pub fn table(report: &FleetReport) -> String {
             t.rescues,
             t.degraded,
             t.sheds,
-            t.max_denial_streak
+            t.max_denial_streak,
+            t.suspended_ticks,
+            t.resumes
         );
     }
     out
@@ -221,16 +253,17 @@ pub fn table(report: &FleetReport) -> String {
 /// Per-tenant CSV (machine-readable twin of [`table`]).
 pub fn csv(report: &FleetReport) -> String {
     let mut out = String::from(
-        "tenant,class,p95_latency,p95_latency_raw,sla_l_max,avg_cost,total_cost,violations,denied,rescues,degraded,sheds,max_denial_streak\n",
+        "tenant,class,p95_latency,p95_latency_raw,p99_latency,sla_l_max,avg_cost,total_cost,violations,denied,rescues,degraded,sheds,max_denial_streak,suspended_ticks,resumes\n",
     );
     for t in &report.tenants {
         let _ = writeln!(
             out,
-            "{},{},{:.4},{:.4},{:.2},{:.4},{:.2},{},{},{},{},{},{}",
+            "{},{},{:.4},{:.4},{:.4},{:.2},{:.4},{:.2},{},{},{},{},{},{},{},{}",
             t.name,
             t.class.label(),
             t.p95_latency,
             t.p95_latency_raw,
+            t.p99_latency,
             t.sla_l_max,
             t.summary.avg_cost,
             t.summary.total_cost,
@@ -239,21 +272,24 @@ pub fn csv(report: &FleetReport) -> String {
             t.rescues,
             t.degraded,
             t.sheds,
-            t.max_denial_streak
+            t.max_denial_streak,
+            t.suspended_ticks,
+            t.resumes
         );
     }
     out
 }
 
-/// Spend timeline CSV
-/// (`step,spend,projected,admitted,denied,rescues,degraded,sheds`).
+/// Spend timeline CSV (`step,spend,projected,admitted,denied,rescues,
+/// degraded,sheds,suspended,resuming,resume_ends`).
 pub fn ticks_csv(ticks: &[FleetTick]) -> String {
-    let mut out =
-        String::from("step,spend,projected_spend,admitted,denied,rescues,degraded,sheds\n");
+    let mut out = String::from(
+        "step,spend,projected_spend,admitted,denied,rescues,degraded,sheds,suspended,resuming,resume_ends\n",
+    );
     for t in ticks {
         let _ = writeln!(
             out,
-            "{},{:.4},{:.4},{},{},{},{},{}",
+            "{},{:.4},{:.4},{},{},{},{},{},{},{},{}",
             t.step,
             t.spend,
             t.projected_spend,
@@ -261,7 +297,10 @@ pub fn ticks_csv(ticks: &[FleetTick]) -> String {
             t.denied_moves,
             t.rescues,
             t.degraded_moves,
-            t.shed_moves
+            t.shed_moves,
+            t.suspended,
+            t.resuming,
+            t.resume_ends
         );
     }
     out
@@ -315,6 +354,39 @@ mod tests {
         assert!((class_cost - res.report.total_cost).abs() < 1e-6);
         let tick_moves: usize = res.ticks.iter().map(|t| t.admitted_moves).sum();
         assert_eq!(tick_moves, res.report.admitted_moves);
+    }
+
+    #[test]
+    fn p99_comes_from_merged_histograms() {
+        let (res, _) = run_fleet();
+        let member_p99: Vec<f32> = res.report.tenants.iter().map(|t| t.p99_latency).collect();
+        assert!(member_p99.iter().all(|&p| p > 0.0));
+        for c in &res.report.classes {
+            // a merged sketch's quantile lies between its members'
+            // extremes (here classes have one member each, so it is
+            // exactly that member's p99)
+            assert!(c.p99_latency > 0.0);
+            let lo = member_p99.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = member_p99.iter().cloned().fold(0.0, f32::max);
+            assert!(c.p99_latency >= lo * 0.999 && c.p99_latency <= hi * 1.001);
+        }
+    }
+
+    #[test]
+    fn serverless_counters_flow_into_the_report() {
+        let cfg = ModelConfig::default_paper();
+        let specs = crate::serverless::mostly_idle_specs(&cfg, 8, 0.75);
+        let mut fleet = FleetSimulator::new(&cfg, specs, 1.0e6, 3);
+        fleet.enable_serverless(Default::default());
+        let res = fleet.run(100);
+        let suspended: usize = res.report.tenants.iter().map(|t| t.suspended_ticks).sum();
+        assert!(suspended > 0, "idle tenants never slept");
+        let resumed: Vec<_> =
+            res.report.tenants.iter().filter(|t| t.resumes > 0).collect();
+        assert!(!resumed.is_empty(), "no tenant ever woke");
+        // a suspended-then-resumed tenant's merged history still
+        // yields percentiles (the segments merged, not dropped)
+        assert!(resumed.iter().any(|t| t.p99_latency > 0.0));
     }
 
     #[test]

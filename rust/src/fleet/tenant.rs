@@ -43,9 +43,10 @@ use std::sync::Arc;
 use crate::cluster::{ClusterParams, ClusterSim, EventSim, Substrate};
 use crate::config::{ModelConfig, MoveFlags};
 use crate::forecast::{Forecaster, Holt, SeasonalNaive};
-use crate::metrics::{Recorder, StepRecord, Summary};
+use crate::metrics::{LatencyHistogram, Recorder, StepRecord, Summary};
 use crate::plane::Configuration;
 use crate::policy::{BudgetHint, DiagonalScale, ForecastLookahead, Policy, PolicyContext};
+use crate::serverless::{Lifecycle, ServerlessParams, ServerlessState};
 use crate::sla::{SlaSpec, Violation};
 use crate::surfaces::SurfaceModel;
 use crate::workload::{Trace, WorkloadPoint};
@@ -54,6 +55,10 @@ use crate::INFEASIBLE;
 // The decision vocabulary moved into `policy` in PR 5; these re-exports
 // keep `fleet::{Candidate, Proposal, PriorityClass}` paths working.
 pub use crate::policy::{Candidate, PriorityClass, Proposal, MAX_ALTERNATIVES};
+
+/// Resolution floor of the per-tenant latency histograms (latencies are
+/// in model units, O(1); segments must share a floor to merge).
+const HIST_FLOOR: f64 = 1e-5;
 
 /// Per-tenant demand predictor choice for forecast-driven proposals.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -148,6 +153,13 @@ pub struct Tenant {
     plan_queue: bool,
     /// Optional physical substrate backing this tenant (any engine).
     substrate: Option<Box<dyn Substrate + Send>>,
+    /// Optional scale-to-zero lifecycle (None = always-on tenant).
+    serverless: Option<ServerlessState>,
+    /// Live latency histogram of the current active segment.
+    hist: LatencyHistogram,
+    /// Segments archived at each suspension; merged with the live
+    /// segment for fleet p95/p99 across suspend/resume histories.
+    hist_segments: Vec<LatencyHistogram>,
 }
 
 impl Tenant {
@@ -177,6 +189,9 @@ impl Tenant {
             reb_v: cfg.policy.reb_v,
             plan_queue: cfg.policy.plan_queue,
             substrate: None,
+            serverless: None,
+            hist: LatencyHistogram::new(HIST_FLOOR),
+            hist_segments: Vec::new(),
         }
     }
 
@@ -275,6 +290,75 @@ impl Tenant {
         self.substrate.as_ref().map(|s| s.params().sla_latency)
     }
 
+    /// Opt this tenant into the serverless tier: its pages live in the
+    /// fleet's shared [`crate::serverless::StorageService`] (which
+    /// registered `working_set_gb` for it) and scale-to-zero lifecycle
+    /// moves become available to the policy pipeline.
+    pub fn enable_serverless(&mut self, params: ServerlessParams, working_set_gb: f32) {
+        self.serverless = Some(ServerlessState::new(params, working_set_gb));
+    }
+
+    /// The tenant's serverless state, if it is in the serverless tier.
+    pub fn serverless(&self) -> Option<&ServerlessState> {
+        self.serverless.as_ref()
+    }
+
+    /// Current lifecycle, if this is a serverless tenant.
+    pub fn lifecycle(&self) -> Option<Lifecycle> {
+        self.serverless.as_ref().map(|s| s.lifecycle)
+    }
+
+    /// Hourly storage-tier cost (zero for always-on tenants).
+    pub fn storage_cost(&self) -> f32 {
+        self.serverless.as_ref().map_or(0.0, |s| s.storage_cost())
+    }
+
+    /// Cold-start window length a wake of this tenant takes, in ticks.
+    pub fn cold_start_ticks(&self) -> usize {
+        self.serverless.as_ref().map_or(0, |s| s.cold_start_ticks())
+    }
+
+    /// Open the cold-start window of an admitted wake: Suspended →
+    /// Resuming until the fleet calendar's `ResumeEnd` fires at `until`.
+    pub fn begin_resume(&mut self, until: usize) {
+        let s = self.serverless.as_mut().expect("begin_resume on an always-on tenant");
+        debug_assert_eq!(s.lifecycle, Lifecycle::Suspended);
+        s.lifecycle = Lifecycle::Resuming { until };
+        s.resumes += 1;
+    }
+
+    /// Close the cold-start window (fired by the fleet calendar's
+    /// `ResumeEnd`); resets idle detection so the tenant does not
+    /// re-suspend mid-burst.
+    pub fn finish_resume(&mut self) {
+        if let Some(s) = &mut self.serverless {
+            if matches!(s.lifecycle, Lifecycle::Resuming { .. }) {
+                s.lifecycle = Lifecycle::Active;
+                s.reset_idle();
+            }
+        }
+    }
+
+    /// Latency history across suspend/resume segments merged with the
+    /// live segment — the fleet aggregates p95/p99 from this, so a
+    /// suspended-then-resumed tenant's pre-suspension history still
+    /// counts.
+    pub fn merged_histogram(&self) -> LatencyHistogram {
+        let mut merged = LatencyHistogram::new(HIST_FLOOR);
+        for seg in &self.hist_segments {
+            merged.merge(seg);
+        }
+        merged.merge(&self.hist);
+        merged
+    }
+
+    /// Schedule a node failure at simulated time `at` on the backing
+    /// substrate's event calendar, if it has one (DES failure
+    /// injection). Returns whether the failure was scheduled.
+    pub fn schedule_node_failure(&mut self, at: f64, node: usize) -> bool {
+        self.substrate.as_mut().map_or(false, |s| s.schedule_failure(at, node))
+    }
+
     pub fn name(&self) -> &str {
         &self.spec.name
     }
@@ -295,9 +379,18 @@ impl Tenant {
         self.current
     }
 
-    /// Hourly cost of the configuration currently serving.
+    /// Hourly cost this tenant pays right now: the current
+    /// configuration's compute price, plus the storage tier for
+    /// serverless tenants — which is *all* a draining or suspended
+    /// tenant pays (scale-to-zero's whole point).
     pub fn cost(&self) -> f32 {
-        self.model.cost(&self.current)
+        match self.lifecycle() {
+            None => self.model.cost(&self.current),
+            Some(Lifecycle::Draining) | Some(Lifecycle::Suspended) => self.storage_cost(),
+            Some(Lifecycle::Active) | Some(Lifecycle::Resuming { .. }) => {
+                self.model.cost(&self.current) + self.storage_cost()
+            }
+        }
     }
 
     /// The tenant's last served step violated its SLA.
@@ -326,7 +419,53 @@ impl Tenant {
     /// step (serve-then-move, mirroring [`crate::simulator::Simulator`]).
     pub fn serve(&mut self, t: usize) -> StepRecord {
         let w = self.workload_at(t);
-        let rec = match &mut self.substrate {
+        match self.lifecycle() {
+            None | Some(Lifecycle::Active) => {}
+            // storage-only lifecycle states serve nothing: demand above
+            // the idle threshold goes unserved (a throughput violation
+            // that triggers or sustains a wake); a trickle at or below
+            // it is absorbed as noise. Resuming additionally pays for
+            // the re-provisioned compute while the cold start blocks.
+            Some(lc) => {
+                let s = self.serverless.as_mut().expect("lifecycle without state");
+                let idle = s.params.idle_lambda;
+                let cost = match lc {
+                    Lifecycle::Resuming { .. } => {
+                        s.cold_start_ticks_total += 1;
+                        self.model.cost(&self.current) + s.storage_cost()
+                    }
+                    _ => {
+                        s.suspended_ticks += 1;
+                        if lc == Lifecycle::Draining {
+                            s.lifecycle = Lifecycle::Suspended;
+                        }
+                        s.storage_cost()
+                    }
+                };
+                let s = self.serverless.as_mut().expect("lifecycle without state");
+                s.observe_demand(w.lambda_req);
+                let rec = StepRecord {
+                    step: t,
+                    config: self.current,
+                    lambda_req: w.lambda_req,
+                    latency: 0.0,
+                    latency_raw: 0.0,
+                    throughput: 0.0,
+                    cost,
+                    objective: 0.0,
+                    violation: Violation {
+                        latency: false,
+                        throughput: w.lambda_req > idle,
+                    },
+                };
+                self.last_violation = rec.violation.any();
+                if self.recording {
+                    self.recorder.push(rec);
+                }
+                return rec;
+            }
+        }
+        let mut rec = match &mut self.substrate {
             None => {
                 let point = self.model.evaluate(&self.current, w.lambda_req);
                 let lat_eff = self.model.effective_latency(&self.current, w.lambda_req);
@@ -368,8 +507,18 @@ impl Tenant {
                 }
             }
         };
+        if let Some(s) = &mut self.serverless {
+            s.observe_demand(w.lambda_req);
+            // an active serverless tenant pays the storage tier on top
+            // of compute, exactly as its proposals price it — the
+            // projected-spend invariant depends on the two agreeing
+            rec.cost += s.storage_cost();
+        }
         self.last_violation = rec.violation.any();
         if self.recording {
+            if rec.throughput > 0.0 && rec.latency > 0.0 {
+                self.hist.record(rec.latency as f64);
+            }
             self.recorder.push(rec);
         }
         rec
@@ -403,6 +552,19 @@ impl Tenant {
     /// outright.
     pub fn propose(&mut self, t: usize, hint: Option<BudgetHint>) -> Proposal {
         let w = self.workload_at(t);
+        if let Some(s) = &mut self.serverless {
+            // a suspend intent not actuated last tick (denied, or the
+            // fleet skipped actuation) is stale — never carry it over
+            s.pending_suspend = false;
+            let idle = s.params.idle_lambda;
+            match s.lifecycle {
+                Lifecycle::Active => {}
+                Lifecycle::Suspended if w.lambda_req > idle => return self.wake_proposal(w),
+                // draining, cold-starting, or suspended-and-idle
+                // tenants cannot move this tick
+                _ => return self.lifecycle_hold(),
+            }
+        }
         // the context borrows a cheap Arc clone + copied SLA so `self`
         // stays free for the bookkeeping below
         let model = Arc::clone(&self.model);
@@ -540,11 +702,38 @@ impl Tenant {
             }
         }
 
+        let mut cost_from = planned.cost_from;
+        if let Some(s) = &mut self.serverless {
+            // serverless pricing: every configuration carries the
+            // storage tier on top of compute — a uniform shift, so
+            // rankings and cost deltas are untouched and projected
+            // spend still equals next tick's spend
+            let storage = s.storage_cost();
+            cost_from += storage;
+            for c in candidates.iter_mut().chain(sheds.iter_mut()) {
+                c.cost_to += storage;
+            }
+            // suspend candidate: an idle, non-repairing tenant whose
+            // planner holds proposes its *own* configuration at
+            // storage-only cost — admitted as a pass-0 shrink, with the
+            // released compute spend as the claimed gain
+            if !repair && candidates.is_empty() && s.idle_enough() {
+                s.pending_suspend = true;
+                sheds.clear();
+                candidates.push(Candidate {
+                    to: current,
+                    cost_to: storage,
+                    score: current_score,
+                    raw: current_score,
+                    gain: (cost_from - storage).max(0.0),
+                });
+            }
+        }
         Proposal {
             tenant: self.id,
             class: self.spec.class,
             from: current,
-            cost_from: planned.cost_from,
+            cost_from,
             current_score,
             emergency,
             sla_violating: self.last_violation,
@@ -555,9 +744,79 @@ impl Tenant {
         }
     }
 
+    /// The emergency repair proposal of a suspended tenant seeing real
+    /// demand: wake to the cheapest configuration that clears the
+    /// observed load (re-provisioning from the storage tier is not
+    /// neighbor-constrained), priced at compute plus storage. Funded in
+    /// the arbiter's class-ordered repair pass, so Gold tenants wake
+    /// first under contention; denials feed the fairness streak.
+    fn wake_proposal(&mut self, w: WorkloadPoint) -> Proposal {
+        let storage = self.storage_cost();
+        let to = self
+            .cheapest_clearing(w.lambda_req)
+            .unwrap_or_else(|| self.model.plane().fallback_up(&self.current, true, true));
+        Proposal {
+            tenant: self.id,
+            class: self.spec.class,
+            from: self.current,
+            cost_from: storage,
+            current_score: INFEASIBLE,
+            emergency: true,
+            sla_violating: self.last_violation,
+            denial_streak: self.denial_streak,
+            fallback: false,
+            candidates: vec![Candidate {
+                to,
+                cost_to: self.model.cost(&to) + storage,
+                score: INFEASIBLE,
+                raw: INFEASIBLE,
+                gain: 0.0,
+            }],
+            sheds: Vec::new(),
+        }
+    }
+
+    /// A hold proposal for lifecycle states that cannot move this tick
+    /// (draining, cold-starting, or suspended without wake-worthy
+    /// demand): an empty candidate list, so the arbiter holds.
+    fn lifecycle_hold(&self) -> Proposal {
+        Proposal {
+            tenant: self.id,
+            class: self.spec.class,
+            from: self.current,
+            cost_from: self.cost(),
+            current_score: 0.0,
+            emergency: false,
+            sla_violating: self.last_violation,
+            denial_streak: self.denial_streak,
+            fallback: false,
+            candidates: Vec::new(),
+            sheds: Vec::new(),
+        }
+    }
+
     /// Actuate an admitted move (resets the fairness counter).
     pub fn apply(&mut self, to: Configuration) {
         assert!(self.model.plane().contains(&to));
+        if let Some(s) = &mut self.serverless {
+            if s.pending_suspend && to == self.current {
+                // the admitted "move" was this tick's suspend
+                // candidate: start draining instead of reconfiguring,
+                // and archive the live latency segment — a resumed
+                // tenant records into a fresh one and the fleet's
+                // percentiles merge the segments
+                s.lifecycle = Lifecycle::Draining;
+                s.suspends += 1;
+                s.pending_suspend = false;
+                let live =
+                    std::mem::replace(&mut self.hist, LatencyHistogram::new(HIST_FLOOR));
+                if !live.is_empty() {
+                    self.hist_segments.push(live);
+                }
+                self.denial_streak = 0;
+                return;
+            }
+        }
         if let Some(sim) = &mut self.substrate {
             if to != self.current {
                 sim.apply(to);
@@ -933,5 +1192,139 @@ mod tests {
             assert!((a.latency - b.latency).abs() <= 1e-6 * a.latency.abs().max(1.0));
             assert!((a.throughput - b.throughput).abs() <= 1e-3 * a.throughput.abs().max(1.0));
         }
+    }
+
+    /// A serverless tenant at the cheapest feasible config — the state
+    /// an idle tenant drifts into before suspension becomes attractive.
+    fn serverless_tenant(trace: Trace) -> Tenant {
+        let (cfg, model) = fixture();
+        let spec = TenantSpec {
+            start: Configuration::new(0, 1),
+            ..TenantSpec::from_config(&cfg, "sv", PriorityClass::Gold, trace)
+        };
+        let mut t = Tenant::new(0, spec, model, &cfg);
+        t.enable_serverless(ServerlessParams::default(), 2.0);
+        t
+    }
+
+    #[test]
+    fn idle_serverless_tenant_proposes_suspend_then_drains() {
+        let (cfg, _) = fixture();
+        let b = TraceBuilder::from_config(&cfg);
+        let mut t = serverless_tenant(b.spike(0.0, 30.0, 10, 3, 20));
+        let storage = t.storage_cost();
+        assert!(storage > 0.0);
+        let mut suspended_at = None;
+        for tick in 0..6 {
+            t.serve(tick);
+            let p = t.propose(tick, None);
+            if let Some(best) = p.best().copied() {
+                if best.to == t.current() && (best.cost_to - storage).abs() < 1e-6 {
+                    assert!(p.cost_delta() <= 0.0, "suspend must be a shrink");
+                    assert!(best.gain > 0.0, "claimed savings are the released compute");
+                    t.apply(best.to);
+                    suspended_at = Some(tick);
+                    break;
+                }
+                t.apply(best.to);
+            }
+        }
+        let at = suspended_at.expect("idle tenant never proposed suspension");
+        assert_eq!(t.lifecycle(), Some(Lifecycle::Draining));
+        // the draining tick costs storage only, then the tenant sleeps
+        let rec = t.serve(at + 1);
+        assert!((rec.cost - storage).abs() < 1e-6, "drain cost {}", rec.cost);
+        assert!(!rec.violation.any());
+        assert_eq!(t.lifecycle(), Some(Lifecycle::Suspended));
+        assert!((t.cost() - storage).abs() < 1e-6);
+        assert_eq!(t.serverless().unwrap().suspends, 1);
+    }
+
+    #[test]
+    fn suspended_tenant_wakes_as_an_emergency_repair() {
+        let (cfg, model) = fixture();
+        let b = TraceBuilder::from_config(&cfg);
+        let spec = TenantSpec {
+            start: Configuration::new(0, 1),
+            ..TenantSpec::from_config(
+                &cfg,
+                "sv",
+                PriorityClass::Gold,
+                b.spike(0.0, 30.0, 4, 3, 20),
+            )
+        };
+        let mut t = Tenant::new(0, spec, Arc::clone(&model), &cfg);
+        t.enable_serverless(ServerlessParams::default(), 2.0);
+        let storage = t.storage_cost();
+        t.serverless.as_mut().unwrap().lifecycle = Lifecycle::Suspended;
+        t.serve(3);
+        assert!(!t.propose(3, None).is_move(), "no wake without demand");
+        // tick 4: the burst arrives — serving nothing violates, and the
+        // proposal is an emergency wake to a clearing configuration
+        let rec = t.serve(4);
+        assert_eq!(rec.throughput, 0.0);
+        assert!(rec.violation.throughput, "unserved demand must violate");
+        assert!((rec.cost - storage).abs() < 1e-6);
+        let p = t.propose(4, None);
+        assert!(p.emergency && p.is_repair());
+        let best = p.best().copied().unwrap();
+        let lambda = t.workload_at(4).lambda_req;
+        // the wake target clears the observed load outright
+        // (re-provisioning is not neighbor-constrained)
+        assert!(model.latency(&best.to) <= t.sla().l_max);
+        assert!(model.throughput(&best.to) >= lambda);
+        assert!((best.cost_to - (model.cost(&best.to) + storage)).abs() < 1e-6);
+        // actuate the wake the way the fleet does
+        t.apply(best.to);
+        t.begin_resume(7);
+        assert_eq!(t.lifecycle(), Some(Lifecycle::Resuming { until: 7 }));
+        // cold-starting: compute is paid for but nothing serves yet
+        let rec = t.serve(5);
+        assert_eq!(rec.throughput, 0.0);
+        assert!((rec.cost - (model.cost(&best.to) + storage)).abs() < 1e-6);
+        assert!(!t.propose(5, None).is_move(), "no moves inside the cold-start window");
+        t.finish_resume();
+        assert_eq!(t.lifecycle(), Some(Lifecycle::Active));
+        let rec = t.serve(6);
+        assert!(rec.throughput > 0.0, "resumed tenant serves again");
+        assert_eq!(t.serverless().unwrap().resumes, 1);
+    }
+
+    #[test]
+    fn serverless_cost_tracks_lifecycle() {
+        let (cfg, _) = fixture();
+        let b = TraceBuilder::from_config(&cfg);
+        let mut t = serverless_tenant(b.constant(0.0, 10));
+        let storage = t.storage_cost();
+        let active = t.cost();
+        assert!(active > storage, "active pays compute on top of storage");
+        for lc in [Lifecycle::Draining, Lifecycle::Suspended] {
+            t.serverless.as_mut().unwrap().lifecycle = lc;
+            assert!((t.cost() - storage).abs() < 1e-6, "{lc:?}");
+        }
+        t.serverless.as_mut().unwrap().lifecycle = Lifecycle::Resuming { until: 3 };
+        assert!((t.cost() - active).abs() < 1e-6, "resuming pays full freight");
+    }
+
+    #[test]
+    fn suspension_archives_the_latency_segment() {
+        let (cfg, _) = fixture();
+        let b = TraceBuilder::from_config(&cfg);
+        let mut t = serverless_tenant(b.constant(30.0, 10));
+        for tick in 0..5 {
+            t.serve(tick);
+        }
+        let before = t.merged_histogram().len();
+        assert!(before > 0, "active ticks must record latencies");
+        t.serverless.as_mut().unwrap().pending_suspend = true;
+        t.apply(t.current());
+        assert_eq!(t.lifecycle(), Some(Lifecycle::Draining));
+        assert_eq!(t.merged_histogram().len(), before, "history survives suspension");
+        // wake up and keep serving: the merged view spans both segments
+        t.serverless.as_mut().unwrap().lifecycle = Lifecycle::Active;
+        for tick in 5..10 {
+            t.serve(tick);
+        }
+        assert!(t.merged_histogram().len() > before);
     }
 }

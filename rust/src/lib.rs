@@ -61,6 +61,16 @@
 //!   ([`fleet::FleetSimulator::with_placement`]); the pinned tests
 //!   show packing strictly lowering fleet cost at no more
 //!   SLA-violation ticks than dedicated clusters.
+//! * [`serverless`] — the serverless tier (paper §VIII's "serverless
+//!   and disaggregated architectures"): a shared
+//!   [`serverless::StorageService`] detaches storage cost from compute,
+//!   tenants gain the `Active → Draining → Suspended → Resuming`
+//!   scale-to-zero lifecycle, and wakes are priced *cold-start windows*
+//!   on the fleet's DES calendar. Suspends ride the proposal pipeline
+//!   as pass-0 shrinks; wakes are class-ordered emergency repairs. The
+//!   pinned scenarios show a 64-tenant mostly-idle fleet cutting cost
+//!   strictly below always-on packing, and a correlated wake storm
+//!   resolving without starving Gold tenants.
 //! * [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes the
 //!   Pallas-backed surface kernels on the decision path.
@@ -86,6 +96,7 @@ pub mod plane;
 pub mod policy;
 pub mod report;
 pub mod runtime;
+pub mod serverless;
 pub mod simulator;
 pub mod sla;
 pub mod surfaces;

@@ -9,7 +9,7 @@
 //! diagonal-scale cluster [--policy P] [--substrate S] [--seed N]  # Phase-2 run
 //! diagonal-scale trace-hlo [--artifacts DIR]       # Table I via PJRT
 //! diagonal-scale daemon [--steps N] [--seed N]     # threaded autoscaler
-//! diagonal-scale fleet [--tenants N] [--budget F] [--substrate S]  # fleet
+//! diagonal-scale fleet [--tenants N] [--budget F] [--serverless B]  # fleet
 //! diagonal-scale placement [--tenants N] [--mode M]  # shared-cluster packing
 //! ```
 //!
@@ -28,6 +28,7 @@ use diagonal_scale::placement::{self, PlacementConfig, PlacementSim};
 use diagonal_scale::policy::{DiagonalScale, Lookahead, Oracle, Policy, StaticPolicy, Threshold};
 use diagonal_scale::report::{self, Surface};
 use diagonal_scale::runtime::{Engine, SurfaceEngine};
+use diagonal_scale::serverless::{self, ServerlessParams};
 use diagonal_scale::simulator::{AnalyticalSubstrate, PolicyKind, Simulator};
 use diagonal_scale::surfaces::SurfaceModel;
 use diagonal_scale::workload::TraceBuilder;
@@ -93,8 +94,29 @@ COMMANDS:
                                   with this engine (implies --cluster
                                   true; default des)
                 [--seed <u64>] (default 42, substrate modes only)
+                [--serverless <bool>] scale-to-zero tier: tenants park
+                                  their pages on a shared storage
+                                  service, suspend when idle, and wake
+                                  through priced cold-start windows on
+                                  the DES calendar (default false)
+                [--idle-fraction <f32>] fraction of tenants that are
+                                  mostly idle (default 0.75; requires
+                                  --serverless true)
+                [--wake-storm <tick>] align every idle tenant's burst
+                                  at this tick — a correlated storm
+                                  that wakes the whole suspended
+                                  cohort at once (requires
+                                  --serverless true)
                 [--explain <k>] print each moving tenant's top-k ranked
-                                  candidates per tick (0 = off)
+                                  candidates per tick (0 = off); with
+                                  --serverless, lines carry the
+                                  lifecycle state and the cold-start
+                                  window's end tick
+                [--explain-out <file.json>] write the fleet explain
+                                  dump as versioned JSON
+                                  (diagonal-scale/explain-v1 with the
+                                  additive lifecycle/resume_end
+                                  fields; requires --explain)
   placement   Cross-tenant bin-packing onto shared clusters: small
               tenants co-locate behind shared hosts (fair shares +
               contention knee), the packer replans on a cadence, and
@@ -471,27 +493,53 @@ fn main() -> Result<()> {
             let attach: bool = args.parse_num("cluster", false)? || substrate_flag.is_some();
             let kind = substrate_kind(substrate_flag.unwrap_or("des"))?;
 
+            let serverless_on: bool = args.parse_num("serverless", false)?;
+            if !serverless_on
+                && (args.get("idle-fraction").is_some() || args.get("wake-storm").is_some())
+            {
+                bail!("--idle-fraction / --wake-storm require --serverless true");
+            }
+            let idle_fraction: f32 = args.parse_num("idle-fraction", 0.75)?;
+            if !(0.0..=1.0).contains(&idle_fraction) {
+                bail!("--idle-fraction must be in [0, 1]");
+            }
+
             // Classes: top quarter Gold, next quarter Silver, rest
             // Bronze; traces are the paper timeline phase-shifted so
-            // tenant peaks stagger across the fleet.
-            let base = TraceBuilder::paper(&cfg);
-            let specs: Vec<TenantSpec> = (0..n)
-                .map(|i| {
-                    let class = if 4 * i < n {
-                        PriorityClass::Gold
-                    } else if 2 * i < n {
-                        PriorityClass::Silver
-                    } else {
-                        PriorityClass::Bronze
-                    };
-                    TenantSpec::from_config(
+            // tenant peaks stagger across the fleet. Serverless runs
+            // use the pinned mostly-idle / wake-storm scenarios
+            // instead (round-robin classes, idle tenants bursty).
+            let specs: Vec<TenantSpec> = if serverless_on {
+                match args.get("wake-storm") {
+                    Some(_) => serverless::wake_storm_specs(
                         &cfg,
-                        format!("tenant-{i:02}"),
-                        class,
-                        base.shifted(i * base.len() / n),
-                    )
-                })
-                .collect();
+                        n,
+                        idle_fraction,
+                        args.parse_num("wake-storm", 25)?,
+                        3,
+                    ),
+                    None => serverless::mostly_idle_specs(&cfg, n, idle_fraction),
+                }
+            } else {
+                let base = TraceBuilder::paper(&cfg);
+                (0..n)
+                    .map(|i| {
+                        let class = if 4 * i < n {
+                            PriorityClass::Gold
+                        } else if 2 * i < n {
+                            PriorityClass::Silver
+                        } else {
+                            PriorityClass::Bronze
+                        };
+                        TenantSpec::from_config(
+                            &cfg,
+                            format!("tenant-{i:02}"),
+                            class,
+                            base.shifted(i * base.len() / n),
+                        )
+                    })
+                    .collect()
+            };
 
             let planning: bool = args.parse_num("planning", true)?;
             let mut arb = if planning {
@@ -513,6 +561,9 @@ fn main() -> Result<()> {
                 }
             }
             let mut fleetsim = FleetSimulator::with_arbiter(&cfg, specs, arb);
+            if serverless_on {
+                fleetsim.enable_serverless(ServerlessParams::default());
+            }
             if args.parse_num("adaptive-envelopes", false)? {
                 if !planning {
                     bail!("--adaptive-envelopes requires --planning true");
@@ -536,8 +587,13 @@ fn main() -> Result<()> {
             let res = fleetsim.run(steps);
             if explain > 0 {
                 for r in fleetsim.explain_log() {
+                    let lc = match (r.lifecycle, r.resume_end) {
+                        (Some(l), Some(u)) => format!(" lc={l}→t{u}"),
+                        (Some(l), None) => format!(" lc={l}"),
+                        _ => String::new(),
+                    };
                     println!(
-                        "tick {:>4}  tenant {:>3} [{:<6}] ({},{}) {:?} sheds={}  |  {}",
+                        "tick {:>4}  tenant {:>3} [{:<6}] ({},{}) {:?}{lc} sheds={}  |  {}",
                         r.step,
                         r.tenant,
                         r.class.label(),
@@ -548,12 +604,34 @@ fn main() -> Result<()> {
                         candidate_line(&r.candidates),
                     );
                 }
+                if let Some(path) = args.get("explain-out") {
+                    std::fs::write(path, report::fleet_explain_json(fleetsim.explain_log()))?;
+                    println!("wrote {path} ({})", report::EXPLAIN_SCHEMA);
+                }
+            } else if args.get("explain-out").is_some() {
+                bail!("--explain-out requires --explain <k>");
             }
             for t in &res.ticks {
+                let sl = if serverless_on {
+                    format!(
+                        "  susp {:>2}  resuming {:>2}  wakes {}",
+                        t.suspended, t.resuming, t.resume_ends
+                    )
+                } else {
+                    String::new()
+                };
                 println!(
-                    "tick {:>4}  spend {:>7.2} / {budget:<7.2}  admitted {:>2}  denied {:>2}  rescues {}  degraded {}  sheds {}",
+                    "tick {:>4}  spend {:>7.2} / {budget:<7.2}  admitted {:>2}  denied {:>2}  rescues {}  degraded {}  sheds {}{sl}",
                     t.step, t.spend, t.admitted_moves, t.denied_moves, t.rescues,
                     t.degraded_moves, t.shed_moves
+                );
+            }
+            if let Some(storage) = fleetsim.storage() {
+                println!(
+                    "\nstorage service: {:.1} GB parked @ {:.4}/GB-hour = {:.4}/h",
+                    storage.total_gb(),
+                    storage.params().storage_price_gb_hour,
+                    storage.total_storage_cost(),
                 );
             }
             println!("\n{}", fleet::report::table(&res.report));

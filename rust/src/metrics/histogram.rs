@@ -233,6 +233,46 @@ mod tests {
     }
 
     #[test]
+    fn prop_merge_then_quantile_equals_record_all() {
+        // property: for any value stream and any random k-way split into
+        // shard histograms, merging the shards is indistinguishable from
+        // recording everything into one histogram. Counts are integers
+        // and max is an exact max-of-maxes, so every quantile must match
+        // EXACTLY — not approximately. This is what lets the fleet fold
+        // suspended tenants' archived segments into live p99s.
+        for seed in [1u64, 42, 1234, 98765] {
+            let mut rng = XorShift64::new(seed);
+            let k = 2 + (rng.next_u64() % 7) as usize; // 2..=8 shards
+            let n = 500 + (rng.next_u64() % 4000) as usize;
+            let mut shards: Vec<LatencyHistogram> =
+                (0..k).map(|_| LatencyHistogram::new(1e-4)).collect();
+            let mut all = LatencyHistogram::new(1e-4);
+            for _ in 0..n {
+                // heavy-tailed mix so underflow/overflow paths get hit
+                let v = match rng.next_u64() % 10 {
+                    0 => 1e-6,          // underflow
+                    1 => 1e9,           // overflow
+                    _ => rng.exp(0.004) // body
+                };
+                shards[(rng.next_u64() % k as u64) as usize].record(v);
+                all.record(v);
+            }
+            let mut merged = shards.remove(0);
+            for s in &shards {
+                merged.merge(s);
+            }
+            assert_eq!(merged.len(), all.len(), "seed={seed}");
+            assert_eq!(merged.max(), all.max(), "seed={seed}");
+            for q in [0.0, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                assert_eq!(merged.quantile(q), all.quantile(q), "seed={seed} q={q}");
+            }
+            // sums accumulate in a different order: bit-exactness is not
+            // guaranteed, only tight relative agreement
+            assert!((merged.mean() - all.mean()).abs() / all.mean() < 1e-12, "seed={seed}");
+        }
+    }
+
+    #[test]
     #[should_panic]
     fn merge_rejects_incompatible() {
         let mut a = LatencyHistogram::new(1e-4);

@@ -85,6 +85,17 @@ impl Surface {
 
 /// Version tag of the ranked-candidate explain schema. Bump when the
 /// JSON shape below changes; consumers dispatch on the `schema` field.
+///
+/// PR 6 extends the schema *additively* (no version bump — consumers
+/// that ignore unknown fields keep working): fleet step objects
+/// emitted by [`fleet_explain_json`] may carry
+///
+/// * `"lifecycle"` — the proposing tenant's serverless lifecycle at
+///   proposal time (`"active"`, `"draining"`, `"suspended"`,
+///   `"resuming"`); absent for always-on tenants.
+/// * `"resume_end"` — for admitted wakes, the tick at which the
+///   cold-start window scheduled on the fleet's DES calendar closes;
+///   absent on every other verdict.
 pub const EXPLAIN_SCHEMA: &str = "diagonal-scale/explain-v1";
 
 fn json_escape(s: &str) -> String {
@@ -129,6 +140,53 @@ pub fn explain_json(policy: &str, steps: &[crate::simulator::StepExplain]) -> St
             s.step, s.demand, s.fallback, s.chosen.h_idx, s.chosen.v_idx
         );
         for (j, c) in s.candidates.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"h\":{},\"v\":{},\"cost\":{},\"score\":{},\"raw\":{},\"gain\":{},\"feasible\":{}}}",
+                c.to.h_idx,
+                c.to.v_idx,
+                c.cost_to,
+                c.score,
+                c.raw,
+                c.gain,
+                c.feasible()
+            );
+        }
+        out.push_str("]}");
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Fleet admission decisions as versioned JSON ([`EXPLAIN_SCHEMA`]):
+/// one entry per captured proposal with tenant, class, verdict, ranked
+/// candidates, and — additively since PR 6 — the proposing tenant's
+/// serverless `lifecycle` and, for admitted wakes, the `resume_end`
+/// tick of the cold-start window opened on the fleet's DES calendar
+/// (both omitted when absent, so pre-PR-6 consumers parse unchanged).
+pub fn fleet_explain_json(records: &[crate::fleet::ExplainRecord]) -> String {
+    let mut out = String::new();
+    let _ = write!(out, "{{\"schema\":\"{EXPLAIN_SCHEMA}\",\"kind\":\"fleet\",\"steps\":[");
+    for (i, r) in records.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"step\":{},\"tenant\":{},\"class\":\"{}\",\"verdict\":\"{:?}\",\"from\":{{\"h\":{},\"v\":{}}}",
+            r.step, r.tenant, r.class.label(), r.verdict, r.from.h_idx, r.from.v_idx
+        );
+        if let Some(lc) = r.lifecycle {
+            let _ = write!(out, ",\"lifecycle\":\"{lc}\"");
+        }
+        if let Some(end) = r.resume_end {
+            let _ = write!(out, ",\"resume_end\":{end}");
+        }
+        let _ = write!(out, ",\"sheds\":{},\"candidates\":[", r.sheds);
+        for (j, c) in r.candidates.iter().enumerate() {
             if j > 0 {
                 out.push(',');
             }
@@ -429,6 +487,25 @@ mod tests {
         for (s, rec) in steps.iter().zip(plain.records.iter().skip(1)) {
             assert_eq!(s.chosen, rec.config, "explain chose a different trajectory");
         }
+    }
+
+    #[test]
+    fn fleet_explain_json_carries_lifecycle_fields() {
+        let cfg = ModelConfig::default_paper();
+        let specs = crate::serverless::mostly_idle_specs(&cfg, 8, 0.75);
+        let mut fleet = crate::fleet::FleetSimulator::new(&cfg, specs, 1.0e6, 3);
+        fleet.enable_serverless(Default::default());
+        fleet.enable_explain(3);
+        fleet.run(100);
+        let json = fleet_explain_json(fleet.explain_log());
+        assert!(json.starts_with(&format!("{{\"schema\":\"{EXPLAIN_SCHEMA}\"")));
+        assert!(json.contains("\"kind\":\"fleet\""));
+        // the additive PR-6 fields: wake proposals carry the suspended
+        // lifecycle, and admitted wakes stamp their cold-start window
+        assert!(json.contains("\"lifecycle\":\"suspended\""), "no wake captured");
+        assert!(json.contains("\"resume_end\":"), "no cold-start window in explain");
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
     }
 
     #[test]

@@ -1,0 +1,431 @@
+//! Serverless tier: storage–compute disaggregation with scale-to-zero
+//! and priced cold starts (paper §VIII's "serverless and disaggregated
+//! architectures" extension of the Scaling Plane).
+//!
+//! The always-on model charges every tenant its cheapest `(H, V)`
+//! configuration forever, even at zero demand. This module detaches
+//! storage from compute: a shared [`StorageService`] holds each
+//! tenant's pages durably at a per-GB-hour price *independent of
+//! compute*, so compute can scale to zero while the data — and its
+//! cost — survive. Contrast with [`crate::disagg`], where the storage
+//! axis is still bundled per *node* (its cost scales with `H`); here
+//! storage is priced per tenant working set and is the floor cost that
+//! remains at `H = 0`.
+//!
+//! Tenants gain a lifecycle:
+//!
+//! ```text
+//! Active → Draining → Suspended → Resuming → Active
+//! ```
+//!
+//! * **Suspend** is an ordinary policy candidate: an idle,
+//!   non-violating tenant proposes a move to its *own* configuration at
+//!   storage-only cost. Admission proposals treat any non-empty
+//!   candidate list as a move, so the PR-5 proposal pipeline and the
+//!   [`crate::fleet::BudgetArbiter`] apply unchanged — the cost
+//!   decrease is admitted in pass 0 as a shrink, with the claimed
+//!   savings in the candidate's `gain`.
+//! * **Draining** is one visible tick at storage-only cost while
+//!   compute flushes and tears down; the projected-spend invariant
+//!   (admitted cost takes effect exactly next tick) is preserved.
+//! * **Suspended** accrues *only* storage cost. Demand above the idle
+//!   threshold is a throughput violation (nothing serves) and triggers
+//!   a wake; a trickle at or below the threshold is treated as noise.
+//! * **Resume** is an emergency repair proposal priced at full compute
+//!   plus storage, funded in the arbiter's class-ordered repair pass
+//!   (Gold wakes first). An admitted wake opens a *cold-start window*
+//!   on the fleet's DES calendar — an
+//!   [`Event::ResumeEnd`](crate::cluster::events::Event) whose duration
+//!   is the working-set GB over the storage read bandwidth — during
+//!   which requests queue and violate the SLA, exactly like the PR-4
+//!   migration windows.
+//!
+//! Idle detection combines an observed idle streak with a one-step
+//! [`Holt`](crate::forecast::Holt) forecast, so a tenant whose demand
+//! is about to return does not flap into suspension.
+//!
+//! [`mostly_idle_specs`] and [`wake_storm_specs`] build the two pinned
+//! scenarios: a 64-tenant mostly-idle fleet where serverless mode cuts
+//! cost strictly below always-on packing at bounded extra violation
+//! ticks, and a correlated burst that wakes a suspended cohort at once
+//! without starving Gold tenants.
+
+use crate::config::ModelConfig;
+use crate::fleet::{PriorityClass, TenantSpec};
+use crate::forecast::{Forecaster, Holt};
+use crate::workload::TraceBuilder;
+
+/// Pricing and timing constants of the serverless tier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServerlessParams {
+    /// Durable page storage price per GB-hour — the cost that survives
+    /// compute scale-to-zero. Well below the cheapest compute step
+    /// (0.08/h) so suspension is worth proposing.
+    pub storage_price_gb_hour: f32,
+    /// Storage read bandwidth in GB per tick: a cold start lasts
+    /// `ceil(working_set_gb / read_bw_gb_per_tick)` ticks (min 1).
+    pub read_bw_gb_per_tick: f32,
+    /// Demand at or below this rate counts as idle; above it wakes a
+    /// suspended tenant.
+    pub idle_lambda: f32,
+    /// Consecutive idle ticks before suspension becomes a candidate.
+    pub idle_ticks: usize,
+    /// Working-set floor every tenant stores regardless of demand.
+    pub base_gb: f32,
+    /// Working-set growth per 1000 req/tick of average demand.
+    pub gb_per_kilo_lambda: f32,
+}
+
+impl Default for ServerlessParams {
+    fn default() -> Self {
+        Self {
+            storage_price_gb_hour: 0.004,
+            read_bw_gb_per_tick: 4.0,
+            idle_lambda: 1.0,
+            idle_ticks: 3,
+            base_gb: 2.0,
+            gb_per_kilo_lambda: 1.0,
+        }
+    }
+}
+
+impl ServerlessParams {
+    /// Working-set size for a tenant with the given average demand.
+    pub fn working_set_gb(&self, avg_lambda: f32) -> f32 {
+        self.base_gb + self.gb_per_kilo_lambda * avg_lambda.max(0.0) / 1000.0
+    }
+
+    /// Hourly storage cost of a `gb`-sized working set.
+    pub fn storage_cost(&self, gb: f32) -> f32 {
+        gb * self.storage_price_gb_hour
+    }
+
+    /// Cold-start window length in ticks: reading the working set back
+    /// from the storage tier at its read bandwidth, never instant.
+    pub fn cold_start_ticks(&self, gb: f32) -> usize {
+        ((gb / self.read_bw_gb_per_tick).ceil() as usize).max(1)
+    }
+}
+
+/// Scale-to-zero lifecycle of a serverless tenant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// Compute deployed and serving (pays compute + storage).
+    Active,
+    /// Suspension admitted: one tick at storage-only cost while compute
+    /// flushes and tears down; becomes [`Lifecycle::Suspended`] after
+    /// serving it.
+    Draining,
+    /// Compute released; only the storage tier holds the tenant.
+    Suspended,
+    /// A wake was admitted: compute is re-provisioned and paid for, but
+    /// nothing serves until the cold-start window closes at tick
+    /// `until` (the fleet calendar's `ResumeEnd`).
+    Resuming { until: usize },
+}
+
+impl Lifecycle {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Lifecycle::Active => "active",
+            Lifecycle::Draining => "draining",
+            Lifecycle::Suspended => "suspended",
+            Lifecycle::Resuming { .. } => "resuming",
+        }
+    }
+}
+
+/// Per-tenant serverless state: lifecycle, storage terms, idle
+/// detection, and lifetime counters. Owned by
+/// [`crate::fleet::Tenant`]; built by
+/// [`crate::fleet::FleetSimulator::enable_serverless`] via the shared
+/// [`StorageService`].
+pub struct ServerlessState {
+    pub params: ServerlessParams,
+    pub working_set_gb: f32,
+    pub lifecycle: Lifecycle,
+    /// Completed suspensions (Active → Draining transitions).
+    pub suspends: usize,
+    /// Admitted wakes (Suspended → Resuming transitions).
+    pub resumes: usize,
+    /// Ticks served from storage only (draining + suspended).
+    pub suspended_ticks: usize,
+    /// Ticks spent inside cold-start windows.
+    pub cold_start_ticks_total: usize,
+    /// Set when a suspend candidate was proposed this tick; `apply`
+    /// turns the admitted no-op move into the Draining transition.
+    pub(crate) pending_suspend: bool,
+    idle_streak: usize,
+    forecast: Holt,
+}
+
+impl ServerlessState {
+    pub fn new(params: ServerlessParams, working_set_gb: f32) -> Self {
+        Self {
+            params,
+            working_set_gb,
+            lifecycle: Lifecycle::Active,
+            suspends: 0,
+            resumes: 0,
+            suspended_ticks: 0,
+            cold_start_ticks_total: 0,
+            pending_suspend: false,
+            idle_streak: 0,
+            forecast: Holt::default_tuned(),
+        }
+    }
+
+    /// Hourly cost of this tenant's pages in the storage tier.
+    pub fn storage_cost(&self) -> f32 {
+        self.params.storage_cost(self.working_set_gb)
+    }
+
+    /// Cold-start ticks a wake of this tenant takes.
+    pub fn cold_start_ticks(&self) -> usize {
+        self.params.cold_start_ticks(self.working_set_gb)
+    }
+
+    /// Fold one tick's observed demand into the idle detector.
+    pub fn observe_demand(&mut self, lambda: f32) {
+        self.forecast.observe(lambda as f64);
+        if lambda <= self.params.idle_lambda {
+            self.idle_streak += 1;
+        } else {
+            self.idle_streak = 0;
+        }
+    }
+
+    /// Whether suspension is justified: the observed idle streak is
+    /// long enough *and* the one-step forecast predicts idleness too.
+    pub fn idle_enough(&self) -> bool {
+        self.idle_streak >= self.params.idle_ticks
+            && self.forecast.forecast(1) <= self.params.idle_lambda as f64
+    }
+
+    /// Reset the idle streak (after a wake, so a tenant does not
+    /// re-suspend mid-burst).
+    pub(crate) fn reset_idle(&mut self) {
+        self.idle_streak = 0;
+    }
+}
+
+/// The shared durable storage tier: every tenant's pages at a
+/// per-GB-hour price independent of compute. One instance per fleet;
+/// tenants register at [`crate::fleet::FleetSimulator::enable_serverless`]
+/// time and keep a copy of their terms in [`ServerlessState`].
+#[derive(Debug, Clone)]
+pub struct StorageService {
+    params: ServerlessParams,
+    /// Stored working set per tenant id (0.0 = not registered).
+    stored_gb: Vec<f32>,
+}
+
+impl StorageService {
+    pub fn new(params: ServerlessParams) -> Self {
+        Self { params, stored_gb: Vec::new() }
+    }
+
+    pub fn params(&self) -> &ServerlessParams {
+        &self.params
+    }
+
+    /// Register tenant `id` with a `gb`-sized working set; returns the
+    /// registered size.
+    pub fn register(&mut self, id: usize, gb: f32) -> f32 {
+        assert!(gb > 0.0, "working set must be positive");
+        if id >= self.stored_gb.len() {
+            self.stored_gb.resize(id + 1, 0.0);
+        }
+        self.stored_gb[id] = gb;
+        gb
+    }
+
+    pub fn stored_gb(&self, id: usize) -> f32 {
+        self.stored_gb.get(id).copied().unwrap_or(0.0)
+    }
+
+    pub fn total_gb(&self) -> f32 {
+        self.stored_gb.iter().sum()
+    }
+
+    /// Fleet-wide hourly storage cost — the floor that survives every
+    /// tenant scaling its compute to zero.
+    pub fn total_storage_cost(&self) -> f32 {
+        self.params.storage_cost(self.total_gb())
+    }
+
+    /// Cold-start ticks a wake of tenant `id` takes.
+    pub fn cold_start_ticks(&self, id: usize) -> usize {
+        self.params.cold_start_ticks(self.stored_gb(id))
+    }
+}
+
+fn class_for(i: usize) -> PriorityClass {
+    match i % 3 {
+        0 => PriorityClass::Gold,
+        1 => PriorityClass::Silver,
+        _ => PriorityClass::Bronze,
+    }
+}
+
+/// The pinned mostly-idle scenario: `n` tenants of which
+/// `round(n * idle_fraction)` are idle nearly all the time — zero
+/// demand except one short burst per cycle, staggered so wakes do not
+/// collide — while the rest carry the paper trace phase-shifted.
+/// Classes cycle Gold/Silver/Bronze across the whole fleet, so idle
+/// tenants span every class.
+pub fn mostly_idle_specs(cfg: &ModelConfig, n: usize, idle_fraction: f32) -> Vec<TenantSpec> {
+    assert!(n > 0, "fleet needs at least one tenant");
+    assert!((0.0..=1.0).contains(&idle_fraction), "idle_fraction in [0, 1]");
+    let b = TraceBuilder::from_config(cfg);
+    let base = TraceBuilder::paper(cfg);
+    let steps = base.len();
+    let idle = ((n as f32 * idle_fraction).round() as usize).min(n);
+    let active = n - idle;
+    (0..n)
+        .map(|i| {
+            let trace = if i < active {
+                base.shifted(i * steps / active.max(1))
+            } else {
+                let j = i - active;
+                b.spike(0.0, 30.0, (j * steps) / idle.max(1), 3, steps)
+            };
+            TenantSpec::from_config(cfg, format!("t{i}"), class_for(i), trace)
+        })
+        .collect()
+}
+
+/// The pinned wake-storm scenario: like [`mostly_idle_specs`] but every
+/// idle tenant's burst lands at the *same* tick `storm_at` for
+/// `storm_width` ticks — a correlated burst that wakes the whole
+/// suspended cohort at once, stressing cold-start queueing and the
+/// arbiter's class-ordered repair pass.
+pub fn wake_storm_specs(
+    cfg: &ModelConfig,
+    n: usize,
+    idle_fraction: f32,
+    storm_at: usize,
+    storm_width: usize,
+) -> Vec<TenantSpec> {
+    assert!(n > 0, "fleet needs at least one tenant");
+    assert!((0.0..=1.0).contains(&idle_fraction), "idle_fraction in [0, 1]");
+    let b = TraceBuilder::from_config(cfg);
+    let base = TraceBuilder::paper(cfg);
+    let steps = base.len().max(storm_at + storm_width + 10);
+    let idle = ((n as f32 * idle_fraction).round() as usize).min(n);
+    let active = n - idle;
+    (0..n)
+        .map(|i| {
+            let trace = if i < active {
+                base.shifted(i * base.len() / active.max(1))
+            } else {
+                b.spike(0.0, 30.0, storm_at, storm_width, steps)
+            };
+            TenantSpec::from_config(cfg, format!("t{i}"), class_for(i), trace)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_start_scales_with_working_set_over_bandwidth() {
+        let p = ServerlessParams::default();
+        assert_eq!(p.cold_start_ticks(2.0), 1);
+        assert_eq!(p.cold_start_ticks(4.0), 1);
+        assert_eq!(p.cold_start_ticks(4.1), 2);
+        assert_eq!(p.cold_start_ticks(16.0), 4);
+        // never instant, even for a tiny working set
+        assert_eq!(p.cold_start_ticks(0.01), 1);
+    }
+
+    #[test]
+    fn working_set_grows_with_demand() {
+        let p = ServerlessParams::default();
+        assert!((p.working_set_gb(0.0) - p.base_gb).abs() < 1e-6);
+        assert!((p.working_set_gb(9600.0) - (p.base_gb + 9.6)).abs() < 1e-4);
+        // negative demand never shrinks below the floor
+        assert!((p.working_set_gb(-5.0) - p.base_gb).abs() < 1e-6);
+    }
+
+    #[test]
+    fn storage_price_is_below_cheapest_compute_step() {
+        // the whole point of suspension: storage-only cost for a small
+        // working set undercuts even one small-tier node (0.08/h)
+        let p = ServerlessParams::default();
+        assert!(p.storage_cost(p.working_set_gb(0.0)) < 0.08);
+    }
+
+    #[test]
+    fn storage_service_registers_and_totals() {
+        let mut s = StorageService::new(ServerlessParams::default());
+        s.register(0, 2.0);
+        s.register(2, 6.0);
+        assert_eq!(s.stored_gb(0), 2.0);
+        assert_eq!(s.stored_gb(1), 0.0);
+        assert_eq!(s.stored_gb(2), 6.0);
+        assert!((s.total_gb() - 8.0).abs() < 1e-6);
+        assert!((s.total_storage_cost() - s.params().storage_cost(8.0)).abs() < 1e-6);
+        assert_eq!(s.cold_start_ticks(2), 2);
+    }
+
+    #[test]
+    fn idle_detection_needs_streak_and_forecast() {
+        let mut st = ServerlessState::new(ServerlessParams::default(), 2.0);
+        assert!(!st.idle_enough());
+        for _ in 0..3 {
+            st.observe_demand(0.0);
+        }
+        assert!(st.idle_enough());
+        // one busy tick resets the streak and lifts the forecast
+        st.observe_demand(5000.0);
+        assert!(!st.idle_enough());
+        st.observe_demand(0.0);
+        assert!(!st.idle_enough(), "streak must rebuild after a burst");
+    }
+
+    #[test]
+    fn lifecycle_labels() {
+        assert_eq!(Lifecycle::Active.label(), "active");
+        assert_eq!(Lifecycle::Draining.label(), "draining");
+        assert_eq!(Lifecycle::Suspended.label(), "suspended");
+        assert_eq!(Lifecycle::Resuming { until: 7 }.label(), "resuming");
+    }
+
+    #[test]
+    fn mostly_idle_specs_shape() {
+        let cfg = ModelConfig::default_paper();
+        let specs = mostly_idle_specs(&cfg, 16, 0.75);
+        assert_eq!(specs.len(), 16);
+        // 12 idle tenants: zero demand outside their 3-tick burst
+        let idle: Vec<_> = specs[4..].iter().collect();
+        assert_eq!(idle.len(), 12);
+        for s in &idle {
+            let zero = s.trace.points.iter().filter(|w| w.lambda_req == 0.0).count();
+            assert!(zero >= s.trace.len() - 3, "{} not mostly idle", s.name);
+        }
+        // active tenants carry real load every tick
+        for s in &specs[..4] {
+            assert!(s.trace.points.iter().all(|w| w.lambda_req > 0.0));
+        }
+        // classes span the idle cohort too
+        assert!(idle.iter().any(|s| s.class == PriorityClass::Gold));
+        assert!(idle.iter().any(|s| s.class == PriorityClass::Bronze));
+    }
+
+    #[test]
+    fn wake_storm_bursts_are_correlated() {
+        let cfg = ModelConfig::default_paper();
+        let specs = wake_storm_specs(&cfg, 20, 0.9, 30, 4);
+        let idle = &specs[2..];
+        assert_eq!(idle.len(), 18);
+        for s in idle {
+            assert_eq!(s.trace.points[29].lambda_req, 0.0);
+            assert!(s.trace.points[30].lambda_req > 0.0, "{} misses the storm", s.name);
+            assert!(s.trace.points[33].lambda_req > 0.0);
+            assert_eq!(s.trace.points[35].lambda_req, 0.0);
+        }
+    }
+}

@@ -148,6 +148,59 @@ fn cluster_survives_node_failures_mid_trace() {
 }
 
 #[test]
+fn fleet_funds_a_repair_after_a_des_node_loss() {
+    use diagonal_scale::cluster::SubstrateKind;
+    use diagonal_scale::fleet::{FleetSimulator, PriorityClass, TenantSpec};
+
+    let cfg = ModelConfig::default_paper();
+    let base = TraceBuilder::paper(&cfg);
+    let specs: Vec<TenantSpec> = (0..3)
+        .map(|i| {
+            let class = [PriorityClass::Gold, PriorityClass::Silver, PriorityClass::Bronze][i];
+            TenantSpec::from_config(&cfg, format!("t{i}"), class, base.shifted(i * 16))
+        })
+        .collect();
+    // generous budget: the pin is that the *pipeline* carries the
+    // repair end to end, not that money is scarce
+    let mut fleet = FleetSimulator::new(&cfg, specs, 1.0e6, 3);
+    fleet.attach_substrates(&cfg, ClusterParams::default(), 42, SubstrateKind::Des);
+    fleet.enable_explain(3);
+
+    // inject the loss through the DES calendar: node 0 of the victim's
+    // cluster dies mid-interval at its exact event time, at peak load
+    let (victim, fail_tick) = (0usize, 25usize);
+    let interval = ClusterParams::default().interval;
+    assert!(
+        fleet.tenants_mut()[victim]
+            .schedule_node_failure((fail_tick as f64 + 0.5) * interval, 0),
+        "DES substrate must accept a calendar-scheduled failure"
+    );
+
+    let res = fleet.run(50);
+
+    // the failure hurt: the victim audits SLA violations once the node
+    // is gone and peak demand lands on the survivors
+    let hurt = fleet.tenants()[victim]
+        .records()
+        .iter()
+        .any(|r| r.step >= fail_tick && (r.violation.latency || r.violation.throughput));
+    assert!(hurt, "node loss never degraded the victim tenant");
+
+    // ...and the loop closed: the victim proposed a move after the
+    // failure and the arbiter funded it (the reconfiguration rebuilds
+    // the node set, replacing the dead node)
+    let repaired = fleet
+        .explain_log()
+        .iter()
+        .any(|r| r.tenant == victim && r.step >= fail_tick && r.verdict.admitted());
+    assert!(repaired, "no funded repair for the victim after the node loss");
+
+    // graceful degradation, not collapse: everyone kept serving
+    assert_eq!(res.ticks.len(), 50);
+    assert!(res.report.tenants.iter().all(|t| t.summary.avg_throughput > 0.0));
+}
+
+#[test]
 fn cluster_with_all_nodes_down_sheds_everything_but_survives() {
     let cfg = ModelConfig::default_paper();
     let mut cluster = ClusterSim::new(&cfg, ClusterParams::default(), 43);

@@ -1,0 +1,190 @@
+//! Property tests for the serverless tier (PR 6): across randomized
+//! fleet shapes, budgets, and idle mixes,
+//!
+//! 1. no tenant is ever lost across suspend/resume round-trips — the
+//!    storage registration survives, lifecycle counters stay paired,
+//!    and nobody sticks in a transitional state once the calendar is
+//!    empty;
+//! 2. a suspended (or draining) tenant accrues *only* storage cost;
+//! 3. a resume always completes before the tenant serves load — no
+//!    throughput leaks out of a cold-start window;
+//! 4. every decision is deterministic per seed.
+//!
+//! Lifecycle legality is asserted tick by tick: the only edges are
+//! Active→Draining→Suspended→Resuming→Active (plus self-loops), and a
+//! Suspended tenant never jumps straight to Active.
+
+use diagonal_scale::fleet::FleetSimulator;
+use diagonal_scale::serverless::{mostly_idle_specs, Lifecycle, ServerlessParams};
+use diagonal_scale::testkit::forall;
+use diagonal_scale::ModelConfig;
+
+struct Shape {
+    n: usize,
+    idle_fraction: f32,
+    budget: f32,
+    steps: usize,
+}
+
+fn shape(case: usize, rng: &mut diagonal_scale::workload::XorShift64) -> Shape {
+    let n = 4 + (rng.below(9) as usize); // 4..=12 tenants
+    Shape {
+        n,
+        idle_fraction: [0.5, 0.75, 1.0][case % 3],
+        // alternate between an uncapped fleet and a tight one where
+        // wake denials and retries actually happen
+        budget: if case % 2 == 0 { 1.0e6 } else { 0.6 * n as f32 },
+        steps: 40 + (rng.below(41) as usize), // 40..=80 ticks
+    }
+}
+
+fn build(cfg: &ModelConfig, s: &Shape) -> FleetSimulator {
+    let mut fleet =
+        FleetSimulator::new(cfg, mostly_idle_specs(cfg, s.n, s.idle_fraction), s.budget, 3);
+    fleet.enable_serverless(ServerlessParams::default());
+    fleet
+}
+
+/// Post-tick lifecycle snapshot of every tenant.
+fn snapshot(fleet: &FleetSimulator) -> Vec<Lifecycle> {
+    fleet.tenants().iter().map(|t| t.lifecycle().expect("serverless fleet")).collect()
+}
+
+#[test]
+fn prop_lifecycle_edges_are_legal_and_no_tenant_is_lost() {
+    let cfg = ModelConfig::default_paper();
+    forall(6, 0xC0FFEE, |case, rng| {
+        let s = shape(case, rng);
+        let mut fleet = build(&cfg, &s);
+        let mut prev = snapshot(&fleet);
+        for _ in 0..s.steps {
+            fleet.tick();
+            let now = snapshot(&fleet);
+            assert_eq!(now.len(), s.n, "a tenant vanished mid-run");
+            for (id, (&p, &q)) in prev.iter().zip(&now).enumerate() {
+                let legal = match p {
+                    Lifecycle::Active => {
+                        matches!(q, Lifecycle::Active | Lifecycle::Draining)
+                    }
+                    Lifecycle::Draining => {
+                        matches!(q, Lifecycle::Suspended)
+                    }
+                    // a wake must pass through Resuming — Suspended
+                    // never jumps straight back to Active
+                    Lifecycle::Suspended => {
+                        matches!(q, Lifecycle::Suspended | Lifecycle::Resuming { .. })
+                    }
+                    Lifecycle::Resuming { .. } => {
+                        matches!(q, Lifecycle::Active | Lifecycle::Resuming { .. })
+                    }
+                };
+                assert!(legal, "case {case} tenant {id}: illegal edge {p:?} -> {q:?}");
+            }
+            prev = now;
+        }
+        // round-trip accounting: at most one suspension can be open,
+        // and the storage registration survives every round-trip
+        let storage = fleet.storage().expect("storage service");
+        for t in fleet.tenants() {
+            let sv = t.serverless().unwrap();
+            assert!(
+                sv.resumes <= sv.suspends,
+                "case {case} {}: more wakes than suspensions",
+                t.name()
+            );
+            assert!(
+                storage.stored_gb(t.id) > 0.0,
+                "case {case} {}: pages lost from the storage tier",
+                t.name()
+            );
+        }
+        // once the calendar is empty nobody may be stuck mid-resume
+        if fleet.pending_resumes() == 0 {
+            assert!(
+                fleet.tenants().iter().all(|t| !matches!(
+                    t.lifecycle(),
+                    Some(Lifecycle::Resuming { .. })
+                )),
+                "case {case}: tenant stuck Resuming with an empty calendar"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_suspended_tenants_accrue_only_storage_cost() {
+    let cfg = ModelConfig::default_paper();
+    forall(6, 0xBEEF, |case, rng| {
+        let s = shape(case, rng);
+        let mut fleet = build(&cfg, &s);
+        for _ in 0..s.steps {
+            fleet.tick();
+            for t in fleet.tenants() {
+                match t.lifecycle().unwrap() {
+                    Lifecycle::Draining | Lifecycle::Suspended => assert!(
+                        (t.cost() - t.storage_cost()).abs() < 1e-6,
+                        "case {case} {}: parked tenant billed {} vs storage {}",
+                        t.name(),
+                        t.cost(),
+                        t.storage_cost()
+                    ),
+                    // cold starts are *priced*: compute is paid from
+                    // the moment the wake is admitted
+                    Lifecycle::Active | Lifecycle::Resuming { .. } => assert!(
+                        t.cost() > t.storage_cost(),
+                        "case {case} {}: live tenant priced below storage",
+                        t.name()
+                    ),
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_resume_completes_before_any_load_is_served() {
+    let cfg = ModelConfig::default_paper();
+    forall(6, 0xD1CE, |case, rng| {
+        let s = shape(case, rng);
+        let mut fleet = build(&cfg, &s);
+        // parked[id] after tick t => tenant id cannot serve tick t+1
+        // (a Resuming{until} window only re-opens service at `until`)
+        let mut parked: Vec<Option<bool>> = vec![None; s.n];
+        for step in 0..s.steps {
+            fleet.tick();
+            for (id, was_parked) in parked.iter().enumerate() {
+                if *was_parked == Some(true) {
+                    let rec = &fleet.tenants()[id].records()[step];
+                    assert_eq!(
+                        rec.throughput, 0.0,
+                        "case {case} tenant {id} served tick {step} while parked"
+                    );
+                }
+            }
+            for (id, t) in fleet.tenants().iter().enumerate() {
+                parked[id] = Some(match t.lifecycle().unwrap() {
+                    Lifecycle::Draining | Lifecycle::Suspended => true,
+                    Lifecycle::Resuming { until } => until > step + 1,
+                    Lifecycle::Active => false,
+                });
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_decisions_are_deterministic_per_seed() {
+    let cfg = ModelConfig::default_paper();
+    forall(4, 0xFACE, |case, rng| {
+        let s = shape(case, rng);
+        let a = build(&cfg, &s).run(s.steps);
+        let b = build(&cfg, &s).run(s.steps);
+        assert_eq!(a.ticks, b.ticks, "case {case}: tick streams diverged");
+        let (ra, rb) = (&a.report.tenants, &b.report.tenants);
+        for (x, y) in ra.iter().zip(rb) {
+            assert_eq!(x.suspended_ticks, y.suspended_ticks);
+            assert_eq!(x.resumes, y.resumes);
+            assert_eq!(x.summary.violations, y.summary.violations);
+        }
+    });
+}
