@@ -5,7 +5,7 @@
 
 .DEFAULT_GOAL := help
 
-.PHONY: help build test doc bench-compile examples fleet-demo placement-demo explain-demo serverless-demo artifacts
+.PHONY: help build test doc bench-compile examples fleet-demo placement-demo explain-demo serverless-demo fleet-scale-demo artifacts
 
 help: ## list the available targets
 	@grep -E '^[a-zA-Z_-]+:.*?## ' $(MAKEFILE_LIST) | awk 'BEGIN {FS = ":.*?## "}; {printf "  %-14s %s\n", $$1, $$2}'
@@ -38,6 +38,11 @@ explain-demo: ## ranked-proposal explain demo: top-k candidates + versioned JSON
 
 serverless-demo: ## scale-to-zero demo: suspend/wake lifecycle + priced cold starts vs always-on
 	cargo run --release --example scale_to_zero
+
+fleet-scale-demo: ## 2048-tenant dirty-queue smoke: per-tick planning_micros must be reported
+	cargo run --release -- fleet --tenants 2048 --serverless true --idle-fraction 0.95 --steps 60 > /tmp/fleet-scale-demo.out
+	@tail -n 5 /tmp/fleet-scale-demo.out
+	@grep -q 'planning_micros' /tmp/fleet-scale-demo.out && echo "fleet-scale-demo: planning_micros reported"
 
 artifacts: ## AOT-lower the JAX/Pallas kernels to artifacts/ (needs jax)
 	cd python && python3 -m compile.aot --out-dir ../artifacts

@@ -21,7 +21,7 @@ use diagonal_scale::config::ModelConfig;
 use diagonal_scale::fleet::{
     BudgetArbiter, ClassEnvelopes, FleetSimulator, ForecastKind, PriorityClass, TenantSpec,
 };
-use diagonal_scale::serverless::{mostly_idle_specs, ServerlessParams};
+use diagonal_scale::serverless::{mostly_idle_specs, sparse_activity_specs, ServerlessParams};
 use diagonal_scale::workload::TraceBuilder;
 
 fn specs(cfg: &ModelConfig, n: usize) -> Vec<TenantSpec> {
@@ -158,5 +158,63 @@ fn main() {
         bq.report_metric("steady-state spend, always-on", t_on.spend as f64, "/h");
         bq.report_metric("steady-state spend, serverless", t_sv.spend as f64, "/h");
         bq.report_metric("suspended tenants at steady state", t_sv.suspended as f64, "tenants");
+    }
+
+    group("dirty-queue scale sweep — sparse-activity serverless fleets to 10240 tenants");
+    // Fixed activity: 16 trace-driven + 8 bursty tenants regardless of
+    // fleet size; everyone else parks after the initial idle window.
+    // With the dirty queue on, per-tick planning cost must track the
+    // active set, not N — the tier-2 test in tests/fleet_scale.rs pins
+    // the fresh-proposal proxy; this sweep reports the wall-clock view.
+    // DES-backed active cohort: the idle sea stays analytical so the
+    // sweep measures control-plane cost, not 10k idle queue models.
+    for n in [64usize, 512, 2048, 10240] {
+        let specs = sparse_activity_specs(&cfg, n, 16.min(n / 4), 8.min(n / 8));
+        let mut fleet = FleetSimulator::new(&cfg, specs, 1.0e6, 3);
+        fleet.enable_serverless(ServerlessParams::default());
+        fleet.attach_mixed_substrates(&cfg, ClusterParams::default(), 42, |id| {
+            if id < 16 {
+                SubstrateKind::Des
+            } else {
+                SubstrateKind::Analytical
+            }
+        });
+        fleet.set_recording(false);
+        // park the idle sea before measuring (suspension takes
+        // idle_ticks + a drain tick to complete)
+        let mut warm_fresh = 0usize;
+        for _ in 0..16 {
+            warm_fresh += fleet.tick().fresh_proposals;
+        }
+        let mut fresh = 0usize;
+        let mut micros = 0u64;
+        let mut ticks = 0usize;
+        let stats = bq.run(&format!("fleet_tick_sparse/{n:>5}_tenants"), || {
+            let t = fleet.tick();
+            fresh += t.fresh_proposals;
+            micros += t.planning_micros;
+            ticks += 1;
+            t.admitted_moves
+        });
+        bq.report_metric(
+            &format!("fleet_tick_sparse/{n:>5}_tenants warmup fresh"),
+            warm_fresh as f64 / 16.0,
+            "proposals/tick",
+        );
+        bq.report_metric(
+            &format!("fleet_tick_sparse/{n:>5}_tenants steady fresh"),
+            fresh as f64 / ticks.max(1) as f64,
+            "proposals/tick",
+        );
+        bq.report_metric(
+            &format!("fleet_tick_sparse/{n:>5}_tenants planning"),
+            micros as f64 / ticks.max(1) as f64,
+            "us/tick",
+        );
+        bq.report_metric(
+            &format!("fleet_tick_sparse/{n:>5}_tenants tick"),
+            stats.mean.as_secs_f64() * 1e6,
+            "us/tick",
+        );
     }
 }

@@ -36,6 +36,8 @@
 //! only, no re-negotiation, no envelopes — kept for A/B comparisons
 //! (the fleet tests pin that planning strictly beats it on violations).
 
+use std::collections::BinaryHeap;
+
 use crate::policy::{PriorityClass, Proposal};
 
 /// Why a proposal was admitted or denied this tick.
@@ -271,6 +273,134 @@ impl Admission {
     }
 }
 
+/// Per-slot `cost_from` ledger the fleet maintains *incrementally*:
+/// each tick only the slots whose tenants re-proposed (the dirty set)
+/// are re-recorded; clean slots keep their entry, since a replayed hold
+/// carries a bitwise-unchanged `cost_from`.
+///
+/// Totals are produced by folding the flat entry array in slot order —
+/// bitwise identical to walking the proposal slice itself, which is
+/// exactly what keeps a dirty-queue fleet's admission decisions
+/// bit-equal to an always-replan fleet's (`tests/prop_dirty.rs`). The
+/// fold touches 5 bytes per tenant instead of each `Proposal`, so
+/// envelope accounting no longer re-reads every ranked candidate list.
+#[derive(Debug, Clone, Default)]
+pub struct SpendLedger {
+    /// `(cost_from, class rank)` per proposal slot.
+    entries: Vec<(f32, u8)>,
+}
+
+impl SpendLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record slot `i`'s serving cost and class (growing the ledger on
+    /// first sight of the slot).
+    pub fn record(&mut self, i: usize, cost_from: f32, class: PriorityClass) {
+        if i >= self.entries.len() {
+            self.entries.resize(i + 1, (0.0, 0));
+        }
+        self.entries[i] = (cost_from, class.rank());
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// `(fleet spend, per-class spend by rank)` — an f64 slot-order
+    /// fold, matching the proposal-walk fold bit for bit.
+    pub fn totals(&self) -> (f64, [f64; 3]) {
+        let mut spend = 0.0f64;
+        let mut class_spend = [0.0f64; 3];
+        for &(cost, rank) in &self.entries {
+            spend += cost as f64;
+            class_spend[rank as usize] += cost as f64;
+        }
+        (spend, class_spend)
+    }
+}
+
+/// Max-heap key reproducing [`BudgetArbiter::knapsack_key`] *within one
+/// class*: the greatest element is the densest proposal, cheaper first,
+/// then smaller tenant id. Tenant ids are unique, so the order is
+/// strict and the heap's pop sequence equals the sorted sequence.
+#[derive(Debug, Clone, Copy)]
+struct HeapKey {
+    density: f32,
+    cost_delta: f32,
+    tenant: usize,
+    idx: usize,
+}
+
+impl HeapKey {
+    fn of(idx: usize, p: &Proposal) -> Self {
+        Self { density: p.density(), cost_delta: p.cost_delta(), tenant: p.tenant, idx }
+    }
+}
+
+impl Ord for HeapKey {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.density
+            .total_cmp(&o.density)
+            .then(o.cost_delta.total_cmp(&self.cost_delta))
+            .then(o.tenant.cmp(&self.tenant))
+    }
+}
+
+impl PartialOrd for HeapKey {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl PartialEq for HeapKey {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for HeapKey {}
+
+/// Max-heap key reproducing the rescue order: most-starved first, then
+/// class, density, tenant id (see [`BudgetArbiter::rescue_order`]).
+#[derive(Debug, Clone, Copy)]
+struct RescueKey {
+    streak: usize,
+    class_rank: u8,
+    density: f32,
+    tenant: usize,
+    idx: usize,
+}
+
+impl Ord for RescueKey {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.streak
+            .cmp(&o.streak)
+            .then(self.class_rank.cmp(&o.class_rank))
+            .then(self.density.total_cmp(&o.density))
+            .then(o.tenant.cmp(&self.tenant))
+    }
+}
+
+impl PartialOrd for RescueKey {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl PartialEq for RescueKey {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for RescueKey {}
+
 /// Fleet-level admission control under a shared budget.
 #[derive(Debug, Clone, Copy)]
 pub struct BudgetArbiter {
@@ -287,6 +417,13 @@ pub struct BudgetArbiter {
     /// Optional per-class envelopes with burst credits, applied to
     /// economic moves when `planning` is on.
     pub envelopes: Option<ClassEnvelopes>,
+    /// Indexed admission (default): per-class priority heaps built from
+    /// the cost-increasing movers in the single pass-0 walk, popped
+    /// lazily, instead of three global `sort_by` passes over all N
+    /// slots. The pop sequence is provably the sorted sequence (the
+    /// knapsack order is strict), and `sorted_reference()` keeps the
+    /// sort-based path alive for differential testing.
+    pub indexed: bool,
 }
 
 impl BudgetArbiter {
@@ -295,7 +432,7 @@ impl BudgetArbiter {
     pub fn new(budget: f32, fairness_k: usize) -> Self {
         assert!(budget > 0.0, "budget must be positive");
         assert!(fairness_k > 0, "fairness K must be at least 1");
-        Self { budget, fairness_k, planning: true, envelopes: None }
+        Self { budget, fairness_k, planning: true, envelopes: None, indexed: true }
     }
 
     /// The PR-2 flat-denial baseline (first candidate only).
@@ -309,22 +446,51 @@ impl BudgetArbiter {
         self
     }
 
+    /// Builder: use the pre-index global-sort passes (the reference
+    /// implementation the heap path is differentially tested against).
+    pub fn sorted_reference(mut self) -> Self {
+        self.indexed = false;
+        self
+    }
+
     /// Decide every proposal for one tick. Projected spend starts at
     /// Σ `cost_from` and never exceeds `budget` through admissions
     /// (if the fleet already overspends — e.g. the budget was lowered
     /// mid-run — only shrinks are admitted until it fits again).
     pub fn admit(&self, proposals: &[Proposal]) -> Admission {
         if self.planning {
-            self.admit_planning(proposals)
+            let mut spend = 0.0f64;
+            let mut class_spend = [0.0f64; 3];
+            for p in proposals {
+                spend += p.cost_from as f64;
+                class_spend[p.class.rank() as usize] += p.cost_from as f64;
+            }
+            self.admit_planning(proposals, spend, class_spend)
+        } else {
+            self.admit_flat(proposals)
+        }
+    }
+
+    /// [`Self::admit`] with base spend taken from an incrementally
+    /// maintained [`SpendLedger`] instead of a fresh walk over every
+    /// proposal's `cost_from`. The ledger's slot-order fold is bitwise
+    /// identical to the walk, so decisions cannot differ.
+    pub fn admit_ledgered(&self, proposals: &[Proposal], ledger: &SpendLedger) -> Admission {
+        debug_assert_eq!(ledger.len(), proposals.len(), "ledger must cover every slot");
+        if self.planning {
+            let (spend, class_spend) = ledger.totals();
+            self.admit_planning(proposals, spend, class_spend)
         } else {
             self.admit_flat(proposals)
         }
     }
 
     /// Exact PR-2 admission: first candidate only, one knapsack, no
-    /// envelopes, no re-negotiation.
+    /// envelopes, no re-negotiation. Spend accumulates in f64 (10k
+    /// f32-summed tenants lose real pennies) and narrows at the edge.
     fn admit_flat(&self, proposals: &[Proposal]) -> Admission {
-        let base_spend: f32 = proposals.iter().map(|p| p.cost_from).sum();
+        let base_spend: f64 = proposals.iter().map(|p| p.cost_from as f64).sum();
+        let budget = self.budget as f64;
         let mut spend = base_spend;
         let mut verdicts = vec![Verdict::DeniedBudget; proposals.len()];
         let mut chosen: Vec<Option<usize>> = vec![None; proposals.len()];
@@ -336,16 +502,16 @@ impl BudgetArbiter {
             } else if p.cost_delta() <= 0.0 {
                 verdicts[i] = Verdict::AdmittedShrink;
                 chosen[i] = Some(0);
-                spend += p.cost_delta();
+                spend += p.cost_delta() as f64;
             }
         }
 
         // pass 1: fairness rescues, most-starved first
         for i in self.rescue_order(proposals, &verdicts) {
-            if spend + proposals[i].cost_delta() <= self.budget {
+            if spend + proposals[i].cost_delta() as f64 <= budget {
                 verdicts[i] = Verdict::AdmittedRescue;
                 chosen[i] = Some(0);
-                spend += proposals[i].cost_delta();
+                spend += proposals[i].cost_delta() as f64;
             } else {
                 verdicts[i] = Verdict::DeniedRescueUnaffordable;
             }
@@ -357,10 +523,10 @@ impl BudgetArbiter {
             .collect();
         rest.sort_by(|&a, &b| Self::knapsack_key(&proposals[a], &proposals[b]));
         for i in rest {
-            if spend + proposals[i].cost_delta() <= self.budget {
+            if spend + proposals[i].cost_delta() as f64 <= budget {
                 verdicts[i] = Verdict::Admitted;
                 chosen[i] = Some(0);
-                spend += proposals[i].cost_delta();
+                spend += proposals[i].cost_delta() as f64;
             }
         }
 
@@ -369,39 +535,61 @@ impl BudgetArbiter {
 
     /// PR-3 planning admission: candidate-list walks, shed funding,
     /// repair-before-economic ordering, envelopes with burst credits.
-    fn admit_planning(&self, proposals: &[Proposal]) -> Admission {
+    ///
+    /// `spend`/`class_spend` arrive precomputed — a fresh proposal walk
+    /// in [`Self::admit`], an incrementally maintained ledger fold in
+    /// [`Self::admit_ledgered`]; the two are bitwise identical — and
+    /// all accounting stays in f64 until [`Self::tally`] narrows the
+    /// edges (f32 accumulators lose real pennies at 10k tenants).
+    ///
+    /// With `indexed` (the default) the rescue/repair/economic
+    /// sequences come from priority heaps filled during the single
+    /// pass-0 walk — per class for the knapsack passes, so Gold drains
+    /// before Silver before Bronze exactly as the class-major sort did
+    /// — with already-decided entries skipped lazily at pop. Every heap
+    /// order is strict (tenant id breaks the last tie), so pop
+    /// sequences equal the [`Self::sorted_reference`] sequences element
+    /// for element; ordering work drops from three O(N log N) sorts
+    /// over all slots to O(D log D) over the cost-increasing movers,
+    /// which the fleet's dirty queue keeps proportional to *activity*.
+    fn admit_planning(
+        &self,
+        proposals: &[Proposal],
+        spend: f64,
+        class_spend: [f64; 3],
+    ) -> Admission {
         let n = proposals.len();
-        let base_spend: f32 = proposals.iter().map(|p| p.cost_from).sum();
-        let mut spend = base_spend;
+        let base_spend = spend;
+        let budget = self.budget as f64;
+        let mut spend = spend;
         // per-class spend, indexed by rank (bronze, silver, gold)
-        let mut class_spend = [0.0f32; 3];
-        for p in proposals {
-            class_spend[p.class.rank() as usize] += p.cost_from;
-        }
+        let mut class_spend = class_spend;
         let mut verdicts = vec![Verdict::DeniedBudget; n];
         let mut chosen: Vec<Option<usize>> = vec![None; n];
 
         // Admission epsilon: shed funding targets exact deficits, so a
         // funded move lands exactly on the budget boundary in real
-        // arithmetic — f32 summation noise (~1e-6 at fleet scale) must
+        // arithmetic — widening noise from the f32 proposal costs must
         // not flip those admissions. 1e-4 is three orders below the
         // cheapest tier step (0.08/h), so no real overrun can slip
         // through, and it stays well inside the fleet-level
         // [`super::BUDGET_EPS`].
-        const FIT_EPS: f32 = 1e-4;
+        const FIT_EPS: f64 = 1e-4;
         // a cost delta fits when the fleet budget holds and — for
         // envelope-checked (economic) admissions — the class stays
         // within its envelope plus burst credits (the same
         // [`ClassEnvelopes::class_headroom`] the fleet's budget hints
         // are derived from)
-        let fits = |spend: f32, class_spend: &[f32; 3], class: PriorityClass, delta: f32,
+        let fits = |spend: f64, class_spend: &[f64; 3], class: PriorityClass, delta: f64,
                     check_env: bool| {
-            if spend + delta > self.budget + FIT_EPS {
+            if spend + delta > budget + FIT_EPS {
                 return false;
             }
             if check_env && delta > 0.0 {
                 if let Some(e) = &self.envelopes {
-                    if delta > e.class_headroom(class, class_spend, self.budget) + FIT_EPS {
+                    let cs =
+                        [class_spend[0] as f32, class_spend[1] as f32, class_spend[2] as f32];
+                    if delta > e.class_headroom(class, &cs, self.budget) as f64 + FIT_EPS {
                         return false;
                     }
                 }
@@ -416,7 +604,7 @@ impl BudgetArbiter {
                 let p = &proposals[$i];
                 let opt =
                     if $shed { &p.sheds[$ci] } else { &p.candidates[$ci] };
-                let delta = opt.cost_to - p.cost_from;
+                let delta = (opt.cost_to - p.cost_from) as f64;
                 spend += delta;
                 class_spend[p.class.rank() as usize] += delta;
                 chosen[$i] = Some($ci);
@@ -430,7 +618,7 @@ impl BudgetArbiter {
         // is pushed down without funding an admission.
         macro_rules! fund {
             ($deficit:expr) => {{
-                let deficit: f32 = $deficit;
+                let deficit: f64 = $deficit;
                 let mut offers: Vec<usize> = (0..n)
                     .filter(|&j| {
                         matches!(verdicts[j], Verdict::Hold | Verdict::DeniedBudget)
@@ -452,18 +640,18 @@ impl BudgetArbiter {
                         .then(pa.sheds[0].gain.total_cmp(&pb.sheds[0].gain))
                         .then(pa.tenant.cmp(&pb.tenant))
                 });
-                let capacity: f32 = offers
+                let capacity: f64 = offers
                     .iter()
-                    .map(|&j| proposals[j].cost_from - proposals[j].sheds[0].cost_to)
+                    .map(|&j| (proposals[j].cost_from - proposals[j].sheds[0].cost_to) as f64)
                     .sum();
                 if capacity >= deficit - 1e-6 {
-                    let mut freed = 0.0f32;
+                    let mut freed = 0.0f64;
                     for j in offers {
                         if freed >= deficit - 1e-6 {
                             break;
                         }
                         verdicts[j] = Verdict::AdmittedShed;
-                        freed += proposals[j].cost_from - proposals[j].sheds[0].cost_to;
+                        freed += (proposals[j].cost_from - proposals[j].sheds[0].cost_to) as f64;
                         take!(j, 0, true);
                     }
                 }
@@ -483,7 +671,7 @@ impl BudgetArbiter {
                     if admitted {
                         break;
                     }
-                    let delta = p.candidates[ci].cost_to - p.cost_from;
+                    let delta = (p.candidates[ci].cost_to - p.cost_from) as f64;
                     if fits(spend, &class_spend, p.class, delta, $check_env) {
                         verdicts[i] = if ci == 0 { $first } else { $rest };
                         take!(i, ci, false);
@@ -491,7 +679,7 @@ impl BudgetArbiter {
                         break;
                     }
                     if $can_fund && ci == 0 {
-                        let deficit = (spend + delta) - self.budget;
+                        let deficit = (spend + delta) - budget;
                         if deficit > 0.0 {
                             fund!(deficit);
                             if fits(spend, &class_spend, p.class, delta, $check_env) {
@@ -507,47 +695,115 @@ impl BudgetArbiter {
             }};
         }
 
-        // pass 0: holds + cost-non-increasing best moves
+        // pass 0: holds + cost-non-increasing best moves. The same walk
+        // indexes every remaining (cost-increasing) mover into the
+        // later passes' priority heaps — the only proposals those
+        // passes can touch; entries a pass decides are skipped lazily
+        // when a later pop surfaces them.
+        let mut rescue_heap: BinaryHeap<RescueKey> = BinaryHeap::new();
+        let mut repair_heaps: [BinaryHeap<HeapKey>; 3] =
+            [BinaryHeap::new(), BinaryHeap::new(), BinaryHeap::new()];
+        let mut econ_heaps: [BinaryHeap<HeapKey>; 3] =
+            [BinaryHeap::new(), BinaryHeap::new(), BinaryHeap::new()];
         for (i, p) in proposals.iter().enumerate() {
             if !p.is_move() {
                 verdicts[i] = Verdict::Hold;
             } else if p.cost_delta() <= 0.0 {
                 verdicts[i] = Verdict::AdmittedShrink;
                 take!(i, 0, false);
+            } else if self.indexed {
+                if p.sla_violating && p.denial_streak >= self.fairness_k {
+                    rescue_heap.push(RescueKey {
+                        streak: p.denial_streak,
+                        class_rank: p.class.rank(),
+                        density: p.density(),
+                        tenant: p.tenant,
+                        idx: i,
+                    });
+                }
+                let rank = p.class.rank() as usize;
+                if p.is_repair() {
+                    repair_heaps[rank].push(HeapKey::of(i, p));
+                } else {
+                    econ_heaps[rank].push(HeapKey::of(i, p));
+                }
             }
         }
 
         // pass 1: fairness rescues — candidate walks + shed funding,
         // envelope-exempt
         let mut unmet_repair = false;
-        for i in self.rescue_order(proposals, &verdicts) {
-            if !try_admit!(i, Verdict::AdmittedRescue, Verdict::AdmittedRescue, false, true) {
-                verdicts[i] = Verdict::DeniedRescueUnaffordable;
-                unmet_repair = true;
+        if self.indexed {
+            while let Some(r) = rescue_heap.pop() {
+                let i = r.idx;
+                if verdicts[i] != Verdict::DeniedBudget {
+                    continue;
+                }
+                if !try_admit!(i, Verdict::AdmittedRescue, Verdict::AdmittedRescue, false, true) {
+                    verdicts[i] = Verdict::DeniedRescueUnaffordable;
+                    unmet_repair = true;
+                }
+            }
+        } else {
+            for i in self.rescue_order(proposals, &verdicts) {
+                if !try_admit!(i, Verdict::AdmittedRescue, Verdict::AdmittedRescue, false, true) {
+                    verdicts[i] = Verdict::DeniedRescueUnaffordable;
+                    unmet_repair = true;
+                }
             }
         }
 
         // pass 2: SLA repairs fleet-wide ahead of economic moves,
-        // envelope-exempt, shed-fundable
-        let mut repairs: Vec<usize> = (0..n)
-            .filter(|&i| verdicts[i] == Verdict::DeniedBudget && proposals[i].is_repair())
-            .collect();
-        repairs.sort_by(|&a, &b| Self::knapsack_key(&proposals[a], &proposals[b]));
-        for i in repairs {
-            if !try_admit!(i, Verdict::Admitted, Verdict::AdmittedDegraded, false, true) {
-                unmet_repair = true;
+        // envelope-exempt, shed-fundable. Gold drains before Silver
+        // before Bronze — class is the knapsack order's major key, so
+        // per-class heaps popped in rank order equal the global sort.
+        if self.indexed {
+            for rank in (0..3).rev() {
+                while let Some(k) = repair_heaps[rank].pop() {
+                    let i = k.idx;
+                    if verdicts[i] != Verdict::DeniedBudget {
+                        continue;
+                    }
+                    if !try_admit!(i, Verdict::Admitted, Verdict::AdmittedDegraded, false, true) {
+                        unmet_repair = true;
+                    }
+                }
+            }
+        } else {
+            let mut repairs: Vec<usize> = (0..n)
+                .filter(|&i| verdicts[i] == Verdict::DeniedBudget && proposals[i].is_repair())
+                .collect();
+            repairs.sort_by(|&a, &b| Self::knapsack_key(&proposals[a], &proposals[b]));
+            for i in repairs {
+                if !try_admit!(i, Verdict::Admitted, Verdict::AdmittedDegraded, false, true) {
+                    unmet_repair = true;
+                }
             }
         }
 
         // pass 3: economic knapsack — envelope-checked, frozen while
-        // any SLA repair went unmet this tick
+        // any SLA repair went unmet this tick. With no unmet repair
+        // every repair mover was decided above, so the economic heaps
+        // (non-repair movers) cover exactly the reference's remainder.
         if !unmet_repair {
-            let mut rest: Vec<usize> = (0..n)
-                .filter(|&i| verdicts[i] == Verdict::DeniedBudget)
-                .collect();
-            rest.sort_by(|&a, &b| Self::knapsack_key(&proposals[a], &proposals[b]));
-            for i in rest {
-                try_admit!(i, Verdict::Admitted, Verdict::AdmittedDegraded, true, false);
+            if self.indexed {
+                for rank in (0..3).rev() {
+                    while let Some(k) = econ_heaps[rank].pop() {
+                        let i = k.idx;
+                        if verdicts[i] != Verdict::DeniedBudget {
+                            continue;
+                        }
+                        try_admit!(i, Verdict::Admitted, Verdict::AdmittedDegraded, true, false);
+                    }
+                }
+            } else {
+                let mut rest: Vec<usize> = (0..n)
+                    .filter(|&i| verdicts[i] == Verdict::DeniedBudget)
+                    .collect();
+                rest.sort_by(|&a, &b| Self::knapsack_key(&proposals[a], &proposals[b]));
+                for i in rest {
+                    try_admit!(i, Verdict::Admitted, Verdict::AdmittedDegraded, true, false);
+                }
             }
         }
 
@@ -589,8 +845,8 @@ impl BudgetArbiter {
         proposals: &[Proposal],
         verdicts: Vec<Verdict>,
         chosen: Vec<Option<usize>>,
-        base_spend: f32,
-        spend: f32,
+        base_spend: f64,
+        spend: f64,
     ) -> Admission {
         let admitted_moves = proposals
             .iter()
@@ -613,8 +869,8 @@ impl BudgetArbiter {
             shed_moves: verdicts.iter().filter(|&&v| v == Verdict::AdmittedShed).count(),
             verdicts,
             chosen,
-            base_spend,
-            projected_spend: spend,
+            base_spend: base_spend as f32,
+            projected_spend: spend as f32,
             admitted_moves,
             denied_moves,
         }

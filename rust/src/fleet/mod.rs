@@ -55,12 +55,52 @@
 //! tenant pays for compute without serving. The serve-then-move and
 //! projected-spend invariants hold unchanged because every lifecycle
 //! state prices exactly what the next tick will pay.
+//!
+//! ## Activity-proportional planning (PR 7)
+//!
+//! At fleet scale the dominant cost is no longer the resource math but
+//! the control loop itself: re-proposing all N tenants and re-sorting
+//! all N proposals every tick is O(fleet), even when almost nothing
+//! changed. The fleet therefore runs a **dirty queue** by default
+//! ([`Self::set_dirty_planning`] to opt out): a tenant whose last
+//! proposal was a cacheable hold keeps a `HoldTicket` and *replays* it
+//! instead of re-running its policy, for as long as every member of
+//! the ticket's **invalidation set** is unchanged —
+//!
+//! * observed demand (bitwise),
+//! * serverless lifecycle, including imminent park-downs,
+//! * SLA-violation flag and denial streak (so fairness escalation
+//!   still advances),
+//! * the budget hint, up to *materiality*: hints whose headroom
+//!   exceeds the policy's own maximum candidate cost delta cannot
+//!   change its scoring, so they count as equivalent,
+//! * the policy and substrate themselves (swapping either dirties the
+//!   tenant, as do placement node failures and actuated moves).
+//!
+//! Every ticket also expires after [`REFRESH_K`] ticks — a mandatory
+//! re-propose safety net bounding how long any staleness the set
+//! missed can survive. Only holds from pure ([`cacheable`]) policies
+//! are ever cached, and the cache may only skip work, never change
+//! answers: `tests/prop_dirty.rs` pins the dirty-queue fleet
+//! decision-identical (verdicts, configurations, spend trajectory) to
+//! an always-replan fleet across wake storms, node failures, and
+//! adaptive envelopes. Admission indexes only the proposals that can
+//! move (per-class heaps in [`BudgetArbiter`]) and base spend comes
+//! from an incrementally maintained [`arbiter::SpendLedger`], so
+//! per-tick planning cost tracks the *active* tenant count — the
+//! 10240-tenant mostly-idle bench in `benches/fleet.rs` pins it
+//! sublinear in fleet size. [`FleetTick::planning_micros`] and
+//! [`FleetTick::fresh_proposals`] surface the per-tick cost.
+//!
+//! [`cacheable`]: crate::policy::Policy::cacheable
 
 pub mod arbiter;
 pub mod report;
 pub mod tenant;
 
-pub use arbiter::{Admission, BudgetArbiter, ClassEnvelopes, EnvelopeAdapter, Verdict};
+pub use arbiter::{
+    Admission, BudgetArbiter, ClassEnvelopes, EnvelopeAdapter, SpendLedger, Verdict,
+};
 pub use report::{ClassReport, FleetReport, TenantReport};
 pub use tenant::{
     Candidate, ForecastKind, PriorityClass, Proposal, Tenant, TenantPlanner, TenantSpec,
@@ -75,6 +115,7 @@ use crate::plane::Configuration;
 use crate::policy::BudgetHint;
 use crate::serverless::{Lifecycle, ServerlessParams, StorageService};
 use crate::surfaces::SurfaceModel;
+use crate::workload::XorShift64;
 
 /// Tolerance for float drift when comparing fleet spend to the budget.
 /// Spend is re-summed from tenant configurations every tick while the
@@ -85,8 +126,22 @@ use crate::surfaces::SurfaceModel;
 /// exactly (no epsilon): the arbiter never *plans* past the budget.
 pub const BUDGET_EPS: f32 = 1e-3;
 
+/// Default mandatory re-propose interval for cached holds (ticks): the
+/// dirty queue's safety net against invalidation-set gaps. 256 keeps
+/// the steady-state refresh load under 0.4% of the fleet per tick —
+/// small enough that the 10k-tenant bench's 4× planning-work bound
+/// holds with slack — while bounding any missed staleness to ~4 hours
+/// of 1-minute ticks. [`FleetSimulator::set_refresh_k`] overrides.
+pub const REFRESH_K: usize = 256;
+
 /// One tick's fleet-level outcome.
-#[derive(Debug, Clone, Copy, PartialEq)]
+///
+/// Equality ignores [`Self::planning_micros`] (wall-clock, varies run
+/// to run) and [`Self::fresh_proposals`] (a dirty-queue fleet proposes
+/// less than an always-replan fleet *by design*), so determinism tests
+/// and the dirty-vs-full equivalence property can compare tick
+/// timelines directly on what the control plane decided.
+#[derive(Debug, Clone, Copy)]
 pub struct FleetTick {
     pub step: usize,
     /// Σ hourly cost of the configurations that served this tick.
@@ -110,6 +165,34 @@ pub struct FleetTick {
     /// Cold-start windows that closed at the start of this tick
     /// (`Event::ResumeEnd` fired from the fleet calendar).
     pub resume_ends: usize,
+    /// Tenants that actually ran [`crate::policy::Policy::propose`]
+    /// this tick (the rest replayed cached holds) — the
+    /// machine-independent proxy for per-tick planning work.
+    pub fresh_proposals: usize,
+    /// Wall-clock microseconds spent planning this tick (budget hints +
+    /// propose/replay + admission), from the fleet's monotonic clock
+    /// ([`FleetSimulator::set_planning_clock`] injects a deterministic
+    /// one for tests).
+    pub planning_micros: u64,
+}
+
+impl PartialEq for FleetTick {
+    fn eq(&self, o: &Self) -> bool {
+        // planning_micros and fresh_proposals are measurement, not
+        // decision — see the struct docs
+        self.step == o.step
+            && self.spend == o.spend
+            && self.projected_spend == o.projected_spend
+            && self.admitted_moves == o.admitted_moves
+            && self.denied_moves == o.denied_moves
+            && self.rescues == o.rescues
+            && self.rescue_denials == o.rescue_denials
+            && self.degraded_moves == o.degraded_moves
+            && self.shed_moves == o.shed_moves
+            && self.suspended == o.suspended
+            && self.resuming == o.resuming
+            && self.resume_ends == o.resume_ends
+    }
 }
 
 /// A complete fleet run: the per-tick timeline plus the final report.
@@ -168,10 +251,30 @@ pub struct FleetSimulator {
     /// Top-k explain capture (0 = off).
     explain_k: usize,
     explain: Vec<ExplainRecord>,
+    /// Reservoir cap on the explain log (0 = unbounded): at scale the
+    /// log would grow O(moving tenants · ticks), so the CLI's
+    /// `--explain-sample` bounds it to a uniform sample.
+    explain_cap: usize,
+    /// Move records offered to the explain log so far (reservoir
+    /// denominator).
+    explain_seen: u64,
+    /// Deterministic reservoir RNG (fixed seed: sampled runs replay).
+    explain_rng: XorShift64,
     /// Shared storage tier (Some = serverless mode).
     serverless: Option<StorageService>,
     /// Fleet-level DES calendar: cold-start windows live here.
     calendar: EventCalendar,
+    /// Dirty-queue planning (default on): tenants replay cached holds
+    /// while their invalidation set is untouched (module docs).
+    dirty_planning: bool,
+    /// Mandatory re-propose interval for cached holds.
+    refresh_k: usize,
+    /// Incrementally maintained per-slot `cost_from` ledger feeding
+    /// [`BudgetArbiter::admit_ledgered`] in dirty mode.
+    ledger: SpendLedger,
+    /// Monotonic microsecond source for `planning_micros`; injectable
+    /// so tests comparing tick timelines stay deterministic.
+    clock: Box<dyn FnMut() -> u64>,
     step: usize,
 }
 
@@ -205,14 +308,22 @@ impl FleetSimulator {
                 t
             })
             .collect();
+        let epoch = std::time::Instant::now();
         Self {
             tenants,
             arbiter,
             adapter: None,
             explain_k: 0,
             explain: Vec::new(),
+            explain_cap: 0,
+            explain_seen: 0,
+            explain_rng: XorShift64::new(0x5EED_EC0A),
             serverless: None,
             calendar: EventCalendar::new(),
+            dirty_planning: true,
+            refresh_k: REFRESH_K,
+            ledger: SpendLedger::new(),
+            clock: Box::new(move || epoch.elapsed().as_micros() as u64),
             step: 0,
         }
     }
@@ -259,6 +370,71 @@ impl FleetSimulator {
     /// [`Self::enable_explain`] was called before running).
     pub fn explain_log(&self) -> &[ExplainRecord] {
         &self.explain
+    }
+
+    /// Cap the explain log at `cap` records via deterministic reservoir
+    /// sampling (0 restores the unbounded log): every move record ever
+    /// offered has equal probability of surviving, so a 10k-tenant run
+    /// keeps a representative sample in O(cap) memory instead of
+    /// O(moving tenants × ticks). CLI `fleet --explain-sample`.
+    pub fn set_explain_sample(&mut self, cap: usize) {
+        self.explain_cap = cap;
+    }
+
+    /// The reservoir cap (0 = unbounded), echoed into the explain-v1
+    /// JSON as `sample_cap` so consumers know the steps are a sample.
+    pub fn explain_sample_cap(&self) -> usize {
+        self.explain_cap
+    }
+
+    /// Move records offered to the explain log across the run — the
+    /// reservoir denominator (equals the log length when unbounded).
+    pub fn explain_seen(&self) -> u64 {
+        self.explain_seen
+    }
+
+    /// Reservoir-insert one explain record (plain push when unbounded).
+    fn push_explain(&mut self, r: ExplainRecord) {
+        self.explain_seen += 1;
+        if self.explain_cap == 0 || self.explain.len() < self.explain_cap {
+            self.explain.push(r);
+        } else {
+            // algorithm R: replace a random slot with probability
+            // cap/seen, keeping the sample uniform over all offers
+            let j = (self.explain_rng.next_u64() % self.explain_seen) as usize;
+            if j < self.explain_cap {
+                self.explain[j] = r;
+            }
+        }
+    }
+
+    /// Toggle dirty-queue planning (on by default; module docs). `false`
+    /// restores the always-replan loop — the reference behavior
+    /// `tests/prop_dirty.rs` pins the dirty queue against, and the CLI
+    /// `--no-dirty-planning` escape hatch.
+    pub fn set_dirty_planning(&mut self, on: bool) {
+        self.dirty_planning = on;
+    }
+
+    /// Whether the dirty queue is active.
+    pub fn dirty_planning(&self) -> bool {
+        self.dirty_planning
+    }
+
+    /// Override the mandatory re-propose interval for cached holds
+    /// (default [`REFRESH_K`]; must be ≥ 1 — 1 disables caching
+    /// entirely, every tick is a refresh).
+    pub fn set_refresh_k(&mut self, k: usize) {
+        assert!(k >= 1, "refresh interval must be at least 1 tick");
+        self.refresh_k = k;
+    }
+
+    /// Inject the monotonic microsecond source behind
+    /// [`FleetTick::planning_micros`] (tests inject a counter so tick
+    /// timelines stay bit-for-bit reproducible; the default is process
+    /// wall-clock).
+    pub fn set_planning_clock(&mut self, clock: Box<dyn FnMut() -> u64>) {
+        self.clock = clock;
     }
 
     /// Placement-mode fleet: co-locate tenants on shared clusters under
@@ -376,8 +552,14 @@ impl FleetSimulator {
     }
 
     /// Current fleet spend (Σ hourly cost of serving configurations).
+    /// Accumulated in f64 — an f32 running sum loses real pennies by
+    /// 10k tenants — and narrowed at the edge.
     pub fn spend(&self) -> f32 {
-        self.tenants.iter().map(Tenant::cost).sum()
+        self.spend_f64() as f32
+    }
+
+    fn spend_f64(&self) -> f64 {
+        self.tenants.iter().map(|t| t.cost() as f64).sum()
     }
 
     /// Longest tenant trace (the natural run length).
@@ -394,13 +576,15 @@ impl FleetSimulator {
         if !self.arbiter.planning {
             return vec![None; self.tenants.len()];
         }
-        let spend = self.spend();
-        let fleet_headroom = (self.arbiter.budget - spend).max(0.0);
+        let spend = self.spend_f64();
+        let fleet_headroom = (self.arbiter.budget as f64 - spend).max(0.0) as f32;
         let mut class_spend = [0.0f32; 3];
         if self.arbiter.envelopes.is_some() {
+            let mut cs = [0.0f64; 3];
             for t in &self.tenants {
-                class_spend[t.class().rank() as usize] += t.cost();
+                cs[t.class().rank() as usize] += t.cost() as f64;
             }
+            class_spend = [cs[0] as f32, cs[1] as f32, cs[2] as f32];
         }
         self.tenants
             .iter()
@@ -448,24 +632,56 @@ impl FleetSimulator {
                 resume_ends += 1;
             }
         }
-        let mut spend = 0.0f32;
+        let mut spend = 0.0f64;
         for tn in &mut self.tenants {
-            spend += tn.serve(t).cost;
+            spend += tn.serve(t).cost as f64;
         }
 
+        // planning = hints + propose/replay + admission; the window is
+        // measured on the injectable monotonic clock
+        let planning_start = (self.clock)();
         let hints = self.hints();
+        // dirty queue: a tenant whose hold ticket's invalidation set is
+        // untouched replays its cached proposal; everyone else runs the
+        // policy and re-records their spend-ledger slot (clean slots
+        // keep bitwise-identical entries, so the ledger fold equals the
+        // full proposal walk and decisions cannot differ)
+        let dirty = self.dirty_planning && self.arbiter.planning;
+        let refresh_k = self.refresh_k;
+        let ledger = &mut self.ledger;
+        let mut fresh_proposals = 0usize;
         let proposals: Vec<Proposal> = self
             .tenants
             .iter_mut()
             .zip(hints)
-            .map(|(tn, hint)| tn.propose(t, hint))
+            .enumerate()
+            .map(|(i, (tn, hint))| {
+                if dirty {
+                    if let Some(p) = tn.replay_hold(t, hint, refresh_k) {
+                        return p;
+                    }
+                }
+                fresh_proposals += 1;
+                let p = tn.propose(t, hint);
+                ledger.record(i, p.cost_from, p.class);
+                p
+            })
             .collect();
-        let adm = self.arbiter.admit(&proposals);
+        let adm = if dirty {
+            self.arbiter.admit_ledgered(&proposals, &self.ledger)
+        } else {
+            self.arbiter.admit(&proposals)
+        };
+        let planning_micros = (self.clock)().saturating_sub(planning_start);
 
+        // collect this tick's explain records before actuation (the
+        // reservoir may scatter them, so resume windows are stamped on
+        // the batch below, not by scanning the log tail)
+        let mut tick_records: Vec<ExplainRecord> = Vec::new();
         if self.explain_k > 0 {
             for (p, v) in proposals.iter().zip(&adm.verdicts) {
                 if p.is_move() {
-                    self.explain.push(ExplainRecord {
+                    tick_records.push(ExplainRecord {
                         step: t,
                         tenant: p.tenant,
                         class: p.class,
@@ -510,12 +726,16 @@ impl FleetSimulator {
         }
 
         // stamp cold-start windows opened this tick into the explain
-        // records (wakes actuate after the capture above)
+        // records (wakes actuate after the capture above), then hand
+        // the batch to the reservoir
         if self.explain_k > 0 {
-            for r in self.explain.iter_mut().rev().take_while(|r| r.step == t) {
+            for r in &mut tick_records {
                 if let Some(Lifecycle::Resuming { until }) = self.tenants[r.tenant].lifecycle() {
                     r.resume_end = Some(until);
                 }
+            }
+            for r in tick_records {
+                self.push_explain(r);
             }
         }
 
@@ -548,7 +768,7 @@ impl FleetSimulator {
         self.step += 1;
         FleetTick {
             step: t,
-            spend,
+            spend: spend as f32,
             projected_spend: adm.projected_spend,
             admitted_moves: adm.admitted_moves,
             denied_moves: adm.denied_moves,
@@ -559,6 +779,8 @@ impl FleetSimulator {
             suspended,
             resuming,
             resume_ends,
+            fresh_proposals,
+            planning_micros,
         }
     }
 

@@ -281,15 +281,18 @@ pub fn csv(report: &FleetReport) -> String {
 }
 
 /// Spend timeline CSV (`step,spend,projected,admitted,denied,rescues,
-/// degraded,sheds,suspended,resuming,resume_ends`).
+/// degraded,sheds,suspended,resuming,resume_ends,fresh_proposals,
+/// planning_micros` — the last two are the PR-7 planning-cost columns:
+/// how many tenants actually re-proposed and how long the planning
+/// phase took).
 pub fn ticks_csv(ticks: &[FleetTick]) -> String {
     let mut out = String::from(
-        "step,spend,projected_spend,admitted,denied,rescues,degraded,sheds,suspended,resuming,resume_ends\n",
+        "step,spend,projected_spend,admitted,denied,rescues,degraded,sheds,suspended,resuming,resume_ends,fresh_proposals,planning_micros\n",
     );
     for t in ticks {
         let _ = writeln!(
             out,
-            "{},{:.4},{:.4},{},{},{},{},{},{},{},{}",
+            "{},{:.4},{:.4},{},{},{},{},{},{},{},{},{},{}",
             t.step,
             t.spend,
             t.projected_spend,
@@ -300,7 +303,9 @@ pub fn ticks_csv(ticks: &[FleetTick]) -> String {
             t.shed_moves,
             t.suspended,
             t.resuming,
-            t.resume_ends
+            t.resume_ends,
+            t.fresh_proposals,
+            t.planning_micros
         );
     }
     out
@@ -399,6 +404,11 @@ mod tests {
             assert!(c.contains(name));
         }
         assert_eq!(csv(&res.report).lines().count(), 4);
-        assert_eq!(ticks_csv(&res.ticks).lines().count(), 51);
+        let tc = ticks_csv(&res.ticks);
+        assert_eq!(tc.lines().count(), 51);
+        let header = tc.lines().next().unwrap();
+        assert!(header.ends_with("fresh_proposals,planning_micros"));
+        // the first tick proposes the whole fleet (nothing cached yet)
+        assert_eq!(res.ticks[0].fresh_proposals, 3);
     }
 }

@@ -119,6 +119,74 @@ impl TenantSpec {
 /// default, or forecast-driven lookahead over a boxed predictor.
 pub type TenantPlanner = Box<dyn Policy + Send>;
 
+/// A cached hold proposal plus the explicit invalidation set that
+/// guards its replay — the heart of the fleet's dirty queue.
+///
+/// `Tenant::propose` issues a ticket whenever it returns a *hold*
+/// (empty candidate list) that a pure planner would reproduce verbatim,
+/// and [`Tenant::replay_hold`] hands the cached proposal back only
+/// while every guarded input still matches:
+///
+/// * **age** — `issued_at` plus the fleet's `refresh_k` bounds ticket
+///   lifetime (the mandatory K-tick re-propose safety net);
+/// * **lifecycle** — any serverless edge (`Active → Draining →
+///   Suspended → Resuming`, including the `Resuming { until }` payload)
+///   invalidates;
+/// * **violation flag / denial streak** — both are stamped into the
+///   proposal the arbiter sees, and a violating *active* hold must
+///   re-run to advance the escalation counter, so exact equality is
+///   required;
+/// * **workload** — bitwise equality for active tenants (the planner
+///   scores against it); parked tenants only need demand to stay at or
+///   below the wake threshold, and draining/cold-starting holds ignore
+///   demand entirely;
+/// * **budget hint** — equal effective headroom, or both hints roomy
+///   enough to afford `max_move_delta` (the priciest enumerated
+///   neighbor), in which case no candidate's `BUDGET_PENALTY` term can
+///   differ and the scored neighborhood is bitwise unchanged;
+/// * **idle detection** — an active serverless hold is replayed only
+///   while `idle_enough()` stays false, because flipping true would
+///   turn the fresh hold into a suspend candidate.
+///
+/// Anything that actuates state (`apply`, resume edges, planner or
+/// substrate swaps, scheduled failures) drops the ticket outright. The
+/// cache may only skip work, never change answers: a replayed hold is
+/// bit-identical to what a fresh propose would have produced, which
+/// `tests/prop_dirty.rs` pins fleet-wide.
+#[derive(Debug, Clone)]
+struct HoldTicket {
+    issued_at: usize,
+    lifecycle: Option<Lifecycle>,
+    violating: bool,
+    streak: usize,
+    workload: WorkloadPoint,
+    hint: Option<BudgetHint>,
+    /// Max `cost(candidate) - cost(current)` over the planner's full
+    /// scored neighborhood: if both the cached and the offered hint
+    /// afford this, every `BudgetHint::fits` test resolves identically.
+    max_move_delta: f32,
+    proposal: Proposal,
+}
+
+/// Budget hints are equivalent for replay when the effective headroom
+/// (`min(fleet, class)` — the only value [`BudgetHint::fits`] reads) is
+/// bitwise equal, or when both hints afford the priciest enumerated
+/// move so no candidate's penalty term can differ.
+fn hint_equivalent(now: Option<BudgetHint>, then: Option<BudgetHint>, max_delta: f32) -> bool {
+    match (now, then) {
+        (None, None) => true,
+        (Some(a), Some(b)) => {
+            a.headroom().to_bits() == b.headroom().to_bits()
+                || (a.headroom() >= max_delta && b.headroom() >= max_delta)
+        }
+        _ => false,
+    }
+}
+
+fn workload_bits_eq(a: WorkloadPoint, b: WorkloadPoint) -> bool {
+    a.lambda_req.to_bits() == b.lambda_req.to_bits() && a.lambda_w.to_bits() == b.lambda_w.to_bits()
+}
+
 /// Runtime state of one tenant cluster.
 pub struct Tenant {
     pub id: usize,
@@ -160,6 +228,8 @@ pub struct Tenant {
     /// Segments archived at each suspension; merged with the live
     /// segment for fleet p95/p99 across suspend/resume histories.
     hist_segments: Vec<LatencyHistogram>,
+    /// Cached hold + invalidation set for the fleet's dirty queue.
+    ticket: Option<HoldTicket>,
 }
 
 impl Tenant {
@@ -192,6 +262,7 @@ impl Tenant {
             serverless: None,
             hist: LatencyHistogram::new(HIST_FLOOR),
             hist_segments: Vec::new(),
+            ticket: None,
         }
     }
 
@@ -231,6 +302,7 @@ impl Tenant {
     /// policies; [`Self::enable_forecast`] is the production path).
     pub fn set_planner(&mut self, planner: TenantPlanner) {
         self.planner = planner;
+        self.ticket = None;
     }
 
     /// The shared [`ClusterParams`] rescaled to this tenant's SLA: the
@@ -253,6 +325,7 @@ impl Tenant {
             sub.apply(self.current);
         }
         self.substrate = Some(sub);
+        self.ticket = None;
     }
 
     /// Back this tenant with its own sampling-engine cluster
@@ -296,6 +369,7 @@ impl Tenant {
     /// moves become available to the policy pipeline.
     pub fn enable_serverless(&mut self, params: ServerlessParams, working_set_gb: f32) {
         self.serverless = Some(ServerlessState::new(params, working_set_gb));
+        self.ticket = None;
     }
 
     /// The tenant's serverless state, if it is in the serverless tier.
@@ -325,6 +399,7 @@ impl Tenant {
         debug_assert_eq!(s.lifecycle, Lifecycle::Suspended);
         s.lifecycle = Lifecycle::Resuming { until };
         s.resumes += 1;
+        self.ticket = None;
     }
 
     /// Close the cold-start window (fired by the fleet calendar's
@@ -335,6 +410,7 @@ impl Tenant {
             if matches!(s.lifecycle, Lifecycle::Resuming { .. }) {
                 s.lifecycle = Lifecycle::Active;
                 s.reset_idle();
+                self.ticket = None;
             }
         }
     }
@@ -356,6 +432,9 @@ impl Tenant {
     /// substrate's event calendar, if it has one (DES failure
     /// injection). Returns whether the failure was scheduled.
     pub fn schedule_node_failure(&mut self, at: f64, node: usize) -> bool {
+        // the failure will surface through serve() as measured
+        // violations; conservatively dirty the tenant right away
+        self.ticket = None;
         self.substrate.as_mut().map_or(false, |s| s.schedule_failure(at, node))
     }
 
@@ -552,6 +631,7 @@ impl Tenant {
     /// outright.
     pub fn propose(&mut self, t: usize, hint: Option<BudgetHint>) -> Proposal {
         let w = self.workload_at(t);
+        self.ticket = None;
         if let Some(s) = &mut self.serverless {
             // a suspend intent not actuated last tick (denied, or the
             // fleet skipped actuation) is stale — never carry it over
@@ -561,8 +641,14 @@ impl Tenant {
                 Lifecycle::Active => {}
                 Lifecycle::Suspended if w.lambda_req > idle => return self.wake_proposal(w),
                 // draining, cold-starting, or suspended-and-idle
-                // tenants cannot move this tick
-                _ => return self.lifecycle_hold(),
+                // tenants cannot move this tick; the hold is cacheable
+                // — it ignores the planner, the budget hint, and (past
+                // the parked wake threshold) demand
+                _ => {
+                    let p = self.lifecycle_hold();
+                    self.issue_ticket(t, w, hint, 0.0, &p);
+                    return p;
+                }
             }
         }
         // the context borrows a cheap Arc clone + copied SLA so `self`
@@ -583,6 +669,14 @@ impl Tenant {
         // neighbor, budget-blind myopic scores included
         let planned = self.planner.propose(current, w, &ctx);
         let current_score = planned.current_score;
+        // priciest enumerated neighbor, for the hold ticket's
+        // hint-equivalence guard (any hint affording this leaves every
+        // candidate's budget penalty at zero)
+        let max_move_delta = planned
+            .candidates
+            .iter()
+            .map(|c| c.cost_to - planned.cost_from)
+            .fold(0.0f32, f32::max);
         // row-major view of the scored neighborhood, so ties in the
         // alternative/shed/stone walks keep the kernel's candidate
         // order exactly as the pre-PR-5 re-enumeration did
@@ -729,7 +823,7 @@ impl Tenant {
                 });
             }
         }
-        Proposal {
+        let proposal = Proposal {
             tenant: self.id,
             class: self.spec.class,
             from: current,
@@ -741,7 +835,90 @@ impl Tenant {
             fallback: planned.fallback,
             candidates,
             sheds,
+        };
+        // cache clean pure-planner holds for the dirty queue; violating
+        // holds are never cached (the escalation counter must advance),
+        // and a stateful planner must be re-run every tick
+        if proposal.candidates.is_empty() && !self.last_violation && self.planner.cacheable() {
+            self.issue_ticket(t, w, hint, max_move_delta, &proposal);
         }
+        proposal
+    }
+
+    /// Cache a hold proposal for [`Tenant::replay_hold`].
+    fn issue_ticket(
+        &mut self,
+        t: usize,
+        w: WorkloadPoint,
+        hint: Option<BudgetHint>,
+        max_move_delta: f32,
+        proposal: &Proposal,
+    ) {
+        debug_assert!(proposal.candidates.is_empty(), "only holds are cached");
+        self.ticket = Some(HoldTicket {
+            issued_at: t,
+            lifecycle: self.lifecycle(),
+            violating: self.last_violation,
+            streak: self.denial_streak,
+            workload: w,
+            hint,
+            max_move_delta,
+            proposal: proposal.clone(),
+        });
+    }
+
+    /// Replay the cached hold for fleet tick `t` if its invalidation
+    /// set ([`HoldTicket`]) is untouched; `None` means the tenant is
+    /// dirty and must re-run [`Tenant::propose`]. Replay mirrors the
+    /// fresh path's bookkeeping (stale suspend intents dropped, the
+    /// escalation counter of a clean active hold reset) so tenant state
+    /// evolves bit-identically to an always-replan fleet.
+    pub fn replay_hold(
+        &mut self,
+        t: usize,
+        hint: Option<BudgetHint>,
+        refresh_k: usize,
+    ) -> Option<Proposal> {
+        let w = self.workload_at(t);
+        let tk = self.ticket.as_ref()?;
+        if t - tk.issued_at >= refresh_k
+            || self.lifecycle() != tk.lifecycle
+            || self.last_violation != tk.violating
+            || self.denial_streak != tk.streak
+        {
+            return None;
+        }
+        let valid = match tk.lifecycle {
+            // parked: a fresh propose only looks at whether demand
+            // crosses the wake threshold
+            Some(Lifecycle::Suspended) => {
+                let idle =
+                    self.serverless.as_ref().expect("parked implies serverless").params.idle_lambda;
+                w.lambda_req <= idle
+            }
+            // draining / cold-starting holds ignore demand entirely
+            Some(Lifecycle::Draining) | Some(Lifecycle::Resuming { .. }) => true,
+            // active (always-on or serverless): the planner scores this
+            // exact workload under this hint, and a non-repair hold
+            // turning idle-capable would become a suspend candidate
+            None | Some(Lifecycle::Active) => {
+                workload_bits_eq(w, tk.workload)
+                    && hint_equivalent(hint, tk.hint, tk.max_move_delta)
+                    && (tk.proposal.emergency
+                        || self.serverless.as_ref().map_or(true, |s| !s.idle_enough()))
+            }
+        };
+        if !valid {
+            return None;
+        }
+        if let Some(s) = &mut self.serverless {
+            s.pending_suspend = false;
+        }
+        let tk = self.ticket.as_ref().expect("validity checked above");
+        if matches!(tk.lifecycle, None | Some(Lifecycle::Active)) {
+            self.violating_holds = 0;
+        }
+        Some(tk.proposal.clone())
     }
 
     /// The emergency repair proposal of a suspended tenant seeing real
@@ -798,6 +975,7 @@ impl Tenant {
     /// Actuate an admitted move (resets the fairness counter).
     pub fn apply(&mut self, to: Configuration) {
         assert!(self.model.plane().contains(&to));
+        self.ticket = None;
         if let Some(s) = &mut self.serverless {
             if s.pending_suspend && to == self.current {
                 // the admitted "move" was this tick's suspend

@@ -117,6 +117,19 @@ COMMANDS:
                                   (diagonal-scale/explain-v1 with the
                                   additive lifecycle/resume_end
                                   fields; requires --explain)
+                [--explain-sample <n>] cap the explain log at n records
+                                  via deterministic reservoir sampling
+                                  (0 = unbounded; JSON dumps then carry
+                                  the additive sample_cap/seen fields)
+                [--dirty-planning <bool>] activity-proportional control
+                                  plane: clean tenants replay cached
+                                  holds instead of re-proposing
+                                  (default true; decisions are
+                                  bit-identical either way).
+                                  `--no-dirty-planning` is shorthand
+                                  for `--dirty-planning false`
+                [--refresh-k <n>] mandatory re-propose interval for
+                                  cached holds, in ticks (default 256)
   placement   Cross-tenant bin-packing onto shared clusters: small
               tenants co-locate behind shared hosts (fair shares +
               contention knee), the packer replans on a cadence, and
@@ -312,6 +325,18 @@ fn main() -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
+    // the one bare (valueless) flag: rewrite it into the `--key value`
+    // shape the tiny parser expects
+    let argv: Vec<String> = argv
+        .iter()
+        .flat_map(|a| {
+            if a == "--no-dirty-planning" {
+                vec!["--dirty-planning".to_string(), "false".to_string()]
+            } else {
+                vec![a.clone()]
+            }
+        })
+        .collect();
     let args = Args::parse(&argv[1..])?;
     if let Some(c) = args.get("config") {
         config_path = Some(c.to_string());
@@ -582,8 +607,19 @@ fn main() -> Result<()> {
             if attach {
                 fleetsim.attach_substrates(&cfg, ClusterParams::default(), seed, kind);
             }
+            fleetsim.set_dirty_planning(args.parse_num("dirty-planning", true)?);
+            let refresh_k: usize = args.parse_num("refresh-k", fleet::REFRESH_K)?;
+            if refresh_k == 0 {
+                bail!("--refresh-k must be at least 1");
+            }
+            fleetsim.set_refresh_k(refresh_k);
             let explain: usize = args.parse_num("explain", 0)?;
             fleetsim.enable_explain(explain);
+            let explain_sample: usize = args.parse_num("explain-sample", 0)?;
+            if explain_sample > 0 && explain == 0 {
+                bail!("--explain-sample requires --explain <k>");
+            }
+            fleetsim.set_explain_sample(explain_sample);
             let res = fleetsim.run(steps);
             if explain > 0 {
                 for r in fleetsim.explain_log() {
@@ -605,7 +641,14 @@ fn main() -> Result<()> {
                     );
                 }
                 if let Some(path) = args.get("explain-out") {
-                    std::fs::write(path, report::fleet_explain_json(fleetsim.explain_log()))?;
+                    std::fs::write(
+                        path,
+                        report::fleet_explain_json_sampled(
+                            fleetsim.explain_log(),
+                            fleetsim.explain_sample_cap(),
+                            fleetsim.explain_seen(),
+                        ),
+                    )?;
                     println!("wrote {path} ({})", report::EXPLAIN_SCHEMA);
                 }
             } else if args.get("explain-out").is_some() {
@@ -621,9 +664,9 @@ fn main() -> Result<()> {
                     String::new()
                 };
                 println!(
-                    "tick {:>4}  spend {:>7.2} / {budget:<7.2}  admitted {:>2}  denied {:>2}  rescues {}  degraded {}  sheds {}{sl}",
+                    "tick {:>4}  spend {:>7.2} / {budget:<7.2}  admitted {:>2}  denied {:>2}  rescues {}  degraded {}  sheds {}  fresh {:>4}  planning_micros {:>6}{sl}",
                     t.step, t.spend, t.admitted_moves, t.denied_moves, t.rescues,
-                    t.degraded_moves, t.shed_moves
+                    t.degraded_moves, t.shed_moves, t.fresh_proposals, t.planning_micros
                 );
             }
             if let Some(storage) = fleetsim.storage() {

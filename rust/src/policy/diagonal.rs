@@ -82,6 +82,10 @@ impl Policy for DiagonalScale {
         }
     }
 
+    fn cacheable(&self) -> bool {
+        true
+    }
+
     fn propose(
         &mut self,
         current: Configuration,

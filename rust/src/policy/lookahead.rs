@@ -111,6 +111,10 @@ impl Policy for Lookahead {
         "lookahead"
     }
 
+    fn cacheable(&self) -> bool {
+        true
+    }
+
     fn propose(
         &mut self,
         current: Configuration,

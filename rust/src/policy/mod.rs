@@ -166,6 +166,20 @@ pub trait Policy {
     ) -> Decision {
         self.propose(current, workload, ctx).decision()
     }
+
+    /// Whether [`Policy::propose`] is a pure function of
+    /// `(current, workload, ctx)` — no internal state observed or
+    /// mutated — so the fleet's dirty queue may replay a cached hold
+    /// instead of re-invoking it when none of those inputs changed.
+    ///
+    /// Defaults to `false`: a stateful policy (or any external
+    /// implementor that doesn't audit its own purity) is re-run every
+    /// tick, which is always correct, merely slower.
+    /// [`ForecastLookahead`] keeps the default because `propose` feeds
+    /// its demand predictor; skipping calls would change its forecasts.
+    fn cacheable(&self) -> bool {
+        false
+    }
 }
 
 /// The paper IV.D rebalance penalty between two configurations:
@@ -187,6 +201,10 @@ pub struct StaticPolicy;
 impl Policy for StaticPolicy {
     fn name(&self) -> &'static str {
         "static"
+    }
+
+    fn cacheable(&self) -> bool {
+        true
     }
 
     fn propose(

@@ -18,6 +18,10 @@ impl Policy for Oracle {
         "oracle"
     }
 
+    fn cacheable(&self) -> bool {
+        true
+    }
+
     fn propose(
         &mut self,
         current: Configuration,

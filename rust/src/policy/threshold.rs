@@ -42,6 +42,10 @@ impl Policy for Threshold {
         "threshold"
     }
 
+    fn cacheable(&self) -> bool {
+        true
+    }
+
     fn propose(
         &mut self,
         current: Configuration,

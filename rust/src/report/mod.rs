@@ -96,6 +96,16 @@ impl Surface {
 /// * `"resume_end"` — for admitted wakes, the tick at which the
 ///   cold-start window scheduled on the fleet's DES calendar closes;
 ///   absent on every other verdict.
+///
+/// PR 7 adds (additively, same rules) top-level sampling fields to
+/// fleet dumps produced under an explain reservoir
+/// (`fleet --explain-sample`):
+///
+/// * `"sample_cap"` — the reservoir size; `steps` is then a uniform
+///   sample of all move records, not the complete log.
+/// * `"seen"` — how many move records the run offered to the
+///   reservoir (the sampling denominator; equals `steps.length` on
+///   unsampled runs). Both are absent when the log is unbounded.
 pub const EXPLAIN_SCHEMA: &str = "diagonal-scale/explain-v1";
 
 fn json_escape(s: &str) -> String {
@@ -168,8 +178,24 @@ pub fn explain_json(policy: &str, steps: &[crate::simulator::StepExplain]) -> St
 /// tick of the cold-start window opened on the fleet's DES calendar
 /// (both omitted when absent, so pre-PR-6 consumers parse unchanged).
 pub fn fleet_explain_json(records: &[crate::fleet::ExplainRecord]) -> String {
+    fleet_explain_json_sampled(records, 0, records.len() as u64)
+}
+
+/// [`fleet_explain_json`] for reservoir-sampled logs: stamps the
+/// additive PR-7 `sample_cap` / `seen` fields so consumers know
+/// `steps` is a uniform sample (`sample_cap` = 0 means unbounded and
+/// emits neither field).
+pub fn fleet_explain_json_sampled(
+    records: &[crate::fleet::ExplainRecord],
+    sample_cap: usize,
+    seen: u64,
+) -> String {
     let mut out = String::new();
-    let _ = write!(out, "{{\"schema\":\"{EXPLAIN_SCHEMA}\",\"kind\":\"fleet\",\"steps\":[");
+    let _ = write!(out, "{{\"schema\":\"{EXPLAIN_SCHEMA}\",\"kind\":\"fleet\"");
+    if sample_cap > 0 {
+        let _ = write!(out, ",\"sample_cap\":{sample_cap},\"seen\":{seen}");
+    }
+    let _ = write!(out, ",\"steps\":[");
     for (i, r) in records.iter().enumerate() {
         if i > 0 {
             out.push(',');
@@ -506,6 +532,28 @@ mod tests {
         assert!(json.contains("\"resume_end\":"), "no cold-start window in explain");
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn sampled_fleet_explain_carries_reservoir_fields() {
+        let cfg = ModelConfig::default_paper();
+        let specs = crate::serverless::mostly_idle_specs(&cfg, 8, 0.75);
+        let mut fleet = crate::fleet::FleetSimulator::new(&cfg, specs, 1.0e6, 3);
+        fleet.enable_serverless(Default::default());
+        fleet.enable_explain(3);
+        fleet.set_explain_sample(5);
+        fleet.run(100);
+        let log = fleet.explain_log();
+        assert!(log.len() <= 5, "reservoir exceeded its cap: {}", log.len());
+        assert!(fleet.explain_seen() > 5, "scenario produced too few move records");
+        let json =
+            fleet_explain_json_sampled(log, fleet.explain_sample_cap(), fleet.explain_seen());
+        assert!(json.contains("\"sample_cap\":5"));
+        assert!(json.contains(&format!("\"seen\":{}", fleet.explain_seen())));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        // unsampled dumps stay bit-identical to the pre-PR-7 shape
+        let plain = fleet_explain_json(log);
+        assert!(!plain.contains("sample_cap"));
     }
 
     #[test]

@@ -48,7 +48,10 @@
 //! scenarios: a 64-tenant mostly-idle fleet where serverless mode cuts
 //! cost strictly below always-on packing at bounded extra violation
 //! ticks, and a correlated burst that wakes a suspended cohort at once
-//! without starving Gold tenants.
+//! without starving Gold tenants. [`sparse_activity_specs`] builds the
+//! scale scenario — a fixed active/bursty cohort in an arbitrarily
+//! large sea of permanently idle tenants — behind the 10k-tenant
+//! dirty-queue bench.
 
 use crate::config::ModelConfig;
 use crate::fleet::{PriorityClass, TenantSpec};
@@ -320,6 +323,41 @@ pub fn wake_storm_specs(
                 base.shifted(i * base.len() / active.max(1))
             } else {
                 b.spike(0.0, 30.0, storm_at, storm_width, steps)
+            };
+            TenantSpec::from_config(cfg, format!("t{i}"), class_for(i), trace)
+        })
+        .collect()
+}
+
+/// The fixed-activity scale scenario behind the 10k-tenant bench: the
+/// active set does **not** grow with fleet size. `active` tenants carry
+/// the phase-shifted paper trace, `bursty` tenants spike periodically
+/// (staggered, so they park, wake through priced cold starts, and park
+/// again), and every remaining tenant sees constant zero demand — it
+/// parks once after the initial idle window and never moves again.
+/// Under a dirty-queue control plane, per-tick planning work on this
+/// fleet must therefore approach `active + bursty + O(refresh)`
+/// regardless of `n` — the sublinearity the tier-2 scale test pins.
+pub fn sparse_activity_specs(
+    cfg: &ModelConfig,
+    n: usize,
+    active: usize,
+    bursty: usize,
+) -> Vec<TenantSpec> {
+    assert!(n > 0, "fleet needs at least one tenant");
+    assert!(active + bursty <= n, "cohorts cannot exceed the fleet");
+    let b = TraceBuilder::from_config(cfg);
+    let base = TraceBuilder::paper(cfg);
+    let steps = base.len();
+    (0..n)
+        .map(|i| {
+            let trace = if i < active {
+                base.shifted(i * steps / active.max(1))
+            } else if i < active + bursty {
+                let j = i - active;
+                b.spike(0.0, 30.0, (j * steps) / bursty.max(1), 3, steps)
+            } else {
+                b.constant(0.0, steps)
             };
             TenantSpec::from_config(cfg, format!("t{i}"), class_for(i), trace)
         })

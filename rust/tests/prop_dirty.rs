@@ -1,0 +1,459 @@
+//! Property tests pinning the activity-proportional control plane to
+//! the always-replan reference: a dirty-queue fleet must be
+//! **decision-identical** — same verdict counts, same spend trajectory
+//! (bitwise), same final configurations — across every scenario shape
+//! (idle fleets, wake storms, node failures, adaptive envelopes,
+//! sparse-activity mixes), while actually caching where the scenario
+//! guarantees cacheable holds. The indexed (heap-based) admission is
+//! differentially tested against the pre-index global-sort passes over
+//! random proposal batches, the [`SpendLedger`] fold against the
+//! per-tick spend walk, and the f64 spend accumulation against
+//! 10k-tenant catastrophic f32 drift.
+
+use diagonal_scale::cluster::{ClusterParams, SubstrateKind};
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::fleet::{
+    Admission, BudgetArbiter, Candidate, ClassEnvelopes, FleetSimulator, PriorityClass, Proposal,
+    SpendLedger, TenantSpec,
+};
+use diagonal_scale::placement::{small_tenant_specs, PlacementConfig, PlacementSim};
+use diagonal_scale::plane::Configuration;
+use diagonal_scale::serverless::{
+    mostly_idle_specs, sparse_activity_specs, wake_storm_specs, ServerlessParams,
+};
+use diagonal_scale::testkit::{forall, uniform};
+use diagonal_scale::workload::{TraceBuilder, XorShift64};
+
+// ---------------------------------------------------------------------
+// dirty queue vs always-replan: decision identity per scenario shape
+// ---------------------------------------------------------------------
+
+/// Tick two identically-built fleets side by side — one with the dirty
+/// queue on (the default), one forced to re-propose every tenant every
+/// tick — and require identical tick timelines (FleetTick equality
+/// covers verdict counts and the bitwise spend trajectory; it excludes
+/// `fresh_proposals`/`planning_micros` by design), identical final
+/// configurations, and identical fairness bookkeeping. When
+/// `require_caching` the scenario guarantees cacheable holds, so the
+/// dirty fleet must have skipped a strict majority of nothing — just
+/// strictly fewer fresh proposals than the reference.
+fn assert_decision_identical(
+    mut dirty: FleetSimulator,
+    mut full: FleetSimulator,
+    steps: usize,
+    require_caching: bool,
+    label: &str,
+) {
+    dirty.set_dirty_planning(true);
+    full.set_dirty_planning(false);
+    let (mut dirty_fresh, mut full_fresh) = (0usize, 0usize);
+    for s in 0..steps {
+        let a = dirty.tick();
+        let b = full.tick();
+        assert_eq!(a, b, "{label}: tick {s} diverged (dirty {a:?} vs full {b:?})");
+        dirty_fresh += a.fresh_proposals;
+        full_fresh += b.fresh_proposals;
+    }
+    assert_eq!(
+        dirty.spend().to_bits(),
+        full.spend().to_bits(),
+        "{label}: final spend diverged bitwise"
+    );
+    for (d, f) in dirty.tenants().iter().zip(full.tenants()) {
+        assert_eq!(d.current(), f.current(), "{label}: tenant {} config diverged", d.name());
+        assert_eq!(
+            d.max_denial_streak,
+            f.max_denial_streak,
+            "{label}: tenant {} streak diverged",
+            d.name()
+        );
+        assert_eq!(
+            d.rescue_unaffordable_total,
+            f.rescue_unaffordable_total,
+            "{label}: tenant {} rescue accounting diverged",
+            d.name()
+        );
+    }
+    assert_eq!(full_fresh, full.tenants().len() * steps, "{label}: reference fleet cached");
+    if require_caching {
+        assert!(
+            dirty_fresh < full_fresh,
+            "{label}: dirty queue never cached ({dirty_fresh} fresh of {full_fresh})"
+        );
+    }
+}
+
+#[test]
+fn idle_serverless_fleet_is_decision_identical_under_dirty_planning() {
+    let cfg = ModelConfig::default_paper();
+    let build = || {
+        let mut fleet =
+            FleetSimulator::new(&cfg, mostly_idle_specs(&cfg, 24, 0.75), 1.0e6, 3);
+        fleet.enable_serverless(ServerlessParams::default());
+        fleet
+    };
+    assert_decision_identical(build(), build(), 120, true, "mostly-idle");
+}
+
+#[test]
+fn wake_storm_is_decision_identical_under_dirty_planning() {
+    let cfg = ModelConfig::default_paper();
+    let build = || {
+        let mut fleet =
+            FleetSimulator::new(&cfg, wake_storm_specs(&cfg, 24, 0.8, 25, 4), 1.0e6, 3);
+        fleet.enable_serverless(ServerlessParams::default());
+        fleet
+    };
+    assert_decision_identical(build(), build(), 120, true, "wake-storm");
+}
+
+#[test]
+fn node_failure_is_decision_identical_under_dirty_planning() {
+    // event-backed tenants on a steady trace; a node failure mid-run
+    // flips measured SLA state, which must dirty the victim out of its
+    // cached hold on both fleets in the same tick
+    let cfg = ModelConfig::default_paper();
+    let base = TraceBuilder::from_config(&cfg);
+    let build = || {
+        let specs: Vec<TenantSpec> = (0..6)
+            .map(|i| {
+                TenantSpec::from_config(
+                    &cfg,
+                    format!("t{i}"),
+                    match i % 3 {
+                        0 => PriorityClass::Gold,
+                        1 => PriorityClass::Silver,
+                        _ => PriorityClass::Bronze,
+                    },
+                    base.constant(8.0, 60),
+                )
+            })
+            .collect();
+        let mut fleet = FleetSimulator::new(&cfg, specs, 1.0e6, 3);
+        fleet.attach_substrates(&cfg, ClusterParams::default(), 42, SubstrateKind::Des);
+        // mid-interval at tick 10, on the victim's substrate time scale
+        let at = 10.5 * ClusterParams::default().interval;
+        assert!(fleet.tenants_mut()[0].schedule_node_failure(at, 0), "failure not scheduled");
+        fleet
+    };
+    assert_decision_identical(build(), build(), 40, false, "node-failure");
+}
+
+#[test]
+fn adaptive_envelopes_are_decision_identical_under_dirty_planning() {
+    // contended budget + per-tick envelope re-weighting: budget hints
+    // move every tick, exercising the hint arm of the invalidation set
+    let cfg = ModelConfig::default_paper();
+    let base = TraceBuilder::paper(&cfg);
+    let build = || {
+        let specs: Vec<TenantSpec> = (0..8)
+            .map(|i| {
+                TenantSpec::from_config(
+                    &cfg,
+                    format!("t{i}"),
+                    match i % 3 {
+                        0 => PriorityClass::Gold,
+                        1 => PriorityClass::Silver,
+                        _ => PriorityClass::Bronze,
+                    },
+                    base.shifted(i * base.len() / 8),
+                )
+            })
+            .collect();
+        let arb = BudgetArbiter::new(8.0 * 1.5, 3).with_envelopes(ClassEnvelopes::default_split());
+        let mut fleet = FleetSimulator::with_arbiter(&cfg, specs, arb);
+        fleet.enable_adaptive_envelopes();
+        fleet
+    };
+    assert_decision_identical(build(), build(), 100, false, "adaptive-envelopes");
+}
+
+#[test]
+fn sparse_activity_mixed_substrates_are_decision_identical_under_dirty_planning() {
+    // the 10k-bench scenario at test scale: a small DES-backed active
+    // cohort over an analytical idle sea, serverless parking the rest
+    let cfg = ModelConfig::default_paper();
+    let build = || {
+        let mut fleet =
+            FleetSimulator::new(&cfg, sparse_activity_specs(&cfg, 64, 8, 4), 1.0e6, 3);
+        fleet.enable_serverless(ServerlessParams::default());
+        fleet.attach_mixed_substrates(&cfg, ClusterParams::default(), 42, |id| {
+            if id < 8 {
+                SubstrateKind::Des
+            } else {
+                SubstrateKind::Analytical
+            }
+        });
+        fleet
+    };
+    assert_decision_identical(build(), build(), 120, true, "sparse-activity");
+}
+
+#[test]
+fn random_fleets_are_decision_identical_under_dirty_planning() {
+    // randomized shapes: class mix, trace phases, budget tightness —
+    // tight budgets keep denial streaks churning through the
+    // invalidation set
+    let cfg = ModelConfig::default_paper();
+    forall(8, 0xD127, |case, rng| {
+        let n = 2 + rng.below(8) as usize;
+        let base = TraceBuilder::paper(&cfg);
+        let specs: Vec<TenantSpec> = (0..n)
+            .map(|i| {
+                TenantSpec::from_config(
+                    &cfg,
+                    format!("t{case}-{i}"),
+                    match rng.below(3) {
+                        0 => PriorityClass::Gold,
+                        1 => PriorityClass::Silver,
+                        _ => PriorityClass::Bronze,
+                    },
+                    base.shifted(rng.below(50) as usize),
+                )
+            })
+            .collect();
+        let budget = n as f32 * uniform(rng, 0.6, 3.0);
+        let envelopes = rng.next_f64() < 0.5;
+        let build = || {
+            let arb = if envelopes {
+                BudgetArbiter::new(budget, 3).with_envelopes(ClassEnvelopes::default_split())
+            } else {
+                BudgetArbiter::new(budget, 3)
+            };
+            FleetSimulator::with_arbiter(&cfg, specs.clone(), arb)
+        };
+        assert_decision_identical(build(), build(), 60, false, &format!("random case {case}"));
+    });
+}
+
+#[test]
+fn refresh_k_safety_net_forces_refreshes_without_changing_decisions() {
+    // a tiny mandatory-refresh interval re-proposes cached holds
+    // constantly; decisions must not move, only the planning work
+    let cfg = ModelConfig::default_paper();
+    let build = || {
+        let mut fleet =
+            FleetSimulator::new(&cfg, mostly_idle_specs(&cfg, 24, 0.75), 1.0e6, 3);
+        fleet.enable_serverless(ServerlessParams::default());
+        fleet
+    };
+    let mut k2 = build();
+    k2.set_refresh_k(2);
+    let mut k_default = build();
+    let mut full = build();
+    full.set_dirty_planning(false);
+    let (mut fresh_k2, mut fresh_default, mut fresh_full) = (0usize, 0usize, 0usize);
+    for s in 0..60 {
+        let a = k2.tick();
+        let b = k_default.tick();
+        let c = full.tick();
+        assert_eq!(a, b, "refresh-k: tick {s} diverged from default-K fleet");
+        assert_eq!(a, c, "refresh-k: tick {s} diverged from always-replan fleet");
+        fresh_k2 += a.fresh_proposals;
+        fresh_default += b.fresh_proposals;
+        fresh_full += c.fresh_proposals;
+    }
+    assert!(
+        fresh_default < fresh_k2 && fresh_k2 < fresh_full,
+        "refresh pressure should order planning work: \
+         default {fresh_default} < K=2 {fresh_k2} < full {fresh_full}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// indexed admission vs the sorted reference implementation
+// ---------------------------------------------------------------------
+
+fn rand_class(rng: &mut XorShift64) -> PriorityClass {
+    match rng.below(3) {
+        0 => PriorityClass::Gold,
+        1 => PriorityClass::Silver,
+        _ => PriorityClass::Bronze,
+    }
+}
+
+fn rand_config(rng: &mut XorShift64) -> Configuration {
+    Configuration::new(rng.below(4) as usize, rng.below(4) as usize)
+}
+
+/// Same self-consistent random proposal shape as `prop_fleet.rs`: a
+/// hold (possibly with shed offers) or a ranked candidate list whose
+/// alternatives get strictly cheaper down the list.
+fn rand_proposal(rng: &mut XorShift64, tenant: usize) -> Proposal {
+    let from = rand_config(rng);
+    let cost_from = uniform(rng, 0.08, 8.0);
+    let hold = rng.next_f64() < 0.25;
+    let mut candidates = Vec::new();
+    if !hold {
+        let n_cands = 1 + rng.below(3) as usize;
+        let mut cost = uniform(rng, 0.08, 8.0);
+        for _ in 0..n_cands {
+            candidates.push(Candidate::priced(rand_config(rng), cost, uniform(rng, 0.0, 50.0)));
+            cost *= uniform(rng, 0.3, 0.95);
+        }
+    }
+    let sla_violating = rng.next_f64() < 0.3;
+    let emergency = !hold && rng.next_f64() < 0.1;
+    let mut sheds = Vec::new();
+    if hold && !sla_violating && rng.next_f64() < 0.6 {
+        sheds.push(Candidate::priced(
+            rand_config(rng),
+            cost_from * uniform(rng, 0.3, 0.95),
+            uniform(rng, 0.0, 5.0),
+        ));
+    }
+    Proposal {
+        tenant,
+        class: rand_class(rng),
+        from,
+        cost_from,
+        current_score: 0.0,
+        emergency,
+        sla_violating,
+        denial_streak: rng.below(6) as usize,
+        fallback: false,
+        candidates,
+        sheds,
+    }
+}
+
+fn assert_admissions_identical(a: &Admission, b: &Admission, label: &str) {
+    assert_eq!(a.verdicts, b.verdicts, "{label}: verdicts diverged");
+    assert_eq!(a.chosen, b.chosen, "{label}: chosen options diverged");
+    assert_eq!(
+        a.base_spend.to_bits(),
+        b.base_spend.to_bits(),
+        "{label}: base spend diverged bitwise"
+    );
+    assert_eq!(
+        a.projected_spend.to_bits(),
+        b.projected_spend.to_bits(),
+        "{label}: projected spend diverged bitwise"
+    );
+}
+
+#[test]
+fn indexed_admission_matches_the_sorted_reference() {
+    forall(400, 0x1DE7ED, |_, rng| {
+        let n = 1 + rng.below(32) as usize;
+        let proposals: Vec<Proposal> = (0..n).map(|i| rand_proposal(rng, i)).collect();
+        let base: f32 = proposals.iter().map(|p| p.cost_from).sum();
+        // budgets from under-water (forced sheds/denials everywhere) to
+        // comfortable, with and without class envelopes
+        let budget = base * uniform(rng, 0.8, 1.6) + 0.01;
+        let env = ClassEnvelopes::new(
+            uniform(rng, 0.1, 1.0),
+            uniform(rng, 0.1, 1.0),
+            uniform(rng, 0.1, 1.0),
+        );
+        for arb in
+            [BudgetArbiter::new(budget, 3), BudgetArbiter::new(budget, 3).with_envelopes(env)]
+        {
+            let indexed = arb.admit(&proposals);
+            let sorted = arb.sorted_reference().admit(&proposals);
+            assert_admissions_identical(&indexed, &sorted, "indexed vs sorted");
+        }
+    });
+}
+
+#[test]
+fn placement_backed_decisions_match_the_sorted_reference() {
+    // the placement control loop routes every packed action through
+    // `BudgetArbiter::admit` — the indexed heaps must not change a
+    // single placement decision vs the global-sort reference, under
+    // contention and with money to spare
+    let cfg = ModelConfig::default_paper();
+    let pcfg = PlacementConfig::default();
+    for budget in [6.0f32, 1.0e6] {
+        let build = |arb: BudgetArbiter| {
+            PlacementSim::new(
+                &cfg,
+                small_tenant_specs(&cfg, 12, 0.1),
+                arb,
+                ClusterParams::default(),
+                pcfg,
+                true,
+            )
+        };
+        let mut indexed = build(BudgetArbiter::new(budget, 3));
+        let mut sorted = build(BudgetArbiter::new(budget, 3).sorted_reference());
+        for s in 0..60 {
+            let a = indexed.tick();
+            let b = sorted.tick();
+            assert_eq!(a, b, "placement tick {s} diverged at budget {budget}");
+        }
+        assert_eq!(
+            indexed.spend().to_bits(),
+            sorted.spend().to_bits(),
+            "placement spend diverged bitwise at budget {budget}"
+        );
+        assert_eq!(indexed.clusters().len(), sorted.clusters().len());
+    }
+}
+
+#[test]
+fn ledgered_admission_matches_the_spend_walk() {
+    forall(200, 0x1ED9E2, |_, rng| {
+        let n = 1 + rng.below(24) as usize;
+        let proposals: Vec<Proposal> = (0..n).map(|i| rand_proposal(rng, i)).collect();
+        let mut ledger = SpendLedger::new();
+        for (i, p) in proposals.iter().enumerate() {
+            ledger.record(i, p.cost_from, p.class);
+        }
+        let base: f32 = proposals.iter().map(|p| p.cost_from).sum();
+        let budget = base * uniform(rng, 0.9, 1.5) + 0.01;
+        let arb = BudgetArbiter::new(budget, 3).with_envelopes(ClassEnvelopes::default_split());
+        let walked = arb.admit(&proposals);
+        let ledgered = arb.admit_ledgered(&proposals, &ledger);
+        assert_admissions_identical(&walked, &ledgered, "walked vs ledgered");
+    });
+}
+
+// ---------------------------------------------------------------------
+// f64 spend accumulation: 10k tiny costs must not drift
+// ---------------------------------------------------------------------
+
+#[test]
+fn spend_accumulation_survives_ten_thousand_tiny_costs() {
+    // 10_000 storage-only holds at 0.008/h: the exact sum is
+    // n * (0.008 as f32 as f64). A running f32 sum drifts ~3.3e-3 here
+    // (systematic rounding at magnitudes near 80 — already past the
+    // fleet's 1e-3 budget epsilon, and it grows linearly with fleet
+    // size); the arbiter's f64 walk narrows once, within ~4e-6.
+    let n = 10_000usize;
+    let cost = 0.008f32;
+    let proposals: Vec<Proposal> = (0..n)
+        .map(|i| Proposal {
+            tenant: i,
+            class: PriorityClass::Bronze,
+            from: Configuration::new(0, 0),
+            cost_from: cost,
+            current_score: 0.0,
+            emergency: false,
+            sla_violating: false,
+            denial_streak: 0,
+            fallback: false,
+            candidates: Vec::new(),
+            sheds: Vec::new(),
+        })
+        .collect();
+    let exact = n as f64 * cost as f64;
+    let naive: f32 = proposals.iter().map(|p| p.cost_from).sum();
+    assert!(
+        (naive as f64 - exact).abs() > 1e-3,
+        "f32 drift vanished ({naive} vs {exact}) — this regression guard lost its teeth"
+    );
+    for arb in [BudgetArbiter::new(100.0, 3), BudgetArbiter::flat(100.0, 3)] {
+        let adm = arb.admit(&proposals);
+        assert!(
+            (adm.base_spend as f64 - exact).abs() < 1e-3,
+            "base spend {} drifted from exact {exact}",
+            adm.base_spend
+        );
+        assert!(
+            (adm.projected_spend as f64 - exact).abs() < 1e-3,
+            "projected spend {} drifted from exact {exact}",
+            adm.projected_spend
+        );
+    }
+}
