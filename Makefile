@@ -5,7 +5,7 @@
 
 .DEFAULT_GOAL := help
 
-.PHONY: help build test doc bench-compile examples fleet-demo placement-demo explain-demo serverless-demo fleet-scale-demo artifacts
+.PHONY: help build test doc bench-compile examples lint-sim fleet-demo placement-demo explain-demo serverless-demo fleet-scale-demo artifacts
 
 help: ## list the available targets
 	@grep -E '^[a-zA-Z_-]+:.*?## ' $(MAKEFILE_LIST) | awk 'BEGIN {FS = ":.*?## "}; {printf "  %-14s %s\n", $$1, $$2}'
@@ -22,6 +22,10 @@ doc: ## build the API docs with warnings denied (the CI doc gate)
 
 bench-compile: ## compile every bench target without running it
 	cargo bench --no-run
+
+lint-sim: ## simlint gate: determinism (D1-D3), money-in-f64 (N1), explain-v1 additivity (S1), test registration (T1)
+	cargo run -q -p simlint
+	@cargo run -q -p simlint -- --json | grep -q '"schema":"diagonal-scale/simlint-v1"' && echo "lint-sim: --json smoke ok"
 
 examples: ## run the quickstart and fleet_budget smoke examples
 	cargo run --release --example quickstart

@@ -13,6 +13,10 @@
 //! fitted scaling exponent of tick cost vs tenant count comes out below
 //! 1.0 (sub-linear) on the sweep endpoints.
 
+// Benches measure wall time by design; decision code is covered by
+// simlint's d1-no-wall-clock + clippy's disallowed_methods instead.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 use diagonal_scale::benchkit::{group, Bench};
@@ -180,6 +184,9 @@ fn main() {
             }
         });
         fleet.set_recording(false);
+        // opt in to wall-clock planning latency (the default planning
+        // clock is deterministically zero)
+        fleet.use_wall_clock();
         // park the idle sea before measuring (suspension takes
         // idle_ticks + a drain tick to complete)
         let mut warm_fresh = 0usize;

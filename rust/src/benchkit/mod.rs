@@ -4,6 +4,12 @@
 //! throughput. Used by every `rust/benches/*.rs` target
 //! (`harness = false`).
 
+// Measuring wall time is this module's whole job: it is the one
+// rust/src module allowlisted from simlint's d1-no-wall-clock rule and
+// clippy's disallowed_methods (simulation/decision code injects time
+// through `FleetSimulator::set_planning_clock` instead).
+#![allow(clippy::disallowed_methods)]
+
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 

@@ -105,7 +105,7 @@ impl OnlineCalibration {
     /// H values.
     fn coverage_ok(&self) -> bool {
         self.seen.len() >= MIN_CALIBRATION_CONFIGS
-            && self.seen.iter().map(|c| c.h_idx).collect::<std::collections::HashSet<_>>().len()
+            && self.seen.iter().map(|c| c.h_idx).collect::<std::collections::BTreeSet<_>>().len()
                 >= 2
     }
 }

@@ -39,6 +39,7 @@
 use std::collections::BinaryHeap;
 
 use crate::policy::{PriorityClass, Proposal};
+use crate::util::money;
 
 /// Why a proposal was admitted or denied this tick.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -149,14 +150,16 @@ impl ClassEnvelopes {
         budget: f32,
     ) -> f32 {
         let rank = class.rank() as usize;
-        let burst: f32 = BURST_FRACTION
-            * (0..3)
-                .filter(|&r| r != rank)
-                .map(|r| {
-                    (self.envelope(PriorityClass::from_rank(r as u8), budget) - class_spend[r])
-                        .max(0.0)
-                })
-                .sum::<f32>();
+        // the burst pool folds per-class headrooms in f64 (money
+        // accumulates in f64, narrowed once — see `util::money`)
+        let pool: f64 = (0..3)
+            .filter(|&r| r != rank)
+            .map(|r| {
+                (self.envelope(PriorityClass::from_rank(r as u8), budget) - class_spend[r])
+                    .max(0.0) as f64
+            })
+            .sum();
+        let burst = money::narrow(BURST_FRACTION as f64 * pool);
         self.envelope(class, budget) + burst - class_spend[rank]
     }
 
@@ -587,8 +590,11 @@ impl BudgetArbiter {
             }
             if check_env && delta > 0.0 {
                 if let Some(e) = &self.envelopes {
-                    let cs =
-                        [class_spend[0] as f32, class_spend[1] as f32, class_spend[2] as f32];
+                    let cs = [
+                        money::narrow(class_spend[0]),
+                        money::narrow(class_spend[1]),
+                        money::narrow(class_spend[2]),
+                    ];
                     if delta > e.class_headroom(class, &cs, self.budget) as f64 + FIT_EPS {
                         return false;
                     }
@@ -869,8 +875,8 @@ impl BudgetArbiter {
             shed_moves: verdicts.iter().filter(|&&v| v == Verdict::AdmittedShed).count(),
             verdicts,
             chosen,
-            base_spend: base_spend as f32,
-            projected_spend: spend as f32,
+            base_spend: money::narrow(base_spend),
+            projected_spend: money::narrow(spend),
             admitted_moves,
             denied_moves,
         }

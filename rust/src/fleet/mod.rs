@@ -115,6 +115,7 @@ use crate::plane::Configuration;
 use crate::policy::BudgetHint;
 use crate::serverless::{Lifecycle, ServerlessParams, StorageService};
 use crate::surfaces::SurfaceModel;
+use crate::util::money;
 use crate::workload::XorShift64;
 
 /// Tolerance for float drift when comparing fleet spend to the budget.
@@ -169,10 +170,13 @@ pub struct FleetTick {
     /// this tick (the rest replayed cached holds) — the
     /// machine-independent proxy for per-tick planning work.
     pub fresh_proposals: usize,
-    /// Wall-clock microseconds spent planning this tick (budget hints +
-    /// propose/replay + admission), from the fleet's monotonic clock
-    /// ([`FleetSimulator::set_planning_clock`] injects a deterministic
-    /// one for tests).
+    /// Microseconds spent planning this tick (budget hints +
+    /// propose/replay + admission), from the fleet's injectable
+    /// monotonic clock. Deterministically zero by default;
+    /// [`FleetSimulator::use_wall_clock`] opts in to real wall-clock
+    /// telemetry (CLI + benches), and
+    /// [`FleetSimulator::set_planning_clock`] injects counters for
+    /// tests.
     pub planning_micros: u64,
 }
 
@@ -272,8 +276,9 @@ pub struct FleetSimulator {
     /// Incrementally maintained per-slot `cost_from` ledger feeding
     /// [`BudgetArbiter::admit_ledgered`] in dirty mode.
     ledger: SpendLedger,
-    /// Monotonic microsecond source for `planning_micros`; injectable
-    /// so tests comparing tick timelines stay deterministic.
+    /// Monotonic microsecond source for `planning_micros`. Defaults to
+    /// a constant zero (deterministic, wall-clock-free); the CLI and
+    /// benches opt in to real time via [`Self::use_wall_clock`].
     clock: Box<dyn FnMut() -> u64>,
     step: usize,
 }
@@ -308,7 +313,6 @@ impl FleetSimulator {
                 t
             })
             .collect();
-        let epoch = std::time::Instant::now();
         Self {
             tenants,
             arbiter,
@@ -323,7 +327,7 @@ impl FleetSimulator {
             dirty_planning: true,
             refresh_k: REFRESH_K,
             ledger: SpendLedger::new(),
-            clock: Box::new(move || epoch.elapsed().as_micros() as u64),
+            clock: Box::new(|| 0),
             step: 0,
         }
     }
@@ -431,10 +435,26 @@ impl FleetSimulator {
 
     /// Inject the monotonic microsecond source behind
     /// [`FleetTick::planning_micros`] (tests inject a counter so tick
-    /// timelines stay bit-for-bit reproducible; the default is process
-    /// wall-clock).
+    /// timelines stay bit-for-bit reproducible; the default clock is a
+    /// constant zero so a fresh fleet never reads the wall clock —
+    /// callers that want real latency telemetry opt in via
+    /// [`Self::use_wall_clock`]).
     pub fn set_planning_clock(&mut self, clock: Box<dyn FnMut() -> u64>) {
         self.clock = clock;
+    }
+
+    /// Opt in to real wall-clock planning latency: points the planning
+    /// clock at a process-monotonic microsecond source (the CLI and
+    /// benches call this so `planning_micros` is meaningful). This is
+    /// the one sanctioned wall-clock seam in decision code — the clock
+    /// feeds only [`FleetTick::planning_micros`], which is excluded
+    /// from [`FleetTick`] equality, so simulation results stay
+    /// bit-identical either way.
+    #[allow(clippy::disallowed_methods)]
+    pub fn use_wall_clock(&mut self) {
+        // simlint: allow(d1-no-wall-clock): sanctioned opt-in telemetry seam; never read by decision state.
+        let epoch = std::time::Instant::now();
+        self.set_planning_clock(Box::new(move || epoch.elapsed().as_micros() as u64));
     }
 
     /// Placement-mode fleet: co-locate tenants on shared clusters under
@@ -555,7 +575,7 @@ impl FleetSimulator {
     /// Accumulated in f64 — an f32 running sum loses real pennies by
     /// 10k tenants — and narrowed at the edge.
     pub fn spend(&self) -> f32 {
-        self.spend_f64() as f32
+        money::narrow(self.spend_f64())
     }
 
     fn spend_f64(&self) -> f64 {
@@ -577,15 +597,16 @@ impl FleetSimulator {
             return vec![None; self.tenants.len()];
         }
         let spend = self.spend_f64();
-        let fleet_headroom = (self.arbiter.budget as f64 - spend).max(0.0) as f32;
-        let mut class_spend = [0.0f32; 3];
-        if self.arbiter.envelopes.is_some() {
+        let fleet_headroom = money::narrow((self.arbiter.budget as f64 - spend).max(0.0));
+        let class_spend: [f32; 3] = if self.arbiter.envelopes.is_some() {
             let mut cs = [0.0f64; 3];
             for t in &self.tenants {
                 cs[t.class().rank() as usize] += t.cost() as f64;
             }
-            class_spend = [cs[0] as f32, cs[1] as f32, cs[2] as f32];
-        }
+            [money::narrow(cs[0]), money::narrow(cs[1]), money::narrow(cs[2])]
+        } else {
+            [0.0; 3]
+        };
         self.tenants
             .iter()
             .map(|tenant| {
@@ -768,7 +789,7 @@ impl FleetSimulator {
         self.step += 1;
         FleetTick {
             step: t,
-            spend: spend as f32,
+            spend: money::narrow(spend),
             projected_spend: adm.projected_spend,
             admitted_moves: adm.admitted_moves,
             denied_moves: adm.denied_moves,

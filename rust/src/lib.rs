@@ -81,6 +81,42 @@
 //!
 //! Python never runs at request time: `make artifacts` lowers the
 //! JAX/Pallas model once, and this crate is self-contained afterwards.
+//!
+//! ## Invariants (machine-checked by `simlint`)
+//!
+//! Every pinned result in this repo — dirty-queue decision identity,
+//! bitwise spend equality, packed-vs-dedicated cost ratios — rests on
+//! invariants that `rust/tools/simlint` (run by `make lint-sim` and CI
+//! before the build) enforces on every push:
+//!
+//! * **No wall clock in decision code** (`d1-no-wall-clock`): a
+//!   decision that reads `Instant::now` cannot be replayed. Time is
+//!   injected through [`fleet::FleetSimulator::set_planning_clock`];
+//!   the deterministic default is a constant zero, and
+//!   [`fleet::FleetSimulator::use_wall_clock`] is the one sanctioned
+//!   opt-in (telemetry only). [`benchkit`] is allowlisted — measuring
+//!   wall time is its job.
+//! * **No unordered iteration** (`d2-no-unordered-iteration`):
+//!   `HashMap`/`HashSet` iteration order varies per process, so
+//!   decision code uses `BTreeMap`/`BTreeSet`/indexed `Vec`s. The
+//!   [`runtime`] PJRT stub is allowlisted (keyed lookups only).
+//! * **Total float order** (`d3-total-order-floats`): float sort and
+//!   heap keys go through `total_cmp`; hand-rolled `PartialOrd` impls
+//!   must delegate to a total `Ord`.
+//! * **Money accumulates in f64** (`n1-money-in-f64`): PR 7's mirror
+//!   caught a real f32 spend-drift bug. Reporting structs still carry
+//!   f32, narrowed exactly once at [`util::money::narrow`].
+//! * **`diagonal-scale/explain-v1` is additive-only**
+//!   (`s1-explain-additivity`): the emitted JSON key set is pinned in
+//!   `config/explain_v1.keys` (runtime complement:
+//!   `rust/tests/explain_schema.rs`).
+//! * **Every test/bench is registered** (`t1-registration`):
+//!   auto-discovery is off (custom paths), so `Cargo.toml` must
+//!   reconcile with `rust/tests`/`rust/benches` or a dropped file
+//!   silently never runs.
+//!
+//! See `CONTRIBUTING.md` for rule details and the inline
+//! justification-required escape hatch (budgeted tree-wide).
 
 pub mod benchkit;
 pub mod calibrate;

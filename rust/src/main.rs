@@ -586,6 +586,9 @@ fn main() -> Result<()> {
                 }
             }
             let mut fleetsim = FleetSimulator::with_arbiter(&cfg, specs, arb);
+            // the CLI reports real planning latency per tick (the
+            // default planning clock is deterministically zero)
+            fleetsim.use_wall_clock();
             if serverless_on {
                 fleetsim.enable_serverless(ServerlessParams::default());
             }

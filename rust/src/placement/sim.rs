@@ -29,6 +29,7 @@ use crate::metrics::{Recorder, StepRecord, Summary};
 use crate::plane::Configuration;
 use crate::sla::Violation;
 use crate::surfaces::{queueing, SurfaceModel};
+use crate::util::money;
 use crate::workload::{Trace, TraceBuilder, WorkloadPoint};
 
 use super::interference::{contention_factor, fair_shares};
@@ -300,9 +301,10 @@ impl PlacementSim {
         &self.arbiter
     }
 
-    /// Current fleet spend (Σ host hourly costs).
+    /// Current fleet spend (Σ host hourly costs). Accumulated in f64
+    /// and narrowed once at the edge, like all money in this crate.
     pub fn spend(&self) -> f32 {
-        self.clusters.iter().map(|c| self.model.cost(&c.config())).sum()
+        money::narrow(self.clusters.iter().map(|c| self.model.cost(&c.config()) as f64).sum())
     }
 
     /// Live host cluster id of a tenant, if hosted.
@@ -505,23 +507,29 @@ impl PlacementSim {
             }
         }
 
-        let mut cost_from = 0.0f32;
-        let mut cost_to = 0.0f32;
+        let mut cost_from = 0.0f64;
+        let mut cost_to = 0.0f64;
         for ci in 0..n_live {
             if !affected[ci] {
                 continue;
             }
-            cost_from += self.model.cost(&self.clusters[ci].config());
+            cost_from += self.model.cost(&self.clusters[ci].config()) as f64;
             if used[ci] {
                 let cfg = target_cfg[ci].unwrap_or_else(|| self.clusters[ci].config());
-                cost_to += self.model.cost(&cfg);
+                cost_to += self.model.cost(&cfg) as f64;
             }
             // unmatched (retiring) clusters contribute 0 to cost_to
         }
         for (cfg, _) in &creates {
-            cost_to += self.model.cost(cfg);
+            cost_to += self.model.cost(cfg) as f64;
         }
-        RebalanceBundle { migrations, resizes, creates, cost_from, cost_to }
+        RebalanceBundle {
+            migrations,
+            resizes,
+            creates,
+            cost_from: money::narrow(cost_from),
+            cost_to: money::narrow(cost_to),
+        }
     }
 
     /// Live cluster indices a bundle touches.
@@ -713,7 +721,7 @@ impl PlacementSim {
         let u_max = self.model.constants().u_max;
 
         // ---- serve ----
-        let mut spend = 0.0f32;
+        let mut spend = 0.0f64;
         let mut violations = 0usize;
         let mut degraded_clusters = 0usize;
         for ci in 0..self.clusters.len() {
@@ -725,7 +733,7 @@ impl PlacementSim {
                 degraded_clusters += 1;
             }
             let host_cost = self.model.cost(&cfg);
-            spend += host_cost;
+            spend += host_cost as f64;
             if members.is_empty() {
                 continue;
             }
@@ -887,7 +895,7 @@ impl PlacementSim {
         self.step += 1;
         PlacementTick {
             step: t,
-            spend,
+            spend: money::narrow(spend),
             clusters: live_clusters,
             degraded_clusters,
             violations,

@@ -4,4 +4,5 @@
 //! and the test/bench scaffolding are implemented here from scratch.
 
 pub mod json;
+pub mod money;
 pub mod toml;

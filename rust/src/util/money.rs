@@ -1,0 +1,33 @@
+//! The single sanctioned f64 → f32 edge for monetary values.
+//!
+//! Money (spend, cost, budget headroom) accumulates in `f64`
+//! everywhere in this crate: PR 7's hand-written mirror caught a real
+//! f32 running-sum drift (> 1e-3 over 10k tiny costs, pinned by
+//! `fleet::tests`), and simlint's `n1-money-in-f64` rule now flags any
+//! f32 money accumulator or ad-hoc `as f32` narrowing of a money
+//! identifier. Reporting surfaces (`FleetTick::spend`,
+//! `AdmissionReport`, `RebalanceBundle`, budget hints) still carry
+//! f32 for size; they must narrow **here**, once, after the f64
+//! accumulation is complete, so every rounding site is greppable.
+
+/// Narrow a fully-accumulated f64 monetary value to the f32 carried by
+/// reporting structs. Semantically identical to `as f32` (round to
+/// nearest); the point is that this is the *only* place the crate is
+/// allowed to do it.
+#[inline]
+pub fn narrow(money: f64) -> f32 {
+    // simlint: allow(n1-money-in-f64): this function IS the single sanctioned narrowing edge.
+    money as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::narrow;
+
+    #[test]
+    fn narrow_matches_primitive_cast() {
+        for v in [0.0, 1.5, 0.1, 1e-9, 123456.789, f64::MAX, -7.25] {
+            assert_eq!(narrow(v).to_bits(), (v as f32).to_bits());
+        }
+    }
+}

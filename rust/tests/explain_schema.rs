@@ -1,0 +1,116 @@
+//! Golden schema test for `diagonal-scale/explain-v1`: renders a real
+//! cluster explain dump and a real fleet explain dump (serverless
+//! mostly-idle scenario, so lifecycle / cold-start fields appear) and
+//! asserts the union of emitted JSON keys equals the checked-in
+//! `config/explain_v1.keys` snapshot, byte for byte.
+//!
+//! This is the runtime complement to simlint's static
+//! `s1-explain-additivity` rule (which extracts the same keys from the
+//! emitter source): the static rule catches schema drift before the
+//! build, this test proves the rendered output actually matches the
+//! snapshot. The schema is additive-only — a missing key here means a
+//! breaking removal/rename; an extra key means the snapshot must be
+//! updated in the same PR.
+
+use std::collections::BTreeSet;
+
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::fleet::FleetSimulator;
+use diagonal_scale::report::{explain_json, fleet_explain_json_sampled};
+use diagonal_scale::serverless::mostly_idle_specs;
+use diagonal_scale::simulator::{PolicyKind, Simulator};
+use diagonal_scale::workload::TraceBuilder;
+
+/// Extract every `"key":` object-key occurrence from rendered JSON.
+/// String *values* are never followed by `:` in this schema, so a
+/// quoted identifier directly followed by a colon is an object key.
+fn json_keys(json: &str) -> BTreeSet<String> {
+    let b = json.as_bytes();
+    let mut keys = BTreeSet::new();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'"' {
+            let start = i + 1;
+            let mut j = start;
+            while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+                j += 1;
+            }
+            if j > start && j + 1 < b.len() && b[j] == b'"' && b[j + 1] == b':' {
+                keys.insert(json[start..j].to_string());
+                i = j + 2;
+                continue;
+            }
+            i = start;
+        } else {
+            i += 1;
+        }
+    }
+    keys
+}
+
+fn snapshot_keys() -> BTreeSet<String> {
+    include_str!("../../config/explain_v1.keys")
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+#[test]
+fn rendered_explain_key_set_matches_snapshot() {
+    let cfg = ModelConfig::default_paper();
+
+    // cluster side: a fully explained paper-trace run
+    let sim = Simulator::new(&cfg);
+    let trace = TraceBuilder::paper(&cfg);
+    let (run, steps) = sim.run_explained(PolicyKind::Diagonal, &trace, 3);
+    let cluster_json = explain_json(&run.policy, &steps);
+
+    // fleet side: the serverless mostly-idle scenario exercises the
+    // additive lifecycle / resume_end fields (tenants park and wake),
+    // and rendering through the sampled emitter with a nonzero cap
+    // stamps the reservoir fields too
+    let specs = mostly_idle_specs(&cfg, 8, 0.75);
+    let mut fleet = FleetSimulator::new(&cfg, specs, 1.0e6, 3);
+    fleet.enable_serverless(Default::default());
+    fleet.enable_explain(3);
+    fleet.run(100);
+    let log = fleet.explain_log();
+    assert!(!log.is_empty(), "scenario produced no explain records");
+    let fleet_json = fleet_explain_json_sampled(log, 5, log.len() as u64);
+    assert!(
+        fleet_json.contains("\"lifecycle\":") && fleet_json.contains("\"resume_end\":"),
+        "scenario must exercise the serverless explain fields"
+    );
+
+    let mut rendered = json_keys(&cluster_json);
+    rendered.extend(json_keys(&fleet_json));
+
+    let pinned = snapshot_keys();
+    let missing: Vec<&String> = pinned.difference(&rendered).collect();
+    let extra: Vec<&String> = rendered.difference(&pinned).collect();
+    assert!(
+        missing.is_empty(),
+        "keys pinned in config/explain_v1.keys but not rendered (breaking \
+         removal/rename — explain-v1 is additive-only): {missing:?}"
+    );
+    assert!(
+        extra.is_empty(),
+        "rendered keys not pinned in config/explain_v1.keys (update the \
+         snapshot in the same PR so the schema change is reviewable): {extra:?}"
+    );
+}
+
+#[test]
+fn key_extraction_sees_conditional_and_nested_keys() {
+    // sanity-check the extractor itself on a shape like the emitters':
+    // nested objects, arrays, and string values that must not count
+    let json = r#"{"schema":"x","steps":[{"from":{"h":1},"verdict":"Admitted","sheds":0}]}"#;
+    let keys = json_keys(json);
+    let expect: BTreeSet<String> = ["schema", "steps", "from", "h", "verdict", "sheds"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    assert_eq!(keys, expect, "string values must not be counted as keys");
+}

@@ -64,9 +64,9 @@ fn paper_trajectory_visits_both_axes_fig5() {
     let (cfg, sim) = setup();
     let trace = TraceBuilder::paper(&cfg);
     let ds = sim.run(PolicyKind::Diagonal, &trace);
-    let hs: std::collections::HashSet<usize> =
+    let hs: std::collections::BTreeSet<usize> =
         ds.records.iter().map(|r| r.config.h_idx).collect();
-    let vs: std::collections::HashSet<usize> =
+    let vs: std::collections::BTreeSet<usize> =
         ds.records.iter().map(|r| r.config.v_idx).collect();
     assert!(hs.len() >= 2, "fig 5: H axis must be used");
     assert!(vs.len() >= 2, "fig 5: V axis must be used");

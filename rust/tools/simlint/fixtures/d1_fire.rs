@@ -1,0 +1,12 @@
+//! D1 firing fixture: wall-clock reads inside simulation/decision
+//! code. Expected findings: 3 (Instant::now, SystemTime in a
+//! signature, SystemTime::now).
+
+pub fn epoch_micros() -> u64 {
+    let start = std::time::Instant::now();
+    start.elapsed().as_micros() as u64
+}
+
+pub fn wall() -> std::time::SystemTime {
+    std::time::SystemTime::now()
+}

@@ -1,0 +1,20 @@
+//! D1 passing fixture: time flows through the injectable planning
+//! clock, and mentions of Instant::now in comments or strings must
+//! not fire (the scanner strips both).
+
+pub struct Planner {
+    clock: Box<dyn Fn() -> u64 + Send>,
+}
+
+impl Planner {
+    // Instant::now() would fire here if comment stripping were broken.
+    pub fn set_planning_clock(&mut self, clock: Box<dyn Fn() -> u64 + Send>) {
+        self.clock = clock;
+    }
+
+    pub fn planning_micros(&self) -> u64 {
+        let banned = "Instant::now and SystemTime only appear in this string";
+        let _ = banned;
+        (self.clock)()
+    }
+}

@@ -1,0 +1,12 @@
+//! D2 firing fixture: unordered containers in decision code.
+//! Expected findings: 3 (use line, signature, constructor).
+
+use std::collections::HashMap;
+
+pub fn index(keys: &[u32]) -> HashMap<u32, usize> {
+    let mut map = HashMap::new();
+    for (i, k) in keys.iter().enumerate() {
+        map.insert(*k, i);
+    }
+    map
+}

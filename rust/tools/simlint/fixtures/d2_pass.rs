@@ -1,0 +1,12 @@
+//! D2 passing fixture: ordered containers iterate deterministically.
+//! A HashMap mention in this comment must not fire.
+
+use std::collections::BTreeMap;
+
+pub fn index(keys: &[u32]) -> BTreeMap<u32, usize> {
+    let mut map = BTreeMap::new();
+    for (i, k) in keys.iter().enumerate() {
+        map.insert(*k, i);
+    }
+    map
+}

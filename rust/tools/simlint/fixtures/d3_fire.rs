@@ -1,0 +1,22 @@
+//! D3 firing fixture: partial float ordering. Expected findings: 2
+//! (a partial_cmp().unwrap() sort key, and a hand-rolled PartialOrd
+//! that does not delegate to a total Ord). The partial_cmp call
+//! *inside* the impl body must not double-report.
+
+pub fn pick(xs: &mut [(f32, u32)]) {
+    xs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+}
+
+pub struct Key(pub f64);
+
+impl PartialEq for Key {
+    fn eq(&self, other: &Self) -> bool {
+        self.0 == other.0
+    }
+}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        self.0.partial_cmp(&other.0)
+    }
+}

@@ -1,0 +1,25 @@
+//! D3 passing fixture: total float ordering — sorts via total_cmp,
+//! and PartialOrd delegates to an Ord built on total_cmp.
+
+use std::cmp::Ordering;
+
+#[derive(PartialEq)]
+pub struct Key(pub f64);
+
+impl Eq for Key {}
+
+impl Ord for Key {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+impl PartialOrd for Key {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+pub fn pick(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}

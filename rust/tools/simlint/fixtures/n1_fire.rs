@@ -1,0 +1,23 @@
+//! N1 firing fixture: money in f32. Expected findings: 3 (an f32
+//! money accumulator, a bare `as f32` narrowing of a money
+//! identifier, and a money sum collected in f32).
+
+pub fn tally(costs: &[f32]) -> f32 {
+    let mut spend = 0.0f32;
+    for c in costs {
+        spend += *c;
+    }
+    spend
+}
+
+pub fn narrow_direct(total_cost: f64) -> f32 {
+    total_cost as f32
+}
+
+pub fn sum_budget(parts: &[f32]) -> f32 {
+    parts.iter().map(|p| budget_of(*p)).sum::<f32>()
+}
+
+fn budget_of(x: f32) -> f32 {
+    x * 2.0
+}

@@ -1,0 +1,19 @@
+//! N1 passing fixture: money accumulates in f64 and is narrowed once
+//! at a justified edge; non-money f32 narrowing is fine.
+
+pub fn tally(costs: &[f32]) -> f32 {
+    let mut spend = 0.0f64;
+    for c in costs {
+        spend += *c as f64;
+    }
+    narrow(spend)
+}
+
+pub fn narrow(money: f64) -> f32 {
+    // simlint: allow(n1-money-in-f64): the single sanctioned f64->f32 money edge.
+    money as f32
+}
+
+pub fn utilization(frac: f64) -> f32 {
+    frac.max(0.0) as f32
+}

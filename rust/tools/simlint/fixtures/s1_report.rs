@@ -1,0 +1,19 @@
+//! S1 fixture: a miniature report module whose emitters hand-roll
+//! JSON the same way rust/src/report/mod.rs does. Emitted keys:
+//! schema, v, cost, tenant, score.
+
+pub fn explain_json(v: u32, cost: f64) -> String {
+    format!("{{\"schema\":\"demo/explain-v1\",\"v\":{v},\"cost\":{cost}}}")
+}
+
+pub fn fleet_explain_json_sampled(tenant: u32, score: f64) -> String {
+    let mut out = String::from("{");
+    out.push_str(&format!("\"tenant\":{tenant},\"score\":{score}"));
+    out.push('}');
+    out
+}
+
+pub fn not_an_emitter() -> String {
+    // keys outside the explain emitters are not part of the schema
+    "{\"unrelated\":1}".to_string()
+}

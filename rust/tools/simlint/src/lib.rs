@@ -1,0 +1,1027 @@
+//! `simlint` — repo-native static analysis for diagonal-scale.
+//!
+//! Every pinned result in this repo (dirty-queue decision identity,
+//! bitwise spend equality, packed-vs-dedicated cost ratios) rests on
+//! invariants that used to be enforced only by reviewer vigilance.
+//! This tool mechanizes them as a push gate:
+//!
+//! * **D1 `d1-no-wall-clock`** — `Instant::now` / `SystemTime` are
+//!   banned in simulation/decision code (`rust/src`, minus `benchkit`).
+//!   Non-reproducible decisions are undebuggable at 10k tenants; time
+//!   flows through the injectable planning-clock seam
+//!   (`FleetSimulator::set_planning_clock`).
+//! * **D2 `d2-no-unordered-iteration`** — `HashMap`/`HashSet` are
+//!   banned in `rust/src` (minus the PJRT `runtime` stub): unordered
+//!   iteration makes decision replay nondeterministic. Use `BTreeMap`,
+//!   `BTreeSet`, or an indexed `Vec`.
+//! * **D3 `d3-total-order-floats`** — float ordering must go through
+//!   `total_cmp`: `partial_cmp(..).unwrap()` call sites are flagged,
+//!   and hand-rolled `PartialOrd` impls must delegate to a total `Ord`
+//!   (`Some(self.cmp(..))`).
+//! * **N1 `n1-money-in-f64`** — money accumulates in `f64` (PR 7
+//!   caught a real f32 spend-drift bug only via a hand-written
+//!   mirror). Flags f32 `let mut` accumulators with money-ish names,
+//!   `.sum::<f32>()` over money expressions, and `as f32` narrowing of
+//!   money identifiers outside the one sanctioned edge
+//!   (`util::money::narrow`).
+//! * **S1 `s1-explain-additivity`** — the JSON keys emitted by
+//!   `report::explain_json` / `report::fleet_explain_json*` are
+//!   diffed against the `config/explain_v1.keys` snapshot: removals
+//!   and renames fail (the schema is additive-only), additions fail
+//!   until the snapshot is updated in the same PR, which makes every
+//!   schema change reviewable.
+//! * **T1 `t1-registration`** — every file in `rust/tests` and
+//!   `rust/benches` must have a matching `[[test]]`/`[[bench]]` path
+//!   entry in `Cargo.toml` and vice versa (auto-discovery is off, so a
+//!   dropped file would otherwise silently never run).
+//!
+//! ## Escape hatch
+//!
+//! `// simlint: allow(<rule-id>): <justification>` suppresses findings
+//! on its own line and the line directly below. The justification is
+//! mandatory — a bare `allow(...)` is itself a finding — and the total
+//! number of inline allows across the tree is capped at
+//! [`MAX_ALLOWS`].
+//!
+//! The scanner is a deliberately dependency-free line/token pass (the
+//! build is offline-only, so no `syn`): comments and string contents
+//! are blanked by a small state machine before token rules run, and
+//! brace counting on the blanked text recovers function bodies where a
+//! rule needs them (D3 delegation, S1 key extraction).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Rule id: no wall clock in simulation/decision code.
+pub const D1: &str = "d1-no-wall-clock";
+/// Rule id: no unordered-iteration containers in decision code.
+pub const D2: &str = "d2-no-unordered-iteration";
+/// Rule id: float ordering must be total.
+pub const D3: &str = "d3-total-order-floats";
+/// Rule id: money accumulates in f64, narrowed once at the edge.
+pub const N1: &str = "n1-money-in-f64";
+/// Rule id: explain-v1 key set matches the checked-in snapshot.
+pub const S1: &str = "s1-explain-additivity";
+/// Rule id: tests/benches reconcile with Cargo.toml registration.
+pub const T1: &str = "t1-registration";
+/// Rule id: an allow directive without a justification.
+pub const ALLOW: &str = "allow-needs-justification";
+/// Rule id: too many inline allows across the tree.
+pub const ALLOW_BUDGET: &str = "allow-budget";
+
+/// Maximum inline `// simlint: allow(...)` directives tolerated across
+/// the whole tree before the gate fails: the escape hatch is for the
+/// few sanctioned seams, not for wholesale suppression.
+pub const MAX_ALLOWS: usize = 6;
+
+/// Every rule id with a one-line summary (drives `--json` and docs).
+pub const RULES: &[(&str, &str)] = &[
+    (D1, "wall clock banned in sim/decision modules (inject via set_planning_clock)"),
+    (D2, "HashMap/HashSet banned in decision modules (BTreeMap/BTreeSet/indexed Vec)"),
+    (D3, "float ordering must use total_cmp / delegate PartialOrd to a total Ord"),
+    (N1, "money accumulates in f64; f32 money accumulators and narrowing flagged"),
+    (S1, "explain-v1 JSON keys must match config/explain_v1.keys (additive-only)"),
+    (T1, "rust/tests + rust/benches must reconcile with Cargo.toml [[test]]/[[bench]]"),
+    (ALLOW, "simlint: allow(...) requires a justification after the closing paren"),
+    (ALLOW_BUDGET, "inline allow directives are capped tree-wide"),
+];
+
+/// Identifier substrings that mark a binding as monetary for N1.
+pub const MONEY_TOKENS: &[&str] = &["cost", "spend", "budget", "price", "money"];
+
+/// One diagnostic: `path:line` + rule id + message.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// Repo-relative path with forward slashes.
+    pub path: String,
+    /// 1-based line number (0 = whole-file finding).
+    pub line: usize,
+    /// Rule id from [`RULES`].
+    pub rule: &'static str,
+    /// Human-oriented explanation with the suggested fix.
+    pub message: String,
+}
+
+impl Finding {
+    fn new(path: &str, line0: usize, rule: &'static str, message: String) -> Self {
+        Self { path: path.to_string(), line: line0 + 1, rule, message }
+    }
+}
+
+/// An inline `// simlint: allow(rule): why` directive.
+#[derive(Debug, Clone)]
+pub struct AllowDirective {
+    /// 0-based line the directive sits on.
+    pub line: usize,
+    /// Rule id inside the parens.
+    pub rule: String,
+    /// Whether a non-empty justification follows `):`.
+    pub justified: bool,
+}
+
+/// A source file preprocessed for the token rules.
+pub struct ScannedFile {
+    /// Repo-relative path with forward slashes.
+    pub path: String,
+    /// Raw source lines (used for S1 key extraction + allow parsing).
+    pub raw: Vec<String>,
+    /// Lines with comments and string/char contents blanked.
+    pub code: Vec<String>,
+    /// Parsed allow directives.
+    pub allows: Vec<AllowDirective>,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Token-boundary substring search: `tok` must not be embedded in a
+/// longer identifier (but may be reached through `::` paths).
+pub fn has_token(line: &str, tok: &str) -> bool {
+    find_token(line, tok).is_some()
+}
+
+fn find_token(line: &str, tok: &str) -> Option<usize> {
+    let lb = line.as_bytes();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(tok) {
+        let i = start + pos;
+        let before_ok = i == 0 || !is_ident_byte(lb[i - 1]);
+        let after = i + tok.len();
+        let after_ok = after >= lb.len() || !is_ident_byte(lb[after]);
+        if before_ok && after_ok {
+            return Some(i);
+        }
+        start = i + 1;
+    }
+    None
+}
+
+/// Whether any identifier in `text` contains a money token.
+pub fn mentions_money(text: &str) -> bool {
+    let b = text.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if is_ident_byte(b[i]) && !b[i].is_ascii_digit() {
+            let start = i;
+            while i < b.len() && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            if ident_is_money(&text[start..i]) {
+                return true;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    false
+}
+
+fn ident_is_money(ident: &str) -> bool {
+    let lower = ident.to_ascii_lowercase();
+    MONEY_TOKENS.iter().any(|m| lower.contains(m))
+}
+
+/// Blank comments and string/char-literal contents, preserving line
+/// structure and delimiters, so token rules cannot fire inside text
+/// and brace counting sees only structural braces.
+pub fn strip_source(src: &str) -> Vec<String> {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        Line,
+        Block(u32),
+        Str,
+        RawStr(u32),
+        Char,
+    }
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == St::Line {
+                st = St::Code;
+            }
+            out.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::Line;
+                    cur.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(1);
+                    cur.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    cur.push('"');
+                    i += 1;
+                } else if c == 'r'
+                    && matches!(next, Some('"') | Some('#'))
+                    && (i == 0 || !is_ident_byte(chars[i - 1] as u8))
+                {
+                    let mut hashes = 0u32;
+                    let mut j = i + 1;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        st = St::RawStr(hashes);
+                        for _ in i..j {
+                            cur.push(' ');
+                        }
+                        cur.push('"');
+                        i = j + 1;
+                    } else {
+                        cur.push(c);
+                        i += 1;
+                    }
+                } else if c == '\''
+                    && (next == Some('\\')
+                        || (chars.get(i + 2) == Some(&'\'') && next != Some('\'')))
+                {
+                    st = St::Char;
+                    cur.push('\'');
+                    i += 1;
+                } else {
+                    cur.push(c);
+                    i += 1;
+                }
+            }
+            St::Line => {
+                cur.push(' ');
+                i += 1;
+            }
+            St::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                    cur.push_str("  ");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(depth + 1);
+                    cur.push_str("  ");
+                    i += 2;
+                } else {
+                    cur.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str | St::Char => {
+                let close = if st == St::Str { '"' } else { '\'' };
+                if c == '\\' {
+                    cur.push(' ');
+                    i += 1;
+                    if chars.get(i).is_some_and(|&n| n != '\n') {
+                        cur.push(' ');
+                        i += 1;
+                    }
+                } else if c == close {
+                    st = St::Code;
+                    cur.push(close);
+                    i += 1;
+                } else {
+                    cur.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    let closed =
+                        (0..hashes as usize).all(|k| chars.get(i + 1 + k) == Some(&'#'));
+                    if closed {
+                        st = St::Code;
+                        cur.push('"');
+                        for _ in 0..hashes {
+                            cur.push(' ');
+                        }
+                        i += 1 + hashes as usize;
+                    } else {
+                        cur.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    cur.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    out.push(cur);
+    out
+}
+
+fn parse_allows(raw: &[String]) -> Vec<AllowDirective> {
+    let mut out = Vec::new();
+    for (idx, line) in raw.iter().enumerate() {
+        let Some(comment) = line.find("//") else { continue };
+        let tail = &line[comment..];
+        let Some(pos) = tail.find("simlint: allow(") else { continue };
+        let after = &tail[pos + "simlint: allow(".len()..];
+        let Some(close) = after.find(')') else { continue };
+        let rule = after[..close].trim().to_string();
+        let rest = &after[close + 1..];
+        let justified = rest
+            .strip_prefix(':')
+            .map(|j| !j.trim().is_empty())
+            .unwrap_or(false);
+        out.push(AllowDirective { line: idx, rule, justified });
+    }
+    out
+}
+
+impl ScannedFile {
+    /// Preprocess one source file.
+    pub fn parse(path: &str, src: &str) -> Self {
+        let raw: Vec<String> = src.split('\n').map(str::to_string).collect();
+        let code = strip_source(src);
+        let allows = parse_allows(&raw);
+        Self { path: path.to_string(), raw, code, allows }
+    }
+
+    /// Whether a justified allow for `rule` covers 0-based `line`
+    /// (the directive's own line or the line directly below it).
+    pub fn allowed(&self, line: usize, rule: &str) -> bool {
+        self.allows.iter().any(|a| {
+            a.justified && a.rule == rule && (a.line == line || a.line + 1 == line)
+        })
+    }
+
+    /// Findings for malformed allow directives (missing justification
+    /// or unknown rule id). These are never suppressible.
+    pub fn allow_findings(&self) -> Vec<Finding> {
+        let known: BTreeSet<&str> = RULES.iter().map(|(id, _)| *id).collect();
+        let mut out = Vec::new();
+        for a in &self.allows {
+            if !known.contains(a.rule.as_str()) {
+                out.push(Finding::new(
+                    &self.path,
+                    a.line,
+                    ALLOW,
+                    format!("allow({}) names an unknown rule id", a.rule),
+                ));
+            } else if !a.justified {
+                out.push(Finding::new(
+                    &self.path,
+                    a.line,
+                    ALLOW,
+                    format!(
+                        "allow({}) has no justification: write `// simlint: allow({}): <why>`",
+                        a.rule, a.rule
+                    ),
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// End line (0-based, inclusive) of the block opened at/after `start`.
+fn body_end(code: &[String], start: usize) -> usize {
+    let mut depth = 0i64;
+    let mut opened = false;
+    for (k, line) in code.iter().enumerate().skip(start) {
+        for ch in line.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return k;
+        }
+    }
+    code.len().saturating_sub(1)
+}
+
+// ---------------------------------------------------------------- D1/D2
+
+fn in_scope_d1(path: &str) -> bool {
+    path.starts_with("rust/src/") && !path.starts_with("rust/src/benchkit")
+}
+
+fn in_scope_d2(path: &str) -> bool {
+    path.starts_with("rust/src/") && !path.starts_with("rust/src/runtime")
+}
+
+fn rule_d1(f: &ScannedFile, out: &mut Vec<Finding>) {
+    for (idx, line) in f.code.iter().enumerate() {
+        if has_token(line, "Instant::now") || has_token(line, "SystemTime") {
+            out.push(Finding::new(
+                &f.path,
+                idx,
+                D1,
+                "wall-clock read in simulation/decision code: decisions must replay \
+                 bit-for-bit; route time through the injectable planning clock \
+                 (FleetSimulator::set_planning_clock) or keep measurement in benchkit"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+fn rule_d2(f: &ScannedFile, out: &mut Vec<Finding>) {
+    for (idx, line) in f.code.iter().enumerate() {
+        if has_token(line, "HashMap") || has_token(line, "HashSet") {
+            out.push(Finding::new(
+                &f.path,
+                idx,
+                D2,
+                "HashMap/HashSet iterate in nondeterministic order: use BTreeMap/BTreeSet \
+                 or an indexed Vec so decision replay is reproducible"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+// ------------------------------------------------------------------- D3
+
+fn rule_d3(f: &ScannedFile, out: &mut Vec<Finding>) {
+    let mut consumed: BTreeSet<usize> = BTreeSet::new();
+    for idx in 0..f.code.len() {
+        if consumed.contains(&idx) {
+            continue;
+        }
+        let line = &f.code[idx];
+        if !has_token(line, "partial_cmp") {
+            continue;
+        }
+        if line.contains("fn partial_cmp") {
+            // a PartialOrd impl: the body must delegate to a total Ord
+            let end = body_end(&f.code, idx);
+            let body = f.code[idx..=end].join(" ");
+            for k in idx..=end {
+                consumed.insert(k);
+            }
+            if !body.contains("self.cmp(") {
+                out.push(Finding::new(
+                    &f.path,
+                    idx,
+                    D3,
+                    "hand-rolled PartialOrd over floats: delegate with `Some(self.cmp(..))` \
+                     to an Ord impl built on total_cmp (partial float order is not \
+                     reproducible under NaN)"
+                        .to_string(),
+                ));
+            }
+        } else {
+            out.push(Finding::new(
+                &f.path,
+                idx,
+                D3,
+                "float ordering through partial_cmp: use f32::total_cmp/f64::total_cmp \
+                 (total over NaN, so sorts and heap keys are deterministic)"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+// ------------------------------------------------------------------- N1
+
+/// Money identifiers immediately narrowed by `as f32` on this line
+/// (handles `spend as f32`, `spend_f64() as f32`, `arr[i] as f32`).
+fn narrowed_money_idents(line: &str) -> Vec<(usize, String)> {
+    let b = line.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find("as f32") {
+        let i = start + pos;
+        start = i + 1;
+        // token boundaries around `as f32`
+        let end = i + "as f32".len();
+        if end < b.len() && is_ident_byte(b[end]) {
+            continue;
+        }
+        if i == 0 || !b[i - 1].is_ascii_whitespace() {
+            continue;
+        }
+        // walk back over whitespace to the narrowed expression
+        let mut j = i - 1;
+        while j > 0 && b[j].is_ascii_whitespace() {
+            j -= 1;
+        }
+        // skip one trailing call/index group: `ident(...)` / `ident[...]`
+        if b[j] == b')' || b[j] == b']' {
+            let (open, close) = if b[j] == b')' { (b'(', b')') } else { (b'[', b']') };
+            let mut depth = 0i32;
+            loop {
+                if b[j] == close {
+                    depth += 1;
+                } else if b[j] == open {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                if j == 0 {
+                    break;
+                }
+                j -= 1;
+            }
+            if j == 0 {
+                continue;
+            }
+            j -= 1;
+        }
+        if !is_ident_byte(b[j]) {
+            continue;
+        }
+        let ident_end = j + 1;
+        let mut ident_start = j;
+        while ident_start > 0 && is_ident_byte(b[ident_start - 1]) {
+            ident_start -= 1;
+        }
+        let ident = &line[ident_start..ident_end];
+        if ident_is_money(ident) {
+            out.push((i, ident.to_string()));
+        }
+    }
+    out
+}
+
+/// Statement-ish lookback window for a chained `.sum::<f32>()`: join
+/// up to 10 preceding lines, stopping at a `;` statement end or a `fn`
+/// signature boundary.
+fn statement_window(code: &[String], line: usize) -> String {
+    let mut parts = vec![code[line].clone()];
+    let mut k = line;
+    let mut steps = 0;
+    while k > 0 && steps < 10 {
+        k -= 1;
+        let prev = code[k].trim();
+        if prev.ends_with(';') || has_token(prev, "fn") {
+            break;
+        }
+        parts.push(prev.to_string());
+        steps += 1;
+    }
+    parts.reverse();
+    parts.join(" ")
+}
+
+fn rule_n1(f: &ScannedFile, out: &mut Vec<Finding>) {
+    for (idx, line) in f.code.iter().enumerate() {
+        // (a) f32 `let mut` accumulator with a money-ish name
+        if let Some(pos) = line.find("let mut ") {
+            let rest = &line[pos + "let mut ".len()..];
+            let name: String =
+                rest.chars().take_while(|c| is_ident_byte(*c as u8)).collect();
+            if ident_is_money(&name) {
+                let mut stmt = line.clone();
+                if !line.contains(';') {
+                    for extra in f.code.iter().skip(idx + 1).take(2) {
+                        stmt.push(' ');
+                        stmt.push_str(extra);
+                    }
+                }
+                if stmt.contains("f32") {
+                    out.push(Finding::new(
+                        &f.path,
+                        idx,
+                        N1,
+                        format!(
+                            "f32 money accumulator `{name}`: an f32 running sum loses real \
+                             pennies by 10k tenants (the PR-7 drift bug) — accumulate in \
+                             f64 and narrow once via util::money::narrow"
+                        ),
+                    ));
+                }
+            }
+        }
+        // (b) money identifier narrowed with `as f32`
+        for (_, ident) in narrowed_money_idents(line) {
+            out.push(Finding::new(
+                &f.path,
+                idx,
+                N1,
+                format!(
+                    "money value `{ident}` narrowed with `as f32`: the only sanctioned \
+                     f64→f32 money edge is util::money::narrow — accumulate in f64 and \
+                     narrow there"
+                ),
+            ));
+        }
+        // (c) money summed in f32
+        if line.contains(".sum::<f32>()") && mentions_money(&statement_window(&f.code, idx)) {
+            out.push(Finding::new(
+                &f.path,
+                idx,
+                N1,
+                "money summed with .sum::<f32>(): accumulate in f64 (`.sum::<f64>()`) and \
+                 narrow once at the edge via util::money::narrow"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Token rules (D1, D2, D3, N1) for one preprocessed file, before
+/// allow suppression.
+pub fn lint_file(f: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if in_scope_d1(&f.path) {
+        rule_d1(f, &mut out);
+    }
+    if in_scope_d2(&f.path) {
+        rule_d2(f, &mut out);
+    }
+    rule_d3(f, &mut out);
+    if f.path.starts_with("rust/src/") {
+        rule_n1(f, &mut out);
+    }
+    out
+}
+
+// ------------------------------------------------------------------- S1
+
+/// Extract `\"key\":` occurrences from one raw source line (the
+/// emitters hand-roll JSON in string literals, so keys appear as
+/// escaped quotes in the source text).
+fn extract_json_keys(raw: &str, line: usize, out: &mut BTreeMap<String, usize>) {
+    let b = raw.as_bytes();
+    let mut i = 0;
+    while i + 1 < b.len() {
+        if b[i] == b'\\' && b[i + 1] == b'"' {
+            let start = i + 2;
+            let mut j = start;
+            while j < b.len() && is_ident_byte(b[j]) {
+                j += 1;
+            }
+            if j > start
+                && j + 2 < b.len()
+                && b[j] == b'\\'
+                && b[j + 1] == b'"'
+                && b[j + 2] == b':'
+            {
+                out.entry(raw[start..j].to_string()).or_insert(line);
+                i = j + 3;
+                continue;
+            }
+            i = start;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Keys emitted by the explain emitters in `report/mod.rs`, with the
+/// 0-based line each was first seen on.
+pub fn emitted_explain_keys(report: &ScannedFile) -> BTreeMap<String, usize> {
+    let mut keys = BTreeMap::new();
+    let mut i = 0;
+    while i < report.code.len() {
+        let line = &report.code[i];
+        if line.contains("fn explain_json") || line.contains("fn fleet_explain_json") {
+            let end = body_end(&report.code, i);
+            for k in i..=end {
+                extract_json_keys(&report.raw[k], k, &mut keys);
+            }
+            i = end + 1;
+        } else {
+            i += 1;
+        }
+    }
+    keys
+}
+
+/// Parse the snapshot file: one key per line, `#` comments and blanks
+/// ignored.
+pub fn parse_key_snapshot(snapshot: &str) -> BTreeSet<String> {
+    snapshot
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+/// S1: diff emitted explain-v1 keys against the snapshot.
+pub fn rule_s1(report: &ScannedFile, snapshot: &str, snapshot_path: &str) -> Vec<Finding> {
+    let emitted = emitted_explain_keys(report);
+    let mut out = Vec::new();
+    if emitted.is_empty() {
+        out.push(Finding {
+            path: report.path.clone(),
+            line: 0,
+            rule: S1,
+            message: "no explain emitters found (fn explain_json / fn fleet_explain_json*): \
+                      S1 cannot verify the explain-v1 schema"
+                .to_string(),
+        });
+        return out;
+    }
+    let pinned = parse_key_snapshot(snapshot);
+    for (key, line) in &emitted {
+        if !pinned.contains(key) {
+            out.push(Finding::new(
+                &report.path,
+                *line,
+                S1,
+                format!(
+                    "explain-v1 emits key \"{key}\" missing from {snapshot_path}: additions \
+                     are fine but must update the snapshot in the same PR so the schema \
+                     change is reviewable"
+                ),
+            ));
+        }
+    }
+    for key in &pinned {
+        if !emitted.contains_key(key) {
+            out.push(Finding {
+                path: snapshot_path.to_string(),
+                line: 0,
+                rule: S1,
+                message: format!(
+                    "explain-v1 key \"{key}\" is pinned in {snapshot_path} but no longer \
+                     emitted: diagonal-scale/explain-v1 is additive-only — removals and \
+                     renames break consumers"
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------------- T1
+
+/// T1: reconcile `[[test]]`/`[[bench]]` path entries against the files
+/// actually present in `rust/tests` / `rust/benches` (file names only,
+/// e.g. `prop_fleet.rs`).
+pub fn rule_t1(cargo_toml: &str, tests: &[String], benches: &[String]) -> Vec<Finding> {
+    #[derive(PartialEq, Clone, Copy)]
+    enum Section {
+        Test,
+        Bench,
+        Other,
+    }
+    let mut section = Section::Other;
+    // registered (file name -> 0-based line) per kind
+    let mut reg_tests: BTreeMap<String, usize> = BTreeMap::new();
+    let mut reg_benches: BTreeMap<String, usize> = BTreeMap::new();
+    for (idx, line) in cargo_toml.lines().enumerate() {
+        let t = line.trim();
+        if t.starts_with("[[test]]") {
+            section = Section::Test;
+        } else if t.starts_with("[[bench]]") {
+            section = Section::Bench;
+        } else if t.starts_with('[') {
+            section = Section::Other;
+        } else if let Some(rest) = t.strip_prefix("path") {
+            let rest = rest.trim_start();
+            if let Some(v) = rest.strip_prefix('=') {
+                let v = v.trim().trim_matches('"');
+                let (dir, reg) = match section {
+                    Section::Test => ("rust/tests/", &mut reg_tests),
+                    Section::Bench => ("rust/benches/", &mut reg_benches),
+                    Section::Other => continue,
+                };
+                if let Some(name) = v.strip_prefix(dir) {
+                    reg.insert(name.to_string(), idx);
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (kind, dir, present, registered) in [
+        ("[[test]]", "rust/tests", tests, &reg_tests),
+        ("[[bench]]", "rust/benches", benches, &reg_benches),
+    ] {
+        for file in present {
+            if !registered.contains_key(file) {
+                out.push(Finding {
+                    path: "Cargo.toml".to_string(),
+                    line: 0,
+                    rule: T1,
+                    message: format!(
+                        "{dir}/{file} has no {kind} path entry in Cargo.toml: auto-discovery \
+                         is off (custom paths), so the target silently never runs"
+                    ),
+                });
+            }
+        }
+        for (file, line) in registered {
+            if !present.contains(file) {
+                out.push(Finding::new(
+                    "Cargo.toml",
+                    *line,
+                    T1,
+                    format!(
+                        "Cargo.toml registers {dir}/{file} as a {kind} target but the file \
+                         does not exist"
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// --------------------------------------------------------------- driver
+
+/// Whole-run result: findings after allow suppression, plus counters.
+pub struct Report {
+    /// Surviving findings, sorted by (path, line, rule).
+    pub findings: Vec<Finding>,
+    /// Source files scanned.
+    pub files_scanned: usize,
+    /// Inline allow directives present in the tree (justified or not).
+    pub allow_directives: usize,
+    /// Findings suppressed by a justified allow.
+    pub suppressed: usize,
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Lint the repository rooted at `root` (the directory holding
+/// `Cargo.toml`, `rust/`, and `config/`).
+pub fn lint_repo(root: &Path) -> std::io::Result<Report> {
+    if !root.join("rust/src").is_dir() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            format!("{} does not look like the repo root (no rust/src)", root.display()),
+        ));
+    }
+    let mut files = Vec::new();
+    walk_rs(&root.join("rust/src"), &mut files)?;
+    walk_rs(&root.join("rust/tests"), &mut files)?;
+    walk_rs(&root.join("rust/benches"), &mut files)?;
+
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    let mut allow_directives = 0usize;
+    let mut report_file: Option<ScannedFile> = None;
+    let files_scanned = files.len();
+
+    for path in &files {
+        let src = std::fs::read_to_string(path)?;
+        let f = ScannedFile::parse(&rel(root, path), &src);
+        allow_directives += f.allows.len();
+        findings.extend(f.allow_findings());
+        for finding in lint_file(&f) {
+            if f.allowed(finding.line - 1, finding.rule) {
+                suppressed += 1;
+            } else {
+                findings.push(finding);
+            }
+        }
+        if f.path == "rust/src/report/mod.rs" {
+            report_file = Some(f);
+        }
+    }
+
+    // S1: emitted explain keys vs the checked-in snapshot
+    let snapshot_path = "config/explain_v1.keys";
+    match (&report_file, std::fs::read_to_string(root.join(snapshot_path))) {
+        (Some(report), Ok(snapshot)) => {
+            findings.extend(rule_s1(report, &snapshot, snapshot_path));
+        }
+        (Some(_), Err(_)) => findings.push(Finding {
+            path: snapshot_path.to_string(),
+            line: 0,
+            rule: S1,
+            message: "explain-v1 key snapshot is missing: regenerate it from the emitters \
+                      in rust/src/report/mod.rs"
+                .to_string(),
+        }),
+        (None, _) => findings.push(Finding {
+            path: "rust/src/report/mod.rs".to_string(),
+            line: 0,
+            rule: S1,
+            message: "rust/src/report/mod.rs not found: S1 cannot verify the explain-v1 \
+                      schema"
+                .to_string(),
+        }),
+    }
+
+    // T1: Cargo.toml registration vs files on disk
+    let cargo = std::fs::read_to_string(root.join("Cargo.toml"))?;
+    let list_names = |dir: &str| -> std::io::Result<Vec<String>> {
+        let mut v = Vec::new();
+        walk_rs(&root.join(dir), &mut v)?;
+        Ok(v.iter()
+            .filter_map(|p| p.file_name().map(|n| n.to_string_lossy().into_owned()))
+            .collect())
+    };
+    findings.extend(rule_t1(&cargo, &list_names("rust/tests")?, &list_names("rust/benches")?));
+
+    if allow_directives > MAX_ALLOWS {
+        findings.push(Finding {
+            path: "rust".to_string(),
+            line: 0,
+            rule: ALLOW_BUDGET,
+            message: format!(
+                "{allow_directives} inline simlint allows exceed the tree-wide budget of \
+                 {MAX_ALLOWS}: fix findings instead of allowlisting them"
+            ),
+        });
+    }
+
+    findings.sort();
+    Ok(Report { findings, files_scanned, allow_directives, suppressed })
+}
+
+// ----------------------------------------------------------------- json
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a [`Report`] as machine-readable JSON (hand-rolled: the tool
+/// is dependency-free; schema `diagonal-scale/simlint-v1`).
+pub fn to_json(report: &Report) -> String {
+    let mut out = String::from("{\"schema\":\"diagonal-scale/simlint-v1\"");
+    let _ = write!(
+        out,
+        ",\"files_scanned\":{},\"allow_directives\":{},\"suppressed\":{},\"clean\":{}",
+        report.files_scanned,
+        report.allow_directives,
+        report.suppressed,
+        report.findings.is_empty()
+    );
+    out.push_str(",\"rules\":[");
+    for (i, (id, summary)) in RULES.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"id\":\"{}\",\"summary\":\"{}\"}}",
+            json_escape(id),
+            json_escape(summary)
+        );
+    }
+    out.push_str("],\"findings\":[");
+    for (i, f) in report.findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"rule\":\"{}\",\"path\":\"{}\",\"line\":{},\"message\":\"{}\"}}",
+            json_escape(f.rule),
+            json_escape(&f.path),
+            f.line,
+            json_escape(&f.message)
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,84 @@
+//! `simlint` CLI — lint the repo and print findings as
+//! `path:line [rule-id] message` (or `--json`).
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: simlint [--json] [--root <dir>]");
+    eprintln!();
+    eprintln!("Scans rust/src, rust/tests, rust/benches, and Cargo.toml under");
+    eprintln!("<dir> (default: current directory, walking up to find rust/src)");
+    eprintln!("and enforces the diagonal-scale invariants:");
+    for (id, summary) in simlint::RULES {
+        eprintln!("  {id:<28} {summary}");
+    }
+    ExitCode::from(2)
+}
+
+/// Find the repo root: `--root` if given, else walk up from cwd until
+/// a directory containing `rust/src` appears.
+fn find_root(explicit: Option<PathBuf>) -> Option<PathBuf> {
+    if let Some(r) = explicit {
+        return Some(r);
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(dir) => root = Some(PathBuf::from(dir)),
+                None => return usage(),
+            },
+            "--help" | "-h" => return usage(),
+            _ => return usage(),
+        }
+    }
+    let Some(root) = find_root(root) else {
+        eprintln!("simlint: no repo root found (no rust/src upward of cwd); use --root");
+        return ExitCode::from(2);
+    };
+    let report = match simlint::lint_repo(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("simlint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if json {
+        println!("{}", simlint::to_json(&report));
+    } else {
+        for f in &report.findings {
+            println!("{}:{} [{}] {}", f.path, f.line, f.rule, f.message);
+        }
+        println!(
+            "simlint: {} file(s) scanned, {} finding(s), {} allow directive(s), \
+             {} suppressed",
+            report.files_scanned,
+            report.findings.len(),
+            report.allow_directives,
+            report.suppressed
+        );
+    }
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

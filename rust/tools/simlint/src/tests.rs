@@ -1,0 +1,400 @@
+//! simlint self-tests: scanner unit tests, one firing + one passing
+//! fixture per rule, lint_repo end-to-end on a synthetic tree, and
+//! the real-tree gate (the repo itself must lint clean).
+
+use super::*;
+
+/// Run the token rules on one file and apply allow suppression the
+/// same way `lint_repo` does. Returns (net findings, suppressed).
+fn net_findings(path: &str, src: &str) -> (Vec<Finding>, usize) {
+    let f = ScannedFile::parse(path, src);
+    let mut out = f.allow_findings();
+    let mut suppressed = 0;
+    for finding in lint_file(&f) {
+        if f.allowed(finding.line - 1, finding.rule) {
+            suppressed += 1;
+        } else {
+            out.push(finding);
+        }
+    }
+    (out, suppressed)
+}
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ------------------------------------------------------------- scanner
+
+#[test]
+fn strip_blanks_comments_and_strings() {
+    let src =
+        "let a = 1; // HashMap here\nlet s = \"HashMap\";\n/* HashMap\n HashMap */ let b = 2;";
+    let code = strip_source(src);
+    assert_eq!(code.len(), 4);
+    assert!(!code.iter().any(|l| l.contains("HashMap")));
+    assert!(code[0].contains("let a = 1;"));
+    assert!(code[1].contains("let s = \"       \";"));
+    assert!(code[3].contains("let b = 2;"));
+}
+
+#[test]
+fn strip_handles_raw_strings_and_nesting() {
+    let src = "let r = r#\"Instant::now \" still raw\"#; let x = 3;\n/* outer /* inner */ still comment */ let y = 4;";
+    let code = strip_source(src);
+    assert!(!code[0].contains("Instant"));
+    assert!(code[0].contains("let x = 3;"));
+    assert!(!code[1].contains("inner"));
+    assert!(code[1].contains("let y = 4;"));
+}
+
+#[test]
+fn strip_distinguishes_lifetimes_from_char_literals() {
+    let src = "fn f<'a>(x: &'a str) -> char { let c = 'H'; let d = '\\n'; c.min(d) }";
+    let code = strip_source(src);
+    assert!(code[0].contains("fn f<'a>(x: &'a str)"));
+    assert!(!code[0].contains("'H'"));
+}
+
+#[test]
+fn strip_preserves_escaped_quote_in_string() {
+    let src = "let s = \"he said \\\"hi\\\" loudly\"; let z = 5;";
+    let code = strip_source(src);
+    assert!(!code[0].contains("hi"));
+    assert!(code[0].contains("let z = 5;"));
+}
+
+#[test]
+fn token_matching_respects_ident_boundaries() {
+    assert!(has_token("use std::collections::HashMap;", "HashMap"));
+    assert!(has_token("let m: HashMap<u32, u32>;", "HashMap"));
+    assert!(!has_token("let m = MyHashMapLike::new();", "HashMap"));
+    assert!(!has_token("let hashmap = 1;", "HashMap"));
+    assert!(has_token("std::time::Instant::now()", "Instant::now"));
+}
+
+#[test]
+fn money_identifier_detection() {
+    assert!(mentions_money("let total_cost = 1.0;"));
+    assert!(mentions_money("spend_f64()"));
+    assert!(!mentions_money("let cos = angle.cos();"));
+    assert!(!mentions_money("let pending = 3;"));
+}
+
+#[test]
+fn narrowing_walks_back_through_call_and_index_groups() {
+    assert_eq!(narrowed_money_idents("self.spend_f64() as f32").len(), 1);
+    assert_eq!(narrowed_money_idents("let x = spend as f32;").len(), 1);
+    assert!(narrowed_money_idents("frac.max(0.0) as f32").is_empty());
+    assert!(narrowed_money_idents("cs[0] as f32").is_empty());
+    assert!(narrowed_money_idents("let y = count as f32;").is_empty());
+}
+
+// ------------------------------------------------------------ fixtures
+
+#[test]
+fn d1_fires_on_wall_clock() {
+    let (f, _) = net_findings("rust/src/fleet/fixture.rs", include_str!("../fixtures/d1_fire.rs"));
+    assert_eq!(rules_of(&f), vec![D1, D1, D1], "{f:?}");
+}
+
+#[test]
+fn d1_passes_on_injected_clock() {
+    let (f, _) = net_findings("rust/src/fleet/fixture.rs", include_str!("../fixtures/d1_pass.rs"));
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn d1_skips_benchkit() {
+    let (f, _) = net_findings("rust/src/benchkit/mod.rs", include_str!("../fixtures/d1_fire.rs"));
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn d2_fires_on_hash_containers() {
+    let (f, _) = net_findings("rust/src/policy/fixture.rs", include_str!("../fixtures/d2_fire.rs"));
+    assert_eq!(rules_of(&f), vec![D2, D2, D2], "{f:?}");
+}
+
+#[test]
+fn d2_passes_on_btree() {
+    let (f, _) = net_findings("rust/src/policy/fixture.rs", include_str!("../fixtures/d2_pass.rs"));
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn d2_skips_runtime_stub() {
+    let (f, _) = net_findings("rust/src/runtime/mod.rs", include_str!("../fixtures/d2_fire.rs"));
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn d3_fires_on_partial_order() {
+    let (f, _) =
+        net_findings("rust/src/cluster/fixture.rs", include_str!("../fixtures/d3_fire.rs"));
+    assert_eq!(rules_of(&f), vec![D3, D3], "{f:?}");
+    // the sort-key call and the impl signature, not the body's inner call
+    assert!(f[0].message.contains("total_cmp"));
+    assert!(f[1].message.contains("delegate"));
+}
+
+#[test]
+fn d3_passes_on_total_cmp_delegation() {
+    let (f, _) =
+        net_findings("rust/src/cluster/fixture.rs", include_str!("../fixtures/d3_pass.rs"));
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn n1_fires_on_f32_money() {
+    let (f, _) = net_findings("rust/src/fleet/fixture.rs", include_str!("../fixtures/n1_fire.rs"));
+    assert_eq!(rules_of(&f), vec![N1, N1, N1], "{f:?}");
+}
+
+#[test]
+fn n1_passes_on_f64_accumulation_with_allowed_edge() {
+    let (f, suppressed) =
+        net_findings("rust/src/util/money.rs", include_str!("../fixtures/n1_pass.rs"));
+    assert!(f.is_empty(), "{f:?}");
+    assert_eq!(suppressed, 1, "the sanctioned edge is allow-suppressed");
+}
+
+#[test]
+fn s1_passes_on_matching_snapshot() {
+    let report =
+        ScannedFile::parse("rust/src/report/mod.rs", include_str!("../fixtures/s1_report.rs"));
+    let f = rule_s1(&report, include_str!("../fixtures/s1_pass.keys"), "s1_pass.keys");
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn s1_fires_on_addition_and_removal() {
+    let report =
+        ScannedFile::parse("rust/src/report/mod.rs", include_str!("../fixtures/s1_report.rs"));
+    let f = rule_s1(&report, include_str!("../fixtures/s1_fire.keys"), "s1_fire.keys");
+    assert_eq!(rules_of(&f), vec![S1, S1], "{f:?}");
+    let msgs = format!("{f:?}");
+    assert!(msgs.contains("\\\"cost\\\"") && msgs.contains("missing from"), "{msgs}");
+    assert!(msgs.contains("\\\"vanished\\\"") && msgs.contains("no longer emitted"), "{msgs}");
+}
+
+#[test]
+fn s1_keys_only_from_emitters() {
+    let report =
+        ScannedFile::parse("rust/src/report/mod.rs", include_str!("../fixtures/s1_report.rs"));
+    let keys: Vec<String> = emitted_explain_keys(&report).into_keys().collect();
+    assert_eq!(keys, ["cost", "schema", "score", "tenant", "v"]);
+    assert!(!keys.contains(&"unrelated".to_string()), "non-emitter keys excluded");
+}
+
+#[test]
+fn t1_passes_on_reconciled_manifest() {
+    let f = rule_t1(
+        include_str!("../fixtures/t1_pass.toml"),
+        &["alpha.rs".to_string()],
+        &["beta.rs".to_string()],
+    );
+    assert!(f.is_empty(), "{f:?}");
+}
+
+#[test]
+fn t1_fires_on_orphans_and_ghosts() {
+    let f = rule_t1(
+        include_str!("../fixtures/t1_fire.toml"),
+        &["alpha.rs".to_string(), "orphan.rs".to_string()],
+        &["beta.rs".to_string(), "stray.rs".to_string()],
+    );
+    assert_eq!(rules_of(&f), vec![T1, T1, T1], "{f:?}");
+    let msgs = format!("{f:?}");
+    assert!(msgs.contains("orphan.rs") && msgs.contains("stray.rs"), "{msgs}");
+    assert!(msgs.contains("ghost.rs") && msgs.contains("does not exist"), "{msgs}");
+}
+
+// --------------------------------------------------------------- allows
+
+#[test]
+fn allow_requires_justification() {
+    let src = "pub fn f() -> f32 {\n    // simlint: allow(n1-money-in-f64)\n    spend as f32\n}\n";
+    let (f, suppressed) = net_findings("rust/src/fixture.rs", src);
+    // unjustified: the directive itself fires AND the finding survives
+    assert_eq!(suppressed, 0);
+    assert_eq!(rules_of(&f), vec![ALLOW, N1], "{f:?}");
+}
+
+#[test]
+fn allow_with_unknown_rule_fires() {
+    let src = "// simlint: allow(zz-bogus): because.\npub fn f() {}\n";
+    let (f, _) = net_findings("rust/src/fixture.rs", src);
+    assert_eq!(rules_of(&f), vec![ALLOW], "{f:?}");
+    assert!(f[0].message.contains("unknown rule id"));
+}
+
+#[test]
+fn allow_only_covers_adjacent_line() {
+    let src = "// simlint: allow(n1-money-in-f64): too far away.\n\n\npub fn f(spend: f64) -> f32 {\n    spend as f32\n}\n";
+    let (f, suppressed) = net_findings("rust/src/fixture.rs", src);
+    assert_eq!(suppressed, 0);
+    assert_eq!(rules_of(&f), vec![N1], "{f:?}");
+}
+
+#[test]
+fn allow_for_wrong_rule_does_not_suppress() {
+    let src = "pub fn f(spend: f64) -> f32 {\n    // simlint: allow(d1-no-wall-clock): wrong rule.\n    spend as f32\n}\n";
+    let (f, suppressed) = net_findings("rust/src/fixture.rs", src);
+    assert_eq!(suppressed, 0);
+    assert_eq!(rules_of(&f), vec![N1], "{f:?}");
+}
+
+// ------------------------------------------------- lint_repo end-to-end
+
+struct TempTree(PathBuf);
+
+impl TempTree {
+    fn new(tag: &str) -> Self {
+        let root =
+            std::env::temp_dir().join(format!("simlint_{}_{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(root.join("rust/src/report")).unwrap();
+        std::fs::create_dir_all(root.join("config")).unwrap();
+        Self(root)
+    }
+
+    fn write(&self, rel: &str, content: &str) {
+        let p = self.0.join(rel);
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(p, content).unwrap();
+    }
+}
+
+impl Drop for TempTree {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+const MINI_REPORT: &str =
+    "pub fn explain_json(v: u32) -> String {\n    format!(\"{{\\\"v\\\":{v}}}\")\n}\n";
+
+fn mini_tree(tag: &str) -> TempTree {
+    let t = TempTree::new(tag);
+    t.write("rust/src/report/mod.rs", MINI_REPORT);
+    t.write("config/explain_v1.keys", "v\n");
+    t.write("Cargo.toml", "[package]\nname = \"demo\"\n");
+    t
+}
+
+#[test]
+fn lint_repo_clean_on_minimal_tree() {
+    let t = mini_tree("clean");
+    let report = lint_repo(&t.0).unwrap();
+    assert!(report.findings.is_empty(), "{:?}", report.findings);
+    assert_eq!(report.files_scanned, 1);
+}
+
+#[test]
+fn lint_repo_enforces_allow_budget() {
+    let t = mini_tree("budget");
+    let mut src = String::from("pub fn f() {}\n");
+    for i in 0..(MAX_ALLOWS + 1) {
+        src.push_str(&format!(
+            "// simlint: allow(d1-no-wall-clock): budget filler {i}.\n"
+        ));
+    }
+    t.write("rust/src/lib.rs", &src);
+    let report = lint_repo(&t.0).unwrap();
+    assert_eq!(rules_of(&report.findings), vec![ALLOW_BUDGET], "{:?}", report.findings);
+    assert_eq!(report.allow_directives, MAX_ALLOWS + 1);
+}
+
+#[test]
+fn lint_repo_flags_missing_snapshot() {
+    let t = mini_tree("nosnap");
+    std::fs::remove_file(t.0.join("config/explain_v1.keys")).unwrap();
+    let report = lint_repo(&t.0).unwrap();
+    assert_eq!(rules_of(&report.findings), vec![S1], "{:?}", report.findings);
+}
+
+#[test]
+fn json_output_is_well_formed() {
+    let t = mini_tree("json");
+    t.write("rust/src/bad.rs", "pub fn f() { let _ = std::time::Instant::now(); }\n");
+    let report = lint_repo(&t.0).unwrap();
+    let json = to_json(&report);
+    assert!(json.starts_with("{\"schema\":\"diagonal-scale/simlint-v1\""));
+    assert!(json.contains("\"clean\":false"));
+    assert!(json.contains("\"rule\":\"d1-no-wall-clock\""));
+    assert!(json.contains("\"path\":\"rust/src/bad.rs\""));
+    // every quote inside messages must be escaped: a raw parse sanity
+    // check without a JSON dependency — balanced braces and no bare
+    // control characters.
+    assert!(!json.chars().any(|c| (c as u32) < 0x20));
+}
+
+// ------------------------------------------------------ real-tree gate
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../../..").canonicalize().unwrap()
+}
+
+#[test]
+fn real_tree_lints_clean() {
+    let report = lint_repo(&repo_root()).unwrap();
+    let rendered: Vec<String> = report
+        .findings
+        .iter()
+        .map(|f| format!("{}:{} [{}] {}", f.path, f.line, f.rule, f.message))
+        .collect();
+    assert!(report.findings.is_empty(), "repo must lint clean:\n{}", rendered.join("\n"));
+    assert!(
+        report.allow_directives <= MAX_ALLOWS,
+        "allow budget: {} > {}",
+        report.allow_directives,
+        MAX_ALLOWS
+    );
+    assert!(report.files_scanned > 30, "expected to scan the real tree");
+}
+
+#[test]
+fn real_tree_truncated_snapshot_fails_s1() {
+    let root = repo_root();
+    let report_src = std::fs::read_to_string(root.join("rust/src/report/mod.rs")).unwrap();
+    let report = ScannedFile::parse("rust/src/report/mod.rs", &report_src);
+    let snapshot = std::fs::read_to_string(root.join("config/explain_v1.keys")).unwrap();
+    let keys: Vec<&str> = snapshot
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.trim_start().starts_with('#'))
+        .collect();
+    assert!(keys.len() > 10, "real snapshot should pin a substantial key set");
+    // drop the last key: simlint must flag the unreviewed addition
+    let truncated = keys[..keys.len() - 1].join("\n");
+    let f = rule_s1(&report, &truncated, "config/explain_v1.keys");
+    assert!(
+        f.iter().any(|x| x.rule == S1 && x.message.contains("missing from")),
+        "deleting a pinned key must fail the gate: {f:?}"
+    );
+}
+
+#[test]
+fn real_tree_unregistered_test_fails_t1() {
+    let root = repo_root();
+    let cargo = std::fs::read_to_string(root.join("Cargo.toml")).unwrap();
+    let mut tests: Vec<String> = std::fs::read_dir(root.join("rust/tests"))
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.file_name().to_string_lossy().into_owned()))
+        .filter(|n| n.ends_with(".rs"))
+        .collect();
+    tests.sort();
+    let benches: Vec<String> = std::fs::read_dir(root.join("rust/benches"))
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.file_name().to_string_lossy().into_owned()))
+        .filter(|n| n.ends_with(".rs"))
+        .collect();
+    assert!(rule_t1(&cargo, &tests, &benches).is_empty(), "real manifest reconciles");
+    // dropping an unregistered file into rust/tests must fail the gate
+    tests.push("zz_unregistered.rs".to_string());
+    let f = rule_t1(&cargo, &tests, &benches);
+    assert!(
+        f.iter().any(|x| x.rule == T1 && x.message.contains("zz_unregistered.rs")),
+        "{f:?}"
+    );
+}
