@@ -5,7 +5,7 @@
 
 .DEFAULT_GOAL := help
 
-.PHONY: help build test doc bench-compile examples lint-sim fleet-demo placement-demo explain-demo serverless-demo fleet-scale-demo artifacts
+.PHONY: help build test doc bench-compile examples lint-sim fleet-demo placement-demo explain-demo serverless-demo fleet-scale-demo metrics-demo artifacts
 
 help: ## list the available targets
 	@grep -E '^[a-zA-Z_-]+:.*?## ' $(MAKEFILE_LIST) | awk 'BEGIN {FS = ":.*?## "}; {printf "  %-14s %s\n", $$1, $$2}'
@@ -23,7 +23,7 @@ doc: ## build the API docs with warnings denied (the CI doc gate)
 bench-compile: ## compile every bench target without running it
 	cargo bench --no-run
 
-lint-sim: ## simlint gate: determinism (D1-D3), money-in-f64 (N1), explain-v1 additivity (S1), test registration (T1)
+lint-sim: ## simlint gate: determinism (D1-D3), money-in-f64 (N1), schema additivity (S1/S2), test registration (T1)
 	cargo run -q -p simlint
 	@cargo run -q -p simlint -- --json | grep -q '"schema":"diagonal-scale/simlint-v1"' && echo "lint-sim: --json smoke ok"
 
@@ -47,6 +47,14 @@ fleet-scale-demo: ## 2048-tenant dirty-queue smoke: per-tick planning_micros mus
 	cargo run --release -- fleet --tenants 2048 --serverless true --idle-fraction 0.95 --steps 60 > /tmp/fleet-scale-demo.out
 	@tail -n 5 /tmp/fleet-scale-demo.out
 	@grep -q 'planning_micros' /tmp/fleet-scale-demo.out && echo "fleet-scale-demo: planning_micros reported"
+
+metrics-demo: ## streaming-metrics smoke: bounded recorders + sampled ticks + prometheus/JSON export
+	cargo run --release -- fleet --tenants 256 --serverless true --steps 60 \
+		--stream-metrics 32 --ticks-sample 10 \
+		--metrics-out /tmp/metrics-demo.prom --metrics-json /tmp/metrics-demo.json > /tmp/metrics-demo.out
+	@grep -q 'ticks sampled' /tmp/metrics-demo.out && echo "metrics-demo: tick output bounded"
+	@grep -q '^fleet_spend_hourly' /tmp/metrics-demo.prom && echo "metrics-demo: prometheus exposition ok"
+	@grep -q '"schema":"diagonal-scale/metrics-v1"' /tmp/metrics-demo.json && echo "metrics-demo: metrics-v1 JSON ok"
 
 artifacts: ## AOT-lower the JAX/Pallas kernels to artifacts/ (needs jax)
 	cd python && python3 -m compile.aot --out-dir ../artifacts

@@ -183,7 +183,11 @@ fn main() {
                 SubstrateKind::Analytical
             }
         });
-        fleet.set_recording(false);
+        // bounded observation instead of none: the streaming recorder
+        // keeps summaries + sketches + 32 exemplars per tenant in O(1)
+        // memory, so the sweep now measures the honest control plane
+        // (observation included) rather than a blind one
+        fleet.enable_streaming_metrics(32);
         // opt in to wall-clock planning latency (the default planning
         // clock is deterministically zero)
         fleet.use_wall_clock();

@@ -1,0 +1,97 @@
+//! Bench M — observability-layer cost: per-op cost of the three
+//! sketches (HLL insert/estimate, streaming push vs exact-recorder
+//! push, registry render), so "metrics are O(1) and cheap" is a
+//! measured claim, not an assumed one.
+//!
+//! ```text
+//! cargo bench --bench metrics
+//! ```
+
+// Benches measure wall time by design; decision code is covered by
+// simlint's d1-no-wall-clock + clippy's disallowed_methods instead.
+#![allow(clippy::disallowed_methods)]
+
+use diagonal_scale::benchkit::{group, Bench};
+use diagonal_scale::metrics::hll::Hll;
+use diagonal_scale::metrics::{names, MetricsRegistry, Recorder, StepRecord, StreamingRecorder};
+use diagonal_scale::plane::Configuration;
+use diagonal_scale::sla::Violation;
+use diagonal_scale::workload::XorShift64;
+
+fn record(step: usize, latency: f32) -> StepRecord {
+    StepRecord {
+        step,
+        config: Configuration::new(1, 1),
+        lambda_req: 1000.0,
+        latency,
+        latency_raw: latency * 0.9,
+        throughput: 2000.0,
+        cost: 1.0,
+        objective: 0.1,
+        violation: Violation::default(),
+    }
+}
+
+fn main() {
+    let b = Bench::default();
+
+    group("hyperloglog — insert and estimate cost (p=10, 1 KiB dense)");
+    {
+        let mut sketch = Hll::default();
+        let mut rng = XorShift64::new(7);
+        b.run("hll_insert_u64", || {
+            sketch.insert_u64(rng.next_u64());
+            sketch.m()
+        });
+        let stats = b.run("hll_estimate", || sketch.estimate());
+        b.report_metric("hll_estimate", stats.mean.as_secs_f64() * 1e9, "ns/call");
+        b.report_metric("hll memory", sketch.m() as f64, "registers (1 B each)");
+    }
+
+    group("recorder push — exact (grows) vs streaming (O(1) memory)");
+    {
+        let mut rng = XorShift64::new(11);
+        let mut exact = Recorder::new();
+        let mut step = 0usize;
+        let e = b.run("recorder_push/exact", || {
+            step += 1;
+            exact.push(record(step, (rng.next_f64() * 0.05) as f32));
+            exact.len()
+        });
+        let mut stream = StreamingRecorder::new(32, 0x5EED);
+        let mut sstep = 0usize;
+        let s = b.run("recorder_push/streaming", || {
+            sstep += 1;
+            stream.push(record(sstep, (rng.next_f64() * 0.05) as f32));
+            stream.retained()
+        });
+        b.report_metric(
+            "streaming/exact push-cost ratio",
+            s.mean.as_secs_f64() / e.mean.as_secs_f64().max(1e-12),
+            "x",
+        );
+        b.report_metric("exact retained after sweep", exact.len() as f64, "records");
+        b.report_metric("streaming retained after sweep", stream.retained() as f64, "records");
+    }
+
+    group("registry — full exposition render (39 declared families)");
+    {
+        let mut reg = MetricsRegistry::new();
+        reg.declare_all();
+        let mut rng = XorShift64::new(13);
+        for i in 0..10_000u64 {
+            reg.inc(names::FLEET_TICKS_TOTAL, &[], 1);
+            reg.set(names::FLEET_SPEND_HOURLY, &[], i as f64);
+            reg.observe(
+                names::FLEET_PLANNING_SECONDS,
+                &[],
+                names::PLANNING_FLOOR,
+                rng.next_f64() * 1e-3,
+            );
+        }
+        let p = b.run("render_prometheus", || reg.render_prometheus().len());
+        let j = b.run("render_json", || reg.render_json().len());
+        b.report_metric("render_prometheus", p.mean.as_secs_f64() * 1e6, "us/render");
+        b.report_metric("render_json", j.mean.as_secs_f64() * 1e6, "us/render");
+    }
+}

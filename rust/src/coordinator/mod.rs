@@ -479,6 +479,21 @@ pub fn summarize(reports: &[TickReport]) -> CoordinatorSummary {
     }
 }
 
+/// Register a coordinator run's rollup into the pull-based export
+/// registry: run-level gauges from [`summarize`] plus a per-tick p99
+/// latency sketch under `coordinator_p99_seconds`.
+pub fn export_metrics(reports: &[TickReport], reg: &mut crate::metrics::MetricsRegistry) {
+    use crate::metrics::{names, LATENCY_FLOOR};
+    let s = summarize(reports);
+    reg.set(names::COORDINATOR_STEPS, &[], s.steps as f64);
+    reg.set(names::COORDINATOR_VIOLATIONS, &[], s.violations as f64);
+    reg.set(names::COORDINATOR_RECONFIGURATIONS, &[], s.reconfigurations as f64);
+    reg.set(names::COORDINATOR_MOVED_SHARDS, &[], s.total_moved_shards as f64);
+    for r in reports {
+        reg.observe(names::COORDINATOR_P99_SECONDS, &[], LATENCY_FLOOR, r.metrics.p99_latency);
+    }
+}
+
 /// Convenience: coordinator with a native policy on a fresh
 /// sampling-engine cluster.
 pub fn native_coordinator(

@@ -438,6 +438,26 @@ impl BudgetArbiter {
         Self { budget, fairness_k, planning: true, envelopes: None, indexed: true }
     }
 
+    /// Register the arbiter's configuration gauges into the pull-based
+    /// export registry (`fleet --metrics-out`): the budget every
+    /// admission runs against, the starvation guard, whether planning
+    /// admission is on, and the per-class envelope shares when set.
+    pub fn export_metrics(&self, reg: &mut crate::metrics::MetricsRegistry) {
+        use crate::metrics::names;
+        reg.set(names::ARBITER_BUDGET_HOURLY, &[], self.budget as f64);
+        reg.set(names::ARBITER_FAIRNESS_K, &[], self.fairness_k as f64);
+        reg.set(names::ARBITER_PLANNING, &[], if self.planning { 1.0 } else { 0.0 });
+        if let Some(env) = &self.envelopes {
+            for class in PriorityClass::ALL {
+                reg.set(
+                    names::ARBITER_ENVELOPE_SHARE,
+                    &[("class", class.label())],
+                    env.share(class) as f64,
+                );
+            }
+        }
+    }
+
     /// The PR-2 flat-denial baseline (first candidate only).
     pub fn flat(budget: f32, fairness_k: usize) -> Self {
         Self { planning: false, ..Self::new(budget, fairness_k) }

@@ -110,6 +110,7 @@ use std::sync::Arc;
 
 use crate::cluster::{ClusterParams, Event, EventCalendar, SubstrateKind};
 use crate::config::ModelConfig;
+use crate::metrics::{names as metric_names, Hll, LatencyHistogram, MetricsRegistry};
 use crate::placement::{PlacementConfig, PlacementSim};
 use crate::plane::Configuration;
 use crate::policy::BudgetHint;
@@ -134,6 +135,12 @@ pub const BUDGET_EPS: f32 = 1e-3;
 /// holds with slack — while bounding any missed staleness to ~4 hours
 /// of 1-minute ticks. [`FleetSimulator::set_refresh_k`] overrides.
 pub const REFRESH_K: usize = 256;
+
+/// Window length (ticks) for the `fleet_active_tenants_window` HLL
+/// gauge: the sketch of recently-active tenant ids is snapshotted and
+/// cleared every this-many ticks, so the gauge tracks *current*
+/// activity instead of the whole run's union.
+pub const METRICS_WINDOW: usize = 64;
 
 /// One tick's fleet-level outcome.
 ///
@@ -281,6 +288,19 @@ pub struct FleetSimulator {
     /// benches opt in to real time via [`Self::use_wall_clock`].
     clock: Box<dyn FnMut() -> u64>,
     step: usize,
+    /// Pull-based export registry: per-tick counters/gauges land here
+    /// during [`Self::tick`]; [`Self::export_metrics`] finalizes the
+    /// run-level gauges and sketch rollups. Observation only — nothing
+    /// on the decision path reads it.
+    registry: MetricsRegistry,
+    /// Distinct tenants that served real throughput, whole run.
+    active_hll: Hll,
+    /// Same, over the current [`METRICS_WINDOW`]-tick window.
+    active_window_hll: Hll,
+    /// Distinct `(tenant, configuration)` pairs served.
+    config_hll: Hll,
+    /// Guards [`Self::export_metrics`] against double-merging sketches.
+    exported: bool,
 }
 
 impl FleetSimulator {
@@ -329,6 +349,11 @@ impl FleetSimulator {
             ledger: SpendLedger::new(),
             clock: Box::new(|| 0),
             step: 0,
+            registry: MetricsRegistry::new(),
+            active_hll: Hll::default(),
+            active_window_hll: Hll::default(),
+            config_hll: Hll::default(),
+            exported: false,
         }
     }
 
@@ -557,6 +582,113 @@ impl FleetSimulator {
         }
     }
 
+    /// Switch every tenant to the bounded [`crate::metrics::
+    /// StreamingRecorder`]: summary accumulators + latency sketches +
+    /// a `cap`-record exemplar reservoir per tenant, so observation
+    /// memory is O(cap · N) regardless of tick count (the honest
+    /// 10k-tenant mode — reports still work, nothing grows with run
+    /// length). Observation only: tick timelines are bit-identical to
+    /// exact-recording runs.
+    pub fn enable_streaming_metrics(&mut self, cap: usize) {
+        for t in &mut self.tenants {
+            t.enable_streaming_metrics(cap);
+        }
+    }
+
+    /// The pull-based export registry as populated so far (per-tick
+    /// series only until [`Self::export_metrics`] runs).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    /// Finalize the export registry: pre-declare every pinned name
+    /// (`config/metrics_v1.names`), set the run-level HLL estimates and
+    /// observation-memory gauge, merge per-class latency sketches, and
+    /// fold in the arbiter/serverless gauges. Idempotent — repeated
+    /// calls (e.g. `--metrics-out` plus `--metrics-json`) render the
+    /// same snapshot.
+    pub fn export_metrics(&mut self) -> &MetricsRegistry {
+        if self.exported {
+            return &self.registry;
+        }
+        self.exported = true;
+        self.registry.declare_all();
+        self.registry.set(metric_names::FLEET_ACTIVE_TENANTS_ESTIMATE, &[], self.active_hll.estimate());
+        self.registry.set(metric_names::FLEET_CONFIGS_VISITED_ESTIMATE, &[], self.config_hll.estimate());
+        if !self.active_window_hll.is_empty() {
+            // expose the still-open window rather than a stale gauge
+            self.registry.set(
+                metric_names::FLEET_ACTIVE_TENANTS_WINDOW,
+                &[],
+                self.active_window_hll.estimate(),
+            );
+        }
+        let retained: usize = self.tenants.iter().map(|t| t.retained_records()).sum();
+        self.registry.set(metric_names::FLEET_RETAINED_RECORDS, &[], retained as f64);
+        for class in PriorityClass::ALL {
+            let mut hist = LatencyHistogram::new(crate::metrics::LATENCY_FLOOR);
+            for t in self.tenants.iter().filter(|t| t.class() == class) {
+                hist.merge(&t.merged_histogram());
+            }
+            self.registry.merge_sketch(
+                metric_names::FLEET_LATENCY_SECONDS,
+                &[("class", class.label())],
+                &hist,
+            );
+        }
+        self.arbiter.export_metrics(&mut self.registry);
+        if let Some(storage) = &self.serverless {
+            storage.export_metrics(&mut self.registry);
+            let (mut cold, mut resumes, mut suspends) = (0u64, 0u64, 0u64);
+            for t in &self.tenants {
+                if let Some(s) = t.serverless() {
+                    cold += s.cold_start_ticks_total as u64;
+                    resumes += s.resumes as u64;
+                    suspends += s.suspends as u64;
+                }
+            }
+            self.registry.set(metric_names::SERVERLESS_COLD_START_TICKS, &[], cold as f64);
+            self.registry.set(metric_names::SERVERLESS_RESUMES, &[], resumes as f64);
+            self.registry.set(metric_names::SERVERLESS_SUSPENDS, &[], suspends as f64);
+        }
+        &self.registry
+    }
+
+    /// Per-tick registry updates (cheap: a handful of keyed counter
+    /// bumps; the expensive rollups wait for [`Self::export_metrics`]).
+    fn record_tick_metrics(&mut self, tick: &FleetTick, violating_steps: usize) {
+        let reg = &mut self.registry;
+        reg.inc(metric_names::FLEET_TICKS_TOTAL, &[], 1);
+        reg.set(metric_names::FLEET_TENANTS, &[], self.tenants.len() as f64);
+        reg.set(metric_names::FLEET_SPEND_HOURLY, &[], tick.spend as f64);
+        reg.set(metric_names::FLEET_PROJECTED_SPEND_HOURLY, &[], tick.projected_spend as f64);
+        reg.inc(metric_names::FLEET_MOVES_ADMITTED_TOTAL, &[], tick.admitted_moves as u64);
+        reg.inc(metric_names::FLEET_MOVES_DENIED_TOTAL, &[], tick.denied_moves as u64);
+        reg.inc(metric_names::FLEET_RESCUES_TOTAL, &[], tick.rescues as u64);
+        reg.inc(metric_names::FLEET_RESCUE_DENIALS_TOTAL, &[], tick.rescue_denials as u64);
+        reg.inc(metric_names::FLEET_MOVES_DEGRADED_TOTAL, &[], tick.degraded_moves as u64);
+        reg.inc(metric_names::FLEET_SHEDS_TOTAL, &[], tick.shed_moves as u64);
+        reg.inc(metric_names::FLEET_FRESH_PROPOSALS_TOTAL, &[], tick.fresh_proposals as u64);
+        reg.inc(metric_names::FLEET_VIOLATION_TICKS_TOTAL, &[], violating_steps as u64);
+        reg.set(metric_names::FLEET_SUSPENDED_TENANTS, &[], tick.suspended as f64);
+        reg.set(metric_names::FLEET_RESUMING_TENANTS, &[], tick.resuming as f64);
+        reg.inc(metric_names::FLEET_RESUME_ENDS_TOTAL, &[], tick.resume_ends as u64);
+        reg.observe(
+            metric_names::FLEET_PLANNING_SECONDS,
+            &[],
+            metric_names::PLANNING_FLOOR,
+            tick.planning_micros as f64 * 1e-6,
+        );
+        if (tick.step + 1) % METRICS_WINDOW == 0 {
+            reg.set(
+                metric_names::FLEET_ACTIVE_TENANTS_WINDOW,
+                &[],
+                self.active_window_hll.estimate(),
+            );
+            self.active_window_hll.clear();
+        }
+    }
+
     pub fn arbiter(&self) -> &BudgetArbiter {
         &self.arbiter
     }
@@ -654,8 +786,22 @@ impl FleetSimulator {
             }
         }
         let mut spend = 0.0f64;
+        let mut violating_steps = 0usize;
         for tn in &mut self.tenants {
-            spend += tn.serve(t).cost as f64;
+            let rec = tn.serve(t);
+            spend += rec.cost as f64;
+            if rec.violation.any() {
+                violating_steps += 1;
+            }
+            if rec.throughput > 0.0 {
+                self.active_hll.insert_u64(tn.id as u64);
+                self.active_window_hll.insert_u64(tn.id as u64);
+            }
+            // distinct (tenant, configuration) pairs actually served
+            let code = ((tn.id as u64) << 16)
+                ^ ((rec.config.h_idx as u64) << 8)
+                ^ rec.config.v_idx as u64;
+            self.config_hll.insert_u64(code);
         }
 
         // planning = hints + propose/replay + admission; the window is
@@ -787,7 +933,7 @@ impl FleetSimulator {
         }
 
         self.step += 1;
-        FleetTick {
+        let tick = FleetTick {
             step: t,
             spend: money::narrow(spend),
             projected_spend: adm.projected_spend,
@@ -802,7 +948,9 @@ impl FleetSimulator {
             resume_ends,
             fresh_proposals,
             planning_micros,
-        }
+        };
+        self.record_tick_metrics(&tick, violating_steps);
+        tick
     }
 
     /// Run `steps` ticks (traces repeat cyclically) and aggregate.

@@ -16,14 +16,19 @@ use super::tenant::{PriorityClass, Tenant};
 use super::FleetTick;
 
 /// Nearest-rank percentile over unsorted samples (0 when empty).
+/// One quickselect partition (`select_nth_unstable_by`, expected O(n))
+/// instead of a full sort — nearest-rank needs a single order
+/// statistic, and the seeded pin test below holds this path equal to
+/// the old sort-based one.
 pub fn percentile(xs: &[f32], q: f64) -> f32 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(f32::total_cmp);
     let rank = ((q / 100.0) * v.len() as f64).ceil() as usize;
-    v[rank.clamp(1, v.len()) - 1]
+    let idx = rank.clamp(1, v.len()) - 1;
+    let (_, nth, _) = v.select_nth_unstable_by(idx, f32::total_cmp);
+    *nth
 }
 
 /// One tenant's end-of-run rollup.
@@ -108,14 +113,22 @@ pub fn fleet_report(tenants: &[Tenant], ticks: &[FleetTick], budget: f32) -> Fle
     let tenant_reports: Vec<TenantReport> = tenants
         .iter()
         .map(|t| {
-            let lat: Vec<f32> = t.records().iter().map(|r| r.latency).collect();
-            let raw: Vec<f32> = t.records().iter().map(|r| r.latency_raw).collect();
+            // streaming tenants answer p95 from their O(1) latency
+            // sketches; exact tenants keep the raw-sample path
+            let (p95, p95_raw) = match t.streaming() {
+                Some(s) => (s.p95() as f32, s.p95_raw() as f32),
+                None => {
+                    let lat: Vec<f32> = t.records().iter().map(|r| r.latency).collect();
+                    let raw: Vec<f32> = t.records().iter().map(|r| r.latency_raw).collect();
+                    (percentile(&lat, 95.0), percentile(&raw, 95.0))
+                }
+            };
             TenantReport {
                 name: t.name().to_string(),
                 class: t.class(),
                 summary: t.summary(),
-                p95_latency: percentile(&lat, 95.0),
-                p95_latency_raw: percentile(&raw, 95.0),
+                p95_latency: p95,
+                p95_latency_raw: p95_raw,
                 sla_l_max: t.sla().l_max,
                 denied: t.denied_total,
                 rescues: t.rescued_total,
@@ -138,14 +151,30 @@ pub fn fleet_report(tenants: &[Tenant], ticks: &[FleetTick], budget: f32) -> Fle
             if members.is_empty() {
                 return None;
             }
-            let lat: Vec<f32> = members
-                .iter()
-                .flat_map(|t| t.records().iter().map(|r| r.latency))
-                .collect();
-            let raw: Vec<f32> = members
-                .iter()
-                .flat_map(|t| t.records().iter().map(|r| r.latency_raw))
-                .collect();
+            // class p95: when every member streams, merge their
+            // sketches (O(buckets) per tenant); otherwise concatenate
+            // the exact samples as before
+            let (p95, p95_raw) = if members.iter().all(|t| t.streaming().is_some()) {
+                let first = members[0].streaming().expect("checked above");
+                let mut lat_h = first.latency_histogram().clone();
+                let mut raw_h = first.raw_latency_histogram().clone();
+                for m in &members[1..] {
+                    let s = m.streaming().expect("checked above");
+                    lat_h.merge(s.latency_histogram());
+                    raw_h.merge(s.raw_latency_histogram());
+                }
+                (lat_h.quantile(0.95) as f32, raw_h.quantile(0.95) as f32)
+            } else {
+                let lat: Vec<f32> = members
+                    .iter()
+                    .flat_map(|t| t.records().iter().map(|r| r.latency))
+                    .collect();
+                let raw: Vec<f32> = members
+                    .iter()
+                    .flat_map(|t| t.records().iter().map(|r| r.latency_raw))
+                    .collect();
+                (percentile(&lat, 95.0), percentile(&raw, 95.0))
+            };
             // class p99: merge the members' sketches — O(buckets) per
             // tenant instead of concatenating every raw sample
             let mut class_hist = members[0].merged_histogram();
@@ -155,8 +184,8 @@ pub fn fleet_report(tenants: &[Tenant], ticks: &[FleetTick], budget: f32) -> Fle
             Some(ClassReport {
                 class,
                 tenants: members.len(),
-                p95_latency: percentile(&lat, 95.0),
-                p95_latency_raw: percentile(&raw, 95.0),
+                p95_latency: p95,
+                p95_latency_raw: p95_raw,
                 p99_latency: class_hist.p99() as f32,
                 total_cost: members.iter().map(|t| t.summary().total_cost).sum(),
                 denied: members.iter().map(|t| t.denied_total).sum(),
@@ -285,6 +314,23 @@ pub fn csv(report: &FleetReport) -> String {
 /// planning_micros` — the last two are the PR-7 planning-cost columns:
 /// how many tenants actually re-proposed and how long the planning
 /// phase took).
+/// Default seed for `fleet --ticks-sample` (any fixed value works; a
+/// named one keeps CLI runs replayable).
+pub const TICKS_SAMPLE_SEED: u64 = 0x71C5_5EED;
+
+/// Bound a tick timeline to at most `cap` rows with the shared
+/// Algorithm-R reservoir (`cap == 0` keeps every tick). Rows stay in
+/// step order, so a 10240-tenant run's per-tick output no longer grows
+/// with tick count.
+pub fn sample_ticks(ticks: &[FleetTick], cap: usize, seed: u64) -> Vec<FleetTick> {
+    crate::metrics::reservoir_sample(ticks, cap, seed)
+}
+
+/// [`ticks_csv`] over a reservoir-bounded timeline.
+pub fn ticks_csv_sampled(ticks: &[FleetTick], cap: usize, seed: u64) -> String {
+    ticks_csv(&sample_ticks(ticks, cap, seed))
+}
+
 pub fn ticks_csv(ticks: &[FleetTick]) -> String {
     let mut out = String::from(
         "step,spend,projected_spend,admitted,denied,rescues,degraded,sheds,suspended,resuming,resume_ends,fresh_proposals,planning_micros\n",
@@ -338,6 +384,86 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 50.0);
         assert_eq!(percentile(&[2.0], 95.0), 2.0);
         assert_eq!(percentile(&[], 95.0), 0.0);
+    }
+
+    /// The old sort-based implementation, kept as the oracle for the
+    /// quickselect rewrite.
+    fn percentile_sorted(xs: &[f32], q: f64) -> f32 {
+        if xs.is_empty() {
+            return 0.0;
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(f32::total_cmp);
+        let rank = ((q / 100.0) * v.len() as f64).ceil() as usize;
+        v[rank.clamp(1, v.len()) - 1]
+    }
+
+    #[test]
+    fn quickselect_percentile_equals_sort_based_path() {
+        let mut rng = crate::workload::XorShift64::new(0xC0FFEE);
+        for len in [1usize, 2, 3, 7, 50, 333, 1000] {
+            let xs: Vec<f32> = (0..len)
+                .map(|_| (rng.next_f64() * 10.0 - 5.0) as f32)
+                .collect();
+            for q in [0.0, 1.0, 37.5, 50.0, 90.0, 95.0, 99.0, 100.0] {
+                assert_eq!(
+                    percentile(&xs, q).to_bits(),
+                    percentile_sorted(&xs, q).to_bits(),
+                    "len {len} q {q}"
+                );
+            }
+        }
+        // duplicates and non-finite-free extremes
+        let xs = vec![1.0f32; 100];
+        assert_eq!(percentile(&xs, 99.0), 1.0);
+    }
+
+    #[test]
+    fn sampled_ticks_are_bounded_ordered_and_deterministic() {
+        let (res, _) = run_fleet();
+        let all = sample_ticks(&res.ticks, 0, TICKS_SAMPLE_SEED);
+        assert_eq!(all.len(), res.ticks.len(), "cap 0 keeps everything");
+        let some = sample_ticks(&res.ticks, 10, TICKS_SAMPLE_SEED);
+        assert_eq!(some.len(), 10);
+        assert!(some.windows(2).all(|w| w[0].step < w[1].step));
+        assert_eq!(
+            some.iter().map(|t| t.step).collect::<Vec<_>>(),
+            sample_ticks(&res.ticks, 10, TICKS_SAMPLE_SEED)
+                .iter()
+                .map(|t| t.step)
+                .collect::<Vec<_>>(),
+            "same seed, same sample"
+        );
+        let csv = ticks_csv_sampled(&res.ticks, 10, TICKS_SAMPLE_SEED);
+        assert_eq!(csv.lines().count(), 11, "header + cap rows");
+    }
+
+    #[test]
+    fn streaming_fleet_report_stays_close_to_exact() {
+        let cfg = ModelConfig::default_paper();
+        let base = TraceBuilder::paper(&cfg);
+        let mk = |i: usize| {
+            TenantSpec::from_config(
+                &cfg,
+                &format!("t-{i}"),
+                PriorityClass::ALL[i % 3],
+                base.shifted(i * 7),
+            )
+        };
+        let specs: Vec<TenantSpec> = (0..6).map(mk).collect();
+        let mut exact = FleetSimulator::new(&cfg, specs.clone(), 15.0, 3);
+        let mut stream = FleetSimulator::new(&cfg, specs, 15.0, 3);
+        stream.enable_streaming_metrics(16);
+        let re = exact.run(80);
+        let rs = stream.run(80);
+        for (a, b) in re.report.tenants.iter().zip(&rs.report.tenants) {
+            assert_eq!(a.summary, b.summary, "streaming summary drifted for {}", a.name);
+            if a.p95_latency > 0.0 {
+                let rel = (a.p95_latency - b.p95_latency).abs() / a.p95_latency;
+                assert!(rel < 0.05, "{}: p95 {} vs {}", a.name, a.p95_latency, b.p95_latency);
+            }
+            assert_eq!(a.p99_latency, b.p99_latency, "p99 path is shared");
+        }
     }
 
     #[test]

@@ -43,7 +43,7 @@ use std::sync::Arc;
 use crate::cluster::{ClusterParams, ClusterSim, EventSim, Substrate};
 use crate::config::{ModelConfig, MoveFlags};
 use crate::forecast::{Forecaster, Holt, SeasonalNaive};
-use crate::metrics::{LatencyHistogram, Recorder, StepRecord, Summary};
+use crate::metrics::{LatencyHistogram, Recorder, StepRecord, StreamingRecorder, Summary};
 use crate::plane::Configuration;
 use crate::policy::{BudgetHint, DiagonalScale, ForecastLookahead, Policy, PolicyContext};
 use crate::serverless::{Lifecycle, ServerlessParams, ServerlessState};
@@ -57,8 +57,9 @@ use crate::INFEASIBLE;
 pub use crate::policy::{Candidate, PriorityClass, Proposal, MAX_ALTERNATIVES};
 
 /// Resolution floor of the per-tenant latency histograms (latencies are
-/// in model units, O(1); segments must share a floor to merge).
-const HIST_FLOOR: f64 = 1e-5;
+/// in model units, O(1); segments must share a floor to merge — the
+/// canonical value lives in `metrics` so registry rollups merge too).
+const HIST_FLOOR: f64 = crate::metrics::LATENCY_FLOOR;
 
 /// Per-tenant demand predictor choice for forecast-driven proposals.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -195,6 +196,9 @@ pub struct Tenant {
     planner: TenantPlanner,
     current: Configuration,
     recorder: Recorder,
+    /// When set, recording streams into bounded sketches instead of the
+    /// exact recorder's unbounded `Vec` (the 10k-tenant mode).
+    streaming: Option<StreamingRecorder>,
     recording: bool,
     last_violation: bool,
     /// Consecutive denials while SLA-violating (fairness counter).
@@ -244,6 +248,7 @@ impl Tenant {
             planner: Box::new(DiagonalScale::diagonal()),
             current,
             recorder: Recorder::new(),
+            streaming: None,
             recording: true,
             last_violation: false,
             denial_streak: 0,
@@ -481,12 +486,57 @@ impl Tenant {
         self.recording = on;
     }
 
+    /// Switch recording to the O(1)-memory [`StreamingRecorder`]:
+    /// summary accumulators, latency sketches, and a `cap`-bounded
+    /// Algorithm-R exemplar reservoir replace the exact recorder's
+    /// unbounded `Vec<StepRecord>`. The reservoir seed is derived from
+    /// the tenant id, so fleets replay bit-identically. Observation
+    /// only — decisions never read the recorder.
+    pub fn enable_streaming_metrics(&mut self, cap: usize) {
+        let seed = 0x5EED_0B5Eu64 ^ (self.id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        self.streaming = Some(StreamingRecorder::new(cap, seed));
+    }
+
+    /// The bounded recorder, when streaming mode is on.
+    pub fn streaming(&self) -> Option<&StreamingRecorder> {
+        self.streaming.as_ref()
+    }
+
+    /// In exact mode: every recorded step. In streaming mode: the
+    /// exemplar reservoir (a uniform sample of the stream).
     pub fn records(&self) -> &[StepRecord] {
-        self.recorder.records()
+        match &self.streaming {
+            Some(s) => s.sample(),
+            None => self.recorder.records(),
+        }
+    }
+
+    /// Step records currently held in memory for this tenant — the
+    /// observation-memory proxy pinned constant-in-ticks under
+    /// streaming by `rust/tests/metrics_stream.rs`.
+    pub fn retained_records(&self) -> usize {
+        match &self.streaming {
+            Some(s) => s.retained(),
+            None => self.recorder.len(),
+        }
     }
 
     pub fn summary(&self) -> Summary {
-        self.recorder.summary()
+        match &self.streaming {
+            Some(s) => s.summary(),
+            None => self.recorder.summary(),
+        }
+    }
+
+    /// Route one served step into whichever recorder is active.
+    fn record_step(&mut self, rec: StepRecord) {
+        if !self.recording {
+            return;
+        }
+        match &mut self.streaming {
+            Some(s) => s.push(rec),
+            None => self.recorder.push(rec),
+        }
     }
 
     /// Demand at fleet tick `t` (traces repeat cyclically).
@@ -538,9 +588,7 @@ impl Tenant {
                     },
                 };
                 self.last_violation = rec.violation.any();
-                if self.recording {
-                    self.recorder.push(rec);
-                }
+                self.record_step(rec);
                 return rec;
             }
         }
@@ -594,12 +642,10 @@ impl Tenant {
             rec.cost += s.storage_cost();
         }
         self.last_violation = rec.violation.any();
-        if self.recording {
-            if rec.throughput > 0.0 && rec.latency > 0.0 {
-                self.hist.record(rec.latency as f64);
-            }
-            self.recorder.push(rec);
+        if self.recording && rec.throughput > 0.0 && rec.latency > 0.0 {
+            self.hist.record(rec.latency as f64);
         }
+        self.record_step(rec);
         rec
     }
 

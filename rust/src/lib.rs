@@ -76,8 +76,19 @@
 //!   Pallas-backed surface kernels on the decision path.
 //! * [`calibrate`] — online surface calibration from observations
 //!   (paper §VIII).
-//! * [`metrics`] / [`report`] — time-series recording and the Table I /
-//!   Figure 1–8 emitters.
+//! * [`metrics`] / [`report`] — time-series recording, the Table I /
+//!   Figure 1–8 emitters, and the sublinear observability layer:
+//!   [`metrics::StreamingRecorder`] replaces the exact
+//!   [`metrics::Recorder`] with O(1)-memory summary accumulators,
+//!   latency sketches, and a seeded Algorithm-R exemplar reservoir
+//!   (the exact recorder stays as the oracle it is property-pinned
+//!   against); [`metrics::hll`] is a dependency-free HyperLogLog for
+//!   distinct-active-tenants / configurations-visited / hosts-touched
+//!   counting; and [`metrics::registry`] is the pull-based export
+//!   surface every subsystem registers into, rendered as Prometheus
+//!   text (`fleet --metrics-out`) or versioned
+//!   `diagonal-scale/metrics-v1` JSON (`fleet --metrics-json`) with
+//!   the metric name set pinned in `config/metrics_v1.names`.
 //!
 //! Python never runs at request time: `make artifacts` lowers the
 //! JAX/Pallas model once, and this crate is self-contained afterwards.
@@ -110,6 +121,11 @@
 //!   (`s1-explain-additivity`): the emitted JSON key set is pinned in
 //!   `config/explain_v1.keys` (runtime complement:
 //!   `rust/tests/explain_schema.rs`).
+//! * **`metrics-v1` names are additive-only** (`s2-metrics-additivity`):
+//!   the metric families declared in `rust/src/metrics/names.rs` must
+//!   reconcile exactly with `config/metrics_v1.names`, so renaming or
+//!   dropping a metric breaks the lint, not a dashboard (runtime
+//!   complement: `rust/tests/metrics_export.rs`).
 //! * **Every test/bench is registered** (`t1-registration`):
 //!   auto-discovery is off (custom paths), so `Cargo.toml` must
 //!   reconcile with `rust/tests`/`rust/benches` or a dropped file

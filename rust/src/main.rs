@@ -130,6 +130,19 @@ COMMANDS:
                                   for `--dirty-planning false`
                 [--refresh-k <n>] mandatory re-propose interval for
                                   cached holds, in ticks (default 256)
+                [--stream-metrics <cap>] O(1)-memory observation: each
+                                  tenant keeps streaming accumulators,
+                                  a latency sketch, and a <cap>-record
+                                  exemplar reservoir instead of the
+                                  full step log (0 = exact recording,
+                                  default)
+                [--ticks-sample <k>] reservoir-bound the per-tick
+                                  output to k rows (0 = all, default)
+                [--metrics-out <file>] write the run's metric registry
+                                  as Prometheus text exposition
+                [--metrics-json <file>] write the same registry as
+                                  versioned JSON
+                                  (diagonal-scale/metrics-v1)
   placement   Cross-tenant bin-packing onto shared clusters: small
               tenants co-locate behind shared hosts (fair shares +
               contention knee), the packer replans on a cadence, and
@@ -623,6 +636,11 @@ fn main() -> Result<()> {
                 bail!("--explain-sample requires --explain <k>");
             }
             fleetsim.set_explain_sample(explain_sample);
+            let stream_metrics: usize = args.parse_num("stream-metrics", 0)?;
+            if stream_metrics > 0 {
+                fleetsim.enable_streaming_metrics(stream_metrics);
+            }
+            let ticks_sample: usize = args.parse_num("ticks-sample", 0)?;
             let res = fleetsim.run(steps);
             if explain > 0 {
                 for r in fleetsim.explain_log() {
@@ -657,7 +675,15 @@ fn main() -> Result<()> {
             } else if args.get("explain-out").is_some() {
                 bail!("--explain-out requires --explain <k>");
             }
-            for t in &res.ticks {
+            let shown = fleet::report::sample_ticks(
+                &res.ticks,
+                ticks_sample,
+                fleet::report::TICKS_SAMPLE_SEED,
+            );
+            if shown.len() < res.ticks.len() {
+                println!("(ticks sampled: showing {} of {})", shown.len(), res.ticks.len());
+            }
+            for t in &shown {
                 let sl = if serverless_on {
                     format!(
                         "  susp {:>2}  resuming {:>2}  wakes {}",
@@ -681,6 +707,14 @@ fn main() -> Result<()> {
                 );
             }
             println!("\n{}", fleet::report::table(&res.report));
+            if let Some(path) = args.get("metrics-out") {
+                std::fs::write(path, fleetsim.export_metrics().render_prometheus())?;
+                println!("wrote {path} (prometheus text)");
+            }
+            if let Some(path) = args.get("metrics-json") {
+                std::fs::write(path, fleetsim.export_metrics().render_json())?;
+                println!("wrote {path} ({})", diagonal_scale::metrics::METRICS_SCHEMA);
+            }
             if !res.within_budget(budget) {
                 bail!("fleet spend exceeded the budget (peak {:.2})", res.peak_spend());
             }

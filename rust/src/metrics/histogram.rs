@@ -113,6 +113,16 @@ impl LatencyHistogram {
         self.max
     }
 
+    /// Sum of all recorded values (exact, not bucketed).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// The resolution floor this histogram was built with.
+    pub fn floor(&self) -> f64 {
+        self.min_value
+    }
+
     pub fn p50(&self) -> f64 {
         self.quantile(0.50)
     }

@@ -1,14 +1,39 @@
 //! Time-series recording and summary statistics (paper §V.E: average
 //! latency, max latency, average/total cost, average objective, SLA
 //! violations decomposed into latency and throughput violations), plus
-//! a log-bucketed percentile histogram for the cluster substrate.
+//! the sublinear observability layer:
+//!
+//! * [`LatencyHistogram`] — log-bucketed percentile sketch (mergeable).
+//! * [`StreamingRecorder`] — O(1)-memory replacement for [`Recorder`]:
+//!   summary accumulators + latency sketches + an Algorithm-R exemplar
+//!   reservoir. [`Recorder`] stays as the exact oracle it is pinned
+//!   against.
+//! * [`hll`] — dependency-free HyperLogLog cardinality sketches for
+//!   distinct-active-tenants / configurations / hosts counting.
+//! * [`registry`] — pull-based export: counters, gauges, and histogram
+//!   series rendered as Prometheus text or `diagonal-scale/metrics-v1`
+//!   JSON, with the name set pinned in [`names`] /
+//!   `config/metrics_v1.names`.
 
 mod histogram;
+pub mod hll;
+pub mod names;
+pub mod registry;
+mod streaming;
 
 pub use histogram::LatencyHistogram;
+pub use hll::Hll;
+pub use registry::{MetricsRegistry, METRICS_SCHEMA};
+pub use streaming::{reservoir_sample, StreamingRecorder};
 
 use crate::plane::Configuration;
 use crate::sla::{Violation, ViolationCounter};
+
+/// Resolution floor shared by the per-tenant latency sketches: 10 µs
+/// in seconds-scale latency units. Values below (idle/suspended steps
+/// record zero latency) land in the underflow bucket and report as the
+/// floor.
+pub const LATENCY_FLOOR: f64 = 1e-5;
 
 /// Everything measured for one served simulation step.
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -1,0 +1,187 @@
+//! The `diagonal-scale/metrics-v1` name table.
+//!
+//! Every metric the registry exposes is declared here as a `&str`
+//! const and listed in [`ALL`] with its kind (and, for histograms, its
+//! bucket floor). The name set is **additive-only** and snapshot-pinned
+//! in `config/metrics_v1.names`, exactly like the explain-v1 keys:
+//! simlint's `s2-metrics-additivity` rule diffs the consts in this file
+//! against the snapshot on every push, and
+//! `rust/tests/metrics_export.rs` round-trips the rendered exposition
+//! against both. Add a metric → add the const, the [`ALL`] entry, and
+//! the snapshot line, in one commit.
+
+use super::LATENCY_FLOOR;
+
+/// How a metric accumulates, and therefore how it renders.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotonically increasing u64.
+    Counter,
+    /// Last-write-wins f64.
+    Gauge,
+    /// [`LatencyHistogram`](super::LatencyHistogram) sketch, rendered
+    /// as a Prometheus summary (quantile series + `_count`/`_sum`).
+    Histogram,
+}
+
+/// One pinned metric: name, kind, histogram floor (ignored unless
+/// [`MetricKind::Histogram`]), and help text for the exposition.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricDef {
+    pub name: &'static str,
+    pub kind: MetricKind,
+    pub floor: f64,
+    pub help: &'static str,
+}
+
+// Fleet control plane (registered every tick by `FleetSimulator::tick`).
+pub const FLEET_TICKS_TOTAL: &str = "fleet_ticks_total";
+pub const FLEET_TENANTS: &str = "fleet_tenants";
+pub const FLEET_SPEND_HOURLY: &str = "fleet_spend_hourly";
+pub const FLEET_PROJECTED_SPEND_HOURLY: &str = "fleet_projected_spend_hourly";
+pub const FLEET_MOVES_ADMITTED_TOTAL: &str = "fleet_moves_admitted_total";
+pub const FLEET_MOVES_DENIED_TOTAL: &str = "fleet_moves_denied_total";
+pub const FLEET_RESCUES_TOTAL: &str = "fleet_rescues_total";
+pub const FLEET_RESCUE_DENIALS_TOTAL: &str = "fleet_rescue_denials_total";
+pub const FLEET_MOVES_DEGRADED_TOTAL: &str = "fleet_moves_degraded_total";
+pub const FLEET_SHEDS_TOTAL: &str = "fleet_sheds_total";
+pub const FLEET_FRESH_PROPOSALS_TOTAL: &str = "fleet_fresh_proposals_total";
+pub const FLEET_VIOLATION_TICKS_TOTAL: &str = "fleet_violation_ticks_total";
+pub const FLEET_SUSPENDED_TENANTS: &str = "fleet_suspended_tenants";
+pub const FLEET_RESUMING_TENANTS: &str = "fleet_resuming_tenants";
+pub const FLEET_RESUME_ENDS_TOTAL: &str = "fleet_resume_ends_total";
+pub const FLEET_PLANNING_SECONDS: &str = "fleet_planning_seconds";
+
+// Fleet cardinality sketches (`metrics::hll`).
+pub const FLEET_ACTIVE_TENANTS_WINDOW: &str = "fleet_active_tenants_window";
+pub const FLEET_ACTIVE_TENANTS_ESTIMATE: &str = "fleet_active_tenants_estimate";
+pub const FLEET_CONFIGS_VISITED_ESTIMATE: &str = "fleet_configs_visited_estimate";
+
+// Fleet observation cost + latency rollup (set by `export_metrics`).
+pub const FLEET_RETAINED_RECORDS: &str = "fleet_retained_records";
+pub const FLEET_LATENCY_SECONDS: &str = "fleet_latency_seconds";
+
+// Budget arbiter.
+pub const ARBITER_BUDGET_HOURLY: &str = "arbiter_budget_hourly";
+pub const ARBITER_FAIRNESS_K: &str = "arbiter_fairness_k";
+pub const ARBITER_PLANNING: &str = "arbiter_planning";
+pub const ARBITER_ENVELOPE_SHARE: &str = "arbiter_envelope_share";
+
+// Serverless tier (storage service + tenant lifecycle counters).
+pub const SERVERLESS_STORAGE_GB: &str = "serverless_storage_gb";
+pub const SERVERLESS_STORAGE_COST_HOURLY: &str = "serverless_storage_cost_hourly";
+pub const SERVERLESS_REGISTERED_TENANTS: &str = "serverless_registered_tenants";
+pub const SERVERLESS_COLD_START_TICKS: &str = "serverless_cold_start_ticks";
+pub const SERVERLESS_RESUMES: &str = "serverless_resumes";
+pub const SERVERLESS_SUSPENDS: &str = "serverless_suspends";
+
+// Placement (shared-host bin-packing).
+pub const PLACEMENT_HOSTS: &str = "placement_hosts";
+pub const PLACEMENT_HOSTS_TOUCHED_ESTIMATE: &str = "placement_hosts_touched_estimate";
+pub const PLACEMENT_SPEND_HOURLY: &str = "placement_spend_hourly";
+
+// Single-cluster coordinator loop.
+pub const COORDINATOR_STEPS: &str = "coordinator_steps";
+pub const COORDINATOR_VIOLATIONS: &str = "coordinator_violations";
+pub const COORDINATOR_RECONFIGURATIONS: &str = "coordinator_reconfigurations";
+pub const COORDINATOR_MOVED_SHARDS: &str = "coordinator_moved_shards";
+pub const COORDINATOR_P99_SECONDS: &str = "coordinator_p99_seconds";
+
+/// Floor for the planning-latency sketch: 1 µs, in seconds.
+pub const PLANNING_FLOOR: f64 = 1e-6;
+
+const fn counter(name: &'static str, help: &'static str) -> MetricDef {
+    MetricDef { name, kind: MetricKind::Counter, floor: 0.0, help }
+}
+
+const fn gauge(name: &'static str, help: &'static str) -> MetricDef {
+    MetricDef { name, kind: MetricKind::Gauge, floor: 0.0, help }
+}
+
+const fn histogram(name: &'static str, floor: f64, help: &'static str) -> MetricDef {
+    MetricDef { name, kind: MetricKind::Histogram, floor, help }
+}
+
+/// Every pinned metric, in exposition order. `MetricsRegistry::
+/// declare_all` pre-registers each one so the exposition always
+/// carries the full pinned name set, even for subsystems that are off
+/// in a given run.
+pub const ALL: &[MetricDef] = &[
+    counter(FLEET_TICKS_TOTAL, "fleet ticks simulated"),
+    gauge(FLEET_TENANTS, "tenant databases under fleet control"),
+    gauge(FLEET_SPEND_HOURLY, "hourly fleet spend after the last tick"),
+    gauge(FLEET_PROJECTED_SPEND_HOURLY, "hourly spend if every admitted move actuates"),
+    counter(FLEET_MOVES_ADMITTED_TOTAL, "scaling moves admitted by the arbiter"),
+    counter(FLEET_MOVES_DENIED_TOTAL, "scaling moves denied outright"),
+    counter(FLEET_RESCUES_TOTAL, "SLA-repair moves funded by sheds"),
+    counter(FLEET_RESCUE_DENIALS_TOTAL, "SLA-repair moves the budget could not fund"),
+    counter(FLEET_MOVES_DEGRADED_TOTAL, "moves degraded to a cheaper ranked alternative"),
+    counter(FLEET_SHEDS_TOTAL, "volunteered sheds actuated"),
+    counter(FLEET_FRESH_PROPOSALS_TOTAL, "proposals recomputed (dirty-queue misses)"),
+    counter(FLEET_VIOLATION_TICKS_TOTAL, "tenant-ticks served in SLA violation"),
+    gauge(FLEET_SUSPENDED_TENANTS, "tenants parked at scale-to-zero"),
+    gauge(FLEET_RESUMING_TENANTS, "tenants inside a cold-start window"),
+    counter(FLEET_RESUME_ENDS_TOTAL, "cold-start windows completed"),
+    histogram(FLEET_PLANNING_SECONDS, PLANNING_FLOOR, "per-tick planning wall time"),
+    gauge(FLEET_ACTIVE_TENANTS_WINDOW, "HLL distinct active tenants, last closed window"),
+    gauge(FLEET_ACTIVE_TENANTS_ESTIMATE, "HLL distinct tenants active at least once"),
+    gauge(FLEET_CONFIGS_VISITED_ESTIMATE, "HLL distinct (tenant, config) pairs served"),
+    gauge(FLEET_RETAINED_RECORDS, "step records held in memory across all tenants"),
+    histogram(FLEET_LATENCY_SECONDS, LATENCY_FLOOR, "measured per-step latency, merged across tenants"),
+    gauge(ARBITER_BUDGET_HOURLY, "hourly budget the arbiter admits against"),
+    gauge(ARBITER_FAIRNESS_K, "starvation-guard threshold"),
+    gauge(ARBITER_PLANNING, "1 when degradation/shed planning is on"),
+    gauge(ARBITER_ENVELOPE_SHARE, "per-class discretionary spend share"),
+    gauge(SERVERLESS_STORAGE_GB, "tenant pages parked in shared storage"),
+    gauge(SERVERLESS_STORAGE_COST_HOURLY, "hourly bill for parked storage"),
+    gauge(SERVERLESS_REGISTERED_TENANTS, "tenants registered with the storage service"),
+    gauge(SERVERLESS_COLD_START_TICKS, "ticks spent inside cold-start windows"),
+    gauge(SERVERLESS_RESUMES, "suspend->active wakes completed"),
+    gauge(SERVERLESS_SUSPENDS, "active->suspended parks completed"),
+    gauge(PLACEMENT_HOSTS, "shared hosts currently live"),
+    gauge(PLACEMENT_HOSTS_TOUCHED_ESTIMATE, "HLL distinct hosts touched by placement actions"),
+    gauge(PLACEMENT_SPEND_HOURLY, "hourly cost of the packed host set"),
+    gauge(COORDINATOR_STEPS, "trace steps driven by the coordinator"),
+    gauge(COORDINATOR_VIOLATIONS, "coordinator steps in SLA violation"),
+    gauge(COORDINATOR_RECONFIGURATIONS, "coordinator reconfigurations applied"),
+    gauge(COORDINATOR_MOVED_SHARDS, "shards moved by coordinator rebalances"),
+    histogram(COORDINATOR_P99_SECONDS, LATENCY_FLOOR, "per-step p99 latency seen by the coordinator"),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn names_are_unique_and_well_formed() {
+        let mut seen = BTreeSet::new();
+        for def in ALL {
+            assert!(seen.insert(def.name), "duplicate metric name {}", def.name);
+            assert!(
+                def.name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_'),
+                "metric name {} must be snake_case ascii",
+                def.name
+            );
+            if def.kind == MetricKind::Histogram {
+                assert!(def.floor > 0.0, "histogram {} needs a positive floor", def.name);
+            }
+        }
+    }
+
+    #[test]
+    fn table_matches_the_pinned_snapshot_on_disk() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/config/metrics_v1.names");
+        let snapshot = std::fs::read_to_string(path).expect("config/metrics_v1.names");
+        let pinned: BTreeSet<&str> = snapshot
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .collect();
+        let declared: BTreeSet<&str> = ALL.iter().map(|d| d.name).collect();
+        assert_eq!(
+            declared, pinned,
+            "metrics names and config/metrics_v1.names diverged (additive-only: add to both)"
+        );
+    }
+}

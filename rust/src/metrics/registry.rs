@@ -1,0 +1,401 @@
+//! Pull-based metrics export: a [`MetricsRegistry`] of counters,
+//! gauges, and [`LatencyHistogram`] sketches keyed by name + sorted
+//! label pairs in `BTreeMap`s (simlint d2: deterministic iteration, so
+//! the exposition text is byte-stable across processes).
+//!
+//! Subsystems push into the registry each tick (fleet, arbiter) or at
+//! export time (serverless, placement, coordinator); consumers pull a
+//! rendered snapshot — Prometheus text exposition via
+//! [`render_prometheus`](MetricsRegistry::render_prometheus) (wired to
+//! `fleet --metrics-out <path>`) or the versioned
+//! `diagonal-scale/metrics-v1` JSON via
+//! [`render_json`](MetricsRegistry::render_json). Metric names are
+//! pinned in [`names`](super::names) / `config/metrics_v1.names`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::names::{self, MetricKind};
+use super::LatencyHistogram;
+
+/// Version tag for the JSON rendering.
+pub const METRICS_SCHEMA: &str = "diagonal-scale/metrics-v1";
+
+/// One time series: metric name plus sorted label pairs.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct SeriesKey {
+    name: String,
+    labels: Vec<(String, String)>,
+}
+
+fn series(name: &str, labels: &[(&str, &str)]) -> SeriesKey {
+    let mut labels: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    labels.sort();
+    SeriesKey { name: name.to_string(), labels }
+}
+
+/// Deterministic pull-based metric store.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<SeriesKey, u64>,
+    gauges: BTreeMap<SeriesKey, f64>,
+    hists: BTreeMap<SeriesKey, LatencyHistogram>,
+    help: BTreeMap<String, &'static str>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-register every pinned metric from [`names::ALL`] with a
+    /// zero/empty default series, so the exposition always round-trips
+    /// the full `config/metrics_v1.names` set even when a subsystem is
+    /// off in this run.
+    pub fn declare_all(&mut self) {
+        for def in names::ALL {
+            self.help.insert(def.name.to_string(), def.help);
+            let key = series(def.name, &[]);
+            match def.kind {
+                MetricKind::Counter => {
+                    self.counters.entry(key).or_insert(0);
+                }
+                MetricKind::Gauge => {
+                    self.gauges.entry(key).or_insert(0.0);
+                }
+                MetricKind::Histogram => {
+                    self.hists.entry(key).or_insert_with(|| LatencyHistogram::new(def.floor));
+                }
+            }
+        }
+    }
+
+    /// Add `delta` to a counter (created at zero on first touch).
+    pub fn inc(&mut self, name: &str, labels: &[(&str, &str)], delta: u64) {
+        *self.counters.entry(series(name, labels)).or_insert(0) += delta;
+    }
+
+    /// Set a gauge (last write wins).
+    pub fn set(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.gauges.insert(series(name, labels), value);
+    }
+
+    /// Record one observation into a histogram series, creating it
+    /// with `floor` as its bucket floor on first touch.
+    pub fn observe(&mut self, name: &str, labels: &[(&str, &str)], floor: f64, value: f64) {
+        self.hists
+            .entry(series(name, labels))
+            .or_insert_with(|| LatencyHistogram::new(floor))
+            .record(value);
+    }
+
+    /// Merge a pre-built sketch into a histogram series (exact
+    /// merge-then-quantile; floors must match).
+    pub fn merge_sketch(&mut self, name: &str, labels: &[(&str, &str)], sketch: &LatencyHistogram) {
+        match self.hists.entry(series(name, labels)) {
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(sketch.clone());
+            }
+            std::collections::btree_map::Entry::Occupied(mut e) => {
+                e.get_mut().merge(sketch);
+            }
+        }
+    }
+
+    pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        self.counters.get(&series(name, labels)).copied()
+    }
+
+    pub fn gauge_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.gauges.get(&series(name, labels)).copied()
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Option<&LatencyHistogram> {
+        self.hists.get(&series(name, labels))
+    }
+
+    /// Distinct metric names currently registered (label sets ignored).
+    pub fn metric_names(&self) -> BTreeSet<String> {
+        self.counters
+            .keys()
+            .chain(self.gauges.keys())
+            .chain(self.hists.keys())
+            .map(|k| k.name.clone())
+            .collect()
+    }
+
+    /// Series count across all kinds.
+    pub fn len(&self) -> usize {
+        self.counters.len() + self.gauges.len() + self.hists.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fold `other` into `self`: counters add, gauges take the other's
+    /// value, histograms merge. Lets standalone subsystem registries
+    /// (e.g. a coordinator run) combine into one exposition.
+    pub fn merge_from(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.hists {
+            match self.hists.entry(k.clone()) {
+                std::collections::btree_map::Entry::Vacant(e) => {
+                    e.insert(h.clone());
+                }
+                std::collections::btree_map::Entry::Occupied(mut e) => {
+                    e.get_mut().merge(h);
+                }
+            }
+        }
+        for (k, v) in &other.help {
+            self.help.entry(k.clone()).or_insert(v);
+        }
+    }
+
+    fn render_series_name(out: &mut String, key: &SeriesKey, extra: Option<(&str, &str)>) {
+        out.push_str(&key.name);
+        let mut pairs: Vec<(&str, &str)> =
+            key.labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+        if let Some(kv) = extra {
+            pairs.push(kv);
+        }
+        if !pairs.is_empty() {
+            out.push('{');
+            for (i, (k, v)) in pairs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(k);
+                out.push_str("=\"");
+                out.push_str(v);
+                out.push('"');
+            }
+            out.push('}');
+        }
+    }
+
+    fn render_type_header(&self, out: &mut String, name: &str, kind: &str, last: &mut String) {
+        if last == name {
+            return;
+        }
+        if let Some(help) = self.help.get(name) {
+            out.push_str("# HELP ");
+            out.push_str(name);
+            out.push(' ');
+            out.push_str(help);
+            out.push('\n');
+        }
+        out.push_str("# TYPE ");
+        out.push_str(name);
+        out.push(' ');
+        out.push_str(kind);
+        out.push('\n');
+        *last = name.to_string();
+    }
+
+    /// Prometheus text exposition (format 0.0.4). Histograms render as
+    /// summaries: `{quantile="0.5|0.95|0.99"}` plus `_count`/`_sum`.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last = String::new();
+        for (key, v) in &self.counters {
+            self.render_type_header(&mut out, &key.name, "counter", &mut last);
+            Self::render_series_name(&mut out, key, None);
+            out.push_str(&format!(" {v}\n"));
+        }
+        for (key, v) in &self.gauges {
+            self.render_type_header(&mut out, &key.name, "gauge", &mut last);
+            Self::render_series_name(&mut out, key, None);
+            out.push_str(&format!(" {v}\n"));
+        }
+        for (key, h) in &self.hists {
+            self.render_type_header(&mut out, &key.name, "summary", &mut last);
+            for (label, q) in [("0.5", 0.5), ("0.95", 0.95), ("0.99", 0.99)] {
+                Self::render_series_name(&mut out, key, Some(("quantile", label)));
+                out.push_str(&format!(" {}\n", h.quantile(q)));
+            }
+            let mut counted = key.clone();
+            counted.name.push_str("_count");
+            Self::render_series_name(&mut out, &counted, None);
+            out.push_str(&format!(" {}\n", h.len()));
+            let mut summed = key.clone();
+            summed.name.push_str("_sum");
+            Self::render_series_name(&mut out, &summed, None);
+            out.push_str(&format!(" {}\n", h.sum()));
+        }
+        out
+    }
+
+    fn render_labels_json(labels: &[(String, String)]) -> String {
+        let mut out = String::from("{");
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":\"{}\"", escape(k), escape(v)));
+        }
+        out.push('}');
+        out
+    }
+
+    /// Versioned machine-readable rendering (`diagonal-scale/metrics-v1`).
+    pub fn render_json(&self) -> String {
+        let mut out = format!("{{\"schema\":\"{METRICS_SCHEMA}\",\"counters\":[");
+        for (i, (key, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"labels\":{},\"value\":{v}}}",
+                escape(&key.name),
+                Self::render_labels_json(&key.labels)
+            ));
+        }
+        out.push_str("],\"gauges\":[");
+        for (i, (key, v)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"labels\":{},\"value\":{}}}",
+                escape(&key.name),
+                Self::render_labels_json(&key.labels),
+                json_f64(*v)
+            ));
+        }
+        out.push_str("],\"histograms\":[");
+        for (i, (key, h)) in self.hists.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"labels\":{},\"count\":{},\"sum\":{},\"max\":{},\
+                 \"p50\":{},\"p95\":{},\"p99\":{}}}",
+                escape(&key.name),
+                Self::render_labels_json(&key.labels),
+                h.len(),
+                json_f64(h.sum()),
+                json_f64(h.max()),
+                json_f64(h.quantile(0.5)),
+                json_f64(h.quantile(0.95)),
+                json_f64(h.quantile(0.99))
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// JSON has no NaN/Inf literals; clamp them to null-safe zero.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("requests_total", &[], 2);
+        reg.inc("requests_total", &[], 3);
+        reg.set("temperature", &[("zone", "a")], 1.5);
+        reg.set("temperature", &[("zone", "a")], 2.5);
+        assert_eq!(reg.counter_value("requests_total", &[]), Some(5));
+        assert_eq!(reg.gauge_value("temperature", &[("zone", "a")]), Some(2.5));
+        assert_eq!(reg.gauge_value("temperature", &[("zone", "b")]), None);
+    }
+
+    #[test]
+    fn label_order_does_not_matter() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("m", &[("a", "1"), ("b", "2")], 1);
+        reg.inc("m", &[("b", "2"), ("a", "1")], 1);
+        assert_eq!(reg.counter_value("m", &[("a", "1"), ("b", "2")]), Some(2));
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn declare_all_round_trips_the_pinned_names() {
+        let mut reg = MetricsRegistry::new();
+        reg.declare_all();
+        let rendered = reg.render_prometheus();
+        for def in names::ALL {
+            assert!(
+                rendered.lines().any(|l| {
+                    l.starts_with(def.name)
+                        && l[def.name.len()..].starts_with([' ', '{', '_'].as_ref())
+                }),
+                "declared metric {} missing from exposition",
+                def.name
+            );
+        }
+        assert_eq!(reg.metric_names().len(), names::ALL.len());
+    }
+
+    #[test]
+    fn exposition_is_deterministic_and_typed() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("a_total", &[("class", "gold")], 7);
+        reg.set("b_now", &[], 0.25);
+        reg.observe("c_seconds", &[], 1e-5, 0.01);
+        reg.observe("c_seconds", &[], 1e-5, 0.02);
+        let text = reg.render_prometheus();
+        assert_eq!(text, reg.clone().render_prometheus());
+        assert!(text.contains("# TYPE a_total counter"));
+        assert!(text.contains("a_total{class=\"gold\"} 7"));
+        assert!(text.contains("# TYPE b_now gauge"));
+        assert!(text.contains("# TYPE c_seconds summary"));
+        assert!(text.contains("c_seconds_count 2"));
+    }
+
+    #[test]
+    fn json_rendering_carries_the_schema_tag() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("a_total", &[], 1);
+        reg.observe("lat", &[("class", "gold")], 1e-5, 0.004);
+        let json = reg.render_json();
+        assert!(json.starts_with("{\"schema\":\"diagonal-scale/metrics-v1\""));
+        assert!(json.contains("\"name\":\"a_total\""));
+        assert!(json.contains("\"labels\":{\"class\":\"gold\"}"));
+        assert!(json.contains("\"count\":1"));
+    }
+
+    #[test]
+    fn merge_from_adds_counters_and_merges_sketches() {
+        let mut a = MetricsRegistry::new();
+        let mut b = MetricsRegistry::new();
+        a.inc("n_total", &[], 2);
+        b.inc("n_total", &[], 3);
+        a.observe("lat", &[], 1e-5, 0.01);
+        b.observe("lat", &[], 1e-5, 0.03);
+        a.merge_from(&b);
+        assert_eq!(a.counter_value("n_total", &[]), Some(5));
+        assert_eq!(a.histogram("lat", &[]).unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,259 @@
+//! Bounded-memory recording: the [`StreamingRecorder`] replaces the
+//! exact [`Recorder`](super::Recorder)'s unbounded `Vec<StepRecord>`
+//! with O(1)-per-tenant state — the [`Summary`](super::Summary)
+//! accumulators folded per push (bit-identical to the exact recorder's
+//! per-field folds, which also run in push order), two mergeable
+//! [`LatencyHistogram`]s for measured and raw latency quantiles, and a
+//! seeded Algorithm-R reservoir of exemplar [`StepRecord`]s (the same
+//! treatment PR 7 gave the explain log with `--explain-sample`).
+//!
+//! The exact [`Recorder`](super::Recorder) stays as the oracle:
+//! `rust/tests/metrics_stream.rs` property-pins streaming `Summary`,
+//! p95, and p99 against it on random fleets, and pins retained record
+//! count constant in tick count.
+
+use super::{LatencyHistogram, StepRecord, Summary, LATENCY_FLOOR};
+use crate::sla::ViolationCounter;
+use crate::workload::XorShift64;
+
+/// O(1)-memory per-tenant recorder: summary accumulators + latency
+/// sketches + an Algorithm-R exemplar reservoir.
+#[derive(Debug, Clone)]
+pub struct StreamingRecorder {
+    steps: usize,
+    sum_latency: f64,
+    max_latency: f64,
+    sum_throughput: f64,
+    sum_required: f64,
+    sum_cost: f64,
+    sum_objective: f64,
+    counter: ViolationCounter,
+    hist: LatencyHistogram,
+    hist_raw: LatencyHistogram,
+    reservoir: Vec<StepRecord>,
+    cap: usize,
+    seen: u64,
+    rng: XorShift64,
+}
+
+impl StreamingRecorder {
+    /// `cap` exemplar records are retained (0 keeps none); `seed`
+    /// drives the reservoir replacement draws, so runs replay exactly.
+    pub fn new(cap: usize, seed: u64) -> Self {
+        Self {
+            steps: 0,
+            sum_latency: 0.0,
+            max_latency: 0.0,
+            sum_throughput: 0.0,
+            sum_required: 0.0,
+            sum_cost: 0.0,
+            sum_objective: 0.0,
+            counter: ViolationCounter::default(),
+            hist: LatencyHistogram::new(LATENCY_FLOOR),
+            hist_raw: LatencyHistogram::new(LATENCY_FLOOR),
+            reservoir: Vec::with_capacity(cap),
+            cap,
+            seen: 0,
+            rng: XorShift64::new(seed),
+        }
+    }
+
+    pub fn push(&mut self, rec: StepRecord) {
+        self.counter.record(rec.violation);
+        self.steps += 1;
+        self.sum_latency += rec.latency as f64;
+        self.max_latency = self.max_latency.max(rec.latency as f64);
+        self.sum_throughput += rec.throughput as f64;
+        self.sum_required += rec.lambda_req as f64;
+        self.sum_cost += rec.cost as f64;
+        self.sum_objective += rec.objective as f64;
+        self.hist.record(rec.latency as f64);
+        self.hist_raw.record(rec.latency_raw as f64);
+
+        // Algorithm R (Vitter): every record survives with probability
+        // cap/seen, independent of stream length.
+        self.seen += 1;
+        if self.cap == 0 {
+            return;
+        }
+        if self.reservoir.len() < self.cap {
+            self.reservoir.push(rec);
+        } else {
+            let j = self.rng.next_u64() % self.seen;
+            if (j as usize) < self.cap {
+                self.reservoir[j as usize] = rec;
+            }
+        }
+    }
+
+    /// Records pushed so far (the stream length, not the sample size).
+    pub fn len(&self) -> usize {
+        self.steps
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps == 0
+    }
+
+    /// Records currently retained — bounded by `cap` regardless of
+    /// stream length (the memory pin in `rust/tests/metrics_stream.rs`).
+    pub fn retained(&self) -> usize {
+        self.reservoir.len()
+    }
+
+    /// The exemplar reservoir: a uniform sample of the stream, in
+    /// arrival-replacement order.
+    pub fn sample(&self) -> &[StepRecord] {
+        &self.reservoir
+    }
+
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Measured-latency sketch (all pushed records, zeros in the
+    /// underflow bucket).
+    pub fn latency_histogram(&self) -> &LatencyHistogram {
+        &self.hist
+    }
+
+    /// Raw (planner-visible) latency sketch.
+    pub fn raw_latency_histogram(&self) -> &LatencyHistogram {
+        &self.hist_raw
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.hist.quantile(0.95)
+    }
+
+    pub fn p95_raw(&self) -> f64 {
+        self.hist_raw.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.hist.quantile(0.99)
+    }
+
+    /// Same field-by-field arithmetic as the exact recorder's
+    /// `summary()` (sequential f64 folds in push order), so the two
+    /// agree bitwise on identical streams.
+    pub fn summary(&self) -> Summary {
+        let nf = self.steps.max(1) as f64;
+        Summary {
+            steps: self.steps,
+            avg_latency: self.sum_latency / nf,
+            max_latency: self.max_latency,
+            avg_throughput: self.sum_throughput / nf,
+            avg_required: self.sum_required / nf,
+            avg_cost: self.sum_cost / nf,
+            total_cost: self.sum_cost,
+            avg_objective: self.sum_objective / nf,
+            violations: self.counter.violated_steps,
+            latency_violations: self.counter.latency_violations,
+            throughput_violations: self.counter.throughput_violations,
+        }
+    }
+}
+
+/// One-shot Algorithm-R reservoir over a finished slice: returns up to
+/// `cap` items, in original order. Shared by `fleet --ticks-sample`
+/// (bounding per-tick report rows) and tests.
+pub fn reservoir_sample<T: Clone>(items: &[T], cap: usize, seed: u64) -> Vec<T> {
+    if cap == 0 || items.len() <= cap {
+        return items.to_vec();
+    }
+    let mut rng = XorShift64::new(seed);
+    let mut idx: Vec<usize> = (0..cap).collect();
+    for i in cap..items.len() {
+        let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+        if j < cap {
+            idx[j] = i;
+        }
+    }
+    idx.sort_unstable();
+    idx.into_iter().map(|i| items[i].clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Recorder;
+    use super::*;
+    use crate::plane::Configuration;
+    use crate::sla::Violation;
+
+    fn rec(step: usize, lat: f32, cost: f32, viol: bool) -> StepRecord {
+        StepRecord {
+            step,
+            config: Configuration::new(1, 1),
+            lambda_req: 1000.0,
+            latency: lat,
+            latency_raw: lat * 0.9,
+            throughput: 2000.0,
+            cost,
+            objective: 10.0 * lat,
+            violation: Violation { latency: viol, throughput: false },
+        }
+    }
+
+    #[test]
+    fn summary_matches_exact_recorder_bitwise() {
+        let mut exact = Recorder::new();
+        let mut stream = StreamingRecorder::new(8, 7);
+        let mut rng = XorShift64::new(99);
+        for i in 0..500 {
+            let r = rec(i, rng.next_f64() as f32 * 0.02, 1.0 + (i % 7) as f32, i % 11 == 0);
+            exact.push(r);
+            stream.push(r);
+        }
+        let (a, b) = (exact.summary(), stream.summary());
+        assert_eq!(a, b, "streaming summary must equal the exact oracle");
+    }
+
+    #[test]
+    fn reservoir_is_bounded_and_full_below_cap() {
+        let mut s = StreamingRecorder::new(16, 1);
+        for i in 0..10 {
+            s.push(rec(i, 0.01, 1.0, false));
+        }
+        assert_eq!(s.retained(), 10);
+        for i in 10..5000 {
+            s.push(rec(i, 0.01, 1.0, false));
+        }
+        assert_eq!(s.retained(), 16);
+        assert_eq!(s.len(), 5000);
+        assert_eq!(s.seen(), 5000);
+    }
+
+    #[test]
+    fn zero_cap_keeps_summary_but_no_exemplars() {
+        let mut s = StreamingRecorder::new(0, 1);
+        for i in 0..100 {
+            s.push(rec(i, 0.01, 1.0, false));
+        }
+        assert_eq!(s.retained(), 0);
+        assert_eq!(s.summary().steps, 100);
+    }
+
+    #[test]
+    fn one_shot_reservoir_preserves_order_and_bound() {
+        let items: Vec<usize> = (0..1000).collect();
+        let sample = reservoir_sample(&items, 50, 0xABCD);
+        assert_eq!(sample.len(), 50);
+        assert!(sample.windows(2).all(|w| w[0] < w[1]), "must stay in stream order");
+        let identity = reservoir_sample(&items, 0, 1);
+        assert_eq!(identity, items, "cap 0 means no sampling");
+        let small = reservoir_sample(&items[..10], 50, 1);
+        assert_eq!(small.len(), 10);
+    }
+
+    #[test]
+    fn quantiles_track_the_stream() {
+        let mut s = StreamingRecorder::new(4, 3);
+        for i in 0..1000 {
+            s.push(rec(i, 0.001 + (i as f32) * 1e-5, 1.0, false));
+        }
+        let p95 = s.p95();
+        // exact nearest-rank p95 of the ramp is ~0.001 + 950e-5 ≈ 0.0105
+        assert!((p95 - 0.0105).abs() / 0.0105 < 0.08, "p95: {p95}");
+    }
+}

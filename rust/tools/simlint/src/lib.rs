@@ -30,6 +30,11 @@
 //!   and renames fail (the schema is additive-only), additions fail
 //!   until the snapshot is updated in the same PR, which makes every
 //!   schema change reviewable.
+//! * **S2 `s2-metrics-additivity`** — the metric-name consts declared
+//!   in `rust/src/metrics/names.rs` are diffed against the
+//!   `config/metrics_v1.names` snapshot: scrape configs, dashboards,
+//!   and alerts key on these names, so removals and renames fail, and
+//!   additions fail until the snapshot is updated in the same PR.
 //! * **T1 `t1-registration`** — every file in `rust/tests` and
 //!   `rust/benches` must have a matching `[[test]]`/`[[bench]]` path
 //!   entry in `Cargo.toml` and vice versa (auto-discovery is off, so a
@@ -63,6 +68,8 @@ pub const D3: &str = "d3-total-order-floats";
 pub const N1: &str = "n1-money-in-f64";
 /// Rule id: explain-v1 key set matches the checked-in snapshot.
 pub const S1: &str = "s1-explain-additivity";
+/// Rule id: metrics-v1 name set matches the checked-in snapshot.
+pub const S2: &str = "s2-metrics-additivity";
 /// Rule id: tests/benches reconcile with Cargo.toml registration.
 pub const T1: &str = "t1-registration";
 /// Rule id: an allow directive without a justification.
@@ -82,6 +89,7 @@ pub const RULES: &[(&str, &str)] = &[
     (D3, "float ordering must use total_cmp / delegate PartialOrd to a total Ord"),
     (N1, "money accumulates in f64; f32 money accumulators and narrowing flagged"),
     (S1, "explain-v1 JSON keys must match config/explain_v1.keys (additive-only)"),
+    (S2, "metrics-v1 names must match config/metrics_v1.names (additive-only)"),
     (T1, "rust/tests + rust/benches must reconcile with Cargo.toml [[test]]/[[bench]]"),
     (ALLOW, "simlint: allow(...) requires a justification after the closing paren"),
     (ALLOW_BUDGET, "inline allow directives are capped tree-wide"),
@@ -759,6 +767,79 @@ pub fn rule_s1(report: &ScannedFile, snapshot: &str, snapshot_path: &str) -> Vec
     out
 }
 
+// ------------------------------------------------------------------- S2
+
+/// Metric-name consts (`pub const NAME: &str = "metric_name";`)
+/// declared in `metrics/names.rs`, with the 0-based line each sits on.
+/// Structure is matched on the blanked code (so the pattern cannot
+/// fire inside comments or doc text) and the name itself is read from
+/// the raw line, where string contents survive.
+pub fn declared_metric_names(names: &ScannedFile) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for (idx, code) in names.code.iter().enumerate() {
+        if !(has_token(code, "const") && code.contains(": &str")) {
+            continue;
+        }
+        let raw = &names.raw[idx];
+        let Some(eq) = raw.find('=') else { continue };
+        let rest = &raw[eq + 1..];
+        let Some(q1) = rest.find('"') else { continue };
+        let Some(q2) = rest[q1 + 1..].find('"') else { continue };
+        let name = &rest[q1 + 1..q1 + 1 + q2];
+        if !name.is_empty() {
+            out.entry(name.to_string()).or_insert(idx);
+        }
+    }
+    out
+}
+
+/// S2: diff declared metrics-v1 names against the snapshot.
+pub fn rule_s2(names: &ScannedFile, snapshot: &str, snapshot_path: &str) -> Vec<Finding> {
+    let declared = declared_metric_names(names);
+    let mut out = Vec::new();
+    if declared.is_empty() {
+        out.push(Finding {
+            path: names.path.clone(),
+            line: 0,
+            rule: S2,
+            message: "no metric-name consts found (`pub const NAME: &str = \"...\"`): S2 \
+                      cannot verify the metrics-v1 name set"
+                .to_string(),
+        });
+        return out;
+    }
+    let pinned = parse_key_snapshot(snapshot);
+    for (name, line) in &declared {
+        if !pinned.contains(name) {
+            out.push(Finding::new(
+                &names.path,
+                *line,
+                S2,
+                format!(
+                    "metrics-v1 declares \"{name}\" missing from {snapshot_path}: additions \
+                     are fine but must update the snapshot in the same PR so the scrape \
+                     surface changes in review"
+                ),
+            ));
+        }
+    }
+    for name in &pinned {
+        if !declared.contains_key(name) {
+            out.push(Finding {
+                path: snapshot_path.to_string(),
+                line: 0,
+                rule: S2,
+                message: format!(
+                    "metric \"{name}\" is pinned in {snapshot_path} but no longer declared: \
+                     diagonal-scale/metrics-v1 is additive-only — removals and renames \
+                     break dashboards and alerting rules"
+                ),
+            });
+        }
+    }
+    out
+}
+
 // ------------------------------------------------------------------- T1
 
 /// T1: reconcile `[[test]]`/`[[bench]]` path entries against the files
@@ -891,6 +972,7 @@ pub fn lint_repo(root: &Path) -> std::io::Result<Report> {
     let mut suppressed = 0usize;
     let mut allow_directives = 0usize;
     let mut report_file: Option<ScannedFile> = None;
+    let mut names_file: Option<ScannedFile> = None;
     let files_scanned = files.len();
 
     for path in &files {
@@ -907,6 +989,8 @@ pub fn lint_repo(root: &Path) -> std::io::Result<Report> {
         }
         if f.path == "rust/src/report/mod.rs" {
             report_file = Some(f);
+        } else if f.path == "rust/src/metrics/names.rs" {
+            names_file = Some(f);
         }
     }
 
@@ -932,6 +1016,35 @@ pub fn lint_repo(root: &Path) -> std::io::Result<Report> {
                       schema"
                 .to_string(),
         }),
+    }
+
+    // S2: declared metric names vs the checked-in snapshot. Unlike S1
+    // the subsystem is optional: trees without a metrics registry have
+    // neither the names module nor the snapshot, and that is fine —
+    // only a one-sided state (one exists without the other) is a
+    // finding.
+    let names_snapshot_path = "config/metrics_v1.names";
+    match (&names_file, std::fs::read_to_string(root.join(names_snapshot_path))) {
+        (Some(names), Ok(snapshot)) => {
+            findings.extend(rule_s2(names, &snapshot, names_snapshot_path));
+        }
+        (Some(_), Err(_)) => findings.push(Finding {
+            path: names_snapshot_path.to_string(),
+            line: 0,
+            rule: S2,
+            message: "metrics-v1 name snapshot is missing: regenerate it from the consts \
+                      in rust/src/metrics/names.rs"
+                .to_string(),
+        }),
+        (None, Ok(_)) => findings.push(Finding {
+            path: "rust/src/metrics/names.rs".to_string(),
+            line: 0,
+            rule: S2,
+            message: "config/metrics_v1.names exists but rust/src/metrics/names.rs does \
+                      not: S2 cannot verify the metrics-v1 name set"
+                .to_string(),
+        }),
+        (None, Err(_)) => {}
     }
 
     // T1: Cargo.toml registration vs files on disk
