@@ -5,7 +5,7 @@
 
 .DEFAULT_GOAL := help
 
-.PHONY: help build test doc bench-compile examples lint-sim fleet-demo placement-demo explain-demo serverless-demo fleet-scale-demo metrics-demo artifacts
+.PHONY: help build test doc bench-compile examples lint-sim fleet-demo placement-demo explain-demo serverless-demo fleet-scale-demo metrics-demo scenario-demo artifacts
 
 help: ## list the available targets
 	@grep -E '^[a-zA-Z_-]+:.*?## ' $(MAKEFILE_LIST) | awk 'BEGIN {FS = ":.*?## "}; {printf "  %-14s %s\n", $$1, $$2}'
@@ -55,6 +55,17 @@ metrics-demo: ## streaming-metrics smoke: bounded recorders + sampled ticks + pr
 	@grep -q 'ticks sampled' /tmp/metrics-demo.out && echo "metrics-demo: tick output bounded"
 	@grep -q '^fleet_spend_hourly' /tmp/metrics-demo.prom && echo "metrics-demo: prometheus exposition ok"
 	@grep -q '"schema":"diagonal-scale/metrics-v1"' /tmp/metrics-demo.json && echo "metrics-demo: metrics-v1 JSON ok"
+
+scenario-demo: ## named-scenario smoke: presets drive fleet runs with scenario-stamped explain + metrics
+	cargo run --release -- fleet --tenants 6 --scenario flash-crowd --budget 8.0 \
+		--explain 3 --explain-out /tmp/scenario-demo.json \
+		--metrics-json /tmp/scenario-demo-metrics.json > /tmp/scenario-demo.out
+	cargo run --release -- fleet --tenants 6 --scenario zone-outage --budget 8.0 >> /tmp/scenario-demo.out
+	@grep -q 'scenario `flash-crowd`' /tmp/scenario-demo.out && echo "scenario-demo: flash-crowd preset ran"
+	@grep -q 'scenario `zone-outage`' /tmp/scenario-demo.out && echo "scenario-demo: zone-outage preset ran"
+	@grep -q 'fault events scheduled' /tmp/scenario-demo.out && echo "scenario-demo: fault schedule reported"
+	@grep -q '"scenario":"flash-crowd"' /tmp/scenario-demo.json && echo "scenario-demo: explain stamped"
+	@grep -q 'scenario_active' /tmp/scenario-demo-metrics.json && echo "scenario-demo: metrics stamped"
 
 artifacts: ## AOT-lower the JAX/Pallas kernels to artifacts/ (needs jax)
 	cd python && python3 -m compile.aot --out-dir ../artifacts

@@ -1,0 +1,78 @@
+//! Bench N — scenario-generation cost and preset sweep: how much a
+//! named scenario costs to *materialize* (trace synthesis, shard-map
+//! generation, fault scheduling) versus to *run*, so the scenario
+//! subsystem's "generation is cheap, simulation dominates" claim is a
+//! measured number per preset rather than folklore.
+//!
+//! ```text
+//! cargo bench --bench scenario
+//! ```
+
+// Benches measure wall time by design; decision code is covered by
+// simlint's d1-no-wall-clock + clippy's disallowed_methods instead.
+#![allow(clippy::disallowed_methods)]
+
+use diagonal_scale::benchkit::{group, Bench};
+use diagonal_scale::cluster::{ClusterParams, SubstrateKind};
+use diagonal_scale::config::ModelConfig;
+use diagonal_scale::fleet::{BudgetArbiter, ClassEnvelopes, FleetSimulator, ForecastKind};
+use diagonal_scale::placement::{PlacementConfig, PlacementSim};
+use diagonal_scale::scenario::{self, DEFAULT_SEED};
+
+fn main() {
+    let b = Bench::quick();
+    let cfg = ModelConfig::default_paper();
+
+    group("materialization — preset -> specs + faults + shard map");
+    for name in scenario::PRESETS {
+        let stats = b.run(&format!("materialize/{name}"), || {
+            let sc = scenario::preset(name, &cfg, 12, DEFAULT_SEED).expect("known preset");
+            sc.specs.len() + sc.faults.len()
+        });
+        b.report_metric(
+            &format!("materialize/{name}"),
+            stats.mean.as_secs_f64() * 1e6,
+            "us/preset",
+        );
+    }
+
+    group("fleet sweep — planning arbiter over every preset horizon");
+    for name in scenario::PRESETS {
+        let sc = scenario::preset(name, &cfg, 6, DEFAULT_SEED).expect("known preset");
+        b.run(&format!("fleet/{name}"), || {
+            let arb = BudgetArbiter::new(8.0, 3).with_envelopes(ClassEnvelopes::default_split());
+            let mut sim = FleetSimulator::with_arbiter(&cfg, sc.specs.clone(), arb);
+            sim.enable_forecasts(ForecastKind::Seasonal, 3);
+            if !sc.faults.is_empty() {
+                sim.attach_substrates(&cfg, ClusterParams::default(), 42, SubstrateKind::Des);
+                let accepted = sim.schedule_faults(&sc.faults, ClusterParams::default().interval);
+                sim.set_scenario(sc.name, accepted);
+            }
+            sim.run(sc.steps).total_violations()
+        });
+    }
+
+    group("placement — heavy-tail packed vs dedicated, shard-priced moves");
+    {
+        let sc = scenario::preset("heavy-tail", &cfg, 12, DEFAULT_SEED).expect("known preset");
+        let shards = sc.shards.clone().expect("heavy-tail carries a shard map");
+        let pcfg = PlacementConfig::default();
+        for (mode, packed) in [("packed", true), ("dedicated", false)] {
+            let stats = b.run(&format!("placement/heavy-tail/{mode}"), || {
+                let mut sim = if packed {
+                    PlacementSim::packed(&cfg, sc.specs.clone(), 1.0e6, 3, pcfg)
+                } else {
+                    PlacementSim::dedicated(&cfg, sc.specs.clone(), 1.0e6, 3, pcfg)
+                };
+                sim.set_shard_model(shards.clone());
+                let res = sim.run(40);
+                (res.total_migrations(), res.total_moved_gb())
+            });
+            b.report_metric(
+                &format!("placement/heavy-tail/{mode}"),
+                stats.mean.as_secs_f64() * 1e3,
+                "ms/run",
+            );
+        }
+    }
+}

@@ -101,7 +101,7 @@ pub mod tenant;
 pub use arbiter::{
     Admission, BudgetArbiter, ClassEnvelopes, EnvelopeAdapter, SpendLedger, Verdict,
 };
-pub use report::{ClassReport, FleetReport, TenantReport};
+pub use report::{ClassReport, FleetReport, FleetRollup, TenantReport};
 pub use tenant::{
     Candidate, ForecastKind, PriorityClass, Proposal, Tenant, TenantPlanner, TenantSpec,
 };
@@ -110,7 +110,8 @@ use std::sync::Arc;
 
 use crate::cluster::{ClusterParams, Event, EventCalendar, SubstrateKind};
 use crate::config::ModelConfig;
-use crate::metrics::{names as metric_names, Hll, LatencyHistogram, MetricsRegistry};
+use crate::metrics::{names as metric_names, Hll, HllWindowRing, LatencyHistogram, MetricsRegistry};
+use crate::scenario::FaultEvent;
 use crate::placement::{PlacementConfig, PlacementSim};
 use crate::plane::Configuration;
 use crate::policy::BudgetHint;
@@ -141,6 +142,12 @@ pub const REFRESH_K: usize = 256;
 /// cleared every this-many ticks, so the gauge tracks *current*
 /// activity instead of the whole run's union.
 pub const METRICS_WINDOW: usize = 64;
+
+/// Closed [`METRICS_WINDOW`]-tick windows the fleet retains in its
+/// [`HllWindowRing`]: the `fleet_active_tenants_ring` gauge is the
+/// merged distinct-actives estimate over the last this-many closed
+/// windows (≈ 8.5 hours of 1-minute ticks at the defaults).
+pub const METRICS_WINDOW_RING: usize = 8;
 
 /// One tick's fleet-level outcome.
 ///
@@ -295,8 +302,13 @@ pub struct FleetSimulator {
     registry: MetricsRegistry,
     /// Distinct tenants that served real throughput, whole run.
     active_hll: Hll,
-    /// Same, over the current [`METRICS_WINDOW`]-tick window.
-    active_window_hll: Hll,
+    /// Same, windowed: an open [`METRICS_WINDOW`]-tick sketch plus the
+    /// last [`METRICS_WINDOW_RING`] closed windows for merged lookback.
+    active_window_ring: HllWindowRing,
+    /// Scenario stamp when a named preset drives the run: `(name,
+    /// scheduled fault count)`. Stamped additively into metrics-v1 by
+    /// [`Self::export_metrics`] and into explain-v1 by the CLI.
+    scenario: Option<(String, usize)>,
     /// Distinct `(tenant, configuration)` pairs served.
     config_hll: Hll,
     /// Guards [`Self::export_metrics`] against double-merging sketches.
@@ -351,7 +363,11 @@ impl FleetSimulator {
             step: 0,
             registry: MetricsRegistry::new(),
             active_hll: Hll::default(),
-            active_window_hll: Hll::default(),
+            active_window_ring: HllWindowRing::new(
+                METRICS_WINDOW_RING,
+                crate::metrics::hll::DEFAULT_PRECISION,
+            ),
+            scenario: None,
             config_hll: Hll::default(),
             exported: false,
         }
@@ -615,13 +631,24 @@ impl FleetSimulator {
         self.registry.declare_all();
         self.registry.set(metric_names::FLEET_ACTIVE_TENANTS_ESTIMATE, &[], self.active_hll.estimate());
         self.registry.set(metric_names::FLEET_CONFIGS_VISITED_ESTIMATE, &[], self.config_hll.estimate());
-        if !self.active_window_hll.is_empty() {
+        if !self.active_window_ring.open_is_empty() {
             // expose the still-open window rather than a stale gauge
             self.registry.set(
                 metric_names::FLEET_ACTIVE_TENANTS_WINDOW,
                 &[],
-                self.active_window_hll.estimate(),
+                self.active_window_ring.open_estimate(),
             );
+        }
+        if self.active_window_ring.rotations() > 0 {
+            self.registry.set(
+                metric_names::FLEET_ACTIVE_TENANTS_RING,
+                &[],
+                self.active_window_ring.merged_estimate(),
+            );
+        }
+        if let Some((name, faults)) = &self.scenario {
+            self.registry.set(metric_names::SCENARIO_ACTIVE, &[("name", name.as_str())], 1.0);
+            self.registry.set(metric_names::SCENARIO_FAULTS_TOTAL, &[], *faults as f64);
         }
         let retained: usize = self.tenants.iter().map(|t| t.retained_records()).sum();
         self.registry.set(metric_names::FLEET_RETAINED_RECORDS, &[], retained as f64);
@@ -680,13 +707,49 @@ impl FleetSimulator {
             tick.planning_micros as f64 * 1e-6,
         );
         if (tick.step + 1) % METRICS_WINDOW == 0 {
+            let closed = self.active_window_ring.rotate();
+            reg.set(metric_names::FLEET_ACTIVE_TENANTS_WINDOW, &[], closed);
             reg.set(
-                metric_names::FLEET_ACTIVE_TENANTS_WINDOW,
+                metric_names::FLEET_ACTIVE_TENANTS_RING,
                 &[],
-                self.active_window_hll.estimate(),
+                self.active_window_ring.merged_estimate(),
             );
-            self.active_window_hll.clear();
         }
+    }
+
+    /// Stamp the run with the scenario preset driving it. Additive
+    /// observability only: [`Self::export_metrics`] gains the
+    /// `scenario_active{name=...}` / `scenario_faults_total` gauges and
+    /// the CLI threads the name into the explain-v1 dump — decisions
+    /// are untouched.
+    pub fn set_scenario(&mut self, name: impl Into<String>, faults: usize) {
+        self.scenario = Some((name.into(), faults));
+    }
+
+    /// The scenario stamp, if [`Self::set_scenario`] was called.
+    pub fn scenario(&self) -> Option<(&str, usize)> {
+        self.scenario.as_ref().map(|(n, f)| (n.as_str(), *f))
+    }
+
+    /// Layer a scenario fault schedule onto the tenants' DES calendars
+    /// via [`Tenant::schedule_node_failure`]: each event lands
+    /// mid-interval of its tick (`(at_tick + 0.5) × interval`), so the
+    /// tick's serve sees the node down. Returns how many events were
+    /// accepted — an event is not scheduled when its tenant index is
+    /// out of range (a no-op) or the tenant has no failure-capable
+    /// substrate (attach [`SubstrateKind::Des`] /
+    /// [`SubstrateKind::Sampling`] engines first; the tenant is still
+    /// conservatively dirtied).
+    pub fn schedule_faults(&mut self, faults: &[FaultEvent], interval: f64) -> usize {
+        let mut scheduled = 0usize;
+        for f in faults {
+            if let Some(t) = self.tenants.get_mut(f.tenant) {
+                if t.schedule_node_failure((f.at_tick as f64 + 0.5) * interval, f.node) {
+                    scheduled += 1;
+                }
+            }
+        }
+        scheduled
     }
 
     pub fn arbiter(&self) -> &BudgetArbiter {
@@ -795,7 +858,7 @@ impl FleetSimulator {
             }
             if rec.throughput > 0.0 {
                 self.active_hll.insert_u64(tn.id as u64);
-                self.active_window_hll.insert_u64(tn.id as u64);
+                self.active_window_ring.insert_u64(tn.id as u64);
             }
             // distinct (tenant, configuration) pairs actually served
             let code = ((tn.id as u64) << 16)

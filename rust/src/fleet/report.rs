@@ -143,58 +143,6 @@ pub fn fleet_report(tenants: &[Tenant], ticks: &[FleetTick], budget: f32) -> Fle
         })
         .collect();
 
-    let classes = PriorityClass::ALL
-        .iter()
-        .filter_map(|&class| {
-            let members: Vec<&Tenant> =
-                tenants.iter().filter(|t| t.class() == class).collect();
-            if members.is_empty() {
-                return None;
-            }
-            // class p95: when every member streams, merge their
-            // sketches (O(buckets) per tenant); otherwise concatenate
-            // the exact samples as before
-            let (p95, p95_raw) = if members.iter().all(|t| t.streaming().is_some()) {
-                let first = members[0].streaming().expect("checked above");
-                let mut lat_h = first.latency_histogram().clone();
-                let mut raw_h = first.raw_latency_histogram().clone();
-                for m in &members[1..] {
-                    let s = m.streaming().expect("checked above");
-                    lat_h.merge(s.latency_histogram());
-                    raw_h.merge(s.raw_latency_histogram());
-                }
-                (lat_h.quantile(0.95) as f32, raw_h.quantile(0.95) as f32)
-            } else {
-                let lat: Vec<f32> = members
-                    .iter()
-                    .flat_map(|t| t.records().iter().map(|r| r.latency))
-                    .collect();
-                let raw: Vec<f32> = members
-                    .iter()
-                    .flat_map(|t| t.records().iter().map(|r| r.latency_raw))
-                    .collect();
-                (percentile(&lat, 95.0), percentile(&raw, 95.0))
-            };
-            // class p99: merge the members' sketches — O(buckets) per
-            // tenant instead of concatenating every raw sample
-            let mut class_hist = members[0].merged_histogram();
-            for m in &members[1..] {
-                class_hist.merge(&m.merged_histogram());
-            }
-            Some(ClassReport {
-                class,
-                tenants: members.len(),
-                p95_latency: p95,
-                p95_latency_raw: p95_raw,
-                p99_latency: class_hist.p99() as f32,
-                total_cost: members.iter().map(|t| t.summary().total_cost).sum(),
-                denied: members.iter().map(|t| t.denied_total).sum(),
-                rescues: members.iter().map(|t| t.rescued_total).sum(),
-                violations: members.iter().map(|t| t.summary().violations).sum(),
-            })
-        })
-        .collect();
-
     FleetReport {
         budget,
         peak_spend: ticks.iter().map(|t| t.spend).fold(0.0, f32::max),
@@ -202,7 +150,112 @@ pub fn fleet_report(tenants: &[Tenant], ticks: &[FleetTick], budget: f32) -> Fle
         admitted_moves: ticks.iter().map(|t| t.admitted_moves).sum(),
         denied_moves: ticks.iter().map(|t| t.denied_moves).sum(),
         tenants: tenant_reports,
-        classes,
+        classes: class_reports(tenants),
+    }
+}
+
+/// Per-class rollups over the fleet, shared by [`fleet_report`] and
+/// [`fleet_rollup`] so the two paths agree bit for bit (same member
+/// iteration order, same f64 accumulation order).
+fn class_reports(tenants: &[Tenant]) -> Vec<ClassReport> {
+    PriorityClass::ALL
+        .iter()
+        .filter_map(|&class| {
+            let members: Vec<&Tenant> =
+                tenants.iter().filter(|t| t.class() == class).collect();
+            class_report(class, &members)
+        })
+        .collect()
+}
+
+/// One class's rollup from its members (`None` when the class is
+/// unpopulated).
+fn class_report(class: PriorityClass, members: &[&Tenant]) -> Option<ClassReport> {
+    if members.is_empty() {
+        return None;
+    }
+    // class p95: when every member streams, merge their
+    // sketches (O(buckets) per tenant); otherwise concatenate
+    // the exact samples as before
+    let (p95, p95_raw) = if members.iter().all(|t| t.streaming().is_some()) {
+        let first = members[0].streaming().expect("checked above");
+        let mut lat_h = first.latency_histogram().clone();
+        let mut raw_h = first.raw_latency_histogram().clone();
+        for m in &members[1..] {
+            let s = m.streaming().expect("checked above");
+            lat_h.merge(s.latency_histogram());
+            raw_h.merge(s.raw_latency_histogram());
+        }
+        (lat_h.quantile(0.95) as f32, raw_h.quantile(0.95) as f32)
+    } else {
+        let lat: Vec<f32> = members
+            .iter()
+            .flat_map(|t| t.records().iter().map(|r| r.latency))
+            .collect();
+        let raw: Vec<f32> = members
+            .iter()
+            .flat_map(|t| t.records().iter().map(|r| r.latency_raw))
+            .collect();
+        (percentile(&lat, 95.0), percentile(&raw, 95.0))
+    };
+    // class p99: merge the members' sketches — O(buckets) per
+    // tenant instead of concatenating every raw sample
+    let mut class_hist = members[0].merged_histogram();
+    for m in &members[1..] {
+        class_hist.merge(&m.merged_histogram());
+    }
+    Some(ClassReport {
+        class,
+        tenants: members.len(),
+        p95_latency: p95,
+        p95_latency_raw: p95_raw,
+        p99_latency: class_hist.p99() as f32,
+        total_cost: members.iter().map(|t| t.summary().total_cost).sum(),
+        denied: members.iter().map(|t| t.denied_total).sum(),
+        rescues: members.iter().map(|t| t.rescued_total).sum(),
+        violations: members.iter().map(|t| t.summary().violations).sum(),
+    })
+}
+
+/// The fleet report without the per-tenant rows: class rollups and
+/// fleet totals only, computed straight from the tenants' O(1)
+/// summaries and mergeable sketches. At 100k tenants materializing one
+/// [`TenantReport`] per tenant (strings, summaries, percentiles) is
+/// the report-side bottleneck named in the ROADMAP; a streaming fleet
+/// only needs this rollup, and its numbers are pinned **bitwise equal**
+/// to [`fleet_report`]'s class/total fields (shared helpers, identical
+/// iteration order) by `rollup_matches_the_exact_report_on_a_512_tenant_fleet`.
+#[derive(Debug, Clone)]
+pub struct FleetRollup {
+    pub budget: f32,
+    pub peak_spend: f32,
+    pub total_cost: f64,
+    pub admitted_moves: usize,
+    pub denied_moves: usize,
+    pub classes: Vec<ClassReport>,
+}
+
+impl FleetRollup {
+    pub fn class(&self, class: PriorityClass) -> Option<&ClassReport> {
+        self.classes.iter().find(|c| c.class == class)
+    }
+
+    /// Whether fleet spend stayed within the budget at every tick.
+    pub fn within_budget(&self) -> bool {
+        self.peak_spend <= self.budget + super::BUDGET_EPS
+    }
+}
+
+/// Aggregate tenants + tick timeline into a [`FleetRollup`] without
+/// materializing per-tenant report rows.
+pub fn fleet_rollup(tenants: &[Tenant], ticks: &[FleetTick], budget: f32) -> FleetRollup {
+    FleetRollup {
+        budget,
+        peak_spend: ticks.iter().map(|t| t.spend).fold(0.0, f32::max),
+        total_cost: tenants.iter().map(|t| t.summary().total_cost).sum(),
+        admitted_moves: ticks.iter().map(|t| t.admitted_moves).sum(),
+        denied_moves: ticks.iter().map(|t| t.denied_moves).sum(),
+        classes: class_reports(tenants),
     }
 }
 
@@ -274,6 +327,44 @@ pub fn table(report: &FleetReport) -> String {
             t.max_denial_streak,
             t.suspended_ticks,
             t.resumes
+        );
+    }
+    out
+}
+
+/// Human-readable rollup table (fleet totals + class rows; no
+/// per-tenant section — that is the point).
+pub fn rollup_table(rollup: &FleetRollup) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "fleet: budget {:.2}/h  peak spend {:.2}/h ({})  total cost {:.1}  moves admitted {} denied {}",
+        rollup.budget,
+        rollup.peak_spend,
+        if rollup.within_budget() { "within budget" } else { "OVER BUDGET" },
+        rollup.total_cost,
+        rollup.admitted_moves,
+        rollup.denied_moves,
+    );
+    let _ = writeln!(
+        out,
+        "\n{:<8} {:>7} {:>10} {:>12} {:>10} {:>10} {:>8} {:>8} {:>8}",
+        "class", "tenants", "p95 lat", "p95 raw lat", "p99 lat", "cost", "denied", "rescues",
+        "viol."
+    );
+    for c in &rollup.classes {
+        let _ = writeln!(
+            out,
+            "{:<8} {:>7} {:>10.3} {:>12.3} {:>10.3} {:>10.1} {:>8} {:>8} {:>8}",
+            c.class.label(),
+            c.tenants,
+            c.p95_latency,
+            c.p95_latency_raw,
+            c.p99_latency,
+            c.total_cost,
+            c.denied,
+            c.rescues,
+            c.violations
         );
     }
     out
@@ -464,6 +555,52 @@ mod tests {
             }
             assert_eq!(a.p99_latency, b.p99_latency, "p99 path is shared");
         }
+    }
+
+    #[test]
+    fn rollup_matches_the_exact_report_on_a_512_tenant_fleet() {
+        let cfg = ModelConfig::default_paper();
+        let base = TraceBuilder::paper(&cfg);
+        let n = 512usize;
+        let specs: Vec<TenantSpec> = (0..n)
+            .map(|i| {
+                TenantSpec::from_config(
+                    &cfg,
+                    format!("t-{i}"),
+                    PriorityClass::ALL[i % 3],
+                    base.shifted(i * base.len() / n),
+                )
+            })
+            .collect();
+        let mut fleet = FleetSimulator::new(&cfg, specs, 1.0e6, 3);
+        fleet.enable_streaming_metrics(16);
+        let res = fleet.run(40);
+        let rollup = fleet_rollup(fleet.tenants(), &res.ticks, 1.0e6);
+        // totals: bitwise (same f64 accumulation order)
+        assert_eq!(rollup.total_cost.to_bits(), res.report.total_cost.to_bits());
+        assert_eq!(rollup.peak_spend.to_bits(), res.report.peak_spend.to_bits());
+        assert_eq!(rollup.admitted_moves, res.report.admitted_moves);
+        assert_eq!(rollup.denied_moves, res.report.denied_moves);
+        assert_eq!(rollup.budget, res.report.budget);
+        assert_eq!(rollup.within_budget(), res.report.within_budget());
+        // class rows: bitwise equal field by field (shared helper)
+        assert_eq!(rollup.classes.len(), res.report.classes.len());
+        for (a, b) in rollup.classes.iter().zip(&res.report.classes) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.tenants, b.tenants);
+            assert_eq!(a.p95_latency.to_bits(), b.p95_latency.to_bits());
+            assert_eq!(a.p95_latency_raw.to_bits(), b.p95_latency_raw.to_bits());
+            assert_eq!(a.p99_latency.to_bits(), b.p99_latency.to_bits());
+            assert_eq!(a.total_cost.to_bits(), b.total_cost.to_bits());
+            assert_eq!(a.denied, b.denied);
+            assert_eq!(a.rescues, b.rescues);
+            assert_eq!(a.violations, b.violations);
+        }
+        // the rollup renderer's shared header lines match table()'s
+        let rt = rollup_table(&rollup);
+        let ft = table(&res.report);
+        assert_eq!(rt.lines().next(), ft.lines().next(), "fleet summary line diverged");
+        assert!(rt.lines().count() < ft.lines().count(), "rollup must skip tenant rows");
     }
 
     #[test]

@@ -89,7 +89,7 @@ impl ForecastKind {
 }
 
 /// Static description of one tenant.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TenantSpec {
     pub name: String,
     pub class: PriorityClass,

@@ -71,6 +71,19 @@
 //!   pinned scenarios show a 64-tenant mostly-idle fleet cutting cost
 //!   strictly below always-on packing, and a correlated wake storm
 //!   resolving without starving Gold tenants.
+//! * [`scenario`] — the deterministic scenario subsystem, the single
+//!   source of workloads and fault schedules for fleet, placement, and
+//!   serverless runs: composable trace generators (diurnal+weekly
+//!   composites, flash crowds with a realized cross-tenant correlation
+//!   coefficient, heavy-tailed Pareto tenant sizes), the
+//!   hypergraph-flavored [`scenario::ShardModel`] that turns flat
+//!   per-tenant migration GB into which-shards-actually-move pricing
+//!   (default off; [`placement::PlacementSim::set_shard_model`] opts
+//!   in), fault-schedule generators (zone outages, failure storms,
+//!   rolling restarts) layered onto the fleet DES calendars, and the
+//!   named presets behind `fleet --scenario <name>` /
+//!   `placement --scenario <name>` — each preset ships with a pinned
+//!   comparison test in `tests/prop_scenario.rs`.
 //! * [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO
 //!   artifacts produced by `python/compile/aot.py` and executes the
 //!   Pallas-backed surface kernels on the decision path.
@@ -148,6 +161,7 @@ pub mod plane;
 pub mod policy;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod serverless;
 pub mod simulator;
 pub mod sla;

@@ -28,6 +28,7 @@ use diagonal_scale::placement::{self, PlacementConfig, PlacementSim};
 use diagonal_scale::policy::{DiagonalScale, Lookahead, Oracle, Policy, StaticPolicy, Threshold};
 use diagonal_scale::report::{self, Surface};
 use diagonal_scale::runtime::{Engine, SurfaceEngine};
+use diagonal_scale::scenario;
 use diagonal_scale::serverless::{self, ServerlessParams};
 use diagonal_scale::simulator::{AnalyticalSubstrate, PolicyKind, Simulator};
 use diagonal_scale::surfaces::SurfaceModel;
@@ -94,6 +95,14 @@ COMMANDS:
                                   with this engine (implies --cluster
                                   true; default des)
                 [--seed <u64>] (default 42, substrate modes only)
+                [--scenario <name>] build the fleet from a named
+                                  scenario preset (trace specs + fault
+                                  schedule): flash-crowd, black-friday,
+                                  heavy-tail, zone-outage,
+                                  failure-storm, rolling-restart.
+                                  Fault presets auto-attach the DES
+                                  substrate; the preset also sets the
+                                  default --steps
                 [--serverless <bool>] scale-to-zero tier: tenants park
                                   their pages on a shared storage
                                   service, suspend when idle, and wake
@@ -138,6 +147,10 @@ COMMANDS:
                                   default)
                 [--ticks-sample <k>] reservoir-bound the per-tick
                                   output to k rows (0 = all, default)
+                [--rollup <bool>] print the compact class rollup
+                                  (streaming-accumulator summaries,
+                                  no per-tenant rows) instead of the
+                                  full report table (default false)
                 [--metrics-out <file>] write the run's metric registry
                                   as Prometheus text exposition
                 [--metrics-json <file>] write the same registry as
@@ -157,6 +170,14 @@ COMMANDS:
                 [--mode <m>] packed|dedicated|both (default both:
                                   A/B the packer against
                                   one-cluster-per-tenant)
+                [--scenario <name>] build tenants from a scenario
+                                  preset (heavy-tail pairs Pareto
+                                  sizes with a shard-affinity map;
+                                  any preset name is accepted)
+                [--partition-aware <bool>] price migrations from the
+                                  shard-affinity map's actually-moved
+                                  GB instead of the flat per-tenant
+                                  GB baseline (default false)
 ";
 
 /// Tiny flag parser: `--key value` pairs after the subcommand.
@@ -521,10 +542,21 @@ fn main() -> Result<()> {
             if n == 0 {
                 bail!("--tenants must be at least 1");
             }
-            let steps: usize = args.parse_num("steps", 100)?;
+            let seed: u64 = args.parse_num("seed", 42)?;
+            let sc = match args.get("scenario") {
+                None => None,
+                Some(name) => Some(scenario::preset(name, &cfg, n, seed).ok_or_else(|| {
+                    anyhow!(
+                        "unknown --scenario `{name}` (expected one of: {})",
+                        scenario::PRESETS.join(", ")
+                    )
+                })?),
+            };
+            // a preset carries its own natural horizon (e.g. a whole
+            // simulated week for black-friday); --steps still overrides
+            let steps: usize = args.parse_num("steps", sc.as_ref().map_or(100, |s| s.steps))?;
             let k: usize = args.parse_num("k", 3)?;
             let budget: f32 = args.parse_num("budget", 2.2 * n as f32)?;
-            let seed: u64 = args.parse_num("seed", 42)?;
             // an explicit --substrate implies physical backing, so the
             // flag is never silently ignored
             let substrate_flag = args.get("substrate");
@@ -537,6 +569,9 @@ fn main() -> Result<()> {
             {
                 bail!("--idle-fraction / --wake-storm require --serverless true");
             }
+            if sc.is_some() && serverless_on {
+                bail!("--scenario and --serverless are mutually exclusive (presets carry their own specs)");
+            }
             let idle_fraction: f32 = args.parse_num("idle-fraction", 0.75)?;
             if !(0.0..=1.0).contains(&idle_fraction) {
                 bail!("--idle-fraction must be in [0, 1]");
@@ -547,7 +582,9 @@ fn main() -> Result<()> {
             // tenant peaks stagger across the fleet. Serverless runs
             // use the pinned mostly-idle / wake-storm scenarios
             // instead (round-robin classes, idle tenants bursty).
-            let specs: Vec<TenantSpec> = if serverless_on {
+            let specs: Vec<TenantSpec> = if let Some(sc) = &sc {
+                sc.specs.clone()
+            } else if serverless_on {
                 match args.get("wake-storm") {
                     Some(_) => serverless::wake_storm_specs(
                         &cfg,
@@ -620,8 +657,25 @@ fn main() -> Result<()> {
                     fleetsim.enable_forecasts(kind, 3);
                 }
             }
-            if attach {
+            // fault presets need substrate engines to land their node
+            // failures on, so a scenario with a schedule implies the
+            // attach even without --cluster/--substrate
+            let has_faults = sc.as_ref().map_or(false, |s| !s.faults.is_empty());
+            if attach || has_faults {
                 fleetsim.attach_substrates(&cfg, ClusterParams::default(), seed, kind);
+            }
+            if let Some(sc) = &sc {
+                let accepted =
+                    fleetsim.schedule_faults(&sc.faults, ClusterParams::default().interval);
+                fleetsim.set_scenario(sc.name, accepted);
+                println!(
+                    "scenario `{}`: {} tenants, {} steps, {} of {} fault events scheduled",
+                    sc.name,
+                    n,
+                    steps,
+                    accepted,
+                    sc.faults.len()
+                );
             }
             fleetsim.set_dirty_planning(args.parse_num("dirty-planning", true)?);
             let refresh_k: usize = args.parse_num("refresh-k", fleet::REFRESH_K)?;
@@ -664,10 +718,11 @@ fn main() -> Result<()> {
                 if let Some(path) = args.get("explain-out") {
                     std::fs::write(
                         path,
-                        report::fleet_explain_json_sampled(
+                        report::fleet_explain_json_scenario(
                             fleetsim.explain_log(),
                             fleetsim.explain_sample_cap(),
                             fleetsim.explain_seen(),
+                            sc.as_ref().map(|s| s.name),
                         ),
                     )?;
                     println!("wrote {path} ({})", report::EXPLAIN_SCHEMA);
@@ -706,7 +761,12 @@ fn main() -> Result<()> {
                     storage.total_storage_cost(),
                 );
             }
-            println!("\n{}", fleet::report::table(&res.report));
+            if args.parse_num("rollup", false)? {
+                let roll = fleet::report::fleet_rollup(fleetsim.tenants(), &res.ticks, budget);
+                println!("\n{}", fleet::report::rollup_table(&roll));
+            } else {
+                println!("\n{}", fleet::report::table(&res.report));
+            }
             if let Some(path) = args.get("metrics-out") {
                 std::fs::write(path, fleetsim.export_metrics().render_prometheus())?;
                 println!("wrote {path} (prometheus text)");
@@ -724,7 +784,17 @@ fn main() -> Result<()> {
             if n == 0 {
                 bail!("--tenants must be at least 1");
             }
-            let steps: usize = args.parse_num("steps", 100)?;
+            let seed = scenario::DEFAULT_SEED;
+            let sc = match args.get("scenario") {
+                None => None,
+                Some(name) => Some(scenario::preset(name, &cfg, n, seed).ok_or_else(|| {
+                    anyhow!(
+                        "unknown --scenario `{name}` (expected one of: {})",
+                        scenario::PRESETS.join(", ")
+                    )
+                })?),
+            };
+            let steps: usize = args.parse_num("steps", sc.as_ref().map_or(100, |s| s.steps))?;
             let budget: f32 = args.parse_num("budget", 1.0e9)?;
             let k: usize = args.parse_num("k", 3)?;
             let scale: f32 = args.parse_num("scale", 0.1)?;
@@ -736,18 +806,44 @@ fn main() -> Result<()> {
                 replan_every: args.parse_num("replan", 4)?,
                 ..PlacementConfig::default()
             };
-            let specs = || placement::small_tenant_specs(&cfg, n, scale);
+            // partition-aware pricing: the preset's shard map when it
+            // ships one (heavy-tail), else a seeded uniform map at the
+            // flat tenant_gb so the comparison stays apples-to-apples
+            let partition_aware: bool = args.parse_num("partition-aware", false)?;
+            let shard_model = if partition_aware {
+                Some(match sc.as_ref().and_then(|s| s.shards.as_ref()) {
+                    Some(sm) => sm.clone(),
+                    None => scenario::ShardModel::uniform(n, pcfg.tenant_gb, 6, 4, seed),
+                })
+            } else {
+                None
+            };
+            let specs = || match &sc {
+                Some(sc) => sc.specs.clone(),
+                None => placement::small_tenant_specs(&cfg, n, scale),
+            };
+            if let Some(sc) = &sc {
+                println!("scenario `{}`: {} tenants, {} steps", sc.name, n, steps);
+            }
 
-            let mut runs: Vec<(&str, placement::PlacementResult)> = Vec::new();
+            let mut runs: Vec<(&str, placement::PlacementResult, f64)> = Vec::new();
             if mode != "packed" {
                 let mut ded = PlacementSim::dedicated(&cfg, specs(), budget, k, pcfg);
-                runs.push(("dedicated", ded.run(steps)));
+                if let Some(sm) = &shard_model {
+                    ded.set_shard_model(sm.clone());
+                }
+                let r = ded.run(steps);
+                runs.push(("dedicated", r, ded.total_moved_gb()));
             }
             if mode != "dedicated" {
                 let mut packed = PlacementSim::packed(&cfg, specs(), budget, k, pcfg);
-                runs.push(("packed", packed.run(steps)));
+                if let Some(sm) = &shard_model {
+                    packed.set_shard_model(sm.clone());
+                }
+                let r = packed.run(steps);
+                runs.push(("packed", r, packed.total_moved_gb()));
             }
-            for (label, res) in &runs {
+            for (label, res, moved) in &runs {
                 println!("== {label} ==");
                 for t in &res.ticks {
                     println!(
@@ -757,6 +853,12 @@ fn main() -> Result<()> {
                     );
                 }
                 println!("\n{}", res.report.table());
+                let pricing = if partition_aware {
+                    " (partition-aware shard pricing)"
+                } else {
+                    ""
+                };
+                println!("moved data: {moved:.2} GB{pricing}");
                 if !res.within_budget(budget) {
                     bail!("{label} placement exceeded the budget (peak {:.2})", res.peak_spend());
                 }

@@ -171,6 +171,91 @@ impl Hll {
     }
 }
 
+/// A fixed ring of per-window HLL sketches: one **open** sketch
+/// accepting inserts, plus the last `cap` **closed** windows retained
+/// for merged lookback queries ("distinct tenants active over the last
+/// W windows"). [`HllWindowRing::rotate`] closes the open window —
+/// returning its estimate, the per-window gauge — pushes it onto the
+/// ring, and evicts the oldest window past `cap`. Memory is a strict
+/// `(cap + 1) × 2^p` bytes regardless of run length; the single
+/// clear-on-rotate sketch this replaces kept only the open window, so
+/// the merged lookback estimate was impossible to export.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HllWindowRing {
+    open: Hll,
+    /// Closed windows, oldest first, at most `cap`.
+    ring: Vec<Hll>,
+    cap: usize,
+    rotations: u64,
+}
+
+impl HllWindowRing {
+    /// Ring retaining the last `cap` closed windows, each a sketch of
+    /// precision `p`.
+    pub fn new(cap: usize, p: u32) -> Self {
+        assert!(cap > 0, "window ring needs room for at least one closed window");
+        Self { open: Hll::new(p), ring: Vec::with_capacity(cap), cap, rotations: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Windows closed so far (monotonic, not bounded by the capacity).
+    pub fn rotations(&self) -> u64 {
+        self.rotations
+    }
+
+    /// Insert into the still-open window.
+    pub fn insert_u64(&mut self, v: u64) {
+        self.open.insert_u64(v);
+    }
+
+    /// Estimate of the still-open window.
+    pub fn open_estimate(&self) -> f64 {
+        self.open.estimate()
+    }
+
+    /// True iff nothing has been inserted since the last rotation.
+    pub fn open_is_empty(&self) -> bool {
+        self.open.is_empty()
+    }
+
+    /// Retained closed windows, oldest first.
+    pub fn closed_windows(&self) -> &[Hll] {
+        &self.ring
+    }
+
+    /// Close the open window: push it onto the ring (evicting the
+    /// oldest past capacity), start a fresh open sketch, and return the
+    /// closed window's estimate.
+    pub fn rotate(&mut self) -> f64 {
+        let est = self.open.estimate();
+        let closed = std::mem::replace(&mut self.open, Hll::new(self.open.precision()));
+        if self.ring.len() == self.cap {
+            self.ring.remove(0);
+        }
+        self.ring.push(closed);
+        self.rotations += 1;
+        est
+    }
+
+    /// Cardinality of the union of every retained closed window — the
+    /// "distinct actives over the last W windows" gauge. Register-max
+    /// merge, so this equals the estimate of one sketch fed all the
+    /// retained streams.
+    pub fn merged_estimate(&self) -> f64 {
+        let Some(first) = self.ring.first() else {
+            return 0.0;
+        };
+        let mut merged = first.clone();
+        for w in &self.ring[1..] {
+            merged.merge(w);
+        }
+        merged.estimate()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

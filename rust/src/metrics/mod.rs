@@ -22,7 +22,7 @@ pub mod registry;
 mod streaming;
 
 pub use histogram::LatencyHistogram;
-pub use hll::Hll;
+pub use hll::{Hll, HllWindowRing};
 pub use registry::{MetricsRegistry, METRICS_SCHEMA};
 pub use streaming::{reservoir_sample, StreamingRecorder};
 

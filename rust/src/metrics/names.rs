@@ -54,8 +54,13 @@ pub const FLEET_PLANNING_SECONDS: &str = "fleet_planning_seconds";
 
 // Fleet cardinality sketches (`metrics::hll`).
 pub const FLEET_ACTIVE_TENANTS_WINDOW: &str = "fleet_active_tenants_window";
+pub const FLEET_ACTIVE_TENANTS_RING: &str = "fleet_active_tenants_ring";
 pub const FLEET_ACTIVE_TENANTS_ESTIMATE: &str = "fleet_active_tenants_estimate";
 pub const FLEET_CONFIGS_VISITED_ESTIMATE: &str = "fleet_configs_visited_estimate";
+
+// Scenario subsystem (stamped when a named preset drives the run).
+pub const SCENARIO_ACTIVE: &str = "scenario_active";
+pub const SCENARIO_FAULTS_TOTAL: &str = "scenario_faults_total";
 
 // Fleet observation cost + latency rollup (set by `export_metrics`).
 pub const FLEET_RETAINED_RECORDS: &str = "fleet_retained_records";
@@ -79,6 +84,7 @@ pub const SERVERLESS_SUSPENDS: &str = "serverless_suspends";
 pub const PLACEMENT_HOSTS: &str = "placement_hosts";
 pub const PLACEMENT_HOSTS_TOUCHED_ESTIMATE: &str = "placement_hosts_touched_estimate";
 pub const PLACEMENT_SPEND_HOURLY: &str = "placement_spend_hourly";
+pub const PLACEMENT_MOVED_GB: &str = "placement_moved_gb";
 
 // Single-cluster coordinator loop.
 pub const COORDINATOR_STEPS: &str = "coordinator_steps";
@@ -124,7 +130,10 @@ pub const ALL: &[MetricDef] = &[
     counter(FLEET_RESUME_ENDS_TOTAL, "cold-start windows completed"),
     histogram(FLEET_PLANNING_SECONDS, PLANNING_FLOOR, "per-tick planning wall time"),
     gauge(FLEET_ACTIVE_TENANTS_WINDOW, "HLL distinct active tenants, last closed window"),
+    gauge(FLEET_ACTIVE_TENANTS_RING, "HLL distinct active tenants over the retained window ring"),
     gauge(FLEET_ACTIVE_TENANTS_ESTIMATE, "HLL distinct tenants active at least once"),
+    gauge(SCENARIO_ACTIVE, "1 when a named scenario preset drives the run"),
+    gauge(SCENARIO_FAULTS_TOTAL, "fault events the scenario scheduled onto DES calendars"),
     gauge(FLEET_CONFIGS_VISITED_ESTIMATE, "HLL distinct (tenant, config) pairs served"),
     gauge(FLEET_RETAINED_RECORDS, "step records held in memory across all tenants"),
     histogram(FLEET_LATENCY_SECONDS, LATENCY_FLOOR, "measured per-step latency, merged across tenants"),
@@ -141,6 +150,7 @@ pub const ALL: &[MetricDef] = &[
     gauge(PLACEMENT_HOSTS, "shared hosts currently live"),
     gauge(PLACEMENT_HOSTS_TOUCHED_ESTIMATE, "HLL distinct hosts touched by placement actions"),
     gauge(PLACEMENT_SPEND_HOURLY, "hourly cost of the packed host set"),
+    gauge(PLACEMENT_MOVED_GB, "data shipped by migrations (shard-priced when a model is set)"),
     gauge(COORDINATOR_STEPS, "trace steps driven by the coordinator"),
     gauge(COORDINATOR_VIOLATIONS, "coordinator steps in SLA violation"),
     gauge(COORDINATOR_RECONFIGURATIONS, "coordinator reconfigurations applied"),

@@ -90,14 +90,26 @@ impl MigrationPlanner {
         dest: &Configuration,
         params: &ClusterParams,
     ) -> MigrationWindow {
+        self.price_gb(plane, dest, params, self.tenant_gb)
+    }
+
+    /// [`MigrationPlanner::price`] for an explicit data volume — the
+    /// partition-aware path, where a
+    /// [`crate::scenario::ShardModel`] has already determined which
+    /// shards actually move (`gb ≤ tenant_gb`). A zero-GB move (every
+    /// shard's hyperedge already present at the destination) opens no
+    /// window.
+    pub fn price_gb(
+        &self,
+        plane: &ScalingPlane,
+        dest: &Configuration,
+        params: &ClusterParams,
+        gb: f64,
+    ) -> MigrationWindow {
         let h = plane.h_value(dest) as f64;
         let bw = h * plane.tier(dest).bandwidth as f64 * params.move_bandwidth_frac;
-        let duration = if bw > 0.0 { self.tenant_gb / bw } else { 0.0 };
-        MigrationWindow {
-            data_gb: self.tenant_gb,
-            duration,
-            degradation: params.rebalance_degradation,
-        }
+        let duration = if bw > 0.0 { gb / bw } else { 0.0 };
+        MigrationWindow { data_gb: gb, duration, degradation: params.rebalance_degradation }
     }
 }
 
@@ -138,6 +150,23 @@ mod tests {
         let params = ClusterParams::default();
         let w = MigrationPlanner::new(2.0).price(&plane(), &Configuration::new(0, 1), &params);
         assert!((w.duration - 2.0).abs() < 1e-12, "duration {}", w.duration);
+    }
+
+    #[test]
+    fn partial_shard_moves_price_strictly_less_than_the_flat_share() {
+        let params = ClusterParams::default();
+        let p = plane();
+        let dest = Configuration::new(1, 1);
+        let planner = MigrationPlanner::new(2.0);
+        let flat = planner.price(&p, &dest, &params);
+        let partial = planner.price_gb(&p, &dest, &params, 0.75);
+        assert!(partial.duration < flat.duration);
+        assert_eq!(partial.data_gb, 0.75);
+        // the full volume through price_gb is exactly the flat path
+        let full = planner.price_gb(&p, &dest, &params, 2.0);
+        assert_eq!(full, flat);
+        // nothing shared nowhere to ship: no window at all
+        assert_eq!(planner.price_gb(&p, &dest, &params, 0.0).duration, 0.0);
     }
 
     #[test]

@@ -27,6 +27,7 @@ use crate::config::ModelConfig;
 use crate::fleet::{BudgetArbiter, Candidate, PriorityClass, Proposal, TenantSpec};
 use crate::metrics::{Hll, Recorder, StepRecord, Summary};
 use crate::plane::Configuration;
+use crate::scenario::ShardModel;
 use crate::sla::Violation;
 use crate::surfaces::{queueing, SurfaceModel};
 use crate::util::money;
@@ -199,6 +200,13 @@ pub struct PlacementSim {
     pcfg: PlacementConfig,
     packer: Packer,
     planner: MigrationPlanner,
+    /// Partition-aware migration pricing: when set, a move ships only
+    /// the shards whose hyperedge no destination resident already
+    /// carries ([`ShardModel::moved_gb`]). `None` (the default) keeps
+    /// the flat `tenant_gb` baseline and the pinned PR-4 numbers.
+    shards: Option<ShardModel>,
+    /// Σ data actually shipped by actuated migrations (GB).
+    moved_gb_total: f64,
     packed: bool,
     b_sla: f64,
     step: usize,
@@ -243,6 +251,8 @@ impl PlacementSim {
         Self {
             packer: Packer::new(Arc::clone(&model), pcfg),
             planner: MigrationPlanner::new(pcfg.tenant_gb),
+            shards: None,
+            moved_gb_total: 0.0,
             model,
             specs,
             weights,
@@ -302,6 +312,25 @@ impl PlacementSim {
         &self.clusters
     }
 
+    /// Opt in to partition-aware migration pricing: each actuated move
+    /// ships only the shards whose hyperedge no destination resident
+    /// already carries, so co-access overlap discounts the window. The
+    /// model must cover every tenant.
+    pub fn set_shard_model(&mut self, shards: ShardModel) {
+        assert!(
+            shards.n_tenants() >= self.specs.len(),
+            "shard model must cover every tenant"
+        );
+        self.shards = Some(shards);
+    }
+
+    /// Σ data shipped by actuated migrations so far (GB). Under the
+    /// flat baseline this is exactly `migrations × tenant_gb`; with a
+    /// shard model attached it is the partition-aware (≤) volume.
+    pub fn total_moved_gb(&self) -> f64 {
+        self.moved_gb_total
+    }
+
     pub fn arbiter(&self) -> &BudgetArbiter {
         &self.arbiter
     }
@@ -320,6 +349,7 @@ impl PlacementSim {
         reg.set(names::PLACEMENT_HOSTS, &[], self.clusters.len() as f64);
         reg.set(names::PLACEMENT_HOSTS_TOUCHED_ESTIMATE, &[], self.hosts_hll.estimate());
         reg.set(names::PLACEMENT_SPEND_HOURLY, &[], self.spend() as f64);
+        reg.set(names::PLACEMENT_MOVED_GB, &[], self.moved_gb_total);
     }
 
     /// Live host cluster id of a tenant, if hosted.
@@ -716,7 +746,15 @@ impl PlacementSim {
             }
             self.hosts_hll.insert_u64(dest_id as u64);
             let dest_cfg = self.clusters[di].config();
-            let w = self.planner.price(self.model.plane(), &dest_cfg, &self.params);
+            // partition-aware: only the shards no destination resident
+            // shares a hyperedge with actually ship (residents read
+            // BEFORE the tenant lands)
+            let gb = match &self.shards {
+                Some(sm) => sm.moved_gb(m.tenant, self.clusters[di].tenants()),
+                None => self.planner.tenant_gb,
+            };
+            let w = self.planner.price_gb(self.model.plane(), &dest_cfg, &self.params, gb);
+            self.moved_gb_total += w.data_gb;
             self.clusters[di].add_tenant(m.tenant);
             if w.duration > 0.0 {
                 self.clusters[di].open_window(

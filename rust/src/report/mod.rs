@@ -106,6 +106,10 @@ impl Surface {
 /// * `"seen"` — how many move records the run offered to the
 ///   reservoir (the sampling denominator; equals `steps.length` on
 ///   unsampled runs). Both are absent when the log is unbounded.
+///
+/// PR 10 adds the top-level `"scenario"` field to fleet dumps of
+/// scenario-driven runs (`fleet --scenario <name>`): the preset name
+/// that generated the workloads and fault schedule. Absent otherwise.
 pub const EXPLAIN_SCHEMA: &str = "diagonal-scale/explain-v1";
 
 fn json_escape(s: &str) -> String {
@@ -190,8 +194,25 @@ pub fn fleet_explain_json_sampled(
     sample_cap: usize,
     seen: u64,
 ) -> String {
+    fleet_explain_json_scenario(records, sample_cap, seen, None)
+}
+
+/// [`fleet_explain_json_sampled`] with the additive top-level
+/// `scenario` field: the named preset (`fleet --scenario <name>`) that
+/// generated the run's workloads and fault schedule. Omitted when the
+/// run was not scenario-driven, so pre-scenario consumers parse
+/// unchanged.
+pub fn fleet_explain_json_scenario(
+    records: &[crate::fleet::ExplainRecord],
+    sample_cap: usize,
+    seen: u64,
+    scenario: Option<&str>,
+) -> String {
     let mut out = String::new();
     let _ = write!(out, "{{\"schema\":\"{EXPLAIN_SCHEMA}\",\"kind\":\"fleet\"");
+    if let Some(name) = scenario {
+        let _ = write!(out, ",\"scenario\":\"{}\"", json_escape(name));
+    }
     if sample_cap > 0 {
         let _ = write!(out, ",\"sample_cap\":{sample_cap},\"seen\":{seen}");
     }

@@ -1,0 +1,276 @@
+//! Composable trace generators for production workload shapes:
+//! diurnal+weekly composites, correlated flash crowds, and
+//! heavy-tailed Pareto tenant sizes. Everything is deterministic in
+//! its seed (the [`XorShift64`] stream is the only randomness source)
+//! and composes with the [`TraceBuilder`] families — generators here
+//! return plain [`Trace`]s / [`TenantSpec`]s, nothing scenario-shaped
+//! leaks into the workload layer.
+
+use crate::config::ModelConfig;
+use crate::fleet::TenantSpec;
+use crate::workload::{Trace, TraceBuilder, WorkloadPoint, XorShift64};
+
+use super::class_for;
+
+fn point(cfg: &ModelConfig, intensity: f32) -> WorkloadPoint {
+    WorkloadPoint::new(intensity.max(0.0) * cfg.workload.thr_factor, cfg.write_ratio())
+}
+
+/// Diurnal sinusoid between `lo` and `hi` intensity with period
+/// `day` ticks, modulated by a 7-day seasonal envelope of relative
+/// amplitude `week_amp` (0 disables the weekly component and the
+/// result matches [`TraceBuilder::sine`] shapes).
+pub fn diurnal_weekly(
+    cfg: &ModelConfig,
+    lo: f32,
+    hi: f32,
+    day: usize,
+    week_amp: f32,
+    steps: usize,
+) -> Trace {
+    let mid = (lo + hi) / 2.0;
+    let amp = (hi - lo) / 2.0;
+    let day = day.max(1);
+    let points = (0..steps)
+        .map(|t| {
+            let dp = t as f32 / day as f32 * std::f32::consts::TAU;
+            let wp = t as f32 / (7 * day) as f32 * std::f32::consts::TAU;
+            let i = (mid + amp * dp.sin()) * (1.0 + week_amp * wp.sin());
+            point(cfg, i)
+        })
+        .collect();
+    Trace { name: "diurnal-weekly".into(), points }
+}
+
+/// One draw of `n` correlated participation flags with marginal
+/// probability `p` and pairwise correlation `rho`, via the standard
+/// mixture construction: a common Bernoulli(`p`) event is drawn once,
+/// and each tenant copies it with probability `sqrt(rho)` or draws its
+/// own independent Bernoulli(`p`) otherwise. The indicator correlation
+/// between any two tenants is then exactly `rho` (both must copy the
+/// common draw: `sqrt(rho)^2`). Every tenant consumes exactly two rng
+/// values, so the stream stays aligned regardless of outcomes.
+pub fn correlated_flags(n: usize, p: f64, rho: f64, rng: &mut XorShift64) -> Vec<bool> {
+    let m = rho.clamp(0.0, 1.0).sqrt();
+    let common = rng.next_f64() < p;
+    (0..n)
+        .map(|_| {
+            let copies = rng.next_f64() < m;
+            let own = rng.next_f64() < p;
+            if copies {
+                common
+            } else {
+                own
+            }
+        })
+        .collect()
+}
+
+/// [`correlated_flags`] conditioned on the regional event firing
+/// (`common = true`): the crowd-membership draw presets use, so a
+/// named flash-crowd scenario always contains its crowd. Marginal
+/// participation becomes `sqrt(rho) + (1 - sqrt(rho)) * p`.
+pub fn crowd_members(n: usize, p: f64, rho: f64, rng: &mut XorShift64) -> Vec<bool> {
+    let m = rho.clamp(0.0, 1.0).sqrt();
+    (0..n)
+        .map(|_| {
+            let copies = rng.next_f64() < m;
+            let own = rng.next_f64() < p;
+            copies || own
+        })
+        .collect()
+}
+
+/// Add `add` intensity on `[at, at + width)` — the overlay the flash
+/// crowd applies on top of a baseline trace. Both demand fields shift
+/// together so the write ratio is preserved.
+pub fn overlay_spike(cfg: &ModelConfig, trace: &Trace, add: f32, at: usize, width: usize) -> Trace {
+    let thr = add.max(0.0) * cfg.workload.thr_factor;
+    let points = trace
+        .points
+        .iter()
+        .enumerate()
+        .map(|(t, pt)| {
+            if t >= at && t < at + width {
+                WorkloadPoint {
+                    lambda_req: pt.lambda_req + thr,
+                    lambda_w: pt.lambda_w + thr * cfg.write_ratio(),
+                }
+            } else {
+                *pt
+            }
+        })
+        .collect();
+    Trace { name: format!("{}+spike", trace.name), points }
+}
+
+/// Scale every demand point by `factor` (tenant-size scaling).
+pub fn scale_trace(trace: &Trace, factor: f32) -> Trace {
+    let points = trace
+        .points
+        .iter()
+        .map(|p| WorkloadPoint { lambda_req: p.lambda_req * factor, lambda_w: p.lambda_w * factor })
+        .collect();
+    Trace { name: format!("{}x{factor}", trace.name), points }
+}
+
+/// One Pareto(`alpha`, `x_min`) draw by inverse transform:
+/// `x_min * u^(-1/alpha)` with `u` uniform on `(0, 1]`. Heavy-tailed
+/// for small `alpha` (infinite variance below 2, infinite mean below
+/// 1) — the classic tenant-size distribution.
+pub fn pareto(rng: &mut XorShift64, alpha: f64, x_min: f64) -> f64 {
+    assert!(alpha > 0.0 && x_min > 0.0, "pareto needs positive parameters");
+    let u = 1.0 - rng.next_f64(); // (0, 1]
+    x_min * u.powf(-1.0 / alpha)
+}
+
+/// `n` seeded Pareto sizes, clamped at `cap` so a single astronomically
+/// large draw cannot dwarf the plane's feasible range. Most draws land
+/// near `x_min`; the tail is pinned by `tests/prop_scenario.rs`.
+pub fn pareto_sizes(n: usize, alpha: f64, x_min: f64, cap: f64, seed: u64) -> Vec<f64> {
+    let mut rng = XorShift64::new(seed);
+    (0..n).map(|_| pareto(&mut rng, alpha, x_min).min(cap)).collect()
+}
+
+/// The flash-crowd fleet: a shared diurnal baseline (one region — no
+/// phase shifting), and a crowd drawn with pairwise correlation `rho`
+/// that all spike at the same tick `at` for `width` ticks. Classes
+/// cycle Gold/Silver/Bronze.
+pub fn flash_crowd_specs(
+    cfg: &ModelConfig,
+    n: usize,
+    rho: f64,
+    at: usize,
+    width: usize,
+    steps: usize,
+    seed: u64,
+) -> Vec<TenantSpec> {
+    assert!(n > 0, "fleet needs at least one tenant");
+    let mut rng = XorShift64::new(seed);
+    let base = diurnal_weekly(cfg, 40.0, 100.0, 24, 0.0, steps);
+    let members = crowd_members(n, 0.15, rho, &mut rng);
+    (0..n)
+        .map(|i| {
+            let trace = if members[i] {
+                overlay_spike(cfg, &base, 80.0, at, width)
+            } else {
+                base.clone()
+            };
+            TenantSpec::from_config(cfg, format!("t{i}"), class_for(i), trace)
+        })
+        .collect()
+}
+
+/// The black-friday fleet: a full week of diurnal+weekly seasonality
+/// with a strongly correlated spike landing at the weekly peak (tick
+/// `7 * 24 / 4`, where the weekly envelope tops out).
+pub fn black_friday_specs(
+    cfg: &ModelConfig,
+    n: usize,
+    rho: f64,
+    steps: usize,
+    seed: u64,
+) -> Vec<TenantSpec> {
+    assert!(n > 0, "fleet needs at least one tenant");
+    let mut rng = XorShift64::new(seed);
+    let base = diurnal_weekly(cfg, 40.0, 110.0, 24, 0.3, steps);
+    let at = (7 * 24) / 4;
+    let members = crowd_members(n, 0.2, rho, &mut rng);
+    (0..n)
+        .map(|i| {
+            let trace = if members[i] {
+                overlay_spike(cfg, &base, 70.0, at, 6)
+            } else {
+                base.clone()
+            };
+            TenantSpec::from_config(cfg, format!("t{i}"), class_for(i), trace)
+        })
+        .collect()
+}
+
+/// The heavy-tail fleet: the paper trace phase-shifted per tenant and
+/// scaled by the given (Pareto-drawn) sizes — most tenants tiny, a few
+/// near full size: the shared-host packing regime.
+pub fn heavy_tail_specs(cfg: &ModelConfig, sizes: &[f64], _seed: u64) -> Vec<TenantSpec> {
+    assert!(!sizes.is_empty(), "fleet needs at least one tenant");
+    let base = TraceBuilder::paper(cfg);
+    let n = sizes.len();
+    sizes
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| {
+            let trace = scale_trace(&base.shifted(i * base.len() / n), s as f32);
+            TenantSpec::from_config(cfg, format!("t{i}"), class_for(i), trace)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diurnal_weekly_is_bounded_and_modulated() {
+        let cfg = ModelConfig::default_paper();
+        let t = diurnal_weekly(&cfg, 40.0, 100.0, 24, 0.3, 7 * 24);
+        assert_eq!(t.len(), 168);
+        let thr = cfg.workload.thr_factor;
+        for p in &t.points {
+            assert!(p.lambda_req >= 0.0);
+            assert!(p.lambda_req <= 100.0 * 1.3 * thr * 1.001);
+        }
+        // the weekly envelope makes the late-week daily peak differ
+        // from the early-week one
+        let peak = |day: usize| {
+            t.points[day * 24..(day + 1) * 24]
+                .iter()
+                .map(|p| p.lambda_req)
+                .fold(0.0f32, f32::max)
+        };
+        assert!((peak(1) - peak(5)).abs() > 1.0, "weekly modulation missing");
+        // week_amp = 0 collapses to a pure diurnal sine
+        let flat = diurnal_weekly(&cfg, 40.0, 100.0, 24, 0.0, 48);
+        assert!((flat.points[0].lambda_req - flat.points[24].lambda_req).abs() < 1e-3);
+    }
+
+    #[test]
+    fn overlay_spike_adds_only_inside_the_window() {
+        let cfg = ModelConfig::default_paper();
+        let base = diurnal_weekly(&cfg, 40.0, 100.0, 24, 0.0, 40);
+        let t = overlay_spike(&cfg, &base, 80.0, 10, 4);
+        for i in 0..40 {
+            let d = t.points[i].lambda_req - base.points[i].lambda_req;
+            if (10..14).contains(&i) {
+                assert!((d - 80.0 * cfg.workload.thr_factor).abs() < 1e-3, "step {i}");
+            } else {
+                assert_eq!(d, 0.0, "step {i} leaked the spike");
+            }
+        }
+    }
+
+    #[test]
+    fn crowd_members_all_join_at_full_correlation() {
+        let mut rng = XorShift64::new(9);
+        let flags = crowd_members(32, 0.1, 1.0, &mut rng);
+        assert!(flags.iter().all(|&f| f), "rho = 1 must take everyone");
+    }
+
+    #[test]
+    fn pareto_draws_sit_above_x_min_and_respect_the_cap() {
+        let sizes = pareto_sizes(500, 1.3, 0.05, 1.0, 0xFEED);
+        assert!(sizes.iter().all(|&s| (0.05..=1.0).contains(&s)));
+        // heavy tail: some draws hit the cap, most stay small
+        assert!(sizes.iter().filter(|&&s| s >= 1.0).count() >= 1);
+        let small = sizes.iter().filter(|&&s| s < 0.15).count();
+        assert!(small > 250, "most tenants should be near x_min, got {small}");
+    }
+
+    #[test]
+    fn scale_trace_scales_both_fields() {
+        let cfg = ModelConfig::default_paper();
+        let base = TraceBuilder::paper(&cfg);
+        let t = scale_trace(&base, 0.25);
+        assert_eq!(t.points[0].lambda_req, base.points[0].lambda_req * 0.25);
+        assert_eq!(t.points[0].lambda_w, base.points[0].lambda_w * 0.25);
+    }
+}

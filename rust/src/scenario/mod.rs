@@ -1,0 +1,242 @@
+//! Scenario subsystem: the single source of workloads and fault
+//! schedules for fleet, placement, and serverless runs.
+//!
+//! Every pinned result before this module ran on phase-shifted copies
+//! of one seasonal trace. Production fleets are not that polite: flash
+//! crowds land on many tenants at once (regional events), tenant sizes
+//! are heavy-tailed, weekly seasonality modulates the diurnal cycle,
+//! and failures arrive correlated — a zone outage takes a node from
+//! every tenant mapped to the zone. This module generates those shapes
+//! deterministically (seeded through [`crate::workload::XorShift64`],
+//! never the wall clock) and packages them as **named presets** the
+//! CLI exposes via `fleet --scenario <name>` / `placement --scenario
+//! <name>`.
+//!
+//! Four pieces:
+//!
+//! * [`generators`] — composable trace generators: diurnal+weekly
+//!   composites, correlated flash crowds (a cross-tenant correlation
+//!   coefficient realized by a seeded mixture construction), and
+//!   heavy-tailed Pareto tenant sizes.
+//! * [`partition`] — the hypergraph-flavored shard-affinity model:
+//!   each tenant's dataset is split over shards tagged with co-access
+//!   hyperedges, so a reconfiguration's data-movement GB depends on
+//!   *which* shards actually move ([`ShardModel::moved_gb`]), not just
+//!   how much data the tenant owns. [`crate::placement::PlacementSim`]
+//!   prices migration windows through it when
+//!   [`crate::placement::PlacementSim::set_shard_model`] is called
+//!   (default off — the flat `tenant_gb` baseline keeps the pinned
+//!   PR-4 numbers).
+//! * [`faults`] — fault-schedule generators (zone outages, correlated
+//!   failure storms, rolling restarts) that layer onto the fleet's DES
+//!   calendars through the existing
+//!   [`crate::fleet::Tenant::schedule_node_failure`] path
+//!   ([`crate::fleet::FleetSimulator::schedule_faults`]).
+//! * Named [`preset`]s — each ships with a pinned planning-vs-flat or
+//!   packed-vs-dedicated comparison test in `tests/prop_scenario.rs`
+//!   (see `CONTRIBUTING.md`: a preset without a pinned comparison is
+//!   not a preset).
+//!
+//! The serverless spec builders ([`mostly_idle_specs`],
+//! [`wake_storm_specs`], [`sparse_activity_specs`]) moved here from
+//! `serverless/mod.rs` so all scenario construction lives in one place;
+//! `crate::serverless` re-exports them for compatibility.
+
+pub mod faults;
+pub mod generators;
+pub mod partition;
+mod specs;
+
+pub use faults::{failure_storm, rolling_restart, FaultEvent, ZoneMap};
+pub use generators::{
+    black_friday_specs, correlated_flags, crowd_members, diurnal_weekly, flash_crowd_specs,
+    heavy_tail_specs, overlay_spike, pareto, pareto_sizes, scale_trace,
+};
+pub use partition::ShardModel;
+pub use specs::{mostly_idle_specs, sparse_activity_specs, wake_storm_specs};
+
+pub(crate) use specs::class_for;
+
+use crate::config::ModelConfig;
+use crate::fleet::TenantSpec;
+use crate::workload::TraceBuilder;
+
+/// A fully materialized scenario: tenant specs, a fault schedule for
+/// the DES calendars, the natural run length, and (optionally) the
+/// shard-affinity model placement runs price data movement through.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// The preset name (stamped into explain-v1 and metrics-v1).
+    pub name: &'static str,
+    /// The seed every generator in this scenario derived from.
+    pub seed: u64,
+    /// Natural run length (ticks).
+    pub steps: usize,
+    pub specs: Vec<TenantSpec>,
+    /// Node failures to layer onto the fleet's DES calendars.
+    pub faults: Vec<FaultEvent>,
+    /// Shard-affinity model for partition-aware migration pricing
+    /// (`None` keeps the flat `tenant_gb` baseline).
+    pub shards: Option<ShardModel>,
+}
+
+/// Every named preset, in CLI help order.
+pub const PRESETS: &[&str] = &[
+    "flash-crowd",
+    "black-friday",
+    "heavy-tail",
+    "zone-outage",
+    "failure-storm",
+    "rolling-restart",
+];
+
+/// Default tenant count when the CLI does not pass `--tenants`.
+pub const DEFAULT_TENANTS: usize = 12;
+
+/// Default scenario seed (any fixed value works; a named one keeps CLI
+/// runs replayable).
+pub const DEFAULT_SEED: u64 = 0x5CE7_A210;
+
+/// Materialize a named preset. Returns `None` for unknown names (the
+/// CLI prints [`PRESETS`]). Every preset is deterministic in
+/// `(name, cfg, n, seed)`.
+pub fn preset(name: &str, cfg: &ModelConfig, n: usize, seed: u64) -> Option<Scenario> {
+    assert!(n > 0, "scenario needs at least one tenant");
+    match name {
+        // A regional event: diurnal baseline, then a correlated spike
+        // hits the crowd members all at the same tick.
+        "flash-crowd" => {
+            let steps = 60;
+            let specs = flash_crowd_specs(cfg, n, 0.8, 30, 4, steps, seed);
+            Some(Scenario {
+                name: "flash-crowd",
+                seed,
+                steps,
+                specs,
+                faults: Vec::new(),
+                shards: None,
+            })
+        }
+        // A full week of diurnal+weekly seasonality with a strongly
+        // correlated demand spike at the weekly peak.
+        "black-friday" => {
+            let steps = 7 * 24;
+            let specs = black_friday_specs(cfg, n, 0.9, steps, seed);
+            Some(Scenario {
+                name: "black-friday",
+                seed,
+                steps,
+                specs,
+                faults: Vec::new(),
+                shards: None,
+            })
+        }
+        // Pareto-sized tenants: most tiny, a few huge — the packing
+        // regime — with dataset shares proportional to size feeding the
+        // shard-affinity model.
+        "heavy-tail" => {
+            let steps = TraceBuilder::paper(cfg).len();
+            let sizes = pareto_sizes(n, 1.3, 0.05, 1.0, seed ^ 0x517E5);
+            let specs = heavy_tail_specs(cfg, &sizes, seed);
+            let gbs: Vec<f64> = sizes.iter().map(|s| s * 20.0).collect();
+            let shards = ShardModel::generate(&gbs, 6, 4, seed ^ 0x5BA2D);
+            Some(Scenario {
+                name: "heavy-tail",
+                seed,
+                steps,
+                specs,
+                faults: Vec::new(),
+                shards: Some(shards),
+            })
+        }
+        // One availability zone dies at peak load: every tenant whose
+        // nodes map to the zone loses them at the same instant.
+        "zone-outage" => {
+            let steps = TraceBuilder::paper(cfg).len();
+            let specs = paper_shifted_specs(cfg, n);
+            let zones = ZoneMap::new(3, seed ^ 0x20ED);
+            let faults = zones.zone_outage(n, 4, 0, 25);
+            Some(Scenario { name: "zone-outage", seed, steps, specs, faults, shards: None })
+        }
+        // A correlated failure storm: a seeded subset of the fleet each
+        // loses a node inside a short window.
+        "failure-storm" => {
+            let steps = TraceBuilder::paper(cfg).len();
+            let specs = paper_shifted_specs(cfg, n);
+            let faults = failure_storm(n, 0.5, 20, 6, seed ^ 0xF0A3);
+            Some(Scenario { name: "failure-storm", seed, steps, specs, faults, shards: None })
+        }
+        // Maintenance sweep: one node per tenant, staggered — the
+        // rolling-restart shape operators actually schedule.
+        "rolling-restart" => {
+            let specs = paper_shifted_specs(cfg, n);
+            let faults = rolling_restart(n, 10, 2);
+            let steps = TraceBuilder::paper(cfg).len().max(10 + 2 * n + 5);
+            Some(Scenario { name: "rolling-restart", seed, steps, specs, faults, shards: None })
+        }
+        _ => None,
+    }
+}
+
+/// The pre-scenario default fleet shape (phase-shifted paper traces,
+/// classes cycling Gold/Silver/Bronze) — the baseline the fault
+/// presets overlay their schedules on.
+pub fn paper_shifted_specs(cfg: &ModelConfig, n: usize) -> Vec<TenantSpec> {
+    assert!(n > 0, "fleet needs at least one tenant");
+    let base = TraceBuilder::paper(cfg);
+    (0..n)
+        .map(|i| {
+            TenantSpec::from_config(
+                cfg,
+                format!("t{i}"),
+                class_for(i),
+                base.shifted(i * base.len() / n),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_preset_materializes() {
+        let cfg = ModelConfig::default_paper();
+        for name in PRESETS {
+            let sc = preset(name, &cfg, 8, DEFAULT_SEED)
+                .unwrap_or_else(|| panic!("preset {name} missing"));
+            assert_eq!(sc.name, *name);
+            assert_eq!(sc.specs.len(), 8);
+            assert!(sc.steps > 0);
+            for s in &sc.specs {
+                assert!(!s.trace.is_empty(), "{} has an empty trace", s.name);
+            }
+        }
+        assert!(preset("no-such-scenario", &cfg, 8, DEFAULT_SEED).is_none());
+    }
+
+    #[test]
+    fn fault_presets_schedule_inside_the_run() {
+        let cfg = ModelConfig::default_paper();
+        for name in ["zone-outage", "failure-storm", "rolling-restart"] {
+            let sc = preset(name, &cfg, 8, DEFAULT_SEED).unwrap();
+            assert!(!sc.faults.is_empty(), "{name} scheduled no faults");
+            for f in &sc.faults {
+                assert!(f.tenant < 8);
+                assert!(f.at_tick < sc.steps, "{name} fault after the run ends");
+            }
+        }
+    }
+
+    #[test]
+    fn presets_are_deterministic_in_the_seed() {
+        let cfg = ModelConfig::default_paper();
+        for name in PRESETS {
+            let a = preset(name, &cfg, 6, 7).unwrap();
+            let b = preset(name, &cfg, 6, 7).unwrap();
+            assert_eq!(a.specs, b.specs, "{name} specs drifted");
+            assert_eq!(a.faults, b.faults, "{name} faults drifted");
+        }
+    }
+}

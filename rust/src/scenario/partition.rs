@@ -1,0 +1,154 @@
+//! Hypergraph-flavored shard-affinity model for partition-aware data
+//! movement. Each tenant's dataset is split over a few shards, each
+//! tagged with a **co-access hyperedge** — transactions that touch a
+//! shard tend to touch every shard on its edge, so partitioners
+//! co-locate edges (the hypergraph-partitioning result from the
+//! transactional-workload literature). For migration pricing that
+//! means: when a tenant moves to a destination where some resident
+//! already carries one of its hyperedges, the shards on that edge are
+//! effectively co-located/replicated there and do **not** need to be
+//! shipped. Moved GB is the weight of the shards whose edges no
+//! resident shares — always ≤ the flat per-tenant GB, with equality
+//! exactly when nothing is shared (empty or disjoint destinations).
+//!
+//! [`crate::placement::PlacementSim`] prices migration windows through
+//! [`ShardModel::moved_gb`] when a model is attached
+//! (`set_shard_model`); the default stays the flat `tenant_gb`
+//! baseline so the pinned PR-4 numbers are untouched.
+
+use std::collections::BTreeSet;
+
+use crate::workload::XorShift64;
+
+/// Per-tenant shard list: `(hyperedge, gb)` pairs. Deterministic in
+/// its generation seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardModel {
+    tenants: Vec<Vec<(u64, f64)>>,
+}
+
+impl ShardModel {
+    /// Seeded model over tenants with dataset sizes `gbs`. Each tenant
+    /// gets `shards_per_tenant` shards; shard k carries a Zipf-ish
+    /// `1/(k+1)` share of the tenant's GB (a few hot shards own most
+    /// of the data, matching skewed production layouts), and each
+    /// shard is assigned a hyperedge uniformly from `0..hyperedges`.
+    /// Fewer hyperedges → more cross-tenant sharing → cheaper moves.
+    pub fn generate(gbs: &[f64], shards_per_tenant: usize, hyperedges: u64, seed: u64) -> Self {
+        assert!(shards_per_tenant > 0, "need at least one shard per tenant");
+        assert!(hyperedges > 0, "need at least one hyperedge");
+        let mut rng = XorShift64::new(seed);
+        let norm: f64 = (0..shards_per_tenant).map(|k| 1.0 / (k + 1) as f64).sum();
+        let tenants = gbs
+            .iter()
+            .map(|&gb| {
+                (0..shards_per_tenant)
+                    .map(|k| {
+                        let edge = rng.below(hyperedges);
+                        (edge, gb * (1.0 / (k + 1) as f64) / norm)
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { tenants }
+    }
+
+    /// [`ShardModel::generate`] with every tenant at the same
+    /// `tenant_gb` — the drop-in partition-aware counterpart of the
+    /// flat [`crate::placement::MigrationPlanner`] baseline.
+    pub fn uniform(
+        n: usize,
+        tenant_gb: f64,
+        shards_per_tenant: usize,
+        hyperedges: u64,
+        seed: u64,
+    ) -> Self {
+        Self::generate(&vec![tenant_gb; n], shards_per_tenant, hyperedges, seed)
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// The tenant's shards as `(hyperedge, gb)` pairs.
+    pub fn shards(&self, tenant: usize) -> &[(u64, f64)] {
+        &self.tenants[tenant]
+    }
+
+    /// Total dataset size — what the flat baseline would ship on every
+    /// move.
+    pub fn total_gb(&self, tenant: usize) -> f64 {
+        self.tenants[tenant].iter().map(|&(_, gb)| gb).sum()
+    }
+
+    /// Data that must actually move when `tenant` migrates to a
+    /// destination hosting `residents`: the summed GB of the shards
+    /// whose hyperedge no resident (other than the tenant itself)
+    /// already carries. Invariants, pinned in `tests/prop_scenario.rs`:
+    /// `moved_gb ≤ total_gb` always, with equality when `residents` is
+    /// empty or shares no edge.
+    pub fn moved_gb(&self, tenant: usize, residents: &[usize]) -> f64 {
+        let present: BTreeSet<u64> = residents
+            .iter()
+            .filter(|&&r| r != tenant && r < self.tenants.len())
+            .flat_map(|&r| self.tenants[r].iter().map(|&(e, _)| e))
+            .collect();
+        self.tenants[tenant]
+            .iter()
+            .filter(|(e, _)| !present.contains(e))
+            .map(|&(_, gb)| gb)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_shards_conserve_tenant_gb() {
+        let m = ShardModel::generate(&[10.0, 2.5, 0.0], 6, 4, 0xC0DE);
+        assert_eq!(m.n_tenants(), 3);
+        assert!((m.total_gb(0) - 10.0).abs() < 1e-9);
+        assert!((m.total_gb(1) - 2.5).abs() < 1e-9);
+        assert_eq!(m.total_gb(2), 0.0);
+        // Zipf-ish skew: the first shard is the largest
+        let s = m.shards(0);
+        assert!(s[0].1 > s[5].1);
+    }
+
+    #[test]
+    fn empty_destination_moves_everything() {
+        let m = ShardModel::uniform(4, 2.0, 6, 4, 0xC0DE);
+        for t in 0..4 {
+            assert_eq!(m.moved_gb(t, &[]), m.total_gb(t));
+            // self-residency never discounts the move
+            assert_eq!(m.moved_gb(t, &[t]), m.total_gb(t));
+        }
+    }
+
+    #[test]
+    fn shared_edges_discount_the_move_and_never_inflate_it() {
+        // one hyperedge: every shard shares, so any occupied
+        // destination means nothing moves
+        let one = ShardModel::uniform(4, 2.0, 6, 1, 0xC0DE);
+        assert_eq!(one.moved_gb(0, &[1]), 0.0);
+        // many edges: moved ≤ total for every resident set
+        let m = ShardModel::uniform(6, 2.0, 6, 64, 0xC0DE);
+        for t in 0..6 {
+            for r in 0..6 {
+                let moved = m.moved_gb(t, &[r]);
+                assert!(moved <= m.total_gb(t) + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn model_is_deterministic_in_its_seed() {
+        let a = ShardModel::generate(&[5.0, 1.0], 6, 4, 7);
+        let b = ShardModel::generate(&[5.0, 1.0], 6, 4, 7);
+        assert_eq!(a, b);
+        let c = ShardModel::generate(&[5.0, 1.0], 6, 4, 8);
+        assert_ne!(a, c, "different seeds should shuffle edges");
+    }
+}

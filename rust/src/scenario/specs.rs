@@ -1,0 +1,151 @@
+//! The serverless fleet-shape builders, moved here from
+//! `serverless/mod.rs` so all scenario construction lives in one
+//! place. `crate::serverless` re-exports them, so every existing call
+//! site (tests, benches, CLI) is unchanged.
+
+use crate::config::ModelConfig;
+use crate::fleet::{PriorityClass, TenantSpec};
+use crate::workload::TraceBuilder;
+
+/// Classes cycle Gold/Silver/Bronze across a fleet, so every cohort
+/// spans every class.
+pub(crate) fn class_for(i: usize) -> PriorityClass {
+    match i % 3 {
+        0 => PriorityClass::Gold,
+        1 => PriorityClass::Silver,
+        _ => PriorityClass::Bronze,
+    }
+}
+
+/// The pinned mostly-idle scenario: `n` tenants of which
+/// `round(n * idle_fraction)` are idle nearly all the time — zero
+/// demand except one short burst per cycle, staggered so wakes do not
+/// collide — while the rest carry the paper trace phase-shifted.
+/// Classes cycle Gold/Silver/Bronze across the whole fleet, so idle
+/// tenants span every class.
+pub fn mostly_idle_specs(cfg: &ModelConfig, n: usize, idle_fraction: f32) -> Vec<TenantSpec> {
+    assert!(n > 0, "fleet needs at least one tenant");
+    assert!((0.0..=1.0).contains(&idle_fraction), "idle_fraction in [0, 1]");
+    let b = TraceBuilder::from_config(cfg);
+    let base = TraceBuilder::paper(cfg);
+    let steps = base.len();
+    let idle = ((n as f32 * idle_fraction).round() as usize).min(n);
+    let active = n - idle;
+    (0..n)
+        .map(|i| {
+            let trace = if i < active {
+                base.shifted(i * steps / active.max(1))
+            } else {
+                let j = i - active;
+                b.spike(0.0, 30.0, (j * steps) / idle.max(1), 3, steps)
+            };
+            TenantSpec::from_config(cfg, format!("t{i}"), class_for(i), trace)
+        })
+        .collect()
+}
+
+/// The pinned wake-storm scenario: like [`mostly_idle_specs`] but every
+/// idle tenant's burst lands at the *same* tick `storm_at` for
+/// `storm_width` ticks — a correlated burst that wakes the whole
+/// suspended cohort at once, stressing cold-start queueing and the
+/// arbiter's class-ordered repair pass.
+pub fn wake_storm_specs(
+    cfg: &ModelConfig,
+    n: usize,
+    idle_fraction: f32,
+    storm_at: usize,
+    storm_width: usize,
+) -> Vec<TenantSpec> {
+    assert!(n > 0, "fleet needs at least one tenant");
+    assert!((0.0..=1.0).contains(&idle_fraction), "idle_fraction in [0, 1]");
+    let b = TraceBuilder::from_config(cfg);
+    let base = TraceBuilder::paper(cfg);
+    let steps = base.len().max(storm_at + storm_width + 10);
+    let idle = ((n as f32 * idle_fraction).round() as usize).min(n);
+    let active = n - idle;
+    (0..n)
+        .map(|i| {
+            let trace = if i < active {
+                base.shifted(i * base.len() / active.max(1))
+            } else {
+                b.spike(0.0, 30.0, storm_at, storm_width, steps)
+            };
+            TenantSpec::from_config(cfg, format!("t{i}"), class_for(i), trace)
+        })
+        .collect()
+}
+
+/// The fixed-activity scale scenario behind the 10k-tenant bench: the
+/// active set does **not** grow with fleet size. `active` tenants carry
+/// the phase-shifted paper trace, `bursty` tenants spike periodically
+/// (staggered, so they park, wake through priced cold starts, and park
+/// again), and every remaining tenant sees constant zero demand — it
+/// parks once after the initial idle window and never moves again.
+/// Under a dirty-queue control plane, per-tick planning work on this
+/// fleet must therefore approach `active + bursty + O(refresh)`
+/// regardless of `n` — the sublinearity the tier-2 scale test pins.
+pub fn sparse_activity_specs(
+    cfg: &ModelConfig,
+    n: usize,
+    active: usize,
+    bursty: usize,
+) -> Vec<TenantSpec> {
+    assert!(n > 0, "fleet needs at least one tenant");
+    assert!(active + bursty <= n, "cohorts cannot exceed the fleet");
+    let b = TraceBuilder::from_config(cfg);
+    let base = TraceBuilder::paper(cfg);
+    let steps = base.len();
+    (0..n)
+        .map(|i| {
+            let trace = if i < active {
+                base.shifted(i * steps / active.max(1))
+            } else if i < active + bursty {
+                let j = i - active;
+                b.spike(0.0, 30.0, (j * steps) / bursty.max(1), 3, steps)
+            } else {
+                b.constant(0.0, steps)
+            };
+            TenantSpec::from_config(cfg, format!("t{i}"), class_for(i), trace)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mostly_idle_specs_shape() {
+        let cfg = ModelConfig::default_paper();
+        let specs = mostly_idle_specs(&cfg, 16, 0.75);
+        assert_eq!(specs.len(), 16);
+        // 12 idle tenants: zero demand outside their 3-tick burst
+        let idle: Vec<_> = specs[4..].iter().collect();
+        assert_eq!(idle.len(), 12);
+        for s in &idle {
+            let zero = s.trace.points.iter().filter(|w| w.lambda_req == 0.0).count();
+            assert!(zero >= s.trace.len() - 3, "{} not mostly idle", s.name);
+        }
+        // active tenants carry real load every tick
+        for s in &specs[..4] {
+            assert!(s.trace.points.iter().all(|w| w.lambda_req > 0.0));
+        }
+        // classes span the idle cohort too
+        assert!(idle.iter().any(|s| s.class == PriorityClass::Gold));
+        assert!(idle.iter().any(|s| s.class == PriorityClass::Bronze));
+    }
+
+    #[test]
+    fn wake_storm_bursts_are_correlated() {
+        let cfg = ModelConfig::default_paper();
+        let specs = wake_storm_specs(&cfg, 20, 0.9, 30, 4);
+        let idle = &specs[2..];
+        assert_eq!(idle.len(), 18);
+        for s in idle {
+            assert_eq!(s.trace.points[29].lambda_req, 0.0);
+            assert!(s.trace.points[30].lambda_req > 0.0, "{} misses the storm", s.name);
+            assert!(s.trace.points[33].lambda_req > 0.0);
+            assert_eq!(s.trace.points[35].lambda_req, 0.0);
+        }
+    }
+}

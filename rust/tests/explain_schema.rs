@@ -16,7 +16,7 @@ use std::collections::BTreeSet;
 
 use diagonal_scale::config::ModelConfig;
 use diagonal_scale::fleet::FleetSimulator;
-use diagonal_scale::report::{explain_json, fleet_explain_json_sampled};
+use diagonal_scale::report::{explain_json, fleet_explain_json_scenario};
 use diagonal_scale::serverless::mostly_idle_specs;
 use diagonal_scale::simulator::{PolicyKind, Simulator};
 use diagonal_scale::workload::TraceBuilder;
@@ -68,9 +68,9 @@ fn rendered_explain_key_set_matches_snapshot() {
     let cluster_json = explain_json(&run.policy, &steps);
 
     // fleet side: the serverless mostly-idle scenario exercises the
-    // additive lifecycle / resume_end fields (tenants park and wake),
-    // and rendering through the sampled emitter with a nonzero cap
-    // stamps the reservoir fields too
+    // additive lifecycle / resume_end fields (tenants park and wake);
+    // rendering through the scenario emitter with a nonzero cap and a
+    // preset name stamps the reservoir fields and the scenario stamp
     let specs = mostly_idle_specs(&cfg, 8, 0.75);
     let mut fleet = FleetSimulator::new(&cfg, specs, 1.0e6, 3);
     fleet.enable_serverless(Default::default());
@@ -78,10 +78,14 @@ fn rendered_explain_key_set_matches_snapshot() {
     fleet.run(100);
     let log = fleet.explain_log();
     assert!(!log.is_empty(), "scenario produced no explain records");
-    let fleet_json = fleet_explain_json_sampled(log, 5, log.len() as u64);
+    let fleet_json = fleet_explain_json_scenario(log, 5, log.len() as u64, Some("flash-crowd"));
     assert!(
         fleet_json.contains("\"lifecycle\":") && fleet_json.contains("\"resume_end\":"),
         "scenario must exercise the serverless explain fields"
+    );
+    assert!(
+        fleet_json.contains("\"scenario\":\"flash-crowd\""),
+        "scenario stamp missing from the fleet dump"
     );
 
     let mut rendered = json_keys(&cluster_json);

@@ -6,7 +6,7 @@
 //! errors are the same on every run (worst case over this grid is
 //! ≈ 0.059 at the default precision, against a bound of 0.0975).
 
-use diagonal_scale::metrics::hll::{Hll, DEFAULT_PRECISION};
+use diagonal_scale::metrics::hll::{Hll, HllWindowRing, DEFAULT_PRECISION};
 use diagonal_scale::workload::XorShift64;
 
 #[test]
@@ -71,6 +71,91 @@ fn duplicates_never_grow_the_estimate() {
     assert_eq!(sketch.estimate().to_bits(), once.to_bits(), "re-inserts must be no-ops");
     let rel = (once - 500.0).abs() / 500.0;
     assert!(rel < 0.0975, "500 distinct estimated at {once:.1}");
+}
+
+/// Feed `per_window` fresh draws into the ring, rotate, and return the
+/// exact window streams so expectations can be rebuilt independently.
+fn feed_windows(
+    ring: &mut HllWindowRing,
+    windows: usize,
+    per_window: usize,
+    seed: u64,
+) -> Vec<Vec<u64>> {
+    let mut rng = XorShift64::new(seed);
+    let mut streams = Vec::with_capacity(windows);
+    for _ in 0..windows {
+        let stream: Vec<u64> = (0..per_window).map(|_| rng.next_u64()).collect();
+        for &v in &stream {
+            ring.insert_u64(v);
+        }
+        ring.rotate();
+        streams.push(stream);
+    }
+    streams
+}
+
+#[test]
+fn ring_retains_exactly_the_last_cap_windows_and_evicts_oldest_first() {
+    let cap = 4;
+    let mut ring = HllWindowRing::new(cap, DEFAULT_PRECISION);
+    assert_eq!(ring.capacity(), cap);
+    let streams = feed_windows(&mut ring, cap + 3, 300, 0x81F6);
+    assert_eq!(ring.rotations(), (cap + 3) as u64);
+    assert_eq!(ring.closed_windows().len(), cap, "ring must stay bounded at cap");
+    // the retained windows are exactly the last `cap`, oldest first —
+    // rebuild each expected sketch from the recorded stream and compare
+    // register-for-register (Hll is PartialEq)
+    for (i, stream) in streams[streams.len() - cap..].iter().enumerate() {
+        let mut expect = Hll::new(DEFAULT_PRECISION);
+        for &v in stream {
+            expect.insert_u64(v);
+        }
+        assert_eq!(
+            ring.closed_windows()[i], expect,
+            "retained window {i} is not the expected (non-evicted) sketch"
+        );
+    }
+}
+
+#[test]
+fn rotate_returns_the_closed_windows_estimate_and_clears_the_open_one() {
+    let mut ring = HllWindowRing::new(3, DEFAULT_PRECISION);
+    let mut rng = XorShift64::new(0x0417);
+    assert!(ring.open_is_empty());
+    for _ in 0..1_000 {
+        ring.insert_u64(rng.next_u64());
+    }
+    let before = ring.open_estimate();
+    let closed = ring.rotate();
+    assert_eq!(closed.to_bits(), before.to_bits(), "rotate must return the closed estimate");
+    assert!(ring.open_is_empty(), "rotation must start a fresh open window");
+    assert_eq!(ring.open_estimate(), 0.0);
+    // an empty rotation is legal and pushes an empty window
+    assert_eq!(ring.rotate(), 0.0);
+    assert_eq!(ring.closed_windows().len(), 2);
+}
+
+#[test]
+fn merged_estimate_equals_the_union_sketch_bitwise() {
+    let cap = 5;
+    let mut ring = HllWindowRing::new(cap, DEFAULT_PRECISION);
+    // overflow the ring so the merge runs over a full ring, not a
+    // partially filled one
+    let streams = feed_windows(&mut ring, cap + 2, 400, 0xB10C);
+    let mut union = Hll::new(DEFAULT_PRECISION);
+    for stream in &streams[streams.len() - cap..] {
+        for &v in stream {
+            union.insert_u64(v);
+        }
+    }
+    assert_eq!(
+        ring.merged_estimate().to_bits(),
+        union.estimate().to_bits(),
+        "lookback gauge must equal one sketch fed all retained streams"
+    );
+    // an empty ring reports zero actives, not NaN
+    let empty = HllWindowRing::new(cap, DEFAULT_PRECISION);
+    assert_eq!(empty.merged_estimate(), 0.0);
 }
 
 #[test]
